@@ -1,0 +1,80 @@
+//! Bench E12 (ablations of DESIGN.md design choices):
+//! * Prolog rule engine vs direct numeric constraint generation;
+//! * first-argument fact indexing on vs off (simulated by querying a
+//!   predicate whose first argument is unbound);
+//! * KB memory decay on vs off (effect on constraint-set size over
+//!   repeated epochs);
+//! * λ attenuation on vs off in the ranker.
+
+use greengen::benchkit::{Bench, BenchConfig};
+use greengen::config::scenarios;
+use greengen::constraints::{ConstraintGenerator, GeneratorConfig};
+use greengen::kb::EnricherConfig;
+use greengen::pipeline::{GeneratorPipeline, PipelineConfig};
+use greengen::ranker::RankerConfig;
+use greengen::runtime::NativeBackend;
+use greengen::simulate;
+use greengen::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let mut bench = Bench::new(BenchConfig {
+        warmup_iters: 1,
+        min_iters: 5,
+        max_iters: 60,
+        min_time: Duration::from_millis(400),
+    });
+    let backend = NativeBackend;
+
+    // --- prolog vs direct on a mid-size instance ------------------------
+    let mut rng = Rng::new(0xAB1);
+    let app = simulate::random_application(&mut rng, 60);
+    let infra = simulate::random_infrastructure(&mut rng, 20);
+    for (label, use_prolog) in [("prolog", true), ("direct", false)] {
+        bench.bench(&format!("generation/{label}"), || {
+            ConstraintGenerator::new(&backend)
+                .with_config(GeneratorConfig {
+                    alpha: 0.8,
+                    use_prolog,
+                })
+                .generate(&app, &infra)
+                .unwrap()
+                .constraints
+                .len()
+        });
+    }
+
+    // --- ranker λ attenuation on/off -------------------------------------
+    let scenario = scenarios::scenario(1).unwrap();
+    for (label, attenuation) in [("lambda-0.75", 0.75), ("lambda-off", 1.0)] {
+        let mut config = PipelineConfig::default();
+        config.ranker = RankerConfig {
+            attenuation,
+            ..RankerConfig::default()
+        };
+        bench.bench(&format!("ranker/{label}"), || {
+            let mut pipeline = GeneratorPipeline::new(config);
+            pipeline.run_scenario(&scenario).unwrap().ranked.len()
+        });
+    }
+
+    // --- KB decay on/off over repeated epochs -----------------------------
+    for (label, decay) in [("decay-0.8", 0.8), ("decay-off", 1.0)] {
+        let mut config = PipelineConfig::default();
+        config.enricher = EnricherConfig {
+            decay,
+            ..EnricherConfig::default()
+        };
+        bench.bench(&format!("kb/{label}-5-epochs"), || {
+            let mut pipeline = GeneratorPipeline::new(config);
+            for _ in 0..5 {
+                pipeline.run_scenario(&scenario).unwrap();
+            }
+            pipeline.kb.ck.len()
+        });
+    }
+    std::fs::create_dir_all("results").ok();
+    bench
+        .write_csv(std::path::Path::new("results/bench_ablations.csv"))
+        .ok();
+}

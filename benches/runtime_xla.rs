@@ -1,0 +1,51 @@
+//! Bench: analytics backends head-to-head — AOT XLA artifact execution
+//! vs the native Rust mirror, across shape buckets. This is the L3↔RT
+//! hot-path measurement for EXPERIMENTS.md §Perf.
+
+use greengen::benchkit::{Bench, BenchConfig};
+use greengen::runtime::{AnalyticsBackend, AnalyticsInput, NativeBackend, XlaBackend};
+use greengen::util::Rng;
+use std::time::Duration;
+
+fn input(rng: &mut Rng, rows: usize, nodes: usize) -> AnalyticsInput {
+    AnalyticsInput {
+        e: (0..rows).map(|_| rng.range(0.0, 5.0) as f32).collect(),
+        c: (0..nodes).map(|_| rng.range(10.0, 600.0) as f32).collect(),
+        mask: (0..rows * nodes)
+            .map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 })
+            .collect(),
+        pool: (0..rows / 4).map(|_| rng.range(0.0, 100.0) as f32).collect(),
+        alpha: 0.8,
+    }
+}
+
+fn main() {
+    let mut bench = Bench::new(BenchConfig {
+        warmup_iters: 2,
+        min_iters: 10,
+        max_iters: 200,
+        min_time: Duration::from_millis(400),
+    });
+    let mut rng = Rng::new(0xBE);
+    let native = NativeBackend;
+    let xla = XlaBackend::from_default_artifacts().ok();
+    if xla.is_none() {
+        eprintln!("artifacts missing: run `make artifacts` for the XLA side");
+    }
+
+    for (rows, nodes) in [(15usize, 5usize), (64, 8), (100, 30), (512, 128), (1000, 100)] {
+        let inp = input(&mut rng, rows, nodes);
+        bench.bench(&format!("native/{rows}x{nodes}"), || {
+            native.run(&inp).unwrap().tau
+        });
+        if let Some(xla) = &xla {
+            // warm the executable cache once so compile time is excluded
+            let _ = xla.run(&inp).unwrap();
+            bench.bench(&format!("xla/{rows}x{nodes}"), || xla.run(&inp).unwrap().tau);
+        }
+    }
+    std::fs::create_dir_all("results").ok();
+    bench
+        .write_csv(std::path::Path::new("results/bench_runtime.csv"))
+        .ok();
+}

@@ -1,0 +1,60 @@
+//! Bench E7/E8 (Fig. 2): constraint-generation latency vs application
+//! size and infrastructure size (the §5.5 protocol at bench granularity;
+//! the full 10-point sweep lives in `examples/scalability.rs`).
+
+use greengen::benchkit::{Bench, BenchConfig};
+use greengen::constraints::{ConstraintGenerator, GeneratorConfig};
+use greengen::runtime::NativeBackend;
+use greengen::simulate;
+use greengen::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let mut bench = Bench::new(BenchConfig {
+        warmup_iters: 1,
+        min_iters: 5,
+        max_iters: 50,
+        min_time: Duration::from_millis(500),
+    });
+    let backend = NativeBackend;
+
+    // Fig 2a: growing application, fixed 50 nodes
+    for services in [100, 300, 500, 1000] {
+        let mut rng = Rng::new(services as u64);
+        let app = simulate::random_application(&mut rng, services);
+        let infra = simulate::random_infrastructure(&mut rng, 50);
+        bench.bench(&format!("fig2a/components-{services}"), || {
+            ConstraintGenerator::new(&backend)
+                .with_config(GeneratorConfig {
+                    alpha: 0.8,
+                    use_prolog: false,
+                })
+                .generate(&app, &infra)
+                .unwrap()
+                .constraints
+                .len()
+        });
+    }
+
+    // Fig 2b: growing infrastructure, fixed 100 services
+    for nodes in [20, 60, 120, 200] {
+        let mut rng = Rng::new(nodes as u64 + 999);
+        let app = simulate::random_application(&mut rng, 100);
+        let infra = simulate::random_infrastructure(&mut rng, nodes);
+        bench.bench(&format!("fig2b/nodes-{nodes}"), || {
+            ConstraintGenerator::new(&backend)
+                .with_config(GeneratorConfig {
+                    alpha: 0.8,
+                    use_prolog: false,
+                })
+                .generate(&app, &infra)
+                .unwrap()
+                .constraints
+                .len()
+        });
+    }
+    std::fs::create_dir_all("results").ok();
+    bench
+        .write_csv(std::path::Path::new("results/bench_scalability.csv"))
+        .ok();
+}

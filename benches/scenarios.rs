@@ -1,0 +1,27 @@
+//! Bench E1–E5: full pipeline epoch latency per §5.3 scenario
+//! (simulation + estimation + generation + KB + ranking + explanation).
+
+use greengen::benchkit::Bench;
+use greengen::config::scenarios;
+use greengen::pipeline::{GeneratorPipeline, PipelineConfig};
+
+fn main() {
+    let mut bench = Bench::default();
+    for n in 1..=5 {
+        let scenario = scenarios::scenario(n).unwrap();
+        bench.bench(&format!("pipeline/scenario{n}"), || {
+            let mut pipeline = GeneratorPipeline::new(PipelineConfig::default());
+            pipeline.run_scenario(&scenario).unwrap().ranked.len()
+        });
+    }
+    // prolog vs direct generation path on scenario 1
+    let scenario = scenarios::scenario(1).unwrap();
+    let mut config = PipelineConfig::default();
+    config.generator.use_prolog = false;
+    bench.bench("pipeline/scenario1-direct", || {
+        let mut pipeline = GeneratorPipeline::new(config);
+        pipeline.run_scenario(&scenario).unwrap().ranked.len()
+    });
+    std::fs::create_dir_all("results").ok();
+    bench.write_csv(std::path::Path::new("results/bench_scenarios.csv")).ok();
+}

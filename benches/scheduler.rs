@@ -1,0 +1,78 @@
+//! Bench: scheduler solve time — greedy vs exact (small instances),
+//! greedy scaling (large instances), baselines.
+
+use greengen::benchkit::{Bench, BenchConfig};
+use greengen::constraints::{ConstraintGenerator, GeneratorConfig};
+use greengen::runtime::NativeBackend;
+use greengen::scheduler::{
+    BranchAndBoundScheduler, CostOnlyScheduler, GreedyScheduler, Objective, Problem, Scheduler,
+};
+use greengen::simulate;
+use greengen::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let mut bench = Bench::new(BenchConfig {
+        warmup_iters: 1,
+        min_iters: 5,
+        max_iters: 100,
+        min_time: Duration::from_millis(400),
+    });
+    let backend = NativeBackend;
+
+    // small instance: exact vs greedy
+    let mut rng = Rng::new(0x5C);
+    let small_app = simulate::random_application(&mut rng, 6);
+    let small_infra = simulate::random_infrastructure(&mut rng, 4);
+    let result = ConstraintGenerator::new(&backend)
+        .with_config(GeneratorConfig {
+            alpha: 0.8,
+            use_prolog: false,
+        })
+        .generate(&small_app, &small_infra)
+        .unwrap();
+    let problem = Problem {
+        app: &small_app,
+        infra: &small_infra,
+        constraints: &result.constraints,
+        objective: Objective::default(),
+    };
+    bench.bench("small-6x4/greedy", || {
+        GreedyScheduler::default().schedule(&problem).map(|p| p.placements.len())
+    });
+    bench.bench("small-6x4/exact-bnb", || {
+        BranchAndBoundScheduler::default()
+            .schedule(&problem)
+            .map(|p| p.placements.len())
+    });
+    bench.bench("small-6x4/cost-only", || {
+        CostOnlyScheduler.schedule(&problem).map(|p| p.placements.len())
+    });
+
+    // greedy scaling
+    for (services, nodes) in [(20usize, 10usize), (50, 20), (100, 50), (200, 50)] {
+        let mut rng = Rng::new((services + nodes) as u64);
+        let app = simulate::random_application(&mut rng, services);
+        let infra = simulate::random_infrastructure(&mut rng, nodes);
+        let result = ConstraintGenerator::new(&backend)
+            .with_config(GeneratorConfig {
+                alpha: 0.8,
+                use_prolog: false,
+            })
+            .generate(&app, &infra)
+            .unwrap();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &result.constraints,
+            objective: Objective::default(),
+        };
+        bench.bench(&format!("greedy/{services}x{nodes}"), || {
+            GreedyScheduler::default().schedule(&problem).map(|p| p.placements.len())
+        });
+    }
+    std::fs::create_dir_all("results").ok();
+    bench
+        .write_csv(std::path::Path::new("results/bench_scheduler.csv"))
+        .ok();
+}

@@ -1,0 +1,40 @@
+//! Bench E9/E10 (Table 4, Fig. 3): constraint generation across quantile
+//! thresholds on the 100×100 randomized instance.
+
+use greengen::benchkit::{Bench, BenchConfig};
+use greengen::constraints::{ConstraintGenerator, GeneratorConfig};
+use greengen::runtime::NativeBackend;
+use greengen::simulate;
+use greengen::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let mut bench = Bench::new(BenchConfig {
+        warmup_iters: 1,
+        min_iters: 5,
+        max_iters: 100,
+        min_time: Duration::from_millis(400),
+    });
+    let mut rng = Rng::new(0x7A81e4);
+    let app = simulate::random_application(&mut rng, 100);
+    let infra = simulate::random_infrastructure(&mut rng, 100);
+    let backend = NativeBackend;
+
+    for level in [0.9, 0.8, 0.7, 0.6, 0.5] {
+        bench.bench(&format!("table4/quantile-{level}"), || {
+            ConstraintGenerator::new(&backend)
+                .with_config(GeneratorConfig {
+                    alpha: level,
+                    use_prolog: false,
+                })
+                .generate(&app, &infra)
+                .unwrap()
+                .constraints
+                .len()
+        });
+    }
+    std::fs::create_dir_all("results").ok();
+    bench
+        .write_csv(std::path::Path::new("results/bench_threshold.csv"))
+        .ok();
+}

@@ -1,0 +1,52 @@
+//! Quickstart: run the Green-aware Constraint Generator on the paper's
+//! baseline scenario (Online Boutique × the European infrastructure) and
+//! print the ranked constraints, the §5.4 explainability report, and the
+//! three scheduler-adapter dialects.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use greengen::adapter::{JsonAdapter, MiniZincAdapter, PrologAdapter, SchedulerAdapter};
+use greengen::config::scenarios;
+use greengen::pipeline::{GeneratorPipeline, PipelineConfig};
+
+fn main() -> greengen::Result<()> {
+    // 1. Pick the paper's Scenario 1 and build the pipeline. Use the XLA
+    //    (AOT HLO artifact) backend when artifacts are built, else native.
+    let scenario = scenarios::scenario(1)?;
+    let mut pipeline = match GeneratorPipeline::with_xla(PipelineConfig::default(), "artifacts")
+    {
+        Ok(p) => p,
+        Err(_) => GeneratorPipeline::new(PipelineConfig::default()),
+    };
+    println!("backend: {}\n", pipeline.backend_name());
+
+    // 2. One generation epoch: simulate monitoring, learn profiles,
+    //    generate + rank constraints.
+    let outcome = pipeline.run_scenario(&scenario)?;
+    println!(
+        "tau = {:.2} gCO2eq, {} constraints survive the ranker\n",
+        outcome.raw.tau,
+        outcome.ranked.len()
+    );
+
+    // 3. The paper's presentation syntax.
+    println!("--- constraints (prolog dialect) ---");
+    print!("{}", PrologAdapter.format(&outcome.ranked));
+
+    // 4. Explainability report (§5.4).
+    println!("\n--- explainability report (top 3) ---");
+    for entry in outcome.report.entries.iter().take(3) {
+        println!("{}\n", entry.rationale);
+    }
+
+    // 5. Other scheduler dialects.
+    println!("--- json dialect (first 400 chars) ---");
+    let json = JsonAdapter.format(&outcome.ranked);
+    println!("{}...", &json[..json.len().min(400)]);
+    println!("\n--- minizinc dialect (first 400 chars) ---");
+    let mzn = MiniZincAdapter.format(&outcome.ranked);
+    println!("{}...", &mzn[..mzn.len().min(400)]);
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Scalability study (§5.5, Fig. 2): energy and execution time of the
+//! Green-aware Constraint Generator as the application (Fig. 2a) and the
+//! infrastructure (Fig. 2b) grow.
+//!
+//! Application-level: components 100 → 1000 in steps of 100, fixed nodes.
+//! Infrastructure-level: nodes 20 → 200, fixed application. Each point
+//! averages `--reps` runs (paper: 10; default here 5 to keep the example
+//! snappy — pass `--reps 10` for the paper's protocol).
+//!
+//! Writes `results/fig2a.csv` and `results/fig2b.csv`.
+//!
+//! ```sh
+//! cargo run --release --example scalability -- [--reps 10] [--xla]
+//! ```
+
+use greengen::cliargs::Args;
+use greengen::constraints::{ConstraintGenerator, ConstraintLibrary, GeneratorConfig};
+use greengen::explain::ExplainabilityGenerator;
+use greengen::kb::ConstraintEntry;
+use greengen::ranker::Ranker;
+use greengen::runtime::{AnalyticsBackend, NativeBackend, XlaBackend};
+use greengen::simulate;
+use greengen::telemetry::EnergyMeter;
+use greengen::util::Rng;
+
+fn sweep(
+    label: &str,
+    points: &[(usize, usize)],
+    reps: usize,
+    backend: &dyn AnalyticsBackend,
+) -> greengen::Result<String> {
+    println!("--- {label} (backend {}, {reps} reps/point) ---", backend.name());
+    println!(
+        "{:>10} {:>8} {:>12} {:>14} {:>12}",
+        "components", "nodes", "time (s)", "energy (kWh)", "constraints"
+    );
+    let mut csv = String::from("components,nodes,mean_seconds,sd_seconds,mean_kwh,constraints\n");
+    for &(services, nodes) in points {
+        let mut times = Vec::new();
+        let mut kwhs = Vec::new();
+        let mut n_constraints = 0usize;
+        for rep in 0..reps {
+            let mut rng = Rng::new((services * 13 + nodes * 7 + rep) as u64);
+            let app = simulate::random_application(&mut rng, services);
+            let infra = simulate::random_infrastructure(&mut rng, nodes);
+            // full §5.5 protocol: generation AND the explainability report
+            let mut meter = EnergyMeter::default();
+            let generator = ConstraintGenerator::new(backend).with_config(GeneratorConfig {
+                alpha: 0.8,
+                use_prolog: false,
+            });
+            let result = meter.measure("generate", || generator.generate(&app, &infra))?;
+            let entries: Vec<ConstraintEntry> = result
+                .constraints
+                .iter()
+                .map(|c| ConstraintEntry {
+                    constraint: c.clone(),
+                    mu: 1.0,
+                    generated_at: 0.0,
+                })
+                .collect();
+            let ranked = meter.measure("rank", || Ranker::default().rank(&entries));
+            let report = meter.measure("explain", || {
+                ExplainabilityGenerator::report(&ConstraintLibrary::default(), &ranked)
+                    .render_text()
+                    .len()
+            });
+            let _ = report;
+            let (t, e) = meter.totals();
+            times.push(t);
+            kwhs.push(e);
+            n_constraints = ranked.len();
+        }
+        let mean_t = times.iter().sum::<f64>() / reps as f64;
+        let sd_t = (times.iter().map(|t| (t - mean_t).powi(2)).sum::<f64>() / reps as f64).sqrt();
+        let mean_e = kwhs.iter().sum::<f64>() / reps as f64;
+        println!(
+            "{services:>10} {nodes:>8} {mean_t:>12.4} {mean_e:>14.3e} {n_constraints:>12}"
+        );
+        csv.push_str(&format!(
+            "{services},{nodes},{mean_t:.6},{sd_t:.6},{mean_e:.6e},{n_constraints}\n"
+        ));
+    }
+    Ok(csv)
+}
+
+fn main() -> greengen::Result<()> {
+    let args = Args::from_env()?;
+    let reps = args.usize_or("reps", 5)?;
+    std::fs::create_dir_all("results")?;
+
+    let xla = if args.flag("xla") {
+        Some(XlaBackend::from_default_artifacts()?)
+    } else {
+        None
+    };
+    let native = NativeBackend;
+    let backend: &dyn AnalyticsBackend = match &xla {
+        Some(b) => b,
+        None => &native,
+    };
+
+    // Fig. 2a: application-level scalability (components 100..1000).
+    let points_a: Vec<(usize, usize)> = (1..=10).map(|i| (i * 100, 50)).collect();
+    let csv = sweep("Fig 2a: application-level", &points_a, reps, backend)?;
+    std::fs::write("results/fig2a.csv", csv)?;
+
+    // Fig. 2b: infrastructure-level scalability (nodes 20..200).
+    let points_b: Vec<(usize, usize)> = (1..=10).map(|i| (100, i * 20)).collect();
+    let csv = sweep("Fig 2b: infrastructure-level", &points_b, reps, backend)?;
+    std::fs::write("results/fig2b.csv", csv)?;
+
+    println!("\nwrote results/fig2a.csv, results/fig2b.csv");
+    Ok(())
+}

@@ -1,0 +1,171 @@
+//! Scenario sweep (§5.3): run all five validation scenarios and verify
+//! the paper's qualitative expectations hold, writing a Markdown results
+//! file to `results/scenarios.md`.
+//!
+//! Expectations checked:
+//! * S1: frontend/large on Italy is the top constraint (w = 1.0), the GB
+//!   variant weighs ≈ 0.636, and no Affinity constraint survives.
+//! * S2: the top constraints move to Florida (CI 570) and weights for
+//!   Washington/California/NewYork ≈ 0.428/0.412/0.414.
+//! * S3: France (16 → 376) becomes an avoided node.
+//! * S4: with the optimised frontend, productcatalog/large on Italy takes
+//!   weight 1.0 and currency/tiny ≈ 0.89.
+//! * S5: with ×15000 traffic, Affinity constraints survive the ranker.
+//!
+//! ```sh
+//! cargo run --release --example scenario_sweep
+//! ```
+
+use greengen::config::scenarios;
+use greengen::constraints::ConstraintKind;
+use greengen::pipeline::{GeneratorPipeline, PipelineConfig};
+
+fn main() -> greengen::Result<()> {
+    std::fs::create_dir_all("results")?;
+    let mut md = String::from("# Scenario sweep (§5.3)\n");
+    let mut failures = Vec::new();
+
+    for n in 1..=5 {
+        let scenario = scenarios::scenario(n)?;
+        let mut pipeline = GeneratorPipeline::new(PipelineConfig::default());
+        let outcome = pipeline.run_scenario(&scenario)?;
+        println!("=== Scenario {n}: {} ===", scenario.name);
+        md.push_str(&format!(
+            "\n## Scenario {n}: {} — {}\n\ntau = {:.2} gCO2eq, {} constraints\n\n```prolog\n",
+            scenario.name,
+            scenario.description,
+            outcome.raw.tau,
+            outcome.ranked.len()
+        ));
+        for c in &outcome.ranked {
+            println!("{}", c.render_prolog());
+            md.push_str(&c.render_prolog());
+            md.push('\n');
+        }
+        md.push_str("```\n");
+
+        let weight_of = |svc: &str, fl: &str, node: &str| -> Option<f64> {
+            outcome.ranked.iter().find_map(|c| match &c.kind {
+                ConstraintKind::AvoidNode {
+                    service,
+                    flavour,
+                    node: nd,
+                } if service == svc && flavour == fl && nd == node => Some(c.weight),
+                _ => None,
+            })
+        };
+        let mut expect = |label: &str, ok: bool| {
+            println!("  [{}] {label}", if ok { "ok" } else { "FAIL" });
+            if !ok {
+                failures.push(format!("scenario {n}: {label}"));
+            }
+        };
+
+        match n {
+            1 => {
+                expect(
+                    "frontend/large avoided on italy with w=1.0",
+                    weight_of("frontend", "large", "italy")
+                        .map(|w| (w - 1.0).abs() < 1e-9)
+                        .unwrap_or(false),
+                );
+                expect(
+                    "frontend/large on greatbritain w≈0.636",
+                    weight_of("frontend", "large", "greatbritain")
+                        .map(|w| (w - 0.636).abs() < 0.02)
+                        .unwrap_or(false),
+                );
+                expect(
+                    "no affinity constraints survive",
+                    outcome
+                        .ranked
+                        .iter()
+                        .all(|c| !matches!(c.kind, ConstraintKind::Affinity { .. })),
+                );
+            }
+            2 => {
+                expect(
+                    "frontend/large avoided on florida with w=1.0",
+                    weight_of("frontend", "large", "florida")
+                        .map(|w| (w - 1.0).abs() < 1e-9)
+                        .unwrap_or(false),
+                );
+                for (node, w_paper) in
+                    [("washington", 0.428), ("california", 0.412), ("newyork", 0.414)]
+                {
+                    expect(
+                        &format!("frontend/large on {node} w≈{w_paper}"),
+                        weight_of("frontend", "large", node)
+                            .map(|w| (w - w_paper).abs() < 0.02)
+                            .unwrap_or(false),
+                    );
+                }
+            }
+            3 => {
+                expect(
+                    "france becomes an avoided node after brown-out",
+                    outcome.ranked.iter().any(|c| matches!(&c.kind,
+                        ConstraintKind::AvoidNode { node, .. } if node == "france")),
+                );
+                expect(
+                    "frontend/large on france outweighs greatbritain (376 > 213)",
+                    match (
+                        weight_of("frontend", "large", "france"),
+                        weight_of("frontend", "large", "greatbritain"),
+                    ) {
+                        (Some(fr), Some(gb)) => fr > gb,
+                        _ => false,
+                    },
+                );
+            }
+            4 => {
+                expect(
+                    "productcatalog/large on italy takes w=1.0",
+                    weight_of("productcatalog", "large", "italy")
+                        .map(|w| (w - 1.0).abs() < 1e-9)
+                        .unwrap_or(false),
+                );
+                expect(
+                    "currency/tiny on italy w≈0.89",
+                    weight_of("currency", "tiny", "italy")
+                        .map(|w| (w - 0.89).abs() < 0.02)
+                        .unwrap_or(false),
+                );
+                expect(
+                    "frontend no longer the top constraint",
+                    weight_of("frontend", "large", "italy")
+                        .map(|w| w < 0.6)
+                        .unwrap_or(true),
+                );
+            }
+            5 => {
+                let affinities = outcome
+                    .ranked
+                    .iter()
+                    .filter(|c| matches!(c.kind, ConstraintKind::Affinity { .. }))
+                    .count();
+                expect(
+                    "affinity constraints survive under x15000 traffic",
+                    affinities > 0,
+                );
+                md.push_str(&format!("\n{affinities} affinity constraints survived.\n"));
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    std::fs::write("results/scenarios.md", &md)?;
+    println!("\nwrote results/scenarios.md");
+    if failures.is_empty() {
+        println!("all paper expectations reproduced ✓");
+        Ok(())
+    } else {
+        for f in &failures {
+            eprintln!("FAILED: {f}");
+        }
+        Err(greengen::Error::other(format!(
+            "{} expectation(s) failed",
+            failures.len()
+        )))
+    }
+}

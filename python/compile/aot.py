@@ -1,0 +1,137 @@
+"""AOT lowering: JAX analytics graph -> HLO text artifacts + manifest.
+
+Run once at build time (`make artifacts`); the Rust coordinator loads the
+emitted `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and never
+touches Python again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Shapes are static in HLO, so we emit one artifact per (R, N) bucket; the
+Rust runtime pads any instance up to the next bucket (masking padding via the
+compatibility matrix) and falls back to its NativeBackend beyond the largest
+bucket. The bucket list below trades artifact count against padding waste —
+see DESIGN.md §6.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (rows, nodes) buckets. P (extra pool capacity) always equals rows.
+# The 1024/2048 steps exist to bound padding waste between 512 and 4096 —
+# a 1000x100 instance padded to 4096x128 ran 4x slower than at 1024x128
+# (EXPERIMENTS.md §Perf).
+BUCKETS = [
+    (64, 8),
+    (64, 32),
+    (512, 32),
+    (512, 128),
+    (1024, 128),
+    (2048, 256),
+    (4096, 128),
+    (4096, 512),
+]
+
+OUTPUT_NAMES = [
+    "impact",
+    "tau",
+    "gmax",
+    "row_min",
+    "row_max",
+    "row_max2",
+    "sav_hi",
+    "sav_lo",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (the rust-loadable format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(rows: int, nodes: int) -> str:
+    """Lower the analytics graph for one (rows, nodes) bucket."""
+    f32 = jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((rows,), f32),          # e
+        jax.ShapeDtypeStruct((nodes,), f32),         # c
+        jax.ShapeDtypeStruct((rows, nodes), f32),    # m
+        jax.ShapeDtypeStruct((rows,), f32),          # pool
+        jax.ShapeDtypeStruct((rows,), f32),          # pool_mask
+        jax.ShapeDtypeStruct((), f32),               # alpha
+    )
+    lowered = jax.jit(model.analytics).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def file_digest(path: str) -> str:
+    with open(path, "rb") as f:
+        return hashlib.sha256(f.read()).hexdigest()
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--buckets",
+        default=None,
+        help="comma-separated RxN pairs, e.g. 64x8,512x32 (default: all)",
+    )
+    args = parser.parse_args()
+
+    buckets = BUCKETS
+    if args.buckets:
+        buckets = [
+            tuple(int(x) for x in b.split("x")) for b in args.buckets.split(",")
+        ]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    for rows, nodes in buckets:
+        name = f"analytics_{rows}x{nodes}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_bucket(rows, nodes)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "file": name,
+                "rows": rows,
+                "nodes": nodes,
+                "pool": rows,
+                "inputs": ["e", "c", "m", "pool", "pool_mask", "alpha"],
+                "outputs": OUTPUT_NAMES,
+                "sha256": file_digest(path),
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    manifest = {
+        "format": "hlo-text",
+        "model": "green-constraint impact analytics",
+        "jax": jax.__version__,
+        "buckets": entries,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

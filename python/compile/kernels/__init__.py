@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels for the green-constraint impact analytics.
+
+`impact.py` holds the fused impact/row-statistics kernel (the numeric hot
+spot of the paper's Constraint Generator); `ref.py` holds the pure-jnp
+oracle the kernels are validated against at build time.
+"""

@@ -1,0 +1,113 @@
+"""Layer-1 Pallas kernel: fused impact product + row statistics.
+
+This is the numeric hot spot of the paper's Constraint Generator (§4.3):
+for every candidate deployment (service s, flavour f, node n) the expected
+emission Em = energyProfile(s,f) * carbon(n) must be materialised, and per
+(s,f) row the best / worst / next-worst node choices are needed for the
+threshold test (Eq. 3), the ranker (Eq. 11) and the explainability savings
+bounds (§5.4).
+
+The kernel streams the (R, N) impact tensor through VMEM exactly once,
+computing the masked outer product and all three row reductions in the same
+pass — a single-HBO-pass fusion of what the reference implementation does in
+four separate passes. The grid tiles rows only; each block sees the full node
+axis so row reductions stay block-local (N <= 512 for every shipped bucket,
+so a (ROW_BLOCK, N) f32 tile is at most 256 KiB — well inside VMEM, leaving
+room for double buffering; see DESIGN.md §9).
+
+Hardware adaptation note: the paper's testbed is CPU Kubernetes nodes; the
+TPU formulation tiles for VMEM with `BlockSpec` and is VPU-bound (1 FLOP per
+8 bytes streamed). `interpret=True` is mandatory here — real TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Plain python float: jnp scalars would be captured as traced constants
+# inside the pallas kernel body, which pallas_call rejects.
+BIG = 3.0e38
+
+# Default row-block. 128 rows x 512 nodes x 4 B = 256 KiB per f32 tile.
+ROW_BLOCK = 128
+
+
+def _fused_kernel(e_ref, c_ref, m_ref, imp_ref, rmin_ref, rmax_ref, rmax2_ref):
+    """Kernel body: one (ROW_BLOCK, N) tile per grid step."""
+    e = e_ref[...]  # (B,)
+    c = c_ref[...]  # (N,)
+    m = m_ref[...]  # (B, N)
+
+    impact = e[:, None] * c[None, :] * m
+    imp_ref[...] = impact
+
+    allowed = m > 0
+    n_allowed = jnp.sum(allowed.astype(jnp.int32), axis=1)
+
+    hi = jnp.where(allowed, impact, BIG)
+    rmin = jnp.min(hi, axis=1)
+    rmin_ref[...] = jnp.where(rmin >= BIG / 2, 0.0, rmin)
+
+    lo = jnp.where(allowed, impact, -BIG)
+    rmax = jnp.max(lo, axis=1)
+
+    # Second max: knock out the first occurrence of the max, re-reduce.
+    is_max = lo == rmax[:, None]
+    first_max = jnp.logical_and(jnp.cumsum(is_max, axis=1) == 1, is_max)
+    rmax2 = jnp.max(jnp.where(first_max, -BIG, lo), axis=1)
+
+    rmax = jnp.where(n_allowed == 0, 0.0, rmax)
+    rmax_ref[...] = rmax
+    rmax2_ref[...] = jnp.where(n_allowed >= 2, rmax2, rmax)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def impact_rowstats(e, c, m, *, row_block=ROW_BLOCK):
+    """Fused impact + row statistics via a Pallas kernel.
+
+    Args:
+      e: f32[R]    energy profile per (service, flavour) row (kWh).
+      c: f32[N]    carbon intensity per node (gCO2eq/kWh).
+      m: f32[R,N]  compatibility mask (1.0 / 0.0).
+      row_block:   rows per grid step (R must not be smaller than 1 block;
+                   R is padded by the caller to a bucket multiple).
+
+    Returns:
+      (impact[R,N], row_min[R], row_max[R], row_max2[R]) with the semantics
+      documented in kernels.ref.
+    """
+    e = jnp.asarray(e, jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    m = jnp.asarray(m, jnp.float32)
+    r, n = m.shape
+    block = min(row_block, r)
+    if r % block != 0:
+        raise ValueError(f"rows {r} not a multiple of row_block {block}")
+    grid = (r // block,)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((r, n), jnp.float32),
+        jax.ShapeDtypeStruct((r,), jnp.float32),
+        jax.ShapeDtypeStruct((r,), jnp.float32),
+        jax.ShapeDtypeStruct((r,), jnp.float32),
+    )
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((block, n), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block, n), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        out_shape=out_shapes,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(e, c, m)

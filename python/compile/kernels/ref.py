@@ -1,0 +1,124 @@
+"""Pure-jnp reference oracles for the Layer-1 Pallas kernels.
+
+These implement, in straightforward vectorised jnp, exactly the semantics the
+Pallas kernels must reproduce. pytest asserts `assert_allclose` between the
+two on randomised shapes/masks (see python/tests/test_kernels.py).
+
+Semantics shared with the Rust NativeBackend (rust/src/runtime/analytics.rs):
+
+* ``impact[r, n] = e[r] * c[n] * m[r, n]`` — the emission estimate
+  Em(s,f,n) = energyProfile(s,f) [kWh] x carbon(n) [gCO2eq/kWh] of Eq. (3),
+  masked by placement compatibility (and padding).
+* ``row_min[r]``  — smallest impact among *allowed* nodes of row r (the
+  "optimal node choice" of the explainability savings upper bound, §5.4).
+* ``row_max[r]``  — largest allowed impact (the worst node choice).
+* ``row_max2[r]`` — second-largest allowed impact (the "next worst" choice,
+  the savings lower bound). Equal to ``row_max`` when the row has fewer than
+  two allowed entries; 0 when it has none.
+
+All reductions treat masked-out entries as absent, not as zeros.
+"""
+
+import jax.numpy as jnp
+
+# Sentinel larger than any realistic impact value (Wh * gCO2eq/kWh scales).
+BIG = jnp.float32(3.0e38)
+
+
+def impact_rowstats(e, c, m):
+    """Reference for the fused impact + row-statistics kernel.
+
+    Args:
+      e: f32[R]    per-(service,flavour) energy profile (kWh).
+      c: f32[N]    per-node carbon intensity (gCO2eq/kWh).
+      m: f32[R,N]  compatibility mask (1.0 allowed / 0.0 disallowed).
+
+    Returns:
+      (impact[R,N], row_min[R], row_max[R], row_max2[R]) — see module doc.
+    """
+    e = jnp.asarray(e, jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    m = jnp.asarray(m, jnp.float32)
+    impact = e[:, None] * c[None, :] * m
+    allowed = m > 0
+
+    hi = jnp.where(allowed, impact, BIG)
+    row_min = hi.min(axis=1)
+    row_min = jnp.where(row_min >= BIG / 2, 0.0, row_min)
+
+    lo = jnp.where(allowed, impact, -BIG)
+    row_max = lo.max(axis=1)
+
+    # Second max: neutralise the first occurrence of the max, re-reduce.
+    is_max = lo == row_max[:, None]
+    first_max = jnp.logical_and(jnp.cumsum(is_max, axis=1) == 1, is_max)
+    lo2 = jnp.where(first_max, -BIG, lo)
+    row_max2 = lo2.max(axis=1)
+
+    n_allowed = allowed.sum(axis=1)
+    row_max = jnp.where(n_allowed == 0, 0.0, row_max)
+    row_max2 = jnp.where(n_allowed >= 2, row_max2, row_max)
+    return impact, row_min, row_max, row_max2
+
+
+def pooled_quantile(pool, pool_mask, alpha):
+    """Reference for the quantile threshold tau (Eq. 5).
+
+    tau = q_alpha = inf{ x | F(x) >= alpha } over the multiset of observed
+    environmental impacts `pool` (per-(service,flavour) observed impacts and
+    per-link communication emissions — "all services and communications
+    observed in the monitoring history", §4.3). Masked-out entries are
+    padding.
+
+    Returns (tau, gmax, count) where gmax is the pooled maximum and count
+    the live population size.
+    """
+    vals = jnp.where(pool_mask > 0, jnp.asarray(pool, jnp.float32), -BIG)
+    srt = jnp.sort(vals)  # masked sentinels sort to the front
+    total = srt.shape[0]
+    cnt = (pool_mask > 0).sum()
+    # k-th smallest of the live population, k = ceil(alpha * cnt) >= 1.
+    k = jnp.ceil(alpha * cnt).astype(jnp.int32)
+    k = jnp.clip(k, 1, jnp.maximum(cnt, 1))
+    idx = total - cnt + k - 1
+    tau = jnp.where(cnt > 0, srt[jnp.clip(idx, 0, total - 1)], 0.0)
+    gmax = jnp.where(cnt > 0, srt[total - 1], 0.0)
+    return tau, gmax, cnt
+
+
+def savings_bounds(impact, m, row_min):
+    """Reference for the explainability savings bounds (§5.4).
+
+    For each allowed (row, node) entry x = impact[r, n]:
+      * ``sav_hi`` = x - row_min[r]            (vs the optimal node choice)
+      * ``sav_lo`` = x - max{ y in row r allowed : y < x }   (vs the next
+        worst choice), or 0 when no strictly-lower allowed value exists.
+
+    Disallowed entries are 0 in both outputs.
+    """
+    rowvals = jnp.where(m > 0, impact, -BIG)
+    srt = jnp.sort(rowvals, axis=1)
+
+    # idx = first position with value >= x  =>  srt[idx-1] < x is the
+    # largest strictly-lower value (if it is a real, allowed value).
+    def per_row(sr, rv):
+        return jnp.searchsorted(sr, rv, side="left")
+
+    import jax
+
+    idx = jax.vmap(per_row)(srt, rowvals)
+    prev = jnp.take_along_axis(srt, jnp.maximum(idx - 1, 0), axis=1)
+    has_lower = jnp.logical_and(idx > 0, prev > -BIG / 2)
+    next_lower = jnp.where(has_lower, prev, rowvals)
+
+    sav_hi = (impact - row_min[:, None]) * m
+    sav_lo = (impact - next_lower) * m
+    return sav_hi, sav_lo
+
+
+def analytics(e, c, m, pool, pool_mask, alpha):
+    """Full reference analytics graph — mirrors compile.model.analytics."""
+    impact, row_min, row_max, row_max2 = impact_rowstats(e, c, m)
+    tau, gmax, _ = pooled_quantile(pool, pool_mask, alpha)
+    sav_hi, sav_lo = savings_bounds(impact, m, row_min)
+    return impact, tau, gmax, row_min, row_max, row_max2, sav_hi, sav_lo

@@ -1,0 +1,87 @@
+"""Layer-2 JAX model: the impact-analytics compute graph.
+
+This is the compute graph the Rust coordinator executes (via AOT-lowered HLO)
+on every constraint-generation epoch. It composes the Layer-1 Pallas kernel
+(`kernels.impact.impact_rowstats`) with the pooled quantile threshold of
+Eq. (5) and the explainability savings bounds of §5.4.
+
+Inputs (per shape bucket, see aot.py):
+  e          f32[R]    energy profile per (service, flavour) row, kWh.
+                        Padding rows carry e = 0.
+  c          f32[N]    carbon intensity per node, gCO2eq/kWh. Padding = 0.
+  m          f32[R,N]  compatibility mask; 0 for disallowed pairs AND padding.
+  pool       f32[P]    the tau distribution of Eq. 5: the *observed*
+                        environmental impacts of all services and
+                        communications from the monitoring history (per-row
+                        observed impact + per-link communication emissions),
+                        assembled by the caller. NOT the hypothetical
+                        per-node products — see DESIGN.md "Known
+                        discrepancies" for why this distinction decides the
+                        Table 4 shape.
+  pool_mask  f32[P]    1.0 for live pool entries, 0.0 for padding.
+  alpha      f32[]     quantile level (the paper uses 0.8).
+
+Outputs (8-tuple):
+  impact     f32[R,N]  Em(s,f,n) = e*c masked                      (Eq. 3 lhs)
+  tau        f32[]     q_alpha of the pooled observed impacts      (Eq. 5)
+  gmax       f32[]     pooled maximum (ranker normaliser, Eq. 11)
+  row_min    f32[R]    best (lowest-emission) allowed node per row
+  row_max    f32[R]    worst allowed node per row
+  row_max2   f32[R]    next-worst allowed node per row
+  sav_hi     f32[R,N]  upper savings bound vs optimal node         (§5.4)
+  sav_lo     f32[R,N]  lower savings bound vs next-worst node      (§5.4)
+
+The graph is pure; the same function is exercised in python tests against
+kernels.ref.analytics and in rust tests against the NativeBackend.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import impact as impact_kernel
+
+BIG = jnp.float32(3.0e38)
+
+
+def analytics(e, c, m, pool, pool_mask, alpha):
+    """Full analytics graph — see module docstring."""
+    impact, row_min, row_max, row_max2 = impact_kernel.impact_rowstats(e, c, m)
+
+    # --- quantile threshold tau over the observed impacts (Eq. 5) -------
+    vals = jnp.where(pool_mask > 0, pool, -BIG)
+    srt = jnp.sort(vals)  # sentinels sort first; live values occupy the tail
+    total = srt.shape[0]
+    cnt = (pool_mask > 0).sum()
+    k = jnp.ceil(alpha * cnt).astype(jnp.int32)
+    k = jnp.clip(k, 1, jnp.maximum(cnt, 1))
+    idx = jnp.clip(total - cnt + k - 1, 0, total - 1)
+    tau = jnp.where(cnt > 0, srt[idx], 0.0)
+    gmax = jnp.where(cnt > 0, srt[total - 1], 0.0)
+
+    # --- savings bounds (§5.4) ------------------------------------------
+    # next-lower-value per element: pos[r,i] = #{j : v[r,j] < v[r,i]}
+    # (== searchsorted side='left'). Two formulations, chosen per static
+    # node count at lowering time (EXPERIMENTS.md §Perf):
+    #   * N <= 64: fused broadcast-compare-reduce (O(N^2) but one fusion;
+    #     ~3x faster than vmapped binary searches at these widths);
+    #   * N  > 64: per-row binary search (the O(N^2) compare stops fusing
+    #     profitably — 3x slower at N = 128 — so sort + searchsorted wins).
+    rowvals = jnp.where(m > 0, impact, -BIG)
+    row_sorted = jnp.sort(rowvals, axis=1)
+    n_nodes = rowvals.shape[1]
+    if n_nodes <= 64:
+        pos = jnp.sum(
+            rowvals[:, None, :] < rowvals[:, :, None], axis=2, dtype=jnp.int32
+        )
+    else:
+        pos = jax.vmap(lambda sr, rv: jnp.searchsorted(sr, rv, side="left"))(
+            row_sorted, rowvals
+        )
+    prev = jnp.take_along_axis(row_sorted, jnp.maximum(pos - 1, 0), axis=1)
+    has_lower = jnp.logical_and(pos > 0, prev > -BIG / 2)
+    next_lower = jnp.where(has_lower, prev, rowvals)
+
+    sav_hi = (impact - row_min[:, None]) * m
+    sav_lo = (impact - next_lower) * m
+
+    return impact, tau, gmax, row_min, row_max, row_max2, sav_hi, sav_lo

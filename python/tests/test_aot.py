@@ -1,0 +1,62 @@
+"""AOT lowering contract: the HLO text artifact the Rust runtime loads.
+
+These tests pin the interchange invariants (§ /opt/xla-example/README.md):
+HLO *text* format, 6 parameters, an 8-tuple root — drift here breaks the
+Rust loader before any numeric test would notice.
+"""
+
+import re
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def hlo_text():
+    return aot.lower_bucket(64, 8)
+
+
+def test_emits_hlo_text_not_proto(hlo_text):
+    assert hlo_text.startswith("HloModule"), hlo_text[:80]
+    assert "ENTRY" in hlo_text
+
+
+def test_entry_has_six_parameters(hlo_text):
+    entry = hlo_text[hlo_text.index("ENTRY") :]
+    params = re.findall(r"parameter\(\d\)", entry)
+    assert len(params) == 6, params
+
+
+def test_root_is_eight_tuple(hlo_text):
+    entry = hlo_text[hlo_text.index("ENTRY") :]
+    root = [l for l in entry.splitlines() if "ROOT" in l]
+    assert len(root) == 1
+    # tuple shape with 8 members: (f32[64,8], f32[], f32[], f32[64], ...)
+    m = re.search(r"ROOT[^=]*= \((.*?)\) tuple", root[0])
+    assert m, root[0]
+    # strip layout annotations {1,0} and /*index=N*/ comments; shape
+    # elements contain commas, so count member types instead of splitting
+    inner = re.sub(r"\{[\d,]*\}", "", m.group(1))
+    inner = re.sub(r"/\*.*?\*/", "", inner)
+    assert inner.count("f32[") == 8, inner
+    assert inner.count("f32[]") == 2, inner  # tau, gmax scalars
+    assert inner.count("f32[64]") == 3, inner  # row stats
+    assert inner.count("f32[64,8]") == 3, inner  # impact, sav_hi, sav_lo
+
+
+def test_bucket_shapes_parametrised():
+    text = aot.lower_bucket(64, 32)
+    assert "f32[64,32]" in text
+
+
+def test_manifest_bucket_list_is_sorted_and_complete():
+    # every bucket must fit its pool == rows invariant the Rust loader
+    # relies on for pool capacity checks
+    for rows, nodes in aot.BUCKETS:
+        assert rows >= 64 and nodes >= 8
+    assert (64, 8) in aot.BUCKETS
+    assert (4096, 512) in aot.BUCKETS
+    # padding-waste buckets from the perf pass are present
+    assert (1024, 128) in aot.BUCKETS
+    assert (2048, 256) in aot.BUCKETS

@@ -1,0 +1,156 @@
+"""L2 analytics graph semantics: quantile vs numpy, savings bounds, padding.
+
+These tests pin the exact semantics the Rust NativeBackend mirrors, so any
+drift between the layers shows up here first.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def run(e, c, m, extra=None, extra_mask=None, alpha=0.8):
+    r = len(e)
+    if extra is None:
+        extra = np.zeros(r, np.float32)
+        extra_mask = np.zeros(r, np.float32)
+    out = model.analytics(
+        np.asarray(e, np.float32),
+        np.asarray(c, np.float32),
+        np.asarray(m, np.float32),
+        np.asarray(extra, np.float32),
+        np.asarray(extra_mask, np.float32),
+        np.float32(alpha),
+    )
+    return [np.asarray(x) for x in out]
+
+
+def numpy_quantile_lower(values, alpha):
+    """q_alpha = inf{x : F(x) >= alpha} on the empirical CDF."""
+    srt = np.sort(values)
+    k = int(np.ceil(alpha * len(srt)))
+    k = max(1, min(k, len(srt)))
+    return srt[k - 1]
+
+
+def test_matches_reference_analytics():
+    rng = np.random.default_rng(7)
+    e = rng.uniform(0, 3, 64).astype(np.float32)
+    c = rng.uniform(10, 600, 8).astype(np.float32)
+    m = (rng.uniform(size=(64, 8)) > 0.2).astype(np.float32)
+    extra = rng.uniform(0, 100, 64).astype(np.float32)
+    extra_mask = (rng.uniform(size=64) > 0.5).astype(np.float32)
+    got = run(e, c, m, extra, extra_mask)
+    want = ref.analytics(e, c, m, extra, extra_mask, np.float32(0.8))
+    for g, w, name in zip(
+        got,
+        [np.asarray(x) for x in want],
+        ["impact", "tau", "gmax", "row_min", "row_max", "row_max2", "sav_hi", "sav_lo"],
+    ):
+        assert_allclose(g, w, rtol=1e-6, atol=1e-6, err_msg=name)
+
+
+def test_tau_is_pool_quantile():
+    """tau is the Eq. 5 quantile of the OBSERVED impact pool (per-row +
+    per-link observations), not of hypothetical per-node products."""
+    rng = np.random.default_rng(3)
+    e = rng.uniform(0, 3, 16).astype(np.float32)
+    c = rng.uniform(10, 600, 4).astype(np.float32)
+    m = np.ones((16, 4), np.float32)
+    pool = rng.uniform(0, 500, 16).astype(np.float32)
+    pool_mask = np.ones(16, np.float32)
+    pool_mask[12:] = 0.0  # padding entries must not count
+    for alpha in [0.5, 0.8, 0.9, 1.0]:
+        out = run(e, c, m, pool, pool_mask, alpha)
+        live = pool[:12]
+        assert out[1] == pytest.approx(numpy_quantile_lower(live, alpha), rel=1e-6)
+        assert out[2] == pytest.approx(live.max(), rel=1e-6)
+
+
+def test_savings_bounds_paper_scenario1():
+    """§5.4 numbers: frontend-large savings on GreatBritain and Italy."""
+    e = np.array([1.981], np.float32)  # kWh (Table 1 read as Wh / 1000)
+    c = np.array([16, 88, 132, 213, 335], np.float32)  # Table 2
+    m = np.ones((1, 5), np.float32)
+    impact, tau, gmax, row_min, row_max, row_max2, sav_hi, sav_lo = run(e, c, m)
+    # Italy (worst): upper vs France, lower vs next-worst (GreatBritain)
+    assert sav_hi[0, 4] == pytest.approx(1.981 * (335 - 16), rel=1e-5)  # ~631.9
+    assert sav_lo[0, 4] == pytest.approx(1.981 * (335 - 213), rel=1e-5)  # ~241.7
+    # GreatBritain: upper vs France, lower vs Germany
+    assert sav_hi[0, 3] == pytest.approx(1.981 * (213 - 16), rel=1e-5)  # ~390.3
+    assert sav_lo[0, 3] == pytest.approx(1.981 * (213 - 132), rel=1e-5)  # ~160.5
+    # Best node has zero savings both ways
+    assert sav_hi[0, 0] == 0.0
+    assert sav_lo[0, 0] == 0.0
+
+
+def test_padding_invariance():
+    """Appending masked padding rows/nodes must not change live outputs."""
+    rng = np.random.default_rng(11)
+    e = rng.uniform(0, 3, 8).astype(np.float32)
+    c = rng.uniform(10, 600, 4).astype(np.float32)
+    m = (rng.uniform(size=(8, 4)) > 0.25).astype(np.float32)
+    base = run(e, c, m)
+
+    ep = np.concatenate([e, np.zeros(8, np.float32)])
+    cp = np.concatenate([c, np.zeros(4, np.float32)])
+    mp = np.zeros((16, 8), np.float32)
+    mp[:8, :4] = m
+    padded = run(ep, cp, mp)  # pool defaults to empty in both runs
+
+    assert_allclose(padded[0][:8, :4], base[0], rtol=1e-6)  # impact
+    assert padded[1] == pytest.approx(float(base[1]), rel=1e-6)  # tau
+    assert padded[2] == pytest.approx(float(base[2]), rel=1e-6)  # gmax
+    for i in (3, 4, 5):
+        assert_allclose(padded[i][:8], base[i], rtol=1e-6)
+    for i in (6, 7):
+        assert_allclose(padded[i][:8, :4], base[i], rtol=1e-6)
+
+
+def test_empty_mask_all_zero_outputs():
+    e = np.zeros(4, np.float32)
+    c = np.zeros(4, np.float32)
+    m = np.zeros((4, 4), np.float32)
+    out = run(e, c, m)
+    for arr in out:
+        assert np.all(np.asarray(arr) == 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    alpha=st.floats(0.05, 1.0),
+    density=st.floats(0.1, 1.0),
+)
+def test_hypothesis_tau_monotone_in_alpha(seed, alpha, density):
+    """tau(alpha) must be monotone: a stricter quantile is never smaller."""
+    rng = np.random.default_rng(seed)
+    e = rng.uniform(0, 3, 32).astype(np.float32)
+    c = rng.uniform(1, 600, 8).astype(np.float32)
+    m = (rng.uniform(size=(32, 8)) < density).astype(np.float32)
+    if m.sum() == 0:
+        m[0, 0] = 1.0
+    pool = rng.uniform(0, 400, 32).astype(np.float32)
+    pool_mask = np.ones(32, np.float32)
+    lo = run(e, c, m, pool, pool_mask, alpha=alpha)[1]
+    hi = run(e, c, m, pool, pool_mask, alpha=min(1.0, alpha + 0.1))[1]
+    assert float(hi) >= float(lo) - 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_savings_nonnegative(seed):
+    rng = np.random.default_rng(seed)
+    e = rng.uniform(0, 3, 16).astype(np.float32)
+    c = rng.uniform(1, 600, 8).astype(np.float32)
+    m = (rng.uniform(size=(16, 8)) > 0.4).astype(np.float32)
+    out = run(e, c, m)
+    sav_hi, sav_lo = out[6], out[7]
+    assert np.all(sav_hi >= -1e-5)
+    assert np.all(sav_lo >= -1e-5)
+    # lower bound never exceeds upper bound
+    assert np.all(sav_lo <= sav_hi + 1e-4)

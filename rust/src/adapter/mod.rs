@@ -1,0 +1,194 @@
+//! Constraint Adapter (§3.1): reformats the ranked constraints into the
+//! syntax of the target scheduler.
+//!
+//! Three dialects ship with the library:
+//! * [`PrologAdapter`] — the paper's own presentation syntax
+//!   (`avoidNode(d(frontend, large), italy, 0.636).`), consumed by the
+//!   FREEDA CP scheduler of ref. [36];
+//! * [`JsonAdapter`] — structured JSON for REST-style schedulers;
+//! * [`MiniZincAdapter`] — soft-constraint items for CP-solver backends.
+
+use crate::constraints::{Constraint, ConstraintKind};
+use crate::jsonio::{self, Value};
+
+/// A scheduler dialect.
+pub trait SchedulerAdapter {
+    /// Dialect name (CLI `--format` values).
+    fn name(&self) -> &'static str;
+
+    /// Serialize the ranked constraint list.
+    fn format(&self, constraints: &[Constraint]) -> String;
+}
+
+/// The paper's Prolog fact syntax.
+pub struct PrologAdapter;
+
+impl SchedulerAdapter for PrologAdapter {
+    fn name(&self) -> &'static str {
+        "prolog"
+    }
+
+    fn format(&self, constraints: &[Constraint]) -> String {
+        let mut out = String::new();
+        for c in constraints {
+            out.push_str(&c.render_prolog());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Structured JSON.
+pub struct JsonAdapter;
+
+impl SchedulerAdapter for JsonAdapter {
+    fn name(&self) -> &'static str {
+        "json"
+    }
+
+    fn format(&self, constraints: &[Constraint]) -> String {
+        let v = Value::array(constraints.iter().map(|c| c.to_json()).collect());
+        jsonio::to_string_pretty(&v)
+    }
+}
+
+/// MiniZinc soft-constraint items. Placement is modelled as
+/// `array[SERVICES] of var NODES: place` and flavour choice as
+/// `array[SERVICES] of var FLAVOURS: flav`; each green constraint becomes
+/// a weighted violation term added to the objective.
+pub struct MiniZincAdapter;
+
+impl SchedulerAdapter for MiniZincAdapter {
+    fn name(&self) -> &'static str {
+        "minizinc"
+    }
+
+    fn format(&self, constraints: &[Constraint]) -> String {
+        let mut out = String::from(
+            "% greengen soft constraints — add `violation` terms to the objective\n",
+        );
+        for (i, c) in constraints.iter().enumerate() {
+            let (expr, comment) = match &c.kind {
+                ConstraintKind::AvoidNode {
+                    service,
+                    flavour,
+                    node,
+                } => (
+                    format!(
+                        "bool2int(place[{service}] == {node} /\\ flav[{service}] == {flavour})"
+                    ),
+                    format!("avoid {service}/{flavour} on {node}"),
+                ),
+                ConstraintKind::Affinity {
+                    service,
+                    flavour,
+                    other,
+                } => (
+                    format!(
+                        "bool2int(place[{service}] != place[{other}] /\\ flav[{service}] == {flavour})"
+                    ),
+                    format!("co-locate {service}/{flavour} with {other}"),
+                ),
+                ConstraintKind::PreferNode {
+                    service,
+                    flavour,
+                    node,
+                } => (
+                    format!(
+                        "bool2int(place[{service}] != {node} /\\ flav[{service}] == {flavour})"
+                    ),
+                    format!("prefer {node} for {service}/{flavour}"),
+                ),
+            };
+            out.push_str(&format!(
+                "% {comment}\nvar 0..1: viol_{i} = {expr};\nfloat: w_{i} = {:.4};\n",
+                c.weight
+            ));
+        }
+        out.push_str(&format!(
+            "var float: green_penalty = {};\n",
+            (0..constraints.len())
+                .map(|i| format!("w_{i} * viol_{i}"))
+                .collect::<Vec<_>>()
+                .join(" + ")
+        ));
+        out
+    }
+}
+
+/// Look up an adapter by dialect name.
+pub fn adapter_for(name: &str) -> Option<Box<dyn SchedulerAdapter>> {
+    match name {
+        "prolog" => Some(Box::new(PrologAdapter)),
+        "json" => Some(Box::new(JsonAdapter)),
+        "minizinc" => Some(Box::new(MiniZincAdapter)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Constraint> {
+        let mut c1 = Constraint::new(
+            ConstraintKind::AvoidNode {
+                service: "frontend".into(),
+                flavour: "large".into(),
+                node: "italy".into(),
+            },
+            663.6,
+            241.7,
+            631.9,
+        );
+        c1.weight = 1.0;
+        let mut c2 = Constraint::new(
+            ConstraintKind::Affinity {
+                service: "frontend".into(),
+                flavour: "large".into(),
+                other: "cart".into(),
+            },
+            120.0,
+            120.0,
+            120.0,
+        );
+        c2.weight = 0.181;
+        vec![c1, c2]
+    }
+
+    #[test]
+    fn prolog_dialect_matches_paper() {
+        let text = PrologAdapter.format(&sample());
+        assert_eq!(
+            text,
+            "avoidNode(d(frontend, large), italy, 1.000).\n\
+             affinity(d(frontend, large), d(cart, _), 0.181).\n"
+        );
+    }
+
+    #[test]
+    fn json_dialect_round_trips() {
+        let text = JsonAdapter.format(&sample());
+        let v = jsonio::parse(&text).unwrap();
+        let arr = v.as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].req("kind").unwrap().str_field("type").unwrap(), "AvoidNode");
+        assert_eq!(arr[0].f64_field("weight").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn minizinc_dialect_has_violation_terms() {
+        let text = MiniZincAdapter.format(&sample());
+        assert!(text.contains("viol_0 = bool2int(place[frontend] == italy"));
+        assert!(text.contains("viol_1 = bool2int(place[frontend] != place[cart]"));
+        assert!(text.contains("green_penalty = w_0 * viol_0 + w_1 * viol_1"));
+    }
+
+    #[test]
+    fn adapter_lookup() {
+        assert!(adapter_for("prolog").is_some());
+        assert!(adapter_for("json").is_some());
+        assert!(adapter_for("minizinc").is_some());
+        assert!(adapter_for("xml").is_none());
+    }
+}

@@ -1,0 +1,174 @@
+//! Micro-benchmark harness (offline replacement for `criterion`).
+//!
+//! Each benchmark runs a warm-up phase, then timed iterations until both
+//! a minimum iteration count and a minimum measurement time are reached;
+//! it reports mean / p50 / p95 / min per iteration. Results can also be
+//! appended to a CSV for the experiment drivers.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} {:>10} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}  min {:>12?}",
+            self.name, self.iterations, self.mean, self.p50, self.p95, self.min
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            min_time: Duration::from_millis(300),
+        }
+    }
+}
+
+/// The harness: collects results, prints a summary at the end.
+pub struct Bench {
+    pub config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            config: BenchConfig::default(),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(config: BenchConfig) -> Self {
+        Bench {
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark. The closure's return value is black-boxed to
+    /// prevent the optimiser from eliding the work.
+    pub fn bench<T>(&mut self, name: &str, mut body: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.config.warmup_iters {
+            black_box(body());
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let started = Instant::now();
+        while samples.len() < self.config.min_iters
+            || (started.elapsed() < self.config.min_time
+                && samples.len() < self.config.max_iters)
+        {
+            let t0 = Instant::now();
+            black_box(body());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let iterations = samples.len();
+        let total: Duration = samples.iter().sum();
+        let result = BenchResult {
+            name: name.to_string(),
+            iterations,
+            mean: total / iterations as u32,
+            p50: samples[iterations / 2],
+            p95: samples[(iterations * 95 / 100).min(iterations - 1)],
+            min: samples[0],
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write all results to a CSV file (name, iters, mean_ns, p50_ns,
+    /// p95_ns, min_ns).
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut out = String::from("name,iterations,mean_ns,p50_ns,p95_ns,min_ns\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                r.name,
+                r.iterations,
+                r.mean.as_nanos(),
+                r.p50.as_nanos(),
+                r.p95.as_nanos(),
+                r.min.as_nanos()
+            ));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+/// Optimiser barrier (stable-Rust version of `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut bench = Bench::new(BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 10,
+            min_time: Duration::from_millis(1),
+        });
+        let mut counter = 0u64;
+        let r = bench.bench("spin", || {
+            counter += 1;
+            (0..100).sum::<u64>()
+        });
+        assert!(r.iterations >= 5);
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.p95 >= r.p50);
+        assert!(r.p50 >= r.min);
+        assert!(counter >= 6); // warmup + iters
+    }
+
+    #[test]
+    fn csv_output() {
+        let mut bench = Bench::new(BenchConfig {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 3,
+            min_time: Duration::from_micros(1),
+        });
+        bench.bench("a", || 1 + 1);
+        let path = std::env::temp_dir().join(format!("greengen-bench-{}.csv", std::process::id()));
+        bench.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("name,iterations"));
+        assert!(text.contains("\na,"));
+        std::fs::remove_file(&path).ok();
+    }
+}

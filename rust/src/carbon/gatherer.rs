@@ -1,0 +1,187 @@
+//! Energy Mix Gatherer (§3.1): enriches the Infrastructure Description
+//! with carbon-intensity data.
+//!
+//! Deployment decisions are not instantaneous, so the gatherer reports the
+//! *average* intensity over a recent observation window rather than the
+//! spot value. Nodes whose profile already pins an explicit `carbon` value
+//! (e.g. a solar-powered edge node declared by the DevOps engineer) are
+//! left untouched.
+
+use super::intensity::CarbonIntensitySource;
+use crate::model::Infrastructure;
+use crate::{Error, Result};
+
+/// Configuration of the observation window.
+#[derive(Debug, Clone, Copy)]
+pub struct GathererConfig {
+    /// Window length in seconds (default: 6 hours).
+    pub window: f64,
+    /// Samples across the window.
+    pub samples: usize,
+    /// Overwrite already-enriched (non-pinned) values on re-gathering.
+    pub refresh: bool,
+}
+
+impl Default for GathererConfig {
+    fn default() -> Self {
+        GathererConfig {
+            window: 6.0 * 3600.0,
+            samples: 24,
+            refresh: true,
+        }
+    }
+}
+
+/// The Energy Mix Gatherer.
+pub struct EnergyMixGatherer<'a> {
+    source: &'a dyn CarbonIntensitySource,
+    config: GathererConfig,
+    /// Node ids whose carbon was explicitly pinned by the engineer; these
+    /// are never overwritten.
+    pinned: std::collections::HashSet<String>,
+}
+
+impl<'a> EnergyMixGatherer<'a> {
+    pub fn new(source: &'a dyn CarbonIntensitySource) -> Self {
+        EnergyMixGatherer {
+            source,
+            config: GathererConfig::default(),
+            pinned: Default::default(),
+        }
+    }
+
+    pub fn with_config(mut self, config: GathererConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Declare a node's carbon value as engineer-pinned.
+    pub fn pin(&mut self, node_id: &str) {
+        self.pinned.insert(node_id.to_string());
+    }
+
+    /// Enrich every node of `infra` with the window-averaged carbon
+    /// intensity of its region at time `t`. Fails if a region is unknown
+    /// to the source and the node has no explicit value.
+    pub fn enrich(&self, infra: &mut Infrastructure, t: f64) -> Result<()> {
+        for node in &mut infra.nodes {
+            let pinned = self.pinned.contains(&node.id);
+            let already = node.profile.carbon.is_some();
+            if pinned || (already && !self.config.refresh) {
+                continue;
+            }
+            match self.source.window_average(
+                &node.region,
+                t,
+                self.config.window,
+                self.config.samples,
+            ) {
+                Some(ci) => node.profile.carbon = Some(ci),
+                None if already => {} // keep the engineer-provided value
+                None => {
+                    return Err(Error::Config(format!(
+                        "no carbon intensity for region '{}' (node '{}')",
+                        node.region, node.id
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::intensity::{StaticIntensity, TraceSet};
+    use crate::model::Node;
+
+    fn eu_infra() -> Infrastructure {
+        let mut infra = Infrastructure::new("eu");
+        for (id, region) in [
+            ("france", "FR"),
+            ("spain", "ES"),
+            ("germany", "DE"),
+            ("greatbritain", "GB"),
+            ("italy", "IT"),
+        ] {
+            infra.nodes.push(Node::new(id, region));
+        }
+        infra
+    }
+
+    #[test]
+    fn enriches_all_nodes_from_table2() {
+        let source = StaticIntensity::europe_table2();
+        let gatherer = EnergyMixGatherer::new(&source);
+        let mut infra = eu_infra();
+        gatherer.enrich(&mut infra, 0.0).unwrap();
+        assert_eq!(infra.node("france").unwrap().carbon(), 16.0);
+        assert_eq!(infra.node("italy").unwrap().carbon(), 335.0);
+    }
+
+    #[test]
+    fn unknown_region_is_an_error() {
+        let source = StaticIntensity::europe_table2();
+        let gatherer = EnergyMixGatherer::new(&source);
+        let mut infra = Infrastructure::new("x");
+        infra.nodes.push(Node::new("moon", "MOON"));
+        assert!(gatherer.enrich(&mut infra, 0.0).is_err());
+    }
+
+    #[test]
+    fn pinned_nodes_are_untouched() {
+        let source = StaticIntensity::europe_table2();
+        let mut gatherer = EnergyMixGatherer::new(&source);
+        gatherer.pin("france");
+        let mut infra = eu_infra();
+        // engineer declares france as solar-powered
+        infra.node_mut("france").unwrap().profile.carbon = Some(2.0);
+        gatherer.enrich(&mut infra, 0.0).unwrap();
+        assert_eq!(infra.node("france").unwrap().carbon(), 2.0);
+        assert_eq!(infra.node("italy").unwrap().carbon(), 335.0);
+    }
+
+    #[test]
+    fn unknown_region_with_explicit_value_is_kept() {
+        let source = StaticIntensity::europe_table2();
+        let gatherer = EnergyMixGatherer::new(&source);
+        let mut infra = Infrastructure::new("x");
+        let mut node = Node::new("edge", "OFFGRID");
+        node.profile.carbon = Some(11.0);
+        infra.nodes.push(node);
+        gatherer.enrich(&mut infra, 0.0).unwrap();
+        assert_eq!(infra.node("edge").unwrap().carbon(), 11.0);
+    }
+
+    #[test]
+    fn window_average_used_for_traces() {
+        let base = StaticIntensity::new(&[("IT", 300.0)]);
+        let set = TraceSet::from_static(&base, 3);
+        let gatherer = EnergyMixGatherer::new(&set).with_config(GathererConfig {
+            window: 4.0 * 3600.0,
+            samples: 16,
+            refresh: true,
+        });
+        let mut infra = Infrastructure::new("x");
+        infra.nodes.push(Node::new("italy", "IT"));
+        gatherer.enrich(&mut infra, 13.0 * 3600.0).unwrap();
+        let ci = infra.node("italy").unwrap().carbon();
+        // midday window average sits below the base (solar dip), above floor
+        assert!(ci > 100.0 && ci < 300.0, "ci {ci}");
+    }
+
+    #[test]
+    fn refresh_false_keeps_previous_enrichment() {
+        let source = StaticIntensity::europe_table2();
+        let gatherer = EnergyMixGatherer::new(&source).with_config(GathererConfig {
+            refresh: false,
+            ..Default::default()
+        });
+        let mut infra = eu_infra();
+        infra.node_mut("italy").unwrap().profile.carbon = Some(999.0);
+        gatherer.enrich(&mut infra, 0.0).unwrap();
+        assert_eq!(infra.node("italy").unwrap().carbon(), 999.0);
+        assert_eq!(infra.node("france").unwrap().carbon(), 16.0);
+    }
+}

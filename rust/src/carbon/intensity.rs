@@ -1,0 +1,254 @@
+//! Carbon-intensity sources (Electricity Maps stand-in).
+//!
+//! A [`CarbonIntensitySource`] answers "what was the grid carbon intensity
+//! of region R at time t (seconds)?". Implementations:
+//!
+//! * [`StaticIntensity`] — fixed per-region values (the paper's §5 setup:
+//!   Tables 2 and 3).
+//! * [`DiurnalTrace`] — a realistic time-varying trace: base value
+//!   modulated by a solar-shaped diurnal dip plus bounded noise, matching
+//!   the "typical dynamicity of renewable energy sources" Scenario 3
+//!   simulates.
+//! * [`TraceSet`] — a per-region composition of the above with optional
+//!   scenario overrides.
+
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Seconds per day.
+pub const DAY: f64 = 86_400.0;
+
+/// A queryable source of grid carbon intensity (gCO2eq/kWh).
+pub trait CarbonIntensitySource: Send + Sync {
+    /// Intensity of `region` at absolute time `t` (seconds).
+    fn intensity(&self, region: &str, t: f64) -> Option<f64>;
+
+    /// Mean intensity over the window `[t - window, t]`, sampled at
+    /// `samples` points — what the Energy Mix Gatherer consumes.
+    fn window_average(&self, region: &str, t: f64, window: f64, samples: usize) -> Option<f64> {
+        let samples = samples.max(1);
+        let mut total = 0.0;
+        for i in 0..samples {
+            let ti = t - window * (i as f64) / (samples as f64);
+            total += self.intensity(region, ti)?;
+        }
+        Some(total / samples as f64)
+    }
+}
+
+/// Fixed per-region intensities — the paper's experimental configuration.
+#[derive(Debug, Clone, Default)]
+pub struct StaticIntensity {
+    values: HashMap<String, f64>,
+}
+
+impl StaticIntensity {
+    pub fn new(pairs: &[(&str, f64)]) -> Self {
+        StaticIntensity {
+            values: pairs.iter().map(|(r, v)| (r.to_string(), *v)).collect(),
+        }
+    }
+
+    pub fn set(&mut self, region: &str, value: f64) {
+        self.values.insert(region.to_string(), value);
+    }
+
+    /// Europe infrastructure of Table 2 (gCO2eq/kWh).
+    pub fn europe_table2() -> Self {
+        StaticIntensity::new(&[
+            ("FR", 16.0),
+            ("ES", 88.0),
+            ("DE", 132.0),
+            ("GB", 213.0),
+            ("IT", 335.0),
+        ])
+    }
+
+    /// US infrastructure of Table 3 (gCO2eq/kWh).
+    pub fn us_table3() -> Self {
+        StaticIntensity::new(&[
+            ("US-WA", 244.0),
+            ("US-CA", 235.0),
+            ("US-TX", 231.0),
+            ("US-FL", 570.0),
+            ("US-NY", 236.0),
+            ("US-AZ", 229.0),
+        ])
+    }
+}
+
+impl CarbonIntensitySource for StaticIntensity {
+    fn intensity(&self, region: &str, _t: f64) -> Option<f64> {
+        self.values.get(region).copied()
+    }
+}
+
+/// A diurnal carbon-intensity trace for one region.
+///
+/// Model: `base * (1 - solar_share * daylight(t)) + noise(t)`, where
+/// `daylight` is a clamped sinusoid peaking at 13:00 local time (solar
+/// production depresses grid intensity around midday) and `noise` is
+/// bounded deterministic jitter derived from the trace seed. Values are
+/// clamped to a physical floor of 5 gCO2eq/kWh.
+#[derive(Debug, Clone)]
+pub struct DiurnalTrace {
+    pub base: f64,
+    /// Fraction of the base displaced by solar at peak (0..1).
+    pub solar_share: f64,
+    /// Noise amplitude as a fraction of base.
+    pub noise: f64,
+    seed: u64,
+}
+
+impl DiurnalTrace {
+    pub fn new(base: f64, solar_share: f64, noise: f64, seed: u64) -> Self {
+        DiurnalTrace {
+            base,
+            solar_share: solar_share.clamp(0.0, 1.0),
+            noise: noise.max(0.0),
+            seed,
+        }
+    }
+
+    /// Intensity at time `t` (seconds since epoch of the simulation).
+    pub fn at(&self, t: f64) -> f64 {
+        let day_frac = (t.rem_euclid(DAY)) / DAY;
+        // Sinusoid peaking at 13:00 (frac ~ 0.542), floored at 0 by night.
+        let solar = (std::f64::consts::PI * (day_frac - 0.25) / 0.585)
+            .sin()
+            .max(0.0);
+        // Deterministic per-hour jitter from the seed.
+        let hour = (t / 3600.0).floor() as i64;
+        let mut rng = Rng::new(self.seed ^ (hour as u64).wrapping_mul(0x9E37_79B9));
+        let jitter = (rng.f64() * 2.0 - 1.0) * self.noise * self.base;
+        (self.base * (1.0 - self.solar_share * solar) + jitter).max(5.0)
+    }
+}
+
+/// Per-region trace collection with optional static overrides — the main
+/// source used by the adaptive pipeline and the scenario simulations.
+#[derive(Default)]
+pub struct TraceSet {
+    traces: HashMap<String, DiurnalTrace>,
+    overrides: HashMap<String, f64>,
+}
+
+impl TraceSet {
+    pub fn new() -> Self {
+        TraceSet::default()
+    }
+
+    pub fn with_trace(mut self, region: &str, trace: DiurnalTrace) -> Self {
+        self.traces.insert(region.to_string(), trace);
+        self
+    }
+
+    /// Build diurnal traces on top of static regional bases. Regions with
+    /// low base intensity get a high solar share (they are renewable-heavy
+    /// grids), matching observed Electricity Maps dynamics.
+    pub fn from_static(base: &StaticIntensity, seed: u64) -> Self {
+        let mut set = TraceSet::new();
+        for (region, &value) in &base.values {
+            // Renewable-heavy grids (low CI) fluctuate more in relative
+            // terms; fossil-heavy grids are flatter.
+            let solar_share = if value < 100.0 {
+                0.35
+            } else if value < 300.0 {
+                0.20
+            } else {
+                0.10
+            };
+            let mut h = 0xcbf29ce484222325u64;
+            for b in region.bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+            }
+            set.traces.insert(
+                region.clone(),
+                DiurnalTrace::new(value, solar_share, 0.05, seed ^ h),
+            );
+        }
+        set
+    }
+
+    /// Pin a region to a fixed value (Scenario 3-style perturbation).
+    pub fn override_region(&mut self, region: &str, value: f64) {
+        self.overrides.insert(region.to_string(), value);
+    }
+
+    pub fn clear_override(&mut self, region: &str) {
+        self.overrides.remove(region);
+    }
+}
+
+impl CarbonIntensitySource for TraceSet {
+    fn intensity(&self, region: &str, t: f64) -> Option<f64> {
+        if let Some(v) = self.overrides.get(region) {
+            return Some(*v);
+        }
+        self.traces.get(region).map(|tr| tr.at(t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_tables_match_paper() {
+        let eu = StaticIntensity::europe_table2();
+        assert_eq!(eu.intensity("FR", 0.0), Some(16.0));
+        assert_eq!(eu.intensity("IT", 123.0), Some(335.0));
+        assert_eq!(eu.intensity("XX", 0.0), None);
+        let us = StaticIntensity::us_table3();
+        assert_eq!(us.intensity("US-FL", 0.0), Some(570.0));
+        assert_eq!(us.intensity("US-AZ", 0.0), Some(229.0));
+    }
+
+    #[test]
+    fn window_average_of_static_is_value() {
+        let eu = StaticIntensity::europe_table2();
+        let avg = eu.window_average("DE", 1e6, 3600.0, 12).unwrap();
+        assert_eq!(avg, 132.0);
+    }
+
+    #[test]
+    fn diurnal_trace_dips_at_midday() {
+        let tr = DiurnalTrace::new(200.0, 0.4, 0.0, 1);
+        let night = tr.at(2.0 * 3600.0); // 02:00
+        let noon = tr.at(13.0 * 3600.0); // 13:00
+        assert!(noon < night, "noon {noon} night {night}");
+        assert!(noon >= 5.0);
+        // night value should be close to base (no solar)
+        assert!((night - 200.0).abs() < 1.0, "night {night}");
+    }
+
+    #[test]
+    fn diurnal_trace_deterministic() {
+        let a = DiurnalTrace::new(300.0, 0.2, 0.05, 42);
+        let b = DiurnalTrace::new(300.0, 0.2, 0.05, 42);
+        for h in 0..48 {
+            let t = h as f64 * 3600.0;
+            assert_eq!(a.at(t), b.at(t));
+        }
+    }
+
+    #[test]
+    fn trace_set_override_wins() {
+        let base = StaticIntensity::europe_table2();
+        let mut set = TraceSet::from_static(&base, 7);
+        assert!(set.intensity("FR", 0.0).is_some());
+        set.override_region("FR", 376.0); // Scenario 3
+        assert_eq!(set.intensity("FR", 0.0), Some(376.0));
+        assert_eq!(set.intensity("FR", 1e5), Some(376.0));
+        set.clear_override("FR");
+        assert_ne!(set.intensity("FR", 0.0), Some(376.0));
+    }
+
+    #[test]
+    fn trace_set_window_average_smooths() {
+        let base = StaticIntensity::new(&[("IT", 335.0)]);
+        let set = TraceSet::from_static(&base, 9);
+        let avg = set.window_average("IT", 12.0 * 3600.0, 6.0 * 3600.0, 24).unwrap();
+        assert!(avg > 200.0 && avg < 400.0, "avg {avg}");
+    }
+}

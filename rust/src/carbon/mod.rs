@@ -1,0 +1,18 @@
+//! Grid carbon intensity service + Energy Mix Gatherer (§3.1).
+//!
+//! The paper retrieves per-region carbon intensity from a public service
+//! (Electricity Maps). That service is not reachable here, so
+//! [`intensity`] implements an equivalent substrate: static regional
+//! values (the paper's Tables 2–3), trace-based sources with diurnal
+//! renewable dynamics, and composable overrides for scenario perturbations
+//! (e.g. Scenario 3's France 16 → 376 brown-out).
+//!
+//! [`gatherer`] implements the Energy Mix Gatherer: it averages intensity
+//! over a recent observation window ("deployment decisions are not made
+//! instantaneously") and enriches the Infrastructure Description.
+
+pub mod gatherer;
+pub mod intensity;
+
+pub use gatherer::EnergyMixGatherer;
+pub use intensity::{CarbonIntensitySource, DiurnalTrace, StaticIntensity, TraceSet};

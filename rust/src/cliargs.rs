@@ -1,0 +1,139 @@
+//! Minimal command-line argument parser (offline replacement for `clap`).
+//!
+//! Supports `command [positional...] [--flag] [--key value]` with typed
+//! accessors and an unknown-option check.
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let value = iter.next().unwrap();
+                    args.options.insert(name.to_string(), value);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(arg);
+            } else {
+                args.positional.push(arg);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    /// Error on options/flags outside the allowed set (catches typos).
+    pub fn ensure_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !allowed.contains(&k.as_str()) {
+                return Err(Error::Config(format!("unknown option '--{k}'")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_positional_options_flags() {
+        let args = parse("scenario 3 --format json --explain --alpha 0.8");
+        assert_eq!(args.command.as_deref(), Some("scenario"));
+        assert_eq!(args.positional, vec!["3"]);
+        assert_eq!(args.opt("format"), Some("json"));
+        assert!(args.flag("explain"));
+        assert_eq!(args.f64_or("alpha", 0.5).unwrap(), 0.8);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let args = parse("generate --alpha=0.9 --nodes=100");
+        assert_eq!(args.f64_or("alpha", 0.0).unwrap(), 0.9);
+        assert_eq!(args.usize_or("nodes", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let args = parse("adaptive --verbose");
+        assert!(args.flag("verbose"));
+        assert_eq!(args.opt("verbose"), None);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let args = parse("x --n abc");
+        assert!(args.usize_or("n", 1).is_err());
+        assert!(args.f64_or("n", 1.0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_detection() {
+        let args = parse("x --good 1 --bad 2");
+        assert!(args.ensure_known(&["good"]).is_err());
+        assert!(args.ensure_known(&["good", "bad"]).is_ok());
+    }
+}

@@ -1,0 +1,202 @@
+//! The Online Boutique case study (§5.1): Google's 10-microservice
+//! e-commerce demo, extended with the paper's additional flavours
+//! (Table 1), plus the two infrastructures (Tables 2–3) and the
+//! monitoring ground truth the workload simulator replays.
+//!
+//! Energy values are Table 1's numbers interpreted as **Wh per
+//! observation window** (the reading under which every §5.4 savings figure
+//! reconciles — see DESIGN.md "Known discrepancies"); profiles store kWh.
+
+use crate::model::{
+    Application, CommLink, Flavour, FlavourRequirements, Infrastructure, Node, Service,
+};
+use crate::monitoring::GroundTruth;
+
+/// Table 1: (service, flavour, energy Wh/window, cpu, ram GB).
+pub const TABLE1: &[(&str, &str, f64, f64, f64)] = &[
+    ("frontend", "large", 1981.0, 4.0, 8.0),
+    ("frontend", "medium", 1585.0, 2.0, 4.0),
+    ("frontend", "tiny", 1189.0, 1.0, 2.0),
+    ("checkout", "large", 134.0, 1.0, 2.0),
+    ("checkout", "tiny", 107.0, 0.5, 1.0),
+    ("recommendation", "large", 539.0, 1.0, 2.0),
+    ("recommendation", "tiny", 431.0, 0.5, 1.0),
+    ("productcatalog", "large", 989.0, 1.0, 2.0),
+    ("productcatalog", "tiny", 791.0, 0.5, 1.0),
+    ("ad", "tiny", 251.0, 0.5, 0.5),
+    ("cart", "tiny", 546.0, 0.5, 1.0),
+    ("shipping", "tiny", 98.0, 0.5, 0.5),
+    ("currency", "tiny", 881.0, 0.5, 0.5),
+    ("payment", "tiny", 34.0, 0.5, 0.5),
+    ("email", "tiny", 50.0, 0.5, 0.5),
+];
+
+/// Online Boutique call graph: (from, to, requests per hour window,
+/// bytes per request). Volumes model the demo's load generator at its
+/// default rate; sizes reflect payload characteristics (catalog/images
+/// largest, payment smallest).
+pub const LINKS: &[(&str, &str, f64, f64)] = &[
+    ("frontend", "productcatalog", 14_400.0, 80_000.0),
+    ("frontend", "cart", 7_200.0, 6_000.0),
+    ("frontend", "currency", 10_800.0, 1_200.0),
+    ("frontend", "recommendation", 7_200.0, 12_000.0),
+    ("frontend", "shipping", 3_600.0, 2_500.0),
+    ("frontend", "checkout", 1_800.0, 8_000.0),
+    ("frontend", "ad", 7_200.0, 4_000.0),
+    ("recommendation", "productcatalog", 7_200.0, 40_000.0),
+    ("checkout", "cart", 1_800.0, 6_000.0),
+    ("checkout", "productcatalog", 1_800.0, 30_000.0),
+    ("checkout", "currency", 1_800.0, 1_200.0),
+    ("checkout", "shipping", 1_800.0, 2_500.0),
+    ("checkout", "payment", 1_800.0, 1_500.0),
+    ("checkout", "email", 1_800.0, 20_000.0),
+];
+
+/// Services that are optional in the paper's SADP sense (may be dropped
+/// under budget pressure without breaking core functionality).
+pub const OPTIONAL: &[&str] = &["recommendation", "ad", "email"];
+
+/// The Application Description 𝒜 for Online Boutique.
+pub fn application() -> Application {
+    let mut app = Application::new("online-boutique");
+    let mut current: Option<Service> = None;
+    for (service, flavour, _wh, cpu, ram) in TABLE1 {
+        if current.as_ref().map(|s| s.id != *service).unwrap_or(true) {
+            if let Some(s) = current.take() {
+                app.services.push(s);
+            }
+            let mut s = Service::new(*service);
+            s.description = format!("Online Boutique {service} service");
+            s.must_deploy = !OPTIONAL.contains(service);
+            // email dispatch is queue-driven: batch-capable (TimeShift)
+            s.batch = *service == "email";
+            current = Some(s);
+        }
+        let f = Flavour::new(*flavour).with_requirements(FlavourRequirements {
+            cpu: *cpu,
+            ram_gb: *ram,
+            storage_gb: 1.0,
+            availability: 0.99,
+        });
+        current.as_mut().unwrap().flavours.push(f);
+    }
+    if let Some(s) = current {
+        app.services.push(s);
+    }
+    for (from, to, _reqs, _bytes) in LINKS {
+        app.links.push(CommLink::new(*from, *to));
+    }
+    app.validate().expect("boutique preset is valid");
+    app
+}
+
+/// Monitoring ground truth: Table 1 energies + call-graph traffic.
+/// Traffic is attributed to every flavour of the source service (the
+/// transmitted volume does not depend on the receiver's flavour, §4.1;
+/// for source flavours we scale volume mildly with flavour capability).
+pub fn ground_truth() -> GroundTruth {
+    let mut truth = GroundTruth::default();
+    for (service, flavour, wh, _, _) in TABLE1 {
+        truth.set_energy(service, flavour, *wh);
+    }
+    let app = application();
+    for (from, to, reqs, bytes) in LINKS {
+        let service = app.service(from).expect("link source exists");
+        for fl in &service.flavours {
+            // tiny flavours serve (and emit) proportionally less traffic
+            let scale = match fl.name.as_str() {
+                "large" => 1.0,
+                "medium" => 0.8,
+                _ => 0.6,
+            };
+            truth.add_traffic(from, &fl.name, to, reqs * scale, *bytes);
+        }
+    }
+    truth
+}
+
+/// Table 2: the European infrastructure.
+pub fn eu_infrastructure() -> Infrastructure {
+    let mut infra = Infrastructure::new("europe");
+    for (id, region, cost) in [
+        ("france", "FR", 0.062),
+        ("spain", "ES", 0.055),
+        ("germany", "DE", 0.060),
+        ("greatbritain", "GB", 0.058),
+        ("italy", "IT", 0.052),
+    ] {
+        let mut n = Node::new(id, region);
+        n.profile.cost_per_cpu_hour = cost;
+        infra.nodes.push(n);
+    }
+    infra
+}
+
+/// Table 3: the US infrastructure.
+pub fn us_infrastructure() -> Infrastructure {
+    let mut infra = Infrastructure::new("us");
+    for (id, region, cost) in [
+        ("washington", "US-WA", 0.048),
+        ("california", "US-CA", 0.065),
+        ("texas", "US-TX", 0.045),
+        ("florida", "US-FL", 0.047),
+        ("newyork", "US-NY", 0.060),
+        ("arizona", "US-AZ", 0.046),
+    ] {
+        let mut n = Node::new(id, region);
+        n.profile.cost_per_cpu_hour = cost;
+        infra.nodes.push(n);
+    }
+    infra
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::{CarbonIntensitySource, StaticIntensity};
+
+    #[test]
+    fn application_matches_table1() {
+        let app = application();
+        assert_eq!(app.services.len(), 10);
+        assert_eq!(app.flavour_rows(), 15);
+        let fe = app.service("frontend").unwrap();
+        assert_eq!(fe.flavours.len(), 3);
+        assert_eq!(fe.flavours[0].name, "large"); // flavoursOrder
+        assert!(fe.must_deploy);
+        assert!(!app.service("recommendation").unwrap().must_deploy);
+    }
+
+    #[test]
+    fn links_reference_known_services() {
+        let app = application();
+        assert!(app.validate().is_ok());
+        assert_eq!(app.links.len(), LINKS.len());
+    }
+
+    #[test]
+    fn ground_truth_covers_every_flavour() {
+        let truth = ground_truth();
+        for (service, flavour, wh, _, _) in TABLE1 {
+            assert_eq!(truth.energy_of(service, flavour), Some(*wh));
+        }
+        // every link generates per-flavour traffic entries
+        assert!(truth.traffic.len() >= LINKS.len());
+    }
+
+    #[test]
+    fn infrastructures_match_tables_2_3() {
+        let eu = eu_infrastructure();
+        assert_eq!(eu.nodes.len(), 5);
+        let src = StaticIntensity::europe_table2();
+        for n in &eu.nodes {
+            assert!(src.intensity(&n.region, 0.0).is_some(), "{}", n.region);
+        }
+        let us = us_infrastructure();
+        assert_eq!(us.nodes.len(), 6);
+        let src = StaticIntensity::us_table3();
+        for n in &us.nodes {
+            assert!(src.intensity(&n.region, 0.0).is_some(), "{}", n.region);
+        }
+    }
+}

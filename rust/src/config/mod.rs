@@ -1,0 +1,43 @@
+//! Configuration: embedded paper presets (Online Boutique case study,
+//! Tables 1–3, validation Scenarios 1–5) and JSON scenario-file loading.
+
+pub mod boutique;
+pub mod scenarios;
+
+pub use scenarios::{scenario, Scenario};
+
+use crate::jsonio;
+use crate::model::{Application, Infrastructure};
+use crate::Result;
+use std::path::Path;
+
+/// Load an Application Description from a JSON file.
+pub fn load_application(path: &Path) -> Result<Application> {
+    Application::from_json(&jsonio::from_file(path)?)
+}
+
+/// Load an Infrastructure Description from a JSON file.
+pub fn load_infrastructure(path: &Path) -> Result<Infrastructure> {
+    Infrastructure::from_json(&jsonio::from_file(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join(format!("greengen-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let app = boutique::application();
+        let infra = boutique::eu_infrastructure();
+        jsonio::to_file(&dir.join("app.json"), &app.to_json()).unwrap();
+        jsonio::to_file(&dir.join("infra.json"), &infra.to_json()).unwrap();
+        assert_eq!(load_application(&dir.join("app.json")).unwrap(), app);
+        assert_eq!(
+            load_infrastructure(&dir.join("infra.json")).unwrap(),
+            infra
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

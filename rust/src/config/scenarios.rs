@@ -1,0 +1,144 @@
+//! The five validation scenarios of §5.3, as executable presets.
+
+use super::boutique;
+use crate::carbon::StaticIntensity;
+use crate::model::{Application, Infrastructure};
+use crate::monitoring::GroundTruth;
+use crate::{Error, Result};
+
+/// An executable scenario: the full input set for one pipeline run.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub id: usize,
+    pub name: &'static str,
+    pub description: &'static str,
+    pub app: Application,
+    pub infra: Infrastructure,
+    pub truth: GroundTruth,
+    /// Static regional carbon intensities (the §5 setup).
+    pub intensity: StaticIntensity,
+    /// Simulated monitoring windows fed to the estimator.
+    pub windows: usize,
+    /// Simulation seed (deterministic runs).
+    pub seed: u64,
+}
+
+/// Build scenario `n` (1–5).
+pub fn scenario(n: usize) -> Result<Scenario> {
+    let app = boutique::application();
+    let truth = boutique::ground_truth();
+    let base = Scenario {
+        id: n,
+        name: "",
+        description: "",
+        app,
+        infra: boutique::eu_infrastructure(),
+        truth,
+        intensity: StaticIntensity::europe_table2(),
+        windows: 72,
+        seed: 0x5EED_0000 + n as u64,
+    };
+    match n {
+        1 => Ok(Scenario {
+            name: "baseline-eu",
+            description: "Baseline: Online Boutique on the European infrastructure (Table 2)",
+            ..base
+        }),
+        2 => Ok(Scenario {
+            name: "us-infrastructure",
+            description: "Same application, US infrastructure (Table 3)",
+            infra: boutique::us_infrastructure(),
+            intensity: StaticIntensity::us_table3(),
+            ..base
+        }),
+        3 => {
+            // France degrades 16 -> 376 gCO2eq/kWh (renewable dropout).
+            let mut intensity = StaticIntensity::europe_table2();
+            intensity.set("FR", 376.0);
+            Ok(Scenario {
+                name: "france-brownout",
+                description:
+                    "Carbon-intensity degradation: France switches from renewable (16) to brown (376)",
+                intensity,
+                ..base
+            })
+        }
+        4 => {
+            // A more efficient frontend release: consumption drops to 481 Wh.
+            // The optimisation applies to the service, so all flavours
+            // scale by 481/1981.
+            let mut truth = boutique::ground_truth();
+            let scale = 481.0 / 1981.0;
+            for (service, flavour, wh, _, _) in boutique::TABLE1 {
+                if *service == "frontend" {
+                    truth.set_energy(service, flavour, wh * scale);
+                }
+            }
+            Ok(Scenario {
+                name: "frontend-optimised",
+                description:
+                    "Application change: optimised frontend release (energy drops to 481 Wh)",
+                truth,
+                ..base
+            })
+        }
+        5 => {
+            // Traffic volume x15000 (video streaming instead of pictures).
+            let mut truth = boutique::ground_truth();
+            truth.scale_traffic(15_000.0);
+            Ok(Scenario {
+                name: "traffic-surge",
+                description:
+                    "Communication surge: data exchange grows x15000; Affinity constraints emerge",
+                truth,
+                ..base
+            })
+        }
+        other => Err(Error::Config(format!("unknown scenario {other} (valid: 1-5)"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::CarbonIntensitySource;
+
+    #[test]
+    fn all_five_scenarios_build() {
+        for n in 1..=5 {
+            let s = scenario(n).unwrap();
+            assert_eq!(s.id, n);
+            assert!(!s.name.is_empty());
+            assert!(s.app.validate().is_ok());
+            assert!(s.infra.validate().is_ok());
+        }
+        assert!(scenario(0).is_err());
+        assert!(scenario(6).is_err());
+    }
+
+    #[test]
+    fn scenario3_france_degraded() {
+        let s = scenario(3).unwrap();
+        assert_eq!(s.intensity.intensity("FR", 0.0), Some(376.0));
+        assert_eq!(s.intensity.intensity("IT", 0.0), Some(335.0));
+    }
+
+    #[test]
+    fn scenario4_frontend_scaled() {
+        let s = scenario(4).unwrap();
+        assert_eq!(s.truth.energy_of("frontend", "large"), Some(481.0));
+        let medium = s.truth.energy_of("frontend", "medium").unwrap();
+        assert!((medium - 1585.0 * 481.0 / 1981.0).abs() < 1e-9);
+        // other services untouched
+        assert_eq!(s.truth.energy_of("currency", "tiny"), Some(881.0));
+    }
+
+    #[test]
+    fn scenario5_traffic_scaled() {
+        let s1 = scenario(1).unwrap();
+        let s5 = scenario(5).unwrap();
+        let r1 = s1.truth.traffic[0].1 .0;
+        let r5 = s5.truth.traffic[0].1 .0;
+        assert!((r5 / r1 - 15_000.0).abs() < 1e-6);
+    }
+}

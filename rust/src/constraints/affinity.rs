@@ -1,0 +1,252 @@
+//! Affinity (Definition 2): co-locate service `s` (flavour `f`) with
+//! service `z` when their communication energy is high:
+//!
+//! ```prolog
+//! suggested(affinity(d(S, F), d(Z, _))) :-
+//!     dif(S, Z),
+//!     highConsumptionConnection(S, F, Z).
+//! highConsumptionConnection(S, F, Z) :-
+//!     commImpact(S, F, Z, Em), threshold(T), Em > T.      % Eq. 4
+//! ```
+//!
+//! Satisfying the constraint co-locates the pair, eliminating the
+//! inter-node transfer entirely — so the savings range is degenerate:
+//! both bounds equal the communication emission estimate.
+
+use super::library::{ConstraintModule, GenerationContext};
+use super::types::{Constraint, ConstraintKind};
+use crate::prolog::{Database, Term};
+use crate::Result;
+
+/// The Affinity module.
+pub struct AffinityModule;
+
+const RULES: &str = r#"
+    % Definition 2 (Affinity) + Eq. 4 predicate
+    highConsumptionConnection(S, F, Z) :-
+        commImpact(S, F, Z, Em), threshold(T), Em > T.
+    suggested(affinity(d(S, F), d(Z, any))) :-
+        dif(S, Z),
+        highConsumptionConnection(S, F, Z).
+"#;
+
+impl ConstraintModule for AffinityModule {
+    fn type_name(&self) -> &'static str {
+        "Affinity"
+    }
+
+    fn prolog_rules(&self) -> &'static str {
+        RULES
+    }
+
+    fn assert_facts(&self, ctx: &GenerationContext, db: &mut Database) -> Result<()> {
+        for cand in ctx.comm {
+            db.assert_fact(Term::compound(
+                "commImpact",
+                vec![
+                    Term::atom(cand.from.clone()),
+                    Term::atom(cand.flavour.clone()),
+                    Term::atom(cand.to.clone()),
+                    Term::Num(cand.em),
+                ],
+            ))?;
+        }
+        Ok(())
+    }
+
+    fn generate_prolog(
+        &self,
+        ctx: &GenerationContext,
+        db: &Database,
+    ) -> Result<Vec<Constraint>> {
+        let solutions = db.query("suggested(affinity(d(S, F), d(Z, any)))")?;
+        let mut out = Vec::with_capacity(solutions.len());
+        for sol in solutions {
+            let service = atom(&sol, "S")?;
+            let flavour = atom(&sol, "F")?;
+            let other = atom(&sol, "Z")?;
+            let em = ctx
+                .comm
+                .iter()
+                .find(|c| c.from == service && c.flavour == flavour && c.to == other)
+                .map(|c| c.em)
+                .ok_or_else(|| {
+                    crate::Error::other(format!("unknown comm candidate {service}->{other}"))
+                })?;
+            out.push(Constraint::new(
+                ConstraintKind::Affinity {
+                    service,
+                    flavour,
+                    other,
+                },
+                em,
+                em,
+                em,
+            ));
+        }
+        Ok(out)
+    }
+
+    fn generate_direct(&self, ctx: &GenerationContext) -> Result<Vec<Constraint>> {
+        let mut out = Vec::new();
+        for cand in ctx.comm {
+            if cand.from != cand.to && cand.em > ctx.tau {
+                out.push(Constraint::new(
+                    ConstraintKind::Affinity {
+                        service: cand.from.clone(),
+                        flavour: cand.flavour.clone(),
+                        other: cand.to.clone(),
+                    },
+                    cand.em,
+                    cand.em,
+                    cand.em,
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    fn explain(&self, c: &Constraint) -> String {
+        let ConstraintKind::Affinity {
+            service,
+            flavour,
+            other,
+        } = &c.kind
+        else {
+            return String::new();
+        };
+        format!(
+            "An \"Affinity\" constraint was generated between the \"{service}\" \
+service (flavour \"{flavour}\") and the \"{other}\" service. Their interaction \
+exchanges a large volume of data; deploying them on separate nodes would \
+generate an estimated {:.2} gCO2eq of communication emissions per observation \
+window. Co-locating the two services eliminates this inter-node transfer \
+entirely, saving the full {:.2} gCO2eq.",
+            c.em, c.sav_hi
+        )
+    }
+}
+
+fn atom(sol: &crate::prolog::Solution, var: &str) -> Result<String> {
+    match sol.get(var) {
+        Some(Term::Atom(a)) => Ok(a.clone()),
+        other => Err(crate::Error::Prolog(format!(
+            "expected atom binding for {var}, got {other:?}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::library::CommCandidate;
+    use crate::runtime::AnalyticsOutput;
+
+    fn comm() -> Vec<CommCandidate> {
+        vec![
+            CommCandidate {
+                from: "frontend".into(),
+                flavour: "large".into(),
+                to: "productcatalog".into(),
+                kwh: 0.5,
+                em: 98.4,
+            },
+            CommCandidate {
+                from: "frontend".into(),
+                flavour: "large".into(),
+                to: "cart".into(),
+                kwh: 0.01,
+                em: 2.0,
+            },
+        ]
+    }
+
+    fn empty_analytics() -> AnalyticsOutput {
+        AnalyticsOutput::default()
+    }
+
+    #[test]
+    fn prolog_and_direct_paths_agree() {
+        let rows: Vec<(String, String)> = vec![];
+        let nodes: Vec<String> = vec![];
+        let analytics = empty_analytics();
+        let comm = comm();
+        let ctx = GenerationContext {
+            rows: &rows,
+            nodes: &nodes,
+            analytics: &analytics,
+            comm: &comm,
+            tau: 50.0,
+            mask: None,
+        };
+        let module = AffinityModule;
+        let mut db = Database::new();
+        db.consult(module.prolog_rules()).unwrap();
+        module.assert_facts(&ctx, &mut db).unwrap();
+        db.assert_fact(Term::compound("threshold", vec![Term::Num(ctx.tau)]))
+            .unwrap();
+
+        let via_prolog = module.generate_prolog(&ctx, &db).unwrap();
+        let direct = module.generate_direct(&ctx).unwrap();
+        assert_eq!(via_prolog, direct);
+        assert_eq!(direct.len(), 1); // only the 98.4 one exceeds τ=50
+        assert_eq!(
+            direct[0].kind,
+            ConstraintKind::Affinity {
+                service: "frontend".into(),
+                flavour: "large".into(),
+                other: "productcatalog".into(),
+            }
+        );
+        // degenerate savings range == em
+        assert_eq!(direct[0].sav_lo, direct[0].em);
+        assert_eq!(direct[0].sav_hi, direct[0].em);
+    }
+
+    #[test]
+    fn self_links_rejected_by_dif() {
+        let rows: Vec<(String, String)> = vec![];
+        let nodes: Vec<String> = vec![];
+        let analytics = empty_analytics();
+        let comm = vec![CommCandidate {
+            from: "cart".into(),
+            flavour: "tiny".into(),
+            to: "cart".into(),
+            kwh: 1.0,
+            em: 1000.0,
+        }];
+        let ctx = GenerationContext {
+            rows: &rows,
+            nodes: &nodes,
+            analytics: &analytics,
+            comm: &comm,
+            tau: 1.0,
+            mask: None,
+        };
+        let module = AffinityModule;
+        let mut db = Database::new();
+        db.consult(module.prolog_rules()).unwrap();
+        module.assert_facts(&ctx, &mut db).unwrap();
+        db.assert_fact(Term::compound("threshold", vec![Term::Num(ctx.tau)]))
+            .unwrap();
+        assert!(module.generate_prolog(&ctx, &db).unwrap().is_empty());
+        assert!(module.generate_direct(&ctx).unwrap().is_empty());
+    }
+
+    #[test]
+    fn explain_mentions_colocation() {
+        let c = Constraint::new(
+            ConstraintKind::Affinity {
+                service: "frontend".into(),
+                flavour: "large".into(),
+                other: "productcatalog".into(),
+            },
+            98.4,
+            98.4,
+            98.4,
+        );
+        let text = AffinityModule.explain(&c);
+        assert!(text.contains("Co-locating"));
+        assert!(text.contains("98.40"));
+    }
+}

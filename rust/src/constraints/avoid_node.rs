@@ -1,0 +1,249 @@
+//! AvoidNode (Definition 1): avoid deploying service `s` in flavour `f`
+//! on node `n` when the deployment's expected emissions exceed τ:
+//!
+//! ```prolog
+//! suggested(avoidNode(d(S, F), N)) :- highConsumptionService(S, F, N).
+//! highConsumptionService(S, F, N) :-
+//!     impact(S, F, N, Em), threshold(T), Em > T.          % Eq. 3
+//! ```
+
+use super::library::{ConstraintModule, GenerationContext};
+use super::types::{Constraint, ConstraintKind};
+use crate::prolog::{Database, Term};
+use crate::Result;
+
+/// The AvoidNode module.
+pub struct AvoidNodeModule;
+
+const RULES: &str = r#"
+    % Definition 1 (AvoidNode) + Eq. 3 predicate
+    highConsumptionService(S, F, N) :-
+        impact(S, F, N, Em), threshold(T), Em > T.
+    suggested(avoidNode(d(S, F), N)) :- highConsumptionService(S, F, N).
+"#;
+
+impl ConstraintModule for AvoidNodeModule {
+    fn type_name(&self) -> &'static str {
+        "AvoidNode"
+    }
+
+    fn prolog_rules(&self) -> &'static str {
+        RULES
+    }
+
+    fn assert_facts(&self, ctx: &GenerationContext, db: &mut Database) -> Result<()> {
+        for (row, (service, flavour)) in ctx.rows.iter().enumerate() {
+            for (node_idx, node) in ctx.nodes.iter().enumerate() {
+                if !ctx.allowed(row, node_idx) {
+                    continue;
+                }
+                db.assert_fact(Term::compound(
+                    "impact",
+                    vec![
+                        Term::atom(service.clone()),
+                        Term::atom(flavour.clone()),
+                        Term::atom(node.clone()),
+                        Term::Num(ctx.impact(row, node_idx)),
+                    ],
+                ))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn generate_prolog(
+        &self,
+        ctx: &GenerationContext,
+        db: &Database,
+    ) -> Result<Vec<Constraint>> {
+        let solutions = db.query("suggested(avoidNode(d(S, F), N))")?;
+        let mut out = Vec::with_capacity(solutions.len());
+        for sol in solutions {
+            let service = atom(&sol, "S")?;
+            let flavour = atom(&sol, "F")?;
+            let node = atom(&sol, "N")?;
+            // look up tensor coordinates for Em + savings bounds
+            let row = ctx
+                .rows
+                .iter()
+                .position(|(s, f)| *s == service && *f == flavour)
+                .ok_or_else(|| crate::Error::other(format!("unknown row {service}/{flavour}")))?;
+            let node_idx = ctx
+                .nodes
+                .iter()
+                .position(|n| *n == node)
+                .ok_or_else(|| crate::Error::other(format!("unknown node {node}")))?;
+            out.push(Constraint::new(
+                ConstraintKind::AvoidNode {
+                    service,
+                    flavour,
+                    node,
+                },
+                ctx.impact(row, node_idx),
+                ctx.sav_lo(row, node_idx),
+                ctx.sav_hi(row, node_idx),
+            ));
+        }
+        Ok(out)
+    }
+
+    fn generate_direct(&self, ctx: &GenerationContext) -> Result<Vec<Constraint>> {
+        let mut out = Vec::new();
+        for (row, (service, flavour)) in ctx.rows.iter().enumerate() {
+            for (node_idx, node) in ctx.nodes.iter().enumerate() {
+                if !ctx.allowed(row, node_idx) {
+                    continue;
+                }
+                let em = ctx.impact(row, node_idx);
+                if em > ctx.tau {
+                    out.push(Constraint::new(
+                        ConstraintKind::AvoidNode {
+                            service: service.clone(),
+                            flavour: flavour.clone(),
+                            node: node.clone(),
+                        },
+                        em,
+                        ctx.sav_lo(row, node_idx),
+                        ctx.sav_hi(row, node_idx),
+                    ));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn explain(&self, c: &Constraint) -> String {
+        let ConstraintKind::AvoidNode {
+            service,
+            flavour,
+            node,
+        } = &c.kind
+        else {
+            return String::new();
+        };
+        format!(
+            "An \"AvoidNode\" constraint was generated for the deployment of the \
+\"{service}\" service in the \"{flavour}\" flavour on the \"{node}\" node. \
+This decision was driven by the high resource consumption of the selected \
+flavour combined with the poor energy mix of the target node (estimated \
+emissions: {:.2} gCO2eq per observation window).\n\
+The estimated emissions savings resulting from avoiding this deployment \
+range between {:.2} gCO2eq and {:.2} gCO2eq.",
+            c.em, c.sav_hi, c.sav_lo
+        )
+    }
+}
+
+fn atom(sol: &crate::prolog::Solution, var: &str) -> Result<String> {
+    match sol.get(var) {
+        Some(Term::Atom(a)) => Ok(a.clone()),
+        other => Err(crate::Error::Prolog(format!(
+            "expected atom binding for {var}, got {other:?}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{AnalyticsBackend, AnalyticsInput, NativeBackend};
+
+    /// Build a tiny context: 2 rows x 3 nodes.
+    fn fixture() -> (Vec<(String, String)>, Vec<String>, crate::runtime::AnalyticsOutput, Vec<f32>)
+    {
+        let rows = vec![
+            ("frontend".to_string(), "large".to_string()),
+            ("cart".to_string(), "tiny".to_string()),
+        ];
+        let nodes = vec!["france".to_string(), "gb".to_string(), "italy".to_string()];
+        let input = AnalyticsInput {
+            e: vec![1.981, 0.546],
+            c: vec![16.0, 213.0, 335.0],
+            mask: vec![1.0; 6],
+            pool: vec![],
+            alpha: 0.8,
+        };
+        let analytics = NativeBackend.run(&input).unwrap();
+        (rows, nodes, analytics, input.mask)
+    }
+
+    #[test]
+    fn prolog_and_direct_paths_agree() {
+        let (rows, nodes, analytics, mask) = fixture();
+        let ctx = GenerationContext {
+            rows: &rows,
+            nodes: &nodes,
+            analytics: &analytics,
+            comm: &[],
+            tau: analytics.tau as f64,
+            mask: Some(&mask),
+        };
+        let module = AvoidNodeModule;
+
+        let mut db = Database::new();
+        db.consult(module.prolog_rules()).unwrap();
+        module.assert_facts(&ctx, &mut db).unwrap();
+        db.assert_fact(Term::compound("threshold", vec![Term::Num(ctx.tau)]))
+            .unwrap();
+
+        let mut via_prolog = module.generate_prolog(&ctx, &db).unwrap();
+        let mut direct = module.generate_direct(&ctx).unwrap();
+        via_prolog.sort_by(|a, b| a.kind.key().cmp(&b.kind.key()));
+        direct.sort_by(|a, b| a.kind.key().cmp(&b.kind.key()));
+        assert_eq!(via_prolog, direct);
+        assert!(!direct.is_empty());
+        // every generated Em is above tau
+        for c in &direct {
+            assert!(c.em > ctx.tau);
+        }
+    }
+
+    #[test]
+    fn masked_pairs_never_suggested() {
+        let (rows, nodes, analytics_full, _) = fixture();
+        // recompute with italy disallowed for frontend (row 0, node 2)
+        let mut mask = vec![1.0f32; 6];
+        mask[2] = 0.0;
+        let input = AnalyticsInput {
+            e: vec![1.981, 0.546],
+            c: vec![16.0, 213.0, 335.0],
+            mask: mask.clone(),
+            pool: vec![],
+            alpha: 0.5,
+        };
+        let analytics = NativeBackend.run(&input).unwrap();
+        let ctx = GenerationContext {
+            rows: &rows,
+            nodes: &nodes,
+            analytics: &analytics,
+            comm: &[],
+            tau: analytics.tau as f64,
+            mask: Some(&mask),
+        };
+        let out = AvoidNodeModule.generate_direct(&ctx).unwrap();
+        assert!(out.iter().all(|c| {
+            !matches!(&c.kind, ConstraintKind::AvoidNode { service, node, .. }
+                if service == "frontend" && node == "italy")
+        }));
+        drop(analytics_full);
+    }
+
+    #[test]
+    fn explain_mentions_names_and_savings() {
+        let c = Constraint::new(
+            ConstraintKind::AvoidNode {
+                service: "frontend".into(),
+                flavour: "large".into(),
+                node: "greatbritain".into(),
+            },
+            421.9,
+            160.51,
+            390.38,
+        );
+        let text = AvoidNodeModule.explain(&c);
+        assert!(text.contains("\"frontend\""));
+        assert!(text.contains("\"greatbritain\""));
+        assert!(text.contains("390.38"));
+        assert!(text.contains("160.51"));
+    }
+}

@@ -1,0 +1,324 @@
+//! The Constraint Generator (§4.3): turns the enriched Application and
+//! Infrastructure descriptions into green-aware constraints.
+//!
+//! Pipeline per generation epoch:
+//! 1. flatten 𝒜 into the row vector `e[(s,f)]` (kWh, Eq. 1 profiles) and
+//!    ℐ into the node vector `c[n]` (gCO2eq/kWh), with the compatibility
+//!    mask from network-placement/security requirements (§4.3: "the
+//!    service and the node must have compatible network placement");
+//! 2. build communication candidates: Eq. 2 profiles × the
+//!    infrastructure-average carbon intensity → emission estimates that
+//!    enter the pooled τ distribution ("all services and communications");
+//! 3. evaluate the analytics graph (XLA artifact or native backend):
+//!    impact tensor, τ = q_α (Eq. 5), row stats, savings bounds;
+//! 4. run every module of the Constraint Library — either through the
+//!    mini-Prolog engine (the paper's formulation, default) or through
+//!    the direct numeric path (bit-identical results, kept for very large
+//!    instances and as an ablation).
+
+use super::library::{CommCandidate, ConstraintLibrary, GenerationContext};
+use super::types::Constraint;
+use crate::model::{Application, Infrastructure};
+use crate::prolog::{Database, Term};
+use crate::runtime::{AnalyticsBackend, AnalyticsInput, AnalyticsOutput};
+use crate::Result;
+
+/// Generator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct GeneratorConfig {
+    /// Quantile level α for the threshold τ (Eq. 5). Paper: 0.8.
+    pub alpha: f64,
+    /// Evaluate the library through the Prolog engine (true, paper
+    /// formulation) or the direct numeric path (false, fast path).
+    pub use_prolog: bool,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        GeneratorConfig {
+            alpha: 0.8,
+            use_prolog: true,
+        }
+    }
+}
+
+/// Everything produced by one generation epoch.
+#[derive(Debug)]
+pub struct GenerationResult {
+    /// Raw (unranked) constraints from all modules.
+    pub constraints: Vec<Constraint>,
+    /// The quantile threshold τ that gated them.
+    pub tau: f64,
+    /// Pooled maximum impact (ranker normaliser candidate).
+    pub gmax: f64,
+    /// Row index -> (service, flavour).
+    pub rows: Vec<(String, String)>,
+    /// Node index -> node id.
+    pub nodes: Vec<String>,
+    /// Communication candidates (with emission estimates).
+    pub comm: Vec<CommCandidate>,
+    /// Full analytics outputs (savings bounds feed the explainability
+    /// generator and the KB).
+    pub analytics: AnalyticsOutput,
+    /// Infrastructure-average carbon intensity used for comm emissions.
+    pub mean_ci: f64,
+}
+
+/// The Constraint Generator.
+pub struct ConstraintGenerator<'b> {
+    backend: &'b dyn AnalyticsBackend,
+    pub library: ConstraintLibrary,
+    pub config: GeneratorConfig,
+}
+
+impl<'b> ConstraintGenerator<'b> {
+    pub fn new(backend: &'b dyn AnalyticsBackend) -> Self {
+        ConstraintGenerator {
+            backend,
+            library: ConstraintLibrary::default(),
+            config: GeneratorConfig::default(),
+        }
+    }
+
+    pub fn with_library(mut self, library: ConstraintLibrary) -> Self {
+        self.library = library;
+        self
+    }
+
+    pub fn with_config(mut self, config: GeneratorConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Run one generation epoch.
+    pub fn generate(
+        &self,
+        app: &Application,
+        infra: &Infrastructure,
+    ) -> Result<GenerationResult> {
+        // --- 1. flatten the descriptions --------------------------------
+        let app_rows = app.rows();
+        let mut rows = Vec::with_capacity(app_rows.len());
+        let mut e = Vec::with_capacity(app_rows.len());
+        for (svc, fl) in &app_rows {
+            rows.push((svc.id.clone(), fl.name.clone()));
+            e.push(fl.energy.map(|p| p.kwh).unwrap_or(0.0) as f32);
+        }
+        let nodes: Vec<String> = infra.nodes.iter().map(|n| n.id.clone()).collect();
+        let c: Vec<f32> = infra.nodes.iter().map(|n| n.carbon() as f32).collect();
+
+        let mut mask = vec![0.0f32; rows.len() * nodes.len()];
+        for (row, (svc, _)) in app_rows.iter().enumerate() {
+            for (j, node) in infra.nodes.iter().enumerate() {
+                if node.placement_compatible(&svc.requirements) {
+                    mask[row * nodes.len() + j] = 1.0;
+                }
+            }
+        }
+
+        // --- 2. communication candidates ---------------------------------
+        let cis: Vec<f64> = infra.nodes.iter().map(|n| n.carbon()).collect();
+        let mean_ci = crate::util::mean(&cis);
+        let mut comm = Vec::new();
+        for link in &app.links {
+            for (flavour, kwh) in &link.energy {
+                comm.push(CommCandidate {
+                    from: link.from.clone(),
+                    flavour: flavour.clone(),
+                    to: link.to.clone(),
+                    kwh: *kwh,
+                    em: *kwh * mean_ci,
+                });
+            }
+        }
+        // --- τ distribution (Eq. 5): the OBSERVED impacts -----------------
+        // Per-(service, flavour) observed impact (profile × the average CI
+        // its executions saw — approximated by the infrastructure mean)
+        // plus every communication emission. This is the population whose
+        // quantile defines τ; candidates are then compared against it.
+        let mut pool: Vec<f32> =
+            e.iter().filter(|&&x| x > 0.0).map(|&x| x * mean_ci as f32).collect();
+        pool.extend(comm.iter().map(|c| c.em as f32));
+
+        // --- 3. analytics -------------------------------------------------
+        let input = AnalyticsInput {
+            e,
+            c,
+            mask,
+            pool,
+            alpha: self.config.alpha as f32,
+        };
+        let analytics = self.backend.run(&input)?;
+        let tau = analytics.tau as f64;
+        let gmax = analytics.gmax as f64;
+
+        // --- 4. library evaluation ----------------------------------------
+        let ctx = GenerationContext {
+            rows: &rows,
+            nodes: &nodes,
+            analytics: &analytics,
+            comm: &comm,
+            tau,
+            mask: Some(&input.mask),
+        };
+        let mut constraints = Vec::new();
+        if self.config.use_prolog {
+            let mut db = Database::new();
+            db.assert_fact(Term::compound("threshold", vec![Term::Num(tau)]))?;
+            for module in self.library.modules() {
+                db.consult(module.prolog_rules())?;
+                module.assert_facts(&ctx, &mut db)?;
+            }
+            for module in self.library.modules() {
+                constraints.extend(module.generate_prolog(&ctx, &db)?);
+            }
+        } else {
+            for module in self.library.modules() {
+                constraints.extend(module.generate_direct(&ctx)?);
+            }
+        }
+
+        Ok(GenerationResult {
+            constraints,
+            tau,
+            gmax,
+            rows,
+            nodes,
+            comm,
+            analytics,
+            mean_ci,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CommLink, Flavour, Node, Service};
+    use crate::runtime::NativeBackend;
+
+    /// Two services (one 2-flavour), two nodes, one link.
+    fn fixture() -> (Application, Infrastructure) {
+        let mut app = Application::new("demo");
+        let mut fe = Service::new("frontend");
+        fe.flavours = vec![Flavour::new("large"), Flavour::new("tiny")];
+        fe.flavour_mut("large").unwrap().energy =
+            Some(crate::model::EnergyProfile { kwh: 1.981, samples: 10 });
+        fe.flavour_mut("tiny").unwrap().energy =
+            Some(crate::model::EnergyProfile { kwh: 1.189, samples: 10 });
+        let mut cart = Service::new("cart");
+        cart.flavours = vec![Flavour::new("tiny")];
+        cart.flavour_mut("tiny").unwrap().energy =
+            Some(crate::model::EnergyProfile { kwh: 0.546, samples: 10 });
+        app.services = vec![fe, cart];
+        let mut link = CommLink::new("frontend", "cart");
+        link.energy = vec![("large".into(), 0.02), ("tiny".into(), 0.01)];
+        app.links = vec![link];
+
+        let mut infra = Infrastructure::new("eu");
+        let mut fr = Node::new("france", "FR");
+        fr.profile.carbon = Some(16.0);
+        let mut it = Node::new("italy", "IT");
+        it.profile.carbon = Some(335.0);
+        infra.nodes = vec![fr, it];
+        (app, infra)
+    }
+
+    #[test]
+    fn generates_avoid_constraints_above_tau() {
+        let (app, infra) = fixture();
+        let backend = NativeBackend;
+        let generator = ConstraintGenerator::new(&backend);
+        let result = generator.generate(&app, &infra).unwrap();
+        assert!(result.tau > 0.0);
+        assert!(!result.constraints.is_empty());
+        for c in &result.constraints {
+            assert!(c.em > result.tau, "{:?} vs tau {}", c, result.tau);
+        }
+        // dimensions recorded
+        assert_eq!(result.rows.len(), 3);
+        assert_eq!(result.nodes.len(), 2);
+        assert_eq!(result.comm.len(), 2);
+        // mean CI = (16+335)/2
+        assert!((result.mean_ci - 175.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prolog_and_direct_agree_end_to_end() {
+        let (app, infra) = fixture();
+        let backend = NativeBackend;
+        let with_prolog = ConstraintGenerator::new(&backend)
+            .with_config(GeneratorConfig {
+                use_prolog: true,
+                ..Default::default()
+            })
+            .generate(&app, &infra)
+            .unwrap();
+        let direct = ConstraintGenerator::new(&backend)
+            .with_config(GeneratorConfig {
+                use_prolog: false,
+                ..Default::default()
+            })
+            .generate(&app, &infra)
+            .unwrap();
+        let mut a = with_prolog.constraints.clone();
+        let mut b = direct.constraints.clone();
+        a.sort_by(|x, y| x.kind.key().cmp(&y.kind.key()));
+        b.sort_by(|x, y| x.kind.key().cmp(&y.kind.key()));
+        assert_eq!(a, b);
+        assert_eq!(with_prolog.tau, direct.tau);
+    }
+
+    #[test]
+    fn placement_incompatibility_masks_candidates() {
+        let (mut app, mut infra) = fixture();
+        // frontend requires a private subnet; italy is public-only
+        app.service_mut("frontend").unwrap().requirements.subnet =
+            crate::model::Subnet::Private;
+        infra.node_mut("france").unwrap().capabilities.subnet =
+            crate::model::Subnet::Private;
+        let backend = NativeBackend;
+        let result = ConstraintGenerator::new(&backend)
+            .generate(&app, &infra)
+            .unwrap();
+        for c in &result.constraints {
+            if let crate::constraints::ConstraintKind::AvoidNode { service, node, .. } = &c.kind
+            {
+                assert!(
+                    !(service == "frontend" && node == "italy"),
+                    "masked pair produced a constraint"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tau_is_quantile_of_observed_pool() {
+        // At alpha = 1 the threshold equals the largest OBSERVED impact
+        // (profile x mean CI), and only candidates strictly above it —
+        // i.e. hot services on dirtier-than-average nodes — survive.
+        let (app, infra) = fixture();
+        let backend = NativeBackend;
+        let result = ConstraintGenerator::new(&backend)
+            .with_config(GeneratorConfig {
+                alpha: 1.0,
+                use_prolog: false,
+            })
+            .generate(&app, &infra)
+            .unwrap();
+        // pool max = 1.981 kWh x mean CI 175.5 = 347.66
+        assert!((result.tau - 1.981 * 175.5).abs() < 0.1, "{}", result.tau);
+        for c in &result.constraints {
+            assert!(c.em > result.tau);
+        }
+        // counts are antimonotone in alpha
+        let looser = ConstraintGenerator::new(&backend)
+            .with_config(GeneratorConfig {
+                alpha: 0.5,
+                use_prolog: false,
+            })
+            .generate(&app, &infra)
+            .unwrap();
+        assert!(looser.constraints.len() >= result.constraints.len());
+    }
+}

@@ -1,0 +1,171 @@
+//! The Constraint Library: the registry of [`ConstraintModule`]s and the
+//! shared generation context they consume.
+
+use super::types::Constraint;
+use crate::prolog::Database;
+use crate::runtime::AnalyticsOutput;
+use crate::Result;
+
+/// A communication candidate: the Eq. 4 left-hand side for one
+/// (source service, source flavour, destination) triple, already
+/// converted to an emission estimate (kWh × infrastructure-average CI).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommCandidate {
+    pub from: String,
+    pub flavour: String,
+    pub to: String,
+    /// Communication energy, kWh per window (Eq. 2 profile).
+    pub kwh: f64,
+    /// Emission estimate, gCO2eq (pooled into the τ distribution).
+    pub em: f64,
+}
+
+/// Everything a module needs to evaluate its predicates: the analytics
+/// outputs plus the index maps from tensor coordinates back to names.
+#[derive(Debug)]
+pub struct GenerationContext<'a> {
+    /// Row index -> (service, flavour).
+    pub rows: &'a [(String, String)],
+    /// Node index -> node id.
+    pub nodes: &'a [String],
+    /// Analytics outputs (impact, τ, row stats, savings bounds).
+    pub analytics: &'a AnalyticsOutput,
+    /// Communication candidates (already filtered to known links).
+    pub comm: &'a [CommCandidate],
+    /// The quantile threshold τ (Eq. 5) as f64.
+    pub tau: f64,
+    /// Raw compatibility mask (row-major R×N); `None` means "all allowed".
+    pub mask: Option<&'a [f32]>,
+}
+
+impl<'a> GenerationContext<'a> {
+    #[inline]
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    #[inline]
+    pub fn impact(&self, row: usize, node: usize) -> f64 {
+        self.analytics.impact[row * self.n_nodes() + node] as f64
+    }
+
+    #[inline]
+    pub fn sav_hi(&self, row: usize, node: usize) -> f64 {
+        self.analytics.sav_hi[row * self.n_nodes() + node] as f64
+    }
+
+    #[inline]
+    pub fn sav_lo(&self, row: usize, node: usize) -> f64 {
+        self.analytics.sav_lo[row * self.n_nodes() + node] as f64
+    }
+
+    /// Index of the lowest-impact allowed node of a row, if any.
+    pub fn best_node(&self, row: usize) -> Option<usize> {
+        let n = self.n_nodes();
+        let target = self.analytics.row_min[row];
+        (0..n).find(|&node| {
+            let v = self.analytics.impact[row * n + node];
+            v == target && self.allowed(row, node)
+        })
+    }
+
+    /// Whether (row, node) is placement-compatible.
+    pub fn allowed(&self, row: usize, node: usize) -> bool {
+        self.mask
+            .map(|m| m[row * self.n_nodes() + node] > 0.0)
+            .unwrap_or(true)
+    }
+}
+
+/// One constraint type in the library.
+pub trait ConstraintModule {
+    /// Library type name ("AvoidNode", "Affinity", ...).
+    fn type_name(&self) -> &'static str;
+
+    /// The Prolog rules defining this constraint type (the paper's
+    /// Definition), consulted into the rule database once per generation.
+    fn prolog_rules(&self) -> &'static str;
+
+    /// Assert this module's facts derived from the analytics context.
+    fn assert_facts(&self, ctx: &GenerationContext, db: &mut Database) -> Result<()>;
+
+    /// Generate constraints by querying the rule database.
+    fn generate_prolog(&self, ctx: &GenerationContext, db: &Database)
+        -> Result<Vec<Constraint>>;
+
+    /// Generate constraints directly from the numeric context (fast path;
+    /// must agree with the Prolog path — tested).
+    fn generate_direct(&self, ctx: &GenerationContext) -> Result<Vec<Constraint>>;
+
+    /// §5.4-style rationale for one constraint of this type.
+    fn explain(&self, c: &Constraint) -> String;
+}
+
+/// The module registry.
+pub struct ConstraintLibrary {
+    modules: Vec<Box<dyn ConstraintModule>>,
+}
+
+impl Default for ConstraintLibrary {
+    /// The paper's two constraint types.
+    fn default() -> Self {
+        ConstraintLibrary {
+            modules: vec![
+                Box::new(super::avoid_node::AvoidNodeModule),
+                Box::new(super::affinity::AffinityModule),
+            ],
+        }
+    }
+}
+
+impl ConstraintLibrary {
+    pub fn empty() -> Self {
+        ConstraintLibrary {
+            modules: Vec::new(),
+        }
+    }
+
+    /// Default library plus the extension module(s).
+    pub fn extended() -> Self {
+        let mut lib = Self::default();
+        lib.register(Box::new(super::prefer_node::PreferNodeModule));
+        lib
+    }
+
+    /// Register an additional constraint type (extensibility, §3 (ii)).
+    pub fn register(&mut self, module: Box<dyn ConstraintModule>) {
+        self.modules.push(module);
+    }
+
+    pub fn modules(&self) -> &[Box<dyn ConstraintModule>] {
+        &self.modules
+    }
+
+    pub fn module_for(&self, type_name: &str) -> Option<&dyn ConstraintModule> {
+        self.modules
+            .iter()
+            .find(|m| m.type_name() == type_name)
+            .map(|b| b.as_ref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_library_has_paper_types() {
+        let lib = ConstraintLibrary::default();
+        let names: Vec<_> = lib.modules().iter().map(|m| m.type_name()).collect();
+        assert_eq!(names, vec!["AvoidNode", "Affinity"]);
+        assert!(lib.module_for("AvoidNode").is_some());
+        assert!(lib.module_for("Nope").is_none());
+    }
+
+    #[test]
+    fn extended_library_adds_prefer_node() {
+        let lib = ConstraintLibrary::extended();
+        assert!(lib.module_for("PreferNode").is_some());
+        assert_eq!(lib.modules().len(), 3);
+    }
+}

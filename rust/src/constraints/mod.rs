@@ -1,0 +1,28 @@
+//! The Constraint Library and Constraint Generator (§4.2–4.3).
+//!
+//! The library is modular and extensible: each constraint type is a
+//! [`ConstraintModule`] bundling (i) the Prolog rules that define it
+//! (exactly the paper's Definitions), (ii) fact assertion from the
+//! analytics context, (iii) a direct numeric generation path (used for
+//! very large instances and as a cross-check of the Prolog path), and
+//! (iv) the §5.4-style human-readable rationale.
+//!
+//! Shipped modules:
+//! * [`avoid_node::AvoidNodeModule`] — Definition 1.
+//! * [`affinity::AffinityModule`] — Definition 2.
+//! * [`prefer_node::PreferNodeModule`] — an extension type demonstrating
+//!   library extensibility (positive guidance toward the greenest
+//!   compatible node for high-impact services).
+
+pub mod affinity;
+pub mod avoid_node;
+pub mod generator;
+pub mod library;
+pub mod prefer_node;
+pub mod time_shift;
+pub mod types;
+
+pub use generator::{ConstraintGenerator, GenerationResult, GeneratorConfig};
+pub use library::{CommCandidate, ConstraintLibrary, ConstraintModule, GenerationContext};
+pub use time_shift::{TimeShiftPlanner, TimeShiftRecommendation};
+pub use types::{Constraint, ConstraintKind};

@@ -1,0 +1,209 @@
+//! PreferNode — an extension constraint type demonstrating library
+//! extensibility (§3 property (ii)).
+//!
+//! For every high-impact (service, flavour) — one whose *worst-case*
+//! placement emission exceeds τ — suggest the greenest compatible node:
+//!
+//! ```prolog
+//! suggested(preferNode(d(S, F), N)) :-
+//!     highImpactRow(S, F), bestNode(S, F, N).
+//! ```
+//!
+//! The savings range is [Em(worst) - Em(next worst), Em(worst) - Em(best)]
+//! relative to the worst placement — i.e. what pinning the best node
+//! guarantees against the adversarial choice.
+
+use super::library::{ConstraintModule, GenerationContext};
+use super::types::{Constraint, ConstraintKind};
+use crate::prolog::{Database, Term};
+use crate::Result;
+
+/// The PreferNode extension module.
+pub struct PreferNodeModule;
+
+const RULES: &str = r#"
+    % Extension: steer high-impact services toward their greenest node.
+    suggested(preferNode(d(S, F), N)) :-
+        highImpactRow(S, F), bestNode(S, F, N).
+"#;
+
+impl ConstraintModule for PreferNodeModule {
+    fn type_name(&self) -> &'static str {
+        "PreferNode"
+    }
+
+    fn prolog_rules(&self) -> &'static str {
+        RULES
+    }
+
+    fn assert_facts(&self, ctx: &GenerationContext, db: &mut Database) -> Result<()> {
+        for (row, (service, flavour)) in ctx.rows.iter().enumerate() {
+            let worst = ctx.analytics.row_max[row] as f64;
+            if worst > ctx.tau {
+                db.assert_fact(Term::compound(
+                    "highImpactRow",
+                    vec![Term::atom(service.clone()), Term::atom(flavour.clone())],
+                ))?;
+            }
+            if let Some(best) = ctx.best_node(row) {
+                db.assert_fact(Term::compound(
+                    "bestNode",
+                    vec![
+                        Term::atom(service.clone()),
+                        Term::atom(flavour.clone()),
+                        Term::atom(ctx.nodes[best].clone()),
+                    ],
+                ))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn generate_prolog(
+        &self,
+        ctx: &GenerationContext,
+        db: &Database,
+    ) -> Result<Vec<Constraint>> {
+        let solutions = db.query("suggested(preferNode(d(S, F), N))")?;
+        let mut out = Vec::with_capacity(solutions.len());
+        for sol in solutions {
+            let get = |v: &str| -> Result<String> {
+                match sol.get(v) {
+                    Some(Term::Atom(a)) => Ok(a.clone()),
+                    other => Err(crate::Error::Prolog(format!(
+                        "expected atom for {v}, got {other:?}"
+                    ))),
+                }
+            };
+            let service = get("S")?;
+            let flavour = get("F")?;
+            let node = get("N")?;
+            let row = ctx
+                .rows
+                .iter()
+                .position(|(s, f)| *s == service && *f == flavour)
+                .ok_or_else(|| crate::Error::other("unknown row"))?;
+            out.push(self.build(ctx, row, service, flavour, node));
+        }
+        Ok(out)
+    }
+
+    fn generate_direct(&self, ctx: &GenerationContext) -> Result<Vec<Constraint>> {
+        let mut out = Vec::new();
+        for (row, (service, flavour)) in ctx.rows.iter().enumerate() {
+            let worst = ctx.analytics.row_max[row] as f64;
+            if worst <= ctx.tau {
+                continue;
+            }
+            if let Some(best) = ctx.best_node(row) {
+                out.push(self.build(
+                    ctx,
+                    row,
+                    service.clone(),
+                    flavour.clone(),
+                    ctx.nodes[best].clone(),
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    fn explain(&self, c: &Constraint) -> String {
+        let ConstraintKind::PreferNode {
+            service,
+            flavour,
+            node,
+        } = &c.kind
+        else {
+            return String::new();
+        };
+        format!(
+            "A \"PreferNode\" constraint was generated for the \"{service}\" \
+service in the \"{flavour}\" flavour, steering it toward the \"{node}\" node — \
+the greenest compatible placement. Against the worst admissible placement \
+({:.2} gCO2eq), enforcing this preference saves between {:.2} and {:.2} \
+gCO2eq per observation window.",
+            c.em, c.sav_lo, c.sav_hi
+        )
+    }
+}
+
+impl PreferNodeModule {
+    fn build(
+        &self,
+        ctx: &GenerationContext,
+        row: usize,
+        service: String,
+        flavour: String,
+        node: String,
+    ) -> Constraint {
+        let worst = ctx.analytics.row_max[row] as f64;
+        let next_worst = ctx.analytics.row_max2[row] as f64;
+        let best = ctx.analytics.row_min[row] as f64;
+        Constraint::new(
+            ConstraintKind::PreferNode {
+                service,
+                flavour,
+                node,
+            },
+            worst,
+            worst - next_worst,
+            worst - best,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{AnalyticsBackend, AnalyticsInput, NativeBackend};
+
+    #[test]
+    fn prefers_greenest_node_for_high_impact_rows() {
+        let rows = vec![
+            ("frontend".to_string(), "large".to_string()),
+            ("email".to_string(), "tiny".to_string()),
+        ];
+        let nodes = vec!["france".to_string(), "italy".to_string()];
+        // observed-impact pool: profile x mean CI (175.5)
+        let input = AnalyticsInput {
+            e: vec![1.981, 0.050],
+            c: vec![16.0, 335.0],
+            mask: vec![1.0; 4],
+            pool: vec![1.981 * 175.5, 0.050 * 175.5],
+            alpha: 0.8, // tau = pooled max = 347.7; only frontend exceeds it
+        };
+        let analytics = NativeBackend.run(&input).unwrap();
+        let ctx = GenerationContext {
+            rows: &rows,
+            nodes: &nodes,
+            analytics: &analytics,
+            comm: &[],
+            tau: analytics.tau as f64,
+            mask: Some(&input.mask),
+        };
+        let module = PreferNodeModule;
+        let direct = module.generate_direct(&ctx).unwrap();
+        // only the frontend row is high-impact (email's worst case is tiny)
+        assert_eq!(direct.len(), 1);
+        assert_eq!(
+            direct[0].kind,
+            ConstraintKind::PreferNode {
+                service: "frontend".into(),
+                flavour: "large".into(),
+                node: "france".into(),
+            }
+        );
+        // savings vs worst: upper = worst - best
+        assert!((direct[0].sav_hi - (1.981 * (335.0 - 16.0))).abs() < 1e-2);
+
+        // prolog path agrees
+        let mut db = Database::new();
+        db.consult(module.prolog_rules()).unwrap();
+        module.assert_facts(&ctx, &mut db).unwrap();
+        db.assert_fact(Term::compound("threshold", vec![Term::Num(ctx.tau)]))
+            .unwrap();
+        let via_prolog = module.generate_prolog(&ctx, &db).unwrap();
+        assert_eq!(via_prolog, direct);
+    }
+}

@@ -1,0 +1,250 @@
+//! TimeShift recommendations — the paper's stated future work ("broaden
+//! the set of supported constraints to include scenarios with
+//! batch-processing components", §6), implemented as an extension.
+//!
+//! Batch-capable services are not bound to a deployment instant: their
+//! execution can be postponed into a low-carbon-intensity window (the
+//! classic temporal-shifting literature the paper cites [13–19]). The
+//! planner scans the carbon-intensity forecast of each candidate region
+//! over a planning horizon and recommends, per batch service, the window
+//! minimising the mean CI, with the expected savings range against the
+//! worst window (same explainability convention as §5.4).
+
+use crate::carbon::CarbonIntensitySource;
+use crate::model::Application;
+use crate::{Error, Result};
+
+/// One time-shift recommendation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimeShiftRecommendation {
+    pub service: String,
+    pub flavour: String,
+    /// Region whose forecast the window was chosen on.
+    pub region: String,
+    /// Window start/end, hours from the planning origin.
+    pub start_hour: usize,
+    pub end_hour: usize,
+    /// Mean CI inside the recommended window (gCO2eq/kWh).
+    pub window_ci: f64,
+    /// Expected emissions in the best window (gCO2eq).
+    pub em: f64,
+    /// Savings vs scheduling in the *worst* window of the horizon.
+    pub sav_hi: f64,
+    /// Savings vs the *next-best* window (how much precision matters).
+    pub sav_lo: f64,
+}
+
+impl TimeShiftRecommendation {
+    /// Prolog-dialect rendering, consistent with the other constraint
+    /// types: `timeShift(d(reports, tiny), fr, 2, 6, 0.42).`
+    pub fn render_prolog(&self, weight: f64) -> String {
+        format!(
+            "timeShift(d({}, {}), {}, {}, {}, {:.3}).",
+            self.service, self.flavour, self.region, self.start_hour, self.end_hour, weight
+        )
+    }
+
+    /// §5.4-style rationale.
+    pub fn explain(&self) -> String {
+        format!(
+            "A \"TimeShift\" recommendation was generated for the batch service \
+\"{}\" (flavour \"{}\"): executing inside the window [{}h, {}h) in region \
+\"{}\" (mean intensity {:.1} gCO2eq/kWh) is expected to emit {:.2} gCO2eq. \
+Relative to the worst admissible window, the shift saves between {:.2} and \
+{:.2} gCO2eq.",
+            self.service,
+            self.flavour,
+            self.start_hour,
+            self.end_hour,
+            self.region,
+            self.window_ci,
+            self.em,
+            self.sav_lo,
+            self.sav_hi
+        )
+    }
+}
+
+/// The time-shift planner.
+pub struct TimeShiftPlanner<'a> {
+    pub source: &'a dyn CarbonIntensitySource,
+    /// Planning horizon in hours (default 24: one diurnal cycle).
+    pub horizon_hours: usize,
+    /// Batch window length in hours.
+    pub window_hours: usize,
+}
+
+impl<'a> TimeShiftPlanner<'a> {
+    pub fn new(source: &'a dyn CarbonIntensitySource) -> Self {
+        TimeShiftPlanner {
+            source,
+            horizon_hours: 24,
+            window_hours: 4,
+        }
+    }
+
+    /// Recommend windows for every batch service of `app`, evaluating the
+    /// CI forecast of `regions` starting at absolute time `t0` (seconds).
+    /// Uses each service's preferred flavour's energy profile.
+    pub fn plan(
+        &self,
+        app: &Application,
+        regions: &[&str],
+        t0: f64,
+    ) -> Result<Vec<TimeShiftRecommendation>> {
+        if self.window_hours == 0 || self.horizon_hours < self.window_hours {
+            return Err(Error::Config(
+                "window must be non-empty and fit the horizon".into(),
+            ));
+        }
+        let mut out = Vec::new();
+        for svc in app.services.iter().filter(|s| s.batch) {
+            let Some(flavour) = svc.flavours.first() else {
+                continue;
+            };
+            let Some(profile) = flavour.energy else {
+                continue; // never observed: nothing to shift yet
+            };
+            // mean CI per sliding window per region
+            let mut best: Option<(String, usize, f64)> = None;
+            let mut second: Option<f64> = None;
+            let mut worst: Option<f64> = None;
+            for region in regions {
+                for start in 0..=(self.horizon_hours - self.window_hours) {
+                    let mut acc = 0.0;
+                    for h in start..start + self.window_hours {
+                        let t = t0 + (h as f64 + 0.5) * 3600.0;
+                        acc += self.source.intensity(region, t).ok_or_else(|| {
+                            Error::Config(format!("no CI forecast for region '{region}'"))
+                        })?;
+                    }
+                    let mean = acc / self.window_hours as f64;
+                    if best.as_ref().map(|(_, _, b)| mean < *b).unwrap_or(true) {
+                        second = best.as_ref().map(|(_, _, b)| *b).or(second);
+                        best = Some((region.to_string(), start, mean));
+                    } else if second.map(|s| mean < s).unwrap_or(true) {
+                        second = Some(mean);
+                    }
+                    if worst.map(|w| mean > w).unwrap_or(true) {
+                        worst = Some(mean);
+                    }
+                }
+            }
+            let Some((region, start, ci)) = best else {
+                continue;
+            };
+            let worst = worst.unwrap_or(ci);
+            let second = second.unwrap_or(ci);
+            out.push(TimeShiftRecommendation {
+                service: svc.id.clone(),
+                flavour: flavour.name.clone(),
+                region,
+                start_hour: start,
+                end_hour: start + self.window_hours,
+                window_ci: ci,
+                em: profile.kwh * ci,
+                sav_hi: profile.kwh * (worst - ci),
+                sav_lo: profile.kwh * (second - ci),
+            });
+        }
+        // deterministic ordering: biggest savings first
+        out.sort_by(|a, b| {
+            b.sav_hi
+                .partial_cmp(&a.sav_hi)
+                .unwrap()
+                .then_with(|| a.service.cmp(&b.service))
+        });
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::{DiurnalTrace, StaticIntensity, TraceSet};
+    use crate::model::{EnergyProfile, Flavour, Service};
+
+    fn batch_app() -> Application {
+        let mut app = Application::new("batch");
+        let mut reports = Service::new("reports");
+        reports.batch = true;
+        reports.flavours = vec![Flavour::new("std")];
+        reports.flavour_mut("std").unwrap().energy =
+            Some(EnergyProfile { kwh: 2.0, samples: 8 });
+        let mut web = Service::new("web"); // interactive: never shifted
+        web.flavours = vec![Flavour::new("std")];
+        web.flavour_mut("std").unwrap().energy = Some(EnergyProfile { kwh: 1.0, samples: 8 });
+        app.services = vec![reports, web];
+        app
+    }
+
+    #[test]
+    fn recommends_solar_valley() {
+        // strong solar dip around 13:00 -> the window should cover midday
+        let set = TraceSet::new().with_trace("IT", DiurnalTrace::new(300.0, 0.6, 0.0, 1));
+        let planner = TimeShiftPlanner::new(&set);
+        let recs = planner.plan(&batch_app(), &["IT"], 0.0).unwrap();
+        assert_eq!(recs.len(), 1); // only the batch service
+        let r = &recs[0];
+        assert_eq!(r.service, "reports");
+        assert!(
+            (10..=15).contains(&r.start_hour),
+            "window [{},{}) should cover the solar valley",
+            r.start_hour,
+            r.end_hour
+        );
+        assert!(r.window_ci < 250.0);
+        assert!(r.sav_hi > 0.0);
+        assert!(r.sav_lo <= r.sav_hi);
+    }
+
+    #[test]
+    fn flat_grid_yields_zero_savings() {
+        let flat = StaticIntensity::new(&[("FR", 100.0)]);
+        let planner = TimeShiftPlanner::new(&flat);
+        let recs = planner.plan(&batch_app(), &["FR"], 0.0).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].sav_hi.abs() < 1e-9);
+        assert!((recs[0].em - 200.0).abs() < 1e-9); // 2 kWh x 100
+    }
+
+    #[test]
+    fn picks_greener_region() {
+        let set = StaticIntensity::new(&[("IT", 300.0), ("FR", 20.0)]);
+        let planner = TimeShiftPlanner::new(&set);
+        let recs = planner.plan(&batch_app(), &["IT", "FR"], 0.0).unwrap();
+        assert_eq!(recs[0].region, "FR");
+        // savings vs worst window (IT): 2 kWh x (300-20)
+        assert!((recs[0].sav_hi - 560.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_and_explain() {
+        let set = StaticIntensity::new(&[("FR", 20.0)]);
+        let recs = TimeShiftPlanner::new(&set)
+            .plan(&batch_app(), &["FR"], 0.0)
+            .unwrap();
+        let prolog = recs[0].render_prolog(0.42);
+        assert!(prolog.starts_with("timeShift(d(reports, std), FR, "));
+        assert!(prolog.ends_with("0.420)."));
+        assert!(recs[0].explain().contains("batch service \"reports\""));
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let set = StaticIntensity::new(&[("FR", 20.0)]);
+        let mut planner = TimeShiftPlanner::new(&set);
+        planner.window_hours = 0;
+        assert!(planner.plan(&batch_app(), &["FR"], 0.0).is_err());
+        planner.window_hours = 48;
+        planner.horizon_hours = 24;
+        assert!(planner.plan(&batch_app(), &["FR"], 0.0).is_err());
+    }
+
+    #[test]
+    fn unknown_region_is_error() {
+        let set = StaticIntensity::new(&[("FR", 20.0)]);
+        let planner = TimeShiftPlanner::new(&set);
+        assert!(planner.plan(&batch_app(), &["XX"], 0.0).is_err());
+    }
+}

@@ -1,0 +1,289 @@
+//! Constraint types and their serialized forms.
+
+use crate::jsonio::Value;
+use crate::{Error, Result};
+
+/// The kind of a green-aware deployment constraint.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ConstraintKind {
+    /// Definition 1: avoid deploying (service, flavour) on node.
+    AvoidNode {
+        service: String,
+        flavour: String,
+        node: String,
+    },
+    /// Definition 2: co-locate (service, flavour) with `other` (whatever
+    /// the latter's flavour).
+    Affinity {
+        service: String,
+        flavour: String,
+        other: String,
+    },
+    /// Extension: positively steer (service, flavour) toward node — the
+    /// greenest compatible choice for a high-impact service.
+    PreferNode {
+        service: String,
+        flavour: String,
+        node: String,
+    },
+}
+
+impl ConstraintKind {
+    /// Stable identity used for KB deduplication and memory tracking.
+    pub fn key(&self) -> String {
+        match self {
+            ConstraintKind::AvoidNode {
+                service,
+                flavour,
+                node,
+            } => format!("avoid:{service}:{flavour}:{node}"),
+            ConstraintKind::Affinity {
+                service,
+                flavour,
+                other,
+            } => format!("affinity:{service}:{flavour}:{other}"),
+            ConstraintKind::PreferNode {
+                service,
+                flavour,
+                node,
+            } => format!("prefer:{service}:{flavour}:{node}"),
+        }
+    }
+
+    /// Constraint-library type name.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            ConstraintKind::AvoidNode { .. } => "AvoidNode",
+            ConstraintKind::Affinity { .. } => "Affinity",
+            ConstraintKind::PreferNode { .. } => "PreferNode",
+        }
+    }
+
+    /// The service this constraint is about.
+    pub fn service(&self) -> &str {
+        match self {
+            ConstraintKind::AvoidNode { service, .. }
+            | ConstraintKind::Affinity { service, .. }
+            | ConstraintKind::PreferNode { service, .. } => service,
+        }
+    }
+
+    /// Paper-syntax Prolog term (without weight).
+    pub fn render_term(&self) -> String {
+        match self {
+            ConstraintKind::AvoidNode {
+                service,
+                flavour,
+                node,
+            } => format!("avoidNode(d({service}, {flavour}), {node})"),
+            ConstraintKind::Affinity {
+                service,
+                flavour,
+                other,
+            } => format!("affinity(d({service}, {flavour}), d({other}, _))"),
+            ConstraintKind::PreferNode {
+                service,
+                flavour,
+                node,
+            } => format!("preferNode(d({service}, {flavour}), {node})"),
+        }
+    }
+}
+
+/// A generated constraint with its estimated impact and (post-ranking)
+/// importance weight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Constraint {
+    pub kind: ConstraintKind,
+    /// Estimated environmental footprint Em (gCO2eq) that motivated the
+    /// constraint (Eq. 3 / Eq. 4 left-hand sides).
+    pub em: f64,
+    /// Lower savings bound — vs the next-worst alternative (§5.4).
+    pub sav_lo: f64,
+    /// Upper savings bound — vs the optimal alternative (§5.4).
+    pub sav_hi: f64,
+    /// Importance weight assigned by the Constraints Ranker (Eq. 11–12);
+    /// 0 until ranked.
+    pub weight: f64,
+}
+
+impl Constraint {
+    pub fn new(kind: ConstraintKind, em: f64, sav_lo: f64, sav_hi: f64) -> Constraint {
+        Constraint {
+            kind,
+            em,
+            sav_lo,
+            sav_hi,
+            weight: 0.0,
+        }
+    }
+
+    /// Paper output syntax: `avoidNode(d(frontend, large), italy, 0.636).`
+    pub fn render_prolog(&self) -> String {
+        let term = self.kind.render_term();
+        // insert the weight as the last argument
+        let inner = &term[..term.len() - 1];
+        format!("{inner}, {:.3}).", self.weight)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let kind = match &self.kind {
+            ConstraintKind::AvoidNode {
+                service,
+                flavour,
+                node,
+            } => Value::object(vec![
+                ("type", Value::from("AvoidNode")),
+                ("service", Value::from(service.clone())),
+                ("flavour", Value::from(flavour.clone())),
+                ("node", Value::from(node.clone())),
+            ]),
+            ConstraintKind::Affinity {
+                service,
+                flavour,
+                other,
+            } => Value::object(vec![
+                ("type", Value::from("Affinity")),
+                ("service", Value::from(service.clone())),
+                ("flavour", Value::from(flavour.clone())),
+                ("other", Value::from(other.clone())),
+            ]),
+            ConstraintKind::PreferNode {
+                service,
+                flavour,
+                node,
+            } => Value::object(vec![
+                ("type", Value::from("PreferNode")),
+                ("service", Value::from(service.clone())),
+                ("flavour", Value::from(flavour.clone())),
+                ("node", Value::from(node.clone())),
+            ]),
+        };
+        Value::object(vec![
+            ("kind", kind),
+            ("em", Value::from(self.em)),
+            ("savLo", Value::from(self.sav_lo)),
+            ("savHi", Value::from(self.sav_hi)),
+            ("weight", Value::from(self.weight)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Constraint> {
+        let k = v.req("kind")?;
+        let kind = match k.str_field("type")? {
+            "AvoidNode" => ConstraintKind::AvoidNode {
+                service: k.str_field("service")?.to_string(),
+                flavour: k.str_field("flavour")?.to_string(),
+                node: k.str_field("node")?.to_string(),
+            },
+            "Affinity" => ConstraintKind::Affinity {
+                service: k.str_field("service")?.to_string(),
+                flavour: k.str_field("flavour")?.to_string(),
+                other: k.str_field("other")?.to_string(),
+            },
+            "PreferNode" => ConstraintKind::PreferNode {
+                service: k.str_field("service")?.to_string(),
+                flavour: k.str_field("flavour")?.to_string(),
+                node: k.str_field("node")?.to_string(),
+            },
+            other => return Err(Error::Json(format!("unknown constraint type '{other}'"))),
+        };
+        Ok(Constraint {
+            kind,
+            em: v.f64_field("em")?,
+            sav_lo: v.f64_field("savLo")?,
+            sav_hi: v.f64_field("savHi")?,
+            weight: v.f64_field("weight")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn avoid() -> Constraint {
+        Constraint {
+            kind: ConstraintKind::AvoidNode {
+                service: "frontend".into(),
+                flavour: "large".into(),
+                node: "italy".into(),
+            },
+            em: 663.6,
+            sav_lo: 241.7,
+            sav_hi: 631.9,
+            weight: 1.0,
+        }
+    }
+
+    #[test]
+    fn paper_prolog_syntax() {
+        assert_eq!(
+            avoid().render_prolog(),
+            "avoidNode(d(frontend, large), italy, 1.000)."
+        );
+        let aff = Constraint {
+            kind: ConstraintKind::Affinity {
+                service: "frontend".into(),
+                flavour: "large".into(),
+                other: "cart".into(),
+            },
+            em: 10.0,
+            sav_lo: 10.0,
+            sav_hi: 10.0,
+            weight: 0.015,
+        };
+        assert_eq!(
+            aff.render_prolog(),
+            "affinity(d(frontend, large), d(cart, _), 0.015)."
+        );
+    }
+
+    #[test]
+    fn key_uniqueness() {
+        let a = avoid();
+        let mut b = avoid();
+        assert_eq!(a.kind.key(), b.kind.key());
+        if let ConstraintKind::AvoidNode { node, .. } = &mut b.kind {
+            *node = "france".into();
+        }
+        assert_ne!(a.kind.key(), b.kind.key());
+    }
+
+    #[test]
+    fn json_round_trip_all_kinds() {
+        let cs = vec![
+            avoid(),
+            Constraint::new(
+                ConstraintKind::Affinity {
+                    service: "a".into(),
+                    flavour: "f".into(),
+                    other: "b".into(),
+                },
+                1.0,
+                1.0,
+                1.0,
+            ),
+            Constraint::new(
+                ConstraintKind::PreferNode {
+                    service: "a".into(),
+                    flavour: "f".into(),
+                    node: "n".into(),
+                },
+                2.0,
+                0.0,
+                2.0,
+            ),
+        ];
+        for c in cs {
+            let back = Constraint::from_json(&c.to_json()).unwrap();
+            assert_eq!(c, back);
+        }
+    }
+
+    #[test]
+    fn type_names() {
+        assert_eq!(avoid().kind.type_name(), "AvoidNode");
+        assert_eq!(avoid().kind.service(), "frontend");
+    }
+}

@@ -1,0 +1,88 @@
+//! Communication energy model (Eq. 13):
+//!
+//! ```text
+//! kWh = requestVolume · requestSize · k
+//! ```
+//!
+//! where `k` is the transmission-network electricity intensity in kWh/GB.
+//! The paper adopts the Aslan et al. (2018) estimate — 0.06 kWh/GB in
+//! 2015, halving every two years — extrapolated to 2025. We implement the
+//! same extrapolation:
+//!
+//! ```text
+//! k(year) = 0.06 * 0.5^((year - 2015) / 2)
+//! ```
+//!
+//! giving k(2025) ≈ 0.001875 kWh/GB.
+
+/// Aslan et al. 2015 baseline (kWh/GB).
+pub const K_2015: f64 = 0.06;
+
+/// Network electricity intensity extrapolated to `year` (kWh/GB).
+pub fn network_intensity_kwh_per_gb(year: u32) -> f64 {
+    K_2015 * 0.5_f64.powf((year as f64 - 2015.0) / 2.0)
+}
+
+/// The communication energy model used by the Energy Estimator.
+#[derive(Debug, Clone, Copy)]
+pub struct CommEnergyModel {
+    /// kWh per GB transferred.
+    pub k: f64,
+}
+
+impl Default for CommEnergyModel {
+    fn default() -> Self {
+        // The paper uses the projected 2025 value.
+        CommEnergyModel {
+            k: network_intensity_kwh_per_gb(2025),
+        }
+    }
+}
+
+impl CommEnergyModel {
+    pub fn for_year(year: u32) -> Self {
+        CommEnergyModel {
+            k: network_intensity_kwh_per_gb(year),
+        }
+    }
+
+    /// Eq. 13 — energy (kWh) of transferring `gb` gigabytes.
+    pub fn kwh_for_gb(&self, gb: f64) -> f64 {
+        gb * self.k
+    }
+
+    /// Eq. 13 in the paper's original variables: request volume × request
+    /// size (GB) × k.
+    pub fn kwh(&self, request_volume: f64, request_size_gb: f64) -> f64 {
+        request_volume * request_size_gb * self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extrapolation_matches_trend() {
+        assert!((network_intensity_kwh_per_gb(2015) - 0.06).abs() < 1e-12);
+        assert!((network_intensity_kwh_per_gb(2017) - 0.03).abs() < 1e-12);
+        let k2025 = network_intensity_kwh_per_gb(2025);
+        assert!((k2025 - 0.001875).abs() < 1e-9, "k2025 {k2025}");
+    }
+
+    #[test]
+    fn eq13_forms_agree() {
+        let m = CommEnergyModel::default();
+        // 100 requests x 0.5 GB each
+        let a = m.kwh(100.0, 0.5);
+        let b = m.kwh_for_gb(50.0);
+        assert!((a - b).abs() < 1e-15);
+        assert!(a > 0.0);
+    }
+
+    #[test]
+    fn default_is_2025() {
+        let m = CommEnergyModel::default();
+        assert!((m.k - network_intensity_kwh_per_gb(2025)).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,253 @@
+//! Energy Estimator (§4.1): derives computation (Eq. 1) and communication
+//! (Eq. 2) energy profiles from the monitoring store and enriches the
+//! Application Description with them.
+//!
+//! The profiles are hardware-agnostic statistical estimates over the
+//! observation history (the paper deliberately avoids per-node profiling —
+//! see §4.1's closing discussion).
+
+use super::comm_model::CommEnergyModel;
+use crate::model::Application;
+use crate::monitoring::MetricStore;
+use crate::model::EnergyProfile;
+use crate::util::Summary;
+use std::collections::HashMap;
+
+/// Estimator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EstimatorConfig {
+    /// Only samples in `(horizon - lookback, horizon]` are used.
+    /// `f64::INFINITY` (default) means "use the whole history".
+    pub lookback: f64,
+    pub comm_model: CommEnergyModel,
+}
+
+impl Default for EstimatorConfig {
+    fn default() -> Self {
+        EstimatorConfig {
+            lookback: f64::INFINITY,
+            comm_model: CommEnergyModel::default(),
+        }
+    }
+}
+
+/// Detailed estimation output: per-(service,flavour) and per-link summary
+/// statistics, later folded into the Knowledge Base (SK / IK).
+#[derive(Debug, Default, Clone)]
+pub struct EstimationReport {
+    /// (service, flavour) -> kWh summary across windows.
+    pub computation: HashMap<(String, String), Summary>,
+    /// (from, from_flavour, to) -> kWh summary across windows (Eq. 13
+    /// applied per window).
+    pub communication: HashMap<(String, String, String), Summary>,
+}
+
+/// The Energy Estimator.
+pub struct EnergyEstimator {
+    pub config: EstimatorConfig,
+}
+
+impl Default for EnergyEstimator {
+    fn default() -> Self {
+        EnergyEstimator {
+            config: EstimatorConfig::default(),
+        }
+    }
+}
+
+impl EnergyEstimator {
+    pub fn new(config: EstimatorConfig) -> Self {
+        EnergyEstimator { config }
+    }
+
+    /// Compute profiles from `store` and enrich `app` in place:
+    /// * every observed flavour gets `energy = mean kWh per window` (Eq. 1);
+    /// * every observed link gets per-source-flavour communication energy
+    ///   (Eq. 2 with Eq. 13 converting traffic to kWh).
+    ///
+    /// Returns the detailed report (min/max/mean summaries) for KB
+    /// enrichment. Flavours never observed keep their previous profile —
+    /// adaptivity must not erase knowledge (§3 "preserving and refining
+    /// knowledge acquired in previous iterations").
+    pub fn estimate(&self, app: &mut Application, store: &MetricStore) -> EstimationReport {
+        let horizon = store.horizon();
+        let from_t = if self.config.lookback.is_finite() {
+            horizon - self.config.lookback
+        } else {
+            f64::NEG_INFINITY
+        };
+
+        let mut report = EstimationReport::default();
+
+        // --- Eq. 1: computation profiles --------------------------------
+        for s in store.energy_range(from_t, horizon) {
+            report
+                .computation
+                .entry((s.service.clone(), s.flavour.clone()))
+                .or_default()
+                .observe(s.kwh());
+        }
+        for ((service, flavour), summary) in &report.computation {
+            if let Some(svc) = app.service_mut(service) {
+                if let Some(fl) = svc.flavour_mut(flavour) {
+                    fl.energy = Some(EnergyProfile {
+                        kwh: summary.mean(),
+                        samples: summary.count,
+                    });
+                }
+            }
+        }
+
+        // --- Eq. 2 + Eq. 13: communication profiles ---------------------
+        let k = self.config.comm_model;
+        for s in store.traffic_range(from_t, horizon) {
+            report
+                .communication
+                .entry((s.from.clone(), s.from_flavour.clone(), s.to.clone()))
+                .or_default()
+                .observe(k.kwh_for_gb(s.gb()));
+        }
+        for ((from, flavour, to), summary) in &report.communication {
+            if let Some(link) = app.link_mut(from, to) {
+                let mean = summary.mean();
+                if let Some(slot) = link.energy.iter_mut().find(|(f, _)| f == flavour) {
+                    slot.1 = mean;
+                } else {
+                    link.energy.push((flavour.clone(), mean));
+                }
+            }
+        }
+
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CommLink, Flavour, Service};
+    use crate::monitoring::{EnergySample, TrafficSample};
+
+    fn app() -> Application {
+        let mut app = Application::new("demo");
+        let mut fe = Service::new("frontend");
+        fe.flavours = vec![Flavour::new("large"), Flavour::new("tiny")];
+        let mut cart = Service::new("cart");
+        cart.flavours = vec![Flavour::new("tiny")];
+        app.services = vec![fe, cart];
+        app.links = vec![CommLink::new("frontend", "cart")];
+        app
+    }
+
+    fn store_with(samples: &[(f64, &str, &str, f64)]) -> MetricStore {
+        let mut store = MetricStore::new();
+        for (t, svc, fl, joules) in samples {
+            store.push_energy(EnergySample {
+                t: *t,
+                service: svc.to_string(),
+                flavour: fl.to_string(),
+                joules: *joules,
+            });
+        }
+        store
+    }
+
+    #[test]
+    fn eq1_mean_of_windows() {
+        let mut app = app();
+        // two windows: 3.6e6 J = 1 kWh and 7.2e6 J = 2 kWh -> mean 1.5 kWh
+        let store = store_with(&[
+            (3600.0, "frontend", "large", 3.6e6),
+            (7200.0, "frontend", "large", 7.2e6),
+        ]);
+        let report = EnergyEstimator::default().estimate(&mut app, &store);
+        let profile = app
+            .service("frontend")
+            .unwrap()
+            .flavour("large")
+            .unwrap()
+            .energy
+            .unwrap();
+        assert!((profile.kwh - 1.5).abs() < 1e-12);
+        assert_eq!(profile.samples, 2);
+        let summary = &report.computation[&("frontend".into(), "large".into())];
+        assert_eq!(summary.min, 1.0);
+        assert_eq!(summary.max, 2.0);
+    }
+
+    #[test]
+    fn unobserved_flavour_keeps_previous_profile() {
+        let mut app = app();
+        app.service_mut("frontend")
+            .unwrap()
+            .flavour_mut("tiny")
+            .unwrap()
+            .energy = Some(EnergyProfile { kwh: 0.9, samples: 5 });
+        let store = store_with(&[(3600.0, "frontend", "large", 3.6e6)]);
+        EnergyEstimator::default().estimate(&mut app, &store);
+        let tiny = app.service("frontend").unwrap().flavour("tiny").unwrap();
+        assert_eq!(tiny.energy.unwrap().kwh, 0.9);
+    }
+
+    #[test]
+    fn eq2_communication_profile_via_eq13() {
+        let mut app = app();
+        let mut store = MetricStore::new();
+        for (t, gb) in [(3600.0, 2.0), (7200.0, 4.0)] {
+            store.push_traffic(TrafficSample {
+                t,
+                from: "frontend".into(),
+                from_flavour: "large".into(),
+                to: "cart".into(),
+                requests: 100.0,
+                bytes: gb * 1e9,
+            });
+        }
+        let est = EnergyEstimator::default();
+        est.estimate(&mut app, &store);
+        let link = &app.links[0];
+        let kwh = link.energy_for("large").unwrap();
+        let expect = est.config.comm_model.kwh_for_gb(3.0); // mean of 2,4 GB
+        assert!((kwh - expect).abs() < 1e-12, "{kwh} vs {expect}");
+    }
+
+    #[test]
+    fn lookback_limits_history() {
+        let mut app = app();
+        let store = store_with(&[
+            (3600.0, "frontend", "large", 3.6e6),  // old: 1 kWh
+            (7200.0, "frontend", "large", 10.8e6), // recent: 3 kWh
+        ]);
+        let est = EnergyEstimator::new(EstimatorConfig {
+            lookback: 3600.0, // only the last window
+            ..Default::default()
+        });
+        est.estimate(&mut app, &store);
+        let profile = app
+            .service("frontend")
+            .unwrap()
+            .flavour("large")
+            .unwrap()
+            .energy
+            .unwrap();
+        assert!((profile.kwh - 3.0).abs() < 1e-12);
+        assert_eq!(profile.samples, 1);
+    }
+
+    #[test]
+    fn samples_for_unknown_services_ignored() {
+        let mut app = app();
+        let store = store_with(&[(3600.0, "ghost", "x", 3.6e6)]);
+        let report = EnergyEstimator::default().estimate(&mut app, &store);
+        // report still carries the observation (KB may know the service)
+        assert_eq!(report.computation.len(), 1);
+        // but the application is untouched
+        assert!(app
+            .service("frontend")
+            .unwrap()
+            .flavour("large")
+            .unwrap()
+            .energy
+            .is_none());
+    }
+}

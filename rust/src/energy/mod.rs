@@ -1,0 +1,14 @@
+//! Energy Estimator (§4.1): computation and communication energy profiles
+//! learned from monitoring data.
+//!
+//! * [`comm_model`] — the Aslan et al. transmission-energy model (Eq. 13)
+//!   with the network electricity intensity `k` extrapolated to a target
+//!   year.
+//! * [`estimator`] — Eq. 1 (computation profile) and Eq. 2 (communication
+//!   profile), enriching the Application Description.
+
+pub mod comm_model;
+pub mod estimator;
+
+pub use comm_model::{network_intensity_kwh_per_gb, CommEnergyModel};
+pub use estimator::{EnergyEstimator, EstimatorConfig};

@@ -1,0 +1,73 @@
+//! Crate-wide error type.
+//!
+//! All public APIs return [`Result`]. Variants map to the failure domains of
+//! the pipeline: I/O (KB files, artifacts), the XLA runtime, configuration,
+//! the scheduler (infeasible instances) and generic invariant violations.
+
+use thiserror::Error;
+
+/// Crate-wide error enumeration.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Filesystem / serialization failures (KB store, config, artifacts).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// JSON (de)serialization failures (in-tree `jsonio` codec).
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// Failures raised by the PJRT runtime (artifact load/compile/execute).
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Configuration errors (unknown scenario, malformed descriptions).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Scheduler could not find a feasible deployment plan.
+    #[error("infeasible deployment: {0}")]
+    Infeasible(String),
+
+    /// Monitoring / estimation errors (e.g. no samples for a flavour).
+    #[error("estimation error: {0}")]
+    Estimation(String),
+
+    /// Mini-Prolog engine errors (parse, arity, non-termination guard).
+    #[error("prolog error: {0}")]
+    Prolog(String),
+
+    /// Anything else.
+    #[error("{0}")]
+    Other(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper for ad-hoc invariant violations.
+    pub fn other(msg: impl Into<String>) -> Self {
+        Error::Other(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Config("unknown scenario 9".into());
+        assert_eq!(e.to_string(), "config error: unknown scenario 9");
+        let e = Error::Infeasible("capacity exceeded".into());
+        assert!(e.to_string().contains("capacity"));
+    }
+
+    #[test]
+    fn from_io() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,141 @@
+//! Explainability Generator (§4.6): the human-readable report that
+//! accompanies the constraint list, giving DevOps engineers the rationale
+//! behind each recommendation and its estimated environmental gain range
+//! (§5.4).
+
+use crate::constraints::{Constraint, ConstraintLibrary};
+
+/// One report entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReportEntry {
+    pub constraint: Constraint,
+    /// §5.4-style rationale text.
+    pub rationale: String,
+}
+
+/// The Explainability Report.
+#[derive(Debug, Clone, Default)]
+pub struct ExplainabilityReport {
+    pub entries: Vec<ReportEntry>,
+}
+
+impl ExplainabilityReport {
+    /// Render as plain text (the paper's presentation format).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for (i, entry) in self.entries.iter().enumerate() {
+            if i > 0 {
+                out.push_str("\n\n");
+            }
+            out.push_str(&entry.rationale);
+        }
+        out
+    }
+
+    /// Render as Markdown with the constraint term and weight as heading.
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::from("# Explainability Report\n");
+        for entry in &self.entries {
+            out.push_str(&format!(
+                "\n## `{}` (weight {:.3})\n\n{}\n",
+                entry.constraint.kind.render_term(),
+                entry.constraint.weight,
+                entry.rationale
+            ));
+        }
+        out
+    }
+}
+
+/// The Explainability Generator.
+pub struct ExplainabilityGenerator;
+
+impl ExplainabilityGenerator {
+    /// Produce the report for the final (ranked) constraints, delegating
+    /// the per-type rationale to the owning library module.
+    pub fn report(
+        library: &ConstraintLibrary,
+        constraints: &[Constraint],
+    ) -> ExplainabilityReport {
+        let entries = constraints
+            .iter()
+            .map(|c| {
+                let rationale = library
+                    .module_for(c.kind.type_name())
+                    .map(|m| m.explain(c))
+                    .unwrap_or_else(|| {
+                        format!(
+                            "A \"{}\" constraint was generated (estimated impact {:.2} gCO2eq).",
+                            c.kind.type_name(),
+                            c.em
+                        )
+                    });
+                ReportEntry {
+                    constraint: c.clone(),
+                    rationale,
+                }
+            })
+            .collect();
+        ExplainabilityReport { entries }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::ConstraintKind;
+
+    fn constraints() -> Vec<Constraint> {
+        let mut c1 = Constraint::new(
+            ConstraintKind::AvoidNode {
+                service: "frontend".into(),
+                flavour: "large".into(),
+                node: "italy".into(),
+            },
+            663.6,
+            241.76,
+            632.14,
+        );
+        c1.weight = 1.0;
+        let mut c2 = Constraint::new(
+            ConstraintKind::Affinity {
+                service: "frontend".into(),
+                flavour: "large".into(),
+                other: "productcatalog".into(),
+            },
+            90.0,
+            90.0,
+            90.0,
+        );
+        c2.weight = 0.14;
+        vec![c1, c2]
+    }
+
+    #[test]
+    fn report_uses_module_rationales() {
+        let lib = ConstraintLibrary::default();
+        let report = ExplainabilityGenerator::report(&lib, &constraints());
+        assert_eq!(report.entries.len(), 2);
+        let text = report.render_text();
+        assert!(text.contains("\"AvoidNode\" constraint was generated"));
+        assert!(text.contains("632.14"));
+        assert!(text.contains("241.76"));
+        assert!(text.contains("\"Affinity\" constraint was generated"));
+    }
+
+    #[test]
+    fn markdown_has_terms_and_weights() {
+        let lib = ConstraintLibrary::default();
+        let md = ExplainabilityGenerator::report(&lib, &constraints()).render_markdown();
+        assert!(md.contains("## `avoidNode(d(frontend, large), italy)` (weight 1.000)"));
+        assert!(md.contains("(weight 0.140)"));
+    }
+
+    #[test]
+    fn unknown_type_gets_fallback_text() {
+        let lib = ConstraintLibrary::empty();
+        let report = ExplainabilityGenerator::report(&lib, &constraints());
+        assert!(report.entries[0].rationale.contains("AvoidNode"));
+        assert!(report.entries[0].rationale.contains("663.60"));
+    }
+}

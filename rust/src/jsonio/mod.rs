@@ -1,0 +1,61 @@
+//! Minimal, dependency-free JSON codec.
+//!
+//! This environment is offline (no `serde`/`serde_json`), so the Knowledge
+//! Base store (§4.4 — "a collection of JSON files"), the scenario config
+//! loader, the artifact manifest reader and the JSON constraint adapter are
+//! built on this in-tree codec. It supports the full JSON grammar
+//! (RFC 8259): objects, arrays, strings with escapes, numbers, booleans,
+//! null; serialization is deterministic (object keys keep insertion order).
+
+mod parse;
+mod value;
+mod write;
+
+pub use parse::parse;
+pub use value::Value;
+pub use write::{to_string, to_string_pretty};
+
+use crate::{Error, Result};
+
+/// Parse a JSON document from a file.
+pub fn from_file(path: &std::path::Path) -> Result<Value> {
+    let text = std::fs::read_to_string(path)?;
+    parse(&text)
+}
+
+/// Serialize a value to a file (pretty-printed, trailing newline),
+/// writing atomically via a sibling temp file + rename.
+pub fn to_file(path: &std::path::Path, value: &Value) -> Result<()> {
+    let mut text = to_string_pretty(value);
+    text.push('\n');
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &text)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Convenience: error constructor used across the parser.
+pub(crate) fn err(msg: impl Into<String>) -> Error {
+    Error::Json(msg.into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_file() {
+        let dir = std::env::temp_dir().join("greengen-jsonio-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        let v = Value::object(vec![
+            ("a", Value::from(1.5)),
+            ("b", Value::from("x\n\"y\"")),
+            ("c", Value::array(vec![Value::Bool(true), Value::Null])),
+        ]);
+        to_file(&path, &v).unwrap();
+        let back = from_file(&path).unwrap();
+        assert_eq!(v, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

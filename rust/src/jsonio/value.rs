@@ -1,0 +1,184 @@
+//! The JSON value tree and ergonomic accessors.
+
+use crate::{Error, Result};
+
+/// A JSON document node.
+///
+/// Numbers are stored as `f64` (sufficient for every value this crate
+/// persists: energies, carbon intensities, weights, timestamps in seconds).
+/// Objects preserve insertion order for deterministic serialization.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<Value>),
+    Object(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Build an object from `(key, value)` pairs.
+    pub fn object<K: Into<String>>(pairs: Vec<(K, Value)>) -> Value {
+        Value::Object(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// Build an array.
+    pub fn array(items: Vec<Value>) -> Value {
+        Value::Array(items)
+    }
+
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Object(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Required object field, with a descriptive error.
+    pub fn req(&self, key: &str) -> Result<&Value> {
+        self.get(key)
+            .ok_or_else(|| Error::Json(format!("missing field '{key}'")))
+    }
+
+    /// Mutable object field lookup.
+    pub fn get_mut(&mut self, key: &str) -> Option<&mut Value> {
+        match self {
+            Value::Object(pairs) => pairs
+                .iter_mut()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Insert or replace an object field.
+    pub fn set(&mut self, key: &str, value: Value) {
+        if let Value::Object(pairs) = self {
+            if let Some(slot) = pairs.iter_mut().find(|(k, _)| k == key) {
+                slot.1 = value;
+            } else {
+                pairs.push((key.to_string(), value));
+            }
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Object(pairs) => Some(pairs),
+            _ => None,
+        }
+    }
+
+    /// Typed field readers with contextual errors — the workhorses of the
+    /// config / KB / manifest deserializers.
+    pub fn f64_field(&self, key: &str) -> Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| Error::Json(format!("field '{key}' is not a number")))
+    }
+
+    pub fn str_field(&self, key: &str) -> Result<&str> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| Error::Json(format!("field '{key}' is not a string")))
+    }
+
+    pub fn bool_field(&self, key: &str) -> Result<bool> {
+        self.req(key)?
+            .as_bool()
+            .ok_or_else(|| Error::Json(format!("field '{key}' is not a bool")))
+    }
+
+    pub fn array_field(&self, key: &str) -> Result<&[Value]> {
+        self.req(key)?
+            .as_array()
+            .ok_or_else(|| Error::Json(format!("field '{key}' is not an array")))
+    }
+}
+
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Number(n)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Number(n as f64)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::String(s.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::String(s)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_access() {
+        let mut v = Value::object(vec![("x", Value::from(1.0))]);
+        assert_eq!(v.f64_field("x").unwrap(), 1.0);
+        assert!(v.f64_field("y").is_err());
+        v.set("y", Value::from("hi"));
+        assert_eq!(v.str_field("y").unwrap(), "hi");
+        v.set("x", Value::from(2.0));
+        assert_eq!(v.f64_field("x").unwrap(), 2.0);
+        // insertion order preserved after replace
+        let keys: Vec<_> = v.as_object().unwrap().iter().map(|(k, _)| k.clone()).collect();
+        assert_eq!(keys, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let v = Value::object(vec![("s", Value::from("str"))]);
+        assert!(v.f64_field("s").is_err());
+        assert!(v.bool_field("s").is_err());
+        assert!(v.array_field("s").is_err());
+    }
+}

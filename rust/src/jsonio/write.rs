@@ -1,0 +1,140 @@
+//! Deterministic JSON serialization (compact and pretty).
+
+use super::Value;
+
+/// Compact serialization (no extra whitespace).
+pub fn to_string(value: &Value) -> String {
+    let mut out = String::new();
+    write_value(value, None, 0, &mut out);
+    out
+}
+
+/// Pretty serialization (two-space indent — matches the paper's published
+/// configuration files).
+pub fn to_string_pretty(value: &Value) -> String {
+    let mut out = String::new();
+    write_value(value, Some(2), 0, &mut out);
+    out
+}
+
+fn write_value(value: &Value, indent: Option<usize>, depth: usize, out: &mut String) {
+    match value {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Number(n) => write_number(*n, out),
+        Value::String(s) => write_string(s, out),
+        Value::Array(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(indent, depth + 1, out);
+                write_value(item, indent, depth + 1, out);
+            }
+            newline_indent(indent, depth, out);
+            out.push(']');
+        }
+        Value::Object(pairs) => {
+            if pairs.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, v)) in pairs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(indent, depth + 1, out);
+                write_string(k, out);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(v, indent, depth + 1, out);
+            }
+            newline_indent(indent, depth, out);
+            out.push('}');
+        }
+    }
+}
+
+fn newline_indent(indent: Option<usize>, depth: usize, out: &mut String) {
+    if let Some(width) = indent {
+        out.push('\n');
+        for _ in 0..(width * depth) {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_number(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        // JSON has no Inf/NaN; persist as null (callers never store these).
+        out.push_str("null");
+    } else if n == n.trunc() && n.abs() < 1e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+
+    #[test]
+    fn compact_round_trip() {
+        let v = Value::object(vec![
+            ("n", Value::from(1.25)),
+            ("i", Value::from(42.0)),
+            ("s", Value::from("a\"b\nc")),
+            ("a", Value::array(vec![Value::Null, Value::Bool(false)])),
+            ("o", Value::object(Vec::<(&str, Value)>::new())),
+        ]);
+        let text = to_string(&v);
+        assert_eq!(parse(&text).unwrap(), v);
+        // integers render without trailing .0
+        assert!(text.contains("\"i\":42"));
+    }
+
+    #[test]
+    fn pretty_round_trip() {
+        let v = Value::array(vec![
+            Value::object(vec![("k", Value::from("v"))]),
+            Value::Number(3.5),
+        ]);
+        let text = to_string_pretty(&v);
+        assert!(text.contains("\n  "));
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        let text = to_string(&Value::from("\u{0001}"));
+        assert_eq!(text, "\"\\u0001\"");
+        assert_eq!(parse(&text).unwrap(), Value::from("\u{0001}"));
+    }
+}

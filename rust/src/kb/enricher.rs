@@ -1,0 +1,287 @@
+//! The KB Enricher (§4.4): folds newly observed data and freshly
+//! generated constraints into the Knowledge Base, decays the memory
+//! weight μ of constraints that were *not* regenerated, and recalls the
+//! still-valid past constraints so that "previously learned constraints
+//! with sufficiently high memory weight are properly considered in future
+//! deployment decisions".
+
+use super::store::{ConstraintEntry, KnowledgeBase, ProfileEntry};
+use crate::constraints::Constraint;
+use crate::energy::estimator::EstimationReport;
+use crate::model::Infrastructure;
+use crate::Result;
+
+/// Enricher configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EnricherConfig {
+    /// Multiplicative μ decay per iteration without regeneration.
+    pub decay: f64,
+    /// Entries with μ below this are evicted from CK.
+    pub drop_below: f64,
+}
+
+impl Default for EnricherConfig {
+    fn default() -> Self {
+        EnricherConfig {
+            decay: 0.8,
+            drop_below: 0.15,
+        }
+    }
+}
+
+/// The KB Enricher.
+pub struct KbEnricher {
+    pub config: EnricherConfig,
+}
+
+impl Default for KbEnricher {
+    fn default() -> Self {
+        KbEnricher {
+            config: EnricherConfig::default(),
+        }
+    }
+}
+
+impl KbEnricher {
+    pub fn new(config: EnricherConfig) -> Self {
+        KbEnricher { config }
+    }
+
+    /// Fold one generation epoch into the KB.
+    ///
+    /// * SK/IK absorb the estimation report's summaries (converted to
+    ///   emissions is the generator's concern; profiles here stay in the
+    ///   measured energy domain as Eq. 7–8 prescribe for behaviour);
+    /// * NK absorbs the current node carbon intensities;
+    /// * CK: regenerated constraints are refreshed (μ ← 1, Em updated),
+    ///   absent ones decay (μ ← μ·decay) and are evicted below the floor.
+    ///
+    /// Returns the full constraint set to forward to the ranker: the new
+    /// constraints plus the recalled (decayed but surviving) past ones.
+    pub fn update(
+        &self,
+        kb: &mut KnowledgeBase,
+        report: &EstimationReport,
+        infra: &Infrastructure,
+        new_constraints: &[Constraint],
+        t: f64,
+    ) -> Result<Vec<ConstraintEntry>> {
+        // --- SK / IK -----------------------------------------------------
+        for (key, summary) in &report.computation {
+            let entry = kb.sk.entry(key.clone()).or_insert_with(|| ProfileEntry {
+                summary: Default::default(),
+                updated_at: t,
+            });
+            entry.summary.merge(summary);
+            entry.updated_at = t;
+        }
+        for (key, summary) in &report.communication {
+            let entry = kb.ik.entry(key.clone()).or_insert_with(|| ProfileEntry {
+                summary: Default::default(),
+                updated_at: t,
+            });
+            entry.summary.merge(summary);
+            entry.updated_at = t;
+        }
+
+        // --- NK ------------------------------------------------------------
+        for node in &infra.nodes {
+            if let Some(ci) = node.profile.carbon {
+                let entry = kb
+                    .nk
+                    .entry(node.id.clone())
+                    .or_insert_with(|| ProfileEntry {
+                        summary: Default::default(),
+                        updated_at: t,
+                    });
+                entry.summary.observe(ci);
+                entry.updated_at = t;
+            }
+        }
+
+        // --- CK ------------------------------------------------------------
+        let regenerated: std::collections::HashSet<String> =
+            new_constraints.iter().map(|c| c.kind.key()).collect();
+
+        // decay absent entries, evict below the floor
+        let decay = self.config.decay;
+        let floor = self.config.drop_below;
+        kb.ck.retain(|key, entry| {
+            if !regenerated.contains(key) {
+                entry.mu *= decay;
+            }
+            entry.mu >= floor
+        });
+
+        // refresh / insert regenerated ones
+        for c in new_constraints {
+            let key = c.kind.key();
+            match kb.ck.get_mut(&key) {
+                Some(entry) => {
+                    entry.constraint = c.clone();
+                    entry.mu = 1.0;
+                    entry.generated_at = t;
+                }
+                None => {
+                    kb.ck.insert(
+                        key,
+                        ConstraintEntry {
+                            constraint: c.clone(),
+                            mu: 1.0,
+                            generated_at: t,
+                        },
+                    );
+                }
+            }
+        }
+
+        // --- recall ---------------------------------------------------------
+        let mut all: Vec<ConstraintEntry> = kb.ck.values().cloned().collect();
+        // deterministic order: by effective Em desc, then key
+        all.sort_by(|a, b| {
+            b.effective_em()
+                .partial_cmp(&a.effective_em())
+                .unwrap()
+                .then_with(|| a.constraint.kind.key().cmp(&b.constraint.kind.key()))
+        });
+        Ok(all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::ConstraintKind;
+    use crate::model::Node;
+    use crate::util::Summary;
+
+    fn avoid(node: &str, em: f64) -> Constraint {
+        Constraint::new(
+            ConstraintKind::AvoidNode {
+                service: "frontend".into(),
+                flavour: "large".into(),
+                node: node.into(),
+            },
+            em,
+            em * 0.4,
+            em * 0.9,
+        )
+    }
+
+    fn infra() -> Infrastructure {
+        let mut infra = Infrastructure::new("eu");
+        let mut n = Node::new("italy", "IT");
+        n.profile.carbon = Some(335.0);
+        infra.nodes.push(n);
+        infra
+    }
+
+    #[test]
+    fn new_constraints_enter_ck_with_full_mu() {
+        let mut kb = KnowledgeBase::new();
+        let enricher = KbEnricher::default();
+        let cs = vec![avoid("italy", 663.0)];
+        let all = enricher
+            .update(&mut kb, &Default::default(), &infra(), &cs, 100.0)
+            .unwrap();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].mu, 1.0);
+        assert_eq!(all[0].generated_at, 100.0);
+    }
+
+    #[test]
+    fn absent_constraints_decay_and_evict() {
+        let mut kb = KnowledgeBase::new();
+        let enricher = KbEnricher::default(); // decay 0.8, floor 0.15
+        enricher
+            .update(&mut kb, &Default::default(), &infra(), &[avoid("italy", 663.0)], 0.0)
+            .unwrap();
+        // 8 epochs without regeneration: 0.8^8 = 0.167 (still alive),
+        // 9th: 0.134 < 0.15 evicted
+        for epoch in 1..=8 {
+            let all = enricher
+                .update(&mut kb, &Default::default(), &infra(), &[], epoch as f64)
+                .unwrap();
+            assert_eq!(all.len(), 1, "epoch {epoch}");
+            assert!((all[0].mu - 0.8f64.powi(epoch)).abs() < 1e-12);
+        }
+        let all = enricher
+            .update(&mut kb, &Default::default(), &infra(), &[], 9.0)
+            .unwrap();
+        assert!(all.is_empty());
+        assert!(kb.ck.is_empty());
+    }
+
+    #[test]
+    fn regeneration_resets_mu_and_updates_em() {
+        let mut kb = KnowledgeBase::new();
+        let enricher = KbEnricher::default();
+        enricher
+            .update(&mut kb, &Default::default(), &infra(), &[avoid("italy", 663.0)], 0.0)
+            .unwrap();
+        enricher
+            .update(&mut kb, &Default::default(), &infra(), &[], 1.0)
+            .unwrap(); // decays to 0.8
+        let all = enricher
+            .update(&mut kb, &Default::default(), &infra(), &[avoid("italy", 700.0)], 2.0)
+            .unwrap();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].mu, 1.0);
+        assert_eq!(all[0].constraint.em, 700.0);
+        assert_eq!(all[0].generated_at, 2.0);
+    }
+
+    #[test]
+    fn recall_merges_new_and_surviving_past() {
+        let mut kb = KnowledgeBase::new();
+        let enricher = KbEnricher::default();
+        enricher
+            .update(&mut kb, &Default::default(), &infra(), &[avoid("italy", 663.0)], 0.0)
+            .unwrap();
+        // next epoch generates a different constraint; the old one survives
+        let all = enricher
+            .update(&mut kb, &Default::default(), &infra(), &[avoid("gb", 422.0)], 1.0)
+            .unwrap();
+        assert_eq!(all.len(), 2);
+        // ordering: effective em desc: italy 663*0.8=530.4 > gb 422*1.0
+        assert!(matches!(
+            &all[0].constraint.kind,
+            ConstraintKind::AvoidNode { node, .. } if node == "italy"
+        ));
+    }
+
+    #[test]
+    fn profiles_merged_into_sk_ik_nk() {
+        let mut kb = KnowledgeBase::new();
+        let enricher = KbEnricher::default();
+        let mut report = EstimationReport::default();
+        report
+            .computation
+            .insert(("frontend".into(), "large".into()), Summary::from_values(&[1.9, 2.1]));
+        report.communication.insert(
+            ("frontend".into(), "large".into(), "cart".into()),
+            Summary::from_values(&[0.01]),
+        );
+        enricher
+            .update(&mut kb, &report, &infra(), &[], 50.0)
+            .unwrap();
+        assert_eq!(kb.sk.len(), 1);
+        assert_eq!(kb.ik.len(), 1);
+        assert_eq!(kb.nk.len(), 1);
+        assert_eq!(kb.nk["italy"].em_avg(), 335.0);
+
+        // second epoch merges (running min/max across epochs)
+        let mut report2 = EstimationReport::default();
+        report2
+            .computation
+            .insert(("frontend".into(), "large".into()), Summary::from_values(&[2.5]));
+        enricher
+            .update(&mut kb, &report2, &infra(), &[], 51.0)
+            .unwrap();
+        let p = &kb.sk[&("frontend".to_string(), "large".to_string())];
+        assert_eq!(p.summary.count, 3);
+        assert_eq!(p.em_max(), 2.5);
+        assert_eq!(p.em_min(), 1.9);
+        assert_eq!(p.updated_at, 51.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Knowledge Base ⟨SK, IK, NK, CK⟩ (Eq. 6–10) and the KB Enricher (§4.4).
+//!
+//! * SK — per (service, flavour) emission summaries (Eq. 7);
+//! * IK — per (service, flavour, destination) interaction summaries (Eq. 8);
+//! * NK — per node carbon-intensity summaries (Eq. 9);
+//! * CK — learned constraints with memory weight μ (Eq. 10): constraints
+//!   not regenerated for several iterations lose reliability.
+//!
+//! Persistence follows the paper's implementation: "a semi-structured data
+//! store implemented through a collection of JSON files" — `sk.json`,
+//! `ik.json`, `nk.json`, `ck.json` inside a KB directory.
+
+pub mod enricher;
+pub mod store;
+
+pub use enricher::{EnricherConfig, KbEnricher};
+pub use store::{ConstraintEntry, KnowledgeBase, ProfileEntry};

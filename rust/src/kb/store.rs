@@ -1,0 +1,330 @@
+//! The Knowledge Base data structures and JSON-file persistence.
+
+use crate::constraints::Constraint;
+use crate::jsonio::{self, Value};
+use crate::util::Summary;
+use crate::Result;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A profile entry: the ⟨max, min, avg⟩ tuple of Eq. 7–9 (we keep the
+/// full running summary so averages stay exact across merges) plus the
+/// last-update timestamp `t`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileEntry {
+    pub summary: Summary,
+    pub updated_at: f64,
+}
+
+impl ProfileEntry {
+    pub fn em_max(&self) -> f64 {
+        if self.summary.is_empty() {
+            0.0
+        } else {
+            self.summary.max
+        }
+    }
+
+    pub fn em_min(&self) -> f64 {
+        if self.summary.is_empty() {
+            0.0
+        } else {
+            self.summary.min
+        }
+    }
+
+    pub fn em_avg(&self) -> f64 {
+        self.summary.mean()
+    }
+}
+
+/// A learned constraint (Eq. 10): `c_t -> <Em, μ>`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConstraintEntry {
+    pub constraint: Constraint,
+    /// Memory weight μ ∈ (0, 1]: decays when the constraint is not
+    /// regenerated; reset to 1 on regeneration.
+    pub mu: f64,
+    /// Generation timestamp of the *latest* (re)generation.
+    pub generated_at: f64,
+}
+
+impl ConstraintEntry {
+    /// Effective footprint used by the ranker: Em discounted by memory
+    /// reliability.
+    pub fn effective_em(&self) -> f64 {
+        self.constraint.em * self.mu
+    }
+}
+
+/// The Knowledge Base ⟨SK, IK, NK, CK⟩.
+#[derive(Debug, Clone, Default)]
+pub struct KnowledgeBase {
+    /// (service, flavour) -> emission profile.
+    pub sk: HashMap<(String, String), ProfileEntry>,
+    /// (service, flavour, destination) -> interaction profile.
+    pub ik: HashMap<(String, String, String), ProfileEntry>,
+    /// node -> carbon-intensity profile.
+    pub nk: HashMap<String, ProfileEntry>,
+    /// constraint key -> learned constraint.
+    pub ck: HashMap<String, ConstraintEntry>,
+}
+
+impl KnowledgeBase {
+    pub fn new() -> Self {
+        KnowledgeBase::default()
+    }
+
+    /// Largest footprint among CK constraints (the Eq. 11 normaliser).
+    pub fn ck_max_em(&self) -> f64 {
+        self.ck
+            .values()
+            .map(|e| e.effective_em())
+            .fold(0.0, f64::max)
+    }
+
+    // ------------------------------------------------------------------
+    // Persistence: one JSON file per section (paper §4.4).
+    // ------------------------------------------------------------------
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        jsonio::to_file(&dir.join("sk.json"), &profiles_to_json_2(&self.sk))?;
+        jsonio::to_file(&dir.join("ik.json"), &profiles_to_json_3(&self.ik))?;
+        jsonio::to_file(&dir.join("nk.json"), &profiles_to_json_1(&self.nk))?;
+        let ck = Value::array(
+            self.ck
+                .values()
+                .map(|e| {
+                    Value::object(vec![
+                        ("constraint", e.constraint.to_json()),
+                        ("mu", Value::from(e.mu)),
+                        ("generatedAt", Value::from(e.generated_at)),
+                    ])
+                })
+                .collect(),
+        );
+        jsonio::to_file(&dir.join("ck.json"), &ck)?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<KnowledgeBase> {
+        let mut kb = KnowledgeBase::new();
+        if !dir.join("ck.json").exists() {
+            return Ok(kb); // empty KB on first run
+        }
+        kb.sk = profiles_from_json_2(&jsonio::from_file(&dir.join("sk.json"))?)?;
+        kb.ik = profiles_from_json_3(&jsonio::from_file(&dir.join("ik.json"))?)?;
+        kb.nk = profiles_from_json_1(&jsonio::from_file(&dir.join("nk.json"))?)?;
+        for entry in jsonio::from_file(&dir.join("ck.json"))?
+            .as_array()
+            .unwrap_or(&[])
+        {
+            let constraint = Constraint::from_json(entry.req("constraint")?)?;
+            let e = ConstraintEntry {
+                mu: entry.f64_field("mu")?,
+                generated_at: entry.f64_field("generatedAt")?,
+                constraint,
+            };
+            kb.ck.insert(e.constraint.kind.key(), e);
+        }
+        Ok(kb)
+    }
+}
+
+fn profile_to_json(p: &ProfileEntry) -> Value {
+    Value::object(vec![
+        ("min", Value::from(p.summary.min.min(1e308))),
+        ("max", Value::from(p.summary.max.max(-1e308))),
+        ("sum", Value::from(p.summary.sum)),
+        ("count", Value::from(p.summary.count as f64)),
+        ("updatedAt", Value::from(p.updated_at)),
+    ])
+}
+
+fn profile_from_json(v: &Value) -> Result<ProfileEntry> {
+    let count = v.f64_field("count")? as u64;
+    let summary = if count == 0 {
+        Summary::default()
+    } else {
+        Summary {
+            min: v.f64_field("min")?,
+            max: v.f64_field("max")?,
+            sum: v.f64_field("sum")?,
+            count,
+        }
+    };
+    Ok(ProfileEntry {
+        summary,
+        updated_at: v.f64_field("updatedAt")?,
+    })
+}
+
+fn profiles_to_json_1(map: &HashMap<String, ProfileEntry>) -> Value {
+    Value::array(
+        map.iter()
+            .map(|(node, p)| {
+                let mut v = profile_to_json(p);
+                v.set("node", Value::from(node.clone()));
+                v
+            })
+            .collect(),
+    )
+}
+
+fn profiles_from_json_1(v: &Value) -> Result<HashMap<String, ProfileEntry>> {
+    let mut map = HashMap::new();
+    for item in v.as_array().unwrap_or(&[]) {
+        map.insert(item.str_field("node")?.to_string(), profile_from_json(item)?);
+    }
+    Ok(map)
+}
+
+fn profiles_to_json_2(map: &HashMap<(String, String), ProfileEntry>) -> Value {
+    Value::array(
+        map.iter()
+            .map(|((s, f), p)| {
+                let mut v = profile_to_json(p);
+                v.set("service", Value::from(s.clone()));
+                v.set("flavour", Value::from(f.clone()));
+                v
+            })
+            .collect(),
+    )
+}
+
+fn profiles_from_json_2(v: &Value) -> Result<HashMap<(String, String), ProfileEntry>> {
+    let mut map = HashMap::new();
+    for item in v.as_array().unwrap_or(&[]) {
+        map.insert(
+            (
+                item.str_field("service")?.to_string(),
+                item.str_field("flavour")?.to_string(),
+            ),
+            profile_from_json(item)?,
+        );
+    }
+    Ok(map)
+}
+
+fn profiles_to_json_3(map: &HashMap<(String, String, String), ProfileEntry>) -> Value {
+    Value::array(
+        map.iter()
+            .map(|((s, f, z), p)| {
+                let mut v = profile_to_json(p);
+                v.set("service", Value::from(s.clone()));
+                v.set("flavour", Value::from(f.clone()));
+                v.set("to", Value::from(z.clone()));
+                v
+            })
+            .collect(),
+    )
+}
+
+fn profiles_from_json_3(
+    v: &Value,
+) -> Result<HashMap<(String, String, String), ProfileEntry>> {
+    let mut map = HashMap::new();
+    for item in v.as_array().unwrap_or(&[]) {
+        map.insert(
+            (
+                item.str_field("service")?.to_string(),
+                item.str_field("flavour")?.to_string(),
+                item.str_field("to")?.to_string(),
+            ),
+            profile_from_json(item)?,
+        );
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::ConstraintKind;
+
+    fn kb_with_data() -> KnowledgeBase {
+        let mut kb = KnowledgeBase::new();
+        kb.sk.insert(
+            ("frontend".into(), "large".into()),
+            ProfileEntry {
+                summary: Summary::from_values(&[600.0, 700.0]),
+                updated_at: 3600.0,
+            },
+        );
+        kb.ik.insert(
+            ("frontend".into(), "large".into(), "cart".into()),
+            ProfileEntry {
+                summary: Summary::from_values(&[1.5]),
+                updated_at: 3600.0,
+            },
+        );
+        kb.nk.insert(
+            "italy".into(),
+            ProfileEntry {
+                summary: Summary::from_values(&[320.0, 350.0]),
+                updated_at: 3600.0,
+            },
+        );
+        let c = Constraint::new(
+            ConstraintKind::AvoidNode {
+                service: "frontend".into(),
+                flavour: "large".into(),
+                node: "italy".into(),
+            },
+            663.6,
+            241.7,
+            631.9,
+        );
+        kb.ck.insert(
+            c.kind.key(),
+            ConstraintEntry {
+                constraint: c,
+                mu: 0.8,
+                generated_at: 3600.0,
+            },
+        );
+        kb
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join(format!("greengen-kb-{}", std::process::id()));
+        let kb = kb_with_data();
+        kb.save(&dir).unwrap();
+        // files exist (the "collection of JSON files")
+        for f in ["sk.json", "ik.json", "nk.json", "ck.json"] {
+            assert!(dir.join(f).exists(), "{f}");
+        }
+        let back = KnowledgeBase::load(&dir).unwrap();
+        assert_eq!(kb.sk, back.sk);
+        assert_eq!(kb.ik, back.ik);
+        assert_eq!(kb.nk, back.nk);
+        assert_eq!(kb.ck, back.ck);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_missing_dir_gives_empty_kb() {
+        let kb = KnowledgeBase::load(Path::new("/nonexistent/greengen-kb")).unwrap();
+        assert!(kb.ck.is_empty());
+        assert!(kb.sk.is_empty());
+    }
+
+    #[test]
+    fn eq7_tuple_accessors() {
+        let kb = kb_with_data();
+        let p = &kb.sk[&("frontend".to_string(), "large".to_string())];
+        assert_eq!(p.em_max(), 700.0);
+        assert_eq!(p.em_min(), 600.0);
+        assert_eq!(p.em_avg(), 650.0);
+    }
+
+    #[test]
+    fn ck_max_em_uses_memory_weight() {
+        let kb = kb_with_data();
+        // em 663.6 * mu 0.8
+        assert!((kb.ck_max_em() - 663.6 * 0.8).abs() < 1e-9);
+        assert_eq!(KnowledgeBase::new().ck_max_em(), 0.0);
+    }
+}

@@ -1,0 +1,56 @@
+//! # greengen — Green by Design: constraint-based adaptive deployment
+//!
+//! Reproduction of *"Green by Design: Constraint-Based Adaptive Deployment in
+//! the Cloud Continuum"* (D'Iapico & Vitali) as a three-layer Rust + JAX +
+//! Pallas stack.
+//!
+//! The crate implements the paper's **Green-aware Constraint Generator** —
+//! the pipeline that learns energy and communication profiles of a
+//! microservice application from monitoring data, enriches the infrastructure
+//! description with grid carbon intensity, and emits weighted, green-aware
+//! deployment constraints (`AvoidNode`, `Affinity`, …) together with an
+//! explainability report — plus every substrate it depends on: the monitoring
+//! stack, the carbon-intensity service, the knowledge base, a mini-Prolog
+//! rule engine, and a constraint-aware scheduler.
+//!
+//! ## Layer map
+//! * L3 (this crate): coordination, adaptive epochs, KB, scheduler, CLI.
+//! * L2/L1 (`python/compile/`): the impact-analytics graph + Pallas kernels,
+//!   AOT-lowered to HLO text, executed by [`runtime`] via PJRT.
+//!
+//! ## Quickstart
+//! ```no_run
+//! use greengen::config::scenarios;
+//! use greengen::pipeline::GeneratorPipeline;
+//!
+//! let scenario = scenarios::scenario(1).unwrap();
+//! let mut pipeline = GeneratorPipeline::new(Default::default());
+//! let outcome = pipeline.run_scenario(&scenario).unwrap();
+//! for c in &outcome.ranked {
+//!     println!("{}", c.render_prolog());
+//! }
+//! ```
+
+pub mod adapter;
+pub mod benchkit;
+pub mod carbon;
+pub mod cliargs;
+pub mod config;
+pub mod constraints;
+pub mod energy;
+pub mod error;
+pub mod explain;
+pub mod jsonio;
+pub mod kb;
+pub mod model;
+pub mod monitoring;
+pub mod pipeline;
+pub mod prolog;
+pub mod ranker;
+pub mod runtime;
+pub mod scheduler;
+pub mod simulate;
+pub mod telemetry;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,437 @@
+//! greengen — CLI for the Green-aware Constraint Generator.
+//!
+//! ```text
+//! greengen scenario <1-5> [--explain] [--format prolog|json|minizinc] [--xla] [--extended]
+//! greengen generate --app app.json --infra infra.json [--alpha 0.8] [--format prolog] [--xla]
+//! greengen adaptive [--scenario 1] [--hours 48] [--regen 6] [--failures 0.0] [--xla]
+//! greengen schedule [--scenario 1] [--solver greedy|exact|cost-only|random|oracle]
+//! greengen scalability [--mode app|infra] [--steps 10] [--reps 3] [--out file.csv]
+//! greengen threshold [--services 100] [--nodes 100]
+//! greengen info
+//! ```
+
+use greengen::adapter::{adapter_for, SchedulerAdapter};
+use greengen::cliargs::Args;
+use greengen::config::scenarios;
+use greengen::pipeline::{AdaptiveConfig, AdaptiveLoop, GeneratorPipeline, PipelineConfig};
+use greengen::runtime::{AnalyticsBackend, NativeBackend, XlaBackend};
+use greengen::scheduler::{
+    evaluate, BranchAndBoundScheduler, CostOnlyScheduler, GreedyScheduler,
+    GreenOracleScheduler, Objective, Problem, RandomScheduler, Scheduler,
+};
+use greengen::telemetry::EnergyMeter;
+use greengen::util::{quantile_lower, Rng};
+use greengen::{simulate, Result};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("scenario") => cmd_scenario(args),
+        Some("generate") => cmd_generate(args),
+        Some("adaptive") => cmd_adaptive(args),
+        Some("schedule") => cmd_schedule(args),
+        Some("scalability") => cmd_scalability(args),
+        Some("threshold") => cmd_threshold(args),
+        Some("timeshift") => cmd_timeshift(args),
+        Some("info") => cmd_info(),
+        Some("help") | None => {
+            print!("{}", USAGE);
+            Ok(())
+        }
+        Some(other) => Err(greengen::Error::Config(format!(
+            "unknown command '{other}' (see `greengen help`)"
+        ))),
+    }
+}
+
+const USAGE: &str = "\
+greengen — Green by Design: constraint-based adaptive deployment
+
+USAGE:
+  greengen scenario <1-5> [--explain] [--format prolog|json|minizinc] [--xla] [--extended]
+  greengen generate --app app.json --infra infra.json [--alpha 0.8] [--format prolog] [--xla]
+  greengen adaptive [--scenario 1] [--hours 48] [--regen 6] [--failures 0.0]
+  greengen schedule [--scenario 1] [--solver greedy|exact|cost-only|random|oracle]
+  greengen scalability [--mode app|infra] [--steps 10] [--reps 3] [--out file.csv]
+  greengen threshold [--services 100] [--nodes 100]
+  greengen timeshift [--scenario 1] [--window 4] [--horizon 24]
+  greengen info
+";
+
+fn pipeline(args: &Args) -> Result<GeneratorPipeline> {
+    let mut config = PipelineConfig::default();
+    config.generator.alpha = args.f64_or("alpha", 0.8)?;
+    config.extended_library = args.flag("extended");
+    if args.flag("direct") {
+        config.generator.use_prolog = false;
+    }
+    if args.flag("xla") {
+        GeneratorPipeline::with_xla(config, &args.opt_or("artifacts", "artifacts"))
+    } else {
+        Ok(GeneratorPipeline::new(config))
+    }
+}
+
+fn cmd_scenario(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "explain", "format", "xla", "extended", "alpha", "direct", "artifacts",
+    ])?;
+    let n: usize = args
+        .positional
+        .first()
+        .ok_or_else(|| greengen::Error::Config("scenario number required (1-5)".into()))?
+        .parse()
+        .map_err(|_| greengen::Error::Config("scenario must be a number".into()))?;
+    let scenario = scenarios::scenario(n)?;
+    println!(
+        "# Scenario {n}: {} — {}",
+        scenario.name, scenario.description
+    );
+    let mut pipe = pipeline(args)?;
+    let outcome = pipe.run_scenario(&scenario)?;
+    println!(
+        "# backend={} tau={:.3} constraints={}",
+        pipe.backend_name(),
+        outcome.raw.tau,
+        outcome.ranked.len()
+    );
+    let adapter = adapter(args)?;
+    print!("{}", adapter.format(&outcome.ranked));
+    if args.flag("explain") {
+        println!("\n{}", outcome.report.render_text());
+    }
+    Ok(())
+}
+
+fn adapter(args: &Args) -> Result<Box<dyn SchedulerAdapter>> {
+    let name = args.opt_or("format", "prolog");
+    adapter_for(&name)
+        .ok_or_else(|| greengen::Error::Config(format!("unknown format '{name}'")))
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "app", "infra", "alpha", "format", "xla", "extended", "direct", "artifacts", "explain",
+    ])?;
+    let app_path = args
+        .opt("app")
+        .ok_or_else(|| greengen::Error::Config("--app required".into()))?;
+    let infra_path = args
+        .opt("infra")
+        .ok_or_else(|| greengen::Error::Config("--infra required".into()))?;
+    let mut app = greengen::config::load_application(std::path::Path::new(app_path))?;
+    let mut infra = greengen::config::load_infrastructure(std::path::Path::new(infra_path))?;
+
+    // Carbon enrichment: region lookup against the paper's tables; nodes
+    // with explicit carbon values keep them.
+    let mut static_all = greengen::carbon::StaticIntensity::europe_table2();
+    for (region, value) in [
+        ("US-WA", 244.0),
+        ("US-CA", 235.0),
+        ("US-TX", 231.0),
+        ("US-FL", 570.0),
+        ("US-NY", 236.0),
+        ("US-AZ", 229.0),
+    ] {
+        static_all.set(region, value);
+    }
+    let gatherer = greengen::carbon::EnergyMixGatherer::new(&static_all);
+    gatherer.enrich(&mut infra, 0.0)?;
+
+    let mut pipe = pipeline(args)?;
+    let store = greengen::monitoring::MetricStore::new(); // profiles come from the file
+    let outcome = pipe.run_epoch(&mut app, &mut infra, &store, &static_all, 0.0)?;
+    print!("{}", adapter(args)?.format(&outcome.ranked));
+    if args.flag("explain") {
+        println!("\n{}", outcome.report.render_text());
+    }
+    Ok(())
+}
+
+fn cmd_adaptive(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "scenario", "hours", "regen", "failures", "xla", "alpha", "extended", "direct",
+        "artifacts", "seed",
+    ])?;
+    let scenario = scenarios::scenario(args.usize_or("scenario", 1)?)?;
+    let config = AdaptiveConfig {
+        hours: args.usize_or("hours", 48)?,
+        regen_every: args.usize_or("regen", 6)?,
+        failure_rate: args.f64_or("failures", 0.0)?,
+        objective: Objective::default(),
+        seed: args.usize_or("seed", 0xADA9)? as u64,
+    };
+    let mut looper = AdaptiveLoop::with_pipeline(pipeline(args)?, config);
+    let summary = looper.run(&scenario)?;
+    println!("hour  #constraints  constrained_g  cost_only_g  random_g  oracle_g  failed");
+    for e in &summary.epochs {
+        println!(
+            "{:>4}  {:>12}  {:>13.1}  {:>11.1}  {:>8.1}  {:>8.1}  {}",
+            e.hour,
+            e.constraints,
+            e.constrained_g,
+            e.cost_only_g,
+            e.random_g,
+            e.oracle_g,
+            e.failed_node.as_deref().unwrap_or("-")
+        );
+    }
+    println!(
+        "\ntotals (gCO2eq): constrained={:.1} cost-only={:.1} random={:.1} oracle={:.1}",
+        summary.total_constrained_g,
+        summary.total_cost_only_g,
+        summary.total_random_g,
+        summary.total_oracle_g
+    );
+    println!(
+        "emission reduction vs cost-only: {:.1}%  (oracle recovery {:.1}%)",
+        summary.reduction_vs_cost_only() * 100.0,
+        summary.oracle_recovery() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "scenario", "solver", "xla", "alpha", "extended", "direct", "artifacts",
+    ])?;
+    let scenario = scenarios::scenario(args.usize_or("scenario", 1)?)?;
+    let mut pipe = pipeline(args)?;
+    let outcome = pipe.run_scenario(&scenario)?;
+
+    // re-enrich a fresh copy for the scheduling problem
+    let mut app = scenario.app.clone();
+    let mut infra = scenario.infra.clone();
+    let mut sim =
+        greengen::monitoring::WorkloadSimulator::new(scenario.truth.clone(), scenario.seed);
+    let store = sim.run(0.0, scenario.windows);
+    let estimator = greengen::energy::EnergyEstimator::default();
+    estimator.estimate(&mut app, &store);
+    let gatherer = greengen::carbon::EnergyMixGatherer::new(&scenario.intensity);
+    gatherer.enrich(&mut infra, store.horizon())?;
+
+    let problem = Problem {
+        app: &app,
+        infra: &infra,
+        constraints: &outcome.ranked,
+        objective: Objective::default(),
+    };
+    let solver_name = args.opt_or("solver", "greedy");
+    let plan = match solver_name.as_str() {
+        "greedy" => GreedyScheduler::default().schedule(&problem)?,
+        "exact" => BranchAndBoundScheduler::default().schedule(&problem)?,
+        "cost-only" => CostOnlyScheduler.schedule(&problem)?,
+        "random" => RandomScheduler { seed: 7 }.schedule(&problem)?,
+        "oracle" => GreenOracleScheduler.schedule(&problem)?,
+        other => {
+            return Err(greengen::Error::Config(format!("unknown solver '{other}'")));
+        }
+    };
+    let metrics = evaluate(&problem, &plan)?;
+    println!("# solver={solver_name} constraints={}", outcome.ranked.len());
+    for p in &plan.placements {
+        println!("deploy {} ({}) -> {}", p.service, p.flavour, p.node);
+    }
+    for d in &plan.dropped {
+        println!("drop   {d}");
+    }
+    println!(
+        "\nemissions={:.1} gCO2eq/window  cost={:.3}/h  violations={} (weight {:.2})  dropped={}",
+        metrics.emissions_g,
+        metrics.cost,
+        metrics.violations,
+        metrics.violation_weight,
+        metrics.dropped
+    );
+    Ok(())
+}
+
+fn cmd_scalability(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "mode", "steps", "reps", "out", "xla", "direct", "artifacts", "nodes", "services",
+    ])?;
+    let mode = args.opt_or("mode", "app");
+    let steps = args.usize_or("steps", 10)?;
+    let reps = args.usize_or("reps", 3)?;
+    let fixed_nodes = args.usize_or("nodes", 50)?;
+    let fixed_services = args.usize_or("services", 100)?;
+
+    let xla = if args.flag("xla") {
+        Some(XlaBackend::from_artifacts(args.opt_or("artifacts", "artifacts"))?)
+    } else {
+        None
+    };
+    let native = NativeBackend;
+    let backend: &dyn AnalyticsBackend = match &xla {
+        Some(b) => b,
+        None => &native,
+    };
+
+    println!(
+        "mode={mode} steps={steps} reps={reps} backend={}",
+        backend.name()
+    );
+    println!("size,components,nodes,mean_seconds,mean_kwh,constraints");
+    let mut csv = String::from("size,components,nodes,mean_seconds,mean_kwh,constraints\n");
+    for step in 1..=steps {
+        let (services, nodes) = match mode.as_str() {
+            "app" => (step * 100, fixed_nodes),
+            "infra" => (fixed_services, step * 20),
+            other => return Err(greengen::Error::Config(format!("unknown mode '{other}'"))),
+        };
+        let mut seconds = 0.0;
+        let mut kwh = 0.0;
+        let mut n_constraints = 0usize;
+        for rep in 0..reps {
+            let mut rng = Rng::new((step * 1000 + rep) as u64);
+            let app = simulate::random_application(&mut rng, services);
+            let infra = simulate::random_infrastructure(&mut rng, nodes);
+            let generator = greengen::constraints::ConstraintGenerator::new(backend)
+                .with_config(greengen::constraints::GeneratorConfig {
+                    alpha: 0.8,
+                    use_prolog: false, // Fig. 2 measures the numeric pipeline
+                });
+            let mut meter = EnergyMeter::default();
+            let result = meter.measure("generate", || generator.generate(&app, &infra))?;
+            let entries: Vec<greengen::kb::ConstraintEntry> = result
+                .constraints
+                .iter()
+                .map(|c| greengen::kb::ConstraintEntry {
+                    constraint: c.clone(),
+                    mu: 1.0,
+                    generated_at: 0.0,
+                })
+                .collect();
+            let ranked = greengen::ranker::Ranker::default().rank(&entries);
+            let report = greengen::explain::ExplainabilityGenerator::report(
+                &greengen::constraints::ConstraintLibrary::default(),
+                &ranked,
+            );
+            let _ = meter.measure("explain", || report.render_text().len());
+            let (t, e) = meter.totals();
+            seconds += t;
+            kwh += e;
+            n_constraints = ranked.len();
+        }
+        let line = format!(
+            "{step},{services},{nodes},{:.4},{:.6e},{n_constraints}",
+            seconds / reps as f64,
+            kwh / reps as f64
+        );
+        println!("{line}");
+        csv.push_str(&line);
+        csv.push('\n');
+    }
+    if let Some(path) = args.opt("out") {
+        std::fs::write(path, csv)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_threshold(args: &Args) -> Result<()> {
+    args.ensure_known(&["services", "nodes", "xla", "direct", "artifacts", "seed"])?;
+    let services = args.usize_or("services", 100)?;
+    let nodes = args.usize_or("nodes", 100)?;
+    let seed = args.usize_or("seed", 77)? as u64;
+
+    let mut rng = Rng::new(seed);
+    let app = simulate::random_application(&mut rng, services);
+    let infra = simulate::random_infrastructure(&mut rng, nodes);
+    let backend = NativeBackend;
+
+    println!("# Table 4: constraints per quantile level ({services} services x {nodes} nodes)");
+    println!("quantile,tau,constraints");
+    let mut all_ems: Vec<f64> = Vec::new();
+    for level in [0.90, 0.85, 0.80, 0.75, 0.70, 0.65, 0.60, 0.55, 0.50] {
+        let generator = greengen::constraints::ConstraintGenerator::new(&backend).with_config(
+            greengen::constraints::GeneratorConfig {
+                alpha: level,
+                use_prolog: false,
+            },
+        );
+        let result = generator.generate(&app, &infra)?;
+        println!("{level},{:.2},{}", result.tau, result.constraints.len());
+        if level == 0.50 {
+            all_ems = result.constraints.iter().map(|c| c.em).collect();
+        }
+    }
+    // Fig. 3 data: savings distribution of the α=0.5 superset
+    all_ems.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    println!("\n# Fig 3: potential savings of constraints, most impactful first");
+    println!("rank,em_gCO2eq");
+    for (i, em) in all_ems.iter().enumerate().take(40) {
+        println!("{},{:.2}", i + 1, em);
+    }
+    println!(
+        "# tail: q80 of pooled impacts = {:.2}",
+        quantile_lower(&all_ems, 0.8)
+    );
+    Ok(())
+}
+
+fn cmd_timeshift(args: &Args) -> Result<()> {
+    args.ensure_known(&["scenario", "window", "horizon"])?;
+    let scenario = scenarios::scenario(args.usize_or("scenario", 1)?)?;
+    // learn profiles from simulated monitoring, then plan against the
+    // diurnal CI forecast of every region in the scenario infrastructure
+    let mut app = scenario.app.clone();
+    let mut sim =
+        greengen::monitoring::WorkloadSimulator::new(scenario.truth.clone(), scenario.seed);
+    let store = sim.run(0.0, scenario.windows);
+    greengen::energy::EnergyEstimator::default().estimate(&mut app, &store);
+
+    let traces = GeneratorPipeline::trace_set(&scenario);
+    let mut planner = greengen::constraints::TimeShiftPlanner::new(&traces);
+    planner.window_hours = args.usize_or("window", 4)?;
+    planner.horizon_hours = args.usize_or("horizon", 24)?;
+    let regions: Vec<String> = scenario.infra.nodes.iter().map(|n| n.region.clone()).collect();
+    let region_refs: Vec<&str> = regions.iter().map(|r| r.as_str()).collect();
+    let recs = planner.plan(&app, &region_refs, store.horizon())?;
+    if recs.is_empty() {
+        println!("no batch-capable services with learned profiles");
+        return Ok(());
+    }
+    for rec in &recs {
+        println!("{}", rec.render_prolog(1.0));
+        println!("{}\n", rec.explain());
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("greengen {}", env!("CARGO_PKG_VERSION"));
+    match XlaBackend::from_default_artifacts() {
+        Ok(backend) => {
+            println!("xla backend: available");
+            for b in backend.buckets() {
+                println!(
+                    "  bucket {}x{} (pool {}) <- {}",
+                    b.rows,
+                    b.nodes,
+                    b.pool,
+                    b.file.display()
+                );
+            }
+        }
+        Err(e) => println!("xla backend: unavailable ({e}); native fallback in use"),
+    }
+    Ok(())
+}

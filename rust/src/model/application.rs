@@ -1,0 +1,504 @@
+//! Application Description 𝒜 and requirements ℛ (§3.2).
+//!
+//! An application is a set of cooperating, independently deployable
+//! services. Each service carries the paper's metadata: `componentID`,
+//! `description`, `mustDeploy`, `flavours` and `flavoursOrder` (we encode
+//! the order as the vector order of `flavours`), plus the requirement
+//! specification at flavour, service and communication level. The `energy`
+//! properties are *not* authored by the DevOps engineer — they are filled
+//! in by the [`crate::energy::EnergyEstimator`] from monitoring data.
+
+use crate::jsonio::Value;
+use crate::{Error, Result};
+
+/// Network placement requirement of a service / subnet of a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Subnet {
+    Public,
+    Private,
+    /// Service may be placed in either subnet (services only).
+    Any,
+}
+
+impl Subnet {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Subnet::Public => "public",
+            Subnet::Private => "private",
+            Subnet::Any => "any",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Subnet> {
+        match s {
+            "public" => Ok(Subnet::Public),
+            "private" => Ok(Subnet::Private),
+            "any" => Ok(Subnet::Any),
+            other => Err(Error::Config(format!("unknown subnet '{other}'"))),
+        }
+    }
+}
+
+/// Service-level security requirements (flavour-independent, §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SecurityReqs {
+    pub firewall: bool,
+    pub ssl: bool,
+    pub encryption: bool,
+}
+
+/// Flavour-level computational requirements + QoS (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlavourRequirements {
+    /// CPU cores requested.
+    pub cpu: f64,
+    /// Memory in GiB.
+    pub ram_gb: f64,
+    /// Persistent storage in GiB.
+    pub storage_gb: f64,
+    /// Minimum availability (e.g. 0.999).
+    pub availability: f64,
+}
+
+impl Default for FlavourRequirements {
+    fn default() -> Self {
+        FlavourRequirements {
+            cpu: 0.5,
+            ram_gb: 0.5,
+            storage_gb: 1.0,
+            availability: 0.0,
+        }
+    }
+}
+
+/// Average energy profile learned from monitoring (Eq. 1): mean energy per
+/// observation window in kWh, plus how many samples back it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyProfile {
+    pub kwh: f64,
+    pub samples: u64,
+}
+
+/// One implementation flavour of a service (§3.2). Vector order inside
+/// [`Service::flavours`] encodes `flavoursOrder` (most preferred first).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Flavour {
+    pub name: String,
+    pub requirements: FlavourRequirements,
+    /// Filled by the Energy Estimator; `None` until first estimation.
+    pub energy: Option<EnergyProfile>,
+}
+
+impl Flavour {
+    pub fn new(name: impl Into<String>) -> Flavour {
+        Flavour {
+            name: name.into(),
+            requirements: FlavourRequirements::default(),
+            energy: None,
+        }
+    }
+
+    pub fn with_requirements(mut self, req: FlavourRequirements) -> Flavour {
+        self.requirements = req;
+        self
+    }
+}
+
+/// Service-level requirements ℛ (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceRequirements {
+    pub subnet: Subnet,
+    pub security: SecurityReqs,
+}
+
+impl Default for ServiceRequirements {
+    fn default() -> Self {
+        ServiceRequirements {
+            subnet: Subnet::Any,
+            security: SecurityReqs::default(),
+        }
+    }
+}
+
+/// A microservice with its flavours and requirement metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Service {
+    /// `componentID` — unique within the application.
+    pub id: String,
+    /// Human-readable functionality description.
+    pub description: String,
+    /// `mustDeploy` — optional services may be dropped under budget
+    /// pressure (graceful degradation, §2).
+    pub must_deploy: bool,
+    /// Available flavours, most preferred first (`flavoursOrder`).
+    pub flavours: Vec<Flavour>,
+    pub requirements: ServiceRequirements,
+    /// Batch-capable service: its execution may be postponed into a
+    /// low-carbon window (TimeShift extension — the paper's §6 future
+    /// work on batch-processing components).
+    pub batch: bool,
+}
+
+impl Service {
+    pub fn new(id: impl Into<String>) -> Service {
+        Service {
+            id: id.into(),
+            description: String::new(),
+            must_deploy: true,
+            flavours: Vec::new(),
+            requirements: ServiceRequirements::default(),
+            batch: false,
+        }
+    }
+
+    pub fn flavour(&self, name: &str) -> Option<&Flavour> {
+        self.flavours.iter().find(|f| f.name == name)
+    }
+
+    pub fn flavour_mut(&mut self, name: &str) -> Option<&mut Flavour> {
+        self.flavours.iter_mut().find(|f| f.name == name)
+    }
+}
+
+/// Communication-level QoS requirements (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CommQoS {
+    /// Maximum tolerated latency in milliseconds (0 = unconstrained).
+    pub max_latency_ms: f64,
+    /// Minimum availability of the channel (0 = unconstrained).
+    pub availability: f64,
+}
+
+/// A directed communication link `from -> to` between two services.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommLink {
+    pub from: String,
+    pub to: String,
+    pub qos: CommQoS,
+    /// Mean communication energy per window in kWh, per source flavour
+    /// (Eq. 2) — `(flavour name, kwh)`. Filled by the Energy Estimator.
+    pub energy: Vec<(String, f64)>,
+}
+
+impl CommLink {
+    pub fn new(from: impl Into<String>, to: impl Into<String>) -> CommLink {
+        CommLink {
+            from: from.into(),
+            to: to.into(),
+            qos: CommQoS::default(),
+            energy: Vec::new(),
+        }
+    }
+
+    pub fn energy_for(&self, flavour: &str) -> Option<f64> {
+        self.energy
+            .iter()
+            .find(|(f, _)| f == flavour)
+            .map(|(_, e)| *e)
+    }
+}
+
+/// The Application Description 𝒜.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Application {
+    pub name: String,
+    pub services: Vec<Service>,
+    pub links: Vec<CommLink>,
+}
+
+impl Application {
+    pub fn new(name: impl Into<String>) -> Application {
+        Application {
+            name: name.into(),
+            services: Vec::new(),
+            links: Vec::new(),
+        }
+    }
+
+    pub fn service(&self, id: &str) -> Option<&Service> {
+        self.services.iter().find(|s| s.id == id)
+    }
+
+    pub fn service_mut(&mut self, id: &str) -> Option<&mut Service> {
+        self.services.iter_mut().find(|s| s.id == id)
+    }
+
+    pub fn link_mut(&mut self, from: &str, to: &str) -> Option<&mut CommLink> {
+        self.links
+            .iter_mut()
+            .find(|l| l.from == from && l.to == to)
+    }
+
+    /// Total number of (service, flavour) rows — the R dimension of the
+    /// analytics tensor.
+    pub fn flavour_rows(&self) -> usize {
+        self.services.iter().map(|s| s.flavours.len()).sum()
+    }
+
+    /// Enumerate (service, flavour) pairs in deterministic order. This
+    /// order defines the row index mapping shared with the analytics
+    /// backends.
+    pub fn rows(&self) -> Vec<(&Service, &Flavour)> {
+        self.services
+            .iter()
+            .flat_map(|s| s.flavours.iter().map(move |f| (s, f)))
+            .collect()
+    }
+
+    /// Validate structural invariants (unique ids, links reference known
+    /// services, at least one flavour per service).
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for s in &self.services {
+            if !seen.insert(&s.id) {
+                return Err(Error::Config(format!("duplicate service id '{}'", s.id)));
+            }
+            if s.flavours.is_empty() {
+                return Err(Error::Config(format!("service '{}' has no flavours", s.id)));
+            }
+            let mut fl = std::collections::HashSet::new();
+            for f in &s.flavours {
+                if !fl.insert(&f.name) {
+                    return Err(Error::Config(format!(
+                        "duplicate flavour '{}' in service '{}'",
+                        f.name, s.id
+                    )));
+                }
+            }
+        }
+        for l in &self.links {
+            if self.service(&l.from).is_none() || self.service(&l.to).is_none() {
+                return Err(Error::Config(format!(
+                    "link {} -> {} references unknown service",
+                    l.from, l.to
+                )));
+            }
+            if l.from == l.to {
+                return Err(Error::Config(format!("self-link on '{}'", l.from)));
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // JSON (de)serialization
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("name", Value::from(self.name.clone())),
+            (
+                "services",
+                Value::array(self.services.iter().map(service_to_json).collect()),
+            ),
+            (
+                "links",
+                Value::array(self.links.iter().map(link_to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Application> {
+        let mut app = Application::new(v.str_field("name")?);
+        for s in v.array_field("services")? {
+            app.services.push(service_from_json(s)?);
+        }
+        if let Some(links) = v.get("links") {
+            for l in links
+                .as_array()
+                .ok_or_else(|| Error::Json("links is not an array".into()))?
+            {
+                app.links.push(link_from_json(l)?);
+            }
+        }
+        app.validate()?;
+        Ok(app)
+    }
+}
+
+fn service_to_json(s: &Service) -> Value {
+    Value::object(vec![
+        ("componentID", Value::from(s.id.clone())),
+        ("description", Value::from(s.description.clone())),
+        ("mustDeploy", Value::from(s.must_deploy)),
+        ("batch", Value::from(s.batch)),
+        (
+            "flavours",
+            Value::array(s.flavours.iter().map(flavour_to_json).collect()),
+        ),
+        ("subnet", Value::from(s.requirements.subnet.as_str())),
+        (
+            "security",
+            Value::object(vec![
+                ("firewall", Value::from(s.requirements.security.firewall)),
+                ("ssl", Value::from(s.requirements.security.ssl)),
+                ("encryption", Value::from(s.requirements.security.encryption)),
+            ]),
+        ),
+    ])
+}
+
+fn service_from_json(v: &Value) -> Result<Service> {
+    let mut s = Service::new(v.str_field("componentID")?);
+    if let Some(d) = v.get("description") {
+        s.description = d.as_str().unwrap_or("").to_string();
+    }
+    s.must_deploy = v.get("mustDeploy").and_then(|b| b.as_bool()).unwrap_or(true);
+    s.batch = v.get("batch").and_then(|b| b.as_bool()).unwrap_or(false);
+    for f in v.array_field("flavours")? {
+        s.flavours.push(flavour_from_json(f)?);
+    }
+    if let Some(sub) = v.get("subnet") {
+        s.requirements.subnet = Subnet::parse(sub.as_str().unwrap_or("any"))?;
+    }
+    if let Some(sec) = v.get("security") {
+        s.requirements.security = SecurityReqs {
+            firewall: sec.get("firewall").and_then(|b| b.as_bool()).unwrap_or(false),
+            ssl: sec.get("ssl").and_then(|b| b.as_bool()).unwrap_or(false),
+            encryption: sec
+                .get("encryption")
+                .and_then(|b| b.as_bool())
+                .unwrap_or(false),
+        };
+    }
+    Ok(s)
+}
+
+fn flavour_to_json(f: &Flavour) -> Value {
+    let mut v = Value::object(vec![
+        ("name", Value::from(f.name.clone())),
+        ("cpu", Value::from(f.requirements.cpu)),
+        ("ramGB", Value::from(f.requirements.ram_gb)),
+        ("storageGB", Value::from(f.requirements.storage_gb)),
+        ("availability", Value::from(f.requirements.availability)),
+    ]);
+    if let Some(e) = f.energy {
+        v.set(
+            "energy",
+            Value::object(vec![
+                ("kwh", Value::from(e.kwh)),
+                ("samples", Value::from(e.samples as f64)),
+            ]),
+        );
+    }
+    v
+}
+
+fn flavour_from_json(v: &Value) -> Result<Flavour> {
+    let mut f = Flavour::new(v.str_field("name")?);
+    f.requirements = FlavourRequirements {
+        cpu: v.get("cpu").and_then(|x| x.as_f64()).unwrap_or(0.5),
+        ram_gb: v.get("ramGB").and_then(|x| x.as_f64()).unwrap_or(0.5),
+        storage_gb: v.get("storageGB").and_then(|x| x.as_f64()).unwrap_or(1.0),
+        availability: v.get("availability").and_then(|x| x.as_f64()).unwrap_or(0.0),
+    };
+    if let Some(e) = v.get("energy") {
+        f.energy = Some(EnergyProfile {
+            kwh: e.f64_field("kwh")?,
+            samples: e.get("samples").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+        });
+    }
+    Ok(f)
+}
+
+fn link_to_json(l: &CommLink) -> Value {
+    Value::object(vec![
+        ("from", Value::from(l.from.clone())),
+        ("to", Value::from(l.to.clone())),
+        ("maxLatencyMs", Value::from(l.qos.max_latency_ms)),
+        ("availability", Value::from(l.qos.availability)),
+        (
+            "energy",
+            Value::object(
+                l.energy
+                    .iter()
+                    .map(|(f, e)| (f.clone(), Value::from(*e)))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn link_from_json(v: &Value) -> Result<CommLink> {
+    let mut l = CommLink::new(v.str_field("from")?, v.str_field("to")?);
+    l.qos.max_latency_ms = v.get("maxLatencyMs").and_then(|x| x.as_f64()).unwrap_or(0.0);
+    l.qos.availability = v.get("availability").and_then(|x| x.as_f64()).unwrap_or(0.0);
+    if let Some(Value::Object(pairs)) = v.get("energy") {
+        for (f, e) in pairs {
+            l.energy.push((
+                f.clone(),
+                e.as_f64()
+                    .ok_or_else(|| Error::Json("link energy is not a number".into()))?,
+            ));
+        }
+    }
+    Ok(l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_app() -> Application {
+        let mut app = Application::new("demo");
+        let mut s1 = Service::new("frontend");
+        s1.description = "web UI".into();
+        s1.flavours = vec![Flavour::new("large"), Flavour::new("tiny")];
+        s1.requirements.subnet = Subnet::Public;
+        let mut s2 = Service::new("cart");
+        s2.must_deploy = false;
+        s2.flavours = vec![Flavour::new("tiny")];
+        app.services = vec![s1, s2];
+        let mut link = CommLink::new("frontend", "cart");
+        link.energy.push(("large".into(), 0.002));
+        app.links = vec![link];
+        app
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let app = sample_app();
+        let back = Application::from_json(&app.to_json()).unwrap();
+        assert_eq!(app, back);
+    }
+
+    #[test]
+    fn validate_rejects_duplicates() {
+        let mut app = sample_app();
+        app.services.push(Service::new("frontend"));
+        app.services.last_mut().unwrap().flavours.push(Flavour::new("x"));
+        assert!(app.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_link_target() {
+        let mut app = sample_app();
+        app.links.push(CommLink::new("frontend", "ghost"));
+        assert!(app.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_self_link() {
+        let mut app = sample_app();
+        app.links.push(CommLink::new("cart", "cart"));
+        assert!(app.validate().is_err());
+    }
+
+    #[test]
+    fn rows_enumeration_order() {
+        let app = sample_app();
+        let rows = app.rows();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].0.id, "frontend");
+        assert_eq!(rows[0].1.name, "large");
+        assert_eq!(rows[2].0.id, "cart");
+        assert_eq!(app.flavour_rows(), 3);
+    }
+
+    #[test]
+    fn flavour_preference_is_vector_order() {
+        let app = sample_app();
+        let fe = app.service("frontend").unwrap();
+        assert_eq!(fe.flavours[0].name, "large"); // most preferred first
+    }
+}

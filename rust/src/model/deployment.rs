@@ -1,0 +1,108 @@
+//! Deployment plan types: the scheduler's output — a placement
+//! `(service, flavour) -> node` for every deployed service, plus the list
+//! of optional services that were dropped (graceful degradation).
+
+use crate::jsonio::Value;
+use crate::Result;
+
+/// One service placement decision.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub service: String,
+    pub flavour: String,
+    pub node: String,
+}
+
+/// A complete deployment plan.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DeploymentPlan {
+    pub placements: Vec<Placement>,
+    /// Optional services excluded from this plan.
+    pub dropped: Vec<String>,
+}
+
+impl DeploymentPlan {
+    pub fn placement(&self, service: &str) -> Option<&Placement> {
+        self.placements.iter().find(|p| p.service == service)
+    }
+
+    pub fn node_of(&self, service: &str) -> Option<&str> {
+        self.placement(service).map(|p| p.node.as_str())
+    }
+
+    pub fn is_deployed(&self, service: &str) -> bool {
+        self.placement(service).is_some()
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            (
+                "placements",
+                Value::array(
+                    self.placements
+                        .iter()
+                        .map(|p| {
+                            Value::object(vec![
+                                ("service", Value::from(p.service.clone())),
+                                ("flavour", Value::from(p.flavour.clone())),
+                                ("node", Value::from(p.node.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "dropped",
+                Value::array(self.dropped.iter().map(|d| Value::from(d.clone())).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<DeploymentPlan> {
+        let mut plan = DeploymentPlan::default();
+        for p in v.array_field("placements")? {
+            plan.placements.push(Placement {
+                service: p.str_field("service")?.to_string(),
+                flavour: p.str_field("flavour")?.to_string(),
+                node: p.str_field("node")?.to_string(),
+            });
+        }
+        if let Some(dropped) = v.get("dropped").and_then(|d| d.as_array()) {
+            for d in dropped {
+                if let Some(s) = d.as_str() {
+                    plan.dropped.push(s.to_string());
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_and_round_trip() {
+        let plan = DeploymentPlan {
+            placements: vec![
+                Placement {
+                    service: "frontend".into(),
+                    flavour: "large".into(),
+                    node: "france".into(),
+                },
+                Placement {
+                    service: "cart".into(),
+                    flavour: "tiny".into(),
+                    node: "spain".into(),
+                },
+            ],
+            dropped: vec!["recommendation".into()],
+        };
+        assert_eq!(plan.node_of("frontend"), Some("france"));
+        assert!(plan.is_deployed("cart"));
+        assert!(!plan.is_deployed("recommendation"));
+        let back = DeploymentPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, back);
+    }
+}

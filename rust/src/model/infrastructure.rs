@@ -1,0 +1,281 @@
+//! Infrastructure Description ℐ (§3.2): the cloud-continuum nodes where
+//! services may be deployed, each with `capabilities` and a `profile`
+//! (cost + carbon intensity). The `carbon` value is enriched by the
+//! [`crate::carbon::EnergyMixGatherer`] unless explicitly provided by the
+//! DevOps engineer (e.g. a solar-powered edge node).
+
+use super::application::Subnet;
+use crate::jsonio::Value;
+use crate::{Error, Result};
+
+/// Node capabilities (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Capabilities {
+    pub cpu: f64,
+    pub ram_gb: f64,
+    pub storage_gb: f64,
+    /// Inbound bandwidth, Gbit/s.
+    pub bandwidth_in: f64,
+    /// Outbound bandwidth, Gbit/s.
+    pub bandwidth_out: f64,
+    pub availability: f64,
+    pub firewall: bool,
+    pub ssl: bool,
+    pub encryption: bool,
+    pub subnet: Subnet,
+}
+
+impl Default for Capabilities {
+    fn default() -> Self {
+        Capabilities {
+            cpu: 16.0,
+            ram_gb: 64.0,
+            storage_gb: 500.0,
+            bandwidth_in: 10.0,
+            bandwidth_out: 10.0,
+            availability: 0.999,
+            firewall: true,
+            ssl: true,
+            encryption: true,
+            subnet: Subnet::Public,
+        }
+    }
+}
+
+/// Node profile metadata (§3.2): pricing and environmental footprint.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeProfile {
+    /// Cost per CPU-core-hour (arbitrary currency unit).
+    pub cost_per_cpu_hour: f64,
+    /// Carbon intensity in gCO2eq/kWh. `None` until enriched by the Energy
+    /// Mix Gatherer (or explicitly pinned by the engineer).
+    pub carbon: Option<f64>,
+}
+
+impl Default for NodeProfile {
+    fn default() -> Self {
+        NodeProfile {
+            cost_per_cpu_hour: 0.05,
+            carbon: None,
+        }
+    }
+}
+
+/// One infrastructure node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: String,
+    /// Grid region used for carbon-intensity lookup (e.g. "IT", "FR").
+    pub region: String,
+    pub capabilities: Capabilities,
+    pub profile: NodeProfile,
+}
+
+impl Node {
+    pub fn new(id: impl Into<String>, region: impl Into<String>) -> Node {
+        Node {
+            id: id.into(),
+            region: region.into(),
+            capabilities: Capabilities::default(),
+            profile: NodeProfile::default(),
+        }
+    }
+
+    /// Carbon intensity, defaulting to 0 when not yet enriched.
+    pub fn carbon(&self) -> f64 {
+        self.profile.carbon.unwrap_or(0.0)
+    }
+
+    /// Can this node satisfy a service's placement requirements?
+    /// (network placement + security; resource capacity is the scheduler's
+    /// job since it depends on co-located services).
+    pub fn placement_compatible(
+        &self,
+        req: &super::application::ServiceRequirements,
+    ) -> bool {
+        let subnet_ok = match req.subnet {
+            Subnet::Any => true,
+            s => s == self.capabilities.subnet,
+        };
+        let sec = &req.security;
+        subnet_ok
+            && (!sec.firewall || self.capabilities.firewall)
+            && (!sec.ssl || self.capabilities.ssl)
+            && (!sec.encryption || self.capabilities.encryption)
+    }
+}
+
+/// The Infrastructure Description ℐ.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Infrastructure {
+    pub name: String,
+    pub nodes: Vec<Node>,
+}
+
+impl Infrastructure {
+    pub fn new(name: impl Into<String>) -> Infrastructure {
+        Infrastructure {
+            name: name.into(),
+            nodes: Vec::new(),
+        }
+    }
+
+    pub fn node(&self, id: &str) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.id == id)
+    }
+
+    pub fn node_mut(&mut self, id: &str) -> Option<&mut Node> {
+        self.nodes.iter_mut().find(|n| n.id == id)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for n in &self.nodes {
+            if !seen.insert(&n.id) {
+                return Err(Error::Config(format!("duplicate node id '{}'", n.id)));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("name", Value::from(self.name.clone())),
+            (
+                "nodes",
+                Value::array(self.nodes.iter().map(node_to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Infrastructure> {
+        let mut infra = Infrastructure::new(v.str_field("name")?);
+        for n in v.array_field("nodes")? {
+            infra.nodes.push(node_from_json(n)?);
+        }
+        infra.validate()?;
+        Ok(infra)
+    }
+}
+
+fn node_to_json(n: &Node) -> Value {
+    let caps = &n.capabilities;
+    let mut profile = Value::object(vec![(
+        "costPerCpuHour",
+        Value::from(n.profile.cost_per_cpu_hour),
+    )]);
+    if let Some(c) = n.profile.carbon {
+        profile.set("carbon", Value::from(c));
+    }
+    Value::object(vec![
+        ("id", Value::from(n.id.clone())),
+        ("region", Value::from(n.region.clone())),
+        (
+            "capabilities",
+            Value::object(vec![
+                ("cpu", Value::from(caps.cpu)),
+                ("ramGB", Value::from(caps.ram_gb)),
+                ("storageGB", Value::from(caps.storage_gb)),
+                ("bandwidthIn", Value::from(caps.bandwidth_in)),
+                ("bandwidthOut", Value::from(caps.bandwidth_out)),
+                ("availability", Value::from(caps.availability)),
+                ("firewall", Value::from(caps.firewall)),
+                ("ssl", Value::from(caps.ssl)),
+                ("encryption", Value::from(caps.encryption)),
+                ("subnet", Value::from(caps.subnet.as_str())),
+            ]),
+        ),
+        ("profile", profile),
+    ])
+}
+
+fn node_from_json(v: &Value) -> Result<Node> {
+    let mut n = Node::new(v.str_field("id")?, v.get("region").and_then(|r| r.as_str()).unwrap_or(""));
+    if let Some(caps) = v.get("capabilities") {
+        let g = |k: &str, d: f64| caps.get(k).and_then(|x| x.as_f64()).unwrap_or(d);
+        let b = |k: &str, d: bool| caps.get(k).and_then(|x| x.as_bool()).unwrap_or(d);
+        n.capabilities = Capabilities {
+            cpu: g("cpu", 16.0),
+            ram_gb: g("ramGB", 64.0),
+            storage_gb: g("storageGB", 500.0),
+            bandwidth_in: g("bandwidthIn", 10.0),
+            bandwidth_out: g("bandwidthOut", 10.0),
+            availability: g("availability", 0.999),
+            firewall: b("firewall", true),
+            ssl: b("ssl", true),
+            encryption: b("encryption", true),
+            subnet: Subnet::parse(
+                caps.get("subnet").and_then(|s| s.as_str()).unwrap_or("public"),
+            )?,
+        };
+    }
+    if let Some(profile) = v.get("profile") {
+        n.profile.cost_per_cpu_hour = profile
+            .get("costPerCpuHour")
+            .and_then(|x| x.as_f64())
+            .unwrap_or(0.05);
+        n.profile.carbon = profile.get("carbon").and_then(|x| x.as_f64());
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::application::{SecurityReqs, ServiceRequirements};
+
+    fn sample_infra() -> Infrastructure {
+        let mut infra = Infrastructure::new("eu");
+        let mut n1 = Node::new("italy", "IT");
+        n1.profile.carbon = Some(335.0);
+        let mut n2 = Node::new("france", "FR");
+        n2.capabilities.subnet = Subnet::Private;
+        n2.capabilities.firewall = false;
+        infra.nodes = vec![n1, n2];
+        infra
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let infra = sample_infra();
+        let back = Infrastructure::from_json(&infra.to_json()).unwrap();
+        assert_eq!(infra, back);
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_nodes() {
+        let mut infra = sample_infra();
+        infra.nodes.push(Node::new("italy", "IT"));
+        assert!(infra.validate().is_err());
+    }
+
+    #[test]
+    fn placement_compatibility() {
+        let infra = sample_infra();
+        let italy = infra.node("italy").unwrap();
+        let france = infra.node("france").unwrap();
+
+        let mut req = ServiceRequirements::default();
+        assert!(italy.placement_compatible(&req));
+        assert!(france.placement_compatible(&req));
+
+        req.subnet = Subnet::Private;
+        assert!(!italy.placement_compatible(&req));
+        assert!(france.placement_compatible(&req));
+
+        req.subnet = Subnet::Any;
+        req.security = SecurityReqs {
+            firewall: true,
+            ssl: false,
+            encryption: false,
+        };
+        assert!(italy.placement_compatible(&req));
+        assert!(!france.placement_compatible(&req)); // firewall disabled
+    }
+
+    #[test]
+    fn carbon_defaults_to_zero() {
+        let n = Node::new("x", "XX");
+        assert_eq!(n.carbon(), 0.0);
+    }
+}

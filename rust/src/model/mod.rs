@@ -1,0 +1,18 @@
+//! Domain model: the paper's two main artefacts — the Application
+//! Description 𝒜 (+ requirements ℛ) and the Infrastructure Description ℐ
+//! (§3.2) — plus the deployment-plan types the scheduler produces.
+//!
+//! All types round-trip through the in-tree JSON codec so that scenario
+//! configurations can be provided as files (the paper publishes its
+//! configurations the same way).
+
+pub mod application;
+pub mod deployment;
+pub mod infrastructure;
+
+pub use application::{
+    Application, CommLink, CommQoS, EnergyProfile, Flavour, FlavourRequirements, SecurityReqs,
+    Service, ServiceRequirements, Subnet,
+};
+pub use deployment::{DeploymentPlan, Placement};
+pub use infrastructure::{Capabilities, Infrastructure, Node, NodeProfile};

@@ -1,0 +1,75 @@
+//! Metric sample types.
+//!
+//! Units follow the real exporters: Kepler reports container energy in
+//! **joules**; Istio reports request counts and transferred **bytes**.
+//! Conversions to kWh/GB happen in the Energy Estimator (Eq. 1, Eq. 13).
+
+/// One energy observation for a (service, flavour) over a scrape window —
+/// the Kepler-equivalent signal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergySample {
+    /// Sample timestamp (end of the scrape window), seconds.
+    pub t: f64,
+    pub service: String,
+    pub flavour: String,
+    /// Energy consumed during the window, joules.
+    pub joules: f64,
+}
+
+/// One traffic observation for a directed service pair over a scrape
+/// window — the Istio-equivalent signal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficSample {
+    /// Sample timestamp (end of the scrape window), seconds.
+    pub t: f64,
+    /// Source service and its active flavour during the window.
+    pub from: String,
+    pub from_flavour: String,
+    /// Destination service (flavour-independent, §4.1: transmission cost
+    /// does not depend on the receiver's flavour).
+    pub to: String,
+    /// Requests during the window.
+    pub requests: f64,
+    /// Bytes transferred during the window.
+    pub bytes: f64,
+}
+
+impl EnergySample {
+    /// Energy of the window in kWh (1 kWh = 3.6e6 J).
+    pub fn kwh(&self) -> f64 {
+        self.joules / 3.6e6
+    }
+}
+
+impl TrafficSample {
+    /// Data volume of the window in GB (decimal, as in the Aslan model).
+    pub fn gb(&self) -> f64 {
+        self.bytes / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions() {
+        let e = EnergySample {
+            t: 0.0,
+            service: "s".into(),
+            flavour: "f".into(),
+            joules: 3.6e6,
+        };
+        assert!((e.kwh() - 1.0).abs() < 1e-12);
+
+        let tr = TrafficSample {
+            t: 0.0,
+            from: "a".into(),
+            from_flavour: "f".into(),
+            to: "b".into(),
+            requests: 10.0,
+            bytes: 2.5e9,
+        };
+        assert!((tr.gb() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,22 @@
+//! Monitoring substrate (§5.2): the stand-in for the paper's
+//! Kepler + Istio + Prometheus stack.
+//!
+//! * [`metrics`] — sample types: per-(service, flavour) energy samples
+//!   (Kepler exports joules per container) and per-link traffic samples
+//!   (Istio exports request volume and request size).
+//! * [`store`] — an in-memory time-series store with windowed range
+//!   queries, the surface the Energy Estimator consumes.
+//! * [`prometheus`] — a Prometheus text exposition-format emitter/parser,
+//!   so stores can be scraped/ingested exactly like the real pipeline.
+//! * [`simulator`] — the workload simulator that replaces the Kubernetes
+//!   testbed: it generates metric streams whose Eq. 1/2 averages converge
+//!   to configured ground-truth profiles (see DESIGN.md §3 Substitutions).
+
+pub mod metrics;
+pub mod prometheus;
+pub mod simulator;
+pub mod store;
+
+pub use metrics::{EnergySample, TrafficSample};
+pub use simulator::{GroundTruth, WorkloadSimulator};
+pub use store::MetricStore;

@@ -1,0 +1,280 @@
+//! Prometheus text exposition format: emitter + parser.
+//!
+//! The real pipeline scrapes Kepler and Istio through Prometheus; this
+//! module reproduces that interchange so the store can be serialized to and
+//! ingested from the exact wire format:
+//!
+//! ```text
+//! # TYPE greengen_energy_joules gauge
+//! greengen_energy_joules{service="frontend",flavour="large"} 712.5 3600000
+//! # TYPE greengen_traffic_bytes gauge
+//! greengen_traffic_bytes{from="frontend",from_flavour="large",to="cart"} 1.2e7 3600000
+//! greengen_traffic_requests{from="frontend",from_flavour="large",to="cart"} 350 3600000
+//! ```
+//!
+//! Timestamps follow the exposition convention (milliseconds).
+
+use super::metrics::{EnergySample, TrafficSample};
+use super::store::MetricStore;
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+const ENERGY_METRIC: &str = "greengen_energy_joules";
+const TRAFFIC_BYTES_METRIC: &str = "greengen_traffic_bytes";
+const TRAFFIC_REQS_METRIC: &str = "greengen_traffic_requests";
+
+/// Render a store (samples in `(from, to]`) in exposition format.
+pub fn render(store: &MetricStore, from: f64, to: f64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("# TYPE {ENERGY_METRIC} gauge\n"));
+    for s in store.energy_range(from, to) {
+        out.push_str(&format!(
+            "{ENERGY_METRIC}{{service=\"{}\",flavour=\"{}\"}} {} {}\n",
+            escape(&s.service),
+            escape(&s.flavour),
+            s.joules,
+            (s.t * 1000.0) as i64
+        ));
+    }
+    out.push_str(&format!("# TYPE {TRAFFIC_BYTES_METRIC} gauge\n"));
+    out.push_str(&format!("# TYPE {TRAFFIC_REQS_METRIC} gauge\n"));
+    for s in store.traffic_range(from, to) {
+        let labels = format!(
+            "{{from=\"{}\",from_flavour=\"{}\",to=\"{}\"}}",
+            escape(&s.from),
+            escape(&s.from_flavour),
+            escape(&s.to)
+        );
+        out.push_str(&format!(
+            "{TRAFFIC_BYTES_METRIC}{labels} {} {}\n",
+            s.bytes,
+            (s.t * 1000.0) as i64
+        ));
+        out.push_str(&format!(
+            "{TRAFFIC_REQS_METRIC}{labels} {} {}\n",
+            s.requests,
+            (s.t * 1000.0) as i64
+        ));
+    }
+    out
+}
+
+/// Ingest an exposition document into a store. Traffic bytes/requests
+/// lines with identical labels+timestamp are joined into one sample.
+pub fn ingest(store: &mut MetricStore, text: &str) -> Result<()> {
+    // (labels, t) -> (requests, bytes)
+    let mut pending: HashMap<(String, String, String, i64), (Option<f64>, Option<f64>)> =
+        HashMap::new();
+
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parsed = parse_line(line)
+            .map_err(|e| Error::Other(format!("exposition line {}: {e}", lineno + 1)))?;
+        match parsed.metric.as_str() {
+            ENERGY_METRIC => {
+                store.push_energy(EnergySample {
+                    t: parsed.timestamp_ms as f64 / 1000.0,
+                    service: parsed.label("service")?,
+                    flavour: parsed.label("flavour")?,
+                    joules: parsed.value,
+                });
+            }
+            TRAFFIC_BYTES_METRIC | TRAFFIC_REQS_METRIC => {
+                let key = (
+                    parsed.label("from")?,
+                    parsed.label("from_flavour")?,
+                    parsed.label("to")?,
+                    parsed.timestamp_ms,
+                );
+                let entry = pending.entry(key).or_insert((None, None));
+                if parsed.metric == TRAFFIC_REQS_METRIC {
+                    entry.0 = Some(parsed.value);
+                } else {
+                    entry.1 = Some(parsed.value);
+                }
+            }
+            other => {
+                return Err(Error::Other(format!(
+                    "exposition line {}: unknown metric '{other}'",
+                    lineno + 1
+                )))
+            }
+        }
+    }
+
+    for ((from, from_flavour, to, t_ms), (requests, bytes)) in pending {
+        store.push_traffic(TrafficSample {
+            t: t_ms as f64 / 1000.0,
+            from,
+            from_flavour,
+            to,
+            requests: requests.unwrap_or(0.0),
+            bytes: bytes.unwrap_or(0.0),
+        });
+    }
+    Ok(())
+}
+
+struct ParsedLine {
+    metric: String,
+    labels: Vec<(String, String)>,
+    value: f64,
+    timestamp_ms: i64,
+}
+
+impl ParsedLine {
+    fn label(&self, name: &str) -> Result<String> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.clone())
+            .ok_or_else(|| Error::Other(format!("missing label '{name}'")))
+    }
+}
+
+fn parse_line(line: &str) -> std::result::Result<ParsedLine, String> {
+    let brace = line.find('{').ok_or("missing '{'")?;
+    let metric = line[..brace].to_string();
+    let close = line.find('}').ok_or("missing '}'")?;
+    let labels = parse_labels(&line[brace + 1..close])?;
+    let rest: Vec<&str> = line[close + 1..].split_whitespace().collect();
+    if rest.len() != 2 {
+        return Err(format!("expected '<value> <timestamp>', got '{}'", &line[close + 1..]));
+    }
+    let value: f64 = rest[0].parse().map_err(|_| format!("bad value '{}'", rest[0]))?;
+    let timestamp_ms: i64 = rest[1]
+        .parse()
+        .map_err(|_| format!("bad timestamp '{}'", rest[1]))?;
+    Ok(ParsedLine {
+        metric,
+        labels,
+        value,
+        timestamp_ms,
+    })
+}
+
+fn parse_labels(text: &str) -> std::result::Result<Vec<(String, String)>, String> {
+    let mut labels = Vec::new();
+    let mut rest = text;
+    while !rest.is_empty() {
+        let eq = rest.find('=').ok_or("missing '=' in labels")?;
+        let key = rest[..eq].trim().to_string();
+        let after = &rest[eq + 1..];
+        if !after.starts_with('"') {
+            return Err("label value not quoted".into());
+        }
+        // find closing quote honouring backslash escapes
+        let bytes = after.as_bytes();
+        let mut i = 1;
+        let mut value = String::new();
+        loop {
+            if i >= bytes.len() {
+                return Err("unterminated label value".into());
+            }
+            match bytes[i] {
+                b'"' => break,
+                b'\\' => {
+                    i += 1;
+                    if i >= bytes.len() {
+                        return Err("bad escape".into());
+                    }
+                    match bytes[i] {
+                        b'"' => value.push('"'),
+                        b'\\' => value.push('\\'),
+                        b'n' => value.push('\n'),
+                        c => return Err(format!("bad escape '\\{}'", c as char)),
+                    }
+                }
+                c => value.push(c as char),
+            }
+            i += 1;
+        }
+        labels.push((key, value));
+        rest = after[i + 1..].trim_start_matches(',').trim_start();
+    }
+    Ok(labels)
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let mut store = MetricStore::new();
+        store.push_energy(EnergySample {
+            t: 3600.0,
+            service: "frontend".into(),
+            flavour: "large".into(),
+            joules: 712.5,
+        });
+        store.push_traffic(TrafficSample {
+            t: 3600.0,
+            from: "frontend".into(),
+            from_flavour: "large".into(),
+            to: "cart".into(),
+            requests: 350.0,
+            bytes: 1.2e7,
+        });
+        let text = render(&store, 0.0, 1e9);
+        let mut back = MetricStore::new();
+        ingest(&mut back, &text).unwrap();
+        assert_eq!(back.energy_len(), 1);
+        assert_eq!(back.traffic_len(), 1);
+        let e = &back.energy_range(0.0, 1e9)[0];
+        assert_eq!(e.service, "frontend");
+        assert_eq!(e.joules, 712.5);
+        let t = &back.traffic_range(0.0, 1e9)[0];
+        assert_eq!(t.requests, 350.0);
+        assert_eq!(t.bytes, 1.2e7);
+    }
+
+    #[test]
+    fn label_escaping_round_trips() {
+        let mut store = MetricStore::new();
+        store.push_energy(EnergySample {
+            t: 1.0,
+            service: "we\"ird\\svc".into(),
+            flavour: "a\nb".into(),
+            joules: 1.0,
+        });
+        let text = render(&store, 0.0, 10.0);
+        let mut back = MetricStore::new();
+        ingest(&mut back, &text).unwrap();
+        let e = &back.energy_range(0.0, 10.0)[0];
+        assert_eq!(e.service, "we\"ird\\svc");
+        assert_eq!(e.flavour, "a\nb");
+    }
+
+    #[test]
+    fn rejects_unknown_metric() {
+        let mut store = MetricStore::new();
+        let err = ingest(&mut store, "bogus{a=\"b\"} 1 1000\n");
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let mut store = MetricStore::new();
+        assert!(ingest(&mut store, "greengen_energy_joules no-labels 1 1").is_err());
+        assert!(ingest(
+            &mut store,
+            "greengen_energy_joules{service=\"a\",flavour=\"b\"} x 1"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let mut store = MetricStore::new();
+        ingest(&mut store, "# HELP foo\n\n# TYPE bar gauge\n").unwrap();
+        assert_eq!(store.energy_len(), 0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Workload simulator — the substitute for the paper's Kubernetes
+//! deployment of Online Boutique (DESIGN.md §3 Substitutions).
+//!
+//! The simulator holds a *ground truth*: the mean per-window energy of
+//! every (service, flavour) and the mean request volume/size of every
+//! communication edge. Each simulated scrape window emits samples around
+//! those means with configurable noise and a diurnal load factor, so the
+//! Energy Estimator's Eq. 1/2 averages converge to the ground truth —
+//! statistically the same input the authors' monitoring stack produced.
+
+use super::metrics::{EnergySample, TrafficSample};
+use super::store::MetricStore;
+use crate::util::Rng;
+
+/// Ground-truth behaviour of one application under simulation.
+#[derive(Debug, Clone, Default)]
+pub struct GroundTruth {
+    /// Mean energy per scrape window, Wh, keyed by (service, flavour).
+    pub energy_wh: Vec<((String, String), f64)>,
+    /// Mean traffic per scrape window keyed by (from, from_flavour, to):
+    /// (requests per window, bytes per request).
+    pub traffic: Vec<((String, String, String), (f64, f64))>,
+}
+
+impl GroundTruth {
+    pub fn energy_of(&self, service: &str, flavour: &str) -> Option<f64> {
+        self.energy_wh
+            .iter()
+            .find(|((s, f), _)| s == service && f == flavour)
+            .map(|(_, wh)| *wh)
+    }
+
+    pub fn set_energy(&mut self, service: &str, flavour: &str, wh: f64) {
+        if let Some(slot) = self
+            .energy_wh
+            .iter_mut()
+            .find(|((s, f), _)| s == service && f == flavour)
+        {
+            slot.1 = wh;
+        } else {
+            self.energy_wh
+                .push(((service.to_string(), flavour.to_string()), wh));
+        }
+    }
+
+    pub fn add_traffic(
+        &mut self,
+        from: &str,
+        from_flavour: &str,
+        to: &str,
+        requests_per_window: f64,
+        bytes_per_request: f64,
+    ) {
+        self.traffic.push((
+            (from.to_string(), from_flavour.to_string(), to.to_string()),
+            (requests_per_window, bytes_per_request),
+        ));
+    }
+
+    /// Scale all traffic volumes (Scenario 5: ×15'000 data exchange).
+    pub fn scale_traffic(&mut self, factor: f64) {
+        for (_, (reqs, _)) in &mut self.traffic {
+            *reqs *= factor;
+        }
+    }
+}
+
+/// Simulator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimulatorConfig {
+    /// Scrape window length, seconds (default 1 h, like the paper's
+    /// requests-per-hour granularity).
+    pub window: f64,
+    /// Relative noise on each sample (lognormal-ish, default 10%).
+    pub noise: f64,
+    /// Amplitude of the diurnal load modulation (0..1, default 0.3:
+    /// ±30% around the mean across the day).
+    pub diurnal: f64,
+}
+
+impl Default for SimulatorConfig {
+    fn default() -> Self {
+        SimulatorConfig {
+            window: 3600.0,
+            noise: 0.10,
+            diurnal: 0.30,
+        }
+    }
+}
+
+/// The workload simulator.
+pub struct WorkloadSimulator {
+    pub truth: GroundTruth,
+    pub config: SimulatorConfig,
+    rng: Rng,
+}
+
+impl WorkloadSimulator {
+    pub fn new(truth: GroundTruth, seed: u64) -> Self {
+        WorkloadSimulator {
+            truth,
+            config: SimulatorConfig::default(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn with_config(mut self, config: SimulatorConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Diurnal load factor: 1 ± diurnal, peaking at 20:00 (e-commerce
+    /// evening peak), lowest around 05:00.
+    fn load_factor(&self, t: f64) -> f64 {
+        let day_frac = t.rem_euclid(86_400.0) / 86_400.0;
+        let phase = 2.0 * std::f64::consts::PI * (day_frac - 20.0 / 24.0);
+        1.0 + self.config.diurnal * phase.cos()
+    }
+
+    /// Emit one scrape window ending at time `t` into `store`.
+    pub fn scrape_into(&mut self, store: &mut MetricStore, t: f64) {
+        let load = self.load_factor(t);
+        let noise = self.config.noise;
+        for ((service, flavour), wh) in self.truth.energy_wh.clone() {
+            let jitter = 1.0 + noise * (self.rng.f64() * 2.0 - 1.0);
+            let wh_obs = wh * load * jitter;
+            store.push_energy(EnergySample {
+                t,
+                service,
+                flavour,
+                joules: wh_obs * 3600.0, // Wh -> J
+            });
+        }
+        for ((from, from_flavour, to), (reqs, bytes_per_req)) in self.truth.traffic.clone() {
+            let jitter = 1.0 + noise * (self.rng.f64() * 2.0 - 1.0);
+            let requests = (reqs * load * jitter).max(0.0);
+            store.push_traffic(TrafficSample {
+                t,
+                from,
+                from_flavour,
+                to,
+                requests,
+                bytes: requests * bytes_per_req,
+            });
+        }
+    }
+
+    /// Run the simulator for `windows` consecutive scrape windows starting
+    /// at `start`, returning the populated store.
+    pub fn run(&mut self, start: f64, windows: usize) -> MetricStore {
+        let mut store = MetricStore::new();
+        for i in 0..windows {
+            let t = start + (i as f64 + 1.0) * self.config.window;
+            self.scrape_into(&mut store, t);
+        }
+        store
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn truth() -> GroundTruth {
+        let mut g = GroundTruth::default();
+        g.set_energy("frontend", "large", 1981.0);
+        g.set_energy("frontend", "tiny", 1189.0);
+        g.add_traffic("frontend", "large", "cart", 1000.0, 5e4);
+        g
+    }
+
+    #[test]
+    fn averages_converge_to_ground_truth() {
+        let mut sim = WorkloadSimulator::new(truth(), 42).with_config(SimulatorConfig {
+            window: 3600.0,
+            noise: 0.10,
+            diurnal: 0.30,
+        });
+        // 10 full days so the diurnal factor averages out.
+        let store = sim.run(0.0, 240);
+        let samples = store.energy_range(0.0, f64::INFINITY);
+        let fe: Vec<f64> = samples
+            .iter()
+            .filter(|s| s.service == "frontend" && s.flavour == "large")
+            .map(|s| s.joules / 3600.0)
+            .collect();
+        assert_eq!(fe.len(), 240);
+        let mean = fe.iter().sum::<f64>() / fe.len() as f64;
+        assert!(
+            (mean - 1981.0).abs() / 1981.0 < 0.03,
+            "mean {mean} vs 1981"
+        );
+    }
+
+    #[test]
+    fn diurnal_modulation_visible() {
+        let mut sim = WorkloadSimulator::new(truth(), 1).with_config(SimulatorConfig {
+            window: 3600.0,
+            noise: 0.0,
+            diurnal: 0.3,
+        });
+        let store = sim.run(0.0, 24);
+        let js: Vec<f64> = store
+            .energy_range(0.0, f64::INFINITY)
+            .iter()
+            .filter(|s| s.flavour == "large")
+            .map(|s| s.joules)
+            .collect();
+        let max = js.iter().cloned().fold(f64::MIN, f64::max);
+        let min = js.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min > 1.5, "max {max} min {min}");
+    }
+
+    #[test]
+    fn traffic_bytes_track_requests() {
+        let mut sim = WorkloadSimulator::new(truth(), 3);
+        let store = sim.run(0.0, 5);
+        for s in store.traffic_range(0.0, f64::INFINITY) {
+            assert!((s.bytes - s.requests * 5e4).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn scale_traffic_scenario5() {
+        let mut g = truth();
+        g.scale_traffic(15_000.0);
+        assert_eq!(g.traffic[0].1 .0, 15_000_000.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = WorkloadSimulator::new(truth(), 99);
+        let mut b = WorkloadSimulator::new(truth(), 99);
+        let sa = a.run(0.0, 3);
+        let sb = b.run(0.0, 3);
+        let ea = sa.energy_range(0.0, 1e9);
+        let eb = sb.energy_range(0.0, 1e9);
+        assert_eq!(ea.len(), eb.len());
+        for (x, y) in ea.iter().zip(eb) {
+            assert_eq!(x.joules, y.joules);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! In-memory time-series store with windowed range queries — the
+//! Prometheus-equivalent query surface the Energy Estimator consumes.
+//!
+//! Samples are kept sorted by timestamp (appends of monotone streams are
+//! O(1); out-of-order inserts fall back to a binary-search insert).
+
+use super::metrics::{EnergySample, TrafficSample};
+
+/// The metric store.
+#[derive(Debug, Default, Clone)]
+pub struct MetricStore {
+    energy: Vec<EnergySample>,
+    traffic: Vec<TrafficSample>,
+}
+
+impl MetricStore {
+    pub fn new() -> Self {
+        MetricStore::default()
+    }
+
+    pub fn push_energy(&mut self, sample: EnergySample) {
+        let pos = if self
+            .energy
+            .last()
+            .map(|last| last.t <= sample.t)
+            .unwrap_or(true)
+        {
+            self.energy.len()
+        } else {
+            self.energy.partition_point(|s| s.t <= sample.t)
+        };
+        self.energy.insert(pos, sample);
+    }
+
+    pub fn push_traffic(&mut self, sample: TrafficSample) {
+        let pos = if self
+            .traffic
+            .last()
+            .map(|last| last.t <= sample.t)
+            .unwrap_or(true)
+        {
+            self.traffic.len()
+        } else {
+            self.traffic.partition_point(|s| s.t <= sample.t)
+        };
+        self.traffic.insert(pos, sample);
+    }
+
+    pub fn energy_len(&self) -> usize {
+        self.energy.len()
+    }
+
+    pub fn traffic_len(&self) -> usize {
+        self.traffic.len()
+    }
+
+    /// Energy samples with `from < t <= to`.
+    pub fn energy_range(&self, from: f64, to: f64) -> &[EnergySample] {
+        let lo = self.energy.partition_point(|s| s.t <= from);
+        let hi = self.energy.partition_point(|s| s.t <= to);
+        &self.energy[lo..hi]
+    }
+
+    /// Traffic samples with `from < t <= to`.
+    pub fn traffic_range(&self, from: f64, to: f64) -> &[TrafficSample] {
+        let lo = self.traffic.partition_point(|s| s.t <= from);
+        let hi = self.traffic.partition_point(|s| s.t <= to);
+        &self.traffic[lo..hi]
+    }
+
+    /// Latest sample timestamp across both series (0 when empty).
+    pub fn horizon(&self) -> f64 {
+        let e = self.energy.last().map(|s| s.t).unwrap_or(0.0);
+        let t = self.traffic.last().map(|s| s.t).unwrap_or(0.0);
+        e.max(t)
+    }
+
+    /// Drop samples older than `cutoff` (retention, keeps the adaptive
+    /// loop's memory bounded).
+    pub fn compact(&mut self, cutoff: f64) {
+        self.energy.retain(|s| s.t > cutoff);
+        self.traffic.retain(|s| s.t > cutoff);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(t: f64) -> EnergySample {
+        EnergySample {
+            t,
+            service: "s".into(),
+            flavour: "f".into(),
+            joules: t,
+        }
+    }
+
+    fn tr(t: f64) -> TrafficSample {
+        TrafficSample {
+            t,
+            from: "a".into(),
+            from_flavour: "f".into(),
+            to: "b".into(),
+            requests: 1.0,
+            bytes: 1.0,
+        }
+    }
+
+    #[test]
+    fn range_query_bounds() {
+        let mut store = MetricStore::new();
+        for t in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            store.push_energy(e(t));
+        }
+        // (from, to] semantics
+        let r = store.energy_range(2.0, 4.0);
+        assert_eq!(r.iter().map(|s| s.t).collect::<Vec<_>>(), vec![3.0, 4.0]);
+        assert!(store.energy_range(5.0, 10.0).is_empty());
+        assert_eq!(store.energy_range(0.0, 1.0).len(), 1);
+    }
+
+    #[test]
+    fn out_of_order_insert_keeps_sorted() {
+        let mut store = MetricStore::new();
+        for t in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            store.push_energy(e(t));
+        }
+        let ts: Vec<f64> = store.energy_range(0.0, 10.0).iter().map(|s| s.t).collect();
+        assert_eq!(ts, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn horizon_and_compact() {
+        let mut store = MetricStore::new();
+        store.push_energy(e(10.0));
+        store.push_traffic(tr(20.0));
+        assert_eq!(store.horizon(), 20.0);
+        store.compact(15.0);
+        assert_eq!(store.energy_len(), 0);
+        assert_eq!(store.traffic_len(), 1);
+    }
+
+    #[test]
+    fn traffic_range() {
+        let mut store = MetricStore::new();
+        for t in [1.0, 2.0, 3.0] {
+            store.push_traffic(tr(t));
+        }
+        assert_eq!(store.traffic_range(1.0, 3.0).len(), 2);
+    }
+}

@@ -1,0 +1,17 @@
+//! The Green-aware Constraint Generator pipeline (Fig. 1) and the
+//! adaptive re-orchestration loop.
+//!
+//! [`GeneratorPipeline`] wires the architecture's modules in the paper's
+//! order: Energy Mix Gatherer → Energy Estimator → Constraint Generator →
+//! KB Enricher → Constraints Ranker → Explainability Generator →
+//! Constraint Adapter.
+//!
+//! [`adaptive`] runs the pipeline in a closed loop against the workload
+//! simulator and the scheduler, reproducing the end-to-end emission
+//! reductions the paper's companion scheduler papers report.
+
+pub mod adaptive;
+mod generator_pipeline;
+
+pub use adaptive::{AdaptiveConfig, AdaptiveLoop, EpochLog};
+pub use generator_pipeline::{EpochOutcome, GeneratorPipeline, PipelineConfig};

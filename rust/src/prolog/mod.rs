@@ -1,0 +1,28 @@
+//! Mini-Prolog engine (§4.2 substrate).
+//!
+//! The paper expresses its Constraint Library as Prolog rules
+//! (`suggested(avoidNode(d(S,F),N)) :- highConsumptionService(S,F,N).`).
+//! To make the library genuinely declarative — and extensible with new
+//! constraint types written as rules rather than Rust code — this module
+//! implements the required Prolog subset from scratch:
+//!
+//! * terms: atoms, numbers, variables, compound terms;
+//! * a parser for facts, rules and queries in standard syntax;
+//! * unification with occurs-check;
+//! * SLD resolution with clause indexing on (functor, arity) and a
+//!   first-argument atom index for large fact bases;
+//! * builtins: `dif/2`, arithmetic comparison (`>`, `<`, `>=`, `=<`,
+//!   `=:=`, `=\=`) over numeric terms, and `is/2` for the arithmetic the
+//!   generator's rules need (`*`, `+`, `-`, `/`).
+//!
+//! The engine is deliberately cut down (no cut, no negation, no lists) —
+//! exactly the fragment the paper's rules use, kept total via a depth
+//! bound.
+
+mod engine;
+mod parser;
+mod term;
+
+pub use engine::{Database, Solution};
+pub use parser::{parse_program, parse_query, parse_term};
+pub use term::Term;

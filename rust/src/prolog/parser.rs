@@ -1,0 +1,425 @@
+//! Parser for the Prolog subset: facts, rules, queries.
+//!
+//! Grammar (no operators except the comparison/arith builtins written in
+//! functional or infix form inside goals):
+//!
+//! ```text
+//! program := clause*
+//! clause  := term ( ':-' goals )? '.'
+//! goals   := goal ( ',' goal )*
+//! goal    := term | term OP term          (OP in > < >= =< =:= =\= is)
+//! term    := atom | number | var | atom '(' term (',' term)* ')'
+//! ```
+
+use super::term::Term;
+use crate::{Error, Result};
+
+/// A clause: head + body goals (empty body = fact).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Clause {
+    pub head: Term,
+    pub body: Vec<Term>,
+    /// Fact with a variable-free head — enables the engine's
+    /// no-freshen/no-alloc fast path.
+    pub ground: bool,
+}
+
+impl Clause {
+    pub fn new(head: Term, body: Vec<Term>) -> Clause {
+        let ground = body.is_empty() && is_ground(&head);
+        Clause { head, body, ground }
+    }
+}
+
+fn is_ground(term: &Term) -> bool {
+    match term {
+        Term::Var(..) => false,
+        Term::Compound(_, args) => args.iter().all(is_ground),
+        _ => true,
+    }
+}
+
+/// Parse a whole program (facts + rules). `%` starts a line comment.
+pub fn parse_program(text: &str) -> Result<Vec<Clause>> {
+    let mut p = Lexer::new(text);
+    let mut clauses = Vec::new();
+    loop {
+        p.skip_ws();
+        if p.eof() {
+            break;
+        }
+        clauses.push(parse_clause(&mut p)?);
+    }
+    Ok(clauses)
+}
+
+/// Parse a query: a comma-separated goal list terminated by `.` (optional).
+pub fn parse_query(text: &str) -> Result<Vec<Term>> {
+    let mut p = Lexer::new(text);
+    let goals = parse_goals(&mut p)?;
+    p.skip_ws();
+    if p.peek() == Some('.') {
+        p.bump();
+    }
+    p.skip_ws();
+    if !p.eof() {
+        return Err(Error::Prolog(format!("trailing input at {}", p.pos)));
+    }
+    Ok(goals)
+}
+
+/// Parse a single term.
+pub fn parse_term(text: &str) -> Result<Term> {
+    let mut p = Lexer::new(text);
+    let t = term(&mut p)?;
+    p.skip_ws();
+    if !p.eof() {
+        return Err(Error::Prolog(format!("trailing input at {}", p.pos)));
+    }
+    Ok(t)
+}
+
+fn parse_clause(p: &mut Lexer) -> Result<Clause> {
+    let head = term(p)?;
+    p.skip_ws();
+    let body = if p.starts_with(":-") {
+        p.advance(2);
+        parse_goals(p)?
+    } else {
+        Vec::new()
+    };
+    p.skip_ws();
+    if p.peek() != Some('.') {
+        return Err(Error::Prolog(format!("expected '.' at {}", p.pos)));
+    }
+    p.bump();
+    Ok(Clause::new(head, body))
+}
+
+fn parse_goals(p: &mut Lexer) -> Result<Vec<Term>> {
+    let mut goals = vec![goal(p)?];
+    loop {
+        p.skip_ws();
+        if p.peek() == Some(',') {
+            p.bump();
+            goals.push(goal(p)?);
+        } else {
+            break;
+        }
+    }
+    Ok(goals)
+}
+
+/// A goal is a term, optionally followed by an infix comparison operator
+/// and a right-hand term: `Em > T` parses as `>(Em, T)`.
+fn goal(p: &mut Lexer) -> Result<Term> {
+    let left = term(p)?;
+    p.skip_ws();
+    for op in [">=", "=<", "=:=", "=\\=", ">", "<", "is"] {
+        if p.starts_with(op) {
+            // avoid treating `isfoo` as operator
+            if op == "is" {
+                let after = p.text[p.pos + 2..].chars().next();
+                if matches!(after, Some(c) if c.is_ascii_alphanumeric() || c == '_') {
+                    continue;
+                }
+            }
+            p.advance(op.len());
+            let right = arith(p)?;
+            return Ok(Term::compound(op.replace('\\', "\\"), vec![left, right]));
+        }
+    }
+    Ok(left)
+}
+
+/// Arithmetic expression with `+ - * /`, standard precedence.
+fn arith(p: &mut Lexer) -> Result<Term> {
+    let mut left = arith_mul(p)?;
+    loop {
+        p.skip_ws();
+        match p.peek() {
+            Some(c @ ('+' | '-')) => {
+                p.bump();
+                let right = arith_mul(p)?;
+                left = Term::compound(c.to_string(), vec![left, right]);
+            }
+            _ => return Ok(left),
+        }
+    }
+}
+
+fn arith_mul(p: &mut Lexer) -> Result<Term> {
+    let mut left = term(p)?;
+    loop {
+        p.skip_ws();
+        match p.peek() {
+            Some(c @ ('*' | '/')) => {
+                p.bump();
+                let right = term(p)?;
+                left = Term::compound(c.to_string(), vec![left, right]);
+            }
+            _ => return Ok(left),
+        }
+    }
+}
+
+fn term(p: &mut Lexer) -> Result<Term> {
+    p.skip_ws();
+    match p.peek() {
+        None => Err(Error::Prolog("unexpected EOF".into())),
+        Some('(') => {
+            p.bump();
+            let t = arith(p)?;
+            p.skip_ws();
+            if p.peek() != Some(')') {
+                return Err(Error::Prolog(format!("expected ')' at {}", p.pos)));
+            }
+            p.bump();
+            Ok(t)
+        }
+        Some('\'') => {
+            p.bump();
+            let mut s = String::new();
+            loop {
+                match p.bump() {
+                    None => return Err(Error::Prolog("unterminated quoted atom".into())),
+                    Some('\'') => break,
+                    Some(c) => s.push(c),
+                }
+            }
+            Ok(Term::Atom(s))
+        }
+        Some(c) if c.is_ascii_digit()
+            || (c == '-' && matches!(p.peek2(), Some(d) if d.is_ascii_digit())) =>
+        {
+            number(p)
+        }
+        Some(c) if c.is_ascii_uppercase() || c == '_' => {
+            let name = p.ident();
+            Ok(Term::var(name))
+        }
+        Some(c) if c.is_ascii_lowercase() => {
+            let name = p.ident();
+            p.skip_ws_not_newline();
+            if p.peek() == Some('(') {
+                p.bump();
+                let mut args = vec![arith(p)?];
+                loop {
+                    p.skip_ws();
+                    match p.peek() {
+                        Some(',') => {
+                            p.bump();
+                            args.push(arith(p)?);
+                        }
+                        Some(')') => {
+                            p.bump();
+                            return Ok(Term::Compound(name, args));
+                        }
+                        _ => {
+                            return Err(Error::Prolog(format!(
+                                "expected ',' or ')' at {}",
+                                p.pos
+                            )))
+                        }
+                    }
+                }
+            }
+            Ok(Term::Atom(name))
+        }
+        Some(c) => Err(Error::Prolog(format!(
+            "unexpected character '{c}' at {}",
+            p.pos
+        ))),
+    }
+}
+
+fn number(p: &mut Lexer) -> Result<Term> {
+    let start = p.pos;
+    if p.peek() == Some('-') {
+        p.bump();
+    }
+    while matches!(p.peek(), Some(c) if c.is_ascii_digit()) {
+        p.bump();
+    }
+    if p.peek() == Some('.')
+        && matches!(p.peek2(), Some(d) if d.is_ascii_digit())
+    {
+        p.bump();
+        while matches!(p.peek(), Some(c) if c.is_ascii_digit()) {
+            p.bump();
+        }
+    }
+    if matches!(p.peek(), Some('e' | 'E')) {
+        p.bump();
+        if matches!(p.peek(), Some('+' | '-')) {
+            p.bump();
+        }
+        while matches!(p.peek(), Some(c) if c.is_ascii_digit()) {
+            p.bump();
+        }
+    }
+    let text = &p.text[start..p.pos];
+    text.parse::<f64>()
+        .map(Term::Num)
+        .map_err(|_| Error::Prolog(format!("invalid number '{text}'")))
+}
+
+struct Lexer<'a> {
+    text: &'a str,
+    pos: usize,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(text: &'a str) -> Self {
+        Lexer { text, pos: 0 }
+    }
+
+    fn eof(&self) -> bool {
+        self.pos >= self.text.len()
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.text[self.pos..].chars().next()
+    }
+
+    fn peek2(&self) -> Option<char> {
+        let mut it = self.text[self.pos..].chars();
+        it.next();
+        it.next()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.pos += c.len_utf8();
+        Some(c)
+    }
+
+    fn advance(&mut self, n: usize) {
+        self.pos += n;
+    }
+
+    fn starts_with(&self, s: &str) -> bool {
+        self.text[self.pos..].starts_with(s)
+    }
+
+    fn skip_ws(&mut self) {
+        loop {
+            match self.peek() {
+                Some(c) if c.is_whitespace() => {
+                    self.bump();
+                }
+                Some('%') => {
+                    while let Some(c) = self.bump() {
+                        if c == '\n' {
+                            break;
+                        }
+                    }
+                }
+                _ => break,
+            }
+        }
+    }
+
+    fn skip_ws_not_newline(&mut self) {
+        // between functor and '(' Prolog requires adjacency; we tolerate
+        // nothing (standard) — this is a no-op placeholder for clarity.
+    }
+
+    fn ident(&mut self) -> String {
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_alphanumeric() || c == '_') {
+            self.bump();
+        }
+        self.text[start..self.pos].to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_fact() {
+        let clauses = parse_program("energy(frontend, large, 1.981).").unwrap();
+        assert_eq!(clauses.len(), 1);
+        assert!(clauses[0].body.is_empty());
+        assert_eq!(
+            clauses[0].head,
+            Term::compound(
+                "energy",
+                vec![Term::atom("frontend"), Term::atom("large"), Term::Num(1.981)]
+            )
+        );
+    }
+
+    #[test]
+    fn parse_paper_rules() {
+        let program = r#"
+            % Definition 1 (AvoidNode)
+            suggested(avoidNode(d(S, F), N)) :- highConsumptionService(S, F, N).
+            % Definition 2 (Affinity)
+            suggested(affinity(d(S, F), d(Z, any))) :-
+                dif(S, Z),
+                highConsumptionConnection(S, F, Z).
+        "#;
+        let clauses = parse_program(program).unwrap();
+        assert_eq!(clauses.len(), 2);
+        assert_eq!(clauses[0].body.len(), 1);
+        assert_eq!(clauses[1].body.len(), 2);
+        assert_eq!(clauses[1].body[0], Term::compound("dif", vec![Term::var("S"), Term::var("Z")]));
+    }
+
+    #[test]
+    fn parse_comparison_goal() {
+        let clauses =
+            parse_program("high(S, F, N) :- impact(S, F, N, Em), threshold(T), Em > T.").unwrap();
+        let last = &clauses[0].body[2];
+        assert_eq!(
+            *last,
+            Term::compound(">", vec![Term::var("Em"), Term::var("T")])
+        );
+    }
+
+    #[test]
+    fn parse_arith_in_goal() {
+        let clauses = parse_program("x(E, C) :- Em is E * C, Em >= 10.5.").unwrap();
+        assert_eq!(clauses[0].body.len(), 2);
+        assert_eq!(
+            clauses[0].body[0],
+            Term::compound(
+                "is",
+                vec![
+                    Term::var("Em"),
+                    Term::compound("*", vec![Term::var("E"), Term::var("C")])
+                ]
+            )
+        );
+    }
+
+    #[test]
+    fn parse_query_multi_goal() {
+        let goals = parse_query("suggested(X), dif(X, y).").unwrap();
+        assert_eq!(goals.len(), 2);
+    }
+
+    #[test]
+    fn quoted_atoms_and_negatives() {
+        let t = parse_term("'US East-1'").unwrap();
+        assert_eq!(t, Term::atom("US East-1"));
+        let n = parse_term("-3.5e2").unwrap();
+        assert_eq!(n, Term::Num(-350.0));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_program("missing_dot(a)").is_err());
+        assert!(parse_program("bad((").is_err());
+        assert!(parse_query("p(X) trailing").is_err());
+    }
+
+    #[test]
+    fn comments_skipped() {
+        let clauses = parse_program("% just a comment\nf(a). % end\n").unwrap();
+        assert_eq!(clauses.len(), 1);
+    }
+}

@@ -1,0 +1,333 @@
+//! Prolog terms and substitutions.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// A Prolog term.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Term {
+    /// Lower-case or quoted identifier: `frontend`, `'GB-node'`.
+    Atom(String),
+    /// Floating-point number.
+    Num(f64),
+    /// Logic variable (upper-case or `_`-prefixed). The `usize` is a
+    /// renaming generation used to freshen clause variables.
+    Var(String, usize),
+    /// Compound term: `d(s, f)`, `avoidNode(D, N)`.
+    Compound(String, Vec<Term>),
+}
+
+impl Term {
+    pub fn atom(name: impl Into<String>) -> Term {
+        Term::Atom(name.into())
+    }
+
+    pub fn var(name: impl Into<String>) -> Term {
+        Term::Var(name.into(), 0)
+    }
+
+    pub fn compound(functor: impl Into<String>, args: Vec<Term>) -> Term {
+        Term::Compound(functor.into(), args)
+    }
+
+    /// Functor/arity key used for clause indexing.
+    pub fn key(&self) -> Option<(&str, usize)> {
+        match self {
+            Term::Atom(a) => Some((a.as_str(), 0)),
+            Term::Compound(f, args) => Some((f.as_str(), args.len())),
+            _ => None,
+        }
+    }
+
+    /// First argument if it is an atom — used for fact indexing.
+    pub fn first_arg_atom(&self) -> Option<&str> {
+        match self {
+            Term::Compound(_, args) => match args.first() {
+                Some(Term::Atom(a)) => Some(a.as_str()),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+
+    /// Rename all variables to generation `generation` (clause freshening).
+    pub fn freshen(&self, generation: usize) -> Term {
+        match self {
+            Term::Var(name, _) => Term::Var(name.clone(), generation),
+            Term::Compound(f, args) => Term::Compound(
+                f.clone(),
+                args.iter().map(|a| a.freshen(generation)).collect(),
+            ),
+            other => other.clone(),
+        }
+    }
+
+    /// Apply a substitution (resolving chains).
+    pub fn resolve(&self, subst: &Subst) -> Term {
+        match self {
+            Term::Var(..) => {
+                let mut current = self.clone();
+                // follow the binding chain
+                for _ in 0..subst.map.len() + 1 {
+                    match &current {
+                        Term::Var(n, g) => match subst.map.get(&(n.clone(), *g)) {
+                            Some(next) => current = next.clone(),
+                            None => break,
+                        },
+                        _ => break,
+                    }
+                }
+                match current {
+                    Term::Compound(f, args) => Term::Compound(
+                        f,
+                        args.iter().map(|a| a.resolve(subst)).collect(),
+                    ),
+                    other => other,
+                }
+            }
+            Term::Compound(f, args) => Term::Compound(
+                f.clone(),
+                args.iter().map(|a| a.resolve(subst)).collect(),
+            ),
+            other => other.clone(),
+        }
+    }
+
+    fn occurs(&self, name: &str, generation: usize, subst: &Subst) -> bool {
+        match self.resolve(subst) {
+            Term::Var(n, g) => n == name && g == generation,
+            Term::Compound(_, args) => {
+                args.iter().any(|a| a.occurs(name, generation, subst))
+            }
+            _ => false,
+        }
+    }
+
+    /// Evaluate an arithmetic expression term to a number.
+    pub fn eval(&self, subst: &Subst) -> Option<f64> {
+        match self.resolve(subst) {
+            Term::Num(n) => Some(n),
+            Term::Compound(op, args) if args.len() == 2 => {
+                let a = args[0].eval(subst)?;
+                let b = args[1].eval(subst)?;
+                match op.as_str() {
+                    "+" => Some(a + b),
+                    "-" => Some(a - b),
+                    "*" => Some(a * b),
+                    "/" => Some(a / b),
+                    _ => None,
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
+/// A substitution: bindings from (variable name, generation) to terms.
+#[derive(Debug, Default, Clone)]
+pub struct Subst {
+    map: HashMap<(String, usize), Term>,
+    trail: Vec<(String, usize)>,
+}
+
+impl Subst {
+    pub fn new() -> Self {
+        Subst::default()
+    }
+
+    /// Current trail length — a checkpoint for backtracking.
+    pub fn mark(&self) -> usize {
+        self.trail.len()
+    }
+
+    /// Undo all bindings made after `mark`.
+    pub fn undo(&mut self, mark: usize) {
+        while self.trail.len() > mark {
+            let key = self.trail.pop().unwrap();
+            self.map.remove(&key);
+        }
+    }
+
+    fn bind(&mut self, name: String, generation: usize, term: Term) {
+        self.trail.push((name.clone(), generation));
+        self.map.insert((name, generation), term);
+    }
+
+    /// Unify two terms under this substitution; on failure the
+    /// substitution is left exactly as before the call.
+    pub fn unify(&mut self, a: &Term, b: &Term) -> bool {
+        let mark = self.mark();
+        if self.unify_inner(a, b) {
+            true
+        } else {
+            self.undo(mark);
+            false
+        }
+    }
+
+    fn unify_inner(&mut self, a: &Term, b: &Term) -> bool {
+        let ra = a.resolve(self);
+        let rb = b.resolve(self);
+        match (&ra, &rb) {
+            (Term::Var(n1, g1), Term::Var(n2, g2)) if n1 == n2 && g1 == g2 => true,
+            (Term::Var(n, g), t) => {
+                if t.occurs(n, *g, self) {
+                    return false;
+                }
+                self.bind(n.clone(), *g, t.clone());
+                true
+            }
+            (t, Term::Var(n, g)) => {
+                if t.occurs(n, *g, self) {
+                    return false;
+                }
+                self.bind(n.clone(), *g, t.clone());
+                true
+            }
+            (Term::Atom(x), Term::Atom(y)) => x == y,
+            (Term::Num(x), Term::Num(y)) => x == y,
+            (Term::Compound(f1, a1), Term::Compound(f2, a2)) => {
+                f1 == f2
+                    && a1.len() == a2.len()
+                    && a1.iter().zip(a2).all(|(x, y)| self.unify_inner(x, y))
+            }
+            _ => false,
+        }
+    }
+}
+
+impl fmt::Display for Term {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Term::Atom(a) => {
+                if needs_quotes(a) {
+                    write!(f, "'{a}'")
+                } else {
+                    write!(f, "{a}")
+                }
+            }
+            Term::Num(n) => {
+                if *n == n.trunc() && n.abs() < 1e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Term::Var(n, 0) => write!(f, "{n}"),
+            Term::Var(n, g) => write!(f, "{n}_{g}"),
+            Term::Compound(functor, args) => {
+                write!(f, "{functor}(")?;
+                for (i, a) in args.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{a}")?;
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+fn needs_quotes(atom: &str) -> bool {
+    let mut chars = atom.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_lowercase() => {
+            !atom.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        }
+        _ => true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unify_atoms_and_numbers() {
+        let mut s = Subst::new();
+        assert!(s.unify(&Term::atom("a"), &Term::atom("a")));
+        assert!(!s.unify(&Term::atom("a"), &Term::atom("b")));
+        assert!(s.unify(&Term::Num(1.5), &Term::Num(1.5)));
+        assert!(!s.unify(&Term::Num(1.0), &Term::Num(2.0)));
+    }
+
+    #[test]
+    fn unify_variable_binding() {
+        let mut s = Subst::new();
+        let x = Term::var("X");
+        assert!(s.unify(&x, &Term::atom("hello")));
+        assert_eq!(x.resolve(&s), Term::atom("hello"));
+    }
+
+    #[test]
+    fn unify_compound() {
+        let mut s = Subst::new();
+        let pattern = Term::compound("d", vec![Term::var("S"), Term::var("F")]);
+        let value = Term::compound("d", vec![Term::atom("frontend"), Term::atom("large")]);
+        assert!(s.unify(&pattern, &value));
+        assert_eq!(Term::var("S").resolve(&s), Term::atom("frontend"));
+        assert_eq!(Term::var("F").resolve(&s), Term::atom("large"));
+    }
+
+    #[test]
+    fn unify_failure_restores_bindings() {
+        let mut s = Subst::new();
+        let pattern = Term::compound("p", vec![Term::var("X"), Term::atom("no")]);
+        let value = Term::compound("p", vec![Term::atom("v"), Term::atom("yes")]);
+        assert!(!s.unify(&pattern, &value));
+        // X must not remain bound
+        assert_eq!(Term::var("X").resolve(&s), Term::var("X"));
+    }
+
+    #[test]
+    fn occurs_check() {
+        let mut s = Subst::new();
+        let x = Term::var("X");
+        let fx = Term::compound("f", vec![Term::var("X")]);
+        assert!(!s.unify(&x, &fx));
+    }
+
+    #[test]
+    fn freshen_distinguishes_generations() {
+        let mut s = Subst::new();
+        let x0 = Term::var("X");
+        let x1 = x0.freshen(1);
+        assert!(s.unify(&x0, &Term::atom("a")));
+        assert!(s.unify(&x1, &Term::atom("b"))); // independent variable
+    }
+
+    #[test]
+    fn eval_arithmetic() {
+        let s = Subst::new();
+        let expr = Term::compound(
+            "*",
+            vec![Term::Num(3.0), Term::compound("+", vec![Term::Num(1.0), Term::Num(2.0)])],
+        );
+        assert_eq!(expr.eval(&s), Some(9.0));
+        assert_eq!(Term::atom("x").eval(&s), None);
+    }
+
+    #[test]
+    fn display_round() {
+        let t = Term::compound(
+            "avoidNode",
+            vec![
+                Term::compound("d", vec![Term::atom("frontend"), Term::atom("large")]),
+                Term::atom("italy"),
+            ],
+        );
+        assert_eq!(t.to_string(), "avoidNode(d(frontend, large), italy)");
+        assert_eq!(Term::atom("GB node").to_string(), "'GB node'");
+        assert_eq!(Term::Num(42.0).to_string(), "42");
+    }
+
+    #[test]
+    fn undo_backtracks() {
+        let mut s = Subst::new();
+        let mark = s.mark();
+        assert!(s.unify(&Term::var("X"), &Term::atom("a")));
+        s.undo(mark);
+        assert_eq!(Term::var("X").resolve(&s), Term::var("X"));
+    }
+}

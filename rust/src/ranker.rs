@@ -1,0 +1,184 @@
+//! Constraints Ranker (§4.5): normalised importance weights.
+//!
+//! * Eq. 11 — `w_i = Em_i / max_{c ∈ CK} Em_c`, so weights land in [0, 1]
+//!   with the most impactful constraint at exactly 1.
+//! * Eq. 12 — constraints whose *absolute* impact is below the minimum
+//!   impact threshold `F` are attenuated by λ = 0.75.
+//! * Constraints with final `w < 0.1` are discarded.
+//!
+//! The ranker operates on KB [`ConstraintEntry`]s so the memory weight μ
+//! participates: `Em_i` here is the μ-discounted effective footprint.
+
+use crate::kb::ConstraintEntry;
+use crate::constraints::Constraint;
+
+/// Ranker configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RankerConfig {
+    /// Minimum absolute impact `F` (gCO2eq per window) below which the
+    /// attenuation λ applies (Eq. 12).
+    pub min_impact: f64,
+    /// Attenuation factor λ.
+    pub attenuation: f64,
+    /// Discard threshold on the final weight.
+    pub discard_below: f64,
+}
+
+impl Default for RankerConfig {
+    fn default() -> Self {
+        RankerConfig {
+            min_impact: 50.0,
+            attenuation: 0.75,
+            discard_below: 0.1,
+        }
+    }
+}
+
+/// The Constraints Ranker.
+pub struct Ranker {
+    pub config: RankerConfig,
+}
+
+impl Default for Ranker {
+    fn default() -> Self {
+        Ranker {
+            config: RankerConfig::default(),
+        }
+    }
+}
+
+impl Ranker {
+    pub fn new(config: RankerConfig) -> Self {
+        Ranker { config }
+    }
+
+    /// Rank KB constraint entries; returns surviving constraints with
+    /// their weights set, sorted by weight descending (ties broken by
+    /// key for determinism).
+    pub fn rank(&self, entries: &[ConstraintEntry]) -> Vec<Constraint> {
+        let max_em = entries
+            .iter()
+            .map(|e| e.effective_em())
+            .fold(0.0f64, f64::max);
+        if max_em <= 0.0 {
+            return Vec::new();
+        }
+        let mut out: Vec<Constraint> = entries
+            .iter()
+            .filter_map(|entry| {
+                let mut w = entry.effective_em() / max_em; // Eq. 11
+                if entry.constraint.em < self.config.min_impact {
+                    w *= self.config.attenuation; // Eq. 12
+                }
+                if w < self.config.discard_below {
+                    return None;
+                }
+                let mut c = entry.constraint.clone();
+                c.weight = w;
+                Some(c)
+            })
+            .collect();
+        out.sort_by(|a, b| {
+            b.weight
+                .partial_cmp(&a.weight)
+                .unwrap()
+                .then_with(|| a.kind.key().cmp(&b.kind.key()))
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::{Constraint, ConstraintKind};
+
+    fn entry(node: &str, em: f64, mu: f64) -> ConstraintEntry {
+        ConstraintEntry {
+            constraint: Constraint::new(
+                ConstraintKind::AvoidNode {
+                    service: "frontend".into(),
+                    flavour: "large".into(),
+                    node: node.into(),
+                },
+                em,
+                0.0,
+                em,
+            ),
+            mu,
+            generated_at: 0.0,
+        }
+    }
+
+    #[test]
+    fn paper_scenario1_weights() {
+        // Em(italy) = 1.981*335 = 663.6; Em(gb) = 1.981*213 = 422.0;
+        // Em(pc-italy) = 0.989*335 = 331.3
+        let entries = vec![
+            entry("italy", 663.635, 1.0),
+            entry("greatbritain", 421.953, 1.0),
+            entry("pc-italy", 331.315, 1.0),
+        ];
+        let ranked = Ranker::default().rank(&entries);
+        assert_eq!(ranked.len(), 3);
+        assert!((ranked[0].weight - 1.0).abs() < 1e-9);
+        // paper: 0.636
+        assert!((ranked[1].weight - 0.6358).abs() < 1e-3, "{}", ranked[1].weight);
+        // Eq.11 from Table 1: 0.499 (paper prints 0.446 — see DESIGN.md)
+        assert!((ranked[2].weight - 0.4992).abs() < 1e-3, "{}", ranked[2].weight);
+    }
+
+    #[test]
+    fn low_absolute_impact_attenuated() {
+        // two constraints, one tiny in absolute terms but relatively large
+        let entries = vec![entry("a", 60.0, 1.0), entry("b", 40.0, 1.0)];
+        let ranked = Ranker::default().rank(&entries); // F = 50
+        assert_eq!(ranked.len(), 2);
+        assert!((ranked[0].weight - 1.0).abs() < 1e-12);
+        // 40/60 = 0.667, attenuated by 0.75 -> 0.5
+        assert!((ranked[1].weight - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weights_below_discard_are_dropped() {
+        let entries = vec![entry("big", 1000.0, 1.0), entry("small", 30.0, 1.0)];
+        // small: 0.03 * 0.75 << 0.1 -> dropped (this is what kills the
+        // Affinity constraints in the paper's Scenario 1)
+        let ranked = Ranker::default().rank(&entries);
+        assert_eq!(ranked.len(), 1);
+    }
+
+    #[test]
+    fn memory_weight_discounts_effective_em() {
+        let entries = vec![entry("fresh", 500.0, 1.0), entry("stale", 800.0, 0.5)];
+        let ranked = Ranker::default().rank(&entries);
+        // stale effective = 400 < fresh 500 -> fresh is the max
+        assert!((ranked[0].weight - 1.0).abs() < 1e-12);
+        assert!(matches!(
+            &ranked[0].kind,
+            ConstraintKind::AvoidNode { node, .. } if node == "fresh"
+        ));
+        assert!((ranked[1].weight - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_and_zero_input() {
+        assert!(Ranker::default().rank(&[]).is_empty());
+        assert!(Ranker::default().rank(&[entry("x", 0.0, 1.0)]).is_empty());
+    }
+
+    #[test]
+    fn weights_in_unit_interval_and_sorted() {
+        let entries: Vec<ConstraintEntry> = (0..20)
+            .map(|i| entry(&format!("n{i}"), (i as f64 + 1.0) * 37.0, 1.0))
+            .collect();
+        let ranked = Ranker::default().rank(&entries);
+        for w in ranked.windows(2) {
+            assert!(w[0].weight >= w[1].weight);
+        }
+        for c in &ranked {
+            assert!(c.weight > 0.0 && c.weight <= 1.0);
+        }
+        assert!((ranked[0].weight - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,130 @@
+//! Backend-agnostic analytics interface.
+//!
+//! The semantics are pinned by `python/compile/kernels/ref.py` and the
+//! pytest suite; both backends must produce identical results (up to f32
+//! rounding) — see the equivalence integration test.
+
+use crate::Result;
+
+/// Input to one analytics evaluation.
+///
+/// `e[r]` is the energy profile (kWh) of row r (a (service, flavour)
+/// pair), `c[n]` the carbon intensity of node n (gCO2eq/kWh), `mask[r*N+n]`
+/// 1.0 where the pair is placement-compatible, `extra` the pooled
+/// communication emissions entering the τ distribution (Eq. 5 over "all
+/// services and communications"), `alpha` the quantile level.
+#[derive(Debug, Clone, Default)]
+pub struct AnalyticsInput {
+    pub e: Vec<f32>,
+    pub c: Vec<f32>,
+    /// Row-major R×N compatibility mask.
+    pub mask: Vec<f32>,
+    pub pool: Vec<f32>,
+    pub alpha: f32,
+}
+
+impl AnalyticsInput {
+    pub fn rows(&self) -> usize {
+        self.e.len()
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.c.len()
+    }
+
+    /// Structural validation (mask shape, alpha range).
+    pub fn validate(&self) -> Result<()> {
+        if self.mask.len() != self.e.len() * self.c.len() {
+            return Err(crate::Error::other(format!(
+                "mask len {} != rows {} * nodes {}",
+                self.mask.len(),
+                self.e.len(),
+                self.c.len()
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.alpha) {
+            return Err(crate::Error::other(format!("alpha {} out of range", self.alpha)));
+        }
+        Ok(())
+    }
+}
+
+/// Output of one analytics evaluation (see `python/compile/model.py` for
+/// the authoritative field semantics).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AnalyticsOutput {
+    /// R×N row-major: Em(s,f,n) = e·c masked.
+    pub impact: Vec<f32>,
+    /// Pooled quantile threshold τ (Eq. 5).
+    pub tau: f32,
+    /// Pooled maximum (ranker normaliser).
+    pub gmax: f32,
+    /// Best (lowest) allowed impact per row.
+    pub row_min: Vec<f32>,
+    /// Worst allowed impact per row.
+    pub row_max: Vec<f32>,
+    /// Next-worst allowed impact per row.
+    pub row_max2: Vec<f32>,
+    /// R×N: savings vs optimal node (upper explainability bound).
+    pub sav_hi: Vec<f32>,
+    /// R×N: savings vs next-worst node (lower explainability bound).
+    pub sav_lo: Vec<f32>,
+}
+
+impl AnalyticsOutput {
+    #[inline]
+    pub fn at(&self, slice: &[f32], row: usize, node: usize, nodes: usize) -> f32 {
+        slice[row * nodes + node]
+    }
+}
+
+/// A backend able to evaluate the analytics graph.
+///
+/// Not `Send`/`Sync`: the PJRT client wraps raw pointers; callers that
+/// need concurrency create one backend per thread.
+pub trait AnalyticsBackend {
+    /// Human-readable backend name (for telemetry / ablation benches).
+    fn name(&self) -> &'static str;
+
+    /// Evaluate the graph.
+    fn run(&self, input: &AnalyticsInput) -> Result<AnalyticsOutput>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_catches_shape_mismatch() {
+        let bad = AnalyticsInput {
+            e: vec![1.0, 2.0],
+            c: vec![1.0],
+            mask: vec![1.0; 3],
+            pool: vec![],
+            alpha: 0.8,
+        };
+        assert!(bad.validate().is_err());
+        let good = AnalyticsInput {
+            e: vec![1.0, 2.0],
+            c: vec![1.0],
+            mask: vec![1.0; 2],
+            pool: vec![],
+            alpha: 0.8,
+        };
+        assert!(good.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_alpha_range() {
+        let mut input = AnalyticsInput {
+            e: vec![1.0],
+            c: vec![1.0],
+            mask: vec![1.0],
+            pool: vec![],
+            alpha: 1.5,
+        };
+        assert!(input.validate().is_err());
+        input.alpha = 0.8;
+        assert!(input.validate().is_ok());
+    }
+}

@@ -1,0 +1,23 @@
+//! Analytics runtime: executes the L2 impact-analytics graph.
+//!
+//! Two interchangeable backends implement [`AnalyticsBackend`]:
+//!
+//! * [`NativeBackend`] — pure-Rust mirror of the graph semantics. Always
+//!   available; used for instances larger than the biggest AOT bucket and
+//!   as the cross-check oracle.
+//! * [`XlaBackend`] — loads the AOT-lowered HLO text artifacts produced by
+//!   `python/compile/aot.py` (see `artifacts/manifest.json`), compiles
+//!   them once per shape bucket on the PJRT CPU client, and executes them
+//!   from the constraint-generation hot path. Inputs are padded up to the
+//!   bucket shape; padding is masked out and provably does not change live
+//!   outputs (tested in `rust/tests/xla_native_equivalence.rs`).
+//!
+//! Python never runs at request time — the artifacts are the only bridge.
+
+pub mod analytics;
+pub mod native;
+pub mod xla;
+
+pub use analytics::{AnalyticsBackend, AnalyticsInput, AnalyticsOutput};
+pub use native::NativeBackend;
+pub use xla::XlaBackend;

@@ -1,0 +1,217 @@
+//! Pure-Rust analytics backend.
+//!
+//! Mirrors `python/compile/model.py` exactly (including the quantile
+//! definition and the savings-bound tie semantics) so the XLA and native
+//! paths are interchangeable. Computation is done in f32 to match the
+//! artifact numerics bit-for-bit where possible.
+
+use super::analytics::{AnalyticsBackend, AnalyticsInput, AnalyticsOutput};
+use crate::Result;
+
+/// Sentinel mirroring the Python BIG constant.
+const BIG: f32 = 3.0e38;
+
+/// The native backend (stateless).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl AnalyticsBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn run(&self, input: &AnalyticsInput) -> Result<AnalyticsOutput> {
+        input.validate()?;
+        let r = input.rows();
+        let n = input.nodes();
+        let mut out = AnalyticsOutput {
+            impact: vec![0.0; r * n],
+            row_min: vec![0.0; r],
+            row_max: vec![0.0; r],
+            row_max2: vec![0.0; r],
+            sav_hi: vec![0.0; r * n],
+            sav_lo: vec![0.0; r * n],
+            ..Default::default()
+        };
+
+        // --- impact + row statistics (the L1 kernel) --------------------
+        for row in 0..r {
+            let e = input.e[row];
+            let base = row * n;
+            let mut rmin = BIG;
+            let mut rmax = -BIG;
+            let mut rmax2 = -BIG;
+            let mut allowed = 0usize;
+            for node in 0..n {
+                let m = input.mask[base + node];
+                let v = e * input.c[node] * m;
+                out.impact[base + node] = v;
+                if m > 0.0 {
+                    allowed += 1;
+                    rmin = rmin.min(v);
+                    if v > rmax {
+                        rmax2 = rmax;
+                        rmax = v;
+                    } else if v > rmax2 {
+                        rmax2 = v;
+                    }
+                }
+            }
+            out.row_min[row] = if allowed == 0 { 0.0 } else { rmin };
+            out.row_max[row] = if allowed == 0 { 0.0 } else { rmax };
+            out.row_max2[row] = match allowed {
+                0 => 0.0,
+                1 => rmax,
+                _ => rmax2,
+            };
+        }
+
+        // --- quantile τ over the observed-impact pool (Eq. 5) ------------
+        // The pool is caller-assembled: per-row observed impacts plus
+        // per-link communication emissions ("all services and
+        // communications observed in the monitoring history") — NOT the
+        // hypothetical per-node products above.
+        let mut pool: Vec<f32> = input.pool.clone();
+        if pool.is_empty() {
+            out.tau = 0.0;
+            out.gmax = 0.0;
+        } else {
+            pool.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let cnt = pool.len();
+            // f32 arithmetic on purpose: the L2 graph computes
+            // ceil(alpha * cnt) in f32, and 0.8f32 * 45 rounds to 36.0
+            // while the f64 product is 36.0000005 — the k index must agree
+            // bit-for-bit with the artifact.
+            let k = ((input.alpha * cnt as f32).ceil() as usize).clamp(1, cnt);
+            out.tau = pool[k - 1];
+            out.gmax = pool[cnt - 1];
+        }
+
+        // --- savings bounds (§5.4) ---------------------------------------
+        // For each allowed entry x: sav_hi = x - row_min; sav_lo = x - max
+        // allowed value strictly below x (0 if none).
+        let mut row_sorted: Vec<f32> = Vec::with_capacity(n);
+        for row in 0..r {
+            let base = row * n;
+            row_sorted.clear();
+            for node in 0..n {
+                if input.mask[base + node] > 0.0 {
+                    row_sorted.push(out.impact[base + node]);
+                }
+            }
+            row_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for node in 0..n {
+                if input.mask[base + node] <= 0.0 {
+                    continue;
+                }
+                let x = out.impact[base + node];
+                out.sav_hi[base + node] = x - out.row_min[row];
+                // binary search: first index with value >= x
+                let idx = row_sorted.partition_point(|&v| v < x);
+                out.sav_lo[base + node] = if idx > 0 { x - row_sorted[idx - 1] } else { 0.0 };
+            }
+        }
+
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(e: Vec<f32>, c: Vec<f32>, mask: Vec<f32>, pool: Vec<f32>, alpha: f32) -> AnalyticsOutput {
+        NativeBackend
+            .run(&AnalyticsInput {
+                e,
+                c,
+                mask,
+                pool,
+                alpha,
+            })
+            .unwrap()
+    }
+
+    #[test]
+    fn paper_scenario1_frontend_row() {
+        // Table 1 (Wh -> kWh) x Table 2
+        let out = run(
+            vec![1.981],
+            vec![16.0, 88.0, 132.0, 213.0, 335.0],
+            vec![1.0; 5],
+            vec![],
+            0.8,
+        );
+        assert!((out.impact[4] - 663.635).abs() < 1e-3);
+        assert!((out.row_min[0] - 31.696).abs() < 1e-3);
+        assert!((out.row_max[0] - 663.635).abs() < 1e-3);
+        assert!((out.row_max2[0] - 421.953).abs() < 1e-3);
+        // §5.4 savings: Italy upper 631.9, lower 241.7; GB upper 390.3, lower 160.5
+        assert!((out.sav_hi[4] - 631.939).abs() < 1e-2);
+        assert!((out.sav_lo[4] - 241.682).abs() < 1e-2);
+        assert!((out.sav_hi[3] - 390.257).abs() < 1e-2);
+        assert!((out.sav_lo[3] - 160.461).abs() < 1e-2);
+    }
+
+    #[test]
+    fn quantile_over_observed_pool_only() {
+        // tau comes from the caller-assembled observed-impact pool, NOT
+        // from the hypothetical per-node impact tensor.
+        let out = run(
+            vec![1.0],
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![1.0; 4],
+            vec![10.0, 30.0, 20.0, 40.0, 50.0],
+            0.8,
+        );
+        // ceil(0.8*5) = 4 -> 4th smallest = 40
+        assert_eq!(out.tau, 40.0);
+        assert_eq!(out.gmax, 50.0);
+        // impact tensor entries (1..4) play no role in tau
+    }
+
+    #[test]
+    fn masked_entries_excluded_everywhere() {
+        let out = run(
+            vec![2.0],
+            vec![5.0, 50.0, 500.0],
+            vec![1.0, 0.0, 1.0],
+            vec![],
+            1.0,
+        );
+        assert_eq!(out.impact[1], 0.0);
+        assert_eq!(out.row_min[0], 10.0);
+        assert_eq!(out.row_max[0], 1000.0);
+        assert_eq!(out.row_max2[0], 10.0); // only two allowed
+        assert_eq!(out.sav_hi[1], 0.0);
+        // empty pool -> tau = 0 regardless of impacts
+        assert_eq!(out.tau, 0.0);
+    }
+
+    #[test]
+    fn single_allowed_node_zero_savings() {
+        let out = run(vec![3.0], vec![7.0], vec![1.0], vec![], 0.8);
+        assert_eq!(out.sav_hi[0], 0.0);
+        assert_eq!(out.sav_lo[0], 0.0);
+        assert_eq!(out.row_max2[0], 21.0);
+    }
+
+    #[test]
+    fn ties_next_lower_is_strictly_lower() {
+        // two nodes with identical CI: for either, no strictly-lower value
+        // except the smaller third node
+        let out = run(vec![1.0], vec![9.0, 9.0, 1.0], vec![1.0; 3], vec![], 1.0);
+        assert_eq!(out.sav_lo[0], 8.0); // 9 - 1
+        assert_eq!(out.sav_lo[1], 8.0);
+        assert_eq!(out.sav_lo[2], 0.0);
+        assert_eq!(out.row_max2[0], 9.0); // tie: second max == max
+    }
+
+    #[test]
+    fn empty_instance() {
+        let out = run(vec![], vec![], vec![], vec![], 0.8);
+        assert_eq!(out.tau, 0.0);
+        assert_eq!(out.gmax, 0.0);
+        assert!(out.impact.is_empty());
+    }
+}

@@ -1,0 +1,253 @@
+//! XLA/PJRT analytics backend: loads the AOT HLO-text artifacts and
+//! executes them on the CPU PJRT client.
+//!
+//! * Artifacts and shape buckets come from `artifacts/manifest.json`
+//!   (written by `python/compile/aot.py`).
+//! * An instance of shape (R, N) is padded up to the smallest bucket with
+//!   `rows >= R && nodes >= N`; padded rows/nodes carry `e = 0`, `c = 0`,
+//!   `mask = 0`, which the graph treats as absent (pytest + the
+//!   equivalence integration test pin this).
+//! * Executables are compiled once per bucket on first use and cached.
+
+use super::analytics::{AnalyticsBackend, AnalyticsInput, AnalyticsOutput};
+use crate::jsonio;
+use crate::{Error, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact bucket from the manifest.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub rows: usize,
+    pub nodes: usize,
+    pub pool: usize,
+    pub file: PathBuf,
+}
+
+/// The PJRT-backed analytics backend.
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    buckets: Vec<Bucket>,
+    /// bucket index -> compiled executable (lazy).
+    executables: RefCell<HashMap<usize, xla::PjRtLoadedExecutable>>,
+}
+
+impl XlaBackend {
+    /// Load the manifest from an artifacts directory and create the
+    /// backend (CPU PJRT client).
+    pub fn from_artifacts(dir: impl AsRef<Path>) -> Result<XlaBackend> {
+        let dir = dir.as_ref();
+        let manifest = jsonio::from_file(&dir.join("manifest.json"))?;
+        let mut buckets = Vec::new();
+        for b in manifest.array_field("buckets")? {
+            buckets.push(Bucket {
+                rows: b.f64_field("rows")? as usize,
+                nodes: b.f64_field("nodes")? as usize,
+                pool: b.f64_field("pool")? as usize,
+                file: dir.join(b.str_field("file")?),
+            });
+        }
+        if buckets.is_empty() {
+            return Err(Error::Config("manifest has no buckets".into()));
+        }
+        // Order by capacity so `select_bucket` finds the tightest fit.
+        buckets.sort_by_key(|b| (b.rows * b.nodes, b.rows, b.nodes));
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::Xla(e.to_string()))?;
+        Ok(XlaBackend {
+            client,
+            buckets,
+            executables: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts location (repo-root `artifacts/`).
+    pub fn from_default_artifacts() -> Result<XlaBackend> {
+        XlaBackend::from_artifacts("artifacts")
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// Smallest bucket that fits (rows, nodes, extra-pool) — `None` means
+    /// the instance exceeds every bucket and the caller should fall back
+    /// to the native backend.
+    pub fn select_bucket(&self, rows: usize, nodes: usize, pool: usize) -> Option<usize> {
+        self.buckets
+            .iter()
+            .position(|b| b.rows >= rows && b.nodes >= nodes && b.pool >= pool)
+    }
+
+    fn executable(&self, bucket_idx: usize) -> Result<()> {
+        if self.executables.borrow().contains_key(&bucket_idx) {
+            return Ok(());
+        }
+        let bucket = &self.buckets[bucket_idx];
+        let proto = xla::HloModuleProto::from_text_file(&bucket.file)
+            .map_err(|e| Error::Xla(format!("load {}: {e}", bucket.file.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Xla(format!("compile {}: {e}", bucket.file.display())))?;
+        self.executables.borrow_mut().insert(bucket_idx, exe);
+        Ok(())
+    }
+
+    /// Pad `input` into bucket shape and execute; `Err` if no bucket fits.
+    fn run_padded(&self, input: &AnalyticsInput) -> Result<AnalyticsOutput> {
+        let r = input.rows();
+        let n = input.nodes();
+        let bucket_idx = self
+            .select_bucket(r, n, input.pool.len())
+            .ok_or_else(|| {
+                Error::Xla(format!(
+                    "instance {r}x{n} (pool {}) exceeds largest artifact bucket",
+                    input.pool.len()
+                ))
+            })?;
+        self.executable(bucket_idx)?;
+        let bucket = &self.buckets[bucket_idx];
+        let (br, bn, bp) = (bucket.rows, bucket.nodes, bucket.pool);
+
+        // Pad inputs.
+        let mut e = vec![0.0f32; br];
+        e[..r].copy_from_slice(&input.e);
+        let mut c = vec![0.0f32; bn];
+        c[..n].copy_from_slice(&input.c);
+        let mut mask = vec![0.0f32; br * bn];
+        for row in 0..r {
+            mask[row * bn..row * bn + n].copy_from_slice(&input.mask[row * n..(row + 1) * n]);
+        }
+        let mut extra = vec![0.0f32; bp];
+        extra[..input.pool.len()].copy_from_slice(&input.pool);
+        let mut extra_mask = vec![0.0f32; bp];
+        for slot in extra_mask.iter_mut().take(input.pool.len()) {
+            *slot = 1.0;
+        }
+
+        fn xe(msg: &'static str) -> impl Fn(xla::Error) -> Error {
+            move |err| Error::Xla(format!("{msg}: {err}"))
+        }
+        let lit_e = xla::Literal::vec1(&e);
+        let lit_c = xla::Literal::vec1(&c);
+        let lit_m = xla::Literal::vec1(&mask)
+            .reshape(&[br as i64, bn as i64])
+            .map_err(xe("reshape mask"))?;
+        let lit_pool = xla::Literal::vec1(&extra);
+        let lit_pool_mask = xla::Literal::vec1(&extra_mask);
+        let lit_alpha = xla::Literal::from(input.alpha);
+
+        let executables = self.executables.borrow();
+        let exe = executables.get(&bucket_idx).expect("compiled above");
+        let result = exe
+            .execute::<xla::Literal>(&[
+                lit_e,
+                lit_c,
+                lit_m,
+                lit_pool,
+                lit_pool_mask,
+                lit_alpha,
+            ])
+            .map_err(xe("execute"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(xe("to_literal"))?
+            .to_tuple()
+            .map_err(xe("to_tuple"))?;
+        if tuple.len() != 8 {
+            return Err(Error::Xla(format!("expected 8 outputs, got {}", tuple.len())));
+        }
+
+        let vecf = |lit: &xla::Literal, msg: &str| -> Result<Vec<f32>> {
+            lit.to_vec::<f32>().map_err(|e| Error::Xla(format!("{msg}: {e}")))
+        };
+        let scalar = |lit: &xla::Literal, msg: &str| -> Result<f32> {
+            lit.get_first_element::<f32>()
+                .map_err(|e| Error::Xla(format!("{msg}: {e}")))
+        };
+
+        // Unpad matrix outputs.
+        let unpad_mat = |full: Vec<f32>| -> Vec<f32> {
+            let mut out = vec![0.0f32; r * n];
+            for row in 0..r {
+                out[row * n..(row + 1) * n]
+                    .copy_from_slice(&full[row * bn..row * bn + n]);
+            }
+            out
+        };
+        let unpad_vec = |full: Vec<f32>| -> Vec<f32> { full[..r].to_vec() };
+
+        Ok(AnalyticsOutput {
+            impact: unpad_mat(vecf(&tuple[0], "impact")?),
+            tau: scalar(&tuple[1], "tau")?,
+            gmax: scalar(&tuple[2], "gmax")?,
+            row_min: unpad_vec(vecf(&tuple[3], "row_min")?),
+            row_max: unpad_vec(vecf(&tuple[4], "row_max")?),
+            row_max2: unpad_vec(vecf(&tuple[5], "row_max2")?),
+            sav_hi: unpad_mat(vecf(&tuple[6], "sav_hi")?),
+            sav_lo: unpad_mat(vecf(&tuple[7], "sav_lo")?),
+        })
+    }
+}
+
+impl AnalyticsBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn run(&self, input: &AnalyticsInput) -> Result<AnalyticsOutput> {
+        input.validate()?;
+        if input.rows() == 0 || input.nodes() == 0 {
+            // Degenerate instances bypass PJRT (nothing to compute).
+            return super::native::NativeBackend.run(input);
+        }
+        self.run_padded(input)
+    }
+}
+
+// Unit tests for bucket selection logic (no PJRT needed); end-to-end
+// execution is covered by rust/tests/xla_native_equivalence.rs.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_backend(buckets: Vec<(usize, usize)>) -> Vec<Bucket> {
+        let mut v: Vec<Bucket> = buckets
+            .into_iter()
+            .map(|(rows, nodes)| Bucket {
+                rows,
+                nodes,
+                pool: rows,
+                file: PathBuf::from("/nonexistent"),
+            })
+            .collect();
+        v.sort_by_key(|b| (b.rows * b.nodes, b.rows, b.nodes));
+        v
+    }
+
+    fn select(buckets: &[Bucket], r: usize, n: usize, p: usize) -> Option<(usize, usize)> {
+        buckets
+            .iter()
+            .find(|b| b.rows >= r && b.nodes >= n && b.pool >= p)
+            .map(|b| (b.rows, b.nodes))
+    }
+
+    #[test]
+    fn tightest_bucket_selected() {
+        let buckets = fake_backend(vec![(64, 8), (64, 32), (512, 32), (512, 128), (4096, 512)]);
+        assert_eq!(select(&buckets, 15, 5, 10), Some((64, 8)));
+        assert_eq!(select(&buckets, 15, 20, 10), Some((64, 32)));
+        assert_eq!(select(&buckets, 100, 20, 10), Some((512, 32)));
+        assert_eq!(select(&buckets, 4000, 500, 0), Some((4096, 512)));
+        assert_eq!(select(&buckets, 5000, 5, 0), None);
+    }
+
+    #[test]
+    fn pool_capacity_respected() {
+        let buckets = fake_backend(vec![(64, 8), (512, 32)]);
+        // pool of 100 does not fit the 64-bucket (pool == rows == 64)
+        assert_eq!(select(&buckets, 10, 4, 100), Some((512, 32)));
+    }
+}

@@ -1,0 +1,177 @@
+//! Baseline schedulers for the end-to-end comparisons:
+//!
+//! * [`CostOnlyScheduler`] — the carbon-blind production default: same
+//!   greedy machinery, constraints ignored. The emission delta between
+//!   this and the constrained scheduler is the paper's headline effect.
+//! * [`RandomScheduler`] — uniformly random feasible placement (sanity
+//!   floor).
+//! * [`GreenOracleScheduler`] — minimises ground-truth emissions
+//!   directly (not implementable in the paper's architecture, where the
+//!   scheduler never sees emissions; upper bound for "how much of the
+//!   possible reduction do the constraints recover?").
+
+use super::greedy::GreedyScheduler;
+use super::problem::{CapacityState, Objective, Problem, Scheduler};
+use crate::model::DeploymentPlan;
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// Carbon-blind cost optimiser.
+pub struct CostOnlyScheduler;
+
+impl Scheduler for CostOnlyScheduler {
+    fn name(&self) -> &'static str {
+        "cost-only"
+    }
+
+    fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+        let blind = Problem {
+            app: problem.app,
+            infra: problem.infra,
+            constraints: &[], // ignore green constraints
+            objective: Objective {
+                soft_weight: 0.0,
+                emissions_weight: 0.0,
+                ..problem.objective
+            },
+        };
+        GreedyScheduler::default().schedule(&blind)
+    }
+}
+
+/// Emissions oracle (sees ground-truth emissions).
+pub struct GreenOracleScheduler;
+
+impl Scheduler for GreenOracleScheduler {
+    fn name(&self) -> &'static str {
+        "green-oracle"
+    }
+
+    fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+        let oracle = Problem {
+            app: problem.app,
+            infra: problem.infra,
+            constraints: &[],
+            objective: Objective {
+                emissions_weight: 1.0,
+                cost_weight: 0.0,
+                soft_weight: 0.0,
+                ..problem.objective
+            },
+        };
+        GreedyScheduler::default().schedule(&oracle)
+    }
+}
+
+/// Uniformly random feasible placement.
+pub struct RandomScheduler {
+    pub seed: u64,
+}
+
+impl Scheduler for RandomScheduler {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+        let mut rng = Rng::new(self.seed);
+        let n_services = problem.app.services.len();
+        let mut assignment: Vec<Option<(usize, usize)>> = vec![None; n_services];
+        let mut capacity = CapacityState::new(problem.infra);
+        // random service order, random feasible slot per service
+        let mut order: Vec<usize> = (0..n_services).collect();
+        rng.shuffle(&mut order);
+        for si in order {
+            let svc = &problem.app.services[si];
+            let mut slots = Vec::new();
+            for fi in 0..svc.flavours.len() {
+                for ni in 0..problem.infra.nodes.len() {
+                    if problem.placement_ok(si, fi, ni, &capacity) {
+                        slots.push((fi, ni));
+                    }
+                }
+            }
+            if slots.is_empty() {
+                if svc.must_deploy {
+                    return Err(Error::Infeasible(format!(
+                        "random: no feasible slot for '{}'",
+                        svc.id
+                    )));
+                }
+                continue;
+            }
+            let (fi, ni) = *rng.pick(&slots);
+            let req = &svc.flavours[fi].requirements;
+            capacity.take(ni, req.cpu, req.ram_gb, req.storage_gb);
+            assignment[si] = Some((fi, ni));
+        }
+        Ok(problem.to_plan(&assignment))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Application, EnergyProfile, Flavour, Infrastructure, Node, Service};
+
+    fn parts() -> (Application, Infrastructure) {
+        let mut app = Application::new("t");
+        for name in ["web", "db"] {
+            let mut s = Service::new(name);
+            s.flavours = vec![Flavour::new("std")];
+            s.flavour_mut("std").unwrap().energy = Some(EnergyProfile { kwh: 1.0, samples: 1 });
+            app.services.push(s);
+        }
+        let mut infra = Infrastructure::new("i");
+        for (name, ci, cost) in [("green", 20.0, 0.10), ("brown", 400.0, 0.02)] {
+            let mut n = Node::new(name, "XX");
+            n.profile.carbon = Some(ci);
+            n.profile.cost_per_cpu_hour = cost;
+            infra.nodes.push(n);
+        }
+        (app, infra)
+    }
+
+    #[test]
+    fn cost_only_picks_cheapest() {
+        let (app, infra) = parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let plan = CostOnlyScheduler.schedule(&problem).unwrap();
+        assert_eq!(plan.node_of("web"), Some("brown"));
+        assert_eq!(plan.node_of("db"), Some("brown"));
+    }
+
+    #[test]
+    fn oracle_picks_greenest() {
+        let (app, infra) = parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let plan = GreenOracleScheduler.schedule(&problem).unwrap();
+        assert_eq!(plan.node_of("web"), Some("green"));
+        assert_eq!(plan.node_of("db"), Some("green"));
+    }
+
+    #[test]
+    fn random_is_feasible_and_deterministic() {
+        let (app, infra) = parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let a = RandomScheduler { seed: 7 }.schedule(&problem).unwrap();
+        let b = RandomScheduler { seed: 7 }.schedule(&problem).unwrap();
+        assert_eq!(a, b);
+        assert!(a.is_deployed("web") && a.is_deployed("db"));
+    }
+}

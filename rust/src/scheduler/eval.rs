@@ -1,0 +1,121 @@
+//! Deployment-plan evaluator: ground-truth emissions, cost and
+//! constraint-violation accounting for a plan — the measurement side of
+//! the end-to-end experiments.
+
+use super::problem::Problem;
+use crate::model::DeploymentPlan;
+use crate::Result;
+
+/// Evaluated metrics of one plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanMetrics {
+    /// Total emissions, gCO2eq per observation window (compute + comm).
+    pub emissions_g: f64,
+    /// Total cost (currency units per hour).
+    pub cost: f64,
+    /// Number of dropped (optional) services.
+    pub dropped: usize,
+    /// Sum of violated green-constraint weights.
+    pub violation_weight: f64,
+    /// Number of violated green constraints.
+    pub violations: usize,
+}
+
+/// Evaluate a plan against a problem (its app/infra/constraints).
+pub fn evaluate(problem: &Problem, plan: &DeploymentPlan) -> Result<PlanMetrics> {
+    let assignment = problem.to_assignment(plan)?;
+    let emissions_g = problem.emissions(&assignment);
+    let mut cost = 0.0;
+    for (si, slot) in assignment.iter().enumerate() {
+        if let Some((fi, ni)) = slot {
+            let req = &problem.app.services[si].flavours[*fi].requirements;
+            cost += req.cpu * problem.infra.nodes[*ni].profile.cost_per_cpu_hour;
+        }
+    }
+    // count violations constraint-by-constraint (the aggregate weight via
+    // soft_penalty, the count via a per-constraint re-check)
+    let violation_weight = problem.soft_penalty(&assignment);
+    let mut violations = 0;
+    for c in problem.constraints {
+        let single = [c.clone()];
+        let sub = Problem {
+            app: problem.app,
+            infra: problem.infra,
+            constraints: &single,
+            objective: problem.objective,
+        };
+        if sub.soft_penalty(&assignment) > 0.0 {
+            violations += 1;
+        }
+    }
+    Ok(PlanMetrics {
+        emissions_g,
+        cost,
+        dropped: plan.dropped.len(),
+        violation_weight,
+        violations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::{Constraint, ConstraintKind};
+    use crate::model::{
+        Application, EnergyProfile, Flavour, Infrastructure, Node, Placement, Service,
+    };
+    use crate::scheduler::problem::Objective;
+
+    #[test]
+    fn metrics_add_up() {
+        let mut app = Application::new("t");
+        let mut s = Service::new("svc");
+        s.flavours = vec![Flavour::new("std")];
+        s.flavour_mut("std").unwrap().energy = Some(EnergyProfile { kwh: 2.0, samples: 1 });
+        s.flavour_mut("std").unwrap().requirements.cpu = 2.0;
+        app.services.push(s);
+        let mut opt = Service::new("opt");
+        opt.must_deploy = false;
+        opt.flavours = vec![Flavour::new("std")];
+        app.services.push(opt);
+
+        let mut infra = Infrastructure::new("i");
+        let mut n = Node::new("brown", "XX");
+        n.profile.carbon = Some(300.0);
+        n.profile.cost_per_cpu_hour = 0.05;
+        infra.nodes.push(n);
+
+        let mut c = Constraint::new(
+            ConstraintKind::AvoidNode {
+                service: "svc".into(),
+                flavour: "std".into(),
+                node: "brown".into(),
+            },
+            600.0,
+            0.0,
+            600.0,
+        );
+        c.weight = 0.7;
+        let constraints = vec![c];
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let plan = DeploymentPlan {
+            placements: vec![Placement {
+                service: "svc".into(),
+                flavour: "std".into(),
+                node: "brown".into(),
+            }],
+            dropped: vec!["opt".into()],
+        };
+        let m = evaluate(&problem, &plan).unwrap();
+        assert!((m.emissions_g - 600.0).abs() < 1e-9);
+        assert!((m.cost - 0.1).abs() < 1e-12);
+        assert_eq!(m.dropped, 1);
+        assert_eq!(m.violations, 1);
+        assert!((m.violation_weight - 0.7).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,306 @@
+//! Greedy construction + local search — the production solver for
+//! realistically sized instances.
+//!
+//! Construction: services in descending resource demand (big rocks
+//! first); each takes the feasible (flavour, node) with the lowest
+//! incremental objective. Optional services are dropped only if no
+//! feasible slot exists or every slot is worse than the drop penalty.
+//!
+//! Local search: first-improvement over single-service moves (flavour
+//! and/or node change) and pairwise swaps, iterated to a fixed point
+//! (bounded rounds). Move evaluation is incremental where possible.
+
+use super::problem::{CapacityState, Problem, Scheduler};
+use crate::model::DeploymentPlan;
+use crate::{Error, Result};
+
+/// The greedy + local-search scheduler.
+pub struct GreedyScheduler {
+    /// Maximum local-search rounds (each round scans all services).
+    pub max_rounds: usize,
+}
+
+impl Default for GreedyScheduler {
+    fn default() -> Self {
+        GreedyScheduler { max_rounds: 20 }
+    }
+}
+
+impl Scheduler for GreedyScheduler {
+    fn name(&self) -> &'static str {
+        "greedy-local-search"
+    }
+
+    fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+        let n_services = problem.app.services.len();
+        let n_nodes = problem.infra.nodes.len();
+        let mut assignment: Vec<Option<(usize, usize)>> = vec![None; n_services];
+        let mut capacity = CapacityState::new(problem.infra);
+        // Incremental move evaluation: changing one service's slot changes
+        // the global objective by exactly the delta of its local objective
+        // (tested invariant) — O(#touching constraints) per candidate
+        // instead of O(|services| + |constraints|).
+        let index = problem.constraint_index();
+
+        // --- construction ------------------------------------------------
+        let mut order: Vec<usize> = (0..n_services).collect();
+        order.sort_by(|&a, &b| {
+            let da = demand(problem, a);
+            let db = demand(problem, b);
+            db.partial_cmp(&da).unwrap()
+        });
+
+        for &si in &order {
+            let svc = &problem.app.services[si];
+            // local objective of the "dropped" state (the current one)
+            let dropped_local = problem.local_objective(&index, si, &assignment);
+            let mut best: Option<(usize, usize, f64)> = None;
+            for fi in 0..svc.flavours.len() {
+                for ni in 0..n_nodes {
+                    if !problem.placement_ok(si, fi, ni, &capacity) {
+                        continue;
+                    }
+                    assignment[si] = Some((fi, ni));
+                    let local = problem.local_objective(&index, si, &assignment);
+                    assignment[si] = None;
+                    if best.map(|(_, _, v)| local < v).unwrap_or(true) {
+                        best = Some((fi, ni, local));
+                    }
+                }
+            }
+            match best {
+                Some((fi, ni, placed_local)) => {
+                    // optional services may be better dropped
+                    if !svc.must_deploy && dropped_local < placed_local {
+                        continue;
+                    }
+                    let req = &svc.flavours[fi].requirements;
+                    capacity.take(ni, req.cpu, req.ram_gb, req.storage_gb);
+                    assignment[si] = Some((fi, ni));
+                }
+                None if svc.must_deploy => {
+                    return Err(Error::Infeasible(format!(
+                        "no feasible placement for mandatory service '{}'",
+                        svc.id
+                    )));
+                }
+                None => {}
+            }
+        }
+
+        // --- local search --------------------------------------------------
+        for _ in 0..self.max_rounds {
+            let mut improved = false;
+            for si in 0..n_services {
+                let svc = &problem.app.services[si];
+                let original = assignment[si];
+                // free its capacity for re-evaluation
+                if let Some((fi, ni)) = original {
+                    let req = &svc.flavours[fi].requirements;
+                    capacity.give(ni, req.cpu, req.ram_gb, req.storage_gb);
+                }
+                let original_local = problem.local_objective(&index, si, &assignment);
+                let mut best = original;
+                let mut best_local = original_local;
+                // candidate: drop (optional only)
+                if !svc.must_deploy {
+                    assignment[si] = None;
+                    let v = problem.local_objective(&index, si, &assignment);
+                    if v < best_local - 1e-12 {
+                        best_local = v;
+                        best = None;
+                    }
+                }
+                for fi in 0..svc.flavours.len() {
+                    for ni in 0..problem.infra.nodes.len() {
+                        if !problem.placement_ok(si, fi, ni, &capacity) {
+                            continue;
+                        }
+                        assignment[si] = Some((fi, ni));
+                        let v = problem.local_objective(&index, si, &assignment);
+                        if v < best_local - 1e-12 {
+                            best_local = v;
+                            best = Some((fi, ni));
+                        }
+                    }
+                }
+                assignment[si] = best;
+                if let Some((fi, ni)) = best {
+                    let req = &svc.flavours[fi].requirements;
+                    capacity.take(ni, req.cpu, req.ram_gb, req.storage_gb);
+                }
+                if best != original {
+                    improved = true;
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+
+        Ok(problem.to_plan(&assignment))
+    }
+}
+
+fn demand(problem: &Problem, si: usize) -> f64 {
+    problem.app.services[si]
+        .flavours
+        .iter()
+        .map(|f| f.requirements.cpu + f.requirements.ram_gb / 4.0)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::{Constraint, ConstraintKind};
+    use crate::model::{EnergyProfile, Flavour, Node, Service};
+    use crate::model::{Application, Infrastructure};
+    use crate::scheduler::problem::Objective;
+
+    fn parts() -> (Application, Infrastructure) {
+        let mut app = Application::new("t");
+        for (name, kwh, must) in [("web", 2.0, true), ("db", 1.0, true), ("ads", 0.2, false)] {
+            let mut s = Service::new(name);
+            s.must_deploy = must;
+            s.flavours = vec![Flavour::new("std")];
+            s.flavour_mut("std").unwrap().energy = Some(EnergyProfile { kwh, samples: 1 });
+            s.flavour_mut("std").unwrap().requirements.cpu = 2.0;
+            app.services.push(s);
+        }
+        let mut infra = Infrastructure::new("i");
+        for (name, ci, cost) in [("green", 20.0, 0.10), ("brown", 300.0, 0.02)] {
+            let mut n = Node::new(name, "XX");
+            n.profile.carbon = Some(ci);
+            n.capabilities.cpu = 16.0;
+            n.profile.cost_per_cpu_hour = cost;
+            infra.nodes.push(n);
+        }
+        (app, infra)
+    }
+
+    #[test]
+    fn all_mandatory_services_placed() {
+        let (app, infra) = parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let plan = GreedyScheduler::default().schedule(&problem).unwrap();
+        assert!(plan.is_deployed("web"));
+        assert!(plan.is_deployed("db"));
+    }
+
+    #[test]
+    fn constraints_steer_placement() {
+        let (app, infra) = parts();
+        // without constraints, cost pulls everything to "brown" (cheaper)
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let plan = GreedyScheduler::default().schedule(&problem).unwrap();
+        assert_eq!(plan.node_of("web"), Some("brown"));
+
+        // an AvoidNode constraint flips the high-energy service to green
+        let mut c = Constraint::new(
+            ConstraintKind::AvoidNode {
+                service: "web".into(),
+                flavour: "std".into(),
+                node: "brown".into(),
+            },
+            600.0,
+            0.0,
+            600.0,
+        );
+        c.weight = 1.0;
+        let constraints = vec![c];
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let plan = GreedyScheduler::default().schedule(&problem).unwrap();
+        assert_eq!(plan.node_of("web"), Some("green"));
+    }
+
+    #[test]
+    fn infeasible_when_capacity_exhausted() {
+        let (mut app, mut infra) = parts();
+        for n in &mut infra.nodes {
+            n.capabilities.cpu = 1.0; // below any flavour's 2.0
+        }
+        app.services.truncate(1);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        assert!(matches!(
+            GreedyScheduler::default().schedule(&problem),
+            Err(Error::Infeasible(_))
+        ));
+    }
+
+    #[test]
+    fn optional_service_dropped_only_when_beneficial() {
+        let (app, infra) = parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        // default drop penalty (5.0) dwarfs its cost: ads gets deployed
+        let plan = GreedyScheduler::default().schedule(&problem).unwrap();
+        assert!(plan.is_deployed("ads"));
+
+        // trivial drop penalty: ads is dropped (it only costs)
+        let problem = Problem {
+            objective: Objective {
+                drop_penalty: 0.0,
+                ..Objective::default()
+            },
+            ..problem
+        };
+        let plan = GreedyScheduler::default().schedule(&problem).unwrap();
+        assert!(!plan.is_deployed("ads"));
+        assert_eq!(plan.dropped, vec!["ads"]);
+    }
+
+    #[test]
+    fn affinity_colocates() {
+        let (mut app, infra) = parts();
+        app.links.push({
+            let mut l = crate::model::CommLink::new("web", "db");
+            l.energy = vec![("std".into(), 0.5)];
+            l
+        });
+        let mut c = Constraint::new(
+            ConstraintKind::Affinity {
+                service: "web".into(),
+                flavour: "std".into(),
+                other: "db".into(),
+            },
+            100.0,
+            100.0,
+            100.0,
+        );
+        c.weight = 0.9;
+        let constraints = vec![c];
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let plan = GreedyScheduler::default().schedule(&problem).unwrap();
+        assert_eq!(plan.node_of("web"), plan.node_of("db"));
+    }
+}

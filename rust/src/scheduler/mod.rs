@@ -1,0 +1,22 @@
+//! Constraint-aware deployment scheduler — the substrate the paper
+//! delegates to its companion work ([36], [38]) and intentionally leaves
+//! out of its own evaluation. Our end-to-end driver needs one, so we
+//! build it: a deployment problem model, an exact branch-and-bound solver
+//! for small instances, a greedy + local-search solver for large ones,
+//! and the carbon-blind baselines the benchmarks compare against.
+//!
+//! The green constraints are *soft*: the scheduler pays a weighted
+//! penalty for violating them (exactly how [36] integrates them), while
+//! resource capacities, placement compatibility and mustDeploy are hard.
+
+pub mod baselines;
+pub mod eval;
+pub mod greedy;
+pub mod problem;
+pub mod solver;
+
+pub use baselines::{CostOnlyScheduler, GreenOracleScheduler, RandomScheduler};
+pub use eval::{evaluate, PlanMetrics};
+pub use greedy::GreedyScheduler;
+pub use problem::{Objective, Problem, Scheduler};
+pub use solver::BranchAndBoundScheduler;

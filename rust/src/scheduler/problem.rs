@@ -1,0 +1,743 @@
+//! The deployment problem: decision space, hard feasibility and the soft
+//! objective.
+
+use crate::constraints::{Constraint, ConstraintKind};
+use crate::model::{Application, DeploymentPlan, Infrastructure, Placement};
+use crate::Result;
+
+/// Objective weights. The scheduler minimises
+/// `cost_weight·cost + soft_weight·Σ violated constraint weights
+///  + drop_penalty·#dropped + flavour_weight·Σ flavour rank
+///  + emissions_weight·emissions`.
+///
+/// The *constrained* production configuration keeps `emissions_weight = 0`
+/// — the scheduler does not see emissions directly; all green pressure
+/// arrives through the constraints (the paper's architecture). The
+/// GreenOracle baseline flips that switch to measure how much of the
+/// oracle gap the constraints recover.
+#[derive(Debug, Clone, Copy)]
+pub struct Objective {
+    pub cost_weight: f64,
+    pub soft_weight: f64,
+    pub drop_penalty: f64,
+    pub flavour_weight: f64,
+    pub emissions_weight: f64,
+}
+
+impl Default for Objective {
+    fn default() -> Self {
+        Objective {
+            cost_weight: 1.0,
+            // constraint weights are in [0.1, 1]; a violation must outweigh
+            // typical per-service cost differences (~0.01-0.1 units/h)
+            soft_weight: 10.0,
+            drop_penalty: 5.0,
+            flavour_weight: 0.05,
+            emissions_weight: 0.0,
+        }
+    }
+}
+
+/// A deployment problem instance.
+pub struct Problem<'a> {
+    pub app: &'a Application,
+    pub infra: &'a Infrastructure,
+    pub constraints: &'a [Constraint],
+    pub objective: Objective,
+}
+
+/// A scheduling algorithm.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Produce a feasible plan (or `Error::Infeasible`).
+    fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan>;
+}
+
+/// Remaining capacity tracker for hard feasibility.
+#[derive(Debug, Clone)]
+pub struct CapacityState {
+    /// (cpu, ram, storage) remaining per node index.
+    pub remaining: Vec<(f64, f64, f64)>,
+}
+
+impl CapacityState {
+    pub fn new(infra: &Infrastructure) -> Self {
+        CapacityState {
+            remaining: infra
+                .nodes
+                .iter()
+                .map(|n| {
+                    (
+                        n.capabilities.cpu,
+                        n.capabilities.ram_gb,
+                        n.capabilities.storage_gb,
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    pub fn fits(&self, node: usize, cpu: f64, ram: f64, storage: f64) -> bool {
+        let (c, r, s) = self.remaining[node];
+        cpu <= c + 1e-9 && ram <= r + 1e-9 && storage <= s + 1e-9
+    }
+
+    pub fn take(&mut self, node: usize, cpu: f64, ram: f64, storage: f64) {
+        let slot = &mut self.remaining[node];
+        slot.0 -= cpu;
+        slot.1 -= ram;
+        slot.2 -= storage;
+    }
+
+    pub fn give(&mut self, node: usize, cpu: f64, ram: f64, storage: f64) {
+        let slot = &mut self.remaining[node];
+        slot.0 += cpu;
+        slot.1 += ram;
+        slot.2 += storage;
+    }
+}
+
+impl<'a> Problem<'a> {
+    /// Hard placement feasibility of (service, flavour) on node —
+    /// placement compatibility, availability, capacity.
+    pub fn placement_ok(
+        &self,
+        service_idx: usize,
+        flavour_idx: usize,
+        node_idx: usize,
+        capacity: &CapacityState,
+    ) -> bool {
+        let svc = &self.app.services[service_idx];
+        let node = &self.infra.nodes[node_idx];
+        if !node.placement_compatible(&svc.requirements) {
+            return false;
+        }
+        let req = &svc.flavours[flavour_idx].requirements;
+        if node.capabilities.availability + 1e-12 < req.availability {
+            return false;
+        }
+        capacity.fits(node_idx, req.cpu, req.ram_gb, req.storage_gb)
+    }
+
+    /// Soft-constraint penalty of a complete assignment.
+    /// `assignment[i] = Some((flavour_idx, node_idx))` per service.
+    pub fn soft_penalty(&self, assignment: &[Option<(usize, usize)>]) -> f64 {
+        let mut penalty = 0.0;
+        for c in self.constraints {
+            match &c.kind {
+                ConstraintKind::AvoidNode {
+                    service,
+                    flavour,
+                    node,
+                } => {
+                    if let Some((si, (fi, ni))) = self.find(assignment, service) {
+                        let svc = &self.app.services[si];
+                        if svc.flavours[fi].name == *flavour
+                            && self.infra.nodes[ni].id == *node
+                        {
+                            penalty += c.weight;
+                        }
+                    }
+                }
+                ConstraintKind::Affinity {
+                    service,
+                    flavour,
+                    other,
+                } => {
+                    if let (Some((si, (fi, ni))), Some((_, (_, nz)))) = (
+                        self.find(assignment, service),
+                        self.find(assignment, other),
+                    ) {
+                        let svc = &self.app.services[si];
+                        if svc.flavours[fi].name == *flavour && ni != nz {
+                            penalty += c.weight;
+                        }
+                    }
+                }
+                ConstraintKind::PreferNode {
+                    service,
+                    flavour,
+                    node,
+                } => {
+                    if let Some((si, (fi, ni))) = self.find(assignment, service) {
+                        let svc = &self.app.services[si];
+                        if svc.flavours[fi].name == *flavour
+                            && self.infra.nodes[ni].id != *node
+                        {
+                            penalty += c.weight;
+                        }
+                    }
+                }
+            }
+        }
+        penalty
+    }
+
+    fn find(
+        &self,
+        assignment: &[Option<(usize, usize)>],
+        service: &str,
+    ) -> Option<(usize, (usize, usize))> {
+        let idx = self.app.services.iter().position(|s| s.id == service)?;
+        assignment[idx].map(|a| (idx, a))
+    }
+
+    /// Build the per-service constraint index used for incremental move
+    /// evaluation (the scheduler hot path — see EXPERIMENTS.md §Perf).
+    pub fn constraint_index(&self) -> ConstraintIndex {
+        ConstraintIndex::new(self)
+    }
+
+    /// Full objective value of an assignment (lower is better).
+    pub fn objective_value(&self, assignment: &[Option<(usize, usize)>]) -> f64 {
+        let o = &self.objective;
+        let mut cost = 0.0;
+        let mut flavour_rank = 0.0;
+        let mut dropped = 0.0;
+        for (si, slot) in assignment.iter().enumerate() {
+            match slot {
+                Some((fi, ni)) => {
+                    let svc = &self.app.services[si];
+                    let req = &svc.flavours[*fi].requirements;
+                    cost += req.cpu * self.infra.nodes[*ni].profile.cost_per_cpu_hour;
+                    flavour_rank += *fi as f64; // 0 = most preferred
+                }
+                None => dropped += 1.0,
+            }
+        }
+        let mut value = o.cost_weight * cost
+            + o.soft_weight * self.soft_penalty(assignment)
+            + o.drop_penalty * dropped
+            + o.flavour_weight * flavour_rank;
+        if o.emissions_weight != 0.0 {
+            value += o.emissions_weight * self.emissions(assignment);
+        }
+        value
+    }
+
+    /// Ground-truth emissions of an assignment (gCO2eq per window):
+    /// compute (Eq. 3 semantics) + inter-node communication (Eq. 13
+    /// profiles × the average CI of the endpoints' nodes).
+    pub fn emissions(&self, assignment: &[Option<(usize, usize)>]) -> f64 {
+        let mut total = 0.0;
+        for (si, slot) in assignment.iter().enumerate() {
+            if let Some((fi, ni)) = slot {
+                let svc = &self.app.services[si];
+                if let Some(profile) = svc.flavours[*fi].energy {
+                    total += profile.kwh * self.infra.nodes[*ni].carbon();
+                }
+            }
+        }
+        for link in &self.app.links {
+            let from = self.find(assignment, &link.from);
+            let to = self.find(assignment, &link.to);
+            if let (Some((si, (fi, ni))), Some((_, (_, nz)))) = (from, to) {
+                if ni != nz {
+                    let flavour = &self.app.services[si].flavours[fi].name;
+                    if let Some(kwh) = link.energy_for(flavour) {
+                        let ci = 0.5
+                            * (self.infra.nodes[ni].carbon() + self.infra.nodes[nz].carbon());
+                        total += kwh * ci;
+                    }
+                }
+            }
+        }
+        total
+    }
+
+    /// Convert an assignment into a [`DeploymentPlan`].
+    pub fn to_plan(&self, assignment: &[Option<(usize, usize)>]) -> DeploymentPlan {
+        let mut plan = DeploymentPlan::default();
+        for (si, slot) in assignment.iter().enumerate() {
+            let svc = &self.app.services[si];
+            match slot {
+                Some((fi, ni)) => plan.placements.push(Placement {
+                    service: svc.id.clone(),
+                    flavour: svc.flavours[*fi].name.clone(),
+                    node: self.infra.nodes[*ni].id.clone(),
+                }),
+                None => plan.dropped.push(svc.id.clone()),
+            }
+        }
+        plan
+    }
+
+    /// Parse a plan back into an assignment (for evaluation).
+    pub fn to_assignment(&self, plan: &DeploymentPlan) -> Result<Vec<Option<(usize, usize)>>> {
+        let mut assignment = vec![None; self.app.services.len()];
+        for p in &plan.placements {
+            let si = self
+                .app
+                .services
+                .iter()
+                .position(|s| s.id == p.service)
+                .ok_or_else(|| crate::Error::other(format!("unknown service {}", p.service)))?;
+            let fi = self.app.services[si]
+                .flavours
+                .iter()
+                .position(|f| f.name == p.flavour)
+                .ok_or_else(|| crate::Error::other(format!("unknown flavour {}", p.flavour)))?;
+            let ni = self
+                .infra
+                .nodes
+                .iter()
+                .position(|n| n.id == p.node)
+                .ok_or_else(|| crate::Error::other(format!("unknown node {}", p.node)))?;
+            assignment[si] = Some((fi, ni));
+        }
+        Ok(assignment)
+    }
+}
+
+/// Pre-resolved constraint references for O(1)-per-constraint incremental
+/// move evaluation. Replaces the O(|services| · |constraints|) full
+/// `objective_value` scan in the scheduler inner loop — the dominant cost
+/// before the perf pass (14 s for a 100×50 instance; see EXPERIMENTS.md
+/// §Perf).
+pub struct ConstraintIndex {
+    /// Per constraint: resolved indices.
+    resolved: Vec<ResolvedConstraint>,
+    /// service idx -> indices into `resolved` that this service's slot
+    /// can affect (as subject or as affinity partner).
+    touching: Vec<Vec<usize>>,
+}
+
+enum ResolvedConstraint {
+    Avoid {
+        service: usize,
+        flavour: usize,
+        node: usize,
+        weight: f64,
+    },
+    Affinity {
+        service: usize,
+        flavour: usize,
+        other: usize,
+        weight: f64,
+    },
+    Prefer {
+        service: usize,
+        flavour: usize,
+        node: usize,
+        weight: f64,
+    },
+    /// References an unknown service/flavour/node: never violated.
+    Inert,
+}
+
+impl ConstraintIndex {
+    fn new(problem: &Problem) -> ConstraintIndex {
+        let svc_idx = |name: &str| problem.app.services.iter().position(|s| s.id == name);
+        let node_idx = |name: &str| problem.infra.nodes.iter().position(|n| n.id == name);
+        let fl_idx = |si: usize, name: &str| {
+            problem.app.services[si]
+                .flavours
+                .iter()
+                .position(|f| f.name == name)
+        };
+        let mut resolved = Vec::with_capacity(problem.constraints.len());
+        let mut touching = vec![Vec::new(); problem.app.services.len()];
+        for c in problem.constraints {
+            let idx = resolved.len();
+            let entry = match &c.kind {
+                ConstraintKind::AvoidNode {
+                    service,
+                    flavour,
+                    node,
+                } => match (svc_idx(service), node_idx(node)) {
+                    (Some(si), Some(ni)) => match fl_idx(si, flavour) {
+                        Some(fi) => {
+                            touching[si].push(idx);
+                            ResolvedConstraint::Avoid {
+                                service: si,
+                                flavour: fi,
+                                node: ni,
+                                weight: c.weight,
+                            }
+                        }
+                        None => ResolvedConstraint::Inert,
+                    },
+                    _ => ResolvedConstraint::Inert,
+                },
+                ConstraintKind::Affinity {
+                    service,
+                    flavour,
+                    other,
+                } => match (svc_idx(service), svc_idx(other)) {
+                    (Some(si), Some(zi)) => match fl_idx(si, flavour) {
+                        Some(fi) => {
+                            touching[si].push(idx);
+                            touching[zi].push(idx);
+                            ResolvedConstraint::Affinity {
+                                service: si,
+                                flavour: fi,
+                                other: zi,
+                                weight: c.weight,
+                            }
+                        }
+                        None => ResolvedConstraint::Inert,
+                    },
+                    _ => ResolvedConstraint::Inert,
+                },
+                ConstraintKind::PreferNode {
+                    service,
+                    flavour,
+                    node,
+                } => match (svc_idx(service), node_idx(node)) {
+                    (Some(si), Some(ni)) => match fl_idx(si, flavour) {
+                        Some(fi) => {
+                            touching[si].push(idx);
+                            ResolvedConstraint::Prefer {
+                                service: si,
+                                flavour: fi,
+                                node: ni,
+                                weight: c.weight,
+                            }
+                        }
+                        None => ResolvedConstraint::Inert,
+                    },
+                    _ => ResolvedConstraint::Inert,
+                },
+            };
+            resolved.push(entry);
+        }
+        ConstraintIndex { resolved, touching }
+    }
+
+    fn violation(
+        &self,
+        idx: usize,
+        assignment: &[Option<(usize, usize)>],
+    ) -> f64 {
+        match &self.resolved[idx] {
+            ResolvedConstraint::Avoid {
+                service,
+                flavour,
+                node,
+                weight,
+            } => match assignment[*service] {
+                Some((fi, ni)) if fi == *flavour && ni == *node => *weight,
+                _ => 0.0,
+            },
+            ResolvedConstraint::Affinity {
+                service,
+                flavour,
+                other,
+                weight,
+            } => match (assignment[*service], assignment[*other]) {
+                (Some((fi, ni)), Some((_, nz))) if fi == *flavour && ni != nz => *weight,
+                _ => 0.0,
+            },
+            ResolvedConstraint::Prefer {
+                service,
+                flavour,
+                node,
+                weight,
+            } => match assignment[*service] {
+                Some((fi, ni)) if fi == *flavour && ni != *node => *weight,
+                _ => 0.0,
+            },
+            ResolvedConstraint::Inert => 0.0,
+        }
+    }
+
+    /// Soft-penalty contribution of the constraints touching `service`.
+    pub fn penalty_touching(
+        &self,
+        service: usize,
+        assignment: &[Option<(usize, usize)>],
+    ) -> f64 {
+        self.touching[service]
+            .iter()
+            .map(|&idx| self.violation(idx, assignment))
+            .sum()
+    }
+
+    /// Total soft penalty (must equal `Problem::soft_penalty` — tested).
+    pub fn total_penalty(&self, assignment: &[Option<(usize, usize)>]) -> f64 {
+        (0..self.resolved.len())
+            .map(|idx| self.violation(idx, assignment))
+            .sum()
+    }
+}
+
+/// Incremental objective evaluation around one service's slot.
+impl<'a> Problem<'a> {
+    /// The objective contribution that depends only on service `si`'s own
+    /// slot (cost, flavour preference, drop penalty) plus the penalties of
+    /// constraints touching `si`. Changing `si`'s slot changes the global
+    /// objective by exactly the difference of this quantity (other
+    /// services' terms cancel) — the scheduler inner loop relies on it.
+    pub fn local_objective(
+        &self,
+        index: &ConstraintIndex,
+        si: usize,
+        assignment: &[Option<(usize, usize)>],
+    ) -> f64 {
+        let o = &self.objective;
+        let own = match assignment[si] {
+            Some((fi, ni)) => {
+                let req = &self.app.services[si].flavours[fi].requirements;
+                let mut v = o.cost_weight * req.cpu
+                    * self.infra.nodes[ni].profile.cost_per_cpu_hour
+                    + o.flavour_weight * fi as f64;
+                if o.emissions_weight != 0.0 {
+                    if let Some(profile) = self.app.services[si].flavours[fi].energy {
+                        v += o.emissions_weight * profile.kwh * self.infra.nodes[ni].carbon();
+                    }
+                    // communication terms touching si
+                    v += o.emissions_weight * self.comm_emissions_touching(si, assignment);
+                }
+                v
+            }
+            None => o.drop_penalty,
+        };
+        own + o.soft_weight * index.penalty_touching(si, assignment)
+    }
+
+    /// Inter-node communication emissions of links incident to `si`.
+    fn comm_emissions_touching(
+        &self,
+        si: usize,
+        assignment: &[Option<(usize, usize)>],
+    ) -> f64 {
+        let id = &self.app.services[si].id;
+        let mut total = 0.0;
+        for link in &self.app.links {
+            if link.from != *id && link.to != *id {
+                continue;
+            }
+            let from = self.find(assignment, &link.from);
+            let to = self.find(assignment, &link.to);
+            if let (Some((fsi, (fi, ni))), Some((_, (_, nz)))) = (from, to) {
+                if ni != nz {
+                    let flavour = &self.app.services[fsi].flavours[fi].name;
+                    if let Some(kwh) = link.energy_for(flavour) {
+                        let ci = 0.5
+                            * (self.infra.nodes[ni].carbon() + self.infra.nodes[nz].carbon());
+                        total += kwh * ci;
+                    }
+                }
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{EnergyProfile, Flavour, Node, Service};
+
+    pub(crate) fn tiny_problem_parts() -> (Application, Infrastructure) {
+        let mut app = Application::new("t");
+        let mut a = Service::new("a");
+        a.flavours = vec![Flavour::new("big"), Flavour::new("small")];
+        a.flavour_mut("big").unwrap().energy = Some(EnergyProfile { kwh: 2.0, samples: 1 });
+        a.flavour_mut("big").unwrap().requirements.cpu = 4.0;
+        a.flavour_mut("small").unwrap().energy =
+            Some(EnergyProfile { kwh: 1.0, samples: 1 });
+        let mut b = Service::new("b");
+        b.must_deploy = false;
+        b.flavours = vec![Flavour::new("small")];
+        b.flavour_mut("small").unwrap().energy =
+            Some(EnergyProfile { kwh: 0.5, samples: 1 });
+        app.services = vec![a, b];
+        app.links.push({
+            let mut l = crate::model::CommLink::new("a", "b");
+            l.energy = vec![("big".into(), 0.1), ("small".into(), 0.05)];
+            l
+        });
+
+        let mut infra = Infrastructure::new("i");
+        let mut n1 = Node::new("green", "FR");
+        n1.profile.carbon = Some(20.0);
+        n1.capabilities.cpu = 8.0;
+        let mut n2 = Node::new("brown", "IT");
+        n2.profile.carbon = Some(300.0);
+        n2.capabilities.cpu = 8.0;
+        infra.nodes = vec![n1, n2];
+        (app, infra)
+    }
+
+    #[test]
+    fn soft_penalty_counts_violations() {
+        let (app, infra) = tiny_problem_parts();
+        let mut c = Constraint::new(
+            ConstraintKind::AvoidNode {
+                service: "a".into(),
+                flavour: "big".into(),
+                node: "brown".into(),
+            },
+            600.0,
+            0.0,
+            600.0,
+        );
+        c.weight = 1.0;
+        let constraints = vec![c];
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        // a/big on brown violates; a/small on brown does not
+        assert_eq!(problem.soft_penalty(&[Some((0, 1)), None]), 1.0);
+        assert_eq!(problem.soft_penalty(&[Some((1, 1)), None]), 0.0);
+        assert_eq!(problem.soft_penalty(&[Some((0, 0)), None]), 0.0);
+    }
+
+    #[test]
+    fn affinity_penalty_on_split() {
+        let (app, infra) = tiny_problem_parts();
+        let mut c = Constraint::new(
+            ConstraintKind::Affinity {
+                service: "a".into(),
+                flavour: "big".into(),
+                other: "b".into(),
+            },
+            100.0,
+            100.0,
+            100.0,
+        );
+        c.weight = 0.5;
+        let constraints = vec![c];
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        assert_eq!(problem.soft_penalty(&[Some((0, 0)), Some((0, 1))]), 0.5);
+        assert_eq!(problem.soft_penalty(&[Some((0, 0)), Some((0, 0))]), 0.0);
+        // dropped other: no penalty
+        assert_eq!(problem.soft_penalty(&[Some((0, 0)), None]), 0.0);
+    }
+
+    #[test]
+    fn emissions_compute_and_comm() {
+        let (app, infra) = tiny_problem_parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        // a/big on green (2 kWh * 20) + b on brown (0.5 * 300) + comm
+        // 0.1 kWh * mean(20,300)=160 -> 16
+        let em = problem.emissions(&[Some((0, 0)), Some((0, 1))]);
+        assert!((em - (40.0 + 150.0 + 16.0)).abs() < 1e-9, "{em}");
+        // co-located: no comm term
+        let em2 = problem.emissions(&[Some((0, 0)), Some((0, 0))]);
+        assert!((em2 - (40.0 + 10.0)).abs() < 1e-9, "{em2}");
+    }
+
+    #[test]
+    fn capacity_tracking() {
+        let (app, infra) = tiny_problem_parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let mut cap = CapacityState::new(&infra);
+        assert!(problem.placement_ok(0, 0, 0, &cap)); // big (4 cpu) on green (8)
+        cap.take(0, 4.0, 8.0, 1.0);
+        cap.take(0, 4.0, 8.0, 1.0);
+        assert!(!problem.placement_ok(0, 0, 0, &cap)); // full now
+        cap.give(0, 4.0, 8.0, 1.0);
+        assert!(problem.placement_ok(0, 0, 0, &cap));
+    }
+
+    #[test]
+    fn incremental_equals_full_objective_delta() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(0x1DE1);
+        let app = crate::simulate::random_application(&mut rng, 12);
+        let infra = crate::simulate::random_infrastructure(&mut rng, 5);
+        let backend = crate::runtime::NativeBackend;
+        let generated = crate::constraints::ConstraintGenerator::new(&backend)
+            .with_config(crate::constraints::GeneratorConfig {
+                alpha: 0.6,
+                use_prolog: false,
+            })
+            .generate(&app, &infra)
+            .unwrap();
+        let mut constraints = generated.constraints;
+        for (i, c) in constraints.iter_mut().enumerate() {
+            c.weight = 0.1 + 0.05 * (i % 10) as f64;
+        }
+        for emissions_weight in [0.0, 1.0] {
+            let problem = Problem {
+                app: &app,
+                infra: &infra,
+                constraints: &constraints,
+                objective: Objective {
+                    emissions_weight,
+                    ..Objective::default()
+                },
+            };
+            let index = problem.constraint_index();
+            // random assignment
+            let mut assignment: Vec<Option<(usize, usize)>> = app
+                .services
+                .iter()
+                .map(|s| {
+                    if rng.chance(0.8) {
+                        Some((rng.below(s.flavours.len()), rng.below(infra.nodes.len())))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            // index total penalty must match the naive scan
+            assert!(
+                (index.total_penalty(&assignment) - problem.soft_penalty(&assignment)).abs()
+                    < 1e-9
+            );
+            // moving one service: full-objective delta == local delta
+            for _ in 0..30 {
+                let si = rng.below(assignment.len());
+                let before_full = problem.objective_value(&assignment);
+                let before_local = problem.local_objective(&index, si, &assignment);
+                let old = assignment[si];
+                assignment[si] = if rng.chance(0.2) {
+                    None
+                } else {
+                    Some((
+                        rng.below(app.services[si].flavours.len()),
+                        rng.below(infra.nodes.len()),
+                    ))
+                };
+                let after_full = problem.objective_value(&assignment);
+                let after_local = problem.local_objective(&index, si, &assignment);
+                assert!(
+                    ((after_full - before_full) - (after_local - before_local)).abs() < 1e-9,
+                    "emissions_weight {emissions_weight}: full delta {} vs local delta {} (move {old:?} -> {:?})",
+                    after_full - before_full,
+                    after_local - before_local,
+                    assignment[si]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_round_trip() {
+        let (app, infra) = tiny_problem_parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let assignment = vec![Some((1, 0)), None];
+        let plan = problem.to_plan(&assignment);
+        assert_eq!(plan.placements.len(), 1);
+        assert_eq!(plan.dropped, vec!["b"]);
+        let back = problem.to_assignment(&plan).unwrap();
+        assert_eq!(back, assignment);
+    }
+}

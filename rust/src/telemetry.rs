@@ -1,0 +1,151 @@
+//! Telemetry: timing + energy accounting for the generation process
+//! itself — the CodeCarbon stand-in behind the Fig. 2 scalability study
+//! (which reports the *generator's own* energy consumption and runtime).
+//!
+//! Energy model: `E = wallclock × TDP × utilisation × PUE`, the same
+//! machine-level estimator CodeCarbon applies when RAPL is unavailable.
+
+use std::time::Instant;
+
+/// Energy model parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MeterConfig {
+    /// Package thermal design power, watts.
+    pub tdp_watts: f64,
+    /// Assumed CPU utilisation share attributable to the process.
+    pub utilisation: f64,
+    /// Data-centre PUE multiplier.
+    pub pue: f64,
+}
+
+impl Default for MeterConfig {
+    fn default() -> Self {
+        MeterConfig {
+            tdp_watts: 65.0,
+            utilisation: 1.0,
+            pue: 1.2,
+        }
+    }
+}
+
+/// One measured stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    pub label: String,
+    pub seconds: f64,
+    pub kwh: f64,
+}
+
+/// The energy meter / stage timer.
+#[derive(Debug)]
+pub struct EnergyMeter {
+    pub config: MeterConfig,
+    measurements: Vec<Measurement>,
+}
+
+impl Default for EnergyMeter {
+    fn default() -> Self {
+        EnergyMeter {
+            config: MeterConfig::default(),
+            measurements: Vec::new(),
+        }
+    }
+}
+
+impl EnergyMeter {
+    pub fn new(config: MeterConfig) -> Self {
+        EnergyMeter {
+            config,
+            measurements: Vec::new(),
+        }
+    }
+
+    /// Convert a duration to energy under the model.
+    pub fn kwh_for_seconds(&self, seconds: f64) -> f64 {
+        seconds * self.config.tdp_watts * self.config.utilisation * self.config.pue / 3.6e6
+    }
+
+    /// Measure a closure, recording a labelled measurement.
+    pub fn measure<T>(&mut self, label: &str, body: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = body();
+        let seconds = start.elapsed().as_secs_f64();
+        self.measurements.push(Measurement {
+            label: label.to_string(),
+            seconds,
+            kwh: self.kwh_for_seconds(seconds),
+        });
+        out
+    }
+
+    pub fn measurements(&self) -> &[Measurement] {
+        &self.measurements
+    }
+
+    /// Total recorded time (seconds) and energy (kWh).
+    pub fn totals(&self) -> (f64, f64) {
+        self.measurements
+            .iter()
+            .fold((0.0, 0.0), |(t, e), m| (t + m.seconds, e + m.kwh))
+    }
+
+    /// Emissions of the generation process itself at intensity `ci`
+    /// (gCO2eq/kWh).
+    pub fn emissions_g(&self, ci: f64) -> f64 {
+        self.totals().1 * ci
+    }
+
+    pub fn reset(&mut self) {
+        self.measurements.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_model_arithmetic() {
+        let meter = EnergyMeter::default();
+        // 1 hour at 65 W x 1.2 PUE = 78 Wh = 0.078 kWh
+        let kwh = meter.kwh_for_seconds(3600.0);
+        assert!((kwh - 0.078).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measure_records_stage() {
+        let mut meter = EnergyMeter::default();
+        let v = meter.measure("estimate", || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            42
+        });
+        assert_eq!(v, 42);
+        assert_eq!(meter.measurements().len(), 1);
+        let m = &meter.measurements()[0];
+        assert_eq!(m.label, "estimate");
+        assert!(m.seconds >= 0.009, "{}", m.seconds);
+        assert!(m.kwh > 0.0);
+        let (t, e) = meter.totals();
+        assert_eq!(t, m.seconds);
+        assert_eq!(e, m.kwh);
+    }
+
+    #[test]
+    fn emissions_scale_with_ci() {
+        let mut meter = EnergyMeter::default();
+        meter.measure("x", || std::thread::sleep(std::time::Duration::from_millis(5)));
+        let low = meter.emissions_g(16.0);
+        let high = meter.emissions_g(335.0);
+        assert!(high > low);
+        assert!((high / low - 335.0 / 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut meter = EnergyMeter::default();
+        meter.measure("x", || ());
+        meter.reset();
+        assert!(meter.measurements().is_empty());
+        assert_eq!(meter.totals(), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities: deterministic RNG, order statistics,
+//! and a property-testing harness. This environment is offline, so `rand`
+//! and `proptest` are replaced by these in-tree equivalents.
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::{mean, quantile_lower, Summary};

@@ -1,0 +1,89 @@
+//! Tiny property-testing harness (offline replacement for `proptest`).
+//!
+//! A property is a closure over a seeded [`Rng`]; the harness runs it for a
+//! configurable number of cases with distinct deterministic seeds and, on
+//! failure, reports the failing seed so the case can be replayed exactly.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't inherit the crate's rpath to
+//! // the bundled libstdc++; the same pattern is exercised for real in
+//! // rust/tests/properties.rs)
+//! use greengen::util::proptest::check;
+//!
+//! check("addition commutes", 64, |rng| {
+//!     let (a, b) = (rng.f64(), rng.f64());
+//!     assert!((a + b - (b + a)).abs() < 1e-12);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `body` for `cases` deterministic seeds; panics with the failing seed
+/// embedded in the message on the first failure.
+pub fn check<F>(name: &str, cases: usize, body: F)
+where
+    F: Fn(&mut Rng) + std::panic::RefUnwindSafe,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            body(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property '{name}' failed at case {case} (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, mut body: F)
+where
+    F: FnMut(&mut Rng),
+{
+    let mut rng = Rng::new(seed);
+    body(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = std::sync::atomic::AtomicUsize::new(0);
+        check("counts", 10, |_| {
+            count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(*count.get_mut(), 10);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always fails", 3, |_| panic!("boom"));
+        });
+        let msg = match result {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap(),
+            Ok(_) => panic!("expected failure"),
+        };
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut seen = Vec::new();
+        replay(0x1234, |rng| seen.push(rng.next_u64()));
+        let first = seen[0];
+        replay(0x1234, |rng| assert_eq!(rng.next_u64(), first));
+    }
+}

@@ -1,0 +1,136 @@
+//! Order statistics and summary helpers shared by the estimator, the
+//! threshold logic (Eq. 5) and the benchmark harness.
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Lower empirical quantile: `q_alpha = inf{ x | F(x) >= alpha }`, i.e. the
+/// k-th smallest element with `k = ceil(alpha * n)` clamped to [1, n].
+/// This is exactly Eq. (5) of the paper and matches the L2 graph and the
+/// Python oracle bit-for-bit on f32-representable inputs.
+pub fn quantile_lower(values: &[f64], alpha: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let k = ((alpha * n as f64).ceil() as usize).clamp(1, n);
+    sorted[k - 1]
+}
+
+/// Running min/max/mean/count summary — the aggregation the Knowledge Base
+/// keeps for service (SK), interaction (IK) and node (NK) profiles
+/// (Eq. 7–9).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub min: f64,
+    pub max: f64,
+    pub sum: f64,
+    pub count: u64,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Summary {
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum: 0.0,
+            count: 0,
+        }
+    }
+}
+
+impl Summary {
+    pub fn observe(&mut self, x: f64) {
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.sum += x;
+        self.count += 1;
+    }
+
+    pub fn from_values(xs: &[f64]) -> Summary {
+        let mut s = Summary::default();
+        for &x in xs {
+            s.observe(x);
+        }
+        s
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Merge another summary into this one (used by the KB Enricher when
+    /// folding a new observation window into a stored profile).
+    pub fn merge(&mut self, other: &Summary) {
+        if other.count == 0 {
+            return;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_matches_definition() {
+        let v = vec![10.0, 20.0, 30.0, 40.0, 50.0];
+        // ceil(0.8*5)=4 -> 4th smallest = 40
+        assert_eq!(quantile_lower(&v, 0.8), 40.0);
+        assert_eq!(quantile_lower(&v, 1.0), 50.0);
+        assert_eq!(quantile_lower(&v, 0.2), 10.0);
+        // very small alpha clamps to the 1st order statistic
+        assert_eq!(quantile_lower(&v, 1e-9), 10.0);
+        assert_eq!(quantile_lower(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn quantile_unordered_input() {
+        let v = vec![50.0, 10.0, 40.0, 30.0, 20.0];
+        assert_eq!(quantile_lower(&v, 0.8), 40.0);
+    }
+
+    #[test]
+    fn summary_observe_merge() {
+        let mut a = Summary::from_values(&[1.0, 5.0, 3.0]);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 5.0);
+        assert_eq!(a.mean(), 3.0);
+        let b = Summary::from_values(&[0.0, 10.0]);
+        a.merge(&b);
+        assert_eq!(a.min, 0.0);
+        assert_eq!(a.max, 10.0);
+        assert_eq!(a.count, 5);
+        assert!((a.mean() - 3.8).abs() < 1e-12);
+        // merging an empty summary is a no-op
+        let before = a;
+        a.merge(&Summary::default());
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn mean_empty() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+}

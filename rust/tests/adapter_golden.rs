@@ -1,0 +1,108 @@
+//! Golden tests: the Constraint Adapter dialects must emit exactly the
+//! documented syntax (schedulers parse these formats; drift breaks them).
+
+use greengen::adapter::{adapter_for, JsonAdapter, MiniZincAdapter, PrologAdapter, SchedulerAdapter};
+use greengen::constraints::{Constraint, ConstraintKind};
+use greengen::jsonio;
+
+fn fixture() -> Vec<Constraint> {
+    let mut avoid = Constraint::new(
+        ConstraintKind::AvoidNode {
+            service: "frontend".into(),
+            flavour: "large".into(),
+            node: "italy".into(),
+        },
+        663.635,
+        241.682,
+        631.939,
+    );
+    avoid.weight = 1.0;
+    let mut affinity = Constraint::new(
+        ConstraintKind::Affinity {
+            service: "frontend".into(),
+            flavour: "large".into(),
+            other: "productcatalog".into(),
+        },
+        123.456,
+        123.456,
+        123.456,
+    );
+    affinity.weight = 0.186;
+    let mut prefer = Constraint::new(
+        ConstraintKind::PreferNode {
+            service: "currency".into(),
+            flavour: "tiny".into(),
+            node: "france".into(),
+        },
+        295.135,
+        107.482,
+        281.039,
+    );
+    prefer.weight = 0.445;
+    vec![avoid, affinity, prefer]
+}
+
+#[test]
+fn prolog_golden() {
+    let got = PrologAdapter.format(&fixture());
+    let want = "\
+avoidNode(d(frontend, large), italy, 1.000).
+affinity(d(frontend, large), d(productcatalog, _), 0.186).
+preferNode(d(currency, tiny), france, 0.445).
+";
+    assert_eq!(got, want);
+}
+
+#[test]
+fn json_golden_structure() {
+    let text = JsonAdapter.format(&fixture());
+    let v = jsonio::parse(&text).unwrap();
+    let arr = v.as_array().unwrap();
+    assert_eq!(arr.len(), 3);
+    let kinds: Vec<&str> = arr
+        .iter()
+        .map(|c| c.req("kind").unwrap().str_field("type").unwrap())
+        .collect();
+    assert_eq!(kinds, vec!["AvoidNode", "Affinity", "PreferNode"]);
+    // numeric fields preserved to full precision
+    assert!((arr[0].f64_field("em").unwrap() - 663.635).abs() < 1e-9);
+    assert!((arr[0].f64_field("savHi").unwrap() - 631.939).abs() < 1e-9);
+    // round-trips through the constraint codec
+    for c in arr {
+        Constraint::from_json(c).unwrap();
+    }
+}
+
+#[test]
+fn minizinc_golden_lines() {
+    let text = MiniZincAdapter.format(&fixture());
+    assert!(text.contains(
+        "var 0..1: viol_0 = bool2int(place[frontend] == italy /\\ flav[frontend] == large);"
+    ));
+    assert!(text.contains("float: w_0 = 1.0000;"));
+    assert!(text.contains(
+        "var 0..1: viol_1 = bool2int(place[frontend] != place[productcatalog] /\\ flav[frontend] == large);"
+    ));
+    assert!(text.contains(
+        "var 0..1: viol_2 = bool2int(place[currency] != france /\\ flav[currency] == tiny);"
+    ));
+    assert!(text
+        .contains("var float: green_penalty = w_0 * viol_0 + w_1 * viol_1 + w_2 * viol_2;"));
+}
+
+#[test]
+fn adapter_registry_complete() {
+    for name in ["prolog", "json", "minizinc"] {
+        let adapter = adapter_for(name).unwrap();
+        assert_eq!(adapter.name(), name);
+        assert!(!adapter.format(&fixture()).is_empty());
+    }
+    assert!(adapter_for("yaml").is_none());
+}
+
+#[test]
+fn empty_constraint_list_is_valid_output() {
+    assert_eq!(PrologAdapter.format(&[]), "");
+    let v = jsonio::parse(&JsonAdapter.format(&[])).unwrap();
+    assert_eq!(v.as_array().unwrap().len(), 0);
+}

@@ -1,0 +1,123 @@
+//! Black-box CLI tests: run the built `greengen` binary as a subprocess
+//! and check its contract (exit codes, output formats, error handling).
+
+use std::process::Command;
+
+fn greengen(args: &[&str]) -> (String, String, bool) {
+    let exe = env!("CARGO_BIN_EXE_greengen");
+    let out = Command::new(exe)
+        .args(args)
+        .output()
+        .expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_commands() {
+    let (stdout, _, ok) = greengen(&["help"]);
+    assert!(ok);
+    for cmd in ["scenario", "generate", "adaptive", "schedule", "scalability", "threshold", "timeshift"] {
+        assert!(stdout.contains(cmd), "{cmd} missing from usage");
+    }
+}
+
+#[test]
+fn scenario1_prints_paper_constraints() {
+    let (stdout, _, ok) = greengen(&["scenario", "1"]);
+    assert!(ok);
+    assert!(stdout.contains("avoidNode(d(frontend, large), italy, 1.000)."));
+    assert!(stdout.contains("avoidNode(d(frontend, large), greatbritain, 0.6"));
+}
+
+#[test]
+fn scenario_json_format_parses() {
+    let (stdout, _, ok) = greengen(&["scenario", "1", "--format", "json"]);
+    assert!(ok);
+    let json_start = stdout.find('[').unwrap();
+    let v = greengen::jsonio::parse(&stdout[json_start..]).unwrap();
+    assert!(!v.as_array().unwrap().is_empty());
+}
+
+#[test]
+fn scenario_explain_flag_adds_report() {
+    let (stdout, _, ok) = greengen(&["scenario", "1", "--explain"]);
+    assert!(ok);
+    assert!(stdout.contains("estimated emissions savings"));
+}
+
+#[test]
+fn invalid_inputs_fail_cleanly() {
+    let (_, stderr, ok) = greengen(&["scenario", "9"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown scenario"));
+
+    let (_, stderr, ok) = greengen(&["scenario", "1", "--bogus-flag"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown option"));
+
+    let (_, stderr, ok) = greengen(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"));
+}
+
+#[test]
+fn adaptive_short_run_reports_reduction() {
+    let (stdout, _, ok) = greengen(&["adaptive", "--hours", "6", "--regen", "6"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("emission reduction vs cost-only"));
+}
+
+#[test]
+fn schedule_emits_plan_and_metrics() {
+    let (stdout, _, ok) = greengen(&["schedule", "--scenario", "1"]);
+    assert!(ok);
+    assert!(stdout.contains("deploy frontend"));
+    assert!(stdout.contains("emissions="));
+}
+
+#[test]
+fn timeshift_recommends_window() {
+    let (stdout, _, ok) = greengen(&["timeshift"]);
+    assert!(ok);
+    assert!(stdout.contains("timeShift(d(email, tiny)"));
+}
+
+#[test]
+fn generate_from_files_round_trips() {
+    // write app/infra JSON via the library, feed them back through the CLI
+    let dir = std::env::temp_dir().join(format!("greengen-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut app = greengen::config::boutique::application();
+    // pre-enrich profiles (the CLI's generate path reads them from file)
+    for (service, flavour, wh, _, _) in greengen::config::boutique::TABLE1 {
+        app.service_mut(service)
+            .unwrap()
+            .flavour_mut(flavour)
+            .unwrap()
+            .energy = Some(greengen::model::EnergyProfile {
+            kwh: wh / 1000.0,
+            samples: 1,
+        });
+    }
+    let infra = greengen::config::boutique::eu_infrastructure();
+    let app_path = dir.join("app.json");
+    let infra_path = dir.join("infra.json");
+    greengen::jsonio::to_file(&app_path, &app.to_json()).unwrap();
+    greengen::jsonio::to_file(&infra_path, &infra.to_json()).unwrap();
+
+    let (stdout, stderr, ok) = greengen(&[
+        "generate",
+        "--app",
+        app_path.to_str().unwrap(),
+        "--infra",
+        infra_path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    // analytic profiles: frontend/large on italy tops the ranking
+    assert!(stdout.contains("avoidNode(d(frontend, large), italy, 1.000)."));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,148 @@
+//! End-to-end integration: the adaptive loop (monitor → learn → schedule
+//! → measure), the Prometheus interchange path, and the TimeShift
+//! extension — the cross-cutting behaviours no single module test covers.
+
+use greengen::config::scenarios;
+use greengen::constraints::TimeShiftPlanner;
+use greengen::energy::EnergyEstimator;
+use greengen::monitoring::{prometheus, MetricStore, WorkloadSimulator};
+use greengen::pipeline::{AdaptiveConfig, AdaptiveLoop, GeneratorPipeline, PipelineConfig};
+use greengen::scheduler::Objective;
+
+#[test]
+fn adaptive_loop_reduces_emissions_on_every_scenario_infra() {
+    for scenario_id in [1, 2] {
+        let scenario = scenarios::scenario(scenario_id).unwrap();
+        let mut looper = AdaptiveLoop::new(
+            PipelineConfig::default(),
+            AdaptiveConfig {
+                hours: 24,
+                regen_every: 6,
+                failure_rate: 0.0,
+                objective: Objective::default(),
+                seed: 0xE2E + scenario_id as u64,
+            },
+        );
+        let summary = looper.run(&scenario).unwrap();
+        // Reduction is bounded by what the infrastructure offers: the EU
+        // grid (16..335) leaves a huge gap, the US grid (229..570) a small
+        // one. The architecture-level claim is recovery of the achievable
+        // gap, so assert on oracle recovery.
+        assert!(
+            summary.reduction_vs_cost_only() > 0.05,
+            "scenario {scenario_id}: only {:.1}% reduction",
+            summary.reduction_vs_cost_only() * 100.0
+        );
+        // On the near-flat US grid the few surviving constraints recover
+        // just under half the (small) gap; on the EU grid > 80 %.
+        assert!(
+            summary.oracle_recovery() > 0.35,
+            "scenario {scenario_id}: only {:.1}% of the oracle gap recovered",
+            summary.oracle_recovery() * 100.0
+        );
+        // oracle sandwich: oracle <= constrained <= cost-only
+        assert!(summary.total_oracle_g <= summary.total_constrained_g + 1e-6);
+        assert!(summary.total_constrained_g <= summary.total_cost_only_g);
+    }
+}
+
+#[test]
+fn adaptive_loop_survives_heavy_failure_injection() {
+    let scenario = scenarios::scenario(1).unwrap();
+    let mut looper = AdaptiveLoop::new(
+        PipelineConfig::default(),
+        AdaptiveConfig {
+            hours: 36,
+            regen_every: 3,
+            failure_rate: 1.0, // a node fails every single epoch
+            objective: Objective::default(),
+            seed: 0xFA11,
+        },
+    );
+    let summary = looper.run(&scenario).unwrap();
+    assert_eq!(summary.epochs.len(), 12);
+    // every epoch lost a node yet all plans were feasible and green
+    assert!(summary.epochs.iter().all(|e| e.failed_node.is_some()));
+    assert!(summary.reduction_vs_cost_only() > 0.3);
+}
+
+#[test]
+fn monitoring_survives_prometheus_round_trip() {
+    // Pipeline fed from metrics that went through the text exposition
+    // format must produce identical constraints to the in-memory path.
+    let scenario = scenarios::scenario(1).unwrap();
+    let mut sim = WorkloadSimulator::new(scenario.truth.clone(), scenario.seed);
+    let store = sim.run(0.0, scenario.windows);
+
+    let text = prometheus::render(&store, 0.0, f64::INFINITY);
+    let mut round_tripped = MetricStore::new();
+    prometheus::ingest(&mut round_tripped, &text).unwrap();
+    assert_eq!(round_tripped.energy_len(), store.energy_len());
+    assert_eq!(round_tripped.traffic_len(), store.traffic_len());
+
+    let run = |store: &MetricStore| {
+        let mut pipeline = GeneratorPipeline::new(PipelineConfig::default());
+        let mut app = scenario.app.clone();
+        let mut infra = scenario.infra.clone();
+        let t = store.horizon();
+        let outcome = pipeline
+            .run_epoch(&mut app, &mut infra, store, &scenario.intensity, t)
+            .unwrap();
+        outcome
+            .ranked
+            .iter()
+            .map(|c| (c.kind.key(), (c.weight * 1e6).round()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(&store), run(&round_tripped));
+}
+
+#[test]
+fn timeshift_integrates_with_learned_profiles() {
+    let scenario = scenarios::scenario(1).unwrap();
+    let mut app = scenario.app.clone();
+    let mut sim = WorkloadSimulator::new(scenario.truth.clone(), scenario.seed);
+    let store = sim.run(0.0, scenario.windows);
+    EnergyEstimator::default().estimate(&mut app, &store);
+
+    let traces = GeneratorPipeline::trace_set(&scenario);
+    let planner = TimeShiftPlanner::new(&traces);
+    let regions: Vec<&str> = scenario.infra.nodes.iter().map(|n| n.region.as_str()).collect();
+    let recs = planner.plan(&app, &regions, store.horizon()).unwrap();
+    // the boutique preset marks email as batch-capable
+    assert_eq!(recs.len(), 1);
+    assert_eq!(recs[0].service, "email");
+    // the recommended window is a real improvement over the worst choice
+    assert!(recs[0].sav_hi > 0.0);
+    assert!(recs[0].window_ci > 0.0);
+    // France (CI 16 base) should host the greenest window in the EU set
+    assert_eq!(recs[0].region, "FR");
+}
+
+#[test]
+fn xla_and_native_pipelines_agree_through_the_adaptive_loop() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let scenario = scenarios::scenario(1).unwrap();
+    let config = AdaptiveConfig {
+        hours: 12,
+        regen_every: 6,
+        failure_rate: 0.0,
+        objective: Objective::default(),
+        seed: 0xAB,
+    };
+    let mut native = AdaptiveLoop::new(PipelineConfig::default(), config);
+    let mut accel = AdaptiveLoop::with_pipeline(
+        GeneratorPipeline::with_xla(PipelineConfig::default(), "artifacts").unwrap(),
+        config,
+    );
+    let a = native.run(&scenario).unwrap();
+    let b = accel.run(&scenario).unwrap();
+    assert_eq!(a.epochs.len(), b.epochs.len());
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(x.constraints, y.constraints);
+        assert!((x.constrained_g - y.constrained_g).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,112 @@
+//! Integration: Knowledge Base persistence across pipeline generations —
+//! the §4.4 "collection of JSON files" contract, memory-weight decay
+//! across process restarts, and recall of still-valid constraints.
+
+use greengen::config::scenarios;
+use greengen::kb::KnowledgeBase;
+use greengen::pipeline::{GeneratorPipeline, PipelineConfig};
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("greengen-kbtest-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn kb_survives_restart() {
+    let dir = tmp_dir("restart");
+    let scenario = scenarios::scenario(1).unwrap();
+
+    // first "process": learn + persist
+    let ck_before = {
+        let mut pipeline = GeneratorPipeline::new(PipelineConfig::default());
+        pipeline.run_scenario(&scenario).unwrap();
+        pipeline.kb.save(&dir).unwrap();
+        pipeline.kb.ck.len()
+    };
+    assert!(ck_before > 0);
+
+    // second "process": reload and verify identical knowledge
+    let kb = KnowledgeBase::load(&dir).unwrap();
+    assert_eq!(kb.ck.len(), ck_before);
+    assert!(!kb.sk.is_empty());
+    assert!(!kb.nk.is_empty());
+    for entry in kb.ck.values() {
+        assert_eq!(entry.mu, 1.0); // freshly generated
+        assert!(entry.constraint.em > 0.0);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn context_switch_decays_old_constraints() {
+    let dir = tmp_dir("decay");
+    // learn on the EU infrastructure
+    let mut pipeline = GeneratorPipeline::new(PipelineConfig::default());
+    pipeline.run_scenario(&scenarios::scenario(1).unwrap()).unwrap();
+    let eu_keys: Vec<String> = pipeline.kb.ck.keys().cloned().collect();
+    pipeline.kb.save(&dir).unwrap();
+
+    // resume on the US infrastructure: EU constraints are not regenerated
+    let mut pipeline = GeneratorPipeline::new(PipelineConfig::default())
+        .with_kb_dir(&dir)
+        .unwrap();
+    pipeline.run_scenario(&scenarios::scenario(2).unwrap()).unwrap();
+    let decay = pipeline.config.enricher.decay;
+    let mut seen_decayed = 0;
+    for key in &eu_keys {
+        if let Some(entry) = pipeline.kb.ck.get(key) {
+            assert!((entry.mu - decay).abs() < 1e-12, "{key}: mu {}", entry.mu);
+            seen_decayed += 1;
+        }
+    }
+    assert!(seen_decayed > 0, "EU constraints should persist with decayed mu");
+    // and the US ones are fresh
+    assert!(pipeline
+        .kb
+        .ck
+        .values()
+        .any(|e| (e.mu - 1.0).abs() < 1e-12));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_constraints_eventually_evicted() {
+    let mut pipeline = GeneratorPipeline::new(PipelineConfig::default());
+    // learn EU constraints once
+    pipeline.run_scenario(&scenarios::scenario(1).unwrap()).unwrap();
+    let eu_ck = pipeline.kb.ck.len();
+    assert!(eu_ck > 0);
+    // then run the US scenario many times; EU entries decay below the
+    // floor and disappear
+    let us = scenarios::scenario(2).unwrap();
+    for _ in 0..12 {
+        pipeline.run_scenario(&us).unwrap();
+    }
+    for (key, entry) in &pipeline.kb.ck {
+        assert!(
+            entry.mu >= pipeline.config.enricher.drop_below,
+            "{key} kept below floor"
+        );
+    }
+    // all surviving constraints reference US nodes
+    let us_nodes = ["washington", "california", "texas", "florida", "newyork", "arizona"];
+    for entry in pipeline.kb.ck.values() {
+        if let greengen::constraints::ConstraintKind::AvoidNode { node, .. } =
+            &entry.constraint.kind
+        {
+            assert!(us_nodes.contains(&node.as_str()), "stale EU node {node} survived");
+        }
+    }
+}
+
+#[test]
+fn corrupted_kb_file_is_an_error_not_a_panic() {
+    let dir = tmp_dir("corrupt");
+    std::fs::write(dir.join("ck.json"), "{not json").unwrap();
+    std::fs::write(dir.join("sk.json"), "[]").unwrap();
+    std::fs::write(dir.join("ik.json"), "[]").unwrap();
+    std::fs::write(dir.join("nk.json"), "[]").unwrap();
+    assert!(KnowledgeBase::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

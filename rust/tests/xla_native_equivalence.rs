@@ -1,0 +1,142 @@
+//! Integration: the XLA (PJRT, AOT HLO artifacts) and native backends must
+//! produce identical analytics outputs (up to f32 rounding), including
+//! under padding — the core cross-layer correctness signal on the Rust
+//! side, mirroring python/tests.
+//!
+//! Requires `make artifacts` to have produced `artifacts/manifest.json`.
+
+use greengen::runtime::{AnalyticsBackend, AnalyticsInput, NativeBackend, XlaBackend};
+use greengen::util::Rng;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what} length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() / denom < 1e-5,
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+fn compare(input: &AnalyticsInput, xla: &XlaBackend) {
+    let native = NativeBackend.run(input).unwrap();
+    let accel = xla.run(input).unwrap();
+    assert_close(&accel.impact, &native.impact, "impact");
+    assert_close(&[accel.tau], &[native.tau], "tau");
+    assert_close(&[accel.gmax], &[native.gmax], "gmax");
+    assert_close(&accel.row_min, &native.row_min, "row_min");
+    assert_close(&accel.row_max, &native.row_max, "row_max");
+    assert_close(&accel.row_max2, &native.row_max2, "row_max2");
+    assert_close(&accel.sav_hi, &native.sav_hi, "sav_hi");
+    assert_close(&accel.sav_lo, &native.sav_lo, "sav_lo");
+}
+
+fn random_input(rng: &mut Rng, rows: usize, nodes: usize, density: f64) -> AnalyticsInput {
+    let e: Vec<f32> = (0..rows).map(|_| rng.range(0.0, 5.0) as f32).collect();
+    let c: Vec<f32> = (0..nodes).map(|_| rng.range(0.0, 700.0) as f32).collect();
+    let mask: Vec<f32> = (0..rows * nodes)
+        .map(|_| if rng.chance(density) { 1.0 } else { 0.0 })
+        .collect();
+    let pool: Vec<f32> = (0..rows / 2).map(|_| rng.range(0.0, 200.0) as f32).collect();
+    AnalyticsInput {
+        e,
+        c,
+        mask,
+        pool,
+        alpha: 0.8,
+    }
+}
+
+#[test]
+fn paper_scenario1_shapes() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let xla = XlaBackend::from_default_artifacts().unwrap();
+    // Online Boutique: 15 flavour rows x 5 EU nodes (Tables 1-2)
+    let e = vec![
+        1.981, 1.585, 1.189, 0.134, 0.107, 0.539, 0.431, 0.989, 0.791, 0.251, 0.546, 0.098,
+        0.881, 0.034, 0.050,
+    ]
+    .into_iter()
+    .map(|x: f64| x as f32)
+    .collect::<Vec<f32>>();
+    let c = vec![16.0, 88.0, 132.0, 213.0, 335.0];
+    let input = AnalyticsInput {
+        mask: vec![1.0; e.len() * c.len()],
+        e,
+        c,
+        pool: vec![0.01, 0.02, 0.004],
+        alpha: 0.8,
+    };
+    compare(&input, &xla);
+}
+
+#[test]
+fn randomized_instances_across_buckets() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let xla = XlaBackend::from_default_artifacts().unwrap();
+    let mut rng = Rng::new(0xE0E0);
+    // Shapes straddling several bucket boundaries, incl. exact fits.
+    for (rows, nodes) in [
+        (1usize, 1usize),
+        (3, 7),
+        (64, 8),
+        (65, 8),
+        (64, 9),
+        (100, 30),
+        (130, 40),
+        (512, 128),
+    ] {
+        for density in [1.0, 0.6, 0.1] {
+            let input = random_input(&mut rng, rows, nodes, density);
+            compare(&input, &xla);
+        }
+    }
+}
+
+#[test]
+fn all_masked_instance() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let xla = XlaBackend::from_default_artifacts().unwrap();
+    let input = AnalyticsInput {
+        e: vec![1.0; 10],
+        c: vec![100.0; 4],
+        mask: vec![0.0; 40],
+        pool: vec![],
+        alpha: 0.8,
+    };
+    compare(&input, &xla);
+}
+
+#[test]
+fn oversize_instance_reports_error() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let xla = XlaBackend::from_default_artifacts().unwrap();
+    let rows = 5000; // larger than the biggest bucket (4096)
+    let input = AnalyticsInput {
+        e: vec![1.0; rows],
+        c: vec![1.0; 4],
+        mask: vec![1.0; rows * 4],
+        pool: vec![],
+        alpha: 0.8,
+    };
+    let err = xla.run(&input);
+    assert!(err.is_err());
+    assert!(err.unwrap_err().to_string().contains("exceeds"));
+}
