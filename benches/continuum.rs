@@ -1,0 +1,127 @@
+//! Bench: sharded multi-cluster scheduling vs monolithic greedy on
+//! continuum-scale topologies (≥ 500 nodes), plus parity fixtures where
+//! the sharded objective must stay within 5% of the monolithic one.
+//!
+//! Writes `BENCH_continuum.json` into the working directory so the
+//! numbers can be committed as the perf-trajectory baseline.
+
+use greengen::constraints::Constraint;
+use greengen::constraints::{ConstraintGenerator, GeneratorConfig};
+use greengen::continuum::{ShardedScheduler, ZonePartitioner};
+use greengen::jsonio::Value;
+use greengen::model::{Application, Infrastructure};
+use greengen::runtime::NativeBackend;
+use greengen::scheduler::{GreedyScheduler, Objective, Problem, Scheduler};
+use greengen::simulate::{topology, Topology, TopologySpec};
+use std::time::Instant;
+
+fn ranked_constraints(app: &Application, infra: &Infrastructure) -> Vec<Constraint> {
+    let backend = NativeBackend;
+    let generated = ConstraintGenerator::new(&backend)
+        .with_config(GeneratorConfig {
+            alpha: 0.8,
+            use_prolog: false,
+        })
+        .generate(app, infra)
+        .expect("constraint generation");
+    greengen::ranker::Ranker::default().rank_fresh(&generated.constraints)
+}
+
+/// Best-of-N wall clock for one solve.
+fn time_solver<S: Scheduler>(solver: &S, problem: &Problem, reps: usize) -> (f64, f64) {
+    let mut best = f64::INFINITY;
+    let mut objective = 0.0;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let plan = solver.schedule(problem).expect("solve");
+        let dt = t0.elapsed().as_secs_f64();
+        if dt < best {
+            best = dt;
+        }
+        objective = problem.objective_value(&problem.to_assignment(&plan).unwrap());
+    }
+    (best, objective)
+}
+
+fn case(
+    topo: Topology,
+    nodes: usize,
+    services: usize,
+    zones: usize,
+    reps: usize,
+) -> Value {
+    let spec = TopologySpec::new(topo, nodes, services)
+        .with_zones(zones)
+        .with_seed(0xBE5C);
+    let (app, infra) = topology::generate(&spec);
+    let constraints = ranked_constraints(&app, &infra);
+    let problem = Problem {
+        app: &app,
+        infra: &infra,
+        constraints: &constraints,
+        objective: Objective::default(),
+    };
+    let (mono_s, mono_obj) = time_solver(&GreedyScheduler::default(), &problem, reps);
+    let sharded = ShardedScheduler {
+        partitioner: ZonePartitioner::with_zones(zones),
+        ..ShardedScheduler::default()
+    };
+    let (shard_s, shard_obj) = time_solver(&sharded, &problem, reps);
+    let sequential = ShardedScheduler {
+        parallel: false,
+        ..sharded
+    };
+    let (seq_s, _) = time_solver(&sequential, &problem, reps);
+    let speedup = mono_s / shard_s.max(1e-9);
+    let gap = (shard_obj - mono_obj) / mono_obj.max(1e-9);
+    println!(
+        "{:<22} {:>5}n x {:>5}s x {:>2}z  mono {:>8.1} ms  sharded {:>8.1} ms (seq {:>8.1} ms)  \
+         speedup x{:>5.2}  objective gap {:>+6.2}%",
+        topo.name(),
+        nodes,
+        services,
+        zones,
+        mono_s * 1e3,
+        shard_s * 1e3,
+        seq_s * 1e3,
+        speedup,
+        gap * 100.0
+    );
+    Value::object(vec![
+        ("topology", Value::from(topo.name())),
+        ("nodes", Value::from(nodes as f64)),
+        ("services", Value::from(services as f64)),
+        ("zones", Value::from(zones as f64)),
+        ("monolithic_ms", Value::from(mono_s * 1e3)),
+        ("sharded_ms", Value::from(shard_s * 1e3)),
+        ("sharded_sequential_ms", Value::from(seq_s * 1e3)),
+        ("speedup", Value::from(speedup)),
+        ("monolithic_objective", Value::from(mono_obj)),
+        ("sharded_objective", Value::from(shard_obj)),
+        ("objective_gap", Value::from(gap)),
+    ])
+}
+
+fn main() {
+    println!("# continuum bench: monolithic greedy vs sharded (best of N)");
+    let mut cases = Vec::new();
+    // the acceptance-scale point first: 500 nodes, 1000 services
+    cases.push(case(Topology::GeoRegions, 500, 1000, 8, 3));
+    cases.push(case(Topology::CloudEdgeHierarchy, 600, 900, 8, 3));
+    cases.push(case(Topology::IotSwarm, 500, 600, 8, 3));
+    cases.push(case(Topology::HybridBurst, 500, 800, 8, 3));
+    // parity fixtures: mid-size instances where the 5% objective bound
+    // must hold (small ones delegate and are exactly equal by design)
+    println!("# parity fixtures");
+    cases.push(case(Topology::GeoRegions, 60, 120, 4, 3));
+    cases.push(case(Topology::CloudEdgeHierarchy, 80, 120, 4, 3));
+
+    let out = Value::object(vec![
+        ("bench", Value::from("continuum")),
+        ("status", Value::from("measured")),
+        ("results", Value::array(cases)),
+    ]);
+    let path = std::path::Path::new("BENCH_continuum.json");
+    greengen::jsonio::to_file(path, &out).expect("write BENCH_continuum.json");
+    println!("wrote {}", path.display());
+}

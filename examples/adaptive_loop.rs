@@ -35,6 +35,8 @@ fn run_pass(label: &str, failure_rate: f64, csv: &mut String) -> greengen::Resul
             failure_rate,
             objective: Objective::default(),
             seed: 0xE2E,
+            incremental: false,
+            zones: 0,
         },
     );
     let summary = looper.run(&scenario)?;

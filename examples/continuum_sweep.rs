@@ -1,0 +1,116 @@
+//! Continuum sweep: run the sharded multi-cluster scheduler across every
+//! named topology shape and compare it against the monolithic greedy
+//! solver, then demonstrate incremental re-planning under per-zone carbon
+//! drift.
+//!
+//! ```sh
+//! cargo run --release --example continuum_sweep
+//! ```
+
+use greengen::constraints::{Constraint, ConstraintGenerator, GeneratorConfig};
+use greengen::continuum::{IncrementalReplanner, ShardedScheduler, ZonePartitioner};
+use greengen::model::{Application, Infrastructure};
+use greengen::runtime::NativeBackend;
+use greengen::scheduler::{evaluate, GreedyScheduler, Objective, Problem, Scheduler};
+use greengen::simulate::{topology, Topology, TopologySpec};
+use std::time::Instant;
+
+fn learn_constraints(app: &Application, infra: &Infrastructure) -> Vec<Constraint> {
+    let backend = NativeBackend;
+    let generated = ConstraintGenerator::new(&backend)
+        .with_config(GeneratorConfig {
+            alpha: 0.8,
+            use_prolog: false,
+        })
+        .generate(app, infra)
+        .expect("generation");
+    greengen::ranker::Ranker::default().rank_fresh(&generated.constraints)
+}
+
+fn main() -> greengen::Result<()> {
+    const NODES: usize = 200;
+    const SERVICES: usize = 400;
+    const ZONES: usize = 6;
+
+    println!("=== sharded vs monolithic across the topology fleet ===");
+    println!("{NODES} nodes x {SERVICES} services x {ZONES} zones\n");
+    for topo in Topology::ALL {
+        let spec = TopologySpec::new(topo, NODES, SERVICES)
+            .with_zones(ZONES)
+            .with_seed(0x5EED);
+        let (app, infra) = topology::generate(&spec);
+        let constraints = learn_constraints(&app, &infra);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+
+        let t0 = Instant::now();
+        let mono = GreedyScheduler::default().schedule(&problem)?;
+        let mono_s = t0.elapsed().as_secs_f64();
+        let m_mono = evaluate(&problem, &mono)?;
+
+        let sharded = ShardedScheduler {
+            partitioner: ZonePartitioner::with_zones(ZONES),
+            ..ShardedScheduler::default()
+        };
+        let t0 = Instant::now();
+        let (plan, stats) = sharded.schedule_with_stats(&problem)?;
+        let shard_s = t0.elapsed().as_secs_f64();
+        let m_shard = evaluate(&problem, &plan)?;
+
+        println!(
+            "{:<22} mono {:>7.1} ms / {:>9.1} g   sharded {:>7.1} ms / {:>9.1} g   \
+             x{:.2} ({} zones, {} repaired)",
+            topo.name(),
+            mono_s * 1e3,
+            m_mono.emissions_g,
+            shard_s * 1e3,
+            m_shard.emissions_g,
+            mono_s / shard_s.max(1e-9),
+            stats.zones,
+            stats.repair_placed,
+        );
+    }
+
+    println!("\n=== incremental re-planning under per-zone carbon drift ===");
+    let spec = TopologySpec::new(Topology::GeoRegions, NODES, SERVICES)
+        .with_zones(ZONES)
+        .with_seed(0x5EED);
+    let (app, mut infra) = topology::generate(&spec);
+    let constraints = learn_constraints(&app, &infra);
+    let mut rp = IncrementalReplanner::new(ShardedScheduler {
+        partitioner: ZonePartitioner::with_zones(ZONES),
+        ..ShardedScheduler::default()
+    });
+    for epoch in 0..6 {
+        if epoch > 0 {
+            // one zone's grid browns out / recovers; the rest is stable
+            let zone = format!("z{:02}", epoch % ZONES);
+            for n in &mut infra.nodes {
+                if n.zone.as_deref() == Some(zone.as_str()) {
+                    let factor = if epoch % 2 == 0 { 0.5 } else { 2.0 };
+                    n.profile.carbon = Some((n.carbon() * factor).clamp(10.0, 650.0));
+                }
+            }
+        }
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let t0 = Instant::now();
+        let outcome = rp.replan(&problem)?;
+        println!(
+            "epoch {epoch}: re-solved {}/{} zones, reused {} placements, {:.1} ms",
+            outcome.dirty_zones.len(),
+            outcome.total_zones,
+            outcome.reused_placements,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    Ok(())
+}

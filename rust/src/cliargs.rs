@@ -71,6 +71,15 @@ impl Args {
         }
     }
 
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.opt(name) {
             None => Ok(default),
@@ -127,7 +136,15 @@ mod tests {
     fn typed_errors() {
         let args = parse("x --n abc");
         assert!(args.usize_or("n", 1).is_err());
+        assert!(args.u64_or("n", 1).is_err());
         assert!(args.f64_or("n", 1.0).is_err());
+    }
+
+    #[test]
+    fn u64_parses_large_seeds() {
+        let args = parse("x --seed 18446744073709551615");
+        assert_eq!(args.u64_or("seed", 0).unwrap(), u64::MAX);
+        assert_eq!(args.u64_or("missing", 7).unwrap(), 7);
     }
 
     #[test]

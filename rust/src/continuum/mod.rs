@@ -1,0 +1,25 @@
+//! `continuum` — sharded multi-cluster scheduling for the cloud-edge
+//! continuum.
+//!
+//! The paper evaluates one cluster and ~100 services; this subsystem
+//! scales the same adaptive loop to geo-distributed fleets:
+//!
+//! * [`partition`] — split an infrastructure into zones (explicit labels,
+//!   regions, or capacity-balanced chunks) and co-shard chatty service
+//!   groups using the learned communication affinities.
+//! * [`shard`] — solve zones concurrently on scoped threads, then repair
+//!   across zone boundaries; small instances delegate to the monolithic
+//!   solvers so their plans stay bit-identical.
+//! * [`replan`] — between adaptive epochs, re-schedule only the zones
+//!   whose carbon intensity, node set or constraint set changed, carrying
+//!   the previous plan for the rest.
+//!
+//! Fleet-scale test topologies come from [`crate::simulate::topology`].
+
+pub mod partition;
+pub mod replan;
+pub mod shard;
+
+pub use partition::{Partition, PartitionConfig, Zone, ZonePartitioner};
+pub use replan::{IncrementalReplanner, ReplanConfig, ReplanOutcome};
+pub use shard::{ShardStats, ShardedScheduler};

@@ -1,0 +1,499 @@
+//! Zone partitioner: split an [`Infrastructure`] into scheduling zones and
+//! assign services to zones so that chatty service groups stay co-sharded.
+//!
+//! Node zoning honours, in priority order: the explicit `zone` label, the
+//! grid `region`, and — when neither carries grouping information (every
+//! node in its own region, as the flat random generators produce) — a
+//! capacity-balanced chunking into a target zone count.
+//!
+//! Service assignment uses the *learned communication affinities*: the
+//! generator's `Affinity` constraints and the estimator's per-link energy
+//! profiles define an affinity graph; a size-capped greedy agglomeration
+//! (heaviest edges first) forms co-sharded groups, and groups are then
+//! packed onto zones by capacity, biased toward zones holding their
+//! `PreferNode` targets.
+
+use crate::constraints::{Constraint, ConstraintKind};
+use crate::model::{Application, Infrastructure};
+use std::collections::HashMap;
+
+/// Partitioner knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PartitionConfig {
+    /// Zone count used when node labels/regions carry no grouping
+    /// information. `0` = auto (≈ √nodes, capped at 16).
+    pub target_zones: usize,
+    /// Cap on a co-sharded group, as a multiple of the mean per-zone
+    /// service count (prevents one giant component from serialising the
+    /// whole solve).
+    pub max_group_factor: f64,
+}
+
+impl Default for PartitionConfig {
+    fn default() -> Self {
+        PartitionConfig {
+            target_zones: 0,
+            max_group_factor: 1.5,
+        }
+    }
+}
+
+/// One scheduling zone: a slice of the infrastructure plus the services
+/// assigned to it.
+#[derive(Debug, Clone)]
+pub struct Zone {
+    pub name: String,
+    /// Indices into `infra.nodes`.
+    pub nodes: Vec<usize>,
+    /// Indices into `app.services`.
+    pub services: Vec<usize>,
+    /// Total CPU capacity of the zone's nodes.
+    pub cpu_capacity: f64,
+}
+
+/// A complete partition of one problem instance.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub zones: Vec<Zone>,
+    /// service index -> zone index.
+    pub zone_of_service: Vec<usize>,
+    /// node index -> zone index.
+    pub zone_of_node: Vec<usize>,
+}
+
+impl Partition {
+    /// Services with at least one communication link or affinity
+    /// constraint crossing a zone boundary — the candidates for the
+    /// cross-zone repair/improvement pass.
+    pub fn boundary_services(&self, app: &Application, constraints: &[Constraint]) -> Vec<usize> {
+        let idx: HashMap<&str, usize> = app
+            .services
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.id.as_str(), i))
+            .collect();
+        let mut boundary = vec![false; app.services.len()];
+        let mut mark_pair = |a: &str, b: &str, boundary: &mut Vec<bool>| {
+            if let (Some(&i), Some(&j)) = (idx.get(a), idx.get(b)) {
+                if self.zone_of_service[i] != self.zone_of_service[j] {
+                    boundary[i] = true;
+                    boundary[j] = true;
+                }
+            }
+        };
+        for link in &app.links {
+            mark_pair(&link.from, &link.to, &mut boundary);
+        }
+        for c in constraints {
+            if let ConstraintKind::Affinity { service, other, .. } = &c.kind {
+                mark_pair(service, other, &mut boundary);
+            }
+        }
+        boundary
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| **b)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// The partitioner.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ZonePartitioner {
+    pub config: PartitionConfig,
+}
+
+impl ZonePartitioner {
+    pub fn new(config: PartitionConfig) -> Self {
+        ZonePartitioner { config }
+    }
+
+    /// Fixed zone count (overrides auto-detection when labels are absent).
+    pub fn with_zones(target_zones: usize) -> Self {
+        ZonePartitioner {
+            config: PartitionConfig {
+                target_zones,
+                ..PartitionConfig::default()
+            },
+        }
+    }
+
+    /// Partition the instance. Always yields ≥ 1 zone covering every node;
+    /// every service is assigned to exactly one zone.
+    pub fn partition(
+        &self,
+        app: &Application,
+        infra: &Infrastructure,
+        constraints: &[Constraint],
+    ) -> Partition {
+        let (zone_names, zone_of_node) = self.zone_nodes(infra);
+        let n_zones = zone_names.len();
+        let mut zones: Vec<Zone> = zone_names
+            .into_iter()
+            .map(|name| Zone {
+                name,
+                nodes: Vec::new(),
+                services: Vec::new(),
+                cpu_capacity: 0.0,
+            })
+            .collect();
+        for (ni, &z) in zone_of_node.iter().enumerate() {
+            zones[z].nodes.push(ni);
+            zones[z].cpu_capacity += infra.nodes[ni].capabilities.cpu;
+        }
+
+        // --- service affinity groups ---------------------------------
+        let groups = self.service_groups(app, constraints, n_zones);
+
+        // --- pack groups onto zones ----------------------------------
+        let mut zone_of_service = vec![0usize; app.services.len()];
+        let mut remaining: Vec<f64> = zones.iter().map(|z| z.cpu_capacity).collect();
+        // group demand: cheapest-flavour CPU of each member
+        let demand_of = |si: usize| -> f64 {
+            app.services[si]
+                .flavours
+                .iter()
+                .map(|f| f.requirements.cpu)
+                .fold(f64::INFINITY, f64::min)
+                .max(0.0)
+        };
+        let pref = preferred_zone_weights(app, infra, constraints, &zone_of_node, n_zones);
+        let mut order: Vec<usize> = (0..groups.len()).collect();
+        let group_demand: Vec<f64> = groups
+            .iter()
+            .map(|g| g.iter().map(|&si| demand_of(si)).sum())
+            .collect();
+        order.sort_by(|&a, &b| {
+            group_demand[b]
+                .partial_cmp(&group_demand[a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for gi in order {
+            let demand = group_demand[gi];
+            // PreferNode pull of this group toward each zone
+            let mut pull = vec![0.0f64; n_zones];
+            for &si in &groups[gi] {
+                for (z, w) in &pref[si] {
+                    pull[*z] += w;
+                }
+            }
+            let fits: Vec<bool> = (0..n_zones).map(|z| remaining[z] >= demand).collect();
+            let best = (0..n_zones)
+                .max_by(|&a, &b| {
+                    (fits[a], pull[a], remaining[a])
+                        .partial_cmp(&(fits[b], pull[b], remaining[b]))
+                        .unwrap()
+                })
+                .unwrap_or(0);
+            for &si in &groups[gi] {
+                zone_of_service[si] = best;
+            }
+            remaining[best] -= demand;
+        }
+        for (si, &z) in zone_of_service.iter().enumerate() {
+            zones[z].services.push(si);
+        }
+
+        Partition {
+            zones,
+            zone_of_service,
+            zone_of_node,
+        }
+    }
+
+    /// Derive zone membership for nodes. Returns (zone names, node->zone).
+    fn zone_nodes(&self, infra: &Infrastructure) -> (Vec<String>, Vec<usize>) {
+        let n = infra.nodes.len();
+        if n == 0 {
+            return (vec!["z0".to_string()], Vec::new());
+        }
+        // explicit zone label, falling back to the grid region
+        let keys: Vec<&str> = infra
+            .nodes
+            .iter()
+            .map(|nd| nd.zone.as_deref().unwrap_or(nd.region.as_str()))
+            .collect();
+        let mut seen: HashMap<&str, usize> = HashMap::new();
+        let mut names: Vec<String> = Vec::new();
+        let mut zone_of_node = Vec::with_capacity(n);
+        for &k in &keys {
+            let next = names.len();
+            let z = *seen.entry(k).or_insert_with(|| {
+                names.push(k.to_string());
+                next
+            });
+            zone_of_node.push(z);
+        }
+        // labels carry grouping information only if they actually group:
+        // fewer distinct keys than nodes (≥ 2 nodes somewhere) and more
+        // than one zone overall
+        let grouped = names.len() >= 2 && names.len() < n;
+        if grouped {
+            return (names, zone_of_node);
+        }
+        // flat namespace: balanced chunking into the target zone count
+        let target = if self.config.target_zones > 0 {
+            self.config.target_zones.clamp(1, n)
+        } else {
+            ((n as f64).sqrt().round() as usize).clamp(1, 16)
+        };
+        if target <= 1 {
+            return (vec!["z0".to_string()], vec![0; n]);
+        }
+        let names: Vec<String> = (0..target).map(|z| format!("z{z:02}")).collect();
+        let zone_of_node = (0..n).map(|i| i % target).collect();
+        (names, zone_of_node)
+    }
+
+    /// Agglomerate services into co-sharded groups along the affinity
+    /// graph, heaviest edges first, with a per-group size cap.
+    fn service_groups(
+        &self,
+        app: &Application,
+        constraints: &[Constraint],
+        n_zones: usize,
+    ) -> Vec<Vec<usize>> {
+        let n = app.services.len();
+        let idx: HashMap<&str, usize> = app
+            .services
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.id.as_str(), i))
+            .collect();
+        // edge list: (weight, i, j). Link weight = max per-flavour kWh;
+        // affinity-constraint weight (already in [0,1] after ranking, or
+        // its raw em before) dominates by adding on top.
+        let mut edges: HashMap<(usize, usize), f64> = HashMap::new();
+        let mut add = |a: usize, b: usize, w: f64, edges: &mut HashMap<(usize, usize), f64>| {
+            if a == b || w <= 0.0 {
+                return;
+            }
+            let key = (a.min(b), a.max(b));
+            *edges.entry(key).or_insert(0.0) += w;
+        };
+        for link in &app.links {
+            if let (Some(&i), Some(&j)) = (idx.get(link.from.as_str()), idx.get(link.to.as_str()))
+            {
+                let kwh = link.energy.iter().map(|(_, e)| *e).fold(0.0, f64::max);
+                add(i, j, kwh, &mut edges);
+            }
+        }
+        for c in constraints {
+            if let ConstraintKind::Affinity { service, other, .. } = &c.kind {
+                if let (Some(&i), Some(&j)) = (idx.get(service.as_str()), idx.get(other.as_str()))
+                {
+                    // a generated affinity is a strong co-shard signal
+                    let w = if c.weight > 0.0 { c.weight } else { 1.0 };
+                    add(i, j, 10.0 * w, &mut edges);
+                }
+            }
+        }
+        let mut edge_list: Vec<((usize, usize), f64)> = edges.into_iter().collect();
+        edge_list.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+
+        // size-capped union-find
+        let cap = if n_zones <= 1 {
+            n.max(1)
+        } else {
+            (((n as f64 / n_zones as f64) * self.config.max_group_factor).ceil() as usize).max(2)
+        };
+        let mut parent: Vec<usize> = (0..n).collect();
+        let mut size: Vec<usize> = vec![1; n];
+        fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
+            while parent[x] != x {
+                parent[x] = parent[parent[x]];
+                x = parent[x];
+            }
+            x
+        }
+        for ((i, j), _w) in edge_list {
+            let (ri, rj) = (find(&mut parent, i), find(&mut parent, j));
+            if ri != rj && size[ri] + size[rj] <= cap {
+                let (big, small) = if size[ri] >= size[rj] { (ri, rj) } else { (rj, ri) };
+                parent[small] = big;
+                size[big] += size[small];
+            }
+        }
+        let mut groups: HashMap<usize, Vec<usize>> = HashMap::new();
+        for s in 0..n {
+            let r = find(&mut parent, s);
+            groups.entry(r).or_default().push(s);
+        }
+        let mut out: Vec<Vec<usize>> = groups.into_values().collect();
+        // deterministic order: by smallest member index
+        out.sort_by_key(|g| g.iter().copied().min().unwrap_or(usize::MAX));
+        out
+    }
+}
+
+/// Per-service `(zone, weight)` pull from PreferNode constraints.
+fn preferred_zone_weights(
+    app: &Application,
+    infra: &Infrastructure,
+    constraints: &[Constraint],
+    zone_of_node: &[usize],
+    n_zones: usize,
+) -> Vec<Vec<(usize, f64)>> {
+    let svc_idx: HashMap<&str, usize> = app
+        .services
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (s.id.as_str(), i))
+        .collect();
+    let node_idx: HashMap<&str, usize> = infra
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| (n.id.as_str(), i))
+        .collect();
+    let mut out = vec![Vec::new(); app.services.len()];
+    if n_zones == 0 {
+        return out;
+    }
+    for c in constraints {
+        if let ConstraintKind::PreferNode { service, node, .. } = &c.kind {
+            if let (Some(&si), Some(&ni)) =
+                (svc_idx.get(service.as_str()), node_idx.get(node.as_str()))
+            {
+                let w = if c.weight > 0.0 { c.weight } else { 0.5 };
+                out[si].push((zone_of_node[ni], w));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CommLink, Flavour, Node, Service};
+
+    fn labelled_infra() -> Infrastructure {
+        let mut infra = Infrastructure::new("i");
+        for (id, zone) in [("a1", "za"), ("a2", "za"), ("b1", "zb"), ("b2", "zb")] {
+            let mut n = Node::new(id, "XX");
+            n.zone = Some(zone.to_string());
+            n.capabilities.cpu = 16.0;
+            infra.nodes.push(n);
+        }
+        infra
+    }
+
+    fn app_with_pair() -> Application {
+        let mut app = Application::new("t");
+        for id in ["w", "x", "y", "z"] {
+            let mut s = Service::new(id);
+            s.flavours = vec![Flavour::new("std")];
+            s.flavour_mut("std").unwrap().requirements.cpu = 1.0;
+            app.services.push(s);
+        }
+        // w <-> x chat heavily; y, z are silent
+        let mut l = CommLink::new("w", "x");
+        l.energy = vec![("std".into(), 0.8)];
+        app.links.push(l);
+        app
+    }
+
+    #[test]
+    fn explicit_zone_labels_win() {
+        let infra = labelled_infra();
+        let app = app_with_pair();
+        let p = ZonePartitioner::default().partition(&app, &infra, &[]);
+        assert_eq!(p.zones.len(), 2);
+        assert_eq!(p.zones[0].name, "za");
+        assert_eq!(p.zones[1].name, "zb");
+        assert_eq!(p.zone_of_node, vec![0, 0, 1, 1]);
+        // every node and service in exactly one zone
+        let node_total: usize = p.zones.iter().map(|z| z.nodes.len()).sum();
+        let svc_total: usize = p.zones.iter().map(|z| z.services.len()).sum();
+        assert_eq!(node_total, 4);
+        assert_eq!(svc_total, 4);
+    }
+
+    #[test]
+    fn chatty_pair_is_co_sharded() {
+        let infra = labelled_infra();
+        let app = app_with_pair();
+        let p = ZonePartitioner::default().partition(&app, &infra, &[]);
+        assert_eq!(p.zone_of_service[0], p.zone_of_service[1], "w and x split");
+    }
+
+    #[test]
+    fn affinity_constraint_forces_co_shard() {
+        let infra = labelled_infra();
+        let mut app = app_with_pair();
+        app.links.clear(); // no link signal; constraint only
+        let mut c = Constraint::new(
+            ConstraintKind::Affinity {
+                service: "y".into(),
+                flavour: "std".into(),
+                other: "z".into(),
+            },
+            50.0,
+            50.0,
+            50.0,
+        );
+        c.weight = 0.9;
+        let p = ZonePartitioner::default().partition(&app, &infra, &[c]);
+        assert_eq!(p.zone_of_service[2], p.zone_of_service[3], "y and z split");
+    }
+
+    #[test]
+    fn flat_regions_fall_back_to_balanced_chunking() {
+        let mut rng = crate::util::Rng::new(11);
+        let infra = crate::simulate::random_infrastructure(&mut rng, 40);
+        let app = crate::simulate::random_application(&mut rng, 30);
+        let p = ZonePartitioner::with_zones(4).partition(&app, &infra, &[]);
+        assert_eq!(p.zones.len(), 4);
+        for z in &p.zones {
+            assert_eq!(z.nodes.len(), 10);
+        }
+    }
+
+    #[test]
+    fn single_node_instance_yields_one_zone() {
+        let mut infra = Infrastructure::new("i");
+        infra.nodes.push(Node::new("only", "XX"));
+        let app = app_with_pair();
+        let p = ZonePartitioner::default().partition(&app, &infra, &[]);
+        assert_eq!(p.zones.len(), 1);
+        assert!(p.zone_of_service.iter().all(|&z| z == 0));
+    }
+
+    #[test]
+    fn boundary_services_detect_cross_zone_links() {
+        let infra = labelled_infra();
+        let mut app = app_with_pair();
+        // force w/x apart with a tiny group cap
+        let partitioner = ZonePartitioner::new(PartitionConfig {
+            target_zones: 0,
+            max_group_factor: 0.1,
+        });
+        let p = partitioner.partition(&app, &infra, &[]);
+        // add a link between services in different zones
+        let (zi, zj) = (p.zone_of_service[0], p.zone_of_service[1]);
+        if zi == zj {
+            // cap still merged them — craft a direct split check instead
+            app.links.push({
+                let mut l = CommLink::new("y", "z");
+                l.energy = vec![("std".into(), 0.1)];
+                l
+            });
+        }
+        let boundary = p.boundary_services(&app, &[]);
+        // boundary is consistent: each listed service really has a
+        // cross-zone link
+        for &si in &boundary {
+            let id = &app.services[si].id;
+            assert!(app.links.iter().any(|l| {
+                (&l.from == id || &l.to == id) && {
+                    let i = app.services.iter().position(|s| s.id == l.from).unwrap();
+                    let j = app.services.iter().position(|s| s.id == l.to).unwrap();
+                    p.zone_of_service[i] != p.zone_of_service[j]
+                }
+            }));
+        }
+    }
+}

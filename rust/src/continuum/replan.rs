@@ -1,0 +1,549 @@
+//! Incremental re-planner for the adaptive loop: between epochs, only
+//! *dirty* zones — zones whose carbon intensity, node set, capacities or
+//! constraint set changed — are re-scheduled; the previous epoch's
+//! placements are carried for everything else.
+//!
+//! Dirtiness is decided by a per-zone fingerprint over (a) the zone's
+//! nodes (id, rounded carbon intensity, capacities, price, placement
+//! attributes), (b) the ids and resource requirements of the services
+//! assigned to the zone, and (c) the constraints touching the zone
+//! (stable key + rounded weight). Energy-profile drift alone does *not*
+//! dirty a zone: in the paper's architecture the green signal reaches the
+//! scheduler exclusively through the generated constraints, so a profile
+//! change without a constraint change cannot alter the plan.
+
+use super::partition::Partition;
+use super::shard::{build_sub, repair, solve_zones, ShardedScheduler};
+use crate::constraints::ConstraintKind;
+use crate::model::DeploymentPlan;
+use crate::scheduler::Problem;
+use crate::Result;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+
+/// Re-planner knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplanConfig {
+    /// Carbon-intensity changes below this (gCO2eq/kWh) do not dirty a
+    /// zone (absorbs monitoring noise).
+    pub carbon_epsilon: f64,
+    /// Constraint-weight changes below this do not dirty a zone.
+    pub weight_epsilon: f64,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> Self {
+        ReplanConfig {
+            carbon_epsilon: 5.0,
+            weight_epsilon: 0.01,
+        }
+    }
+}
+
+/// What one incremental epoch did.
+#[derive(Debug, Clone)]
+pub struct ReplanOutcome {
+    pub plan: DeploymentPlan,
+    pub total_zones: usize,
+    /// Names of the zones that were re-scheduled this epoch.
+    pub dirty_zones: Vec<String>,
+    /// Placements carried unchanged from the previous epoch.
+    pub reused_placements: usize,
+}
+
+impl ReplanOutcome {
+    pub fn reused_zones(&self) -> usize {
+        self.total_zones - self.dirty_zones.len()
+    }
+}
+
+struct PrevEpoch {
+    /// zone name -> fingerprint.
+    sigs: HashMap<String, u64>,
+    /// service id -> (flavour name, node id).
+    placements: HashMap<String, (String, String)>,
+}
+
+/// The incremental re-planner. Keep one alive across epochs; call
+/// [`IncrementalReplanner::replan`] with each epoch's problem.
+pub struct IncrementalReplanner {
+    pub config: ReplanConfig,
+    pub scheduler: ShardedScheduler,
+    prev: Option<PrevEpoch>,
+}
+
+impl IncrementalReplanner {
+    pub fn new(scheduler: ShardedScheduler) -> Self {
+        IncrementalReplanner {
+            config: ReplanConfig::default(),
+            scheduler,
+            prev: None,
+        }
+    }
+
+    /// Forget the previous epoch (forces a full solve next time).
+    pub fn reset(&mut self) {
+        self.prev = None;
+    }
+
+    /// Schedule this epoch, re-solving only dirty zones.
+    pub fn replan(&mut self, problem: &Problem) -> Result<ReplanOutcome> {
+        let partition = self.scheduler.partition(problem);
+        let sigs = self.zone_signatures(problem, &partition);
+
+        // Take ownership of the previous epoch: it is replaced wholesale
+        // at the end of every successful replan (and a failed replan must
+        // not be trusted as a carry source anyway).
+        let Some(prev) = self.prev.take() else {
+            return self.full_solve(problem, &partition, sigs);
+        };
+
+        // --- dirtiness -------------------------------------------------
+        let dirty: Vec<usize> = (0..partition.zones.len())
+            .filter(|&z| {
+                let name = &partition.zones[z].name;
+                prev.sigs.get(name) != Some(&sigs[name])
+            })
+            .collect();
+        if dirty.len() == partition.zones.len() {
+            return self.full_solve(problem, &partition, sigs);
+        }
+        let dirty_set: HashSet<usize> = dirty.iter().copied().collect();
+
+        // --- carry clean placements ------------------------------------
+        // A placement is carried iff the zone of its *node* is clean and it
+        // is still structurally valid. (Repair may have placed a service
+        // outside its home zone last epoch; what matters for reuse is
+        // where it physically runs.)
+        let mut assignment: Vec<Option<(usize, usize)>> = vec![None; problem.app.services.len()];
+        let node_idx: HashMap<&str, usize> = problem
+            .infra
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.id.as_str(), i))
+            .collect();
+        let mut carried = 0usize;
+        let mut carry_failed: Vec<usize> = Vec::new();
+        for (si, svc) in problem.app.services.iter().enumerate() {
+            let home_dirty = dirty_set.contains(&partition.zone_of_service[si]);
+            match prev.placements.get(&svc.id) {
+                Some((flavour, node)) => {
+                    // resolve names AND re-check the capacity-independent
+                    // placement rules (subnet/security/availability) so a
+                    // requirement change the fingerprint missed can never
+                    // carry an invalid slot
+                    let resolved = node_idx.get(node.as_str()).and_then(|&ni| {
+                        svc.flavours
+                            .iter()
+                            .position(|f| &f.name == flavour)
+                            .map(|fi| (fi, ni))
+                            .filter(|&(fi, ni)| {
+                                let nd = &problem.infra.nodes[ni];
+                                nd.placement_compatible(&svc.requirements)
+                                    && nd.capabilities.availability + 1e-12
+                                        >= svc.flavours[fi].requirements.availability
+                            })
+                    });
+                    match resolved {
+                        Some((fi, ni)) if !dirty_set.contains(&partition.zone_of_node[ni]) => {
+                            assignment[si] = Some((fi, ni));
+                            carried += 1;
+                        }
+                        Some(_) => {} // lands in a dirty zone: re-solved there
+                        None => {
+                            if !home_dirty {
+                                carry_failed.push(si); // stale reference: repair globally
+                            }
+                        }
+                    }
+                }
+                None => {} // previously dropped (or new service)
+            }
+        }
+
+        // Services whose home zone is dirty but whose carried slot was in
+        // a clean zone must still be re-decided by their (dirty) zone
+        // solver — drop the carry for them so the zone solve owns them.
+        for &si in partition
+            .zones
+            .iter()
+            .enumerate()
+            .filter(|(z, _)| dirty_set.contains(z))
+            .flat_map(|(_, zone)| zone.services.iter())
+        {
+            if assignment[si].is_some() {
+                assignment[si] = None;
+                carried -= 1;
+            }
+        }
+
+        // --- nothing dirty: the carried plan IS the plan ----------------
+        if dirty.is_empty() && carry_failed.is_empty() {
+            let plan = problem.to_plan(&assignment);
+            let total_zones = partition.zones.len();
+            self.prev = Some(PrevEpoch {
+                sigs,
+                placements: placements_map(&plan),
+            });
+            return Ok(ReplanOutcome {
+                plan,
+                total_zones,
+                dirty_zones: Vec::new(),
+                reused_placements: carried,
+            });
+        }
+
+        // --- re-solve dirty zones in parallel ---------------------------
+        let subs: Vec<_> = dirty
+            .iter()
+            .map(|&z| &partition.zones[z])
+            .filter(|zone| !zone.services.is_empty())
+            .map(|zone| build_sub(problem, zone))
+            .collect();
+        let zone_plans = solve_zones(
+            &subs,
+            problem.objective,
+            self.scheduler.max_rounds,
+            self.scheduler.parallel,
+        )?;
+        let mut merged = DeploymentPlan::default();
+        for plan in zone_plans {
+            merged.placements.extend(plan.placements);
+        }
+        let fresh = problem.to_assignment(&merged)?;
+        for (si, slot) in fresh.iter().enumerate() {
+            if slot.is_some() {
+                assignment[si] = *slot;
+            }
+        }
+
+        // --- repair: unplaced services + boundaries touching dirt -------
+        let boundary: Vec<usize> = partition
+            .boundary_services(problem.app, problem.constraints)
+            .into_iter()
+            .filter(|&si| dirty_set.contains(&partition.zone_of_service[si]))
+            .collect();
+        repair(
+            problem,
+            &mut assignment,
+            &boundary,
+            self.scheduler.repair_rounds,
+        )?;
+
+        let plan = problem.to_plan(&assignment);
+        let dirty_zones: Vec<String> = dirty
+            .iter()
+            .map(|&z| partition.zones[z].name.clone())
+            .collect();
+        let total_zones = partition.zones.len();
+        self.prev = Some(PrevEpoch {
+            sigs,
+            placements: placements_map(&plan),
+        });
+        Ok(ReplanOutcome {
+            plan,
+            total_zones,
+            dirty_zones,
+            reused_placements: carried,
+        })
+    }
+
+    fn full_solve(
+        &mut self,
+        problem: &Problem,
+        partition: &Partition,
+        sigs: HashMap<String, u64>,
+    ) -> Result<ReplanOutcome> {
+        let (plan, _) = self.scheduler.schedule_with_partition(problem, partition)?;
+        let dirty_zones = partition.zones.iter().map(|z| z.name.clone()).collect();
+        self.prev = Some(PrevEpoch {
+            sigs,
+            placements: placements_map(&plan),
+        });
+        Ok(ReplanOutcome {
+            plan,
+            total_zones: partition.zones.len(),
+            dirty_zones,
+            reused_placements: 0,
+        })
+    }
+
+    /// Fingerprint every zone of this epoch.
+    fn zone_signatures(&self, problem: &Problem, partition: &Partition) -> HashMap<String, u64> {
+        let ws = |w: f64| (w / self.config.weight_epsilon.max(1e-12)).round() as i64;
+        // constraint records grouped per service id (also node-targeted:
+        // a constraint dirties both the service's zone and the node's)
+        let mut touching: HashMap<&str, Vec<String>> = HashMap::new();
+        let mut node_touching: HashMap<&str, Vec<String>> = HashMap::new();
+        for c in problem.constraints {
+            let rec = format!("{}@{}", c.kind.key(), ws(c.weight));
+            touching
+                .entry(c.kind.service())
+                .or_default()
+                .push(rec.clone());
+            match &c.kind {
+                ConstraintKind::AvoidNode { node, .. }
+                | ConstraintKind::PreferNode { node, .. } => {
+                    node_touching.entry(node.as_str()).or_default().push(rec);
+                }
+                ConstraintKind::Affinity { other, .. } => {
+                    touching.entry(other.as_str()).or_default().push(rec);
+                }
+            }
+        }
+        let ce = self.config.carbon_epsilon.max(1e-12);
+        let mut out = HashMap::new();
+        for zone in &partition.zones {
+            let mut records: Vec<String> = Vec::new();
+            for &ni in &zone.nodes {
+                let n = &problem.infra.nodes[ni];
+                let caps = &n.capabilities;
+                records.push(format!(
+                    "n:{}|{}|{}|{}|{}|{}|{}|{}|{}{}{}|{}",
+                    n.id,
+                    (n.carbon() / ce).round() as i64,
+                    (n.profile.cost_per_cpu_hour * 1e6).round() as i64,
+                    (caps.cpu * 8.0).round() as i64,
+                    (caps.ram_gb * 8.0).round() as i64,
+                    (caps.storage_gb * 8.0).round() as i64,
+                    (caps.availability * 1e6).round() as i64,
+                    caps.subnet.as_str(),
+                    caps.firewall as u8,
+                    caps.ssl as u8,
+                    caps.encryption as u8,
+                    n.tier.as_str(),
+                ));
+                if let Some(recs) = node_touching.get(n.id.as_str()) {
+                    for r in recs {
+                        records.push(format!("nc:{r}"));
+                    }
+                }
+            }
+            for &si in &zone.services {
+                let s = &problem.app.services[si];
+                let sec = &s.requirements.security;
+                let mut rec = format!(
+                    "s:{}|{}|{}|{}{}{}",
+                    s.id,
+                    s.must_deploy as u8,
+                    s.requirements.subnet.as_str(),
+                    sec.firewall as u8,
+                    sec.ssl as u8,
+                    sec.encryption as u8,
+                );
+                for f in &s.flavours {
+                    rec.push_str(&format!(
+                        "|{}:{}:{}:{}:{}",
+                        f.name,
+                        (f.requirements.cpu * 8.0).round() as i64,
+                        (f.requirements.ram_gb * 8.0).round() as i64,
+                        (f.requirements.storage_gb * 8.0).round() as i64,
+                        (f.requirements.availability * 1e6).round() as i64,
+                    ));
+                }
+                records.push(rec);
+                if let Some(recs) = touching.get(s.id.as_str()) {
+                    for r in recs {
+                        records.push(format!("sc:{r}"));
+                    }
+                }
+            }
+            records.sort();
+            let mut h = DefaultHasher::new();
+            records.hash(&mut h);
+            out.insert(zone.name.clone(), h.finish());
+        }
+        out
+    }
+}
+
+fn placements_map(plan: &DeploymentPlan) -> HashMap<String, (String, String)> {
+    plan.placements
+        .iter()
+        .map(|p| (p.service.clone(), (p.flavour.clone(), p.node.clone())))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::Objective;
+    use crate::simulate::{topology, Topology, TopologySpec};
+
+    fn fleet() -> (crate::model::Application, crate::model::Infrastructure) {
+        let spec = TopologySpec::new(Topology::GeoRegions, 32, 64)
+            .with_zones(4)
+            .with_seed(0xBEEF);
+        topology::generate(&spec)
+    }
+
+    fn replanner() -> IncrementalReplanner {
+        IncrementalReplanner::new(ShardedScheduler::default())
+    }
+
+    #[test]
+    fn unchanged_epoch_reuses_every_zone() {
+        let (app, infra) = fleet();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let mut rp = replanner();
+        let first = rp.replan(&problem).unwrap();
+        assert_eq!(first.dirty_zones.len(), first.total_zones); // cold start
+        let second = rp.replan(&problem).unwrap();
+        assert!(second.dirty_zones.is_empty(), "{:?}", second.dirty_zones);
+        assert_eq!(second.reused_zones(), second.total_zones);
+        assert_eq!(first.plan, second.plan);
+        assert!(second.reused_placements > 0);
+    }
+
+    #[test]
+    fn carbon_drift_dirties_only_the_affected_zone() {
+        let (app, mut infra) = fleet();
+        let constraints: Vec<crate::constraints::Constraint> = Vec::new();
+        let mut rp = replanner();
+        {
+            let problem = Problem {
+                app: &app,
+                infra: &infra,
+                constraints: &constraints,
+                objective: Objective::default(),
+            };
+            rp.replan(&problem).unwrap();
+        }
+        // zone z00's grid browns out hard; everything else is unchanged
+        for n in &mut infra.nodes {
+            if n.zone.as_deref() == Some("z00") {
+                n.profile.carbon = Some(n.carbon() + 300.0);
+            }
+        }
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let outcome = rp.replan(&problem).unwrap();
+        assert_eq!(outcome.dirty_zones, vec!["z00".to_string()]);
+        assert_eq!(outcome.reused_zones(), outcome.total_zones - 1);
+    }
+
+    #[test]
+    fn small_carbon_noise_is_absorbed() {
+        let (app, mut infra) = fleet();
+        // pin carbon away from quantisation boundaries so the sub-epsilon
+        // shift below cannot flip a rounding bucket
+        for n in &mut infra.nodes {
+            n.profile.carbon = Some(100.0);
+        }
+        let mut rp = replanner();
+        {
+            let problem = Problem {
+                app: &app,
+                infra: &infra,
+                constraints: &[],
+                objective: Objective::default(),
+            };
+            rp.replan(&problem).unwrap();
+        }
+        for n in &mut infra.nodes {
+            n.profile.carbon = Some(n.carbon() + 0.5); // below carbon_epsilon
+        }
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let outcome = rp.replan(&problem).unwrap();
+        assert!(outcome.dirty_zones.is_empty());
+    }
+
+    #[test]
+    fn constraint_change_dirties_the_touched_zone() {
+        let (app, infra) = fleet();
+        let mut rp = replanner();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let first = rp.replan(&problem).unwrap();
+        // a new avoid-constraint against a z01 node for some service
+        let node = infra
+            .nodes
+            .iter()
+            .find(|n| n.zone.as_deref() == Some("z01"))
+            .unwrap();
+        let mut c = crate::constraints::Constraint::new(
+            ConstraintKind::AvoidNode {
+                service: app.services[0].id.clone(),
+                flavour: app.services[0].flavours[0].name.clone(),
+                node: node.id.clone(),
+            },
+            100.0,
+            0.0,
+            100.0,
+        );
+        c.weight = 0.9;
+        let constraints = vec![c];
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let outcome = rp.replan(&problem).unwrap();
+        assert!(!outcome.dirty_zones.is_empty());
+        assert!(
+            outcome.dirty_zones.len() < first.total_zones,
+            "constraint change should not dirty every zone"
+        );
+        assert!(outcome.dirty_zones.contains(&"z01".to_string()));
+    }
+
+    #[test]
+    fn node_failure_dirties_its_zone_and_plan_stays_feasible() {
+        let (app, mut infra) = fleet();
+        let mut rp = replanner();
+        {
+            let problem = Problem {
+                app: &app,
+                infra: &infra,
+                constraints: &[],
+                objective: Objective::default(),
+            };
+            rp.replan(&problem).unwrap();
+        }
+        // kill one node in z02
+        let pos = infra
+            .nodes
+            .iter()
+            .position(|n| n.zone.as_deref() == Some("z02"))
+            .unwrap();
+        infra.nodes.remove(pos);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let outcome = rp.replan(&problem).unwrap();
+        assert!(outcome.dirty_zones.contains(&"z02".to_string()));
+        // the carried + repaired plan references only live nodes
+        for p in &outcome.plan.placements {
+            assert!(infra.node(&p.node).is_some(), "stale node {}", p.node);
+        }
+        for s in &app.services {
+            if s.must_deploy {
+                assert!(outcome.plan.is_deployed(&s.id));
+            }
+        }
+    }
+}

@@ -1,0 +1,577 @@
+//! Parallel shard scheduler: solve zones concurrently, then repair across
+//! zone boundaries.
+//!
+//! Every zone of a [`Partition`] becomes an independent sub-problem
+//! (its nodes, its services, the constraints fully contained in it) and is
+//! solved by the greedy + local-search scheduler on its own OS thread
+//! (`std::thread::scope` — no runtime dependency). A cross-zone repair
+//! pass then (a) places services their shard could not fit anywhere in the
+//! remaining global capacity and (b) runs a bounded improvement sweep over
+//! boundary services, so cross-zone affinities still steer placement.
+//!
+//! Parity guarantee: small instances are delegated to the monolithic
+//! solvers (branch-and-bound below [`ShardedScheduler::exact_services`],
+//! greedy below [`ShardedScheduler::monolithic_below`]), so the sharded
+//! path never degrades the small-instance plans the paper's evaluation is
+//! built on.
+
+use super::partition::{Partition, Zone, ZonePartitioner};
+use crate::constraints::{Constraint, ConstraintKind};
+use crate::model::{Application, DeploymentPlan, Infrastructure};
+use crate::scheduler::problem::CapacityState;
+use crate::scheduler::{BranchAndBoundScheduler, GreedyScheduler, Objective, Problem, Scheduler};
+use crate::{Error, Result};
+use std::collections::HashSet;
+
+/// The sharded multi-cluster scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardedScheduler {
+    pub partitioner: ZonePartitioner,
+    /// Delegate to exact branch-and-bound at or below this many services
+    /// (and [`Self::exact_nodes`] nodes): exact parity on tiny instances.
+    pub exact_services: usize,
+    pub exact_nodes: usize,
+    /// Delegate to monolithic greedy below this many services — sharding
+    /// overhead is not worth it and parity with the single-cluster path
+    /// is preserved bit-for-bit.
+    pub monolithic_below: usize,
+    /// Local-search rounds inside each shard (and the monolithic
+    /// delegate).
+    pub max_rounds: usize,
+    /// Improvement sweeps of the cross-zone repair pass.
+    pub repair_rounds: usize,
+    /// Solve shards on parallel OS threads (`false` = sequential, for
+    /// measuring the partitioning benefit alone).
+    pub parallel: bool,
+}
+
+impl Default for ShardedScheduler {
+    fn default() -> Self {
+        ShardedScheduler {
+            partitioner: ZonePartitioner::default(),
+            exact_services: 8,
+            exact_nodes: 6,
+            monolithic_below: 24,
+            max_rounds: 20,
+            repair_rounds: 2,
+            parallel: true,
+        }
+    }
+}
+
+/// How a sharded solve went (for benches and the CLI).
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// "exact-delegate", "monolithic-delegate" or "sharded".
+    pub mode: &'static str,
+    pub zones: usize,
+    /// Services placed by the cross-zone repair pass after their shard
+    /// could not fit them.
+    pub repair_placed: usize,
+    /// Boundary-service moves applied by the improvement sweep.
+    pub repair_moves: usize,
+}
+
+impl Scheduler for ShardedScheduler {
+    fn name(&self) -> &'static str {
+        "sharded-continuum"
+    }
+
+    fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+        self.schedule_with_stats(problem).map(|(plan, _)| plan)
+    }
+}
+
+impl ShardedScheduler {
+    /// Schedule and report how the work was split.
+    pub fn schedule_with_stats(&self, problem: &Problem) -> Result<(DeploymentPlan, ShardStats)> {
+        if self.is_exact_instance(problem) {
+            return self.exact_delegate(problem);
+        }
+        let partition = self.partition(problem);
+        self.schedule_with_partition(problem, &partition)
+    }
+
+    /// Like [`Self::schedule_with_stats`] but reusing an already computed
+    /// partition (the incremental re-planner partitions first to compute
+    /// zone fingerprints — don't pay for it twice).
+    pub fn schedule_with_partition(
+        &self,
+        problem: &Problem,
+        partition: &Partition,
+    ) -> Result<(DeploymentPlan, ShardStats)> {
+        if self.is_exact_instance(problem) {
+            return self.exact_delegate(problem);
+        }
+        let n_services = problem.app.services.len();
+        if n_services < self.monolithic_below || partition.zones.len() <= 1 {
+            let plan = GreedyScheduler {
+                max_rounds: self.max_rounds,
+            }
+            .schedule(problem)?;
+            return Ok((
+                plan,
+                ShardStats {
+                    mode: "monolithic-delegate",
+                    zones: partition.zones.len(),
+                    ..ShardStats::default()
+                },
+            ));
+        }
+
+        // --- per-zone sub-problems, solved concurrently ----------------
+        let subs: Vec<SubInstance> = partition
+            .zones
+            .iter()
+            .filter(|z| !z.services.is_empty())
+            .map(|z| build_sub(problem, z))
+            .collect();
+        let zone_plans = solve_zones(&subs, problem.objective, self.max_rounds, self.parallel)?;
+
+        // --- merge + cross-zone repair ---------------------------------
+        let mut merged = DeploymentPlan::default();
+        for plan in zone_plans {
+            merged.placements.extend(plan.placements);
+        }
+        let mut assignment = problem.to_assignment(&merged)?;
+        let boundary = partition.boundary_services(problem.app, problem.constraints);
+        let stats = repair(problem, &mut assignment, &boundary, self.repair_rounds)?;
+        Ok((
+            problem.to_plan(&assignment),
+            ShardStats {
+                mode: "sharded",
+                zones: partition.zones.len(),
+                repair_placed: stats.placed,
+                repair_moves: stats.moves,
+            },
+        ))
+    }
+
+    /// The partition this scheduler would use (exposed for the
+    /// incremental re-planner and for diagnostics).
+    pub fn partition(&self, problem: &Problem) -> Partition {
+        self.partitioner
+            .partition(problem.app, problem.infra, problem.constraints)
+    }
+
+    fn is_exact_instance(&self, problem: &Problem) -> bool {
+        problem.app.services.len() <= self.exact_services
+            && problem.infra.nodes.len() <= self.exact_nodes
+    }
+
+    fn exact_delegate(&self, problem: &Problem) -> Result<(DeploymentPlan, ShardStats)> {
+        let plan = BranchAndBoundScheduler::default().schedule(problem)?;
+        Ok((
+            plan,
+            ShardStats {
+                mode: "exact-delegate",
+                zones: 1,
+                ..ShardStats::default()
+            },
+        ))
+    }
+}
+
+/// One zone's owned sub-problem.
+pub(crate) struct SubInstance {
+    pub app: Application,
+    pub infra: Infrastructure,
+    pub constraints: Vec<Constraint>,
+}
+
+/// Extract a zone's sub-problem: its services, its nodes, the intra-zone
+/// links, and the constraints fully contained in the zone. Constraints
+/// that reference out-of-zone services/nodes are handled by the repair
+/// pass against the full problem instead.
+pub(crate) fn build_sub(problem: &Problem, zone: &Zone) -> SubInstance {
+    let mut app = Application::new(format!("shard-{}", zone.name));
+    for &si in &zone.services {
+        app.services.push(problem.app.services[si].clone());
+    }
+    let svc_ids: HashSet<&str> = app.services.iter().map(|s| s.id.as_str()).collect();
+    for link in &problem.app.links {
+        if svc_ids.contains(link.from.as_str()) && svc_ids.contains(link.to.as_str()) {
+            app.links.push(link.clone());
+        }
+    }
+    let mut infra = Infrastructure::new(format!("shard-{}", zone.name));
+    for &ni in &zone.nodes {
+        infra.nodes.push(problem.infra.nodes[ni].clone());
+    }
+    let node_ids: HashSet<&str> = infra.nodes.iter().map(|n| n.id.as_str()).collect();
+    let constraints = problem
+        .constraints
+        .iter()
+        .filter(|c| match &c.kind {
+            ConstraintKind::AvoidNode { service, node, .. }
+            | ConstraintKind::PreferNode { service, node, .. } => {
+                svc_ids.contains(service.as_str()) && node_ids.contains(node.as_str())
+            }
+            ConstraintKind::Affinity { service, other, .. } => {
+                svc_ids.contains(service.as_str()) && svc_ids.contains(other.as_str())
+            }
+        })
+        .cloned()
+        .collect();
+    SubInstance {
+        app,
+        infra,
+        constraints,
+    }
+}
+
+/// Solve every sub-instance, optionally on parallel scoped threads.
+pub(crate) fn solve_zones(
+    subs: &[SubInstance],
+    objective: Objective,
+    max_rounds: usize,
+    parallel: bool,
+) -> Result<Vec<DeploymentPlan>> {
+    let results: Vec<Result<DeploymentPlan>> = if parallel && subs.len() > 1 {
+        let mut out = Vec::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = subs
+                .iter()
+                .map(|sub| scope.spawn(move || solve_sub(sub, objective, max_rounds)))
+                .collect();
+            out = handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(Error::other("zone solver thread panicked")))
+                })
+                .collect();
+        });
+        out
+    } else {
+        subs.iter()
+            .map(|sub| solve_sub(sub, objective, max_rounds))
+            .collect()
+    };
+    results.into_iter().collect()
+}
+
+/// Solve one zone. A shard that cannot fit a mandatory service does not
+/// fail the whole schedule: the solve is retried with mandatory flags
+/// relaxed and the dropped services fall through to the repair pass.
+fn solve_sub(sub: &SubInstance, objective: Objective, max_rounds: usize) -> Result<DeploymentPlan> {
+    let problem = Problem {
+        app: &sub.app,
+        infra: &sub.infra,
+        constraints: &sub.constraints,
+        objective,
+    };
+    let solver = GreedyScheduler { max_rounds };
+    match solver.schedule(&problem) {
+        Ok(plan) => Ok(plan),
+        Err(Error::Infeasible(_)) => {
+            let mut relaxed = sub.app.clone();
+            for s in &mut relaxed.services {
+                s.must_deploy = false;
+            }
+            let problem = Problem {
+                app: &relaxed,
+                infra: &sub.infra,
+                constraints: &sub.constraints,
+                objective,
+            };
+            solver.schedule(&problem)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// Outcome of the repair pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct RepairStats {
+    pub placed: usize,
+    pub moves: usize,
+}
+
+/// Cross-zone repair against the *full* problem: place every unassigned
+/// service where it is globally best (mandatory ones must fit somewhere),
+/// then run bounded improvement sweeps over the boundary services.
+pub(crate) fn repair(
+    problem: &Problem,
+    assignment: &mut Vec<Option<(usize, usize)>>,
+    boundary: &[usize],
+    rounds: usize,
+) -> Result<RepairStats> {
+    let index = problem.constraint_index();
+    let mut capacity = CapacityState::new(problem.infra);
+    for (si, slot) in assignment.iter().enumerate() {
+        if let Some((fi, ni)) = slot {
+            let req = &problem.app.services[si].flavours[*fi].requirements;
+            capacity.take(*ni, req.cpu, req.ram_gb, req.storage_gb);
+        }
+    }
+    let mut stats = RepairStats::default();
+
+    // --- placement of shard-dropped services -------------------------
+    let mut unplaced: Vec<usize> = (0..assignment.len())
+        .filter(|&si| assignment[si].is_none())
+        .collect();
+    // mandatory first, then biggest demand first (big rocks)
+    unplaced.sort_by(|&a, &b| {
+        let sa = &problem.app.services[a];
+        let sb = &problem.app.services[b];
+        sb.must_deploy
+            .cmp(&sa.must_deploy)
+            .then_with(|| {
+                let da = sa.flavours.iter().map(|f| f.requirements.cpu).fold(0.0, f64::max);
+                let db = sb.flavours.iter().map(|f| f.requirements.cpu).fold(0.0, f64::max);
+                db.partial_cmp(&da).unwrap()
+            })
+            .then(a.cmp(&b))
+    });
+    for si in unplaced {
+        let svc = &problem.app.services[si];
+        let dropped_local = problem.local_objective(&index, si, assignment);
+        let mut best: Option<(usize, usize, f64)> = None;
+        for fi in 0..svc.flavours.len() {
+            for ni in 0..problem.infra.nodes.len() {
+                if !problem.placement_ok(si, fi, ni, &capacity) {
+                    continue;
+                }
+                assignment[si] = Some((fi, ni));
+                let local = problem.local_objective(&index, si, assignment);
+                assignment[si] = None;
+                if best.map(|(_, _, v)| local < v).unwrap_or(true) {
+                    best = Some((fi, ni, local));
+                }
+            }
+        }
+        match best {
+            Some((fi, ni, placed_local)) => {
+                if !svc.must_deploy && dropped_local <= placed_local {
+                    continue; // dropping remains the better choice
+                }
+                let req = &svc.flavours[fi].requirements;
+                capacity.take(ni, req.cpu, req.ram_gb, req.storage_gb);
+                assignment[si] = Some((fi, ni));
+                stats.placed += 1;
+            }
+            None if svc.must_deploy => {
+                return Err(Error::Infeasible(format!(
+                    "no zone can fit mandatory service '{}' after repair",
+                    svc.id
+                )));
+            }
+            None => {}
+        }
+    }
+
+    // --- boundary improvement sweep -----------------------------------
+    for _ in 0..rounds {
+        let mut improved = false;
+        for &si in boundary {
+            let svc = &problem.app.services[si];
+            let original = assignment[si];
+            if let Some((fi, ni)) = original {
+                let req = &svc.flavours[fi].requirements;
+                capacity.give(ni, req.cpu, req.ram_gb, req.storage_gb);
+            }
+            let original_local = problem.local_objective(&index, si, assignment);
+            let mut best = original;
+            let mut best_local = original_local;
+            if !svc.must_deploy {
+                assignment[si] = None;
+                let v = problem.local_objective(&index, si, assignment);
+                if v < best_local - 1e-12 {
+                    best_local = v;
+                    best = None;
+                }
+            }
+            for fi in 0..svc.flavours.len() {
+                for ni in 0..problem.infra.nodes.len() {
+                    if !problem.placement_ok(si, fi, ni, &capacity) {
+                        continue;
+                    }
+                    assignment[si] = Some((fi, ni));
+                    let v = problem.local_objective(&index, si, assignment);
+                    if v < best_local - 1e-12 {
+                        best_local = v;
+                        best = Some((fi, ni));
+                    }
+                }
+            }
+            assignment[si] = best;
+            if let Some((fi, ni)) = best {
+                let req = &svc.flavours[fi].requirements;
+                capacity.take(ni, req.cpu, req.ram_gb, req.storage_gb);
+            }
+            if best != original {
+                improved = true;
+                stats.moves += 1;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+    use crate::util::Rng;
+
+    fn ranked_constraints(
+        app: &Application,
+        infra: &Infrastructure,
+        alpha: f64,
+    ) -> Vec<Constraint> {
+        let backend = NativeBackend;
+        let mut cs = crate::constraints::ConstraintGenerator::new(&backend)
+            .with_config(crate::constraints::GeneratorConfig {
+                alpha,
+                use_prolog: false,
+            })
+            .generate(app, infra)
+            .unwrap()
+            .constraints;
+        for (i, c) in cs.iter_mut().enumerate() {
+            c.weight = 0.1 + 0.05 * (i % 10) as f64;
+        }
+        cs
+    }
+
+    fn feasibility_check(problem: &Problem, plan: &DeploymentPlan) {
+        if let Err(e) = crate::scheduler::check_feasible(problem, plan) {
+            panic!("infeasible plan: {e}");
+        }
+    }
+
+    #[test]
+    fn sharded_plan_is_feasible_on_topology_fleet() {
+        let spec = crate::simulate::TopologySpec::new(
+            crate::simulate::Topology::GeoRegions,
+            40,
+            80,
+        )
+        .with_zones(4)
+        .with_seed(0xFEED);
+        let (app, infra) = crate::simulate::topology::generate(&spec);
+        let constraints = ranked_constraints(&app, &infra, 0.7);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let (plan, stats) = ShardedScheduler::default()
+            .schedule_with_stats(&problem)
+            .unwrap();
+        assert_eq!(stats.mode, "sharded");
+        assert_eq!(stats.zones, 4);
+        feasibility_check(&problem, &plan);
+    }
+
+    #[test]
+    fn small_instances_delegate_to_monolithic() {
+        let mut rng = Rng::new(0xD5);
+        let app = crate::simulate::random_application(&mut rng, 12);
+        let infra = crate::simulate::random_infrastructure(&mut rng, 6);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let sharded = ShardedScheduler::default();
+        let (plan, stats) = sharded.schedule_with_stats(&problem).unwrap();
+        assert_eq!(stats.mode, "monolithic-delegate");
+        // bit-for-bit parity with the monolithic greedy path
+        let mono = GreedyScheduler::default().schedule(&problem).unwrap();
+        assert_eq!(plan, mono);
+    }
+
+    #[test]
+    fn sequential_and_parallel_shards_agree() {
+        let spec = crate::simulate::TopologySpec::new(
+            crate::simulate::Topology::CloudEdgeHierarchy,
+            36,
+            60,
+        )
+        .with_zones(3)
+        .with_seed(42);
+        let (app, infra) = crate::simulate::topology::generate(&spec);
+        let constraints = ranked_constraints(&app, &infra, 0.8);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let par = ShardedScheduler::default();
+        let seq = ShardedScheduler {
+            parallel: false,
+            ..ShardedScheduler::default()
+        };
+        let (pa, _) = par.schedule_with_stats(&problem).unwrap();
+        let (pb, _) = seq.schedule_with_stats(&problem).unwrap();
+        // thread scheduling must not affect the result: zones are solved
+        // independently and merged deterministically
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn repair_places_services_shards_cannot_fit() {
+        // two zones; zone zb has no capacity for the big service assigned
+        // to it, so only cross-zone repair can place it
+        let mut app = Application::new("t");
+        for (id, cpu) in [("big", 12.0), ("small", 1.0)] {
+            let mut s = crate::model::Service::new(id);
+            s.flavours = vec![crate::model::Flavour::new("std")];
+            s.flavour_mut("std").unwrap().requirements.cpu = cpu;
+            app.services.push(s);
+        }
+        let mut infra = Infrastructure::new("i");
+        for (id, zone, cpu) in [("n1", "za", 16.0), ("n2", "zb", 2.0)] {
+            let mut n = crate::model::Node::new(id, "XX");
+            n.zone = Some(zone.into());
+            n.capabilities.cpu = cpu;
+            infra.nodes.push(n);
+        }
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        // shard state after a hypothetical zone solve: zone zb could not
+        // fit "big" (needs 12 cpu, zb has 2); "small" landed on n2
+        let mut assignment = vec![None, Some((0usize, 1usize))];
+        let stats = repair(&problem, &mut assignment, &[], 2).unwrap();
+        assert_eq!(stats.placed, 1);
+        let plan = problem.to_plan(&assignment);
+        assert_eq!(plan.node_of("big"), Some("n1"));
+        assert!(plan.is_deployed("small"));
+    }
+
+    #[test]
+    fn repair_fails_when_nothing_fits_mandatory() {
+        let mut app = Application::new("t");
+        let mut s = crate::model::Service::new("huge");
+        s.flavours = vec![crate::model::Flavour::new("std")];
+        s.flavour_mut("std").unwrap().requirements.cpu = 64.0;
+        app.services.push(s);
+        let mut infra = Infrastructure::new("i");
+        let mut n = crate::model::Node::new("n1", "XX");
+        n.capabilities.cpu = 2.0;
+        infra.nodes.push(n);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let mut assignment = vec![None];
+        assert!(matches!(
+            repair(&problem, &mut assignment, &[], 1),
+            Err(Error::Infeasible(_))
+        ));
+    }
+}

@@ -3,43 +3,68 @@
 //! All public APIs return [`Result`]. Variants map to the failure domains of
 //! the pipeline: I/O (KB files, artifacts), the XLA runtime, configuration,
 //! the scheduler (infeasible instances) and generic invariant violations.
+//!
+//! Implemented by hand (no `thiserror`): the build environment is offline
+//! and the crate is otherwise dependency-free.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide error enumeration.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Filesystem / serialization failures (KB store, config, artifacts).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// JSON (de)serialization failures (in-tree `jsonio` codec).
-    #[error("json error: {0}")]
     Json(String),
 
     /// Failures raised by the PJRT runtime (artifact load/compile/execute).
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// Configuration errors (unknown scenario, malformed descriptions).
-    #[error("config error: {0}")]
     Config(String),
 
     /// Scheduler could not find a feasible deployment plan.
-    #[error("infeasible deployment: {0}")]
     Infeasible(String),
 
     /// Monitoring / estimation errors (e.g. no samples for a flavour).
-    #[error("estimation error: {0}")]
     Estimation(String),
 
     /// Mini-Prolog engine errors (parse, arity, non-termination guard).
-    #[error("prolog error: {0}")]
     Prolog(String),
 
     /// Anything else.
-    #[error("{0}")]
     Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Infeasible(m) => write!(f, "infeasible deployment: {m}"),
+            Error::Estimation(m) => write!(f, "estimation error: {m}"),
+            Error::Prolog(m) => write!(f, "prolog error: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -69,5 +94,6 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -14,9 +14,13 @@
 //! rule engine, and a constraint-aware scheduler.
 //!
 //! ## Layer map
-//! * L3 (this crate): coordination, adaptive epochs, KB, scheduler, CLI.
+//! * L3 (this crate): coordination, adaptive epochs, KB, scheduler, the
+//!   [`continuum`] sharded multi-cluster engine, CLI.
 //! * L2/L1 (`python/compile/`): the impact-analytics graph + Pallas kernels,
 //!   AOT-lowered to HLO text, executed by [`runtime`] via PJRT.
+//!
+//! The repository `README.md` maps the layers, CLI subcommands (including
+//! `greengen continuum`) and bench targets in detail.
 //!
 //! ## Quickstart
 //! ```no_run
@@ -37,6 +41,7 @@ pub mod carbon;
 pub mod cliargs;
 pub mod config;
 pub mod constraints;
+pub mod continuum;
 pub mod energy;
 pub mod error;
 pub mod explain;

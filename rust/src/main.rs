@@ -4,6 +4,7 @@
 //! greengen scenario <1-5> [--explain] [--format prolog|json|minizinc] [--xla] [--extended]
 //! greengen generate --app app.json --infra infra.json [--alpha 0.8] [--format prolog] [--xla]
 //! greengen adaptive [--scenario 1] [--hours 48] [--regen 6] [--failures 0.0] [--xla]
+//!                   [--incremental] [--zones N]
 //! greengen schedule [--scenario 1] [--solver greedy|exact|cost-only|random|oracle]
 //! greengen scalability [--mode app|infra] [--steps 10] [--reps 3] [--out file.csv]
 //! greengen threshold [--services 100] [--nodes 100]
@@ -13,6 +14,7 @@
 use greengen::adapter::{adapter_for, SchedulerAdapter};
 use greengen::cliargs::Args;
 use greengen::config::scenarios;
+use greengen::continuum::{IncrementalReplanner, ShardedScheduler, ZonePartitioner};
 use greengen::pipeline::{AdaptiveConfig, AdaptiveLoop, GeneratorPipeline, PipelineConfig};
 use greengen::runtime::{AnalyticsBackend, NativeBackend, XlaBackend};
 use greengen::scheduler::{
@@ -50,6 +52,7 @@ fn run(args: &Args) -> Result<()> {
         Some("scalability") => cmd_scalability(args),
         Some("threshold") => cmd_threshold(args),
         Some("timeshift") => cmd_timeshift(args),
+        Some("continuum") => cmd_continuum(args),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print!("{}", USAGE);
@@ -68,11 +71,16 @@ USAGE:
   greengen scenario <1-5> [--explain] [--format prolog|json|minizinc] [--xla] [--extended]
   greengen generate --app app.json --infra infra.json [--alpha 0.8] [--format prolog] [--xla]
   greengen adaptive [--scenario 1] [--hours 48] [--regen 6] [--failures 0.0]
+                    [--incremental] [--zones N]
   greengen schedule [--scenario 1] [--solver greedy|exact|cost-only|random|oracle]
   greengen scalability [--mode app|infra] [--steps 10] [--reps 3] [--out file.csv]
   greengen threshold [--services 100] [--nodes 100]
   greengen timeshift [--scenario 1] [--window 4] [--horizon 24]
+  greengen continuum [--topology geo-regions] [--nodes 500] [--services 1000] [--zones 8]
+                     [--solver sharded|monolithic|both] [--epochs 1] [--sequential]
   greengen info
+
+Topologies: cloud-edge-hierarchy, geo-regions, iot-swarm, hybrid-burst
 ";
 
 fn pipeline(args: &Args) -> Result<GeneratorPipeline> {
@@ -168,21 +176,30 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_adaptive(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "scenario", "hours", "regen", "failures", "xla", "alpha", "extended", "direct",
-        "artifacts", "seed",
+        "artifacts", "seed", "incremental", "zones",
     ])?;
     let scenario = scenarios::scenario(args.usize_or("scenario", 1)?)?;
+    let incremental = args.flag("incremental");
     let config = AdaptiveConfig {
         hours: args.usize_or("hours", 48)?,
         regen_every: args.usize_or("regen", 6)?,
         failure_rate: args.f64_or("failures", 0.0)?,
         objective: Objective::default(),
-        seed: args.usize_or("seed", 0xADA9)? as u64,
+        seed: args.u64_or("seed", 0xADA9)?,
+        incremental,
+        zones: args.usize_or("zones", 0)?,
     };
     let mut looper = AdaptiveLoop::with_pipeline(pipeline(args)?, config);
     let summary = looper.run(&scenario)?;
-    println!("hour  #constraints  constrained_g  cost_only_g  random_g  oracle_g  failed");
-    for e in &summary.epochs {
+    if incremental {
         println!(
+            "hour  #constraints  constrained_g  cost_only_g  random_g  oracle_g  failed  zones(dirty/total)  reused"
+        );
+    } else {
+        println!("hour  #constraints  constrained_g  cost_only_g  random_g  oracle_g  failed");
+    }
+    for e in &summary.epochs {
+        print!(
             "{:>4}  {:>12}  {:>13.1}  {:>11.1}  {:>8.1}  {:>8.1}  {}",
             e.hour,
             e.constraints,
@@ -192,6 +209,13 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
             e.oracle_g,
             e.failed_node.as_deref().unwrap_or("-")
         );
+        if incremental {
+            print!(
+                "  {:>6}/{:<6} {:>6}",
+                e.dirty_zones, e.total_zones, e.reused_placements
+            );
+        }
+        println!();
     }
     println!(
         "\ntotals (gCO2eq): constrained={:.1} cost-only={:.1} random={:.1} oracle={:.1}",
@@ -310,16 +334,7 @@ fn cmd_scalability(args: &Args) -> Result<()> {
                 });
             let mut meter = EnergyMeter::default();
             let result = meter.measure("generate", || generator.generate(&app, &infra))?;
-            let entries: Vec<greengen::kb::ConstraintEntry> = result
-                .constraints
-                .iter()
-                .map(|c| greengen::kb::ConstraintEntry {
-                    constraint: c.clone(),
-                    mu: 1.0,
-                    generated_at: 0.0,
-                })
-                .collect();
-            let ranked = greengen::ranker::Ranker::default().rank(&entries);
+            let ranked = greengen::ranker::Ranker::default().rank_fresh(&result.constraints);
             let report = greengen::explain::ExplainabilityGenerator::report(
                 &greengen::constraints::ConstraintLibrary::default(),
                 &ranked,
@@ -412,6 +427,164 @@ fn cmd_timeshift(args: &Args) -> Result<()> {
     for rec in &recs {
         println!("{}", rec.render_prolog(1.0));
         println!("{}\n", rec.explain());
+    }
+    Ok(())
+}
+
+/// One solver's result line in the continuum comparison.
+struct SolveRow {
+    seconds: f64,
+    objective: f64,
+}
+
+fn continuum_row(
+    name: &str,
+    problem: &Problem,
+    plan: &greengen::model::DeploymentPlan,
+    seconds: f64,
+) -> Result<SolveRow> {
+    let metrics = evaluate(problem, plan)?;
+    let objective = problem.objective_value(&problem.to_assignment(plan)?);
+    println!(
+        "{name:<22} {:>9.1} ms  objective {:>12.2}  emissions {:>11.1} g  cost {:>8.3}/h  \
+         violations {:>4} (w {:.2})  dropped {}",
+        seconds * 1e3,
+        objective,
+        metrics.emissions_g,
+        metrics.cost,
+        metrics.violations,
+        metrics.violation_weight,
+        metrics.dropped
+    );
+    Ok(SolveRow { seconds, objective })
+}
+
+fn cmd_continuum(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "topology", "nodes", "services", "zones", "seed", "solver", "alpha", "epochs",
+        "sequential",
+    ])?;
+    let topology = simulate::Topology::parse(&args.opt_or("topology", "geo-regions"))?;
+    let nodes = args.usize_or("nodes", 500)?;
+    let services = args.usize_or("services", 1000)?;
+    let zones = args.usize_or("zones", 8)?;
+    let seed = args.u64_or("seed", 0xC0_411)?;
+    let spec = simulate::TopologySpec::new(topology, nodes, services)
+        .with_zones(zones)
+        .with_seed(seed);
+    let (app, mut infra) = simulate::topology::generate(&spec);
+    println!(
+        "# continuum: topology={} nodes={} services={} zones={}",
+        topology.name(),
+        nodes,
+        services,
+        zones
+    );
+
+    // learn green constraints on the numeric fast path, then rank them
+    let backend = NativeBackend;
+    let generated = greengen::constraints::ConstraintGenerator::new(&backend)
+        .with_config(greengen::constraints::GeneratorConfig {
+            alpha: args.f64_or("alpha", 0.8)?,
+            use_prolog: false,
+        })
+        .generate(&app, &infra)?;
+    let constraints = greengen::ranker::Ranker::default().rank_fresh(&generated.constraints);
+    println!(
+        "# constraints={} tau={:.2}",
+        constraints.len(),
+        generated.tau
+    );
+
+    let objective = Objective::default();
+    let mut sharded = ShardedScheduler {
+        parallel: !args.flag("sequential"),
+        ..ShardedScheduler::default()
+    };
+    if zones > 0 {
+        sharded.partitioner = ZonePartitioner::with_zones(zones);
+    }
+    let solver_mode = args.opt_or("solver", "both");
+    if !matches!(solver_mode.as_str(), "sharded" | "monolithic" | "both") {
+        return Err(greengen::Error::Config(format!(
+            "unknown solver '{solver_mode}' (sharded|monolithic|both)"
+        )));
+    }
+
+    let problem = Problem {
+        app: &app,
+        infra: &infra,
+        constraints: &constraints,
+        objective,
+    };
+    let mut mono: Option<SolveRow> = None;
+    let mut shard: Option<SolveRow> = None;
+    if solver_mode == "monolithic" || solver_mode == "both" {
+        let t0 = std::time::Instant::now();
+        let plan = GreedyScheduler::default().schedule(&problem)?;
+        mono = Some(continuum_row(
+            "monolithic-greedy",
+            &problem,
+            &plan,
+            t0.elapsed().as_secs_f64(),
+        )?);
+    }
+    if solver_mode == "sharded" || solver_mode == "both" {
+        let t0 = std::time::Instant::now();
+        let (plan, stats) = sharded.schedule_with_stats(&problem)?;
+        let seconds = t0.elapsed().as_secs_f64();
+        shard = Some(continuum_row("sharded-continuum", &problem, &plan, seconds)?);
+        println!(
+            "# sharded: mode={} zones={} repair_placed={} repair_moves={}",
+            stats.mode, stats.zones, stats.repair_placed, stats.repair_moves
+        );
+    }
+    if let (Some(m), Some(s)) = (&mono, &shard) {
+        println!(
+            "# speedup x{:.2}  objective gap {:+.2}%",
+            m.seconds / s.seconds.max(1e-9),
+            (s.objective - m.objective) / m.objective.max(1e-9) * 100.0
+        );
+    }
+
+    // --- incremental re-planning demo: one zone's grid drifts per epoch
+    let epochs = args.usize_or("epochs", 1)?;
+    if epochs > 1 {
+        println!("\n# incremental re-planning: one zone's grid drifts each epoch");
+        let mut rp = IncrementalReplanner::new(sharded);
+        // mirror TopologySpec::effective_zones: the generator clamps the
+        // requested zone count to the node count, and drift must target a
+        // zone label that actually exists
+        let live_zones = zones.clamp(1, nodes);
+        for e in 0..epochs {
+            if e > 0 {
+                let zone = format!("z{:02}", e % live_zones);
+                let factor = if e % 2 == 0 { 0.6 } else { 1.6 };
+                for n in &mut infra.nodes {
+                    if n.zone.as_deref() == Some(zone.as_str()) {
+                        n.profile.carbon = Some((n.carbon() * factor).clamp(10.0, 650.0));
+                    }
+                }
+            }
+            let problem = Problem {
+                app: &app,
+                infra: &infra,
+                constraints: &constraints,
+                objective,
+            };
+            let t0 = std::time::Instant::now();
+            let outcome = rp.replan(&problem)?;
+            let metrics = evaluate(&problem, &outcome.plan)?;
+            println!(
+                "epoch {e:>3}: dirty {}/{} zones  reused {:>5} placements  {:>8.1} ms  \
+                 emissions {:.1} g",
+                outcome.dirty_zones.len(),
+                outcome.total_zones,
+                outcome.reused_placements,
+                t0.elapsed().as_secs_f64() * 1e3,
+                metrics.emissions_g
+            );
+        }
     }
     Ok(())
 }

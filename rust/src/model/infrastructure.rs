@@ -42,6 +42,43 @@ impl Default for Capabilities {
     }
 }
 
+/// Latency class of a node in the cloud-edge continuum: where it sits
+/// between the core cloud and the device edge. Used by the
+/// [`crate::continuum`] zone partitioner alongside `region`/`zone`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Tier {
+    /// Core cloud datacentre (high capacity, high RTT to the edge).
+    #[default]
+    Cloud,
+    /// Regional / metro point of presence.
+    Regional,
+    /// Edge site (cell tower, on-prem gateway).
+    Edge,
+    /// Constrained end device (IoT swarm member).
+    Device,
+}
+
+impl Tier {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Tier::Cloud => "cloud",
+            Tier::Regional => "regional",
+            Tier::Edge => "edge",
+            Tier::Device => "device",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Tier> {
+        match s {
+            "cloud" => Ok(Tier::Cloud),
+            "regional" => Ok(Tier::Regional),
+            "edge" => Ok(Tier::Edge),
+            "device" => Ok(Tier::Device),
+            other => Err(Error::Config(format!("unknown tier '{other}'"))),
+        }
+    }
+}
+
 /// Node profile metadata (§3.2): pricing and environmental footprint.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NodeProfile {
@@ -67,6 +104,11 @@ pub struct Node {
     pub id: String,
     /// Grid region used for carbon-intensity lookup (e.g. "IT", "FR").
     pub region: String,
+    /// Explicit scheduling zone label. `None` means the partitioner derives
+    /// the zone from `region` (or balances by capacity).
+    pub zone: Option<String>,
+    /// Latency class in the continuum.
+    pub tier: Tier,
     pub capabilities: Capabilities,
     pub profile: NodeProfile,
 }
@@ -76,6 +118,8 @@ impl Node {
         Node {
             id: id.into(),
             region: region.into(),
+            zone: None,
+            tier: Tier::default(),
             capabilities: Capabilities::default(),
             profile: NodeProfile::default(),
         }
@@ -167,7 +211,7 @@ fn node_to_json(n: &Node) -> Value {
     if let Some(c) = n.profile.carbon {
         profile.set("carbon", Value::from(c));
     }
-    Value::object(vec![
+    let mut v = Value::object(vec![
         ("id", Value::from(n.id.clone())),
         ("region", Value::from(n.region.clone())),
         (
@@ -186,11 +230,25 @@ fn node_to_json(n: &Node) -> Value {
             ]),
         ),
         ("profile", profile),
-    ])
+    ]);
+    // optional continuum attributes: written only when set, so the output
+    // stays byte-identical to the seed for plain infrastructures
+    if let Some(zone) = &n.zone {
+        v.set("zone", Value::from(zone.clone()));
+    }
+    if n.tier != Tier::default() {
+        v.set("tier", Value::from(n.tier.as_str()));
+    }
+    v
 }
 
 fn node_from_json(v: &Value) -> Result<Node> {
-    let mut n = Node::new(v.str_field("id")?, v.get("region").and_then(|r| r.as_str()).unwrap_or(""));
+    let region = v.get("region").and_then(|r| r.as_str()).unwrap_or("");
+    let mut n = Node::new(v.str_field("id")?, region);
+    n.zone = v.get("zone").and_then(|z| z.as_str()).map(|z| z.to_string());
+    if let Some(t) = v.get("tier").and_then(|t| t.as_str()) {
+        n.tier = Tier::parse(t)?;
+    }
     if let Some(caps) = v.get("capabilities") {
         let g = |k: &str, d: f64| caps.get(k).and_then(|x| x.as_f64()).unwrap_or(d);
         let b = |k: &str, d: bool| caps.get(k).and_then(|x| x.as_bool()).unwrap_or(d);
@@ -271,6 +329,28 @@ mod tests {
         };
         assert!(italy.placement_compatible(&req));
         assert!(!france.placement_compatible(&req)); // firewall disabled
+    }
+
+    #[test]
+    fn zone_and_tier_round_trip() {
+        let mut infra = sample_infra();
+        infra.node_mut("italy").unwrap().zone = Some("eu-south".into());
+        infra.node_mut("italy").unwrap().tier = Tier::Edge;
+        let back = Infrastructure::from_json(&infra.to_json()).unwrap();
+        assert_eq!(infra, back);
+        let italy = back.node("italy").unwrap();
+        assert_eq!(italy.zone.as_deref(), Some("eu-south"));
+        assert_eq!(italy.tier, Tier::Edge);
+        // unlabeled nodes keep defaults (and omit the keys entirely)
+        let france = back.node("france").unwrap();
+        assert_eq!(france.zone, None);
+        assert_eq!(france.tier, Tier::Cloud);
+    }
+
+    #[test]
+    fn tier_parse_rejects_unknown() {
+        assert!(Tier::parse("cloud").is_ok());
+        assert!(Tier::parse("orbit").is_err());
     }
 
     #[test]

@@ -15,4 +15,4 @@ pub use application::{
     Service, ServiceRequirements, Subnet,
 };
 pub use deployment::{DeploymentPlan, Placement};
-pub use infrastructure::{Capabilities, Infrastructure, Node, NodeProfile};
+pub use infrastructure::{Capabilities, Infrastructure, Node, NodeProfile, Tier};

@@ -11,8 +11,21 @@
 use super::metrics::{EnergySample, TrafficSample};
 use super::store::MetricStore;
 use crate::util::Rng;
+use std::collections::HashMap;
 
 /// Ground-truth behaviour of one application under simulation.
+///
+/// Entries live in insertion-ordered `Vec`s — the simulator's RNG stream
+/// consumes them in that order, so it must stay deterministic — while
+/// private `HashMap` indices make `energy_of`/`traffic_of`/`set_energy`
+/// O(1) instead of linear scans (they are called per (service, flavour)
+/// when truths are built or perturbed for large fleets; the sampling
+/// loop itself iterates the vectors directly, clone-free).
+///
+/// Invariant: mutate ONLY through [`GroundTruth::set_energy`] /
+/// [`GroundTruth::add_traffic`] / [`GroundTruth::scale_traffic`]. The
+/// vectors are left `pub` for read access (scenario tables, tests);
+/// pushing into them directly would desynchronise the indices.
 #[derive(Debug, Clone, Default)]
 pub struct GroundTruth {
     /// Mean energy per scrape window, Wh, keyed by (service, flavour).
@@ -20,29 +33,38 @@ pub struct GroundTruth {
     /// Mean traffic per scrape window keyed by (from, from_flavour, to):
     /// (requests per window, bytes per request).
     pub traffic: Vec<((String, String, String), (f64, f64))>,
+    energy_idx: HashMap<(String, String), usize>,
+    traffic_idx: HashMap<(String, String, String), usize>,
 }
 
 impl GroundTruth {
     pub fn energy_of(&self, service: &str, flavour: &str) -> Option<f64> {
-        self.energy_wh
-            .iter()
-            .find(|((s, f), _)| s == service && f == flavour)
-            .map(|(_, wh)| *wh)
+        self.energy_idx
+            .get(&(service.to_string(), flavour.to_string()))
+            .map(|&i| self.energy_wh[i].1)
+    }
+
+    /// Mean (requests per window, bytes per request) of one edge.
+    pub fn traffic_of(&self, from: &str, from_flavour: &str, to: &str) -> Option<(f64, f64)> {
+        self.traffic_idx
+            .get(&(from.to_string(), from_flavour.to_string(), to.to_string()))
+            .map(|&i| self.traffic[i].1)
     }
 
     pub fn set_energy(&mut self, service: &str, flavour: &str, wh: f64) {
-        if let Some(slot) = self
-            .energy_wh
-            .iter_mut()
-            .find(|((s, f), _)| s == service && f == flavour)
-        {
-            slot.1 = wh;
-        } else {
-            self.energy_wh
-                .push(((service.to_string(), flavour.to_string()), wh));
+        let key = (service.to_string(), flavour.to_string());
+        match self.energy_idx.get(&key) {
+            Some(&i) => self.energy_wh[i].1 = wh,
+            None => {
+                self.energy_idx.insert(key.clone(), self.energy_wh.len());
+                self.energy_wh.push((key, wh));
+            }
         }
     }
 
+    /// Upsert one traffic edge: re-adding an existing
+    /// (from, from_flavour, to) key replaces its volumes rather than
+    /// accumulating a duplicate entry.
     pub fn add_traffic(
         &mut self,
         from: &str,
@@ -51,10 +73,15 @@ impl GroundTruth {
         requests_per_window: f64,
         bytes_per_request: f64,
     ) {
-        self.traffic.push((
-            (from.to_string(), from_flavour.to_string(), to.to_string()),
-            (requests_per_window, bytes_per_request),
-        ));
+        let key = (from.to_string(), from_flavour.to_string(), to.to_string());
+        match self.traffic_idx.get(&key) {
+            Some(&i) => self.traffic[i].1 = (requests_per_window, bytes_per_request),
+            None => {
+                self.traffic_idx.insert(key.clone(), self.traffic.len());
+                self.traffic
+                    .push((key, (requests_per_window, bytes_per_request)));
+            }
+        }
     }
 
     /// Scale all traffic volumes (Scenario 5: ×15'000 data exchange).
@@ -121,24 +148,28 @@ impl WorkloadSimulator {
     pub fn scrape_into(&mut self, store: &mut MetricStore, t: f64) {
         let load = self.load_factor(t);
         let noise = self.config.noise;
-        for ((service, flavour), wh) in self.truth.energy_wh.clone() {
-            let jitter = 1.0 + noise * (self.rng.f64() * 2.0 - 1.0);
+        // split-borrow the simulator so the RNG can advance while the
+        // ground truth is iterated without cloning it every window
+        let truth = &self.truth;
+        let rng = &mut self.rng;
+        for ((service, flavour), wh) in &truth.energy_wh {
+            let jitter = 1.0 + noise * (rng.f64() * 2.0 - 1.0);
             let wh_obs = wh * load * jitter;
             store.push_energy(EnergySample {
                 t,
-                service,
-                flavour,
+                service: service.clone(),
+                flavour: flavour.clone(),
                 joules: wh_obs * 3600.0, // Wh -> J
             });
         }
-        for ((from, from_flavour, to), (reqs, bytes_per_req)) in self.truth.traffic.clone() {
-            let jitter = 1.0 + noise * (self.rng.f64() * 2.0 - 1.0);
+        for ((from, from_flavour, to), (reqs, bytes_per_req)) in &truth.traffic {
+            let jitter = 1.0 + noise * (rng.f64() * 2.0 - 1.0);
             let requests = (reqs * load * jitter).max(0.0);
             store.push_traffic(TrafficSample {
                 t,
-                from,
-                from_flavour,
-                to,
+                from: from.clone(),
+                from_flavour: from_flavour.clone(),
+                to: to.clone(),
                 requests,
                 bytes: requests * bytes_per_req,
             });
@@ -225,6 +256,22 @@ mod tests {
         let mut g = truth();
         g.scale_traffic(15_000.0);
         assert_eq!(g.traffic[0].1 .0, 15_000_000.0);
+    }
+
+    #[test]
+    fn keyed_lookups_match_vector_contents() {
+        let mut g = truth();
+        assert_eq!(g.energy_of("frontend", "large"), Some(1981.0));
+        assert_eq!(g.energy_of("frontend", "missing"), None);
+        assert_eq!(g.traffic_of("frontend", "large", "cart"), Some((1000.0, 5e4)));
+        assert_eq!(g.traffic_of("cart", "large", "frontend"), None);
+        // updates go through the index, not a second vector entry
+        g.set_energy("frontend", "large", 500.0);
+        assert_eq!(g.energy_of("frontend", "large"), Some(500.0));
+        assert_eq!(g.energy_wh.len(), 2);
+        g.add_traffic("frontend", "large", "cart", 10.0, 1.0);
+        assert_eq!(g.traffic_of("frontend", "large", "cart"), Some((10.0, 1.0)));
+        assert_eq!(g.traffic.len(), 1);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use super::generator_pipeline::{GeneratorPipeline, PipelineConfig};
 use crate::carbon::TraceSet;
 use crate::config::Scenario;
+use crate::continuum::{IncrementalReplanner, ShardedScheduler, ZonePartitioner};
 use crate::monitoring::{MetricStore, WorkloadSimulator};
 use crate::scheduler::{
     evaluate, CostOnlyScheduler, GreedyScheduler, GreenOracleScheduler, Objective, Problem,
@@ -31,6 +32,12 @@ pub struct AdaptiveConfig {
     /// Scheduler objective (shared by constrained + cost-only).
     pub objective: Objective,
     pub seed: u64,
+    /// Schedule the constrained plan through the sharded incremental
+    /// re-planner: only zones whose carbon/nodes/constraints changed are
+    /// re-solved each epoch.
+    pub incremental: bool,
+    /// Zone count hint for the partitioner (0 = auto / labels).
+    pub zones: usize,
 }
 
 impl Default for AdaptiveConfig {
@@ -41,6 +48,8 @@ impl Default for AdaptiveConfig {
             failure_rate: 0.0,
             objective: Objective::default(),
             seed: 0xADA9,
+            incremental: false,
+            zones: 0,
         }
     }
 }
@@ -63,6 +72,12 @@ pub struct EpochLog {
     pub constrained_cost: f64,
     /// Plan cost of the cost-only scheduler.
     pub cost_only_cost: f64,
+    /// Incremental mode: zones re-solved this epoch (0 when disabled).
+    pub dirty_zones: usize,
+    /// Incremental mode: total zones (0 when disabled).
+    pub total_zones: usize,
+    /// Incremental mode: placements carried from the previous epoch.
+    pub reused_placements: usize,
 }
 
 /// Aggregated outcome.
@@ -122,6 +137,14 @@ impl AdaptiveLoop {
         let mut store = MetricStore::new();
         let mut app = scenario.app.clone();
 
+        let mut replanner = self.config.incremental.then(|| {
+            let mut scheduler = ShardedScheduler::default();
+            if self.config.zones > 0 {
+                scheduler.partitioner = ZonePartitioner::with_zones(self.config.zones);
+            }
+            IncrementalReplanner::new(scheduler)
+        });
+
         let mut epochs = Vec::new();
         let mut hour = 0usize;
         while hour < self.config.hours {
@@ -158,7 +181,19 @@ impl AdaptiveLoop {
                 constraints: &outcome.ranked,
                 objective,
             };
-            let constrained = GreedyScheduler::default().schedule(&problem)?;
+            let (constrained, dirty_zones, total_zones, reused_placements) =
+                match &mut replanner {
+                    Some(rp) => {
+                        let outcome = rp.replan(&problem)?;
+                        (
+                            outcome.plan,
+                            outcome.dirty_zones.len(),
+                            outcome.total_zones,
+                            outcome.reused_placements,
+                        )
+                    }
+                    None => (GreedyScheduler::default().schedule(&problem)?, 0, 0, 0),
+                };
             let cost_only = CostOnlyScheduler.schedule(&problem)?;
             let random = RandomScheduler {
                 seed: self.config.seed ^ hour as u64,
@@ -181,6 +216,9 @@ impl AdaptiveLoop {
                 failed_node,
                 constrained_cost: m_constrained.cost,
                 cost_only_cost: m_cost.cost,
+                dirty_zones,
+                total_zones,
+                reused_placements,
             });
 
             hour += self.config.regen_every;
@@ -222,6 +260,29 @@ mod tests {
         );
         assert!(summary.reduction_vs_cost_only() > 0.0);
         // oracle is a lower bound on emissions
+        assert!(summary.total_oracle_g <= summary.total_constrained_g + 1e-6);
+    }
+
+    #[test]
+    fn incremental_mode_fills_zone_telemetry() {
+        let mut looper = AdaptiveLoop::new(
+            PipelineConfig::default(),
+            AdaptiveConfig {
+                hours: 12,
+                regen_every: 6,
+                incremental: true,
+                zones: 2,
+                ..Default::default()
+            },
+        );
+        let summary = looper.run(&scenarios::scenario(1).unwrap()).unwrap();
+        assert_eq!(summary.epochs.len(), 2);
+        for e in &summary.epochs {
+            assert!(e.total_zones >= 1);
+            assert!(e.dirty_zones <= e.total_zones);
+        }
+        assert!(summary.total_constrained_g > 0.0);
+        // oracle remains the lower bound under the sharded path too
         assert!(summary.total_oracle_g <= summary.total_constrained_g + 1e-6);
     }
 

@@ -52,6 +52,21 @@ impl Ranker {
         Ranker { config }
     }
 
+    /// Rank freshly generated constraints as if each had full KB memory
+    /// (μ = 1, no decay). The shared path for one-shot pipelines — the
+    /// `continuum` CLI, benches and examples — that skip the KB.
+    pub fn rank_fresh(&self, constraints: &[Constraint]) -> Vec<Constraint> {
+        let entries: Vec<ConstraintEntry> = constraints
+            .iter()
+            .map(|c| ConstraintEntry {
+                constraint: c.clone(),
+                mu: 1.0,
+                generated_at: 0.0,
+            })
+            .collect();
+        self.rank(&entries)
+    }
+
     /// Rank KB constraint entries; returns surviving constraints with
     /// their weights set, sorted by weight descending (ties broken by
     /// key for determinism).

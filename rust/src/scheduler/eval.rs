@@ -21,6 +21,42 @@ pub struct PlanMetrics {
     pub violations: usize,
 }
 
+/// Structural feasibility of a plan: per-node capacity respected and
+/// every mandatory service deployed. Returns the first violation as an
+/// `Error::Infeasible`. Shared by the continuum tests and usable as a
+/// production invariant check on externally supplied plans.
+pub fn check_feasible(problem: &Problem, plan: &DeploymentPlan) -> Result<()> {
+    let assignment = problem.to_assignment(plan)?;
+    let mut used = vec![(0.0f64, 0.0f64, 0.0f64); problem.infra.nodes.len()];
+    for (si, slot) in assignment.iter().enumerate() {
+        if let Some((fi, ni)) = slot {
+            let req = &problem.app.services[si].flavours[*fi].requirements;
+            used[*ni].0 += req.cpu;
+            used[*ni].1 += req.ram_gb;
+            used[*ni].2 += req.storage_gb;
+        }
+    }
+    for (ni, (cpu, ram, sto)) in used.iter().enumerate() {
+        let cap = &problem.infra.nodes[ni].capabilities;
+        if *cpu > cap.cpu + 1e-6 || *ram > cap.ram_gb + 1e-6 || *sto > cap.storage_gb + 1e-6 {
+            return Err(crate::Error::Infeasible(format!(
+                "capacity exceeded on node '{}' (cpu {cpu:.2}/{:.2}, ram {ram:.2}/{:.2}, \
+                 storage {sto:.2}/{:.2})",
+                problem.infra.nodes[ni].id, cap.cpu, cap.ram_gb, cap.storage_gb
+            )));
+        }
+    }
+    for s in &problem.app.services {
+        if s.must_deploy && !plan.is_deployed(&s.id) {
+            return Err(crate::Error::Infeasible(format!(
+                "mandatory service '{}' not deployed",
+                s.id
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// Evaluate a plan against a problem (its app/infra/constraints).
 pub fn evaluate(problem: &Problem, plan: &DeploymentPlan) -> Result<PlanMetrics> {
     let assignment = problem.to_assignment(plan)?;

@@ -16,7 +16,7 @@ pub mod problem;
 pub mod solver;
 
 pub use baselines::{CostOnlyScheduler, GreenOracleScheduler, RandomScheduler};
-pub use eval::{evaluate, PlanMetrics};
+pub use eval::{check_feasible, evaluate, PlanMetrics};
 pub use greedy::GreedyScheduler;
-pub use problem::{Objective, Problem, Scheduler};
+pub use problem::{CapacityState, Objective, Problem, Scheduler};
 pub use solver::BranchAndBoundScheduler;

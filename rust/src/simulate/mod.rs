@@ -11,6 +11,10 @@ use crate::model::{
 };
 use crate::util::Rng;
 
+pub mod topology;
+
+pub use topology::{Topology, TopologySpec};
+
 /// Generate an application with `services` services. Each service gets
 /// 1–3 flavours with decreasing energy (flavoursOrder: hungriest =
 /// highest-quality first, like Table 1), already enriched with profiles

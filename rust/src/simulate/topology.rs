@@ -1,0 +1,352 @@
+//! Topology fleet generator: named cloud-continuum shapes far beyond the
+//! paper's five scenarios.
+//!
+//! Each shape produces a zoned [`Infrastructure`] (nodes carry `zone` and
+//! [`Tier`] labels, carbon already enriched) plus a matching
+//! [`Application`] whose communication graph is *clustered*: service
+//! groups talk a lot internally and little across groups, which is the
+//! regime where the [`crate::continuum`] zone partitioner pays off.
+//!
+//! Shapes:
+//! * `cloud-edge-hierarchy` — a few big cloud datacentres, a regional
+//!   middle tier, a long tail of small edge sites.
+//! * `geo-regions` — uniform capacity split across geo regions whose
+//!   carbon grids differ widely (the Forti & Brogi continuum setting).
+//! * `iot-swarm` — one small cloud core plus swarms of constrained
+//!   devices.
+//! * `hybrid-burst` — a fixed on-prem zone plus elastic cloud burst
+//!   zones (optional services overflow into the burst capacity).
+
+use crate::model::{
+    Application, CommLink, EnergyProfile, Flavour, Infrastructure, Node, Service, Tier,
+};
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// A named continuum shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    CloudEdgeHierarchy,
+    GeoRegions,
+    IotSwarm,
+    HybridBurst,
+}
+
+impl Topology {
+    /// Every shape, for sweeps.
+    pub const ALL: [Topology; 4] = [
+        Topology::CloudEdgeHierarchy,
+        Topology::GeoRegions,
+        Topology::IotSwarm,
+        Topology::HybridBurst,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::CloudEdgeHierarchy => "cloud-edge-hierarchy",
+            Topology::GeoRegions => "geo-regions",
+            Topology::IotSwarm => "iot-swarm",
+            Topology::HybridBurst => "hybrid-burst",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Topology> {
+        match s {
+            "cloud-edge-hierarchy" => Ok(Topology::CloudEdgeHierarchy),
+            "geo-regions" => Ok(Topology::GeoRegions),
+            "iot-swarm" => Ok(Topology::IotSwarm),
+            "hybrid-burst" => Ok(Topology::HybridBurst),
+            other => Err(Error::Config(format!(
+                "unknown topology '{other}' (expected one of: cloud-edge-hierarchy, \
+                 geo-regions, iot-swarm, hybrid-burst)"
+            ))),
+        }
+    }
+}
+
+/// Parameters of one generated fleet.
+#[derive(Debug, Clone, Copy)]
+pub struct TopologySpec {
+    pub topology: Topology,
+    pub nodes: usize,
+    pub services: usize,
+    /// Target number of zones (clamped to [1, nodes]).
+    pub zones: usize,
+    pub seed: u64,
+}
+
+impl TopologySpec {
+    pub fn new(topology: Topology, nodes: usize, services: usize) -> TopologySpec {
+        TopologySpec {
+            topology,
+            nodes: nodes.max(1),
+            services: services.max(1),
+            zones: 8,
+            seed: 0xC0_411,
+        }
+    }
+
+    pub fn with_zones(mut self, zones: usize) -> TopologySpec {
+        self.zones = zones;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> TopologySpec {
+        self.seed = seed;
+        self
+    }
+
+    fn effective_zones(&self) -> usize {
+        self.zones.clamp(1, self.nodes)
+    }
+}
+
+/// Generate the full fleet: zoned infrastructure + clustered application.
+pub fn generate(spec: &TopologySpec) -> (Application, Infrastructure) {
+    let mut rng = Rng::new(spec.seed ^ spec.topology.name().len() as u64);
+    let infra = generate_infrastructure(spec, &mut rng);
+    let app = generate_application(spec, &mut rng);
+    (app, infra)
+}
+
+/// The infrastructure side only (zone/tier-labelled, carbon enriched).
+pub fn generate_infrastructure(spec: &TopologySpec, rng: &mut Rng) -> Infrastructure {
+    let zones = spec.effective_zones();
+    let mut infra = Infrastructure::new(format!("{}-{}", spec.topology.name(), spec.nodes));
+    // per-zone grid character: base carbon intensity and base price
+    let zone_ci: Vec<f64> = (0..zones).map(|_| rng.range(15.0, 600.0)).collect();
+    let zone_cost: Vec<f64> = (0..zones).map(|_| rng.range(0.02, 0.12)).collect();
+
+    for i in 0..spec.nodes {
+        let z = i % zones;
+        let frac = i as f64 / spec.nodes as f64;
+        let mut n = Node::new(format!("node{i:04}"), format!("REG{z:02}"));
+        n.zone = Some(format!("z{z:02}"));
+        let jitter = rng.range(0.85, 1.15);
+        n.profile.carbon = Some((zone_ci[z] * jitter).clamp(10.0, 650.0));
+        n.profile.cost_per_cpu_hour = zone_cost[z] * rng.range(0.9, 1.1);
+        match spec.topology {
+            Topology::GeoRegions => {
+                n.tier = Tier::Cloud;
+                n.capabilities.cpu = rng.range(16.0, 64.0);
+                n.capabilities.ram_gb = rng.range(32.0, 256.0);
+            }
+            Topology::CloudEdgeHierarchy => {
+                // first 10% cloud, next 30% regional, remaining 60% edge
+                if frac < 0.10 {
+                    n.tier = Tier::Cloud;
+                    n.capabilities.cpu = rng.range(64.0, 128.0);
+                    n.capabilities.ram_gb = rng.range(256.0, 512.0);
+                } else if frac < 0.40 {
+                    n.tier = Tier::Regional;
+                    n.capabilities.cpu = rng.range(16.0, 48.0);
+                    n.capabilities.ram_gb = rng.range(64.0, 128.0);
+                } else {
+                    n.tier = Tier::Edge;
+                    n.capabilities.cpu = rng.range(4.0, 8.0);
+                    n.capabilities.ram_gb = rng.range(8.0, 16.0);
+                    // edge sites often run on greener local grids
+                    n.profile.carbon = Some((zone_ci[z] * jitter * 0.6).clamp(10.0, 650.0));
+                }
+            }
+            Topology::IotSwarm => {
+                if frac < 0.05 || i == 0 {
+                    n.tier = Tier::Cloud;
+                    n.capabilities.cpu = rng.range(64.0, 128.0);
+                    n.capabilities.ram_gb = rng.range(128.0, 512.0);
+                } else {
+                    n.tier = Tier::Device;
+                    n.capabilities.cpu = rng.range(1.0, 4.0);
+                    n.capabilities.ram_gb = rng.range(1.0, 8.0);
+                    n.capabilities.storage_gb = rng.range(4.0, 32.0);
+                }
+            }
+            Topology::HybridBurst => {
+                if z == 0 {
+                    // the fixed on-prem estate: cheap, moderate capacity
+                    n.tier = Tier::Regional;
+                    n.capabilities.cpu = rng.range(16.0, 32.0);
+                    n.capabilities.ram_gb = rng.range(32.0, 128.0);
+                    n.profile.cost_per_cpu_hour = 0.02;
+                } else {
+                    // elastic burst capacity: bigger, pricier
+                    n.tier = Tier::Cloud;
+                    n.capabilities.cpu = rng.range(48.0, 128.0);
+                    n.capabilities.ram_gb = rng.range(128.0, 512.0);
+                    n.profile.cost_per_cpu_hour = zone_cost[z].max(0.06) * rng.range(1.0, 1.4);
+                }
+            }
+        }
+        infra.nodes.push(n);
+    }
+    infra
+}
+
+/// The application side only: clustered service groups whose intra-group
+/// links are an order of magnitude chattier than cross-group links.
+pub fn generate_application(spec: &TopologySpec, rng: &mut Rng) -> Application {
+    let mut app = Application::new(format!("{}-{}svc", spec.topology.name(), spec.services));
+    // demand scale: swarms must fit on device-class nodes
+    let (cpu_cap, ram_cap) = match spec.topology {
+        Topology::IotSwarm => (1.0, 2.0),
+        Topology::CloudEdgeHierarchy => (4.0, 8.0),
+        _ => (8.0, 16.0),
+    };
+    let group_size = (spec.services / spec.effective_zones().max(1)).clamp(4, 12);
+    for i in 0..spec.services {
+        let mut s = Service::new(format!("svc{i:04}"));
+        // hybrid-burst models overflow work as optional services
+        s.must_deploy = match spec.topology {
+            Topology::HybridBurst => rng.chance(0.6),
+            _ => rng.chance(0.9),
+        };
+        let base = rng.log_normal(-2.0, 2.0).min(8.0);
+        let n_flavours = 1 + rng.below(3);
+        for j in 0..n_flavours {
+            let mut f = Flavour::new(match j {
+                0 => "large".to_string(),
+                1 => "medium".to_string(),
+                _ => "tiny".to_string(),
+            });
+            let scale = 1.0 - 0.25 * j as f64;
+            f.energy = Some(EnergyProfile {
+                kwh: base * scale,
+                samples: 24,
+            });
+            f.requirements.cpu = (0.25 + base * scale).min(cpu_cap);
+            f.requirements.ram_gb = (0.25 + base * scale * 2.0).min(ram_cap);
+            s.flavours.push(f);
+        }
+        app.services.push(s);
+    }
+    // communication: dense inside a group, sparse across groups
+    let groups = (spec.services + group_size - 1) / group_size;
+    for i in 0..spec.services {
+        let g = i / group_size;
+        let group_lo = g * group_size;
+        let group_hi = ((g + 1) * group_size).min(spec.services);
+        let span = group_hi - group_lo;
+        // 2 chatty intra-group links
+        for _ in 0..2 {
+            if span < 2 {
+                break;
+            }
+            let j = group_lo + rng.below(span);
+            push_link(&mut app, i, j, rng.log_normal(-4.0, 1.0).min(1.0), rng);
+        }
+        // occasional thin cross-group link (group backbones)
+        if groups > 1 && rng.chance(0.15) {
+            let other_g = rng.below(groups);
+            let lo = other_g * group_size;
+            let hi = ((other_g + 1) * group_size).min(spec.services);
+            if hi > lo {
+                let j = lo + rng.below(hi - lo);
+                push_link(&mut app, i, j, rng.log_normal(-7.0, 1.0).min(0.05), rng);
+            }
+        }
+    }
+    app
+}
+
+fn push_link(app: &mut Application, i: usize, j: usize, kwh: f64, _rng: &mut Rng) {
+    if i == j {
+        return;
+    }
+    let from = format!("svc{i:04}");
+    let to = format!("svc{j:04}");
+    if app.links.iter().any(|l| l.from == from && l.to == to) {
+        return;
+    }
+    let mut link = CommLink::new(from, to);
+    for f in &app.services[i].flavours {
+        link.energy.push((f.name.clone(), kwh));
+    }
+    app.links.push(link);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(t: Topology) -> TopologySpec {
+        TopologySpec::new(t, 60, 120).with_zones(4).with_seed(7)
+    }
+
+    #[test]
+    fn every_shape_generates_valid_fleets() {
+        for t in Topology::ALL {
+            let (app, infra) = generate(&spec(t));
+            assert_eq!(app.services.len(), 120, "{}", t.name());
+            assert_eq!(infra.nodes.len(), 60, "{}", t.name());
+            app.validate().unwrap();
+            infra.validate().unwrap();
+            // all nodes zoned and carbon-enriched
+            for n in &infra.nodes {
+                assert!(n.zone.is_some(), "{} node {} unzoned", t.name(), n.id);
+                assert!(n.carbon() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_names() {
+        for t in Topology::ALL {
+            assert_eq!(Topology::parse(t.name()).unwrap(), t);
+        }
+        assert!(Topology::parse("moonbase").is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&spec(Topology::GeoRegions));
+        let b = generate(&spec(Topology::GeoRegions));
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+    }
+
+    #[test]
+    fn hierarchy_has_all_three_tiers() {
+        let (_, infra) = generate(&spec(Topology::CloudEdgeHierarchy));
+        for tier in [Tier::Cloud, Tier::Regional, Tier::Edge] {
+            assert!(
+                infra.nodes.iter().any(|n| n.tier == tier),
+                "missing {tier:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn swarm_services_fit_device_nodes() {
+        let (app, infra) = generate(&spec(Topology::IotSwarm));
+        let max_cpu = app
+            .rows()
+            .iter()
+            .map(|(_, f)| f.requirements.cpu)
+            .fold(0.0, f64::max);
+        let min_node = infra
+            .nodes
+            .iter()
+            .map(|n| n.capabilities.cpu)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            max_cpu <= min_node,
+            "service cpu {max_cpu} exceeds smallest device {min_node}"
+        );
+    }
+
+    #[test]
+    fn clustered_links_mostly_intra_group() {
+        let (app, _) = generate(&spec(Topology::GeoRegions));
+        let group = |id: &str| id[3..].parse::<usize>().unwrap() / 12;
+        let intra = app
+            .links
+            .iter()
+            .filter(|l| group(&l.from) == group(&l.to))
+            .count();
+        assert!(
+            intra * 2 > app.links.len(),
+            "expected mostly intra-group links ({intra}/{})",
+            app.links.len()
+        );
+    }
+}

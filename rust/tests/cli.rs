@@ -20,9 +20,50 @@ fn greengen(args: &[&str]) -> (String, String, bool) {
 fn help_lists_commands() {
     let (stdout, _, ok) = greengen(&["help"]);
     assert!(ok);
-    for cmd in ["scenario", "generate", "adaptive", "schedule", "scalability", "threshold", "timeshift"] {
+    for cmd in [
+        "scenario",
+        "generate",
+        "adaptive",
+        "schedule",
+        "scalability",
+        "threshold",
+        "timeshift",
+        "continuum",
+    ] {
         assert!(stdout.contains(cmd), "{cmd} missing from usage");
     }
+}
+
+#[test]
+fn continuum_compares_solvers_and_replans() {
+    let (stdout, stderr, ok) = greengen(&[
+        "continuum",
+        "--topology",
+        "geo-regions",
+        "--nodes",
+        "48",
+        "--services",
+        "96",
+        "--zones",
+        "4",
+        "--epochs",
+        "3",
+        "--seed",
+        "7",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("monolithic-greedy"), "{stdout}");
+    assert!(stdout.contains("sharded-continuum"), "{stdout}");
+    assert!(stdout.contains("speedup"), "{stdout}");
+    // the incremental demo reports per-epoch dirty-zone counts
+    assert!(stdout.contains("dirty"), "{stdout}");
+}
+
+#[test]
+fn continuum_rejects_unknown_topology() {
+    let (_, stderr, ok) = greengen(&["continuum", "--topology", "moonbase", "--nodes", "8"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown topology"));
 }
 
 #[test]

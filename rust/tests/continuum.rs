@@ -1,0 +1,163 @@
+//! Integration tests for the `continuum` subsystem: partition soundness,
+//! sharded-vs-monolithic objective bounds (property-tested on random
+//! 2-zone instances), and exact parity with branch-and-bound on tiny
+//! instances.
+
+use greengen::constraints::{Constraint, ConstraintGenerator, GeneratorConfig};
+use greengen::continuum::{ShardedScheduler, ZonePartitioner};
+use greengen::model::{Application, Infrastructure};
+use greengen::runtime::NativeBackend;
+use greengen::scheduler::{
+    BranchAndBoundScheduler, GreedyScheduler, Objective, Problem, Scheduler,
+};
+use greengen::simulate;
+use greengen::util::proptest::check;
+use greengen::util::Rng;
+
+/// Random instance with generated-and-weighted green constraints.
+fn instance(
+    rng: &mut Rng,
+    services: usize,
+    nodes: usize,
+    capacity_scale: f64,
+) -> (Application, Infrastructure, Vec<Constraint>) {
+    let app = simulate::random_application(rng, services);
+    let mut infra = simulate::random_infrastructure(rng, nodes);
+    for n in &mut infra.nodes {
+        n.capabilities.cpu *= capacity_scale;
+        n.capabilities.ram_gb *= capacity_scale;
+    }
+    let backend = NativeBackend;
+    let mut constraints = ConstraintGenerator::new(&backend)
+        .with_config(GeneratorConfig {
+            alpha: 0.7,
+            use_prolog: false,
+        })
+        .generate(&app, &infra)
+        .unwrap()
+        .constraints;
+    for (i, c) in constraints.iter_mut().enumerate() {
+        c.weight = 0.1 + 0.05 * (i % 10) as f64;
+    }
+    (app, infra, constraints)
+}
+
+fn assert_feasible(problem: &Problem, plan: &greengen::model::DeploymentPlan) {
+    if let Err(e) = greengen::scheduler::check_feasible(problem, plan) {
+        panic!("infeasible plan: {e}");
+    }
+}
+
+#[test]
+fn property_sharded_feasible_and_bounded_gap_on_2_zone_instances() {
+    check("sharded 2-zone feasibility + gap", 32, |rng| {
+        let services = 16 + rng.below(17); // 16..=32
+        let nodes = 6 + rng.below(9); // 6..=14
+        // 2x capacity headroom: the property is about plan quality, not
+        // about knife-edge feasibility (both solvers are heuristics there)
+        let (app, infra, constraints) = instance(rng, services, nodes, 2.0);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let greedy = GreedyScheduler::default().schedule(&problem).unwrap();
+        let sharded_solver = ShardedScheduler {
+            partitioner: ZonePartitioner::with_zones(2),
+            exact_services: 0,
+            exact_nodes: 0,
+            monolithic_below: 0,
+            ..ShardedScheduler::default()
+        };
+        let (plan, stats) = sharded_solver.schedule_with_stats(&problem).unwrap();
+        assert_eq!(stats.mode, "sharded");
+        assert_eq!(stats.zones, 2);
+        assert_feasible(&problem, &plan);
+
+        // bounded objective gap vs the monolithic baseline. This is a
+        // coarse regression tripwire, not a tight guarantee: sharding may
+        // cut cross-zone affinities, but partition + repair must keep the
+        // damage bounded.
+        let g = problem.objective_value(&problem.to_assignment(&greedy).unwrap());
+        let s = problem.objective_value(&problem.to_assignment(&plan).unwrap());
+        assert!(
+            s <= 2.0 * g + 30.0,
+            "sharded objective {s:.2} vs greedy {g:.2} ({services} svc x {nodes} nodes)"
+        );
+    });
+}
+
+#[test]
+fn exact_parity_with_branch_and_bound_on_tiny_instances() {
+    let mut rng = Rng::new(0x7A217);
+    for _ in 0..5 {
+        let (app, infra, constraints) = instance(&mut rng, 5, 4, 1.0);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let sharded = ShardedScheduler::default();
+        let exact = BranchAndBoundScheduler::default().schedule(&problem);
+        let via_sharded = sharded.schedule_with_stats(&problem);
+        match (exact, via_sharded) {
+            (Ok(e), Ok((s, stats))) => {
+                assert_eq!(stats.mode, "exact-delegate");
+                // the delegate runs the very same solver: plans identical
+                assert_eq!(e, s);
+                let ve = problem.objective_value(&problem.to_assignment(&e).unwrap());
+                let vs = problem.objective_value(&problem.to_assignment(&s).unwrap());
+                assert!((ve - vs).abs() < 1e-9);
+            }
+            (Err(_), Err(_)) => {}
+            (a, b) => panic!(
+                "feasibility disagreement: exact {:?} vs sharded {:?}",
+                a.is_ok(),
+                b.is_ok()
+            ),
+        }
+    }
+}
+
+#[test]
+fn partition_covers_everything_exactly_once_on_all_topologies() {
+    for topo in simulate::Topology::ALL {
+        let spec = simulate::TopologySpec::new(topo, 48, 96)
+            .with_zones(4)
+            .with_seed(0xC0FE);
+        let (app, infra) = simulate::topology::generate(&spec);
+        let partition = ZonePartitioner::default().partition(&app, &infra, &[]);
+        let mut node_seen = vec![0usize; infra.nodes.len()];
+        let mut svc_seen = vec![0usize; app.services.len()];
+        for zone in &partition.zones {
+            for &ni in &zone.nodes {
+                node_seen[ni] += 1;
+            }
+            for &si in &zone.services {
+                svc_seen[si] += 1;
+            }
+        }
+        assert!(node_seen.iter().all(|&c| c == 1), "{}", topo.name());
+        assert!(svc_seen.iter().all(|&c| c == 1), "{}", topo.name());
+    }
+}
+
+#[test]
+fn sharded_scheduler_works_through_trait_object() {
+    let spec = simulate::TopologySpec::new(simulate::Topology::HybridBurst, 40, 80)
+        .with_zones(4)
+        .with_seed(3);
+    let (app, infra) = simulate::topology::generate(&spec);
+    let problem = Problem {
+        app: &app,
+        infra: &infra,
+        constraints: &[],
+        objective: Objective::default(),
+    };
+    let solver: Box<dyn Scheduler> = Box::new(ShardedScheduler::default());
+    assert_eq!(solver.name(), "sharded-continuum");
+    let plan = solver.schedule(&problem).unwrap();
+    assert_feasible(&problem, &plan);
+}

@@ -21,6 +21,8 @@ fn adaptive_loop_reduces_emissions_on_every_scenario_infra() {
                 failure_rate: 0.0,
                 objective: Objective::default(),
                 seed: 0xE2E + scenario_id as u64,
+                incremental: false,
+                zones: 0,
             },
         );
         let summary = looper.run(&scenario).unwrap();
@@ -57,6 +59,8 @@ fn adaptive_loop_survives_heavy_failure_injection() {
             failure_rate: 1.0, // a node fails every single epoch
             objective: Objective::default(),
             seed: 0xFA11,
+            incremental: false,
+            zones: 0,
         },
     );
     let summary = looper.run(&scenario).unwrap();
@@ -132,6 +136,8 @@ fn xla_and_native_pipelines_agree_through_the_adaptive_loop() {
         failure_rate: 0.0,
         objective: Objective::default(),
         seed: 0xAB,
+        incremental: false,
+        zones: 0,
     };
     let mut native = AdaptiveLoop::new(PipelineConfig::default(), config);
     let mut accel = AdaptiveLoop::with_pipeline(
