@@ -1,0 +1,202 @@
+//! Bench: forecaster throughput and accuracy, plus the temporal-pass
+//! cost on a continuum-scale instance.
+//!
+//! Writes `BENCH_forecast.json` into the working directory so the
+//! numbers can be committed as the perf-trajectory baseline:
+//! * per-predictor observe/predict throughput (ops/s) on a 5-region
+//!   hourly stream,
+//! * walk-forward MAPE at the 6 h horizon on the Scenario 3 dynamic
+//!   (brown-out at hour 72),
+//! * wall-clock of the temporal (node, start-slot) pass on a geo-regions
+//!   fleet with one third of the services batch-deferrable.
+
+use greengen::carbon::{CarbonIntensitySource, StaticIntensity, TraceSet};
+use greengen::forecast::{
+    walk_forward, AccuracyConfig, BlendedForecaster, CarbonForecaster, EwmaDrift, SeasonalNaive,
+};
+use greengen::jsonio::Value;
+use greengen::scheduler::{
+    GreedyScheduler, Objective, Problem, Scheduler, TemporalConfig, TemporalScheduler,
+};
+use greengen::simulate::{topology, Topology, TopologySpec};
+use std::time::Instant;
+
+const REGIONS: [&str; 5] = ["FR", "ES", "DE", "GB", "IT"];
+
+/// observe+predict throughput of one forecaster over a synthetic stream.
+fn throughput(f: &mut dyn CarbonForecaster, hours: usize) -> (f64, f64) {
+    let traces = TraceSet::from_static(&StaticIntensity::europe_table2(), 0xF0CA);
+    let t0 = Instant::now();
+    for h in 0..hours {
+        let t = h as f64 * 3600.0;
+        for region in REGIONS {
+            if let Some(v) = traces.intensity(region, t) {
+                f.observe(region, t, v);
+            }
+        }
+    }
+    let observe_s = t0.elapsed().as_secs_f64();
+    let t_last = (hours - 1) as f64 * 3600.0;
+    let t0 = Instant::now();
+    let mut sink = 0.0;
+    for h in 1..=hours {
+        for region in REGIONS {
+            sink += f.predict(region, t_last, h as f64 * 3600.0).unwrap_or(0.0);
+        }
+    }
+    let predict_s = t0.elapsed().as_secs_f64();
+    assert!(sink > 0.0, "predictions must be non-trivial");
+    let n = (hours * REGIONS.len()) as f64;
+    (n / observe_s.max(1e-9), n / predict_s.max(1e-9))
+}
+
+/// Scenario 3 walk-forward MAPE of all three predictors (same
+/// pre-/post-event trace pair the CLI and the integration tests use).
+fn accuracy() -> Vec<(String, f64, f64)> {
+    let (before, after) =
+        greengen::config::scenarios::event_trace_sets(3).expect("scenario 3 traces");
+    let event = 72.0 * 3600.0;
+    let truth = |region: &str, t: f64| {
+        if t < event {
+            before.intensity(region, t)
+        } else {
+            after.intensity(region, t)
+        }
+    };
+    let mut seasonal = SeasonalNaive::diurnal();
+    let mut ewma = EwmaDrift::new();
+    let mut blended = BlendedForecaster::new();
+    let report = walk_forward(
+        truth,
+        &REGIONS,
+        &AccuracyConfig {
+            train_hours: 48,
+            eval_hours: 48,
+            horizon_hours: 6,
+            step_hours: 1,
+        },
+        &mut [&mut seasonal, &mut ewma, &mut blended],
+    );
+    report
+        .cases
+        .iter()
+        .map(|c| (c.predictor.clone(), c.mae, c.mape))
+        .collect()
+}
+
+/// Temporal-pass wall clock on a fleet with deferrable services.
+fn temporal_pass(nodes: usize, services: usize, slots: usize, reps: usize) -> (f64, f64, f64) {
+    let spec = TopologySpec::new(Topology::GeoRegions, nodes, services)
+        .with_zones(8)
+        .with_seed(0xF0CA);
+    let (mut app, infra) = topology::generate(&spec);
+    for (i, s) in app.services.iter_mut().enumerate() {
+        if i % 3 == 0 {
+            s.batch = true;
+        }
+    }
+    let mut forecaster = BlendedForecaster::new();
+    for n in &infra.nodes {
+        for h in 0..48 {
+            let t = h as f64 * 3600.0;
+            // diurnal-ish synthetic observation stream per region
+            let v = n.carbon() * (1.0 - 0.3 * ((t / 86_400.0) * std::f64::consts::TAU).sin().max(0.0));
+            forecaster.observe(&n.region, t, v.max(5.0));
+        }
+    }
+    let problem = Problem {
+        app: &app,
+        infra: &infra,
+        constraints: &[],
+        objective: Objective::default(),
+    };
+    let base = GreedyScheduler::default().schedule(&problem).expect("base plan");
+    let scheduler = TemporalScheduler {
+        forecaster: &forecaster,
+        t0: 47.0 * 3600.0,
+        config: TemporalConfig {
+            slot_hours: 1.0,
+            horizon_slots: slots,
+            max_rounds: 4,
+        },
+    };
+    // the reactive projection is deterministic: price it once
+    let mut cfg = scheduler.config;
+    cfg.horizon_slots = 0;
+    let reactive = TemporalScheduler {
+        forecaster: scheduler.forecaster,
+        t0: scheduler.t0,
+        config: cfg,
+    }
+    .refine(&problem, &base)
+    .expect("reactive")
+    .projected_g;
+    let mut best = f64::INFINITY;
+    let mut projected = 0.0;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let out = scheduler.refine(&problem, &base).expect("refine");
+        best = best.min(t0.elapsed().as_secs_f64());
+        projected = out.projected_g;
+    }
+    (best, projected, reactive)
+}
+
+fn main() {
+    println!("# forecast bench: predictor throughput, Scenario-3 accuracy, temporal pass");
+
+    let mut predictors: Vec<(&str, Box<dyn CarbonForecaster>)> = vec![
+        ("seasonal-naive", Box::new(SeasonalNaive::diurnal())),
+        ("ewma-drift", Box::new(EwmaDrift::new())),
+        ("blended", Box::new(BlendedForecaster::new())),
+    ];
+    let mut perf = Vec::new();
+    for (name, f) in predictors.iter_mut() {
+        let (obs, pred) = throughput(f.as_mut(), 96);
+        println!("{name:<16} observe {obs:>12.0} ops/s   predict {pred:>12.0} ops/s");
+        perf.push(Value::object(vec![
+            ("predictor", Value::from(*name)),
+            ("observe_ops_per_s", Value::from(obs)),
+            ("predict_ops_per_s", Value::from(pred)),
+        ]));
+    }
+
+    println!("# scenario-3 walk-forward, horizon 6 h");
+    let mut acc = Vec::new();
+    for (name, mae, mape) in accuracy() {
+        println!("{name:<16} MAE {mae:>8.2} g/kWh   MAPE {mape:>7.2}%");
+        acc.push(Value::object(vec![
+            ("predictor", Value::from(name)),
+            ("mae", Value::from(mae)),
+            ("mape", Value::from(mape)),
+        ]));
+    }
+
+    let (seconds, projected, reactive) = temporal_pass(200, 400, 12, 3);
+    println!(
+        "temporal pass    200n x 400s x 12 slots: {:.1} ms  projected {projected:.1} g \
+         (reactive {reactive:.1} g)",
+        seconds * 1e3
+    );
+
+    let out = Value::object(vec![
+        ("bench", Value::from("forecast")),
+        ("status", Value::from("measured")),
+        ("throughput", Value::array(perf)),
+        ("scenario3_accuracy", Value::array(acc)),
+        (
+            "temporal_pass",
+            Value::object(vec![
+                ("nodes", Value::from(200.0)),
+                ("services", Value::from(400.0)),
+                ("slots", Value::from(12.0)),
+                ("seconds", Value::from(seconds)),
+                ("projected_g", Value::from(projected)),
+                ("reactive_projected_g", Value::from(reactive)),
+            ]),
+        ),
+    ]);
+    let path = std::path::Path::new("BENCH_forecast.json");
+    greengen::jsonio::to_file(path, &out).expect("write BENCH_forecast.json");
+    println!("wrote {}", path.display());
+}

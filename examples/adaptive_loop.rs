@@ -37,6 +37,7 @@ fn run_pass(label: &str, failure_rate: f64, csv: &mut String) -> greengen::Resul
             seed: 0xE2E,
             incremental: false,
             zones: 0,
+            horizon: 0,
         },
     );
     let summary = looper.run(&scenario)?;

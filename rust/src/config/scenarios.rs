@@ -1,7 +1,7 @@
 //! The five validation scenarios of §5.3, as executable presets.
 
 use super::boutique;
-use crate::carbon::StaticIntensity;
+use crate::carbon::{StaticIntensity, TraceSet};
 use crate::model::{Application, Infrastructure};
 use crate::monitoring::GroundTruth;
 use crate::{Error, Result};
@@ -96,6 +96,32 @@ pub fn scenario(n: usize) -> Result<Scenario> {
         }
         other => Err(Error::Config(format!("unknown scenario {other} (valid: 1-5)"))),
     }
+}
+
+/// The pre-/post-event diurnal trace pair of a scenario, sharing the
+/// adaptive loop's seed derivation (`seed ^ 0xC1`, the same one
+/// [`crate::pipeline::GeneratorPipeline::trace_set`] uses): `after` runs
+/// on the scenario's own intensity table, `before` on the unperturbed
+/// baseline of the same infrastructure.
+///
+/// Scenario 3 is the only scenario whose table differs from its
+/// infrastructure baseline, so there `before ≠ after` and the France
+/// brown-out (16 → 376 gCO2eq/kWh) can be replayed as a *temporal*
+/// event — the setup the `greengen forecast` harness, the forecast
+/// bench and the forecast integration tests all share. For every other
+/// scenario the two sets are identical.
+pub fn event_trace_sets(n: usize) -> Result<(TraceSet, TraceSet)> {
+    let s = scenario(n)?;
+    let seed = s.seed ^ 0xC1;
+    let base = if n == 3 {
+        StaticIntensity::europe_table2()
+    } else {
+        s.intensity.clone()
+    };
+    Ok((
+        TraceSet::from_static(&base, seed),
+        TraceSet::from_static(&s.intensity, seed),
+    ))
 }
 
 #[cfg(test)]

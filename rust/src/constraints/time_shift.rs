@@ -11,6 +11,7 @@
 //! worst window (same explainability convention as §5.4).
 
 use crate::carbon::CarbonIntensitySource;
+use crate::forecast::CarbonForecaster;
 use crate::model::Application;
 use crate::{Error, Result};
 
@@ -67,7 +68,13 @@ Relative to the worst admissible window, the shift saves between {:.2} and \
 
 /// The time-shift planner.
 pub struct TimeShiftPlanner<'a> {
+    /// The carbon-intensity view windows are scored on.
     pub source: &'a dyn CarbonIntensitySource,
+    /// When set, future window CI comes from this model's
+    /// `predict(region, t0, offset)` — an honest forecast from past
+    /// observations — instead of reading `source` at future instants
+    /// (which, on a simulated trace, peeks at the ground truth).
+    pub forecaster: Option<&'a dyn CarbonForecaster>,
     /// Planning horizon in hours (default 24: one diurnal cycle).
     pub horizon_hours: usize,
     /// Batch window length in hours.
@@ -75,11 +82,34 @@ pub struct TimeShiftPlanner<'a> {
 }
 
 impl<'a> TimeShiftPlanner<'a> {
+    /// A planner reading future CI straight from `source` (oracle mode —
+    /// the pre-forecasting behaviour, kept for baselines).
     pub fn new(source: &'a dyn CarbonIntensitySource) -> Self {
         TimeShiftPlanner {
             source,
+            forecaster: None,
             horizon_hours: 24,
             window_hours: 4,
+        }
+    }
+
+    /// A planner scoring windows on honest forecasts from `forecaster`.
+    /// (Generic over the concrete forecaster so both trait-object fields
+    /// unsize from it directly — no dyn-to-dyn upcast involved.)
+    pub fn with_forecast<F: CarbonForecaster>(forecaster: &'a F) -> Self {
+        TimeShiftPlanner {
+            source: forecaster,
+            forecaster: Some(forecaster),
+            horizon_hours: 24,
+            window_hours: 4,
+        }
+    }
+
+    /// CI of `region` at `t0 + offset` seconds under the configured view.
+    fn ci_at(&self, region: &str, t0: f64, offset: f64) -> Option<f64> {
+        match self.forecaster {
+            Some(f) => f.predict(region, t0, offset),
+            None => self.source.intensity(region, t0 + offset),
         }
     }
 
@@ -113,8 +143,8 @@ impl<'a> TimeShiftPlanner<'a> {
                 for start in 0..=(self.horizon_hours - self.window_hours) {
                     let mut acc = 0.0;
                     for h in start..start + self.window_hours {
-                        let t = t0 + (h as f64 + 0.5) * 3600.0;
-                        acc += self.source.intensity(region, t).ok_or_else(|| {
+                        let offset = (h as f64 + 0.5) * 3600.0;
+                        acc += self.ci_at(region, t0, offset).ok_or_else(|| {
                             Error::Config(format!("no CI forecast for region '{region}'"))
                         })?;
                     }
@@ -245,6 +275,32 @@ mod tests {
     fn unknown_region_is_error() {
         let set = StaticIntensity::new(&[("FR", 20.0)]);
         let planner = TimeShiftPlanner::new(&set);
+        assert!(planner.plan(&batch_app(), &["XX"], 0.0).is_err());
+    }
+
+    #[test]
+    fn forecast_mode_scores_on_predictions_not_truth() {
+        use crate::forecast::{CarbonForecaster, SeasonalNaive};
+        // train on a solar-dipped day; plan from 23:00 of day 2
+        let trace = DiurnalTrace::new(300.0, 0.6, 0.0, 4);
+        let mut f = SeasonalNaive::diurnal();
+        for h in 0..48 {
+            let t = h as f64 * 3600.0;
+            f.observe("IT", t, trace.at(t));
+        }
+        let planner = TimeShiftPlanner::with_forecast(&f);
+        let recs = planner.plan(&batch_app(), &["IT"], 47.0 * 3600.0).unwrap();
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        // t0 is 23:00: the predicted solar valley (13:00) sits ~12-16 h out
+        assert!(
+            r.start_hour >= 8 && r.end_hour <= 20,
+            "forecast window [{},{}) should straddle the predicted valley",
+            r.start_hour,
+            r.end_hour
+        );
+        assert!(r.window_ci < 250.0, "valley CI expected, got {}", r.window_ci);
+        // an unobserved region is an error in forecast mode too
         assert!(planner.plan(&batch_app(), &["XX"], 0.0).is_err());
     }
 }

@@ -87,6 +87,20 @@ impl IncrementalReplanner {
         self.prev = None;
     }
 
+    /// Proactively mark zones dirty for the next [`Self::replan`]: their
+    /// stored fingerprints are dropped, so they re-solve even if nothing
+    /// observable changed yet. The adaptive loop calls this when the
+    /// carbon forecast predicts a zone-level intensity swing — the zone
+    /// re-plans *before* the swing materialises instead of one epoch
+    /// after. Unknown zone names are ignored.
+    pub fn invalidate_zones(&mut self, zones: &[String]) {
+        if let Some(prev) = &mut self.prev {
+            for z in zones {
+                prev.sigs.remove(z);
+            }
+        }
+    }
+
     /// Schedule this epoch, re-solving only dirty zones.
     pub fn replan(&mut self, problem: &Problem) -> Result<ReplanOutcome> {
         let partition = self.scheduler.partition(problem);
@@ -460,6 +474,26 @@ mod tests {
             constraints: &[],
             objective: Objective::default(),
         };
+        let outcome = rp.replan(&problem).unwrap();
+        assert!(outcome.dirty_zones.is_empty());
+    }
+
+    #[test]
+    fn invalidated_zone_resolves_despite_no_observable_change() {
+        let (app, infra) = fleet();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let mut rp = replanner();
+        rp.replan(&problem).unwrap();
+        // a forecast predicts z01 will brown out: mark it proactively
+        rp.invalidate_zones(&["z01".to_string(), "no-such-zone".to_string()]);
+        let outcome = rp.replan(&problem).unwrap();
+        assert_eq!(outcome.dirty_zones, vec!["z01".to_string()]);
+        // the next epoch is clean again
         let outcome = rp.replan(&problem).unwrap();
         assert!(outcome.dirty_zones.is_empty());
     }

@@ -24,6 +24,29 @@ use crate::{Error, Result};
 use std::collections::HashSet;
 
 /// The sharded multi-cluster scheduler.
+///
+/// # Example
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the crate's rpath to
+/// // the bundled libstdc++; the same flow is exercised for real in
+/// // rust/tests/continuum.rs)
+/// use greengen::continuum::ShardedScheduler;
+/// use greengen::scheduler::{Objective, Problem, Scheduler};
+/// use greengen::simulate::{topology, Topology, TopologySpec};
+///
+/// let spec = TopologySpec::new(Topology::GeoRegions, 64, 128).with_zones(4);
+/// let (app, infra) = topology::generate(&spec);
+/// let problem = Problem {
+///     app: &app,
+///     infra: &infra,
+///     constraints: &[],
+///     objective: Objective::default(),
+/// };
+/// let (plan, stats) = ShardedScheduler::default()
+///     .schedule_with_stats(&problem)
+///     .unwrap();
+/// println!("{} zones, {} placements", stats.zones, plan.placements.len());
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct ShardedScheduler {
     pub partitioner: ZonePartitioner,

@@ -1,0 +1,266 @@
+//! Walk-forward forecast-accuracy evaluation — the harness behind
+//! `greengen forecast`.
+//!
+//! The evaluation is strictly causal: at each step every predictor
+//! observes the step's ground truth, then issues its `horizon`-ahead
+//! forecast from everything seen so far — so a forecast due at `t + h`
+//! uses only observations at or before `t`. Forecasts are scored against
+//! the truth once the target time arrives; MAE and MAPE are aggregated
+//! over all regions and evaluation steps.
+
+use super::CarbonForecaster;
+
+/// Walk-forward evaluation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AccuracyConfig {
+    /// Warm-up hours: predictors observe but are not scored.
+    pub train_hours: usize,
+    /// Scored hours after the warm-up.
+    pub eval_hours: usize,
+    /// Forecast lead time in hours.
+    pub horizon_hours: usize,
+    /// Observation cadence in hours (1 = hourly scrapes).
+    pub step_hours: usize,
+}
+
+impl Default for AccuracyConfig {
+    fn default() -> Self {
+        AccuracyConfig {
+            train_hours: 48,
+            eval_hours: 48,
+            horizon_hours: 6,
+            step_hours: 1,
+        }
+    }
+}
+
+/// Aggregate accuracy of one predictor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccuracyCase {
+    /// [`CarbonForecaster::forecaster_name`] of the predictor.
+    pub predictor: String,
+    /// Mean absolute error, gCO2eq/kWh.
+    pub mae: f64,
+    /// Mean absolute percentage error, percent.
+    pub mape: f64,
+    /// Scored (region, step) forecasts.
+    pub samples: usize,
+}
+
+/// The full walk-forward report.
+#[derive(Debug, Clone)]
+pub struct AccuracyReport {
+    /// Forecast lead time the cases were scored at.
+    pub horizon_hours: usize,
+    /// One case per predictor, in the order they were supplied.
+    pub cases: Vec<AccuracyCase>,
+}
+
+impl AccuracyReport {
+    /// Look up a predictor's case by name.
+    pub fn case(&self, predictor: &str) -> Option<&AccuracyCase> {
+        self.cases.iter().find(|c| c.predictor == predictor)
+    }
+
+    /// Human-readable table, best MAPE first. Predictors that scored no
+    /// samples (e.g. a horizon longer than the evaluation window) render
+    /// as `n/a` and sort last, never as a perfect 0.00.
+    pub fn render_text(&self) -> String {
+        let mut rows = self.cases.clone();
+        rows.sort_by(|a, b| {
+            (a.samples == 0, a.mape)
+                .partial_cmp(&(b.samples == 0, b.mape))
+                .unwrap()
+        });
+        let mut out = format!(
+            "{:<16} {:>10} {:>9} {:>8}   (horizon {} h)\n",
+            "predictor", "MAE g/kWh", "MAPE %", "samples", self.horizon_hours
+        );
+        for c in &rows {
+            if c.samples == 0 {
+                out.push_str(&format!(
+                    "{:<16} {:>10} {:>9} {:>8}\n",
+                    c.predictor, "n/a", "n/a", 0
+                ));
+            } else {
+                out.push_str(&format!(
+                    "{:<16} {:>10.2} {:>9.2} {:>8}\n",
+                    c.predictor, c.mae, c.mape, c.samples
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Run the walk-forward evaluation.
+///
+/// `truth(region, t_seconds)` is the ground-truth intensity (it may be
+/// time-varying — e.g. a Scenario 3 brown-out injected mid-run);
+/// `regions` the regions to observe and score; `predictors` the models
+/// under test, each fed the identical observation stream.
+pub fn walk_forward<F>(
+    truth: F,
+    regions: &[&str],
+    config: &AccuracyConfig,
+    predictors: &mut [&mut dyn CarbonForecaster],
+) -> AccuracyReport
+where
+    F: Fn(&str, f64) -> Option<f64>,
+{
+    let step = config.step_hours.max(1);
+    let end = config.train_hours + config.eval_hours;
+    // (predictor idx, region idx, due hour, prediction)
+    let mut records: Vec<(usize, usize, usize, f64)> = Vec::new();
+
+    let mut hour = 0usize;
+    while hour <= end {
+        let t = hour as f64 * 3600.0;
+        // observe this step's truth
+        for region in regions {
+            if let Some(v) = truth(region, t) {
+                for p in predictors.iter_mut() {
+                    p.observe(region, t, v);
+                }
+            }
+        }
+        // issue horizon-ahead forecasts from what is now known
+        let due = hour + config.horizon_hours;
+        if hour >= config.train_hours && due <= end {
+            for (pi, p) in predictors.iter().enumerate() {
+                for (ri, region) in regions.iter().enumerate() {
+                    if let Some(pred) =
+                        p.predict(region, t, config.horizon_hours as f64 * 3600.0)
+                    {
+                        records.push((pi, ri, due, pred));
+                    }
+                }
+            }
+        }
+        hour += step;
+    }
+
+    let mut cases: Vec<AccuracyCase> = predictors
+        .iter()
+        .map(|p| AccuracyCase {
+            predictor: p.forecaster_name().to_string(),
+            mae: 0.0,
+            mape: 0.0,
+            samples: 0,
+        })
+        .collect();
+    for (pi, ri, due, pred) in records {
+        let t = due as f64 * 3600.0;
+        if let Some(actual) = truth(regions[ri], t) {
+            let case = &mut cases[pi];
+            case.mae += (pred - actual).abs();
+            case.mape += (pred - actual).abs() / actual.abs().max(1e-9) * 100.0;
+            case.samples += 1;
+        }
+    }
+    for c in &mut cases {
+        if c.samples > 0 {
+            c.mae /= c.samples as f64;
+            c.mape /= c.samples as f64;
+        }
+    }
+    AccuracyReport {
+        horizon_hours: config.horizon_hours,
+        cases,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::DiurnalTrace;
+    use crate::forecast::{BlendedForecaster, EwmaDrift, SeasonalNaive};
+
+    #[test]
+    fn perfect_predictor_scores_zero() {
+        // a flat grid: every predictor converges to the constant
+        let truth = |_: &str, _: f64| Some(120.0);
+        let mut s = SeasonalNaive::diurnal();
+        let mut e = EwmaDrift::new();
+        let report = walk_forward(
+            truth,
+            &["FR"],
+            &AccuracyConfig::default(),
+            &mut [&mut s, &mut e],
+        );
+        for c in &report.cases {
+            assert!(c.samples > 0, "{}", c.predictor);
+            assert!(c.mae < 1e-6, "{}: {}", c.predictor, c.mae);
+            assert!(c.mape < 1e-6);
+        }
+    }
+
+    #[test]
+    fn brownout_separates_blended_from_seasonal() {
+        // Scenario 3 dynamics: France flips 16 -> 376 mid-evaluation
+        let trace = DiurnalTrace::new(200.0, 0.3, 0.02, 9);
+        let event = 72.0 * 3600.0;
+        let truth = move |region: &str, t: f64| match region {
+            "FR" => Some(if t < event { 16.0 } else { 376.0 }),
+            "IT" => Some(trace.at(t)),
+            _ => None,
+        };
+        let mut seasonal = SeasonalNaive::diurnal();
+        let mut blended = BlendedForecaster::new();
+        let config = AccuracyConfig {
+            train_hours: 48,
+            eval_hours: 48,
+            horizon_hours: 6,
+            step_hours: 1,
+        };
+        let report = walk_forward(
+            truth,
+            &["FR", "IT"],
+            &config,
+            &mut [&mut seasonal, &mut blended],
+        );
+        let s = report.case("seasonal-naive").unwrap();
+        let b = report.case("blended").unwrap();
+        assert!(
+            b.mape < s.mape,
+            "blended {:.2}% should beat seasonal {:.2}% across a brown-out",
+            b.mape,
+            s.mape
+        );
+        let text = report.render_text();
+        assert!(text.contains("blended"));
+        assert!(text.contains("seasonal-naive"));
+    }
+
+    #[test]
+    fn zero_sample_predictors_render_na_not_perfect() {
+        let truth = |_: &str, _: f64| Some(50.0);
+        let mut e = EwmaDrift::new();
+        // horizon longer than the evaluation window: nothing can score
+        let config = AccuracyConfig {
+            train_hours: 8,
+            eval_hours: 4,
+            horizon_hours: 6,
+            step_hours: 1,
+        };
+        let report = walk_forward(truth, &["ES"], &config, &mut [&mut e]);
+        assert_eq!(report.case("ewma-drift").unwrap().samples, 0);
+        let text = report.render_text();
+        assert!(text.contains("n/a"), "{text}");
+        assert!(!text.contains("0.00"), "{text}");
+    }
+
+    #[test]
+    fn report_lookup_by_name() {
+        let truth = |_: &str, _: f64| Some(50.0);
+        let mut e = EwmaDrift::new();
+        let report = walk_forward(
+            truth,
+            &["ES"],
+            &AccuracyConfig::default(),
+            &mut [&mut e],
+        );
+        assert!(report.case("ewma-drift").is_some());
+        assert!(report.case("nope").is_none());
+    }
+}

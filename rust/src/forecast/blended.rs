@@ -1,0 +1,235 @@
+//! Blended forecaster: bias-corrected seasonal + drift tracker under
+//! per-region online weights.
+//!
+//! Two failure modes dominate grid-CI forecasting: the seasonal-naive
+//! baseline is stale for a whole period after a regime change, and the
+//! drift tracker is blind to the diurnal shape. The blend repairs both:
+//!
+//! 1. **Bias correction** — an EWMA of the seasonal model's recent
+//!    residuals is added to its prediction, so a brown-out (Scenario 3:
+//!    France 16 → 376) is absorbed within a few observations instead of
+//!    a full day.
+//! 2. **Online weighting** — each region keeps an EWMA of the one-step
+//!    absolute error of both components; predictions are combined with
+//!    inverse-squared-error weights, so whichever model has recently
+//!    been right dominates. Weights adapt per region: a periodic green
+//!    grid leans seasonal, a volatile one leans on the drift tracker.
+//!
+//! On a purely periodic trace the corrected-seasonal component wins the
+//! weights and the blend matches seasonal-naive; on any drifting trace
+//! it is strictly better — the property `greengen forecast` reports and
+//! `rust/tests/forecast.rs` locks in.
+
+use super::ewma::EwmaDrift;
+use super::seasonal::SeasonalNaive;
+use super::{CarbonForecaster, FLOOR};
+use crate::carbon::CarbonIntensitySource;
+use std::collections::HashMap;
+
+/// Per-region blending state.
+#[derive(Debug, Clone, Copy)]
+struct BlendState {
+    /// EWMA of the raw seasonal residual (observed - seasonal).
+    bias: f64,
+    /// EWMA of |error| of the bias-corrected seasonal component.
+    err_seasonal: f64,
+    /// EWMA of |error| of the drift component.
+    err_ewma: f64,
+    last_t: f64,
+    /// One-step updates performed (weights stay uniform until warm).
+    updates: u64,
+}
+
+/// The blended per-region online-weighted forecaster.
+#[derive(Debug, Clone)]
+pub struct BlendedForecaster {
+    seasonal: SeasonalNaive,
+    ewma: EwmaDrift,
+    /// Smoothing factor of the seasonal-residual bias EWMA.
+    pub bias_alpha: f64,
+    /// Smoothing factor of the per-component error EWMAs.
+    pub err_alpha: f64,
+    /// Updates before the error weights are trusted (uniform before).
+    pub warmup: u64,
+    state: HashMap<String, BlendState>,
+}
+
+impl BlendedForecaster {
+    /// The standard configuration: diurnal seasonal period, default
+    /// drift tracker, bias α = 0.30, error α = 0.20, 6-step warm-up.
+    pub fn new() -> Self {
+        BlendedForecaster {
+            seasonal: SeasonalNaive::diurnal(),
+            ewma: EwmaDrift::new(),
+            bias_alpha: 0.30,
+            err_alpha: 0.20,
+            warmup: 6,
+            state: HashMap::new(),
+        }
+    }
+
+    /// Current component weights `(seasonal, ewma)` of a region —
+    /// exposed for the `greengen forecast` report.
+    pub fn weights(&self, region: &str) -> Option<(f64, f64)> {
+        let s = self.state.get(region)?;
+        Some(Self::weights_of(s, self.warmup))
+    }
+
+    fn weights_of(s: &BlendState, warmup: u64) -> (f64, f64) {
+        if s.updates < warmup {
+            return (0.5, 0.5);
+        }
+        const EPS: f64 = 1e-6;
+        // inverse-squared-error: the recently-right model dominates
+        let ws = 1.0 / (s.err_seasonal + EPS).powi(2);
+        let we = 1.0 / (s.err_ewma + EPS).powi(2);
+        (ws / (ws + we), we / (ws + we))
+    }
+}
+
+impl Default for BlendedForecaster {
+    fn default() -> Self {
+        BlendedForecaster::new()
+    }
+}
+
+impl CarbonIntensitySource for BlendedForecaster {
+    fn intensity(&self, region: &str, t: f64) -> Option<f64> {
+        let s = self.state.get(region)?;
+        self.predict(region, s.last_t, t - s.last_t)
+    }
+}
+
+impl CarbonForecaster for BlendedForecaster {
+    fn forecaster_name(&self) -> &'static str {
+        "blended"
+    }
+
+    fn observe(&mut self, region: &str, t: f64, value: f64) {
+        // score the components on this observation *before* they see it
+        if let Some(mut s) = self.state.get(region).copied() {
+            if t <= s.last_t {
+                return;
+            }
+            let h = t - s.last_t;
+            let raw_seasonal = self.seasonal.predict(region, s.last_t, h);
+            let drift = self.ewma.predict(region, s.last_t, h);
+            if let (Some(raw), Some(drift)) = (raw_seasonal, drift) {
+                let corrected = (raw + s.bias).max(FLOOR);
+                let a = self.err_alpha;
+                s.err_seasonal = a * (value - corrected).abs() + (1.0 - a) * s.err_seasonal;
+                s.err_ewma = a * (value - drift).abs() + (1.0 - a) * s.err_ewma;
+                s.bias = self.bias_alpha * (value - raw) + (1.0 - self.bias_alpha) * s.bias;
+                s.updates += 1;
+            }
+            s.last_t = t;
+            self.state.insert(region.to_string(), s);
+        } else {
+            self.state.insert(
+                region.to_string(),
+                BlendState {
+                    bias: 0.0,
+                    err_seasonal: 0.0,
+                    err_ewma: 0.0,
+                    last_t: t,
+                    updates: 0,
+                },
+            );
+        }
+        self.seasonal.observe(region, t, value);
+        self.ewma.observe(region, t, value);
+    }
+
+    fn predict(&self, region: &str, t: f64, horizon: f64) -> Option<f64> {
+        let s = self.state.get(region)?;
+        let raw = self.seasonal.predict(region, t, horizon)?;
+        let drift = self.ewma.predict(region, t, horizon)?;
+        let corrected = (raw + s.bias).max(FLOOR);
+        let (ws, we) = Self::weights_of(s, self.warmup);
+        Some((ws * corrected + we * drift).max(FLOOR))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::DiurnalTrace;
+
+    /// One-step-ahead mean absolute error over an observation stream.
+    fn stream_mae<F: Fn(f64) -> f64>(
+        f: &mut dyn CarbonForecaster,
+        truth: F,
+        hours: usize,
+        skip: usize,
+    ) -> f64 {
+        let mut total = 0.0;
+        let mut n = 0usize;
+        for h in 0..hours {
+            let t = h as f64 * 3600.0;
+            if h >= skip {
+                if let Some(p) = f.predict("R", t - 3600.0, 3600.0) {
+                    total += (p - truth(t)).abs();
+                    n += 1;
+                }
+            }
+            f.observe("R", t, truth(t));
+        }
+        total / n.max(1) as f64
+    }
+
+    #[test]
+    fn beats_seasonal_on_a_drifting_trace() {
+        // diurnal shape + a steady upward drift: the seasonal lookup is
+        // biased by a full day of drift, the blend's bias term eats it
+        let trace = DiurnalTrace::new(200.0, 0.3, 0.0, 3);
+        let truth = |t: f64| trace.at(t) + 4.0 * (t / 3600.0);
+        let mut seasonal = SeasonalNaive::diurnal();
+        let mut blended = BlendedForecaster::new();
+        let mae_s = stream_mae(&mut seasonal, truth, 96, 30);
+        let mae_b = stream_mae(&mut blended, truth, 96, 30);
+        assert!(
+            mae_b < mae_s,
+            "blended {mae_b:.2} should beat seasonal {mae_s:.2} under drift"
+        );
+    }
+
+    #[test]
+    fn absorbs_a_brownout_within_hours() {
+        let truth = |t: f64| if t < 24.0 * 3600.0 { 16.0 } else { 376.0 };
+        let mut f = BlendedForecaster::new();
+        for h in 0..30 {
+            let t = h as f64 * 3600.0;
+            f.observe("R", t, truth(t));
+        }
+        // 6 h after the switch, the 1 h-ahead forecast must be brown
+        let p = f.predict("R", 29.0 * 3600.0, 3600.0).unwrap();
+        assert!(p > 200.0, "blend should track the brown-out, got {p}");
+    }
+
+    #[test]
+    fn matches_seasonal_on_a_periodic_trace() {
+        let trace = DiurnalTrace::new(300.0, 0.4, 0.0, 11);
+        let truth = |t: f64| trace.at(t);
+        let mut seasonal = SeasonalNaive::diurnal();
+        let mut blended = BlendedForecaster::new();
+        let mae_s = stream_mae(&mut seasonal, truth, 96, 30);
+        let mae_b = stream_mae(&mut blended, truth, 96, 30);
+        // seasonal is near-perfect here; the blend must stay close
+        assert!(
+            mae_b <= mae_s + 6.0,
+            "blended {mae_b:.2} drifted far from seasonal {mae_s:.2}"
+        );
+    }
+
+    #[test]
+    fn weights_lean_seasonal_on_periodic_grids() {
+        let trace = DiurnalTrace::new(300.0, 0.5, 0.0, 5);
+        let mut f = BlendedForecaster::new();
+        for h in 0..72 {
+            let t = h as f64 * 3600.0;
+            f.observe("R", t, trace.at(t));
+        }
+        let (ws, we) = f.weights("R").unwrap();
+        assert!(ws > we, "periodic grid should lean seasonal: {ws:.2}/{we:.2}");
+    }
+}

@@ -1,0 +1,184 @@
+//! EWMA drift tracker: Holt-style exponential smoothing with a trend
+//! term.
+//!
+//! Blind to the diurnal shape, but it follows regime changes within a
+//! few observations — exactly where the seasonal-naive baseline is
+//! stale for a whole period (the paper's Scenario 3 brown-out: France
+//! 16 → 376 gCO2eq/kWh). The forecast is `level + trend · horizon`,
+//! with the trend damped toward zero as the horizon grows so a brief
+//! ramp is not extrapolated into absurdity.
+
+use super::{CarbonForecaster, FLOOR};
+use crate::carbon::CarbonIntensitySource;
+use std::collections::HashMap;
+
+/// Per-region smoothing state.
+#[derive(Debug, Clone, Copy)]
+struct HoltState {
+    level: f64,
+    /// Trend per hour.
+    trend: f64,
+    last_t: f64,
+}
+
+/// The EWMA level + trend forecaster.
+#[derive(Debug, Clone)]
+pub struct EwmaDrift {
+    /// Level smoothing factor per observation (0..1]; higher = snappier.
+    pub alpha: f64,
+    /// Trend smoothing factor per observation (0..1].
+    pub beta: f64,
+    /// Trend damping per hour of horizon (0..1]: the extrapolated trend
+    /// decays as `phi^hours`, keeping long-horizon forecasts bounded.
+    pub phi: f64,
+    regions: HashMap<String, HoltState>,
+}
+
+impl EwmaDrift {
+    /// The standard configuration (α = 0.35, β = 0.15, φ = 0.85).
+    pub fn new() -> Self {
+        EwmaDrift {
+            alpha: 0.35,
+            beta: 0.15,
+            phi: 0.85,
+            regions: HashMap::new(),
+        }
+    }
+}
+
+impl Default for EwmaDrift {
+    fn default() -> Self {
+        EwmaDrift::new()
+    }
+}
+
+impl CarbonIntensitySource for EwmaDrift {
+    fn intensity(&self, region: &str, t: f64) -> Option<f64> {
+        let s = self.regions.get(region)?;
+        self.predict(region, s.last_t, t - s.last_t)
+    }
+}
+
+impl CarbonForecaster for EwmaDrift {
+    fn forecaster_name(&self) -> &'static str {
+        "ewma-drift"
+    }
+
+    fn observe(&mut self, region: &str, t: f64, value: f64) {
+        match self.regions.get_mut(region) {
+            Some(s) => {
+                if t <= s.last_t {
+                    return; // out-of-order: ignore, like the history buffer
+                }
+                // scale by the elapsed gap so `trend` stays a per-hour
+                // slope under any observation cadence (2 h scrapes must
+                // not double the extrapolated slope)
+                let dt_hours = ((t - s.last_t) / 3600.0).max(1e-9);
+                let prev_level = s.level;
+                s.level =
+                    self.alpha * value + (1.0 - self.alpha) * (s.level + s.trend * dt_hours);
+                s.trend = self.beta * (s.level - prev_level) / dt_hours
+                    + (1.0 - self.beta) * s.trend;
+                s.last_t = t;
+            }
+            None => {
+                self.regions.insert(
+                    region.to_string(),
+                    HoltState {
+                        level: value,
+                        trend: 0.0,
+                        last_t: t,
+                    },
+                );
+            }
+        }
+    }
+
+    fn predict(&self, region: &str, _t: f64, horizon: f64) -> Option<f64> {
+        let s = self.regions.get(region)?;
+        let hours = (horizon.max(0.0)) / 3600.0;
+        // damped trend: sum of phi^1..phi^h, continuous-h generalisation
+        let damp = if (self.phi - 1.0).abs() < 1e-12 {
+            hours
+        } else {
+            self.phi * (1.0 - self.phi.powf(hours)) / (1.0 - self.phi)
+        };
+        Some((s.level + s.trend * damp).max(FLOOR))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_series_predicts_flat() {
+        let mut f = EwmaDrift::new();
+        for h in 0..24 {
+            f.observe("FR", h as f64 * 3600.0, 100.0);
+        }
+        let p = f.predict("FR", 23.0 * 3600.0, 6.0 * 3600.0).unwrap();
+        assert!((p - 100.0).abs() < 1e-6, "{p}");
+    }
+
+    #[test]
+    fn tracks_a_step_change_quickly() {
+        let mut f = EwmaDrift::new();
+        for h in 0..24 {
+            f.observe("FR", h as f64 * 3600.0, 16.0);
+        }
+        for h in 24..30 {
+            f.observe("FR", h as f64 * 3600.0, 376.0);
+        }
+        let p = f.predict("FR", 29.0 * 3600.0, 3600.0).unwrap();
+        assert!(p > 250.0, "should have converged toward 376, got {p}");
+    }
+
+    #[test]
+    fn damping_bounds_long_horizons() {
+        let mut f = EwmaDrift::new();
+        // a steep ramp: +50 per hour
+        for h in 0..12 {
+            f.observe("DE", h as f64 * 3600.0, 100.0 + 50.0 * h as f64);
+        }
+        let t = 11.0 * 3600.0;
+        let p24 = f.predict("DE", t, 24.0 * 3600.0).unwrap();
+        // undamped extrapolation would add ~24 x trend; damped adds at
+        // most phi/(1-phi) x trend (~5.7 hours' worth)
+        let p0 = f.predict("DE", t, 0.0).unwrap();
+        assert!(p24 - p0 < 50.0 * 8.0, "p0 {p0} p24 {p24}");
+        assert!(p24 >= p0, "trend is positive: {p0} -> {p24}");
+    }
+
+    #[test]
+    fn trend_is_per_hour_regardless_of_cadence() {
+        // the same +50 g/h ramp observed hourly and 2-hourly must yield
+        // the same extrapolated slope
+        let mut hourly = EwmaDrift::new();
+        let mut sparse = EwmaDrift::new();
+        for h in 0..24 {
+            let t = h as f64 * 3600.0;
+            hourly.observe("DE", t, 100.0 + 50.0 * h as f64);
+            if h % 2 == 0 {
+                sparse.observe("DE", t, 100.0 + 50.0 * h as f64);
+            }
+        }
+        let t = 22.0 * 3600.0;
+        let ph = hourly.predict("DE", t, 6.0 * 3600.0).unwrap();
+        let ps = sparse.predict("DE", t, 6.0 * 3600.0).unwrap();
+        assert!(
+            (ph - ps).abs() / ph < 0.15,
+            "hourly {ph:.1} vs 2-hourly {ps:.1} should agree on the slope"
+        );
+    }
+
+    #[test]
+    fn floor_respected() {
+        let mut f = EwmaDrift::new();
+        for h in 0..12 {
+            f.observe("ES", h as f64 * 3600.0, (60.0 - 10.0 * h as f64).max(1.0));
+        }
+        let p = f.predict("ES", 11.0 * 3600.0, 12.0 * 3600.0).unwrap();
+        assert!(p >= FLOOR);
+    }
+}

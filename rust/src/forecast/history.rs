@@ -1,0 +1,149 @@
+//! Per-region observation history — the shared substrate of every
+//! forecaster.
+//!
+//! A [`HistoryBuffer`] is a bounded ring of `(t, value)` samples per
+//! region, ordered by observation time. Forecasters query it for "the
+//! value one period ago" (seasonal lookups) and "the latest value"
+//! (persistence fallbacks). Capacity is bounded so a long-running
+//! adaptive loop cannot grow memory without bound.
+
+use std::collections::HashMap;
+
+/// One observed sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    /// Observation time, seconds since the simulation epoch.
+    pub t: f64,
+    /// Observed carbon intensity, gCO2eq/kWh.
+    pub value: f64,
+}
+
+/// Bounded per-region ring of observations.
+#[derive(Debug, Clone)]
+pub struct HistoryBuffer {
+    /// Maximum samples retained per region.
+    capacity: usize,
+    regions: HashMap<String, Vec<Sample>>,
+}
+
+impl HistoryBuffer {
+    /// A buffer keeping at most `capacity` samples per region.
+    pub fn new(capacity: usize) -> Self {
+        HistoryBuffer {
+            capacity: capacity.max(2),
+            regions: HashMap::new(),
+        }
+    }
+
+    /// Record one observation. Out-of-order samples (t earlier than the
+    /// latest) are ignored: the adaptive loop observes monotonically and
+    /// a stale reading must not rewrite history.
+    pub fn push(&mut self, region: &str, t: f64, value: f64) {
+        let buf = self.regions.entry(region.to_string()).or_default();
+        if let Some(last) = buf.last() {
+            if t <= last.t {
+                return;
+            }
+        }
+        buf.push(Sample { t, value });
+        if buf.len() > self.capacity {
+            let excess = buf.len() - self.capacity;
+            buf.drain(0..excess);
+        }
+    }
+
+    /// The most recent sample of a region.
+    pub fn latest(&self, region: &str) -> Option<Sample> {
+        self.regions.get(region).and_then(|b| b.last().copied())
+    }
+
+    /// The sample closest to absolute time `target`, if one lies within
+    /// `tolerance` seconds of it.
+    pub fn nearest(&self, region: &str, target: f64, tolerance: f64) -> Option<Sample> {
+        let buf = self.regions.get(region)?;
+        // binary search over the time-ordered buffer
+        let idx = buf.partition_point(|s| s.t < target);
+        let mut best: Option<Sample> = None;
+        for cand in [idx.checked_sub(1), Some(idx)].into_iter().flatten() {
+            if let Some(s) = buf.get(cand) {
+                let d = (s.t - target).abs();
+                if d <= tolerance && best.map(|b| d < (b.t - target).abs()).unwrap_or(true) {
+                    best = Some(*s);
+                }
+            }
+        }
+        best
+    }
+
+    /// Number of samples stored for a region.
+    pub fn len(&self, region: &str) -> usize {
+        self.regions.get(region).map(|b| b.len()).unwrap_or(0)
+    }
+
+    /// Whether any region has been observed at all.
+    pub fn is_empty(&self) -> bool {
+        self.regions.values().all(|b| b.is_empty())
+    }
+
+    /// The regions with at least one observation, in arbitrary order.
+    pub fn regions(&self) -> impl Iterator<Item = &str> {
+        self.regions.keys().map(|k| k.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_latest() {
+        let mut h = HistoryBuffer::new(10);
+        assert!(h.is_empty());
+        h.push("FR", 0.0, 16.0);
+        h.push("FR", 3600.0, 18.0);
+        let last = h.latest("FR").unwrap();
+        assert_eq!(last.t, 3600.0);
+        assert_eq!(last.value, 18.0);
+        assert_eq!(h.len("FR"), 2);
+        assert!(h.latest("IT").is_none());
+    }
+
+    #[test]
+    fn out_of_order_ignored() {
+        let mut h = HistoryBuffer::new(10);
+        h.push("FR", 3600.0, 18.0);
+        h.push("FR", 0.0, 99.0); // stale: dropped
+        assert_eq!(h.len("FR"), 1);
+        assert_eq!(h.latest("FR").unwrap().value, 18.0);
+    }
+
+    #[test]
+    fn capacity_bounds_memory() {
+        let mut h = HistoryBuffer::new(4);
+        for i in 0..20 {
+            h.push("FR", i as f64 * 3600.0, i as f64);
+        }
+        assert_eq!(h.len("FR"), 4);
+        // oldest retained sample is i = 16
+        assert!(h.nearest("FR", 16.0 * 3600.0, 1.0).is_some());
+        assert!(h.nearest("FR", 3.0 * 3600.0, 1.0).is_none());
+    }
+
+    #[test]
+    fn nearest_within_tolerance() {
+        let mut h = HistoryBuffer::new(48);
+        for i in 0..24 {
+            h.push("FR", i as f64 * 3600.0, 100.0 + i as f64);
+        }
+        // exact hit
+        let s = h.nearest("FR", 5.0 * 3600.0, 1.0).unwrap();
+        assert_eq!(s.value, 105.0);
+        // between samples: picks the closer neighbour
+        let s = h.nearest("FR", 5.4 * 3600.0, 3600.0).unwrap();
+        assert_eq!(s.value, 105.0);
+        let s = h.nearest("FR", 5.6 * 3600.0, 3600.0).unwrap();
+        assert_eq!(s.value, 106.0);
+        // outside tolerance
+        assert!(h.nearest("FR", 40.0 * 3600.0, 1800.0).is_none());
+    }
+}

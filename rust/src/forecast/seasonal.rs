@@ -1,0 +1,135 @@
+//! Seasonal-naive predictor: "tomorrow at 14:00 looks like today at
+//! 14:00".
+//!
+//! Grid carbon intensity is dominated by the solar cycle, so repeating
+//! the value observed one period (default: one day) earlier is the
+//! strongest trivial baseline — the one every serious forecaster must
+//! beat (GreenScale and the sustainable-clouds literature use the same
+//! reference). Before a full period of history exists the predictor
+//! falls back to persistence (the latest observation).
+
+use super::history::HistoryBuffer;
+use super::{CarbonForecaster, FLOOR};
+use crate::carbon::intensity::DAY;
+use crate::carbon::CarbonIntensitySource;
+
+/// Seasonal-naive forecaster over a fixed period.
+#[derive(Debug, Clone)]
+pub struct SeasonalNaive {
+    /// Seasonal period in seconds (default: one day).
+    pub period: f64,
+    /// Match tolerance when looking up the value one period ago: a stored
+    /// sample within this many seconds of the target counts as "the same
+    /// time yesterday".
+    pub tolerance: f64,
+    history: HistoryBuffer,
+}
+
+impl SeasonalNaive {
+    /// A seasonal-naive predictor with the given period (seconds).
+    pub fn new(period: f64) -> Self {
+        SeasonalNaive {
+            period: period.max(1.0),
+            tolerance: 1800.0,
+            history: HistoryBuffer::new(96),
+        }
+    }
+
+    /// The standard configuration: one diurnal period.
+    pub fn diurnal() -> Self {
+        SeasonalNaive::new(DAY)
+    }
+
+    /// Read-only access to the observation history (shared with the
+    /// blended model's diagnostics).
+    pub fn history(&self) -> &HistoryBuffer {
+        &self.history
+    }
+}
+
+impl CarbonIntensitySource for SeasonalNaive {
+    fn intensity(&self, region: &str, t: f64) -> Option<f64> {
+        let latest = self.history.latest(region)?;
+        self.predict(region, latest.t, t - latest.t)
+    }
+}
+
+impl CarbonForecaster for SeasonalNaive {
+    fn forecaster_name(&self) -> &'static str {
+        "seasonal-naive"
+    }
+
+    fn observe(&mut self, region: &str, t: f64, value: f64) {
+        self.history.push(region, t, value);
+    }
+
+    fn predict(&self, region: &str, t: f64, horizon: f64) -> Option<f64> {
+        let latest = self.history.latest(region)?;
+        let target = t + horizon.max(0.0);
+        // Walk back whole periods until the lookup lands inside the
+        // observed history (a 30 h horizon uses the sample from 30-24=6 h
+        // ahead of "one period ago", i.e. two periods back as needed).
+        let mut lookup = target;
+        while lookup > latest.t && lookup - self.period > 0.0 {
+            lookup -= self.period;
+        }
+        match self.history.nearest(region, lookup, self.tolerance) {
+            Some(s) => Some(s.value.max(FLOOR)),
+            // not enough history for a seasonal match: persistence
+            None => Some(latest.value.max(FLOOR)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::DiurnalTrace;
+
+    #[test]
+    fn repeats_yesterday_on_a_periodic_trace() {
+        let trace = DiurnalTrace::new(300.0, 0.4, 0.0, 7);
+        let mut f = SeasonalNaive::diurnal();
+        for h in 0..48 {
+            let t = h as f64 * 3600.0;
+            f.observe("IT", t, trace.at(t));
+        }
+        let t = 47.0 * 3600.0;
+        // predict 6 h ahead: the trace is exactly periodic, so the
+        // seasonal lookup is exact (no noise)
+        let p = f.predict("IT", t, 6.0 * 3600.0).unwrap();
+        let truth = trace.at(t + 6.0 * 3600.0);
+        assert!((p - truth).abs() < 1e-6, "pred {p} truth {truth}");
+    }
+
+    #[test]
+    fn falls_back_to_persistence_without_a_period() {
+        let mut f = SeasonalNaive::diurnal();
+        f.observe("FR", 0.0, 40.0);
+        f.observe("FR", 3600.0, 44.0);
+        let p = f.predict("FR", 3600.0, 4.0 * 3600.0).unwrap();
+        assert_eq!(p, 44.0);
+    }
+
+    #[test]
+    fn unknown_region_is_none() {
+        let f = SeasonalNaive::diurnal();
+        assert!(f.predict("XX", 0.0, 3600.0).is_none());
+    }
+
+    #[test]
+    fn misses_a_step_change_for_a_full_period() {
+        // the documented weakness the blended model repairs: after a
+        // brown-out the seasonal lookup keeps returning the green past
+        let mut f = SeasonalNaive::diurnal();
+        for h in 0..24 {
+            f.observe("FR", h as f64 * 3600.0, 16.0);
+        }
+        // brown-out: 16 -> 376
+        for h in 24..30 {
+            f.observe("FR", h as f64 * 3600.0, 376.0);
+        }
+        let p = f.predict("FR", 29.0 * 3600.0, 3600.0).unwrap();
+        assert!((p - 16.0).abs() < 1e-9, "seasonal stays stale, got {p}");
+    }
+}

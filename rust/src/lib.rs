@@ -15,12 +15,15 @@
 //!
 //! ## Layer map
 //! * L3 (this crate): coordination, adaptive epochs, KB, scheduler, the
-//!   [`continuum`] sharded multi-cluster engine, CLI.
+//!   [`continuum`] sharded multi-cluster engine, the [`forecast`]
+//!   look-ahead layer + [`scheduler::temporal`] horizon-aware pass, CLI.
 //! * L2/L1 (`python/compile/`): the impact-analytics graph + Pallas kernels,
 //!   AOT-lowered to HLO text, executed by [`runtime`] via PJRT.
 //!
 //! The repository `README.md` maps the layers, CLI subcommands (including
-//! `greengen continuum`) and bench targets in detail.
+//! `greengen continuum` and `greengen forecast`) and bench targets;
+//! `docs/ARCHITECTURE.md` has the full data-flow diagram and
+//! `docs/PAPER_MAP.md` the paper-section → module table.
 //!
 //! ## Quickstart
 //! ```no_run
@@ -34,6 +37,19 @@
 //!     println!("{}", c.render_prolog());
 //! }
 //! ```
+//!
+//! Forecast-aware temporal scheduling in three lines (see
+//! [`forecast`] and [`scheduler::TemporalScheduler`]):
+//! ```no_run
+//! use greengen::forecast::{BlendedForecaster, CarbonForecaster};
+//!
+//! let mut forecaster = BlendedForecaster::new();
+//! forecaster.observe("FR", 0.0, 16.0); // feed the monitoring stream
+//! let six_h = forecaster.predict("FR", 0.0, 6.0 * 3600.0);
+//! assert!(six_h.is_some());
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod adapter;
 pub mod benchkit;
@@ -45,6 +61,7 @@ pub mod continuum;
 pub mod energy;
 pub mod error;
 pub mod explain;
+pub mod forecast;
 pub mod jsonio;
 pub mod kb;
 pub mod model;

@@ -4,16 +4,21 @@
 //! greengen scenario <1-5> [--explain] [--format prolog|json|minizinc] [--xla] [--extended]
 //! greengen generate --app app.json --infra infra.json [--alpha 0.8] [--format prolog] [--xla]
 //! greengen adaptive [--scenario 1] [--hours 48] [--regen 6] [--failures 0.0] [--xla]
-//!                   [--incremental] [--zones N]
+//!                   [--incremental] [--zones N] [--horizon S]
 //! greengen schedule [--scenario 1] [--solver greedy|exact|cost-only|random|oracle]
 //! greengen scalability [--mode app|infra] [--steps 10] [--reps 3] [--out file.csv]
 //! greengen threshold [--services 100] [--nodes 100]
+//! greengen forecast [--scenario 3] [--train 48] [--eval 48] [--horizon 6] [--event 72]
 //! greengen info
 //! ```
 
 use greengen::adapter::{adapter_for, SchedulerAdapter};
+use greengen::carbon::CarbonIntensitySource;
 use greengen::cliargs::Args;
 use greengen::config::scenarios;
+use greengen::forecast::{
+    AccuracyConfig, BlendedForecaster, CarbonForecaster, EwmaDrift, SeasonalNaive,
+};
 use greengen::continuum::{IncrementalReplanner, ShardedScheduler, ZonePartitioner};
 use greengen::pipeline::{AdaptiveConfig, AdaptiveLoop, GeneratorPipeline, PipelineConfig};
 use greengen::runtime::{AnalyticsBackend, NativeBackend, XlaBackend};
@@ -52,6 +57,7 @@ fn run(args: &Args) -> Result<()> {
         Some("scalability") => cmd_scalability(args),
         Some("threshold") => cmd_threshold(args),
         Some("timeshift") => cmd_timeshift(args),
+        Some("forecast") => cmd_forecast(args),
         Some("continuum") => cmd_continuum(args),
         Some("info") => cmd_info(),
         Some("help") | None => {
@@ -71,11 +77,12 @@ USAGE:
   greengen scenario <1-5> [--explain] [--format prolog|json|minizinc] [--xla] [--extended]
   greengen generate --app app.json --infra infra.json [--alpha 0.8] [--format prolog] [--xla]
   greengen adaptive [--scenario 1] [--hours 48] [--regen 6] [--failures 0.0]
-                    [--incremental] [--zones N]
+                    [--incremental] [--zones N] [--horizon S]
   greengen schedule [--scenario 1] [--solver greedy|exact|cost-only|random|oracle]
   greengen scalability [--mode app|infra] [--steps 10] [--reps 3] [--out file.csv]
   greengen threshold [--services 100] [--nodes 100]
-  greengen timeshift [--scenario 1] [--window 4] [--horizon 24]
+  greengen timeshift [--scenario 1] [--window 4] [--horizon 24] [--forecast]
+  greengen forecast [--scenario 3] [--train 48] [--eval 48] [--horizon 6] [--event 72]
   greengen continuum [--topology geo-regions] [--nodes 500] [--services 1000] [--zones 8]
                      [--solver sharded|monolithic|both] [--epochs 1] [--sequential]
   greengen info
@@ -176,10 +183,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_adaptive(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "scenario", "hours", "regen", "failures", "xla", "alpha", "extended", "direct",
-        "artifacts", "seed", "incremental", "zones",
+        "artifacts", "seed", "incremental", "zones", "horizon",
     ])?;
     let scenario = scenarios::scenario(args.usize_or("scenario", 1)?)?;
     let incremental = args.flag("incremental");
+    let horizon = args.usize_or("horizon", 0)?;
     let config = AdaptiveConfig {
         hours: args.usize_or("hours", 48)?,
         regen_every: args.usize_or("regen", 6)?,
@@ -188,16 +196,19 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0xADA9)?,
         incremental,
         zones: args.usize_or("zones", 0)?,
+        horizon,
     };
     let mut looper = AdaptiveLoop::with_pipeline(pipeline(args)?, config);
     let summary = looper.run(&scenario)?;
+    let mut header =
+        String::from("hour  #constraints  constrained_g  cost_only_g  random_g  oracle_g  failed");
     if incremental {
-        println!(
-            "hour  #constraints  constrained_g  cost_only_g  random_g  oracle_g  failed  zones(dirty/total)  reused"
-        );
-    } else {
-        println!("hour  #constraints  constrained_g  cost_only_g  random_g  oracle_g  failed");
+        header.push_str("  zones(dirty/total)  reused");
     }
+    if horizon > 0 {
+        header.push_str("  projected_g  swings");
+    }
+    println!("{header}");
     for e in &summary.epochs {
         print!(
             "{:>4}  {:>12}  {:>13.1}  {:>11.1}  {:>8.1}  {:>8.1}  {}",
@@ -215,6 +226,9 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
                 e.dirty_zones, e.total_zones, e.reused_placements
             );
         }
+        if horizon > 0 {
+            print!("  {:>11.1}  {:>6}", e.projected_g, e.predicted_swings);
+        }
         println!();
     }
     println!(
@@ -228,6 +242,10 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
         "emission reduction vs cost-only: {:.1}%  (oracle recovery {:.1}%)",
         summary.reduction_vs_cost_only() * 100.0,
         summary.oracle_recovery() * 100.0
+    );
+    println!(
+        "forecast-projected emissions (horizon {} slots): {:.1} gCO2eq",
+        horizon, summary.total_projected_g
     );
     Ok(())
 }
@@ -403,7 +421,7 @@ fn cmd_threshold(args: &Args) -> Result<()> {
 }
 
 fn cmd_timeshift(args: &Args) -> Result<()> {
-    args.ensure_known(&["scenario", "window", "horizon"])?;
+    args.ensure_known(&["scenario", "window", "horizon", "forecast"])?;
     let scenario = scenarios::scenario(args.usize_or("scenario", 1)?)?;
     // learn profiles from simulated monitoring, then plan against the
     // diurnal CI forecast of every region in the scenario infrastructure
@@ -414,12 +432,37 @@ fn cmd_timeshift(args: &Args) -> Result<()> {
     greengen::energy::EnergyEstimator::default().estimate(&mut app, &store);
 
     let traces = GeneratorPipeline::trace_set(&scenario);
-    let mut planner = greengen::constraints::TimeShiftPlanner::new(&traces);
-    planner.window_hours = args.usize_or("window", 4)?;
-    planner.horizon_hours = args.usize_or("horizon", 24)?;
     let regions: Vec<String> = scenario.infra.nodes.iter().map(|n| n.region.clone()).collect();
     let region_refs: Vec<&str> = regions.iter().map(|r| r.as_str()).collect();
-    let recs = planner.plan(&app, &region_refs, store.horizon())?;
+    let t0 = store.horizon();
+
+    // --forecast: score windows on an honest model trained on the trace
+    // history *up to the planning origin only* — observing past t0 would
+    // hand the seasonal lookup the very future it is asked to predict
+    let mut forecaster = BlendedForecaster::new();
+    if args.flag("forecast") {
+        let mut h = 0usize;
+        loop {
+            let t = h as f64 * 3600.0;
+            if t > t0 {
+                break;
+            }
+            for region in &regions {
+                if let Some(v) = traces.intensity(region, t) {
+                    forecaster.observe(region, t, v);
+                }
+            }
+            h += 1;
+        }
+    }
+    let mut planner = if args.flag("forecast") {
+        greengen::constraints::TimeShiftPlanner::with_forecast(&forecaster)
+    } else {
+        greengen::constraints::TimeShiftPlanner::new(&traces)
+    };
+    planner.window_hours = args.usize_or("window", 4)?;
+    planner.horizon_hours = args.usize_or("horizon", 24)?;
+    let recs = planner.plan(&app, &region_refs, t0)?;
     if recs.is_empty() {
         println!("no batch-capable services with learned profiles");
         return Ok(());
@@ -427,6 +470,83 @@ fn cmd_timeshift(args: &Args) -> Result<()> {
     for rec in &recs {
         println!("{}", rec.render_prolog(1.0));
         println!("{}\n", rec.explain());
+    }
+    Ok(())
+}
+
+fn cmd_forecast(args: &Args) -> Result<()> {
+    args.ensure_known(&["scenario", "train", "eval", "horizon", "event"])?;
+    let scenario = scenarios::scenario(args.usize_or("scenario", 3)?)?;
+    let config = AccuracyConfig {
+        train_hours: args.usize_or("train", 48)?,
+        eval_hours: args.usize_or("eval", 48)?,
+        horizon_hours: args.usize_or("horizon", 6)?,
+        step_hours: 1,
+    };
+    let event_hour = args.usize_or("event", config.train_hours + config.eval_hours / 2)?;
+
+    // Ground truth: the scenario's diurnal traces. For Scenario 3 the
+    // table perturbation (France 16 -> 376) becomes a *temporal event*
+    // at --event: the grid runs on the unperturbed table before it and
+    // on the scenario table after — exactly the renewable-dropout
+    // dynamic the scenario describes. Scenarios whose table equals the
+    // baseline have no event and the run is purely diurnal.
+    let (before, after) = scenarios::event_trace_sets(scenario.id)?;
+    let event_t = event_hour as f64 * 3600.0;
+    let uses_event = scenario.id == 3;
+    let truth = |region: &str, t: f64| -> Option<f64> {
+        if uses_event && t < event_t {
+            before.intensity(region, t)
+        } else {
+            after.intensity(region, t)
+        }
+    };
+
+    let mut regions: Vec<String> =
+        scenario.infra.nodes.iter().map(|n| n.region.clone()).collect();
+    regions.sort();
+    regions.dedup();
+    let region_refs: Vec<&str> = regions.iter().map(|r| r.as_str()).collect();
+
+    let mut seasonal = SeasonalNaive::diurnal();
+    let mut ewma = EwmaDrift::new();
+    let mut blended = BlendedForecaster::new();
+    let report = greengen::forecast::accuracy::walk_forward(
+        truth,
+        &region_refs,
+        &config,
+        &mut [&mut seasonal, &mut ewma, &mut blended],
+    );
+
+    println!(
+        "# forecast accuracy — scenario {} ({}), horizon {} h",
+        scenario.id, scenario.name, config.horizon_hours
+    );
+    if uses_event {
+        println!(
+            "# walk-forward: {} h train + {} h eval, brown-out event at hour {}",
+            config.train_hours, config.eval_hours, event_hour
+        );
+    } else {
+        println!(
+            "# walk-forward: {} h train + {} h eval (purely diurnal trace)",
+            config.train_hours, config.eval_hours
+        );
+    }
+    print!("{}", report.render_text());
+    for region in &regions {
+        if let Some((ws, we)) = blended.weights(region) {
+            println!("# blended weights {region}: seasonal {ws:.2}, drift {we:.2}");
+        }
+    }
+    if let (Some(b), Some(s)) = (report.case("blended"), report.case("seasonal-naive")) {
+        if s.mape > 0.0 {
+            println!(
+                "# blended vs seasonal-naive: {:+.1}% MAPE ({} better)",
+                (b.mape - s.mape) / s.mape * 100.0,
+                if b.mape < s.mape { "blended" } else { "seasonal" }
+            );
+        }
     }
     Ok(())
 }

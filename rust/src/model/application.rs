@@ -120,6 +120,35 @@ impl Default for ServiceRequirements {
     }
 }
 
+/// Temporal freedom of a deferrable component: the slot range inside
+/// which its execution may start (slots are the temporal scheduler's
+/// planning quantum, one hour by default). `earliest_slot = 0,
+/// deadline_slot = 24` means "start any time within the next day".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeferralWindow {
+    /// First admissible start slot (inclusive), relative to the planning
+    /// origin.
+    pub earliest_slot: usize,
+    /// Deadline slot (exclusive): the work must have started before it.
+    pub deadline_slot: usize,
+}
+
+impl DeferralWindow {
+    /// A window spanning `[earliest, deadline)` slots.
+    pub fn new(earliest_slot: usize, deadline_slot: usize) -> DeferralWindow {
+        DeferralWindow {
+            earliest_slot,
+            deadline_slot: deadline_slot.max(earliest_slot + 1),
+        }
+    }
+
+    /// The default freedom of a batch service with no explicit window:
+    /// one diurnal cycle.
+    pub fn one_day() -> DeferralWindow {
+        DeferralWindow::new(0, 24)
+    }
+}
+
 /// A microservice with its flavours and requirement metadata.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Service {
@@ -132,11 +161,16 @@ pub struct Service {
     pub must_deploy: bool,
     /// Available flavours, most preferred first (`flavoursOrder`).
     pub flavours: Vec<Flavour>,
+    /// Service-level placement requirements (subnet + security).
     pub requirements: ServiceRequirements,
     /// Batch-capable service: its execution may be postponed into a
     /// low-carbon window (TimeShift extension — the paper's §6 future
     /// work on batch-processing components).
     pub batch: bool,
+    /// Explicit deferral window for the temporal scheduler. `None` on a
+    /// batch service means [`DeferralWindow::one_day`]; `None` on a
+    /// non-batch service means the component is not deferrable.
+    pub deferral: Option<DeferralWindow>,
 }
 
 impl Service {
@@ -148,6 +182,7 @@ impl Service {
             flavours: Vec::new(),
             requirements: ServiceRequirements::default(),
             batch: false,
+            deferral: None,
         }
     }
 
@@ -317,7 +352,7 @@ impl Application {
 }
 
 fn service_to_json(s: &Service) -> Value {
-    Value::object(vec![
+    let mut v = Value::object(vec![
         ("componentID", Value::from(s.id.clone())),
         ("description", Value::from(s.description.clone())),
         ("mustDeploy", Value::from(s.must_deploy)),
@@ -335,7 +370,20 @@ fn service_to_json(s: &Service) -> Value {
                 ("encryption", Value::from(s.requirements.security.encryption)),
             ]),
         ),
-    ])
+    ]);
+    // written only when set, so output stays byte-identical to the seed
+    // for applications without deferral windows (same convention as the
+    // node-level zone/tier attributes)
+    if let Some(w) = s.deferral {
+        v.set(
+            "deferral",
+            Value::object(vec![
+                ("earliestSlot", Value::from(w.earliest_slot as f64)),
+                ("deadlineSlot", Value::from(w.deadline_slot as f64)),
+            ]),
+        );
+    }
+    v
 }
 
 fn service_from_json(v: &Value) -> Result<Service> {
@@ -345,6 +393,14 @@ fn service_from_json(v: &Value) -> Result<Service> {
     }
     s.must_deploy = v.get("mustDeploy").and_then(|b| b.as_bool()).unwrap_or(true);
     s.batch = v.get("batch").and_then(|b| b.as_bool()).unwrap_or(false);
+    if let Some(w) = v.get("deferral") {
+        if !matches!(w, Value::Null) {
+            s.deferral = Some(DeferralWindow::new(
+                w.get("earliestSlot").and_then(|x| x.as_f64()).unwrap_or(0.0) as usize,
+                w.get("deadlineSlot").and_then(|x| x.as_f64()).unwrap_or(24.0) as usize,
+            ));
+        }
+    }
     for f in v.array_field("flavours")? {
         s.flavours.push(flavour_from_json(f)?);
     }
@@ -493,6 +549,20 @@ mod tests {
         assert_eq!(rows[0].1.name, "large");
         assert_eq!(rows[2].0.id, "cart");
         assert_eq!(app.flavour_rows(), 3);
+    }
+
+    #[test]
+    fn deferral_window_round_trips() {
+        let mut app = sample_app();
+        app.service_mut("cart").unwrap().batch = true;
+        app.service_mut("cart").unwrap().deferral = Some(DeferralWindow::new(2, 10));
+        let back = Application::from_json(&app.to_json()).unwrap();
+        assert_eq!(app, back);
+        let w = back.service("cart").unwrap().deferral.unwrap();
+        assert_eq!(w.earliest_slot, 2);
+        assert_eq!(w.deadline_slot, 10);
+        // degenerate windows are widened to at least one slot
+        assert_eq!(DeferralWindow::new(5, 5).deadline_slot, 6);
     }
 
     #[test]

@@ -11,8 +11,8 @@ pub mod deployment;
 pub mod infrastructure;
 
 pub use application::{
-    Application, CommLink, CommQoS, EnergyProfile, Flavour, FlavourRequirements, SecurityReqs,
-    Service, ServiceRequirements, Subnet,
+    Application, CommLink, CommQoS, DeferralWindow, EnergyProfile, Flavour,
+    FlavourRequirements, SecurityReqs, Service, ServiceRequirements, Subnet,
 };
 pub use deployment::{DeploymentPlan, Placement};
 pub use infrastructure::{Capabilities, Infrastructure, Node, NodeProfile, Tier};

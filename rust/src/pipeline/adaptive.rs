@@ -9,16 +9,23 @@
 //! end-to-end benefit of the generated constraints is measured directly.
 
 use super::generator_pipeline::{GeneratorPipeline, PipelineConfig};
-use crate::carbon::TraceSet;
+use crate::carbon::{CarbonIntensitySource, TraceSet};
 use crate::config::Scenario;
 use crate::continuum::{IncrementalReplanner, ShardedScheduler, ZonePartitioner};
+use crate::forecast::{BlendedForecaster, CarbonForecaster};
 use crate::monitoring::{MetricStore, WorkloadSimulator};
 use crate::scheduler::{
     evaluate, CostOnlyScheduler, GreedyScheduler, GreenOracleScheduler, Objective, Problem,
-    RandomScheduler, Scheduler,
+    RandomScheduler, Scheduler, TemporalConfig, TemporalScheduler,
 };
 use crate::util::Rng;
 use crate::Result;
+
+/// Predicted region-level CI change (gCO2eq/kWh) above which the
+/// forecast proactively invalidates the affected zones: big enough to
+/// ignore ordinary diurnal ramps, small enough to catch a brown-out
+/// building up (Scenario 3 swings by ~360).
+const SWING_EPSILON: f64 = 50.0;
 
 /// Adaptive-loop configuration.
 #[derive(Debug, Clone, Copy)]
@@ -38,6 +45,13 @@ pub struct AdaptiveConfig {
     pub incremental: bool,
     /// Zone count hint for the partitioner (0 = auto / labels).
     pub zones: usize,
+    /// Forecast look-ahead in hourly slots. `0` = reactive (the paper's
+    /// behaviour). With a horizon the loop (a) prices deferrable work
+    /// over forecast slots (the temporal pass), and (b) proactively
+    /// invalidates zones whose predicted CI swings beyond
+    /// [`SWING_EPSILON`] so the incremental re-planner re-solves them
+    /// *before* the swing lands.
+    pub horizon: usize,
 }
 
 impl Default for AdaptiveConfig {
@@ -50,6 +64,7 @@ impl Default for AdaptiveConfig {
             seed: 0xADA9,
             incremental: false,
             zones: 0,
+            horizon: 0,
         }
     }
 }
@@ -61,10 +76,13 @@ pub struct EpochLog {
     pub hour: usize,
     /// Number of ranked constraints in force.
     pub constraints: usize,
-    /// Ground-truth emissions (gCO2eq per window) per scheduler.
+    /// Ground-truth emissions (gCO2eq per window) of the constrained plan.
     pub constrained_g: f64,
+    /// Ground-truth emissions of the cost-only baseline.
     pub cost_only_g: f64,
+    /// Ground-truth emissions of the random baseline.
     pub random_g: f64,
+    /// Ground-truth emissions of the green oracle.
     pub oracle_g: f64,
     /// Node failed (absent from the infrastructure) this epoch, if any.
     pub failed_node: Option<String>,
@@ -78,16 +96,32 @@ pub struct EpochLog {
     pub total_zones: usize,
     /// Incremental mode: placements carried from the previous epoch.
     pub reused_placements: usize,
+    /// Forecast-projected emissions of the constrained plan after the
+    /// temporal pass (equals the reactive projection when `horizon` is
+    /// 0 — same forecaster, slot-0 pricing only).
+    pub projected_g: f64,
+    /// Regions whose predicted CI swing exceeded [`SWING_EPSILON`] this
+    /// epoch (each proactively invalidated its zones).
+    pub predicted_swings: usize,
 }
 
 /// Aggregated outcome.
 #[derive(Debug, Clone)]
 pub struct AdaptiveSummary {
+    /// Per-epoch logs, in simulation order.
     pub epochs: Vec<EpochLog>,
+    /// Total ground-truth emissions of the constrained scheduler.
     pub total_constrained_g: f64,
+    /// Total ground-truth emissions of the cost-only baseline.
     pub total_cost_only_g: f64,
+    /// Total ground-truth emissions of the random baseline.
     pub total_random_g: f64,
+    /// Total ground-truth emissions of the green oracle.
     pub total_oracle_g: f64,
+    /// Total forecast-projected emissions of the constrained plan after
+    /// the temporal pass (compare across `horizon` settings on the same
+    /// trace: a horizon > 0 never projects worse than horizon 0).
+    pub total_projected_g: f64,
 }
 
 impl AdaptiveSummary {
@@ -145,12 +179,29 @@ impl AdaptiveLoop {
             IncrementalReplanner::new(scheduler)
         });
 
+        // the look-ahead model, fed the same hourly stream the Energy
+        // Mix Gatherer scrapes (one observation per region per hour)
+        let mut forecaster = BlendedForecaster::new();
+        let regions: Vec<String> = {
+            let mut rs: Vec<String> =
+                scenario.infra.nodes.iter().map(|n| n.region.clone()).collect();
+            rs.sort();
+            rs.dedup();
+            rs
+        };
+
         let mut epochs = Vec::new();
         let mut hour = 0usize;
         while hour < self.config.hours {
             // --- monitoring for this inter-regen interval ---------------
             for h in hour..(hour + self.config.regen_every).min(self.config.hours) {
-                sim.scrape_into(&mut store, (h as f64 + 1.0) * 3600.0);
+                let th = (h as f64 + 1.0) * 3600.0;
+                sim.scrape_into(&mut store, th);
+                for region in &regions {
+                    if let Some(v) = traces.intensity(region, th) {
+                        forecaster.observe(region, th, v);
+                    }
+                }
             }
             let t = ((hour + self.config.regen_every).min(self.config.hours) as f64) * 3600.0;
 
@@ -172,6 +223,38 @@ impl AdaptiveLoop {
             let outcome = self
                 .pipeline
                 .run_epoch(&mut app, &mut infra, &store, &traces, t)?;
+
+            // --- proactive re-planning: predicted zone-level swings ------
+            let mut predicted_swings = 0usize;
+            if self.config.horizon > 0 {
+                let lead = self.config.horizon as f64 * 3600.0;
+                let mut swing_zones: Vec<String> = Vec::new();
+                for region in &regions {
+                    let (Some(now), Some(ahead)) = (
+                        traces.intensity(region, t),
+                        forecaster.predict(region, t, lead),
+                    ) else {
+                        continue;
+                    };
+                    if (ahead - now).abs() <= SWING_EPSILON {
+                        continue;
+                    }
+                    predicted_swings += 1;
+                    // every zone holding a node of this region re-solves
+                    // next epoch, before the swing is observable
+                    for n in &infra.nodes {
+                        if n.region == *region {
+                            let zone = n.zone.clone().unwrap_or_else(|| n.region.clone());
+                            if !swing_zones.contains(&zone) {
+                                swing_zones.push(zone);
+                            }
+                        }
+                    }
+                }
+                if let Some(rp) = &mut replanner {
+                    rp.invalidate_zones(&swing_zones);
+                }
+            }
 
             // --- schedule + evaluate --------------------------------------
             let objective = self.config.objective;
@@ -206,6 +289,20 @@ impl AdaptiveLoop {
             let m_random = evaluate(&problem, &random)?;
             let m_oracle = evaluate(&problem, &oracle)?;
 
+            // --- temporal pass: price (and, with a horizon, shift) the
+            // deferrable components of the constrained plan under the
+            // forecast. Ground-truth logs above stay untouched.
+            let temporal = TemporalScheduler {
+                forecaster: &forecaster,
+                t0: t,
+                config: TemporalConfig {
+                    slot_hours: 1.0,
+                    horizon_slots: self.config.horizon,
+                    max_rounds: 4,
+                },
+            }
+            .refine(&problem, &constrained)?;
+
             epochs.push(EpochLog {
                 hour,
                 constraints: outcome.ranked.len(),
@@ -219,6 +316,8 @@ impl AdaptiveLoop {
                 dirty_zones,
                 total_zones,
                 reused_placements,
+                projected_g: temporal.projected_g,
+                predicted_swings,
             });
 
             hour += self.config.regen_every;
@@ -230,6 +329,7 @@ impl AdaptiveLoop {
             total_cost_only_g: sum(|e| e.cost_only_g),
             total_random_g: sum(|e| e.random_g),
             total_oracle_g: sum(|e| e.oracle_g),
+            total_projected_g: sum(|e| e.projected_g),
             epochs,
         })
     }
@@ -284,6 +384,37 @@ mod tests {
         assert!(summary.total_constrained_g > 0.0);
         // oracle remains the lower bound under the sharded path too
         assert!(summary.total_oracle_g <= summary.total_constrained_g + 1e-6);
+    }
+
+    #[test]
+    fn forecast_horizon_never_projects_worse_than_reactive() {
+        let scenario = scenarios::scenario(3).unwrap(); // diurnal + brown-out base
+        let run = |horizon: usize| {
+            let mut looper = AdaptiveLoop::new(
+                PipelineConfig::default(),
+                AdaptiveConfig {
+                    hours: 12,
+                    regen_every: 6,
+                    horizon,
+                    ..Default::default()
+                },
+            );
+            looper.run(&scenario).unwrap()
+        };
+        let reactive = run(0);
+        let aware = run(6);
+        // the temporal pass only accepts projected-emission improvements
+        assert!(
+            aware.total_projected_g <= reactive.total_projected_g + 1e-6,
+            "aware {} vs reactive {}",
+            aware.total_projected_g,
+            reactive.total_projected_g
+        );
+        // ground-truth logs are untouched by the horizon (non-incremental)
+        assert!(
+            (aware.total_constrained_g - reactive.total_constrained_g).abs() < 1e-9
+        );
+        assert!(reactive.total_projected_g > 0.0);
     }
 
     #[test]

@@ -57,6 +57,20 @@ impl Backend {
 }
 
 /// The assembled Green-aware Constraint Generator.
+///
+/// # Example
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the crate's rpath to
+/// // the bundled libstdc++; the same flow is exercised for real in
+/// // rust/tests/pipeline_scenarios.rs)
+/// use greengen::config::scenarios;
+/// use greengen::pipeline::GeneratorPipeline;
+///
+/// let scenario = scenarios::scenario(1).unwrap();
+/// let mut pipeline = GeneratorPipeline::new(Default::default());
+/// let outcome = pipeline.run_scenario(&scenario).unwrap();
+/// assert!(!outcome.ranked.is_empty());
+/// ```
 pub struct GeneratorPipeline {
     pub config: PipelineConfig,
     pub kb: KnowledgeBase,

@@ -13,5 +13,5 @@
 pub mod adaptive;
 mod generator_pipeline;
 
-pub use adaptive::{AdaptiveConfig, AdaptiveLoop, EpochLog};
+pub use adaptive::{AdaptiveConfig, AdaptiveLoop, AdaptiveSummary, EpochLog};
 pub use generator_pipeline::{EpochOutcome, GeneratorPipeline, PipelineConfig};

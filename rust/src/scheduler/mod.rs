@@ -8,15 +8,21 @@
 //! The green constraints are *soft*: the scheduler pays a weighted
 //! penalty for violating them (exactly how [36] integrates them), while
 //! resource capacities, placement compatibility and mustDeploy are hard.
+//!
+//! [`temporal`] adds the *when* dimension on top of any spatial solver:
+//! deferrable components are re-scored over (node, start-slot) pairs
+//! against a carbon forecast (see [`crate::forecast`]).
 
 pub mod baselines;
 pub mod eval;
 pub mod greedy;
 pub mod problem;
 pub mod solver;
+pub mod temporal;
 
 pub use baselines::{CostOnlyScheduler, GreenOracleScheduler, RandomScheduler};
 pub use eval::{check_feasible, evaluate, PlanMetrics};
 pub use greedy::GreedyScheduler;
 pub use problem::{CapacityState, Objective, Problem, Scheduler};
 pub use solver::BranchAndBoundScheduler;
+pub use temporal::{TemporalConfig, TemporalPlan, TemporalScheduler};

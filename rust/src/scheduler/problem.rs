@@ -189,6 +189,32 @@ impl<'a> Problem<'a> {
         ConstraintIndex::new(self)
     }
 
+    /// The temporal freedom of service `si` inside a planning horizon of
+    /// `horizon_slots` slots: `Some((earliest, deadline))` (half-open,
+    /// clamped into the horizon, never empty) for deferrable services —
+    /// an explicit [`crate::model::DeferralWindow`], or the one-day
+    /// default for `batch` services — and `None` for components that
+    /// must start at slot 0.
+    ///
+    /// A window lying entirely beyond the horizon
+    /// (`earliest_slot ≥ horizon_slots`) is pinned to the final slot —
+    /// the latest representable start. Plans are horizon-relative and
+    /// re-made every adaptive epoch, so such work is parked as late as
+    /// this epoch can express and re-placed once a later epoch's horizon
+    /// actually reaches its earliest start.
+    pub fn deferral_window(&self, si: usize, horizon_slots: usize) -> Option<(usize, usize)> {
+        let svc = &self.app.services[si];
+        let w = match svc.deferral {
+            Some(w) => w,
+            None if svc.batch => crate::model::DeferralWindow::one_day(),
+            None => return None,
+        };
+        let horizon = horizon_slots.max(1);
+        let lo = w.earliest_slot.min(horizon - 1);
+        let hi = w.deadline_slot.clamp(lo + 1, horizon);
+        Some((lo, hi))
+    }
+
     /// Full objective value of an assignment (lower is better).
     pub fn objective_value(&self, assignment: &[Option<(usize, usize)>]) -> f64 {
         let o = &self.objective;

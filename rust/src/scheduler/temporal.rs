@@ -1,0 +1,573 @@
+//! Horizon-aware temporal scheduling: *when* deferrable work starts, not
+//! just *where* it runs.
+//!
+//! The spatial solvers (greedy, branch-and-bound, sharded) decide
+//! placement against the intensity of the moment. This pass takes their
+//! plan and a [`CarbonForecaster`], and re-scores every deferrable
+//! component over candidate *(node, start-slot)* pairs inside its
+//! [`crate::model::DeferralWindow`], using the **forecast** intensity of
+//! each slot instead of the instantaneous one. Non-deferrable services
+//! occupy their node in every slot; deferrable ones occupy exactly their
+//! start slot, so per-slot capacity frees up room the purely spatial
+//! view cannot see.
+//!
+//! Moves are accepted only when they strictly reduce the plan's
+//! *projected* emissions while never worsening the soft-constraint
+//! penalty or the cost, so the pass monotonically improves on its own
+//! starting point. For windows that may start immediately
+//! (`earliest_slot = 0` — the batch default, and every window the
+//! adaptive loop produces) that starting point *is* the reactive plan,
+//! giving the guarantee **forecast-aware projection ≤ reactive
+//! projection** (with `horizon_slots ≤ 1` the pass is the identity and
+//! simply prices the reactive plan under the same forecast).
+//! `rust/tests/forecast.rs` property-tests that invariant on diurnal
+//! traces. A window with `earliest_slot > 0` instead *parks* at its
+//! earliest admissible slot — respecting the constraint can legitimately
+//! project worse than an (inadmissible) slot-0 start, so no dominance
+//! claim is made there.
+
+use super::problem::{CapacityState, Problem, Scheduler};
+use crate::forecast::CarbonForecaster;
+use crate::model::DeploymentPlan;
+use crate::Result;
+use std::collections::HashMap;
+
+/// Temporal-pass knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct TemporalConfig {
+    /// Planning-slot length in hours (1 h matches the adaptive loop's
+    /// scrape cadence).
+    pub slot_hours: f64,
+    /// Look-ahead depth in slots. `0` or `1` disables deferral: the pass
+    /// only prices the reactive plan under the forecast.
+    pub horizon_slots: usize,
+    /// Improvement sweeps over the deferrable services.
+    pub max_rounds: usize,
+}
+
+impl Default for TemporalConfig {
+    fn default() -> Self {
+        TemporalConfig {
+            slot_hours: 1.0,
+            horizon_slots: 6,
+            max_rounds: 4,
+        }
+    }
+}
+
+/// A spatial plan annotated with start slots and its forecast-projected
+/// emissions.
+#[derive(Debug, Clone)]
+pub struct TemporalPlan {
+    /// The (possibly re-placed) spatial plan.
+    pub plan: DeploymentPlan,
+    /// `(service id, start slot)` for every deferrable, placed service.
+    pub start_slots: Vec<(String, usize)>,
+    /// Projected emissions (gCO2eq per window) of the annotated plan
+    /// under the forecast.
+    pub projected_g: f64,
+    /// Accepted temporal moves.
+    pub moves: usize,
+}
+
+impl TemporalPlan {
+    /// Chosen start slot of a service (deferrable services only).
+    pub fn start_slot(&self, service: &str) -> Option<usize> {
+        self.start_slots
+            .iter()
+            .find(|(s, _)| s == service)
+            .map(|(_, slot)| *slot)
+    }
+}
+
+/// The forecast-driven temporal scheduler. Wraps any spatial
+/// [`Scheduler`] (greedy for production sizes, branch-and-bound for
+/// small instances, the sharded continuum solver for fleets) and adds
+/// the slot dimension on top of its plan.
+pub struct TemporalScheduler<'a> {
+    /// The look-ahead model slots are priced against.
+    pub forecaster: &'a dyn CarbonForecaster,
+    /// Planning origin (seconds): slot `s` covers
+    /// `[t0 + s·slot, t0 + (s+1)·slot)`.
+    pub t0: f64,
+    /// Pass configuration.
+    pub config: TemporalConfig,
+}
+
+impl<'a> TemporalScheduler<'a> {
+    /// A temporal pass at the default configuration.
+    pub fn new(forecaster: &'a dyn CarbonForecaster, t0: f64) -> Self {
+        TemporalScheduler {
+            forecaster,
+            t0,
+            config: TemporalConfig::default(),
+        }
+    }
+
+    /// Solve spatially with `base`, then optimise start slots against
+    /// the forecast.
+    pub fn schedule(&self, problem: &Problem, base: &dyn Scheduler) -> Result<TemporalPlan> {
+        let plan = base.schedule(problem)?;
+        self.refine(problem, &plan)
+    }
+
+    /// Run the temporal pass on an existing spatial plan.
+    pub fn refine(&self, problem: &Problem, plan: &DeploymentPlan) -> Result<TemporalPlan> {
+        let slots = self.config.horizon_slots.max(1);
+        let n_services = problem.app.services.len();
+        let n_nodes = problem.infra.nodes.len();
+        let mut assignment = problem.to_assignment(plan)?;
+
+        // --- forecast CI per (node, slot) ------------------------------
+        // fall back to the node's enriched (observed) carbon when the
+        // forecaster has never seen the region
+        let ci: Vec<Vec<f64>> = problem
+            .infra
+            .nodes
+            .iter()
+            .map(|n| {
+                (0..slots)
+                    .map(|s| {
+                        let h = (s as f64 + 0.5) * self.config.slot_hours * 3600.0;
+                        self.forecaster
+                            .predict(&n.region, self.t0, h)
+                            .unwrap_or_else(|| n.carbon())
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // --- initial temporal state ------------------------------------
+        let mut slot_of: Vec<usize> = vec![0; n_services];
+        let windows: Vec<Option<(usize, usize)>> = (0..n_services)
+            .map(|si| problem.deferral_window(si, slots))
+            .collect();
+        for (si, w) in windows.iter().enumerate() {
+            if let Some((lo, _)) = w {
+                // respect the earliest-start bound even before optimising
+                slot_of[si] = *lo;
+            }
+        }
+
+        // per-slot capacity: non-deferrable services occupy every slot,
+        // deferrable ones only their start slot
+        let mut capacity: Vec<CapacityState> =
+            (0..slots).map(|_| CapacityState::new(problem.infra)).collect();
+        for si in 0..n_services {
+            if let Some((fi, ni)) = assignment[si] {
+                let req = &problem.app.services[si].flavours[fi].requirements;
+                match windows[si] {
+                    Some(_) => capacity[slot_of[si]].take(ni, req.cpu, req.ram_gb, req.storage_gb),
+                    None => {
+                        for cap in &mut capacity {
+                            cap.take(ni, req.cpu, req.ram_gb, req.storage_gb);
+                        }
+                    }
+                }
+            }
+        }
+
+        let index = problem.constraint_index();
+        let svc_idx: HashMap<&str, usize> = problem
+            .app
+            .services
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.id.as_str(), i))
+            .collect();
+        let mut moves = 0usize;
+
+        // --- improvement sweeps (identity when horizon ≤ 1) ------------
+        if slots > 1 {
+            // biggest energy first: the services whose slot matters most
+            let mut order: Vec<usize> = (0..n_services)
+                .filter(|&si| windows[si].is_some() && assignment[si].is_some())
+                .collect();
+            let kwh_of = |si: usize| -> f64 {
+                assignment[si]
+                    .and_then(|(fi, _)| problem.app.services[si].flavours[fi].energy)
+                    .map(|p| p.kwh)
+                    .unwrap_or(0.0)
+            };
+            order.sort_by(|&a, &b| {
+                kwh_of(b)
+                    .partial_cmp(&kwh_of(a))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+
+            for _ in 0..self.config.max_rounds.max(1) {
+                let mut improved = false;
+                for &si in &order {
+                    let Some((fi, ni)) = assignment[si] else { continue };
+                    let Some((lo, hi)) = windows[si] else { continue };
+                    let req = problem.app.services[si].flavours[fi].requirements;
+                    // free the current reservation while evaluating
+                    capacity[slot_of[si]].give(ni, req.cpu, req.ram_gb, req.storage_gb);
+
+                    let cur_proj =
+                        self.projected_local(problem, &svc_idx, &ci, &assignment, &slot_of, si);
+                    let cur_pen = index.penalty_touching(si, &assignment);
+                    let cur_cost =
+                        req.cpu * problem.infra.nodes[ni].profile.cost_per_cpu_hour;
+
+                    let mut best: Option<(usize, usize, f64)> = None;
+                    for s2 in lo..hi {
+                        for n2 in 0..n_nodes {
+                            if s2 == slot_of[si] && n2 == ni {
+                                continue; // the incumbent
+                            }
+                            if !problem.placement_ok(si, fi, n2, &capacity[s2]) {
+                                continue;
+                            }
+                            let old = (assignment[si], slot_of[si]);
+                            assignment[si] = Some((fi, n2));
+                            slot_of[si] = s2;
+                            let proj = self.projected_local(
+                                problem, &svc_idx, &ci, &assignment, &slot_of, si,
+                            );
+                            let pen = index.penalty_touching(si, &assignment);
+                            let cost = req.cpu
+                                * problem.infra.nodes[n2].profile.cost_per_cpu_hour;
+                            assignment[si] = old.0;
+                            slot_of[si] = old.1;
+                            // strictly greener, never worse spatially
+                            if proj < cur_proj - 1e-9
+                                && pen <= cur_pen + 1e-12
+                                && cost <= cur_cost + 1e-12
+                                && best.map(|(_, _, p)| proj < p).unwrap_or(true)
+                            {
+                                best = Some((n2, s2, proj));
+                            }
+                        }
+                    }
+                    match best {
+                        Some((n2, s2, _)) => {
+                            assignment[si] = Some((fi, n2));
+                            slot_of[si] = s2;
+                            capacity[s2].take(n2, req.cpu, req.ram_gb, req.storage_gb);
+                            moves += 1;
+                            improved = true;
+                        }
+                        None => {
+                            capacity[slot_of[si]].take(ni, req.cpu, req.ram_gb, req.storage_gb);
+                        }
+                    }
+                }
+                if !improved {
+                    break;
+                }
+            }
+        }
+
+        let projected_g = self.projected_total(problem, &svc_idx, &ci, &assignment, &slot_of);
+        let start_slots = (0..n_services)
+            .filter(|&si| windows[si].is_some() && assignment[si].is_some())
+            .map(|si| (problem.app.services[si].id.clone(), slot_of[si]))
+            .collect();
+        Ok(TemporalPlan {
+            plan: problem.to_plan(&assignment),
+            start_slots,
+            projected_g,
+            moves,
+        })
+    }
+
+    /// Projected emissions of the full annotated assignment.
+    fn projected_total(
+        &self,
+        problem: &Problem,
+        svc_idx: &HashMap<&str, usize>,
+        ci: &[Vec<f64>],
+        assignment: &[Option<(usize, usize)>],
+        slot_of: &[usize],
+    ) -> f64 {
+        let mut total = 0.0;
+        for (si, slot) in assignment.iter().enumerate() {
+            if let Some((fi, ni)) = slot {
+                if let Some(profile) = problem.app.services[si].flavours[*fi].energy {
+                    total += profile.kwh * ci[*ni][slot_of[si]];
+                }
+            }
+        }
+        for link in &problem.app.links {
+            total += self.link_projection(problem, svc_idx, ci, assignment, slot_of, link);
+        }
+        total
+    }
+
+    /// Projected emissions terms that change when `si` moves: its own
+    /// compute plus every link incident to it. The links are counted in
+    /// full, so the delta of this quantity equals the delta of
+    /// [`Self::projected_total`] (other services' terms cancel).
+    fn projected_local(
+        &self,
+        problem: &Problem,
+        svc_idx: &HashMap<&str, usize>,
+        ci: &[Vec<f64>],
+        assignment: &[Option<(usize, usize)>],
+        slot_of: &[usize],
+        si: usize,
+    ) -> f64 {
+        let mut total = 0.0;
+        if let Some((fi, ni)) = assignment[si] {
+            if let Some(profile) = problem.app.services[si].flavours[fi].energy {
+                total += profile.kwh * ci[ni][slot_of[si]];
+            }
+        }
+        let id = &problem.app.services[si].id;
+        for link in &problem.app.links {
+            if link.from != *id && link.to != *id {
+                continue;
+            }
+            total += self.link_projection(problem, svc_idx, ci, assignment, slot_of, link);
+        }
+        total
+    }
+
+    /// Forecast-priced emissions of one inter-node link: the Eq. 13
+    /// comm profile times the mean of the endpoints' predicted CI at
+    /// their own start slots.
+    fn link_projection(
+        &self,
+        problem: &Problem,
+        svc_idx: &HashMap<&str, usize>,
+        ci: &[Vec<f64>],
+        assignment: &[Option<(usize, usize)>],
+        slot_of: &[usize],
+        link: &crate::model::CommLink,
+    ) -> f64 {
+        let (Some(&fs), Some(&ts)) = (
+            svc_idx.get(link.from.as_str()),
+            svc_idx.get(link.to.as_str()),
+        ) else {
+            return 0.0;
+        };
+        let (Some((ffi, fni)), Some((_, tni))) = (assignment[fs], assignment[ts]) else {
+            return 0.0;
+        };
+        if fni == tni {
+            return 0.0;
+        }
+        let flavour = &problem.app.services[fs].flavours[ffi].name;
+        match link.energy_for(flavour) {
+            Some(kwh) => {
+                kwh * 0.5 * (ci[fni][slot_of[fs]] + ci[tni][slot_of[ts]])
+            }
+            None => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::DiurnalTrace;
+    use crate::forecast::SeasonalNaive;
+    use crate::model::{
+        Application, DeferralWindow, EnergyProfile, Flavour, Infrastructure, Node, Service,
+    };
+    use crate::scheduler::{GreedyScheduler, Objective};
+
+    /// One batch reporting job + one interactive web service, one node on
+    /// a strongly diurnal grid.
+    fn parts() -> (Application, Infrastructure) {
+        let mut app = Application::new("t");
+        let mut batch = Service::new("reports");
+        batch.batch = true;
+        batch.deferral = Some(DeferralWindow::new(0, 24));
+        batch.flavours = vec![Flavour::new("std")];
+        batch.flavour_mut("std").unwrap().energy = Some(EnergyProfile { kwh: 3.0, samples: 8 });
+        batch.flavour_mut("std").unwrap().requirements.cpu = 2.0;
+        let mut web = Service::new("web");
+        web.flavours = vec![Flavour::new("std")];
+        web.flavour_mut("std").unwrap().energy = Some(EnergyProfile { kwh: 1.0, samples: 8 });
+        web.flavour_mut("std").unwrap().requirements.cpu = 2.0;
+        app.services = vec![batch, web];
+        let mut infra = Infrastructure::new("i");
+        let mut n = Node::new("n1", "IT");
+        n.profile.carbon = Some(300.0);
+        n.capabilities.cpu = 8.0;
+        infra.nodes.push(n);
+        (app, infra)
+    }
+
+    /// A forecaster trained on two days of the trace.
+    fn trained(trace: &DiurnalTrace, region: &str) -> SeasonalNaive {
+        let mut f = SeasonalNaive::diurnal();
+        for h in 0..48 {
+            let t = h as f64 * 3600.0;
+            f.observe(region, t, trace.at(t));
+        }
+        f
+    }
+
+    #[test]
+    fn batch_work_shifts_into_the_solar_valley() {
+        let trace = DiurnalTrace::new(300.0, 0.6, 0.0, 1);
+        let f = trained(&trace, "IT");
+        let (app, infra) = parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let t0 = 47.0 * 3600.0; // 23:00 — the valley is ~14 h ahead
+        let ts = TemporalScheduler {
+            forecaster: &f,
+            t0,
+            config: TemporalConfig {
+                slot_hours: 1.0,
+                horizon_slots: 24,
+                max_rounds: 4,
+            },
+        };
+        let plan = ts.schedule(&problem, &GreedyScheduler::default()).unwrap();
+        let slot = plan.start_slot("reports").unwrap();
+        // t0 is 23:00, so the 13:00 solar valley is slots ~12..18
+        assert!(
+            (10..=19).contains(&slot),
+            "batch slot {slot} should land in the solar valley"
+        );
+        // the interactive service has no start slot entry
+        assert!(plan.start_slot("web").is_none());
+        assert!(plan.moves >= 1);
+    }
+
+    #[test]
+    fn horizon_zero_is_reactive_identity() {
+        let trace = DiurnalTrace::new(300.0, 0.6, 0.0, 1);
+        let f = trained(&trace, "IT");
+        let (app, infra) = parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let base = GreedyScheduler::default().schedule(&problem).unwrap();
+        let ts = TemporalScheduler {
+            forecaster: &f,
+            t0: 0.0,
+            config: TemporalConfig {
+                slot_hours: 1.0,
+                horizon_slots: 0,
+                max_rounds: 4,
+            },
+        };
+        let out = ts.refine(&problem, &base).unwrap();
+        assert_eq!(out.plan, base);
+        assert_eq!(out.moves, 0);
+        assert_eq!(out.start_slot("reports"), Some(0));
+    }
+
+    #[test]
+    fn forecast_aware_never_exceeds_reactive_projection() {
+        let trace = DiurnalTrace::new(250.0, 0.5, 0.05, 9);
+        let f = trained(&trace, "IT");
+        let (app, infra) = parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let base = GreedyScheduler::default().schedule(&problem).unwrap();
+        let reactive = TemporalScheduler {
+            forecaster: &f,
+            t0: 0.0,
+            config: TemporalConfig {
+                horizon_slots: 0,
+                ..TemporalConfig::default()
+            },
+        }
+        .refine(&problem, &base)
+        .unwrap();
+        let aware = TemporalScheduler {
+            forecaster: &f,
+            t0: 0.0,
+            config: TemporalConfig {
+                horizon_slots: 6,
+                ..TemporalConfig::default()
+            },
+        }
+        .refine(&problem, &base)
+        .unwrap();
+        assert!(
+            aware.projected_g <= reactive.projected_g + 1e-9,
+            "aware {} vs reactive {}",
+            aware.projected_g,
+            reactive.projected_g
+        );
+    }
+
+    #[test]
+    fn window_beyond_horizon_parks_at_the_final_slot() {
+        // earliest start (slot 10) is outside a 6-slot horizon: the work
+        // is parked as late as this epoch can express (slot 5), not
+        // started early at slot 0 — see Problem::deferral_window
+        let trace = DiurnalTrace::new(300.0, 0.0, 0.0, 3); // flat: no pull
+        let f = trained(&trace, "IT");
+        let (mut app, infra) = parts();
+        app.service_mut("reports").unwrap().deferral = Some(DeferralWindow::new(10, 20));
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let ts = TemporalScheduler {
+            forecaster: &f,
+            t0: 0.0,
+            config: TemporalConfig {
+                horizon_slots: 6,
+                ..TemporalConfig::default()
+            },
+        };
+        let plan = ts.schedule(&problem, &GreedyScheduler::default()).unwrap();
+        assert_eq!(plan.start_slot("reports"), Some(5));
+    }
+
+    #[test]
+    fn per_slot_capacity_lets_deferrals_share_a_node() {
+        // two batch jobs that cannot run simultaneously on the node but
+        // fit fine in different slots
+        let mut app = Application::new("t");
+        for id in ["a", "b"] {
+            let mut s = Service::new(id);
+            s.batch = true;
+            s.flavours = vec![Flavour::new("std")];
+            s.flavour_mut("std").unwrap().energy =
+                Some(EnergyProfile { kwh: 2.0, samples: 4 });
+            s.flavour_mut("std").unwrap().requirements.cpu = 6.0;
+            app.services.push(s);
+        }
+        let mut infra = Infrastructure::new("i");
+        let mut n = Node::new("n1", "IT");
+        n.profile.carbon = Some(200.0);
+        n.capabilities.cpu = 12.0; // both fit at once — base plan works
+        infra.nodes.push(n);
+        let trace = DiurnalTrace::new(200.0, 0.6, 0.0, 2);
+        let f = trained(&trace, "IT");
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let ts = TemporalScheduler {
+            forecaster: &f,
+            t0: 47.0 * 3600.0,
+            config: TemporalConfig {
+                horizon_slots: 24,
+                ..TemporalConfig::default()
+            },
+        };
+        let plan = ts.schedule(&problem, &GreedyScheduler::default()).unwrap();
+        // both shifted somewhere greener than slot 0 (23:00)
+        let sa = plan.start_slot("a").unwrap();
+        let sb = plan.start_slot("b").unwrap();
+        assert!(sa > 0 && sb > 0, "slots {sa}, {sb}");
+    }
+}

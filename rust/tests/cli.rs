@@ -28,10 +28,41 @@ fn help_lists_commands() {
         "scalability",
         "threshold",
         "timeshift",
+        "forecast",
         "continuum",
     ] {
         assert!(stdout.contains(cmd), "{cmd} missing from usage");
     }
+}
+
+#[test]
+fn forecast_reports_blended_accuracy_win() {
+    let (stdout, stderr, ok) = greengen(&["forecast", "--scenario", "3", "--horizon", "6"]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("seasonal-naive"), "{stdout}");
+    assert!(stdout.contains("ewma-drift"), "{stdout}");
+    assert!(stdout.contains("blended"), "{stdout}");
+    // the acceptance criterion: blended MAPE below seasonal-naive on the
+    // Scenario 3 trace (the improvement line names the winner)
+    assert!(stdout.contains("(blended better)"), "{stdout}");
+}
+
+#[test]
+fn adaptive_horizon_prints_projection() {
+    let (stdout, stderr, ok) = greengen(&[
+        "adaptive",
+        "--scenario",
+        "3",
+        "--hours",
+        "12",
+        "--regen",
+        "6",
+        "--horizon",
+        "6",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("projected_g"), "{stdout}");
+    assert!(stdout.contains("forecast-projected emissions"), "{stdout}");
 }
 
 #[test]

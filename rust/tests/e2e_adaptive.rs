@@ -23,6 +23,7 @@ fn adaptive_loop_reduces_emissions_on_every_scenario_infra() {
                 seed: 0xE2E + scenario_id as u64,
                 incremental: false,
                 zones: 0,
+                horizon: 0,
             },
         );
         let summary = looper.run(&scenario).unwrap();
@@ -61,6 +62,7 @@ fn adaptive_loop_survives_heavy_failure_injection() {
             seed: 0xFA11,
             incremental: false,
             zones: 0,
+            horizon: 0,
         },
     );
     let summary = looper.run(&scenario).unwrap();
@@ -138,6 +140,7 @@ fn xla_and_native_pipelines_agree_through_the_adaptive_loop() {
         seed: 0xAB,
         incremental: false,
         zones: 0,
+        horizon: 0,
     };
     let mut native = AdaptiveLoop::new(PipelineConfig::default(), config);
     let mut accel = AdaptiveLoop::with_pipeline(
