@@ -1,0 +1,105 @@
+//! Bench: the solver ladder — greedy vs simulated annealing vs
+//! large-neighbourhood search vs the portfolio — on topology-fleet
+//! instances, measuring wall clock and achieved objective.
+//!
+//! Writes `BENCH_solver.json` into the working directory so the numbers
+//! can be committed as the perf-trajectory baseline (same convention as
+//! `BENCH_continuum.json`).
+
+use greengen::constraints::Constraint;
+use greengen::constraints::{ConstraintGenerator, GeneratorConfig};
+use greengen::jsonio::Value;
+use greengen::model::{Application, Infrastructure};
+use greengen::runtime::NativeBackend;
+use greengen::scheduler::{solver_by_name, Objective, Problem};
+use greengen::simulate::{topology, Topology, TopologySpec};
+use std::time::Instant;
+
+const SOLVERS: [&str; 4] = ["greedy", "anneal", "lns", "portfolio"];
+
+fn ranked_constraints(app: &Application, infra: &Infrastructure) -> Vec<Constraint> {
+    let backend = NativeBackend;
+    let generated = ConstraintGenerator::new(&backend)
+        .with_config(GeneratorConfig {
+            alpha: 0.8,
+            use_prolog: false,
+        })
+        .generate(app, infra)
+        .expect("constraint generation");
+    greengen::ranker::Ranker::default().rank_fresh(&generated.constraints)
+}
+
+fn case(topo: Topology, nodes: usize, services: usize, reps: usize) -> Value {
+    let spec = TopologySpec::new(topo, nodes, services)
+        .with_zones(8)
+        .with_seed(0x50_1BE2);
+    let (app, infra) = topology::generate(&spec);
+    let constraints = ranked_constraints(&app, &infra);
+    let problem = Problem {
+        app: &app,
+        infra: &infra,
+        constraints: &constraints,
+        objective: Objective::default(),
+    };
+    let mut fields: Vec<(String, Value)> = vec![
+        ("topology".to_string(), Value::from(topo.name())),
+        ("nodes".to_string(), Value::from(nodes as f64)),
+        ("services".to_string(), Value::from(services as f64)),
+    ];
+    let mut greedy_obj = f64::NAN;
+    print!(
+        "{:<22} {:>5}n x {:>5}s ",
+        topo.name(),
+        nodes,
+        services
+    );
+    for name in SOLVERS {
+        let solver = solver_by_name(name, 0xBE2C).expect("registry solver");
+        let mut best = f64::INFINITY;
+        let mut objective = 0.0;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let plan = solver.schedule(&problem).expect("solve");
+            let dt = t0.elapsed().as_secs_f64();
+            if dt < best {
+                best = dt;
+            }
+            objective = problem.objective_value(&problem.to_assignment(&plan).unwrap());
+        }
+        if name == "greedy" {
+            greedy_obj = objective;
+        }
+        let gain = (greedy_obj - objective) / greedy_obj.abs().max(1e-9);
+        print!(
+            " | {name} {:>8.1} ms obj {:>10.2} ({:+.2}%)",
+            best * 1e3,
+            objective,
+            -gain * 100.0
+        );
+        fields.push((format!("{name}_ms"), Value::from(best * 1e3)));
+        fields.push((format!("{name}_objective"), Value::from(objective)));
+    }
+    println!();
+    Value::object(fields)
+}
+
+fn main() {
+    println!("# solver bench: the ladder on topology fleets (best of N)");
+    let mut cases = Vec::new();
+    // the acceptance criterion band: 50+ services on every preset
+    cases.push(case(Topology::GeoRegions, 60, 120, 3));
+    cases.push(case(Topology::CloudEdgeHierarchy, 80, 120, 3));
+    cases.push(case(Topology::IotSwarm, 60, 80, 3));
+    cases.push(case(Topology::HybridBurst, 60, 100, 3));
+    // one continuum-scale point
+    cases.push(case(Topology::GeoRegions, 300, 600, 1));
+
+    let out = Value::object(vec![
+        ("bench", Value::from("solver")),
+        ("status", Value::from("measured")),
+        ("results", Value::array(cases)),
+    ]);
+    let path = std::path::Path::new("BENCH_solver.json");
+    greengen::jsonio::to_file(path, &out).expect("write BENCH_solver.json");
+    println!("wrote {}", path.display());
+}

@@ -30,6 +30,13 @@ pub struct ReplanConfig {
     pub carbon_epsilon: f64,
     /// Constraint-weight changes below this do not dirty a zone.
     pub weight_epsilon: f64,
+    /// Annealing budget of the warm-started local-search improver that
+    /// runs over the *dirty* services after the zone re-solves + repair
+    /// (clean-zone placements are never touched, so carry accounting
+    /// stays exact). `0` disables the improver.
+    pub improve_iterations: usize,
+    /// Seed of the improver's deterministic RNG.
+    pub improve_seed: u64,
 }
 
 impl Default for ReplanConfig {
@@ -37,6 +44,8 @@ impl Default for ReplanConfig {
         ReplanConfig {
             carbon_epsilon: 5.0,
             weight_epsilon: 0.01,
+            improve_iterations: 4_000,
+            improve_seed: 0x1A7E,
         }
     }
 }
@@ -50,6 +59,10 @@ pub struct ReplanOutcome {
     pub dirty_zones: Vec<String>,
     /// Placements carried unchanged from the previous epoch.
     pub reused_placements: usize,
+    /// Objective reduction the warm-started local-search improver
+    /// achieved over the dirty services this epoch (`0` when nothing was
+    /// dirty, the improver is disabled, or the epoch was a full solve).
+    pub improver_gain: f64,
 }
 
 impl ReplanOutcome {
@@ -206,6 +219,7 @@ impl IncrementalReplanner {
                 total_zones,
                 dirty_zones: Vec::new(),
                 reused_placements: carried,
+                improver_gain: 0.0,
             });
         }
 
@@ -216,12 +230,7 @@ impl IncrementalReplanner {
             .filter(|zone| !zone.services.is_empty())
             .map(|zone| build_sub(problem, zone))
             .collect();
-        let zone_plans = solve_zones(
-            &subs,
-            problem.objective,
-            self.scheduler.max_rounds,
-            self.scheduler.parallel,
-        )?;
+        let zone_plans = solve_zones(&subs, problem.objective, &self.scheduler)?;
         let mut merged = DeploymentPlan::default();
         for plan in zone_plans {
             merged.placements.extend(plan.placements);
@@ -246,6 +255,26 @@ impl IncrementalReplanner {
             self.scheduler.repair_rounds,
         )?;
 
+        // --- warm-started improver over the dirty services only ---------
+        // The zone solver re-decided each dirty zone in isolation; the
+        // improver anneals those services (plus any stale carries the
+        // repair re-placed) against the *global* problem, warm-started
+        // from the carried + repaired assignment. Clean-zone placements
+        // are outside its proposal set, so reuse stays byte-for-byte.
+        let mut improvable: Vec<usize> = (0..problem.app.services.len())
+            .filter(|&si| dirty_set.contains(&partition.zone_of_service[si]))
+            .chain(carry_failed.iter().copied())
+            .collect();
+        improvable.sort_unstable();
+        improvable.dedup();
+        let improver_gain = crate::scheduler::localsearch::improve_subset(
+            problem,
+            &mut assignment,
+            improvable,
+            self.config.improve_seed,
+            self.config.improve_iterations,
+        );
+
         let plan = problem.to_plan(&assignment);
         let dirty_zones: Vec<String> = dirty
             .iter()
@@ -261,6 +290,7 @@ impl IncrementalReplanner {
             total_zones,
             dirty_zones,
             reused_placements: carried,
+            improver_gain,
         })
     }
 
@@ -281,6 +311,7 @@ impl IncrementalReplanner {
             total_zones: partition.zones.len(),
             dirty_zones,
             reused_placements: 0,
+            improver_gain: 0.0,
         })
     }
 

@@ -3,11 +3,16 @@
 //!
 //! Every zone of a [`Partition`] becomes an independent sub-problem
 //! (its nodes, its services, the constraints fully contained in it) and is
-//! solved by the greedy + local-search scheduler on its own OS thread
-//! (`std::thread::scope` — no runtime dependency). A cross-zone repair
-//! pass then (a) places services their shard could not fit anywhere in the
+//! solved on its own OS thread (`std::thread::scope` — no runtime
+//! dependency): small zones by the greedy + local-search scheduler, zones
+//! at or above [`ShardedScheduler::lns_zone_services`] services by the
+//! large-neighbourhood solver (seeded deterministically per zone, so
+//! parallel and sequential solves agree). A cross-zone repair pass then
+//! (a) places services their shard could not fit anywhere in the
 //! remaining global capacity and (b) runs a bounded improvement sweep over
-//! boundary services, so cross-zone affinities still steer placement.
+//! boundary services, so cross-zone affinities still steer placement; the
+//! repair prices every candidate through the delta-evaluation move core
+//! ([`ScoreState`]).
 //!
 //! Parity guarantee: small instances are delegated to the monolithic
 //! solvers (branch-and-bound below [`ShardedScheduler::exact_services`],
@@ -18,8 +23,10 @@
 use super::partition::{Partition, Zone, ZonePartitioner};
 use crate::constraints::{Constraint, ConstraintKind};
 use crate::model::{Application, DeploymentPlan, Infrastructure};
-use crate::scheduler::problem::CapacityState;
-use crate::scheduler::{BranchAndBoundScheduler, GreedyScheduler, Objective, Problem, Scheduler};
+use crate::scheduler::delta::{Move, ScoreState};
+use crate::scheduler::{
+    BranchAndBoundScheduler, GreedyScheduler, LnsScheduler, Objective, Problem, Scheduler,
+};
 use crate::{Error, Result};
 use std::collections::HashSet;
 
@@ -66,6 +73,14 @@ pub struct ShardedScheduler {
     /// Solve shards on parallel OS threads (`false` = sequential, for
     /// measuring the partitioning benefit alone).
     pub parallel: bool,
+    /// Zones with at least this many services are solved by the
+    /// large-neighbourhood solver instead of plain greedy (the solver
+    /// ladder's scale rung; `usize::MAX` disables it). Seeds derive
+    /// deterministically from [`Self::seed`] and the zone order, so the
+    /// parallel and sequential paths stay bit-identical.
+    pub lns_zone_services: usize,
+    /// Base seed for the per-zone stochastic solvers.
+    pub seed: u64,
 }
 
 impl Default for ShardedScheduler {
@@ -78,6 +93,8 @@ impl Default for ShardedScheduler {
             max_rounds: 20,
             repair_rounds: 2,
             parallel: true,
+            lns_zone_services: 48,
+            seed: 0x5EED,
         }
     }
 }
@@ -149,7 +166,7 @@ impl ShardedScheduler {
             .filter(|z| !z.services.is_empty())
             .map(|z| build_sub(problem, z))
             .collect();
-        let zone_plans = solve_zones(&subs, problem.objective, self.max_rounds, self.parallel)?;
+        let zone_plans = solve_zones(&subs, problem.objective, self)?;
 
         // --- merge + cross-zone repair ---------------------------------
         let mut merged = DeploymentPlan::default();
@@ -243,19 +260,25 @@ pub(crate) fn build_sub(problem: &Problem, zone: &Zone) -> SubInstance {
     }
 }
 
-/// Solve every sub-instance, optionally on parallel scoped threads.
+/// Solve every sub-instance, optionally on parallel scoped threads. Each
+/// sub gets a deterministic per-zone seed derived from the scheduler's
+/// base seed and its position, so thread scheduling cannot change plans.
 pub(crate) fn solve_zones(
     subs: &[SubInstance],
     objective: Objective,
-    max_rounds: usize,
-    parallel: bool,
+    scheduler: &ShardedScheduler,
 ) -> Result<Vec<DeploymentPlan>> {
-    let results: Vec<Result<DeploymentPlan>> = if parallel && subs.len() > 1 {
+    let zone_seed = |i: usize| scheduler.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let results: Vec<Result<DeploymentPlan>> = if scheduler.parallel && subs.len() > 1 {
         let mut out = Vec::new();
         std::thread::scope(|scope| {
             let handles: Vec<_> = subs
                 .iter()
-                .map(|sub| scope.spawn(move || solve_sub(sub, objective, max_rounds)))
+                .enumerate()
+                .map(|(i, sub)| {
+                    let seed = zone_seed(i);
+                    scope.spawn(move || solve_sub(sub, objective, scheduler, seed))
+                })
                 .collect();
             out = handles
                 .into_iter()
@@ -268,23 +291,40 @@ pub(crate) fn solve_zones(
         out
     } else {
         subs.iter()
-            .map(|sub| solve_sub(sub, objective, max_rounds))
+            .enumerate()
+            .map(|(i, sub)| solve_sub(sub, objective, scheduler, zone_seed(i)))
             .collect()
     };
     results.into_iter().collect()
 }
 
-/// Solve one zone. A shard that cannot fit a mandatory service does not
-/// fail the whole schedule: the solve is retried with mandatory flags
-/// relaxed and the dropped services fall through to the repair pass.
-fn solve_sub(sub: &SubInstance, objective: Objective, max_rounds: usize) -> Result<DeploymentPlan> {
+/// Solve one zone — greedy for small zones, large-neighbourhood search
+/// at or above [`ShardedScheduler::lns_zone_services`] services. A shard
+/// that cannot fit a mandatory service does not fail the whole schedule:
+/// the solve is retried with mandatory flags relaxed and the dropped
+/// services fall through to the repair pass.
+fn solve_sub(
+    sub: &SubInstance,
+    objective: Objective,
+    scheduler: &ShardedScheduler,
+    seed: u64,
+) -> Result<DeploymentPlan> {
+    let solver: Box<dyn Scheduler> = if sub.app.services.len() >= scheduler.lns_zone_services {
+        Box::new(LnsScheduler {
+            greedy_rounds: scheduler.max_rounds,
+            ..LnsScheduler::seeded(seed)
+        })
+    } else {
+        Box::new(GreedyScheduler {
+            max_rounds: scheduler.max_rounds,
+        })
+    };
     let problem = Problem {
         app: &sub.app,
         infra: &sub.infra,
         constraints: &sub.constraints,
         objective,
     };
-    let solver = GreedyScheduler { max_rounds };
     match solver.schedule(&problem) {
         Ok(plan) => Ok(plan),
         Err(Error::Infeasible(_)) => {
@@ -313,7 +353,8 @@ pub(crate) struct RepairStats {
 
 /// Cross-zone repair against the *full* problem: place every unassigned
 /// service where it is globally best (mandatory ones must fit somewhere),
-/// then run bounded improvement sweeps over the boundary services.
+/// then run bounded improvement sweeps over the boundary services. All
+/// candidate pricing goes through the delta-evaluation core.
 pub(crate) fn repair(
     problem: &Problem,
     assignment: &mut Vec<Option<(usize, usize)>>,
@@ -321,18 +362,12 @@ pub(crate) fn repair(
     rounds: usize,
 ) -> Result<RepairStats> {
     let index = problem.constraint_index();
-    let mut capacity = CapacityState::new(problem.infra);
-    for (si, slot) in assignment.iter().enumerate() {
-        if let Some((fi, ni)) = slot {
-            let req = &problem.app.services[si].flavours[*fi].requirements;
-            capacity.take(*ni, req.cpu, req.ram_gb, req.storage_gb);
-        }
-    }
+    let mut state = ScoreState::new(problem, &index, std::mem::take(assignment));
     let mut stats = RepairStats::default();
 
     // --- placement of shard-dropped services -------------------------
-    let mut unplaced: Vec<usize> = (0..assignment.len())
-        .filter(|&si| assignment[si].is_none())
+    let mut unplaced: Vec<usize> = (0..problem.app.services.len())
+        .filter(|&si| state.slot(si).is_none())
         .collect();
     // mandatory first, then biggest demand first (big rocks)
     unplaced.sort_by(|&a, &b| {
@@ -347,41 +382,35 @@ pub(crate) fn repair(
             })
             .then(a.cmp(&b))
     });
+    let mut unfittable: Option<String> = None;
     for si in unplaced {
         let svc = &problem.app.services[si];
-        let dropped_local = problem.local_objective(&index, si, assignment);
-        let mut best: Option<(usize, usize, f64)> = None;
-        for fi in 0..svc.flavours.len() {
-            for ni in 0..problem.infra.nodes.len() {
-                if !problem.placement_ok(si, fi, ni, &capacity) {
-                    continue;
-                }
-                assignment[si] = Some((fi, ni));
-                let local = problem.local_objective(&index, si, assignment);
-                assignment[si] = None;
-                if best.map(|(_, _, v)| local < v).unwrap_or(true) {
-                    best = Some((fi, ni, local));
-                }
-            }
-        }
-        match best {
-            Some((fi, ni, placed_local)) => {
-                if !svc.must_deploy && dropped_local <= placed_local {
+        match state.best_reassign(si) {
+            Some((fi, ni, d)) => {
+                if !svc.must_deploy && d.total >= 0.0 {
                     continue; // dropping remains the better choice
                 }
-                let req = &svc.flavours[fi].requirements;
-                capacity.take(ni, req.cpu, req.ram_gb, req.storage_gb);
-                assignment[si] = Some((fi, ni));
+                state.apply(Move::Reassign {
+                    service: si,
+                    flavour: fi,
+                    node: ni,
+                });
                 stats.placed += 1;
             }
             None if svc.must_deploy => {
-                return Err(Error::Infeasible(format!(
-                    "no zone can fit mandatory service '{}' after repair",
-                    svc.id
-                )));
+                unfittable = Some(svc.id.clone());
+                break;
             }
             None => {}
         }
+    }
+    if let Some(id) = unfittable {
+        // hand the partial assignment back before failing, preserving the
+        // pre-refactor in-place contract (callers may want to recover)
+        *assignment = state.into_assignment();
+        return Err(Error::Infeasible(format!(
+            "no zone can fit mandatory service '{id}' after repair"
+        )));
     }
 
     // --- boundary improvement sweep -----------------------------------
@@ -389,49 +418,39 @@ pub(crate) fn repair(
         let mut improved = false;
         for &si in boundary {
             let svc = &problem.app.services[si];
-            let original = assignment[si];
-            if let Some((fi, ni)) = original {
-                let req = &svc.flavours[fi].requirements;
-                capacity.give(ni, req.cpu, req.ram_gb, req.storage_gb);
-            }
-            let original_local = problem.local_objective(&index, si, assignment);
-            let mut best = original;
-            let mut best_local = original_local;
-            if !svc.must_deploy {
-                assignment[si] = None;
-                let v = problem.local_objective(&index, si, assignment);
-                if v < best_local - 1e-12 {
-                    best_local = v;
-                    best = None;
-                }
-            }
-            for fi in 0..svc.flavours.len() {
-                for ni in 0..problem.infra.nodes.len() {
-                    if !problem.placement_ok(si, fi, ni, &capacity) {
-                        continue;
-                    }
-                    assignment[si] = Some((fi, ni));
-                    let v = problem.local_objective(&index, si, assignment);
-                    if v < best_local - 1e-12 {
-                        best_local = v;
-                        best = Some((fi, ni));
+            let mut best: Option<(Move, f64)> = None;
+            if !svc.must_deploy && state.slot(si).is_some() {
+                if let Some(d) = state.delta(Move::Drop { service: si }) {
+                    if d.total < -1e-12 {
+                        best = Some((Move::Drop { service: si }, d.total));
                     }
                 }
             }
-            assignment[si] = best;
-            if let Some((fi, ni)) = best {
-                let req = &svc.flavours[fi].requirements;
-                capacity.take(ni, req.cpu, req.ram_gb, req.storage_gb);
+            if let Some((fi, ni, d)) = state.best_reassign(si) {
+                let threshold = best.map(|(_, v)| v).unwrap_or(0.0) - 1e-12;
+                if d.total < threshold {
+                    best = Some((
+                        Move::Reassign {
+                            service: si,
+                            flavour: fi,
+                            node: ni,
+                        },
+                        d.total,
+                    ));
+                }
             }
-            if best != original {
-                improved = true;
-                stats.moves += 1;
+            if let Some((mv, _)) = best {
+                if state.apply(mv).is_some() {
+                    improved = true;
+                    stats.moves += 1;
+                }
             }
         }
         if !improved {
             break;
         }
     }
+    *assignment = state.into_assignment();
     Ok(stats)
 }
 

@@ -14,7 +14,9 @@
 //! rule engine, and a constraint-aware scheduler.
 //!
 //! ## Layer map
-//! * L3 (this crate): coordination, adaptive epochs, KB, scheduler, the
+//! * L3 (this crate): coordination, adaptive epochs, KB, the scheduler's
+//!   solver ladder on its shared [`scheduler::delta`] move core (greedy,
+//!   [`scheduler::localsearch`] annealing/LNS/portfolio, exact BnB), the
 //!   [`continuum`] sharded multi-cluster engine, the [`forecast`]
 //!   look-ahead layer + [`scheduler::temporal`] horizon-aware pass, CLI.
 //! * L2/L1 (`python/compile/`): the impact-analytics graph + Pallas kernels,

@@ -5,7 +5,7 @@
 //! greengen generate --app app.json --infra infra.json [--alpha 0.8] [--format prolog] [--xla]
 //! greengen adaptive [--scenario 1] [--hours 48] [--regen 6] [--failures 0.0] [--xla]
 //!                   [--incremental] [--zones N] [--horizon S]
-//! greengen schedule [--scenario 1] [--solver greedy|exact|cost-only|random|oracle]
+//! greengen schedule [--scenario 1] [--solver greedy|exact|anneal|lns|portfolio|cost-only|random|oracle] [--seed N]
 //! greengen scalability [--mode app|infra] [--steps 10] [--reps 3] [--out file.csv]
 //! greengen threshold [--services 100] [--nodes 100]
 //! greengen forecast [--scenario 3] [--train 48] [--eval 48] [--horizon 6] [--event 72]
@@ -23,8 +23,7 @@ use greengen::continuum::{IncrementalReplanner, ShardedScheduler, ZonePartitione
 use greengen::pipeline::{AdaptiveConfig, AdaptiveLoop, GeneratorPipeline, PipelineConfig};
 use greengen::runtime::{AnalyticsBackend, NativeBackend, XlaBackend};
 use greengen::scheduler::{
-    evaluate, BranchAndBoundScheduler, CostOnlyScheduler, GreedyScheduler,
-    GreenOracleScheduler, Objective, Problem, RandomScheduler, Scheduler,
+    evaluate, solver_by_name, GreedyScheduler, Objective, Problem, Scheduler, SOLVER_NAMES,
 };
 use greengen::telemetry::EnergyMeter;
 use greengen::util::{quantile_lower, Rng};
@@ -78,16 +77,18 @@ USAGE:
   greengen generate --app app.json --infra infra.json [--alpha 0.8] [--format prolog] [--xla]
   greengen adaptive [--scenario 1] [--hours 48] [--regen 6] [--failures 0.0]
                     [--incremental] [--zones N] [--horizon S]
-  greengen schedule [--scenario 1] [--solver greedy|exact|cost-only|random|oracle]
+  greengen schedule [--scenario 1] [--solver greedy|exact|anneal|lns|portfolio|cost-only|random|oracle]
+                    [--seed N]
   greengen scalability [--mode app|infra] [--steps 10] [--reps 3] [--out file.csv]
   greengen threshold [--services 100] [--nodes 100]
   greengen timeshift [--scenario 1] [--window 4] [--horizon 24] [--forecast]
   greengen forecast [--scenario 3] [--train 48] [--eval 48] [--horizon 6] [--event 72]
   greengen continuum [--topology geo-regions] [--nodes 500] [--services 1000] [--zones 8]
-                     [--solver sharded|monolithic|both] [--epochs 1] [--sequential]
+                     [--solver sharded|monolithic|both|all] [--epochs 1] [--sequential] [--seed N]
   greengen info
 
 Topologies: cloud-edge-hierarchy, geo-regions, iot-swarm, hybrid-burst
+Solver ladder (docs/solvers.md): greedy -> anneal -> lns -> portfolio -> exact
 ";
 
 fn pipeline(args: &Args) -> Result<GeneratorPipeline> {
@@ -203,7 +204,7 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
     let mut header =
         String::from("hour  #constraints  constrained_g  cost_only_g  random_g  oracle_g  failed");
     if incremental {
-        header.push_str("  zones(dirty/total)  reused");
+        header.push_str("  zones(dirty/total)  reused  improver_gain");
     }
     if horizon > 0 {
         header.push_str("  projected_g  swings");
@@ -222,8 +223,8 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
         );
         if incremental {
             print!(
-                "  {:>6}/{:<6} {:>6}",
-                e.dirty_zones, e.total_zones, e.reused_placements
+                "  {:>6}/{:<6} {:>6}  {:>13.3}",
+                e.dirty_zones, e.total_zones, e.reused_placements, e.improver_gain
             );
         }
         if horizon > 0 {
@@ -252,7 +253,7 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
 
 fn cmd_schedule(args: &Args) -> Result<()> {
     args.ensure_known(&[
-        "scenario", "solver", "xla", "alpha", "extended", "direct", "artifacts",
+        "scenario", "solver", "seed", "xla", "alpha", "extended", "direct", "artifacts",
     ])?;
     let scenario = scenarios::scenario(args.usize_or("scenario", 1)?)?;
     let mut pipe = pipeline(args)?;
@@ -276,16 +277,14 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         objective: Objective::default(),
     };
     let solver_name = args.opt_or("solver", "greedy");
-    let plan = match solver_name.as_str() {
-        "greedy" => GreedyScheduler::default().schedule(&problem)?,
-        "exact" => BranchAndBoundScheduler::default().schedule(&problem)?,
-        "cost-only" => CostOnlyScheduler.schedule(&problem)?,
-        "random" => RandomScheduler { seed: 7 }.schedule(&problem)?,
-        "oracle" => GreenOracleScheduler.schedule(&problem)?,
-        other => {
-            return Err(greengen::Error::Config(format!("unknown solver '{other}'")));
-        }
-    };
+    let seed = args.u64_or("seed", 7)?;
+    let solver = solver_by_name(&solver_name, seed).ok_or_else(|| {
+        greengen::Error::Config(format!(
+            "unknown solver '{solver_name}' (expected one of: {})",
+            SOLVER_NAMES.join("|")
+        ))
+    })?;
+    let plan = solver.schedule(&problem)?;
     let metrics = evaluate(&problem, &plan)?;
     println!("# solver={solver_name} constraints={}", outcome.ranked.len());
     for p in &plan.placements {
@@ -625,9 +624,12 @@ fn cmd_continuum(args: &Args) -> Result<()> {
         sharded.partitioner = ZonePartitioner::with_zones(zones);
     }
     let solver_mode = args.opt_or("solver", "both");
-    if !matches!(solver_mode.as_str(), "sharded" | "monolithic" | "both") {
+    if !matches!(
+        solver_mode.as_str(),
+        "sharded" | "monolithic" | "both" | "all"
+    ) {
         return Err(greengen::Error::Config(format!(
-            "unknown solver '{solver_mode}' (sharded|monolithic|both)"
+            "unknown solver '{solver_mode}' (sharded|monolithic|both|all)"
         )));
     }
 
@@ -639,7 +641,7 @@ fn cmd_continuum(args: &Args) -> Result<()> {
     };
     let mut mono: Option<SolveRow> = None;
     let mut shard: Option<SolveRow> = None;
-    if solver_mode == "monolithic" || solver_mode == "both" {
+    if matches!(solver_mode.as_str(), "monolithic" | "both" | "all") {
         let t0 = std::time::Instant::now();
         let plan = GreedyScheduler::default().schedule(&problem)?;
         mono = Some(continuum_row(
@@ -649,7 +651,7 @@ fn cmd_continuum(args: &Args) -> Result<()> {
             t0.elapsed().as_secs_f64(),
         )?);
     }
-    if solver_mode == "sharded" || solver_mode == "both" {
+    if matches!(solver_mode.as_str(), "sharded" | "both" | "all") {
         let t0 = std::time::Instant::now();
         let (plan, stats) = sharded.schedule_with_stats(&problem)?;
         let seconds = t0.elapsed().as_secs_f64();
@@ -658,6 +660,15 @@ fn cmd_continuum(args: &Args) -> Result<()> {
             "# sharded: mode={} zones={} repair_placed={} repair_moves={}",
             stats.mode, stats.zones, stats.repair_placed, stats.repair_moves
         );
+    }
+    if solver_mode == "all" {
+        // the local-search ladder on the same instance (docs/solvers.md)
+        for name in ["anneal", "lns", "portfolio"] {
+            let solver = solver_by_name(name, seed).expect("registry solver");
+            let t0 = std::time::Instant::now();
+            let plan = solver.schedule(&problem)?;
+            continuum_row(solver.name(), &problem, &plan, t0.elapsed().as_secs_f64())?;
+        }
     }
     if let (Some(m), Some(s)) = (&mono, &shard) {
         println!(

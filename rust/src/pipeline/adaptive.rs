@@ -96,6 +96,10 @@ pub struct EpochLog {
     pub total_zones: usize,
     /// Incremental mode: placements carried from the previous epoch.
     pub reused_placements: usize,
+    /// Incremental mode: objective reduction the warm-started
+    /// local-search improver achieved over this epoch's dirty services
+    /// (0 when disabled, nothing was dirty, or the epoch fully solved).
+    pub improver_gain: f64,
     /// Forecast-projected emissions of the constrained plan after the
     /// temporal pass (equals the reactive projection when `horizon` is
     /// 0 — same forecaster, slot-0 pricing only).
@@ -264,7 +268,7 @@ impl AdaptiveLoop {
                 constraints: &outcome.ranked,
                 objective,
             };
-            let (constrained, dirty_zones, total_zones, reused_placements) =
+            let (constrained, dirty_zones, total_zones, reused_placements, improver_gain) =
                 match &mut replanner {
                     Some(rp) => {
                         let outcome = rp.replan(&problem)?;
@@ -273,9 +277,10 @@ impl AdaptiveLoop {
                             outcome.dirty_zones.len(),
                             outcome.total_zones,
                             outcome.reused_placements,
+                            outcome.improver_gain,
                         )
                     }
-                    None => (GreedyScheduler::default().schedule(&problem)?, 0, 0, 0),
+                    None => (GreedyScheduler::default().schedule(&problem)?, 0, 0, 0, 0.0),
                 };
             let cost_only = CostOnlyScheduler.schedule(&problem)?;
             let random = RandomScheduler {
@@ -316,6 +321,7 @@ impl AdaptiveLoop {
                 dirty_zones,
                 total_zones,
                 reused_placements,
+                improver_gain,
                 projected_g: temporal.projected_g,
                 predicted_swings,
             });

@@ -1,0 +1,760 @@
+//! Unified delta-evaluation move core: one incremental scoring engine
+//! shared by every solver layer.
+//!
+//! Before this module, plan scoring was re-derived independently in four
+//! places — greedy's candidate loop, branch-and-bound's lower bound, the
+//! continuum cross-zone repair and the temporal (node, start-slot)
+//! re-scoring — each paying full `objective_value` scans or maintaining
+//! its own copy of the "local objective" algebra. [`ScoreState`] is the
+//! single home of that algebra: it caches the objective of the current
+//! assignment and re-prices a [`Move`] in **O(touched constraints)** via
+//! the [`ConstraintIndex`], exposing `delta` (peek), `apply` (commit) and
+//! `undo`/`rollback_to` (revert) so construction heuristics, exhaustive
+//! search and stochastic local search all share the same arithmetic.
+//!
+//! The exactness contract (property-tested in `rust/tests/localsearch.rs`
+//! and in this module): after any sequence of applied moves, the cached
+//! [`ScoreState::objective`] equals a from-scratch
+//! [`Problem::objective_value`] rescore to within 1e-9.
+
+use super::problem::{CapacityState, ConstraintIndex, Problem};
+
+/// One candidate change to an assignment.
+///
+/// Moves are *mechanical*: a [`Move::Drop`] of a `must_deploy` service is
+/// scored like any other (the objective prices every dropped service the
+/// same way) — keeping mandatory services deployed is the **solver's**
+/// invariant, enforced where plans are finalised, not here. This is what
+/// lets large-neighbourhood search destroy-and-rebuild mandatory
+/// services through the same core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Move {
+    /// Place (or re-place, or revive) `service` as `flavour` on `node`.
+    Reassign {
+        /// Service index into `app.services`.
+        service: usize,
+        /// Flavour index into that service's `flavours`.
+        flavour: usize,
+        /// Node index into `infra.nodes`.
+        node: usize,
+    },
+    /// Remove `service` from the plan (it pays the drop penalty).
+    Drop {
+        /// Service index into `app.services`.
+        service: usize,
+    },
+    /// Exchange the nodes of two placed services (each keeps its
+    /// flavour). Scored as two sequential reassignments, so the delta is
+    /// exact even when constraints touch both endpoints.
+    Swap {
+        /// First service index.
+        a: usize,
+        /// Second service index.
+        b: usize,
+    },
+}
+
+/// Component-wise objective change of one move, in the *raw* units of
+/// each term (unweighted); `total` is the weighted sum — exactly the
+/// change of [`Problem::objective_value`].
+///
+/// Callers that accept moves on a single scalar use `total`; callers
+/// with per-component acceptance rules (the temporal pass must never
+/// worsen `penalty` or `cost` while it chases projected emissions) read
+/// the components.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ScoreDelta {
+    /// Change in plan cost (currency/h).
+    pub cost: f64,
+    /// Change in the soft-constraint penalty (sum of violated weights).
+    pub penalty: f64,
+    /// Change in the number of dropped services.
+    pub dropped: f64,
+    /// Change in the summed flavour rank (0 = most preferred).
+    pub flavour_rank: f64,
+    /// Change in emissions (gCO2eq/window). Tracked only when the
+    /// objective prices emissions (`emissions_weight != 0`) — the
+    /// constrained production objective keeps it at zero, and pricing
+    /// comm links on every move would be wasted work there.
+    pub emissions: f64,
+    /// Weighted objective change (the delta of `objective_value`).
+    pub total: f64,
+}
+
+/// Objective terms local to one service's slot (raw units).
+#[derive(Debug, Clone, Copy, Default)]
+struct Parts {
+    cost: f64,
+    penalty: f64,
+    dropped: f64,
+    flavour_rank: f64,
+    emissions: f64,
+}
+
+impl Parts {
+    fn minus(self, o: Parts) -> Parts {
+        Parts {
+            cost: self.cost - o.cost,
+            penalty: self.penalty - o.penalty,
+            dropped: self.dropped - o.dropped,
+            flavour_rank: self.flavour_rank - o.flavour_rank,
+            emissions: self.emissions - o.emissions,
+        }
+    }
+
+    fn plus(self, o: Parts) -> Parts {
+        Parts {
+            cost: self.cost + o.cost,
+            penalty: self.penalty + o.penalty,
+            dropped: self.dropped + o.dropped,
+            flavour_rank: self.flavour_rank + o.flavour_rank,
+            emissions: self.emissions + o.emissions,
+        }
+    }
+}
+
+/// The objective terms that depend only on service `si`'s slot: its own
+/// cost/flavour/drop/emissions contribution plus the penalties of the
+/// constraints touching `si`. Changing `si`'s slot changes the global
+/// objective by exactly the difference of this quantity (all other
+/// services' terms cancel) — the invariant the whole move core rests on,
+/// property-tested in `problem.rs` and `rust/tests/localsearch.rs`.
+fn local_parts(
+    problem: &Problem,
+    index: &ConstraintIndex,
+    si: usize,
+    assignment: &[Option<(usize, usize)>],
+) -> Parts {
+    let penalty = index.penalty_touching(si, assignment);
+    match assignment[si] {
+        Some((fi, ni)) => {
+            let svc = &problem.app.services[si];
+            let req = &svc.flavours[fi].requirements;
+            let emissions = if problem.objective.emissions_weight != 0.0 {
+                let mut e = 0.0;
+                if let Some(profile) = svc.flavours[fi].energy {
+                    e += profile.kwh * problem.infra.nodes[ni].carbon();
+                }
+                e + comm_emissions_touching(problem, si, assignment)
+            } else {
+                0.0
+            };
+            Parts {
+                cost: req.cpu * problem.infra.nodes[ni].profile.cost_per_cpu_hour,
+                penalty,
+                dropped: 0.0,
+                flavour_rank: fi as f64,
+                emissions,
+            }
+        }
+        None => Parts {
+            penalty,
+            dropped: 1.0,
+            ..Parts::default()
+        },
+    }
+}
+
+/// Weighted local objective around one service's slot — the quantity the
+/// pre-refactor solvers each re-implemented. [`Problem::local_objective`]
+/// is now a thin wrapper over this.
+pub(crate) fn local_objective(
+    problem: &Problem,
+    index: &ConstraintIndex,
+    si: usize,
+    assignment: &[Option<(usize, usize)>],
+) -> f64 {
+    weighted(problem, local_parts(problem, index, si, assignment))
+}
+
+fn weighted(problem: &Problem, p: Parts) -> f64 {
+    let o = &problem.objective;
+    o.cost_weight * p.cost
+        + o.soft_weight * p.penalty
+        + o.drop_penalty * p.dropped
+        + o.flavour_weight * p.flavour_rank
+        + o.emissions_weight * p.emissions
+}
+
+/// Inter-node communication emissions of links incident to `si` (counted
+/// in full, so single-slot deltas cancel other services' terms exactly).
+fn comm_emissions_touching(
+    problem: &Problem,
+    si: usize,
+    assignment: &[Option<(usize, usize)>],
+) -> f64 {
+    let id = &problem.app.services[si].id;
+    let mut total = 0.0;
+    for link in &problem.app.links {
+        if link.from != *id && link.to != *id {
+            continue;
+        }
+        let from = problem.find(assignment, &link.from);
+        let to = problem.find(assignment, &link.to);
+        if let (Some((fsi, (fi, ni))), Some((_, (_, nz)))) = (from, to) {
+            if ni != nz {
+                let flavour = &problem.app.services[fsi].flavours[fi].name;
+                if let Some(kwh) = link.energy_for(flavour) {
+                    let ci =
+                        0.5 * (problem.infra.nodes[ni].carbon() + problem.infra.nodes[nz].carbon());
+                    total += kwh * ci;
+                }
+            }
+        }
+    }
+    total
+}
+
+/// One applied move's revert record.
+struct Undo {
+    /// `(service, previous slot)` in apply order.
+    slots: Vec<(usize, Option<(usize, usize)>)>,
+    /// Cached objective before the move.
+    value: f64,
+}
+
+/// Incrementally scored assignment: the shared solver substrate.
+///
+/// Holds the assignment, (optionally) the remaining per-node capacity,
+/// and the cached objective value. Every mutation goes through
+/// [`ScoreState::apply`], which prices the move in O(touched
+/// constraints), keeps capacity in sync, and records an undo entry so
+/// search can backtrack ([`ScoreState::undo`]) or roll a whole
+/// destroyed-and-rebuilt neighbourhood back ([`ScoreState::rollback_to`]).
+pub struct ScoreState<'p, 'a> {
+    problem: &'p Problem<'a>,
+    index: &'p ConstraintIndex,
+    assignment: Vec<Option<(usize, usize)>>,
+    /// `None` = scoring-only mode ([`ScoreState::unbounded`]): the caller
+    /// owns feasibility (the temporal pass tracks *per-slot* capacity,
+    /// which a flat tracker cannot represent).
+    capacity: Option<CapacityState>,
+    value: f64,
+    log: Vec<Undo>,
+}
+
+impl<'p, 'a> ScoreState<'p, 'a> {
+    /// Capacity-tracked state over `assignment` (which must fit node
+    /// capacities — all solvers start from a feasible construction).
+    /// Costs one full `objective_value` scan; everything after is
+    /// incremental.
+    pub fn new(
+        problem: &'p Problem<'a>,
+        index: &'p ConstraintIndex,
+        assignment: Vec<Option<(usize, usize)>>,
+    ) -> Self {
+        let mut capacity = CapacityState::new(problem.infra);
+        for (si, slot) in assignment.iter().enumerate() {
+            if let Some((fi, ni)) = slot {
+                let req = &problem.app.services[si].flavours[*fi].requirements;
+                capacity.take(*ni, req.cpu, req.ram_gb, req.storage_gb);
+            }
+        }
+        let value = problem.objective_value(&assignment);
+        ScoreState {
+            problem,
+            index,
+            assignment,
+            capacity: Some(capacity),
+            value,
+            log: Vec::new(),
+        }
+    }
+
+    /// Scoring-only state: moves are priced but **no** capacity or
+    /// placement feasibility is checked — the caller enforces its own
+    /// (e.g. the temporal pass with per-slot capacity).
+    pub fn unbounded(
+        problem: &'p Problem<'a>,
+        index: &'p ConstraintIndex,
+        assignment: Vec<Option<(usize, usize)>>,
+    ) -> Self {
+        let value = problem.objective_value(&assignment);
+        ScoreState {
+            problem,
+            index,
+            assignment,
+            capacity: None,
+            value,
+            log: Vec::new(),
+        }
+    }
+
+    /// The cached objective of the current assignment (delta-tracked;
+    /// equals a full rescore to within 1e-9 — tested invariant).
+    pub fn objective(&self) -> f64 {
+        self.value
+    }
+
+    /// The current assignment.
+    pub fn assignment(&self) -> &[Option<(usize, usize)>] {
+        &self.assignment
+    }
+
+    /// Current slot of one service.
+    pub fn slot(&self, si: usize) -> Option<(usize, usize)> {
+        self.assignment[si]
+    }
+
+    /// Remaining capacity (None in [`ScoreState::unbounded`] mode).
+    pub fn capacity(&self) -> Option<&CapacityState> {
+        self.capacity.as_ref()
+    }
+
+    /// The problem being scored.
+    pub fn problem(&self) -> &'p Problem<'a> {
+        self.problem
+    }
+
+    /// The constraint index used for incremental penalty pricing.
+    pub fn index(&self) -> &'p ConstraintIndex {
+        self.index
+    }
+
+    /// Consume the state, returning the assignment.
+    pub fn into_assignment(self) -> Vec<Option<(usize, usize)>> {
+        self.assignment
+    }
+
+    /// Full from-scratch rescore (for tests and invariant checks).
+    pub fn rescore(&self) -> f64 {
+        self.problem.objective_value(&self.assignment)
+    }
+
+    /// Number of applied (un-undone) moves — pass to
+    /// [`ScoreState::rollback_to`] to revert everything after this point.
+    pub fn mark(&self) -> usize {
+        self.log.len()
+    }
+
+    /// Undo applied moves until only `mark` of them remain.
+    pub fn rollback_to(&mut self, mark: usize) {
+        while self.log.len() > mark {
+            self.undo();
+        }
+    }
+
+    /// Price a move without committing it. `None` = infeasible (capacity
+    /// or placement rules, in capacity-tracked mode) or degenerate.
+    pub fn delta(&mut self, mv: Move) -> Option<ScoreDelta> {
+        let d = self.apply(mv)?;
+        self.undo();
+        Some(d)
+    }
+
+    /// Apply a move: update assignment, capacity and the cached
+    /// objective; push an undo entry. Returns the priced delta, or
+    /// `None` (state untouched) if the move is infeasible.
+    pub fn apply(&mut self, mv: Move) -> Option<ScoreDelta> {
+        let prev_value = self.value;
+        let (slots, parts) = match mv {
+            Move::Reassign {
+                service: si,
+                flavour: fi,
+                node: ni,
+            } => {
+                if !self.reassign_allowed(si, fi, ni) {
+                    return None;
+                }
+                let old = self.assignment[si];
+                let d = self.shift(si, Some((fi, ni)));
+                (vec![(si, old)], d)
+            }
+            Move::Drop { service: si } => {
+                let old = self.assignment[si];
+                let d = self.shift(si, None);
+                (vec![(si, old)], d)
+            }
+            Move::Swap { a, b } => {
+                if a == b {
+                    return None;
+                }
+                let (Some((fa, na)), Some((fb, nb))) = (self.assignment[a], self.assignment[b])
+                else {
+                    return None;
+                };
+                if na == nb {
+                    // co-located: exchanging nodes changes nothing
+                    (Vec::new(), Parts::default())
+                } else {
+                    if !self.swap_allowed(a, fa, nb, b, fb, na) {
+                        return None;
+                    }
+                    let (old_a, old_b) = (self.assignment[a], self.assignment[b]);
+                    let d1 = self.shift(a, Some((fa, nb)));
+                    let d2 = self.shift(b, Some((fb, na)));
+                    (vec![(a, old_a), (b, old_b)], d1.plus(d2))
+                }
+            }
+        };
+        let total = weighted(self.problem, parts);
+        self.value += total;
+        self.log.push(Undo {
+            slots,
+            value: prev_value,
+        });
+        Some(ScoreDelta {
+            cost: parts.cost,
+            penalty: parts.penalty,
+            dropped: parts.dropped,
+            flavour_rank: parts.flavour_rank,
+            emissions: parts.emissions,
+            total,
+        })
+    }
+
+    /// Revert the most recent applied move. `false` if nothing to undo.
+    pub fn undo(&mut self) -> bool {
+        match self.log.pop() {
+            None => false,
+            Some(u) => {
+                for &(si, old) in u.slots.iter().rev() {
+                    self.set_slot(si, old);
+                }
+                self.value = u.value;
+                true
+            }
+        }
+    }
+
+    /// The best reassignment of `si` over all (flavour, node) pairs:
+    /// minimal delta, earliest candidate on ties (the tie-break every
+    /// pre-refactor scan used). `None` when no candidate is feasible.
+    ///
+    /// This is the inner loop of every construction/repair/rebuild pass,
+    /// so it prices candidates directly: the (invariant) "before" local
+    /// terms are computed once, `si`'s own reservation is freed once for
+    /// the whole scan, and no undo-log traffic is generated.
+    pub fn best_reassign(&mut self, si: usize) -> Option<(usize, usize, ScoreDelta)> {
+        let flavours = self.problem.app.services[si].flavours.len();
+        let nodes = self.problem.infra.nodes.len();
+        let before = local_parts(self.problem, self.index, si, &self.assignment);
+        let original = self.assignment[si];
+        // a service may always trade its current slot for another
+        if let Some(o) = original {
+            self.release(si, o);
+        }
+        let mut best: Option<(usize, usize, Parts, f64)> = None;
+        for fi in 0..flavours {
+            for ni in 0..nodes {
+                if let Some(cap) = &self.capacity {
+                    if !self.problem.placement_ok(si, fi, ni, cap) {
+                        continue;
+                    }
+                }
+                self.assignment[si] = Some((fi, ni));
+                let d = local_parts(self.problem, self.index, si, &self.assignment).minus(before);
+                let total = weighted(self.problem, d);
+                if best.as_ref().map(|&(_, _, _, b)| total < b).unwrap_or(true) {
+                    best = Some((fi, ni, d, total));
+                }
+            }
+        }
+        self.assignment[si] = original;
+        if let Some(o) = original {
+            self.occupy(si, o);
+        }
+        best.map(|(fi, ni, parts, total)| {
+            (
+                fi,
+                ni,
+                ScoreDelta {
+                    cost: parts.cost,
+                    penalty: parts.penalty,
+                    dropped: parts.dropped,
+                    flavour_rank: parts.flavour_rank,
+                    emissions: parts.emissions,
+                    total,
+                },
+            )
+        })
+    }
+
+    // --- internals ----------------------------------------------------
+
+    /// Single-slot change with exact before/after local pricing.
+    /// Feasibility must already be established.
+    fn shift(&mut self, si: usize, new: Option<(usize, usize)>) -> Parts {
+        let before = local_parts(self.problem, self.index, si, &self.assignment);
+        self.set_slot(si, new);
+        let after = local_parts(self.problem, self.index, si, &self.assignment);
+        after.minus(before)
+    }
+
+    /// Low-level slot write with capacity bookkeeping (no scoring).
+    fn set_slot(&mut self, si: usize, new: Option<(usize, usize)>) {
+        if let Some(old) = self.assignment[si] {
+            self.release(si, old);
+        }
+        self.assignment[si] = new;
+        if let Some(n) = new {
+            self.occupy(si, n);
+        }
+    }
+
+    fn occupy(&mut self, si: usize, (fi, ni): (usize, usize)) {
+        if let Some(cap) = &mut self.capacity {
+            let req = &self.problem.app.services[si].flavours[fi].requirements;
+            cap.take(ni, req.cpu, req.ram_gb, req.storage_gb);
+        }
+    }
+
+    fn release(&mut self, si: usize, (fi, ni): (usize, usize)) {
+        if let Some(cap) = &mut self.capacity {
+            let req = &self.problem.app.services[si].flavours[fi].requirements;
+            cap.give(ni, req.cpu, req.ram_gb, req.storage_gb);
+        }
+    }
+
+    /// Hard feasibility of reassigning `si`, evaluated with `si`'s own
+    /// reservation freed (a service may always trade its current slot
+    /// for another on the same node). Always true in unbounded mode.
+    fn reassign_allowed(&mut self, si: usize, fi: usize, ni: usize) -> bool {
+        if self.capacity.is_none() {
+            return true;
+        }
+        let old = self.assignment[si];
+        if let Some(o) = old {
+            self.release(si, o);
+        }
+        let ok = self
+            .problem
+            .placement_ok(si, fi, ni, self.capacity.as_ref().expect("checked above"));
+        if let Some(o) = old {
+            self.occupy(si, o);
+        }
+        ok
+    }
+
+    /// Hard feasibility of a swap (`a` -> `a_node`, `b` -> `b_node`,
+    /// distinct nodes), with both current reservations freed.
+    fn swap_allowed(
+        &mut self,
+        a: usize,
+        fa: usize,
+        a_node: usize,
+        b: usize,
+        fb: usize,
+        b_node: usize,
+    ) -> bool {
+        if self.capacity.is_none() {
+            return true;
+        }
+        let (old_a, old_b) = (
+            self.assignment[a].expect("swap endpoints placed"),
+            self.assignment[b].expect("swap endpoints placed"),
+        );
+        self.release(a, old_a);
+        self.release(b, old_b);
+        let cap = self.capacity.as_ref().expect("checked above");
+        // target nodes are distinct, so the two checks are independent
+        let ok = self.problem.placement_ok(a, fa, a_node, cap)
+            && self.problem.placement_ok(b, fb, b_node, cap);
+        self.occupy(a, old_a);
+        self.occupy(b, old_b);
+        ok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::problem::Objective;
+    use crate::util::Rng;
+
+    fn random_setup(
+        seed: u64,
+        emissions_weight: f64,
+    ) -> (
+        crate::model::Application,
+        crate::model::Infrastructure,
+        Vec<crate::constraints::Constraint>,
+        Objective,
+    ) {
+        let mut rng = Rng::new(seed);
+        let app = crate::simulate::random_application(&mut rng, 10);
+        let infra = crate::simulate::random_infrastructure(&mut rng, 5);
+        let backend = crate::runtime::NativeBackend;
+        let mut constraints = crate::constraints::ConstraintGenerator::new(&backend)
+            .with_config(crate::constraints::GeneratorConfig {
+                alpha: 0.6,
+                use_prolog: false,
+            })
+            .generate(&app, &infra)
+            .unwrap()
+            .constraints;
+        for (i, c) in constraints.iter_mut().enumerate() {
+            c.weight = 0.1 + 0.05 * (i % 10) as f64;
+        }
+        let objective = Objective {
+            emissions_weight,
+            ..Objective::default()
+        };
+        (app, infra, constraints, objective)
+    }
+
+    fn random_move(rng: &mut Rng, services: usize, flavours: &[usize], nodes: usize) -> Move {
+        match rng.below(4) {
+            0 => Move::Drop {
+                service: rng.below(services),
+            },
+            1 => Move::Swap {
+                a: rng.below(services),
+                b: rng.below(services),
+            },
+            _ => {
+                let si = rng.below(services);
+                Move::Reassign {
+                    service: si,
+                    flavour: rng.below(flavours[si]),
+                    node: rng.below(nodes),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tracked_objective_matches_full_rescore_over_move_sequences() {
+        for emissions_weight in [0.0, 1.0] {
+            let (app, infra, constraints, objective) = random_setup(0xDE17A, emissions_weight);
+            let problem = Problem {
+                app: &app,
+                infra: &infra,
+                constraints: &constraints,
+                objective,
+            };
+            let index = problem.constraint_index();
+            let flavours: Vec<usize> = app.services.iter().map(|s| s.flavours.len()).collect();
+            let mut state =
+                ScoreState::new(&problem, &index, vec![None; app.services.len()]);
+            let mut rng = Rng::new(0x5EED);
+            let mut applied = 0;
+            for _ in 0..400 {
+                let mv = random_move(&mut rng, app.services.len(), &flavours, infra.nodes.len());
+                if state.apply(mv).is_some() {
+                    applied += 1;
+                }
+                assert!(
+                    (state.objective() - state.rescore()).abs() < 1e-9,
+                    "tracked {} vs rescore {} after {applied} moves (ew {emissions_weight})",
+                    state.objective(),
+                    state.rescore()
+                );
+            }
+            assert!(applied > 50, "too few feasible moves applied: {applied}");
+        }
+    }
+
+    #[test]
+    fn undo_restores_assignment_capacity_and_value() {
+        let (app, infra, constraints, objective) = random_setup(0xACE, 1.0);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective,
+        };
+        let index = problem.constraint_index();
+        let flavours: Vec<usize> = app.services.iter().map(|s| s.flavours.len()).collect();
+        let mut state = ScoreState::new(&problem, &index, vec![None; app.services.len()]);
+        let mut rng = Rng::new(0xB0B);
+        // build up some occupancy first
+        for _ in 0..40 {
+            let mv = random_move(&mut rng, app.services.len(), &flavours, infra.nodes.len());
+            state.apply(mv);
+        }
+        let snapshot_assignment = state.assignment().to_vec();
+        let snapshot_capacity = state.capacity().unwrap().remaining.clone();
+        let snapshot_value = state.objective();
+        let mark = state.mark();
+        for _ in 0..60 {
+            let mv = random_move(&mut rng, app.services.len(), &flavours, infra.nodes.len());
+            state.apply(mv);
+        }
+        state.rollback_to(mark);
+        assert_eq!(state.assignment(), &snapshot_assignment[..]);
+        assert_eq!(state.objective(), snapshot_value);
+        for (got, want) in state
+            .capacity()
+            .unwrap()
+            .remaining
+            .iter()
+            .zip(&snapshot_capacity)
+        {
+            assert!((got.0 - want.0).abs() < 1e-9);
+            assert!((got.1 - want.1).abs() < 1e-9);
+            assert!((got.2 - want.2).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn capacity_infeasible_moves_are_rejected_and_leave_state_untouched() {
+        let (app, infra, _, objective) = random_setup(0xCAFE, 0.0);
+        // shrink every node so almost nothing fits
+        let mut tiny = infra.clone();
+        for n in &mut tiny.nodes {
+            n.capabilities.cpu = 0.01;
+            n.capabilities.ram_gb = 0.01;
+        }
+        let problem = Problem {
+            app: &app,
+            infra: &tiny,
+            constraints: &[],
+            objective,
+        };
+        let index = problem.constraint_index();
+        let mut state = ScoreState::new(&problem, &index, vec![None; app.services.len()]);
+        let before = state.objective();
+        assert!(state
+            .apply(Move::Reassign {
+                service: 0,
+                flavour: 0,
+                node: 0
+            })
+            .is_none());
+        assert_eq!(state.objective(), before);
+        assert!(state.assignment().iter().all(|s| s.is_none()));
+        assert!(!state.undo(), "rejected move must not leave an undo entry");
+    }
+
+    #[test]
+    fn swap_delta_equals_rescore_difference() {
+        let (app, infra, constraints, objective) = random_setup(0x51AB, 1.0);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective,
+        };
+        let index = problem.constraint_index();
+        // place everything somewhere feasible first
+        let mut state = ScoreState::new(&problem, &index, vec![None; app.services.len()]);
+        for si in 0..app.services.len() {
+            if let Some((fi, ni, _)) = state.best_reassign(si) {
+                state.apply(Move::Reassign {
+                    service: si,
+                    flavour: fi,
+                    node: ni,
+                });
+            }
+        }
+        let mut rng = Rng::new(3);
+        let mut checked = 0;
+        for _ in 0..100 {
+            let a = rng.below(app.services.len());
+            let b = rng.below(app.services.len());
+            let before = state.rescore();
+            if let Some(d) = state.apply(Move::Swap { a, b }) {
+                let after = state.rescore();
+                assert!(
+                    ((after - before) - d.total).abs() < 1e-9,
+                    "swap delta {} vs rescore diff {}",
+                    d.total,
+                    after - before
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 0, "no feasible swaps exercised");
+    }
+}

@@ -2,7 +2,7 @@
 //! constraint-violation accounting for a plan — the measurement side of
 //! the end-to-end experiments.
 
-use super::problem::Problem;
+use super::problem::{Problem, CAPACITY_EPS};
 use crate::model::DeploymentPlan;
 use crate::Result;
 
@@ -38,7 +38,12 @@ pub fn check_feasible(problem: &Problem, plan: &DeploymentPlan) -> Result<()> {
     }
     for (ni, (cpu, ram, sto)) in used.iter().enumerate() {
         let cap = &problem.infra.nodes[ni].capabilities;
-        if *cpu > cap.cpu + 1e-6 || *ram > cap.ram_gb + 1e-6 || *sto > cap.storage_gb + 1e-6 {
+        // same CAPACITY_EPS the solvers' fits() uses: verification can
+        // never reject a plan the solvers considered constructible
+        if *cpu > cap.cpu + CAPACITY_EPS
+            || *ram > cap.ram_gb + CAPACITY_EPS
+            || *sto > cap.storage_gb + CAPACITY_EPS
+        {
             return Err(crate::Error::Infeasible(format!(
                 "capacity exceeded on node '{}' (cpu {cpu:.2}/{:.2}, ram {ram:.2}/{:.2}, \
                  storage {sto:.2}/{:.2})",
@@ -58,6 +63,13 @@ pub fn check_feasible(problem: &Problem, plan: &DeploymentPlan) -> Result<()> {
 }
 
 /// Evaluate a plan against a problem (its app/infra/constraints).
+///
+/// The assignment is parsed once and reused for every metric; violation
+/// accounting is a single pass over the resolved constraint index (the
+/// pre-perf-pass version rebuilt a one-constraint sub-problem per
+/// constraint). [`PlanMetrics`] values are identical to the old path:
+/// the index's total penalty equals `soft_penalty` (tested invariant)
+/// and a constraint counts as violated iff its contribution is positive.
 pub fn evaluate(problem: &Problem, plan: &DeploymentPlan) -> Result<PlanMetrics> {
     let assignment = problem.to_assignment(plan)?;
     let emissions_g = problem.emissions(&assignment);
@@ -68,22 +80,8 @@ pub fn evaluate(problem: &Problem, plan: &DeploymentPlan) -> Result<PlanMetrics>
             cost += req.cpu * problem.infra.nodes[*ni].profile.cost_per_cpu_hour;
         }
     }
-    // count violations constraint-by-constraint (the aggregate weight via
-    // soft_penalty, the count via a per-constraint re-check)
-    let violation_weight = problem.soft_penalty(&assignment);
-    let mut violations = 0;
-    for c in problem.constraints {
-        let single = [c.clone()];
-        let sub = Problem {
-            app: problem.app,
-            infra: problem.infra,
-            constraints: &single,
-            objective: problem.objective,
-        };
-        if sub.soft_penalty(&assignment) > 0.0 {
-            violations += 1;
-        }
-    }
+    let (violation_weight, violations) =
+        problem.constraint_index().violation_summary(&assignment);
     Ok(PlanMetrics {
         emissions_g,
         cost,

@@ -7,10 +7,13 @@
 //! feasible slot exists or every slot is worse than the drop penalty.
 //!
 //! Local search: first-improvement over single-service moves (flavour
-//! and/or node change) and pairwise swaps, iterated to a fixed point
-//! (bounded rounds). Move evaluation is incremental where possible.
+//! and/or node change and drops), iterated to a fixed point (bounded
+//! rounds). All move pricing routes through the delta-evaluation core
+//! ([`ScoreState`]): every candidate is O(touched constraints), never a
+//! full objective rescan.
 
-use super::problem::{CapacityState, Problem, Scheduler};
+use super::delta::{Move, ScoreState};
+use super::problem::{Problem, Scheduler};
 use crate::model::DeploymentPlan;
 use crate::{Error, Result};
 
@@ -33,14 +36,8 @@ impl Scheduler for GreedyScheduler {
 
     fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
         let n_services = problem.app.services.len();
-        let n_nodes = problem.infra.nodes.len();
-        let mut assignment: Vec<Option<(usize, usize)>> = vec![None; n_services];
-        let mut capacity = CapacityState::new(problem.infra);
-        // Incremental move evaluation: changing one service's slot changes
-        // the global objective by exactly the delta of its local objective
-        // (tested invariant) — O(#touching constraints) per candidate
-        // instead of O(|services| + |constraints|).
         let index = problem.constraint_index();
+        let mut state = ScoreState::new(problem, &index, vec![None; n_services]);
 
         // --- construction ------------------------------------------------
         let mut order: Vec<usize> = (0..n_services).collect();
@@ -52,31 +49,19 @@ impl Scheduler for GreedyScheduler {
 
         for &si in &order {
             let svc = &problem.app.services[si];
-            // local objective of the "dropped" state (the current one)
-            let dropped_local = problem.local_objective(&index, si, &assignment);
-            let mut best: Option<(usize, usize, f64)> = None;
-            for fi in 0..svc.flavours.len() {
-                for ni in 0..n_nodes {
-                    if !problem.placement_ok(si, fi, ni, &capacity) {
+            match state.best_reassign(si) {
+                Some((fi, ni, d)) => {
+                    // optional services may be better dropped (a negative
+                    // or zero delta from the dropped state means placing
+                    // is at least as good)
+                    if !svc.must_deploy && d.total > 0.0 {
                         continue;
                     }
-                    assignment[si] = Some((fi, ni));
-                    let local = problem.local_objective(&index, si, &assignment);
-                    assignment[si] = None;
-                    if best.map(|(_, _, v)| local < v).unwrap_or(true) {
-                        best = Some((fi, ni, local));
-                    }
-                }
-            }
-            match best {
-                Some((fi, ni, placed_local)) => {
-                    // optional services may be better dropped
-                    if !svc.must_deploy && dropped_local < placed_local {
-                        continue;
-                    }
-                    let req = &svc.flavours[fi].requirements;
-                    capacity.take(ni, req.cpu, req.ram_gb, req.storage_gb);
-                    assignment[si] = Some((fi, ni));
+                    state.apply(Move::Reassign {
+                        service: si,
+                        flavour: fi,
+                        node: ni,
+                    });
                 }
                 None if svc.must_deploy => {
                     return Err(Error::Infeasible(format!(
@@ -93,44 +78,34 @@ impl Scheduler for GreedyScheduler {
             let mut improved = false;
             for si in 0..n_services {
                 let svc = &problem.app.services[si];
-                let original = assignment[si];
-                // free its capacity for re-evaluation
-                if let Some((fi, ni)) = original {
-                    let req = &svc.flavours[fi].requirements;
-                    capacity.give(ni, req.cpu, req.ram_gb, req.storage_gb);
-                }
-                let original_local = problem.local_objective(&index, si, &assignment);
-                let mut best = original;
-                let mut best_local = original_local;
-                // candidate: drop (optional only)
-                if !svc.must_deploy {
-                    assignment[si] = None;
-                    let v = problem.local_objective(&index, si, &assignment);
-                    if v < best_local - 1e-12 {
-                        best_local = v;
-                        best = None;
-                    }
-                }
-                for fi in 0..svc.flavours.len() {
-                    for ni in 0..problem.infra.nodes.len() {
-                        if !problem.placement_ok(si, fi, ni, &capacity) {
-                            continue;
-                        }
-                        assignment[si] = Some((fi, ni));
-                        let v = problem.local_objective(&index, si, &assignment);
-                        if v < best_local - 1e-12 {
-                            best_local = v;
-                            best = Some((fi, ni));
+                // best single-service move: drop (optional only) vs the
+                // best reassignment; each must beat the incumbent (and
+                // the other) by more than the acceptance epsilon
+                let mut best: Option<(Move, f64)> = None;
+                if !svc.must_deploy && state.slot(si).is_some() {
+                    if let Some(d) = state.delta(Move::Drop { service: si }) {
+                        if d.total < -1e-12 {
+                            best = Some((Move::Drop { service: si }, d.total));
                         }
                     }
                 }
-                assignment[si] = best;
-                if let Some((fi, ni)) = best {
-                    let req = &svc.flavours[fi].requirements;
-                    capacity.take(ni, req.cpu, req.ram_gb, req.storage_gb);
+                if let Some((fi, ni, d)) = state.best_reassign(si) {
+                    let threshold = best.map(|(_, v)| v).unwrap_or(0.0) - 1e-12;
+                    if d.total < threshold {
+                        best = Some((
+                            Move::Reassign {
+                                service: si,
+                                flavour: fi,
+                                node: ni,
+                            },
+                            d.total,
+                        ));
+                    }
                 }
-                if best != original {
-                    improved = true;
+                if let Some((mv, _)) = best {
+                    if state.apply(mv).is_some() {
+                        improved = true;
+                    }
                 }
             }
             if !improved {
@@ -138,7 +113,7 @@ impl Scheduler for GreedyScheduler {
             }
         }
 
-        Ok(problem.to_plan(&assignment))
+        Ok(problem.to_plan(state.assignment()))
     }
 }
 

@@ -1,0 +1,706 @@
+//! Large-neighbourhood local search on top of the delta-evaluation move
+//! core: the solvers that scale past the exact branch-and-bound ceiling
+//! while beating plain greedy quality.
+//!
+//! Three layers, all driven by [`ScoreState`] moves and a deterministic
+//! [`crate::util::Rng`] seed:
+//!
+//! * [`anneal`] — a simulated-annealing improver over random
+//!   reassign/swap/drop moves with a geometric temperature schedule and
+//!   best-seen restoration (the result is never worse than the start).
+//! * [`large_neighbourhood`] — destroy-and-rebuild rounds: drop a
+//!   carbon-hot zone, a constraint-violating subset or a random subset,
+//!   rebuild greedily on move deltas, keep the round only if the cached
+//!   objective improved (monotone by construction).
+//! * [`PortfolioScheduler`] — greedy construction → annealing → LNS,
+//!   keeping the best plan; with exact branch-and-bound delegation on
+//!   tiny instances, so small-instance plans stay optimal.
+//!
+//! Budgets are iteration-based (deterministic, bit-reproducible per
+//! seed); an optional wall-clock cap (`max_millis`) exists for
+//! latency-bound production use and is documented as machine-dependent.
+
+use super::delta::{Move, ScoreState};
+use super::greedy::GreedyScheduler;
+use super::problem::{Problem, Scheduler};
+use super::solver::BranchAndBoundScheduler;
+use crate::model::DeploymentPlan;
+use crate::util::Rng;
+use crate::Result;
+use std::time::Instant;
+
+/// What an improver pass did.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ImproverStats {
+    /// Objective at entry.
+    pub start: f64,
+    /// Objective at exit (`<= start`).
+    pub end: f64,
+    /// Moves (annealing) or rounds (LNS) proposed.
+    pub proposed: usize,
+    /// Moves/rounds accepted.
+    pub accepted: usize,
+}
+
+impl ImproverStats {
+    /// Objective reduction achieved (`>= 0`).
+    pub fn gain(&self) -> f64 {
+        self.start - self.end
+    }
+}
+
+/// Simulated-annealing knobs.
+#[derive(Debug, Clone)]
+pub struct AnnealConfig {
+    /// RNG seed (deterministic proposals + acceptance).
+    pub seed: u64,
+    /// Proposal budget.
+    pub iterations: usize,
+    /// Start temperature (objective units; deltas here are O(0.01..10)).
+    pub init_temp: f64,
+    /// End temperature of the geometric schedule.
+    pub final_temp: f64,
+    /// Wall-clock cap in ms (0 = none). Hitting it makes the outcome
+    /// machine-dependent; leave at 0 for reproducible runs.
+    pub max_millis: u64,
+    /// Restrict proposals to these services (`None` = all). The
+    /// incremental re-planner passes its dirty set so clean-zone
+    /// placements stay byte-for-byte carried.
+    pub services: Option<Vec<usize>>,
+}
+
+impl Default for AnnealConfig {
+    fn default() -> Self {
+        AnnealConfig {
+            seed: 0x5EED,
+            iterations: 20_000,
+            init_temp: 2.0,
+            final_temp: 1e-3,
+            max_millis: 0,
+            services: None,
+        }
+    }
+}
+
+/// Run simulated annealing on `state`, in place. The undo log is used to
+/// restore the best assignment seen, so `state` exits at its best-seen
+/// objective — never worse than it entered.
+pub fn anneal(state: &mut ScoreState, cfg: &AnnealConfig) -> ImproverStats {
+    let problem = state.problem();
+    let n_services = problem.app.services.len();
+    let n_nodes = problem.infra.nodes.len();
+    let candidates: Vec<usize> = match &cfg.services {
+        Some(set) => set.clone(),
+        None => (0..n_services).collect(),
+    };
+    let start = state.objective();
+    let mut stats = ImproverStats {
+        start,
+        end: start,
+        proposed: 0,
+        accepted: 0,
+    };
+    if candidates.is_empty() || n_nodes == 0 || cfg.iterations == 0 {
+        return stats;
+    }
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut best_value = state.objective();
+    // the undo log only grows across accepted moves (rejections net out),
+    // so a log mark uniquely identifies the best-seen state
+    let mut best_mark = state.mark();
+    let clock = Instant::now();
+    let steps = cfg.iterations.max(2);
+    let ratio = (cfg.final_temp / cfg.init_temp).max(1e-12);
+
+    for k in 0..steps {
+        if cfg.max_millis > 0 && k % 256 == 0 && clock.elapsed().as_millis() as u64 > cfg.max_millis
+        {
+            break;
+        }
+        let temp = cfg.init_temp * ratio.powf(k as f64 / (steps - 1) as f64);
+        let si = *rng.pick(&candidates);
+        let mv = match rng.below(10) {
+            7 | 8 => Move::Swap {
+                a: si,
+                b: *rng.pick(&candidates),
+            },
+            9 if !problem.app.services[si].must_deploy && state.slot(si).is_some() => {
+                Move::Drop { service: si }
+            }
+            _ => Move::Reassign {
+                service: si,
+                flavour: rng.below(problem.app.services[si].flavours.len()),
+                node: rng.below(n_nodes),
+            },
+        };
+        stats.proposed += 1;
+        let Some(d) = state.apply(mv) else { continue };
+        let accept = d.total <= 0.0 || rng.f64() < (-d.total / temp.max(1e-12)).exp();
+        if !accept {
+            state.undo();
+            continue;
+        }
+        stats.accepted += 1;
+        if state.objective() < best_value - 1e-12 {
+            best_value = state.objective();
+            best_mark = state.mark();
+        }
+    }
+    state.rollback_to(best_mark);
+    stats.end = state.objective();
+    stats
+}
+
+/// Large-neighbourhood-search knobs.
+#[derive(Debug, Clone)]
+pub struct LnsConfig {
+    /// RNG seed (destroy-set sampling).
+    pub seed: u64,
+    /// Destroy-and-rebuild rounds.
+    pub rounds: usize,
+    /// Fraction of placed services destroyed per round.
+    pub destroy_fraction: f64,
+    /// Hard cap on the destroy-set size.
+    pub max_destroy: usize,
+    /// Wall-clock cap in ms (0 = none; see [`AnnealConfig::max_millis`]).
+    pub max_millis: u64,
+}
+
+impl Default for LnsConfig {
+    fn default() -> Self {
+        LnsConfig {
+            seed: 0x1A5,
+            rounds: 12,
+            destroy_fraction: 0.2,
+            max_destroy: 64,
+            max_millis: 0,
+        }
+    }
+}
+
+/// Run destroy-and-rebuild large-neighbourhood search on `state`, in
+/// place. Rounds cycle through three destroy lenses — the carbon-hottest
+/// zone, the constraint-violating subset, a random subset — rebuild
+/// greedily on move deltas, and are rolled back unless the objective
+/// strictly improved, so the pass is monotone.
+pub fn large_neighbourhood(state: &mut ScoreState, cfg: &LnsConfig) -> ImproverStats {
+    let problem = state.problem();
+    let start = state.objective();
+    let mut stats = ImproverStats {
+        start,
+        end: start,
+        proposed: 0,
+        accepted: 0,
+    };
+    if problem.infra.nodes.is_empty() || cfg.rounds == 0 {
+        return stats;
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let clock = Instant::now();
+
+    for round in 0..cfg.rounds {
+        if cfg.max_millis > 0 && clock.elapsed().as_millis() as u64 > cfg.max_millis {
+            break;
+        }
+        let placed: Vec<usize> = (0..problem.app.services.len())
+            .filter(|&si| state.slot(si).is_some())
+            .collect();
+        if placed.len() < 2 {
+            break;
+        }
+        let cap = ((placed.len() as f64 * cfg.destroy_fraction).ceil() as usize)
+            .clamp(2, cfg.max_destroy);
+        let mut victims = match round % 3 {
+            0 => hot_zone_victims(state, &placed, &mut rng),
+            1 => state.index().violated_services(state.assignment()),
+            _ => Vec::new(),
+        };
+        victims.retain(|&si| state.slot(si).is_some());
+        if victims.is_empty() {
+            victims = placed.clone();
+        }
+        rng.shuffle(&mut victims);
+        victims.truncate(cap);
+
+        stats.proposed += 1;
+        let mark = state.mark();
+        let before = state.objective();
+        for &si in &victims {
+            state.apply(Move::Drop { service: si });
+        }
+        if !rebuild(state, &mut victims) {
+            state.rollback_to(mark); // a mandatory service lost its slot
+            continue;
+        }
+        if state.objective() < before - 1e-12 {
+            stats.accepted += 1;
+        } else {
+            state.rollback_to(mark);
+        }
+    }
+    stats.end = state.objective();
+    stats
+}
+
+/// Services placed in the carbon-hottest zone (one of the top three, to
+/// vary across rounds). Zone = node `zone` label, falling back to the
+/// node's region.
+fn hot_zone_victims(state: &ScoreState, placed: &[usize], rng: &mut Rng) -> Vec<usize> {
+    let problem = state.problem();
+    let zone_of = |ni: usize| -> &str {
+        let n = &problem.infra.nodes[ni];
+        n.zone.as_deref().unwrap_or(n.region.as_str())
+    };
+    // mean carbon per zone that currently hosts services
+    let mut zones: Vec<(&str, f64, usize)> = Vec::new();
+    for &si in placed {
+        let (_, ni) = state.slot(si).expect("placed");
+        let z = zone_of(ni);
+        let ci = problem.infra.nodes[ni].carbon();
+        match zones.iter_mut().find(|(name, _, _)| *name == z) {
+            Some((_, sum, count)) => {
+                *sum += ci;
+                *count += 1;
+            }
+            None => zones.push((z, ci, 1)),
+        }
+    }
+    if zones.is_empty() {
+        return Vec::new();
+    }
+    zones.sort_by(|a, b| {
+        let ma = a.1 / a.2 as f64;
+        let mb = b.1 / b.2 as f64;
+        mb.partial_cmp(&ma).unwrap().then(a.0.cmp(b.0))
+    });
+    let pick = rng.below(zones.len().min(3));
+    let target = zones[pick].0;
+    placed
+        .iter()
+        .copied()
+        .filter(|&si| {
+            let (_, ni) = state.slot(si).expect("placed");
+            zone_of(ni) == target
+        })
+        .collect()
+}
+
+/// Greedy re-insertion of destroyed services: mandatory first, biggest
+/// demand first, each at its best-delta slot. Optional services come
+/// back only if placing them beats staying dropped. Returns `false` if a
+/// mandatory service found no feasible slot (caller rolls back).
+fn rebuild(state: &mut ScoreState, destroyed: &mut [usize]) -> bool {
+    let problem = state.problem();
+    let demand = |si: usize| -> f64 {
+        problem.app.services[si]
+            .flavours
+            .iter()
+            .map(|f| f.requirements.cpu + f.requirements.ram_gb / 4.0)
+            .fold(0.0, f64::max)
+    };
+    destroyed.sort_by(|&a, &b| {
+        let (sa, sb) = (&problem.app.services[a], &problem.app.services[b]);
+        sb.must_deploy
+            .cmp(&sa.must_deploy)
+            .then_with(|| demand(b).partial_cmp(&demand(a)).unwrap())
+            .then(a.cmp(&b))
+    });
+    for &si in destroyed.iter() {
+        let must = problem.app.services[si].must_deploy;
+        match state.best_reassign(si) {
+            Some((fi, ni, d)) if must || d.total < 0.0 => {
+                state.apply(Move::Reassign {
+                    service: si,
+                    flavour: fi,
+                    node: ni,
+                });
+            }
+            Some(_) => {} // optional, better left dropped
+            None if must => return false,
+            None => {}
+        }
+    }
+    true
+}
+
+/// Warm-started improvement used by the incremental re-planner: anneal
+/// over `services` only (the dirty set), leaving every other placement
+/// untouched. Returns the objective gain (`>= 0`).
+pub fn improve_subset(
+    problem: &Problem,
+    assignment: &mut Vec<Option<(usize, usize)>>,
+    services: Vec<usize>,
+    seed: u64,
+    iterations: usize,
+) -> f64 {
+    if services.is_empty() || iterations == 0 {
+        return 0.0;
+    }
+    let index = problem.constraint_index();
+    let mut state = ScoreState::new(problem, &index, std::mem::take(assignment));
+    let stats = anneal(
+        &mut state,
+        &AnnealConfig {
+            seed,
+            iterations,
+            services: Some(services),
+            ..AnnealConfig::default()
+        },
+    );
+    *assignment = state.into_assignment();
+    stats.gain()
+}
+
+/// Shared tiny-instance gate: at or below the branch-and-bound comfort
+/// zone the local-search solvers delegate to the exact solver, so small
+/// plans are optimal (and match the continuum exact-delegate parity
+/// fixtures).
+fn exact_instance(problem: &Problem, services: usize, nodes: usize) -> bool {
+    problem.app.services.len() <= services && problem.infra.nodes.len() <= nodes
+}
+
+/// Greedy seed plan as a [`ScoreState`] (shared solver preamble).
+fn seeded_state<'p, 'a>(
+    problem: &'p Problem<'a>,
+    index: &'p super::problem::ConstraintIndex,
+    max_rounds: usize,
+) -> Result<ScoreState<'p, 'a>> {
+    let plan = GreedyScheduler { max_rounds }.schedule(problem)?;
+    let assignment = problem.to_assignment(&plan)?;
+    Ok(ScoreState::new(problem, index, assignment))
+}
+
+/// Greedy + simulated annealing.
+#[derive(Debug, Clone)]
+pub struct AnnealScheduler {
+    /// Deterministic seed.
+    pub seed: u64,
+    /// Proposal budget.
+    pub iterations: usize,
+    /// Local-search rounds of the greedy seed construction.
+    pub greedy_rounds: usize,
+    /// Exact-delegate thresholds (services, nodes).
+    pub exact_services: usize,
+    /// See [`Self::exact_services`].
+    pub exact_nodes: usize,
+}
+
+impl AnnealScheduler {
+    /// Default budgets with an explicit seed.
+    pub fn seeded(seed: u64) -> Self {
+        AnnealScheduler {
+            seed,
+            iterations: 20_000,
+            greedy_rounds: 20,
+            exact_services: 8,
+            exact_nodes: 6,
+        }
+    }
+}
+
+impl Default for AnnealScheduler {
+    fn default() -> Self {
+        AnnealScheduler::seeded(0x5EED)
+    }
+}
+
+impl Scheduler for AnnealScheduler {
+    fn name(&self) -> &'static str {
+        "simulated-annealing"
+    }
+
+    fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+        if exact_instance(problem, self.exact_services, self.exact_nodes) {
+            return BranchAndBoundScheduler::default().schedule(problem);
+        }
+        let index = problem.constraint_index();
+        let mut state = seeded_state(problem, &index, self.greedy_rounds)?;
+        anneal(
+            &mut state,
+            &AnnealConfig {
+                seed: self.seed,
+                iterations: self.iterations,
+                ..AnnealConfig::default()
+            },
+        );
+        Ok(problem.to_plan(state.assignment()))
+    }
+}
+
+/// Greedy + large-neighbourhood search.
+#[derive(Debug, Clone)]
+pub struct LnsScheduler {
+    /// Deterministic seed.
+    pub seed: u64,
+    /// Destroy-and-rebuild rounds.
+    pub rounds: usize,
+    /// Local-search rounds of the greedy seed construction (the sharded
+    /// scheduler threads its `max_rounds` through here for large zones).
+    pub greedy_rounds: usize,
+    /// Exact-delegate thresholds (services, nodes).
+    pub exact_services: usize,
+    /// See [`Self::exact_services`].
+    pub exact_nodes: usize,
+}
+
+impl LnsScheduler {
+    /// Default budgets with an explicit seed.
+    pub fn seeded(seed: u64) -> Self {
+        LnsScheduler {
+            seed,
+            rounds: 12,
+            greedy_rounds: 20,
+            exact_services: 8,
+            exact_nodes: 6,
+        }
+    }
+}
+
+impl Default for LnsScheduler {
+    fn default() -> Self {
+        LnsScheduler::seeded(0x1A5)
+    }
+}
+
+impl Scheduler for LnsScheduler {
+    fn name(&self) -> &'static str {
+        "large-neighbourhood"
+    }
+
+    fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+        if exact_instance(problem, self.exact_services, self.exact_nodes) {
+            return BranchAndBoundScheduler::default().schedule(problem);
+        }
+        let index = problem.constraint_index();
+        let mut state = seeded_state(problem, &index, self.greedy_rounds)?;
+        large_neighbourhood(
+            &mut state,
+            &LnsConfig {
+                seed: self.seed,
+                rounds: self.rounds,
+                ..LnsConfig::default()
+            },
+        );
+        Ok(problem.to_plan(state.assignment()))
+    }
+}
+
+/// The production solver ladder in one scheduler: exact on tiny
+/// instances, otherwise greedy construction → simulated annealing →
+/// large-neighbourhood search, keeping the best plan found. Both
+/// improvers are monotone on their entry state, so the portfolio is
+/// never worse than greedy (property-tested).
+#[derive(Debug, Clone)]
+pub struct PortfolioScheduler {
+    /// Deterministic seed (annealing and LNS derive their own streams).
+    pub seed: u64,
+    /// Annealing proposal budget.
+    pub anneal_iterations: usize,
+    /// LNS destroy-and-rebuild rounds.
+    pub lns_rounds: usize,
+    /// Local-search rounds of the greedy seed construction.
+    pub greedy_rounds: usize,
+    /// Exact-delegate thresholds (services, nodes).
+    pub exact_services: usize,
+    /// See [`Self::exact_services`].
+    pub exact_nodes: usize,
+}
+
+impl PortfolioScheduler {
+    /// Default budgets with an explicit seed.
+    pub fn seeded(seed: u64) -> Self {
+        PortfolioScheduler {
+            seed,
+            anneal_iterations: 20_000,
+            lns_rounds: 12,
+            greedy_rounds: 20,
+            exact_services: 8,
+            exact_nodes: 6,
+        }
+    }
+}
+
+impl Default for PortfolioScheduler {
+    fn default() -> Self {
+        PortfolioScheduler::seeded(0xF0110)
+    }
+}
+
+impl Scheduler for PortfolioScheduler {
+    fn name(&self) -> &'static str {
+        "portfolio"
+    }
+
+    fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+        if exact_instance(problem, self.exact_services, self.exact_nodes) {
+            return BranchAndBoundScheduler::default().schedule(problem);
+        }
+        let index = problem.constraint_index();
+        let mut state = seeded_state(problem, &index, self.greedy_rounds)?;
+        anneal(
+            &mut state,
+            &AnnealConfig {
+                seed: self.seed,
+                iterations: self.anneal_iterations,
+                ..AnnealConfig::default()
+            },
+        );
+        large_neighbourhood(
+            &mut state,
+            &LnsConfig {
+                seed: self.seed ^ 0x9E37_79B9_7F4A_7C15,
+                rounds: self.lns_rounds,
+                ..LnsConfig::default()
+            },
+        );
+        Ok(problem.to_plan(state.assignment()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::problem::Objective;
+    use crate::util::Rng;
+
+    fn fleet_problem(
+        seed: u64,
+    ) -> (
+        crate::model::Application,
+        crate::model::Infrastructure,
+        Vec<crate::constraints::Constraint>,
+    ) {
+        let spec = crate::simulate::TopologySpec::new(crate::simulate::Topology::GeoRegions, 24, 50)
+            .with_zones(4)
+            .with_seed(seed);
+        let (app, infra) = crate::simulate::topology::generate(&spec);
+        let backend = crate::runtime::NativeBackend;
+        let mut constraints = crate::constraints::ConstraintGenerator::new(&backend)
+            .with_config(crate::constraints::GeneratorConfig {
+                alpha: 0.7,
+                use_prolog: false,
+            })
+            .generate(&app, &infra)
+            .unwrap()
+            .constraints;
+        for (i, c) in constraints.iter_mut().enumerate() {
+            c.weight = 0.1 + 0.05 * (i % 10) as f64;
+        }
+        (app, infra, constraints)
+    }
+
+    #[test]
+    fn improvers_never_worsen_and_stay_feasible() {
+        let (app, infra, constraints) = fleet_problem(0xF1EE7);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let greedy = GreedyScheduler::default().schedule(&problem).unwrap();
+        let g = problem.objective_value(&problem.to_assignment(&greedy).unwrap());
+        for solver in [
+            Box::new(AnnealScheduler::seeded(1)) as Box<dyn Scheduler>,
+            Box::new(LnsScheduler::seeded(2)),
+            Box::new(PortfolioScheduler::seeded(3)),
+        ] {
+            let plan = solver.schedule(&problem).unwrap();
+            crate::scheduler::check_feasible(&problem, &plan)
+                .unwrap_or_else(|e| panic!("{}: infeasible: {e}", solver.name()));
+            let v = problem.objective_value(&problem.to_assignment(&plan).unwrap());
+            assert!(
+                v <= g + 1e-9,
+                "{} objective {v} worse than greedy {g}",
+                solver.name()
+            );
+        }
+    }
+
+    #[test]
+    fn solvers_are_deterministic_per_seed() {
+        let (app, infra, constraints) = fleet_problem(0xD0D0);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let a = PortfolioScheduler::seeded(42).schedule(&problem).unwrap();
+        let b = PortfolioScheduler::seeded(42).schedule(&problem).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn improve_subset_only_touches_the_candidate_services() {
+        let (app, infra, constraints) = fleet_problem(0x5B5E7);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let plan = GreedyScheduler::default().schedule(&problem).unwrap();
+        let mut assignment = problem.to_assignment(&plan).unwrap();
+        let before = assignment.clone();
+        let candidates: Vec<usize> = (0..app.services.len() / 4).collect();
+        let gain = improve_subset(&problem, &mut assignment, candidates.clone(), 7, 4000);
+        assert!(gain >= 0.0);
+        for (si, slot) in assignment.iter().enumerate() {
+            if !candidates.contains(&si) {
+                assert_eq!(*slot, before[si], "service {si} outside the set moved");
+            }
+        }
+    }
+
+    #[test]
+    fn anneal_restores_best_seen() {
+        let (app, infra, constraints) = fleet_problem(0xBE57);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let plan = GreedyScheduler::default().schedule(&problem).unwrap();
+        let index = problem.constraint_index();
+        let mut state = ScoreState::new(&problem, &index, problem.to_assignment(&plan).unwrap());
+        let start = state.objective();
+        let stats = anneal(
+            &mut state,
+            &AnnealConfig {
+                seed: 11,
+                iterations: 5_000,
+                ..AnnealConfig::default()
+            },
+        );
+        assert!(stats.end <= start + 1e-9);
+        assert!((state.objective() - stats.end).abs() < 1e-12);
+        assert!((state.objective() - state.rescore()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lns_is_monotone_per_round() {
+        let mut rng = Rng::new(0x10_05);
+        let (app, infra, constraints) = fleet_problem(rng.next_u64());
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let plan = GreedyScheduler::default().schedule(&problem).unwrap();
+        let index = problem.constraint_index();
+        let mut state = ScoreState::new(&problem, &index, problem.to_assignment(&plan).unwrap());
+        let start = state.objective();
+        let stats = large_neighbourhood(&mut state, &LnsConfig::default());
+        assert!(stats.end <= start + 1e-9);
+        // mandatory services all still placed
+        for (si, svc) in app.services.iter().enumerate() {
+            if svc.must_deploy {
+                assert!(state.slot(si).is_some(), "mandatory {} dropped", svc.id);
+            }
+        }
+    }
+}

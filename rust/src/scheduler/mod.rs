@@ -3,26 +3,84 @@
 //! out of its own evaluation. Our end-to-end driver needs one, so we
 //! build it: a deployment problem model, an exact branch-and-bound solver
 //! for small instances, a greedy + local-search solver for large ones,
-//! and the carbon-blind baselines the benchmarks compare against.
+//! stochastic improvers (simulated annealing, large-neighbourhood
+//! search) that scale past both, and the carbon-blind baselines the
+//! benchmarks compare against.
 //!
 //! The green constraints are *soft*: the scheduler pays a weighted
 //! penalty for violating them (exactly how [36] integrates them), while
 //! resource capacities, placement compatibility and mustDeploy are hard.
+//!
+//! All solvers share one incremental scoring engine — the
+//! delta-evaluation move core in [`delta`] ([`ScoreState`] + [`Move`]),
+//! which prices any single move in O(touched constraints). See
+//! `docs/solvers.md` for the solver ladder (greedy → anneal → LNS →
+//! portfolio → exact) and when to use which.
 //!
 //! [`temporal`] adds the *when* dimension on top of any spatial solver:
 //! deferrable components are re-scored over (node, start-slot) pairs
 //! against a carbon forecast (see [`crate::forecast`]).
 
 pub mod baselines;
+pub mod delta;
 pub mod eval;
 pub mod greedy;
+pub mod localsearch;
 pub mod problem;
 pub mod solver;
 pub mod temporal;
 
 pub use baselines::{CostOnlyScheduler, GreenOracleScheduler, RandomScheduler};
+pub use delta::{Move, ScoreDelta, ScoreState};
 pub use eval::{check_feasible, evaluate, PlanMetrics};
 pub use greedy::GreedyScheduler;
-pub use problem::{CapacityState, Objective, Problem, Scheduler};
+pub use localsearch::{
+    AnnealConfig, AnnealScheduler, ImproverStats, LnsConfig, LnsScheduler, PortfolioScheduler,
+};
+pub use problem::{CapacityState, Objective, Problem, Scheduler, CAPACITY_EPS};
 pub use solver::BranchAndBoundScheduler;
 pub use temporal::{TemporalConfig, TemporalPlan, TemporalScheduler};
+
+/// Every solver name [`solver_by_name`] accepts, in ladder order.
+pub const SOLVER_NAMES: &[&str] = &[
+    "greedy",
+    "exact",
+    "anneal",
+    "lns",
+    "portfolio",
+    "cost-only",
+    "random",
+    "oracle",
+];
+
+/// The solver registry: resolve a CLI/config solver name to a boxed
+/// [`Scheduler`]. `seed` feeds the stochastic solvers (`anneal`, `lns`,
+/// `portfolio`, `random`); deterministic solvers ignore it. Returns
+/// `None` for unknown names (see [`SOLVER_NAMES`]).
+pub fn solver_by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
+    Some(match name {
+        "greedy" => Box::new(GreedyScheduler::default()),
+        "exact" => Box::new(BranchAndBoundScheduler::default()),
+        "anneal" => Box::new(AnnealScheduler::seeded(seed)),
+        "lns" => Box::new(LnsScheduler::seeded(seed)),
+        "portfolio" => Box::new(PortfolioScheduler::seeded(seed)),
+        "cost-only" => Box::new(CostOnlyScheduler),
+        "random" => Box::new(RandomScheduler { seed }),
+        "oracle" => Box::new(GreenOracleScheduler),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod registry_tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_listed_name() {
+        for name in SOLVER_NAMES {
+            let solver = solver_by_name(name, 7).unwrap_or_else(|| panic!("unknown {name}"));
+            assert!(!solver.name().is_empty());
+        }
+        assert!(solver_by_name("no-such-solver", 7).is_none());
+    }
+}

@@ -5,6 +5,14 @@ use crate::constraints::{Constraint, ConstraintKind};
 use crate::model::{Application, DeploymentPlan, Infrastructure, Placement};
 use crate::Result;
 
+/// The one capacity tolerance shared by *scoring* (`CapacityState::fits`,
+/// the solvers' hard-feasibility gate) and *verification*
+/// (`eval::check_feasible`). A single constant guarantees the two can
+/// never disagree about whether a plan overflows a node — before it was
+/// deduplicated, feasibility used `1e-6` while the solvers used `1e-9`,
+/// leaving a band where a "feasible" plan could be unconstructible.
+pub const CAPACITY_EPS: f64 = 1e-6;
+
 /// Objective weights. The scheduler minimises
 /// `cost_weight·cost + soft_weight·Σ violated constraint weights
 ///  + drop_penalty·#dropped + flavour_weight·Σ flavour rank
@@ -80,7 +88,7 @@ impl CapacityState {
 
     pub fn fits(&self, node: usize, cpu: f64, ram: f64, storage: f64) -> bool {
         let (c, r, s) = self.remaining[node];
-        cpu <= c + 1e-9 && ram <= r + 1e-9 && storage <= s + 1e-9
+        cpu <= c + CAPACITY_EPS && ram <= r + CAPACITY_EPS && storage <= s + CAPACITY_EPS
     }
 
     pub fn take(&mut self, node: usize, cpu: f64, ram: f64, storage: f64) {
@@ -174,7 +182,7 @@ impl<'a> Problem<'a> {
         penalty
     }
 
-    fn find(
+    pub(crate) fn find(
         &self,
         assignment: &[Option<(usize, usize)>],
         service: &str,
@@ -486,6 +494,46 @@ impl ConstraintIndex {
             .map(|idx| self.violation(idx, assignment))
             .sum()
     }
+
+    /// `(summed violated weight, violated count)` in one pass over the
+    /// resolved constraints — the evaluator's accounting, without the
+    /// per-constraint sub-problem rebuilds it used before the perf pass.
+    pub fn violation_summary(&self, assignment: &[Option<(usize, usize)>]) -> (f64, usize) {
+        let mut weight = 0.0;
+        let mut count = 0usize;
+        for idx in 0..self.resolved.len() {
+            let v = self.violation(idx, assignment);
+            if v > 0.0 {
+                weight += v;
+                count += 1;
+            }
+        }
+        (weight, count)
+    }
+
+    /// Services participating in at least one violated constraint
+    /// (sorted, deduplicated) — the large-neighbourhood search destroys
+    /// this set to escape penalty-heavy local optima.
+    pub fn violated_services(&self, assignment: &[Option<(usize, usize)>]) -> Vec<usize> {
+        let mut out = Vec::new();
+        for idx in 0..self.resolved.len() {
+            if self.violation(idx, assignment) <= 0.0 {
+                continue;
+            }
+            match &self.resolved[idx] {
+                ResolvedConstraint::Avoid { service, .. }
+                | ResolvedConstraint::Prefer { service, .. } => out.push(*service),
+                ResolvedConstraint::Affinity { service, other, .. } => {
+                    out.push(*service);
+                    out.push(*other);
+                }
+                ResolvedConstraint::Inert => {}
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
 }
 
 /// Incremental objective evaluation around one service's slot.
@@ -495,59 +543,17 @@ impl<'a> Problem<'a> {
     /// constraints touching `si`. Changing `si`'s slot changes the global
     /// objective by exactly the difference of this quantity (other
     /// services' terms cancel) — the scheduler inner loop relies on it.
+    ///
+    /// Thin wrapper: the single implementation of this algebra lives in
+    /// the delta-evaluation move core ([`super::delta`]), which every
+    /// solver layer now routes through.
     pub fn local_objective(
         &self,
         index: &ConstraintIndex,
         si: usize,
         assignment: &[Option<(usize, usize)>],
     ) -> f64 {
-        let o = &self.objective;
-        let own = match assignment[si] {
-            Some((fi, ni)) => {
-                let req = &self.app.services[si].flavours[fi].requirements;
-                let mut v = o.cost_weight * req.cpu
-                    * self.infra.nodes[ni].profile.cost_per_cpu_hour
-                    + o.flavour_weight * fi as f64;
-                if o.emissions_weight != 0.0 {
-                    if let Some(profile) = self.app.services[si].flavours[fi].energy {
-                        v += o.emissions_weight * profile.kwh * self.infra.nodes[ni].carbon();
-                    }
-                    // communication terms touching si
-                    v += o.emissions_weight * self.comm_emissions_touching(si, assignment);
-                }
-                v
-            }
-            None => o.drop_penalty,
-        };
-        own + o.soft_weight * index.penalty_touching(si, assignment)
-    }
-
-    /// Inter-node communication emissions of links incident to `si`.
-    fn comm_emissions_touching(
-        &self,
-        si: usize,
-        assignment: &[Option<(usize, usize)>],
-    ) -> f64 {
-        let id = &self.app.services[si].id;
-        let mut total = 0.0;
-        for link in &self.app.links {
-            if link.from != *id && link.to != *id {
-                continue;
-            }
-            let from = self.find(assignment, &link.from);
-            let to = self.find(assignment, &link.to);
-            if let (Some((fsi, (fi, ni))), Some((_, (_, nz)))) = (from, to) {
-                if ni != nz {
-                    let flavour = &self.app.services[fsi].flavours[fi].name;
-                    if let Some(kwh) = link.energy_for(flavour) {
-                        let ci = 0.5
-                            * (self.infra.nodes[ni].carbon() + self.infra.nodes[nz].carbon());
-                        total += kwh * ci;
-                    }
-                }
-            }
-        }
-        total
+        super::delta::local_objective(self, index, si, assignment)
     }
 }
 

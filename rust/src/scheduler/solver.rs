@@ -5,10 +5,17 @@
 //! exact terms for decided services; optimistic zero for undecided ones —
 //! admissible because every objective component is non-negative).
 //!
+//! The bound is maintained *incrementally* through the delta-evaluation
+//! core: each branch is one [`ScoreState::apply`] (O(touched
+//! constraints)) and each backtrack one [`ScoreState::undo`], instead of
+//! the full `objective_value` rescan per tree node the pre-refactor
+//! solver paid.
+//!
 //! Used for ground-truthing the greedy solver in tests and for small
 //! production instances (≤ ~10 services × ~8 nodes).
 
-use super::problem::{CapacityState, Problem, Scheduler};
+use super::delta::{Move, ScoreState};
+use super::problem::{Problem, Scheduler};
 use crate::model::DeploymentPlan;
 use crate::{Error, Result};
 
@@ -48,9 +55,9 @@ impl Scheduler for BranchAndBoundScheduler {
             explored: 0,
             max_nodes: self.max_nodes,
         };
-        let mut assignment: Vec<Option<(usize, usize)>> = vec![None; n];
-        let mut capacity = CapacityState::new(problem.infra);
-        search.dfs(0, &mut assignment, &mut capacity);
+        let index = problem.constraint_index();
+        let mut state = ScoreState::new(problem, &index, vec![None; n]);
+        search.dfs(0, &mut state);
         match search.best {
             Some(best) => Ok(problem.to_plan(&best)),
             None => Err(Error::Infeasible(
@@ -61,31 +68,28 @@ impl Scheduler for BranchAndBoundScheduler {
 }
 
 impl<'p, 'a> Search<'p, 'a> {
-    fn dfs(
-        &mut self,
-        si: usize,
-        assignment: &mut Vec<Option<(usize, usize)>>,
-        capacity: &mut CapacityState,
-    ) {
+    fn dfs(&mut self, si: usize, state: &mut ScoreState) {
         if self.explored >= self.max_nodes {
             return;
         }
         self.explored += 1;
 
-        if si == assignment.len() {
-            let value = self.problem.objective_value(assignment);
+        let n = self.problem.app.services.len();
+        if si == n {
+            let value = state.objective();
             if value < self.best_value {
                 self.best_value = value;
-                self.best = Some(assignment.clone());
+                self.best = Some(state.assignment().to_vec());
             }
             return;
         }
 
-        // Lower bound: objective of the partial assignment (undecided
-        // services contribute nothing; all terms are non-negative).
-        let bound = self.problem.objective_value(assignment)
-            - self.problem.objective.drop_penalty
-                * assignment[si..].iter().filter(|s| s.is_none()).count() as f64;
+        // Lower bound: the delta-tracked objective of the partial
+        // assignment, minus the drop penalties of still-undecided
+        // services (they are scored as dropped but may yet be placed;
+        // every other term is non-negative, so this is admissible).
+        let undecided = state.assignment()[si..].iter().filter(|s| s.is_none()).count();
+        let bound = state.objective() - self.problem.objective.drop_penalty * undecided as f64;
         if bound >= self.best_value {
             return;
         }
@@ -93,20 +97,24 @@ impl<'p, 'a> Search<'p, 'a> {
         let svc = &self.problem.app.services[si];
         for fi in 0..svc.flavours.len() {
             for ni in 0..self.problem.infra.nodes.len() {
-                if !self.problem.placement_ok(si, fi, ni, capacity) {
+                // apply checks capacity + placement feasibility itself
+                if state
+                    .apply(Move::Reassign {
+                        service: si,
+                        flavour: fi,
+                        node: ni,
+                    })
+                    .is_none()
+                {
                     continue;
                 }
-                let req = svc.flavours[fi].requirements;
-                capacity.take(ni, req.cpu, req.ram_gb, req.storage_gb);
-                assignment[si] = Some((fi, ni));
-                self.dfs(si + 1, assignment, capacity);
-                assignment[si] = None;
-                capacity.give(ni, req.cpu, req.ram_gb, req.storage_gb);
+                self.dfs(si + 1, state);
+                state.undo();
             }
         }
         if !svc.must_deploy {
-            assignment[si] = None;
-            self.dfs(si + 1, assignment, capacity);
+            // the slot is already None (scored as dropped): descend as-is
+            self.dfs(si + 1, state);
         }
     }
 }
@@ -117,7 +125,7 @@ mod tests {
     use crate::constraints::{Constraint, ConstraintKind};
     use crate::model::{Application, EnergyProfile, Flavour, Infrastructure, Node, Service};
     use crate::scheduler::greedy::GreedyScheduler;
-    use crate::scheduler::problem::Objective;
+    use crate::scheduler::problem::{CapacityState, Objective};
     use crate::util::Rng;
 
     fn random_instance(rng: &mut Rng, services: usize, nodes: usize) -> (Application, Infrastructure) {

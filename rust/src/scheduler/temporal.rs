@@ -26,6 +26,7 @@
 //! project worse than an (inadmissible) slot-0 start, so no dominance
 //! claim is made there.
 
+use super::delta::{Move, ScoreState};
 use super::problem::{CapacityState, Problem, Scheduler};
 use crate::forecast::CarbonForecaster;
 use crate::model::DeploymentPlan;
@@ -116,7 +117,12 @@ impl<'a> TemporalScheduler<'a> {
         let slots = self.config.horizon_slots.max(1);
         let n_services = problem.app.services.len();
         let n_nodes = problem.infra.nodes.len();
-        let mut assignment = problem.to_assignment(plan)?;
+        // Spatial pricing (soft-constraint penalty + cost deltas) routes
+        // through the shared move core in scoring-only mode: hard
+        // feasibility here is *per-slot* (tracked below), which the flat
+        // capacity view cannot represent.
+        let index = problem.constraint_index();
+        let mut spatial = ScoreState::unbounded(problem, &index, problem.to_assignment(plan)?);
 
         // --- forecast CI per (node, slot) ------------------------------
         // fall back to the node's enriched (observed) carbon when the
@@ -154,7 +160,7 @@ impl<'a> TemporalScheduler<'a> {
         let mut capacity: Vec<CapacityState> =
             (0..slots).map(|_| CapacityState::new(problem.infra)).collect();
         for si in 0..n_services {
-            if let Some((fi, ni)) = assignment[si] {
+            if let Some((fi, ni)) = spatial.slot(si) {
                 let req = &problem.app.services[si].flavours[fi].requirements;
                 match windows[si] {
                     Some(_) => capacity[slot_of[si]].take(ni, req.cpu, req.ram_gb, req.storage_gb),
@@ -167,7 +173,6 @@ impl<'a> TemporalScheduler<'a> {
             }
         }
 
-        let index = problem.constraint_index();
         let svc_idx: HashMap<&str, usize> = problem
             .app
             .services
@@ -181,10 +186,11 @@ impl<'a> TemporalScheduler<'a> {
         if slots > 1 {
             // biggest energy first: the services whose slot matters most
             let mut order: Vec<usize> = (0..n_services)
-                .filter(|&si| windows[si].is_some() && assignment[si].is_some())
+                .filter(|&si| windows[si].is_some() && spatial.slot(si).is_some())
                 .collect();
             let kwh_of = |si: usize| -> f64 {
-                assignment[si]
+                spatial
+                    .slot(si)
                     .and_then(|(fi, _)| problem.app.services[si].flavours[fi].energy)
                     .map(|p| p.kwh)
                     .unwrap_or(0.0)
@@ -199,17 +205,20 @@ impl<'a> TemporalScheduler<'a> {
             for _ in 0..self.config.max_rounds.max(1) {
                 let mut improved = false;
                 for &si in &order {
-                    let Some((fi, ni)) = assignment[si] else { continue };
+                    let Some((fi, ni)) = spatial.slot(si) else { continue };
                     let Some((lo, hi)) = windows[si] else { continue };
                     let req = problem.app.services[si].flavours[fi].requirements;
                     // free the current reservation while evaluating
                     capacity[slot_of[si]].give(ni, req.cpu, req.ram_gb, req.storage_gb);
 
-                    let cur_proj =
-                        self.projected_local(problem, &svc_idx, &ci, &assignment, &slot_of, si);
-                    let cur_pen = index.penalty_touching(si, &assignment);
-                    let cur_cost =
-                        req.cpu * problem.infra.nodes[ni].profile.cost_per_cpu_hour;
+                    let cur_proj = self.projected_local(
+                        problem,
+                        &svc_idx,
+                        &ci,
+                        spatial.assignment(),
+                        &slot_of,
+                        si,
+                    );
 
                     let mut best: Option<(usize, usize, f64)> = None;
                     for s2 in lo..hi {
@@ -220,21 +229,31 @@ impl<'a> TemporalScheduler<'a> {
                             if !problem.placement_ok(si, fi, n2, &capacity[s2]) {
                                 continue;
                             }
-                            let old = (assignment[si], slot_of[si]);
-                            assignment[si] = Some((fi, n2));
+                            // the move core prices the spatial side: its
+                            // penalty/cost components must not worsen
+                            let Some(d) = spatial.apply(Move::Reassign {
+                                service: si,
+                                flavour: fi,
+                                node: n2,
+                            }) else {
+                                continue;
+                            };
+                            let old_slot = slot_of[si];
                             slot_of[si] = s2;
                             let proj = self.projected_local(
-                                problem, &svc_idx, &ci, &assignment, &slot_of, si,
+                                problem,
+                                &svc_idx,
+                                &ci,
+                                spatial.assignment(),
+                                &slot_of,
+                                si,
                             );
-                            let pen = index.penalty_touching(si, &assignment);
-                            let cost = req.cpu
-                                * problem.infra.nodes[n2].profile.cost_per_cpu_hour;
-                            assignment[si] = old.0;
-                            slot_of[si] = old.1;
+                            slot_of[si] = old_slot;
+                            spatial.undo();
                             // strictly greener, never worse spatially
                             if proj < cur_proj - 1e-9
-                                && pen <= cur_pen + 1e-12
-                                && cost <= cur_cost + 1e-12
+                                && d.penalty <= 1e-12
+                                && d.cost <= 1e-12
                                 && best.map(|(_, _, p)| proj < p).unwrap_or(true)
                             {
                                 best = Some((n2, s2, proj));
@@ -243,7 +262,11 @@ impl<'a> TemporalScheduler<'a> {
                     }
                     match best {
                         Some((n2, s2, _)) => {
-                            assignment[si] = Some((fi, n2));
+                            spatial.apply(Move::Reassign {
+                                service: si,
+                                flavour: fi,
+                                node: n2,
+                            });
                             slot_of[si] = s2;
                             capacity[s2].take(n2, req.cpu, req.ram_gb, req.storage_gb);
                             moves += 1;
@@ -260,13 +283,14 @@ impl<'a> TemporalScheduler<'a> {
             }
         }
 
-        let projected_g = self.projected_total(problem, &svc_idx, &ci, &assignment, &slot_of);
+        let projected_g =
+            self.projected_total(problem, &svc_idx, &ci, spatial.assignment(), &slot_of);
         let start_slots = (0..n_services)
-            .filter(|&si| windows[si].is_some() && assignment[si].is_some())
+            .filter(|&si| windows[si].is_some() && spatial.slot(si).is_some())
             .map(|si| (problem.app.services[si].id.clone(), slot_of[si]))
             .collect();
         Ok(TemporalPlan {
-            plan: problem.to_plan(&assignment),
+            plan: problem.to_plan(spatial.assignment()),
             start_slots,
             projected_g,
             moves,

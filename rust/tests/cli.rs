@@ -152,6 +152,20 @@ fn schedule_emits_plan_and_metrics() {
 }
 
 #[test]
+fn schedule_accepts_local_search_solvers() {
+    for solver in ["anneal", "lns", "portfolio"] {
+        let (stdout, stderr, ok) =
+            greengen(&["schedule", "--scenario", "1", "--solver", solver, "--seed", "5"]);
+        assert!(ok, "{solver}: {stderr}");
+        assert!(stdout.contains(&format!("solver={solver}")), "{stdout}");
+        assert!(stdout.contains("deploy frontend"), "{stdout}");
+    }
+    let (_, stderr, ok) = greengen(&["schedule", "--solver", "quantum"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown solver"), "{stderr}");
+}
+
+#[test]
 fn timeshift_recommends_window() {
     let (stdout, _, ok) = greengen(&["timeshift"]);
     assert!(ok);

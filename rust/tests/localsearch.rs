@@ -1,0 +1,241 @@
+//! Integration tests for the delta-evaluation move core and the
+//! local-search solver ladder: exactness of delta-tracked scoring under
+//! random move sequences, never-worse-than-greedy guarantees for
+//! anneal/LNS/portfolio on continuum fleets, and exact-optimum parity on
+//! the small instances branch-and-bound can ground-truth.
+
+use greengen::constraints::{Constraint, ConstraintGenerator, GeneratorConfig};
+use greengen::model::{Application, Infrastructure};
+use greengen::runtime::NativeBackend;
+use greengen::scheduler::{
+    check_feasible, solver_by_name, AnnealScheduler, BranchAndBoundScheduler, GreedyScheduler,
+    LnsScheduler, Move, Objective, PortfolioScheduler, Problem, Scheduler, ScoreState,
+};
+use greengen::simulate;
+use greengen::util::proptest::check;
+use greengen::util::Rng;
+
+/// Random instance with generated-and-weighted green constraints (the
+/// same construction `rust/tests/continuum.rs` uses).
+fn instance(
+    rng: &mut Rng,
+    services: usize,
+    nodes: usize,
+) -> (Application, Infrastructure, Vec<Constraint>) {
+    let app = simulate::random_application(rng, services);
+    let infra = simulate::random_infrastructure(rng, nodes);
+    let backend = NativeBackend;
+    let mut constraints = ConstraintGenerator::new(&backend)
+        .with_config(GeneratorConfig {
+            alpha: 0.7,
+            use_prolog: false,
+        })
+        .generate(&app, &infra)
+        .unwrap()
+        .constraints;
+    for (i, c) in constraints.iter_mut().enumerate() {
+        c.weight = 0.1 + 0.05 * (i % 10) as f64;
+    }
+    (app, infra, constraints)
+}
+
+/// Topology fleet with constraints, at the acceptance scale (50+
+/// services).
+fn fleet(
+    topo: simulate::Topology,
+    seed: u64,
+) -> (Application, Infrastructure, Vec<Constraint>) {
+    let spec = simulate::TopologySpec::new(topo, 24, 56)
+        .with_zones(4)
+        .with_seed(seed);
+    let (app, infra) = simulate::topology::generate(&spec);
+    let backend = NativeBackend;
+    let mut constraints = ConstraintGenerator::new(&backend)
+        .with_config(GeneratorConfig {
+            alpha: 0.7,
+            use_prolog: false,
+        })
+        .generate(&app, &infra)
+        .unwrap()
+        .constraints;
+    for (i, c) in constraints.iter_mut().enumerate() {
+        c.weight = 0.1 + 0.05 * (i % 10) as f64;
+    }
+    (app, infra, constraints)
+}
+
+fn objective_of(problem: &Problem, plan: &greengen::model::DeploymentPlan) -> f64 {
+    problem.objective_value(&problem.to_assignment(plan).unwrap())
+}
+
+#[test]
+fn property_delta_tracked_objective_equals_full_rescore() {
+    check("ScoreState delta == full rescore", 24, |rng| {
+        let services = 6 + rng.below(10); // 6..=15
+        let nodes = 3 + rng.below(5); // 3..=7
+        let (app, infra, constraints) = instance(rng, services, nodes);
+        let emissions_weight = if rng.chance(0.5) { 1.0 } else { 0.0 };
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective {
+                emissions_weight,
+                ..Objective::default()
+            },
+        };
+        let index = problem.constraint_index();
+        let mut state = ScoreState::new(&problem, &index, vec![None; services]);
+        for _ in 0..120 {
+            let mv = match rng.below(4) {
+                0 => Move::Drop {
+                    service: rng.below(services),
+                },
+                1 => Move::Swap {
+                    a: rng.below(services),
+                    b: rng.below(services),
+                },
+                _ => {
+                    let si = rng.below(services);
+                    Move::Reassign {
+                        service: si,
+                        flavour: rng.below(app.services[si].flavours.len()),
+                        node: rng.below(nodes),
+                    }
+                }
+            };
+            // occasionally exercise undo as well
+            if rng.chance(0.2) {
+                if state.delta(mv).is_some() {
+                    // delta must be side-effect free
+                    assert!((state.objective() - state.rescore()).abs() < 1e-9);
+                }
+            } else {
+                state.apply(mv);
+            }
+            assert!(
+                (state.objective() - state.rescore()).abs() < 1e-9,
+                "tracked {} vs rescore {}",
+                state.objective(),
+                state.rescore()
+            );
+        }
+    });
+}
+
+#[test]
+fn property_portfolio_never_worse_than_greedy() {
+    check("portfolio <= greedy", 10, |rng| {
+        let services = 12 + rng.below(20); // 12..=31
+        let nodes = 5 + rng.below(8); // 5..=12
+        let (app, infra, constraints) = instance(rng, services, nodes);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let greedy = GreedyScheduler::default().schedule(&problem);
+        let portfolio = PortfolioScheduler::seeded(rng.next_u64()).schedule(&problem);
+        match (greedy, portfolio) {
+            (Ok(g), Ok(p)) => {
+                check_feasible(&problem, &p).unwrap();
+                let vg = objective_of(&problem, &g);
+                let vp = objective_of(&problem, &p);
+                assert!(vp <= vg + 1e-9, "portfolio {vp} worse than greedy {vg}");
+            }
+            (Err(_), _) => {} // knife-edge instance: nothing to compare
+            (Ok(_), Err(e)) => panic!("greedy feasible but portfolio failed: {e}"),
+        }
+    });
+}
+
+#[test]
+fn ladder_feasible_and_never_worse_than_greedy_on_every_topology() {
+    for topo in simulate::Topology::ALL {
+        let (app, infra, constraints) = fleet(topo, 0x1ADDE2);
+        assert!(app.services.len() >= 50);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let greedy = GreedyScheduler::default().schedule(&problem).unwrap();
+        let vg = objective_of(&problem, &greedy);
+        for name in ["anneal", "lns", "portfolio"] {
+            let solver = solver_by_name(name, 0xBEEF).unwrap();
+            let plan = solver.schedule(&problem).unwrap();
+            check_feasible(&problem, &plan)
+                .unwrap_or_else(|e| panic!("{}/{name}: infeasible: {e}", topo.name()));
+            let v = objective_of(&problem, &plan);
+            assert!(
+                v <= vg + 1e-9,
+                "{}/{name}: objective {v} worse than greedy {vg}",
+                topo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn local_search_solvers_match_branch_and_bound_on_small_parity_instances() {
+    // mirrors the exact-delegate parity fixtures in rust/tests/continuum.rs
+    let mut rng = Rng::new(0x7A217);
+    for _ in 0..5 {
+        let (app, infra, constraints) = instance(&mut rng, 5, 4);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let exact = BranchAndBoundScheduler::default().schedule(&problem);
+        for solver in [
+            Box::new(AnnealScheduler::seeded(1)) as Box<dyn Scheduler>,
+            Box::new(LnsScheduler::seeded(2)),
+            Box::new(PortfolioScheduler::seeded(3)),
+        ] {
+            match (&exact, solver.schedule(&problem)) {
+                (Ok(e), Ok(p)) => {
+                    // tiny instances delegate to the very same exact
+                    // solver: identical plans, identical optimum
+                    assert_eq!(*e, p, "{} diverged from BnB", solver.name());
+                    let ve = objective_of(&problem, e);
+                    let vp = objective_of(&problem, &p);
+                    assert!((ve - vp).abs() < 1e-9);
+                }
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!(
+                    "feasibility disagreement: exact {:?} vs {} {:?}",
+                    a.is_ok(),
+                    solver.name(),
+                    b.is_ok()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn bnb_still_optimal_after_delta_refactor() {
+    // greedy can never beat the exact solver if the incremental lower
+    // bound is admissible and leaf values are tracked exactly
+    let mut rng = Rng::new(0xB0B0);
+    for _ in 0..8 {
+        let (app, infra, constraints) = instance(&mut rng, 4, 3);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let exact = BranchAndBoundScheduler::default().schedule(&problem);
+        let greedy = GreedyScheduler::default().schedule(&problem);
+        if let (Ok(e), Ok(g)) = (exact, greedy) {
+            let ve = objective_of(&problem, &e);
+            let vg = objective_of(&problem, &g);
+            assert!(ve <= vg + 1e-9, "exact {ve} worse than greedy {vg}");
+        }
+    }
+}
