@@ -64,6 +64,113 @@ pub struct GenerationResult {
     pub mean_ci: f64,
 }
 
+/// The flattened analytics inputs of one epoch: 𝒜 as the row vector
+/// `e[(s,f)]`, ℐ as the node vector `c[n]`, the R×N compatibility mask,
+/// and the communication candidates priced at the infrastructure-average
+/// carbon intensity. Shared by the full pass
+/// ([`ConstraintGenerator::generate`]) and the incremental one
+/// ([`super::incremental::IncrementalGenerator`]), which fingerprints
+/// these vectors to find what changed.
+pub(crate) struct FlatInputs {
+    pub rows: Vec<(String, String)>,
+    pub e: Vec<f32>,
+    pub nodes: Vec<String>,
+    pub c: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub comm: Vec<CommCandidate>,
+    pub mean_ci: f64,
+}
+
+/// Flatten the enriched descriptions (steps 1–2 of the epoch).
+pub(crate) fn flatten(app: &Application, infra: &Infrastructure) -> FlatInputs {
+    let app_rows = app.rows();
+    let mut rows = Vec::with_capacity(app_rows.len());
+    let mut e = Vec::with_capacity(app_rows.len());
+    for (svc, fl) in &app_rows {
+        rows.push((svc.id.clone(), fl.name.clone()));
+        e.push(fl.energy.map(|p| p.kwh).unwrap_or(0.0) as f32);
+    }
+    let nodes: Vec<String> = infra.nodes.iter().map(|n| n.id.clone()).collect();
+    let c: Vec<f32> = infra.nodes.iter().map(|n| n.carbon() as f32).collect();
+
+    let mut mask = vec![0.0f32; rows.len() * nodes.len()];
+    for (row, (svc, _)) in app_rows.iter().enumerate() {
+        for (j, node) in infra.nodes.iter().enumerate() {
+            if node.placement_compatible(&svc.requirements) {
+                mask[row * nodes.len() + j] = 1.0;
+            }
+        }
+    }
+
+    let cis: Vec<f64> = infra.nodes.iter().map(|n| n.carbon()).collect();
+    let mean_ci = crate::util::mean(&cis);
+    let mut comm = Vec::new();
+    for link in &app.links {
+        for (flavour, kwh) in &link.energy {
+            comm.push(CommCandidate {
+                from: link.from.clone(),
+                flavour: flavour.clone(),
+                to: link.to.clone(),
+                kwh: *kwh,
+                em: *kwh * mean_ci,
+            });
+        }
+    }
+    FlatInputs {
+        rows,
+        e,
+        nodes,
+        c,
+        mask,
+        comm,
+        mean_ci,
+    }
+}
+
+/// The τ distribution (Eq. 5): per-(service, flavour) *observed* impacts
+/// (profile × the average CI its executions saw, approximated by the
+/// infrastructure mean) plus every communication emission — "all services
+/// and communications". The incremental generator maintains exactly this
+/// population in an updatable [`crate::util::QuantilePool`].
+pub(crate) fn observed_pool(e: &[f32], comm: &[CommCandidate], mean_ci: f64) -> Vec<f32> {
+    let mut pool: Vec<f32> = e
+        .iter()
+        .filter(|&&x| x > 0.0)
+        .map(|&x| x * mean_ci as f32)
+        .collect();
+    pool.extend(comm.iter().map(|c| c.em as f32));
+    pool
+}
+
+/// Evaluate every module of the library over `ctx`, returning one
+/// constraint list **per module** (in library order — callers flatten for
+/// the classic combined list). The Prolog path consults + asserts every
+/// module into one shared database before querying, exactly as the full
+/// epoch always has.
+pub(crate) fn run_library(
+    library: &ConstraintLibrary,
+    use_prolog: bool,
+    ctx: &GenerationContext,
+) -> Result<Vec<Vec<Constraint>>> {
+    let mut per_module = Vec::with_capacity(library.modules().len());
+    if use_prolog {
+        let mut db = Database::new();
+        db.assert_fact(Term::compound("threshold", vec![Term::Num(ctx.tau)]))?;
+        for module in library.modules() {
+            db.consult(module.prolog_rules())?;
+            module.assert_facts(ctx, &mut db)?;
+        }
+        for module in library.modules() {
+            per_module.push(module.generate_prolog(ctx, &db)?);
+        }
+    } else {
+        for module in library.modules() {
+            per_module.push(module.generate_direct(ctx)?);
+        }
+    }
+    Ok(per_module)
+}
+
 /// The Constraint Generator.
 pub struct ConstraintGenerator<'b> {
     backend: &'b dyn AnalyticsBackend,
@@ -96,55 +203,16 @@ impl<'b> ConstraintGenerator<'b> {
         app: &Application,
         infra: &Infrastructure,
     ) -> Result<GenerationResult> {
-        // --- 1. flatten the descriptions --------------------------------
-        let app_rows = app.rows();
-        let mut rows = Vec::with_capacity(app_rows.len());
-        let mut e = Vec::with_capacity(app_rows.len());
-        for (svc, fl) in &app_rows {
-            rows.push((svc.id.clone(), fl.name.clone()));
-            e.push(fl.energy.map(|p| p.kwh).unwrap_or(0.0) as f32);
-        }
-        let nodes: Vec<String> = infra.nodes.iter().map(|n| n.id.clone()).collect();
-        let c: Vec<f32> = infra.nodes.iter().map(|n| n.carbon() as f32).collect();
-
-        let mut mask = vec![0.0f32; rows.len() * nodes.len()];
-        for (row, (svc, _)) in app_rows.iter().enumerate() {
-            for (j, node) in infra.nodes.iter().enumerate() {
-                if node.placement_compatible(&svc.requirements) {
-                    mask[row * nodes.len() + j] = 1.0;
-                }
-            }
-        }
-
-        // --- 2. communication candidates ---------------------------------
-        let cis: Vec<f64> = infra.nodes.iter().map(|n| n.carbon()).collect();
-        let mean_ci = crate::util::mean(&cis);
-        let mut comm = Vec::new();
-        for link in &app.links {
-            for (flavour, kwh) in &link.energy {
-                comm.push(CommCandidate {
-                    from: link.from.clone(),
-                    flavour: flavour.clone(),
-                    to: link.to.clone(),
-                    kwh: *kwh,
-                    em: *kwh * mean_ci,
-                });
-            }
-        }
+        // --- 1–2. flatten the descriptions + communication candidates ----
+        let flat = flatten(app, infra);
         // --- τ distribution (Eq. 5): the OBSERVED impacts -----------------
-        // Per-(service, flavour) observed impact (profile × the average CI
-        // its executions saw — approximated by the infrastructure mean)
-        // plus every communication emission. This is the population whose
-        // quantile defines τ; candidates are then compared against it.
-        let mut pool: Vec<f32> =
-            e.iter().filter(|&&x| x > 0.0).map(|&x| x * mean_ci as f32).collect();
-        pool.extend(comm.iter().map(|c| c.em as f32));
+        let pool = observed_pool(&flat.e, &flat.comm, flat.mean_ci);
 
         // --- 3. analytics -------------------------------------------------
         let input = AnalyticsInput {
-            e,
-            c,
-            mask,
+            e: flat.e,
+            c: flat.c,
+            mask: flat.mask,
             pool,
             alpha: self.config.alpha as f32,
         };
@@ -154,39 +222,27 @@ impl<'b> ConstraintGenerator<'b> {
 
         // --- 4. library evaluation ----------------------------------------
         let ctx = GenerationContext {
-            rows: &rows,
-            nodes: &nodes,
+            rows: &flat.rows,
+            nodes: &flat.nodes,
             analytics: &analytics,
-            comm: &comm,
+            comm: &flat.comm,
             tau,
             mask: Some(&input.mask),
         };
-        let mut constraints = Vec::new();
-        if self.config.use_prolog {
-            let mut db = Database::new();
-            db.assert_fact(Term::compound("threshold", vec![Term::Num(tau)]))?;
-            for module in self.library.modules() {
-                db.consult(module.prolog_rules())?;
-                module.assert_facts(&ctx, &mut db)?;
-            }
-            for module in self.library.modules() {
-                constraints.extend(module.generate_prolog(&ctx, &db)?);
-            }
-        } else {
-            for module in self.library.modules() {
-                constraints.extend(module.generate_direct(&ctx)?);
-            }
-        }
+        let constraints = run_library(&self.library, self.config.use_prolog, &ctx)?
+            .into_iter()
+            .flatten()
+            .collect();
 
         Ok(GenerationResult {
             constraints,
             tau,
             gmax,
-            rows,
-            nodes,
-            comm,
+            rows: flat.rows,
+            nodes: flat.nodes,
+            comm: flat.comm,
             analytics,
-            mean_ci,
+            mean_ci: flat.mean_ci,
         })
     }
 }

@@ -1,0 +1,811 @@
+//! Incremental constraint generation: the dirty-set epoch engine behind
+//! `greengen adaptive --incremental` and `greengen generate --incremental`.
+//!
+//! A full generation epoch flattens all of 𝒜/ℐ, rebuilds the R×N impact
+//! tensor, re-pools the τ distribution and re-runs every library module —
+//! O(|services|·|nodes|) plus the Prolog engine, even when one service's
+//! profile moved. [`IncrementalGenerator`] keeps the previous epoch's
+//! flattened inputs, analytics tensor, pooled-quantile structure and
+//! per-row module outputs, fingerprints the new inputs against them
+//! (exact bit comparison — the same idiom as `continuum::replan`'s zone
+//! fingerprints, but with no epsilon so the result is *identical*, not
+//! just close), and recomputes only what changed:
+//!
+//! * a row (service, flavour) is **dirty** when its energy profile, its
+//!   compatibility-mask row, or the carbon intensity of any node it may
+//!   be placed on changed — only dirty rows are re-evaluated by the
+//!   analytics backend ([`crate::runtime::AnalyticsInput::subset_rows`]
+//!   + [`crate::runtime::AnalyticsOutput::scatter_rows`], bit-exact
+//!   because every backend computes row statistics independently per
+//!   row) and the library modules;
+//! * the τ threshold stays a **pooled** quantile (Eq. 5): the pool lives
+//!   in an updatable [`QuantilePool`] multiset, so a changed profile is
+//!   one remove + one insert instead of a full re-sort, and the selected
+//!   τ is bit-identical to the sort-based full pass;
+//! * communication candidates re-price only when a link energy or the
+//!   infrastructure-average CI moved;
+//! * if τ itself moved, every module is re-gated — but over the *cached*
+//!   tensor, with no backend evaluation and no re-pooling;
+//! * structural changes (row/node sets, α, the library, the Prolog
+//!   toggle) and custom constraint modules fall back to a full rebuild
+//!   through the exact same code path as
+//!   [`super::ConstraintGenerator::generate`].
+//!
+//! The contract, property-tested across random perturbation sequences on
+//! all four topology presets (`rust/tests/generation_incremental.rs`):
+//! **full regeneration == incremental regeneration** — same constraints,
+//! same τ, same ranking.
+
+use super::generator::{flatten, observed_pool, run_library, FlatInputs};
+use super::generator::{GenerationResult, GeneratorConfig};
+use super::library::{CommCandidate, ConstraintLibrary, GenerationContext};
+use super::types::{Constraint, ConstraintKind};
+use crate::model::{Application, Infrastructure};
+use crate::runtime::{AnalyticsBackend, AnalyticsInput, AnalyticsOutput};
+use crate::util::QuantilePool;
+use crate::Result;
+use std::collections::HashMap;
+
+/// What one incremental epoch recomputed (reported per epoch by
+/// `greengen adaptive --incremental`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GenStats {
+    /// Rows (service, flavour) in this epoch's instance.
+    pub total_rows: usize,
+    /// Rows whose analytics were re-evaluated this epoch (== `total_rows`
+    /// on a full rebuild).
+    pub dirty_rows: usize,
+    /// Nodes whose carbon intensity changed since the previous epoch.
+    pub dirty_nodes: usize,
+    /// The epoch was a cold start or a structural change and ran the full
+    /// pass.
+    pub full_rebuild: bool,
+    /// The pooled quantile τ moved, so every module was re-gated (over
+    /// the cached tensor — analytics stayed incremental).
+    pub tau_changed: bool,
+    /// Communication candidates were re-priced and the comm-derived
+    /// modules re-evaluated.
+    pub comm_reevaluated: bool,
+}
+
+impl GenStats {
+    /// Rows whose analytics (and, when τ held, module outputs) were
+    /// warm-started from the previous epoch.
+    pub fn reused_rows(&self) -> usize {
+        self.total_rows - self.dirty_rows
+    }
+}
+
+/// Everything carried between epochs.
+struct GenState {
+    alpha_bits: u32,
+    use_prolog: bool,
+    module_names: Vec<&'static str>,
+    rows: Vec<(String, String)>,
+    nodes: Vec<String>,
+    e: Vec<f32>,
+    c: Vec<f32>,
+    mask: Vec<f32>,
+    analytics: AnalyticsOutput,
+    comm: Vec<CommCandidate>,
+    mean_ci: f64,
+    pool: QuantilePool,
+    /// Row r's pool contribution (`None` when `e[r] <= 0`).
+    row_pool: Vec<Option<f32>>,
+    /// Pool contribution of each communication candidate, in `comm` order.
+    comm_pool: Vec<f32>,
+    tau: f64,
+    gmax: f64,
+    /// module -> row -> cached constraints of that row.
+    modules_row: Vec<Vec<Vec<Constraint>>>,
+    /// module -> cached communication-derived constraints.
+    modules_comm: Vec<Vec<Constraint>>,
+}
+
+/// The incremental Constraint Generator. Keep one alive across adaptive
+/// epochs; feed it the same enriched `app`/`infra` a
+/// [`super::ConstraintGenerator`] would see.
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the crate's rpath to
+/// // the bundled libstdc++; the same flow is exercised for real in
+/// // rust/tests/generation_incremental.rs)
+/// use greengen::constraints::{ConstraintLibrary, IncrementalGenerator};
+/// use greengen::runtime::NativeBackend;
+/// use greengen::simulate::{topology, Topology, TopologySpec};
+///
+/// let (app, infra) = topology::generate(&TopologySpec::new(Topology::GeoRegions, 24, 48));
+/// let mut inc = IncrementalGenerator::default();
+/// let library = ConstraintLibrary::default();
+/// let (first, stats) = inc.generate(&NativeBackend, &library, &app, &infra).unwrap();
+/// assert!(stats.full_rebuild); // cold start
+/// let (second, stats) = inc.generate(&NativeBackend, &library, &app, &infra).unwrap();
+/// assert_eq!(stats.dirty_rows, 0); // nothing changed: everything reused
+/// assert_eq!(first.tau, second.tau);
+/// ```
+pub struct IncrementalGenerator {
+    /// Generator knobs (α, Prolog/direct path) — must match the full pass
+    /// being compared against; changing them forces a full rebuild.
+    pub config: GeneratorConfig,
+    state: Option<GenState>,
+}
+
+impl Default for IncrementalGenerator {
+    fn default() -> Self {
+        IncrementalGenerator {
+            config: GeneratorConfig::default(),
+            state: None,
+        }
+    }
+}
+
+/// The built-in modules whose outputs the cache knows how to key by row
+/// or by communication candidate. An unknown (custom) module type makes
+/// every epoch a full rebuild — correct, just not incremental.
+const CACHEABLE_MODULES: [&str; 3] = ["AvoidNode", "Affinity", "PreferNode"];
+
+/// Which cached bucket a constraint belongs to: `Some(row)` for
+/// row-scoped kinds, `None` for communication-scoped ones.
+fn row_of(kind: &ConstraintKind, row_idx: &HashMap<(&str, &str), usize>) -> Option<usize> {
+    match kind {
+        ConstraintKind::AvoidNode {
+            service, flavour, ..
+        }
+        | ConstraintKind::PreferNode {
+            service, flavour, ..
+        } => row_idx.get(&(service.as_str(), flavour.as_str())).copied(),
+        ConstraintKind::Affinity { .. } => None,
+    }
+}
+
+impl IncrementalGenerator {
+    /// Incremental generator with explicit knobs.
+    pub fn new(config: GeneratorConfig) -> Self {
+        IncrementalGenerator {
+            config,
+            state: None,
+        }
+    }
+
+    /// Forget the previous epoch (the next call runs the full pass).
+    pub fn reset(&mut self) {
+        self.state = None;
+    }
+
+    /// Run one generation epoch, recomputing only what changed since the
+    /// previous call. Identical output to
+    /// [`super::ConstraintGenerator::generate`] on the same inputs.
+    ///
+    /// On error the carried state is dropped (a half-updated cache must
+    /// never seed the next epoch), so the next call is a full pass.
+    pub fn generate(
+        &mut self,
+        backend: &dyn AnalyticsBackend,
+        library: &ConstraintLibrary,
+        app: &Application,
+        infra: &Infrastructure,
+    ) -> Result<(GenerationResult, GenStats)> {
+        let result = self.try_generate(backend, library, app, infra);
+        if result.is_err() {
+            self.state = None;
+        }
+        result
+    }
+
+    fn try_generate(
+        &mut self,
+        backend: &dyn AnalyticsBackend,
+        library: &ConstraintLibrary,
+        app: &Application,
+        infra: &Infrastructure,
+    ) -> Result<(GenerationResult, GenStats)> {
+        let flat = flatten(app, infra);
+        let module_names: Vec<&'static str> =
+            library.modules().iter().map(|m| m.type_name()).collect();
+        let cacheable = module_names
+            .iter()
+            .all(|name| CACHEABLE_MODULES.contains(name));
+        let alpha_bits = (self.config.alpha as f32).to_bits();
+
+        let structural = !cacheable
+            || match &self.state {
+                None => true,
+                Some(st) => {
+                    st.rows != flat.rows
+                        || st.nodes != flat.nodes
+                        || st.alpha_bits != alpha_bits
+                        || st.use_prolog != self.config.use_prolog
+                        || st.module_names != module_names
+                        || !same_comm_shape(&st.comm, &flat.comm)
+                }
+            };
+        if structural {
+            return self.full_rebuild(backend, library, flat, module_names, cacheable);
+        }
+        let st = self.state.as_mut().expect("state present when not structural");
+        let n_rows = flat.rows.len();
+        let n_nodes = flat.nodes.len();
+
+        // --- fingerprints: what changed? ------------------------------
+        let changed_nodes: Vec<usize> = (0..n_nodes)
+            .filter(|&j| st.c[j].to_bits() != flat.c[j].to_bits())
+            .collect();
+        let mean_ci_changed = st.mean_ci.to_bits() != flat.mean_ci.to_bits();
+        let kwh_changed = st
+            .comm
+            .iter()
+            .zip(&flat.comm)
+            .any(|(a, b)| a.kwh.to_bits() != b.kwh.to_bits());
+
+        let mut e_changed = vec![false; n_rows];
+        let mut dirty: Vec<usize> = Vec::new();
+        for r in 0..n_rows {
+            e_changed[r] = st.e[r].to_bits() != flat.e[r].to_bits();
+            let row_mask_old = &st.mask[r * n_nodes..(r + 1) * n_nodes];
+            let row_mask_new = &flat.mask[r * n_nodes..(r + 1) * n_nodes];
+            let mask_changed = row_mask_old
+                .iter()
+                .zip(row_mask_new)
+                .any(|(a, b)| a.to_bits() != b.to_bits());
+            let carbon_touches = changed_nodes
+                .iter()
+                .any(|&j| row_mask_new[j] > 0.0);
+            if e_changed[r] || mask_changed || carbon_touches {
+                dirty.push(r);
+            }
+        }
+
+        // --- adopt the new inputs -------------------------------------
+        st.e = flat.e;
+        st.c = flat.c;
+        st.mask = flat.mask;
+        let comm_changed = mean_ci_changed || kwh_changed;
+        st.comm = flat.comm;
+        st.mean_ci = flat.mean_ci;
+
+        // --- pooled τ maintenance (Eq. 5, O(changed) updates) ---------
+        if mean_ci_changed {
+            // every pooled value is priced at mean CI: rebuild wholesale
+            let (pool, row_pool, comm_pool) = seed_pools(&st.e, &st.comm, st.mean_ci);
+            st.pool = pool;
+            st.row_pool = row_pool;
+            st.comm_pool = comm_pool;
+        } else {
+            for r in 0..n_rows {
+                if !e_changed[r] {
+                    continue;
+                }
+                if let Some(old) = st.row_pool[r].take() {
+                    st.pool.remove(old);
+                }
+                if st.e[r] > 0.0 {
+                    let v = st.e[r] * st.mean_ci as f32;
+                    st.pool.insert(v);
+                    st.row_pool[r] = Some(v);
+                }
+            }
+            if kwh_changed {
+                for &old in &st.comm_pool {
+                    st.pool.remove(old);
+                }
+                st.comm_pool.clear();
+                for cand in &st.comm {
+                    let v = cand.em as f32;
+                    st.pool.insert(v);
+                    st.comm_pool.push(v);
+                }
+            }
+        }
+        let tau = st.pool.quantile(f32::from_bits(alpha_bits)) as f64;
+        let gmax = st.pool.max() as f64;
+        let tau_changed = tau.to_bits() != st.tau.to_bits();
+        st.tau = tau;
+        st.gmax = gmax;
+        st.analytics.tau = tau as f32;
+        st.analytics.gmax = gmax as f32;
+
+        // --- analytics: re-evaluate dirty rows only -------------------
+        let input = AnalyticsInput {
+            e: std::mem::take(&mut st.e),
+            c: std::mem::take(&mut st.c),
+            mask: std::mem::take(&mut st.mask),
+            pool: Vec::new(),
+            alpha: f32::from_bits(alpha_bits),
+        };
+        let sub = if dirty.is_empty() {
+            None
+        } else {
+            let sub_input = input.subset_rows(&dirty);
+            let sub = backend.run(&sub_input)?;
+            st.analytics.scatter_rows(&dirty, &sub, n_nodes);
+            Some((sub_input, sub))
+        };
+        st.e = input.e;
+        st.c = input.c;
+        st.mask = input.mask;
+
+        // --- library modules: re-gate only what moved -----------------
+        if tau_changed {
+            // τ gates every candidate; re-run all modules over the cached
+            // tensor (no backend work, no re-pooling).
+            let ctx = GenerationContext {
+                rows: &st.rows,
+                nodes: &st.nodes,
+                analytics: &st.analytics,
+                comm: &st.comm,
+                tau,
+                mask: Some(&st.mask),
+            };
+            let per_module = run_library(library, self.config.use_prolog, &ctx)?;
+            let (modules_row, modules_comm) = bucket_constraints(per_module, &st.rows);
+            st.modules_row = modules_row;
+            st.modules_comm = modules_comm;
+        } else {
+            if let Some((sub_input, sub_analytics)) = &sub {
+                // the dirty rows, against the cached pool's τ
+                let sub_rows: Vec<(String, String)> =
+                    dirty.iter().map(|&r| st.rows[r].clone()).collect();
+                let ctx = GenerationContext {
+                    rows: &sub_rows,
+                    nodes: &st.nodes,
+                    analytics: sub_analytics,
+                    comm: &[],
+                    tau,
+                    mask: Some(&sub_input.mask),
+                };
+                let per_module = run_library(library, self.config.use_prolog, &ctx)?;
+                let local_idx: HashMap<(&str, &str), usize> = sub_rows
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (s, f))| ((s.as_str(), f.as_str()), i))
+                    .collect();
+                for (m, constraints) in per_module.into_iter().enumerate() {
+                    for &r in &dirty {
+                        st.modules_row[m][r].clear();
+                    }
+                    for c in constraints {
+                        let local = row_of(&c.kind, &local_idx)
+                            .expect("row-scoped constraint from a row-only context");
+                        st.modules_row[m][dirty[local]].push(c);
+                    }
+                }
+            }
+            if comm_changed {
+                let empty = AnalyticsOutput::default();
+                let ctx = GenerationContext {
+                    rows: &[],
+                    nodes: &st.nodes,
+                    analytics: &empty,
+                    comm: &st.comm,
+                    tau,
+                    mask: None,
+                };
+                let per_module = run_library(library, self.config.use_prolog, &ctx)?;
+                for (m, constraints) in per_module.into_iter().enumerate() {
+                    st.modules_comm[m] = constraints;
+                }
+            }
+        }
+
+        let stats = GenStats {
+            total_rows: n_rows,
+            dirty_rows: dirty.len(),
+            dirty_nodes: changed_nodes.len(),
+            full_rebuild: false,
+            tau_changed,
+            comm_reevaluated: tau_changed || comm_changed,
+        };
+        Ok((assemble(st), stats))
+    }
+
+    /// Cold start / structural change: run the exact full-epoch code path
+    /// and (when the library is cacheable) seed the carry state from it.
+    fn full_rebuild(
+        &mut self,
+        backend: &dyn AnalyticsBackend,
+        library: &ConstraintLibrary,
+        flat: FlatInputs,
+        module_names: Vec<&'static str>,
+        cacheable: bool,
+    ) -> Result<(GenerationResult, GenStats)> {
+        let alpha = self.config.alpha as f32;
+        let pool_vec = observed_pool(&flat.e, &flat.comm, flat.mean_ci);
+        let input = AnalyticsInput {
+            e: flat.e,
+            c: flat.c,
+            mask: flat.mask,
+            pool: pool_vec,
+            alpha,
+        };
+        let analytics = backend.run(&input)?;
+        let tau = analytics.tau as f64;
+        let gmax = analytics.gmax as f64;
+        let ctx = GenerationContext {
+            rows: &flat.rows,
+            nodes: &flat.nodes,
+            analytics: &analytics,
+            comm: &flat.comm,
+            tau,
+            mask: Some(&input.mask),
+        };
+        let per_module = run_library(library, self.config.use_prolog, &ctx)?;
+
+        let stats = GenStats {
+            total_rows: flat.rows.len(),
+            dirty_rows: flat.rows.len(),
+            dirty_nodes: flat.nodes.len(),
+            full_rebuild: true,
+            tau_changed: true,
+            comm_reevaluated: true,
+        };
+
+        if !cacheable {
+            self.state = None;
+            let constraints = per_module.into_iter().flatten().collect();
+            return Ok((
+                GenerationResult {
+                    constraints,
+                    tau,
+                    gmax,
+                    rows: flat.rows,
+                    nodes: flat.nodes,
+                    comm: flat.comm,
+                    analytics,
+                    mean_ci: flat.mean_ci,
+                },
+                stats,
+            ));
+        }
+
+        // seed the carry state
+        let (pool, row_pool, comm_pool) = seed_pools(&input.e, &flat.comm, flat.mean_ci);
+        let (modules_row, modules_comm) = bucket_constraints(per_module, &flat.rows);
+        let st = GenState {
+            alpha_bits: alpha.to_bits(),
+            use_prolog: self.config.use_prolog,
+            module_names,
+            rows: flat.rows,
+            nodes: flat.nodes,
+            e: input.e,
+            c: input.c,
+            mask: input.mask,
+            analytics,
+            comm: flat.comm,
+            mean_ci: flat.mean_ci,
+            pool,
+            row_pool,
+            comm_pool,
+            tau,
+            gmax,
+            modules_row,
+            modules_comm,
+        };
+        self.state = Some(st);
+        Ok((assemble(self.state.as_ref().unwrap()), stats))
+    }
+}
+
+/// Build the pooled-τ structures from scratch: the multiset plus each
+/// row's and each communication candidate's contribution. One body for
+/// the cold start and the mean-CI-changed rebuild — the exact-bit pool
+/// arithmetic the `full == incremental` identity rests on must never
+/// exist in two copies.
+fn seed_pools(
+    e: &[f32],
+    comm: &[CommCandidate],
+    mean_ci: f64,
+) -> (QuantilePool, Vec<Option<f32>>, Vec<f32>) {
+    let mut pool = QuantilePool::new();
+    let mut row_pool = Vec::with_capacity(e.len());
+    for &x in e {
+        row_pool.push((x > 0.0).then(|| {
+            let v = x * mean_ci as f32;
+            pool.insert(v);
+            v
+        }));
+    }
+    let mut comm_pool = Vec::with_capacity(comm.len());
+    for cand in comm {
+        let v = cand.em as f32;
+        pool.insert(v);
+        comm_pool.push(v);
+    }
+    (pool, row_pool, comm_pool)
+}
+
+/// Partition per-module constraint lists into the carry caches: row-keyed
+/// buckets for row-scoped kinds, a per-module list for the rest. Shared
+/// by the cold start and the τ-changed re-gate.
+fn bucket_constraints(
+    per_module: Vec<Vec<Constraint>>,
+    rows: &[(String, String)],
+) -> (Vec<Vec<Vec<Constraint>>>, Vec<Vec<Constraint>>) {
+    let row_idx: HashMap<(&str, &str), usize> = rows
+        .iter()
+        .enumerate()
+        .map(|(i, (s, f))| ((s.as_str(), f.as_str()), i))
+        .collect();
+    let mut modules_row = vec![vec![Vec::new(); rows.len()]; per_module.len()];
+    let mut modules_comm = vec![Vec::new(); per_module.len()];
+    for (m, constraints) in per_module.into_iter().enumerate() {
+        for c in constraints {
+            match row_of(&c.kind, &row_idx) {
+                Some(r) => modules_row[m][r].push(c),
+                None => modules_comm[m].push(c),
+            }
+        }
+    }
+    (modules_row, modules_comm)
+}
+
+/// Communication candidates have the same identity sequence (the kwh may
+/// differ — that's an incremental re-price, not a structural change).
+fn same_comm_shape(a: &[CommCandidate], b: &[CommCandidate]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.from == y.from && x.flavour == y.flavour && x.to == y.to)
+}
+
+/// Materialise a [`GenerationResult`] from the carried state: per module
+/// (in library order), the cached row constraints in row order, then the
+/// communication-derived ones — the same grouping the full pass emits.
+///
+/// This clones the cached tensors and constraints because
+/// [`GenerationResult`] owns its data, putting an O(R·N) memcpy floor
+/// under the epoch even when nothing was dirty. That floor is pure
+/// `memcpy` bandwidth — the *compute* (backend row stats, pool sort,
+/// Prolog) stays O(changed); sharing the buffers (`Arc`) would change
+/// the public result type and is left for a future pass.
+fn assemble(st: &GenState) -> GenerationResult {
+    let mut constraints = Vec::new();
+    for (m, rows) in st.modules_row.iter().enumerate() {
+        for bucket in rows {
+            constraints.extend(bucket.iter().cloned());
+        }
+        constraints.extend(st.modules_comm[m].iter().cloned());
+    }
+    GenerationResult {
+        constraints,
+        tau: st.tau,
+        gmax: st.gmax,
+        rows: st.rows.clone(),
+        nodes: st.nodes.clone(),
+        comm: st.comm.clone(),
+        analytics: st.analytics.clone(),
+        mean_ci: st.mean_ci,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::ConstraintGenerator;
+    use crate::model::{CommLink, EnergyProfile, Flavour, Node, Service};
+    use crate::runtime::NativeBackend;
+
+    /// Same fixture as the generator tests: 3 rows, 2 nodes, 2 comm.
+    fn fixture() -> (Application, Infrastructure) {
+        let mut app = Application::new("demo");
+        let mut fe = Service::new("frontend");
+        fe.flavours = vec![Flavour::new("large"), Flavour::new("tiny")];
+        fe.flavour_mut("large").unwrap().energy =
+            Some(EnergyProfile { kwh: 1.981, samples: 10 });
+        fe.flavour_mut("tiny").unwrap().energy =
+            Some(EnergyProfile { kwh: 1.189, samples: 10 });
+        let mut cart = Service::new("cart");
+        cart.flavours = vec![Flavour::new("tiny")];
+        cart.flavour_mut("tiny").unwrap().energy =
+            Some(EnergyProfile { kwh: 0.546, samples: 10 });
+        app.services = vec![fe, cart];
+        let mut link = CommLink::new("frontend", "cart");
+        link.energy = vec![("large".into(), 0.02), ("tiny".into(), 0.01)];
+        app.links = vec![link];
+
+        let mut infra = Infrastructure::new("eu");
+        let mut fr = Node::new("france", "FR");
+        fr.profile.carbon = Some(16.0);
+        let mut it = Node::new("italy", "IT");
+        it.profile.carbon = Some(335.0);
+        infra.nodes = vec![fr, it];
+        (app, infra)
+    }
+
+    fn sorted_keys(cs: &[Constraint]) -> Vec<String> {
+        let mut keys: Vec<String> = cs.iter().map(|c| c.kind.key()).collect();
+        keys.sort();
+        keys
+    }
+
+    fn assert_same(full: &GenerationResult, inc: &GenerationResult) {
+        assert_eq!(full.tau.to_bits(), inc.tau.to_bits());
+        assert_eq!(full.gmax.to_bits(), inc.gmax.to_bits());
+        assert_eq!(full.mean_ci.to_bits(), inc.mean_ci.to_bits());
+        assert_eq!(full.analytics, inc.analytics);
+        let mut a = full.constraints.clone();
+        let mut b = inc.constraints.clone();
+        a.sort_by(|x, y| x.kind.key().cmp(&y.kind.key()));
+        b.sort_by(|x, y| x.kind.key().cmp(&y.kind.key()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cold_start_matches_full_pass() {
+        let (app, infra) = fixture();
+        let backend = NativeBackend;
+        let full = ConstraintGenerator::new(&backend).generate(&app, &infra).unwrap();
+        let mut inc = IncrementalGenerator::default();
+        let library = ConstraintLibrary::default();
+        let (result, stats) = inc.generate(&backend, &library, &app, &infra).unwrap();
+        assert!(stats.full_rebuild);
+        assert_same(&full, &result);
+    }
+
+    #[test]
+    fn unchanged_epoch_reuses_everything() {
+        let (app, infra) = fixture();
+        let backend = NativeBackend;
+        let mut inc = IncrementalGenerator::default();
+        let library = ConstraintLibrary::default();
+        let (first, _) = inc.generate(&backend, &library, &app, &infra).unwrap();
+        let (second, stats) = inc.generate(&backend, &library, &app, &infra).unwrap();
+        assert!(!stats.full_rebuild);
+        assert_eq!(stats.dirty_rows, 0);
+        assert_eq!(stats.dirty_nodes, 0);
+        assert!(!stats.tau_changed);
+        assert!(!stats.comm_reevaluated);
+        assert_eq!(stats.reused_rows(), stats.total_rows);
+        assert_same(&first, &second);
+        assert_eq!(sorted_keys(&first.constraints), sorted_keys(&second.constraints));
+    }
+
+    #[test]
+    fn profile_change_dirties_one_row_and_matches_full() {
+        let (mut app, infra) = fixture();
+        let backend = NativeBackend;
+        let mut inc = IncrementalGenerator::default();
+        let library = ConstraintLibrary::default();
+        inc.generate(&backend, &library, &app, &infra).unwrap();
+
+        // cart's profile drifts; frontend rows untouched
+        app.service_mut("cart").unwrap().flavour_mut("tiny").unwrap().energy =
+            Some(EnergyProfile { kwh: 0.9, samples: 11 });
+        let (result, stats) = inc.generate(&backend, &library, &app, &infra).unwrap();
+        assert!(!stats.full_rebuild);
+        assert_eq!(stats.dirty_rows, 1);
+        assert_eq!(stats.dirty_nodes, 0);
+        let full = ConstraintGenerator::new(&backend).generate(&app, &infra).unwrap();
+        assert_same(&full, &result);
+    }
+
+    #[test]
+    fn carbon_change_reprices_pool_and_matches_full() {
+        let (app, mut infra) = fixture();
+        let backend = NativeBackend;
+        let mut inc = IncrementalGenerator::default();
+        let library = ConstraintLibrary::default();
+        inc.generate(&backend, &library, &app, &infra).unwrap();
+
+        infra.node_mut("italy").unwrap().profile.carbon = Some(500.0);
+        let (result, stats) = inc.generate(&backend, &library, &app, &infra).unwrap();
+        assert!(!stats.full_rebuild);
+        assert_eq!(stats.dirty_nodes, 1);
+        // mean CI moved: comm re-priced
+        assert!(stats.comm_reevaluated);
+        let full = ConstraintGenerator::new(&backend).generate(&app, &infra).unwrap();
+        assert_same(&full, &result);
+    }
+
+    #[test]
+    fn mask_change_dirties_the_row() {
+        let (mut app, mut infra) = fixture();
+        let backend = NativeBackend;
+        let mut inc = IncrementalGenerator::default();
+        let library = ConstraintLibrary::default();
+        inc.generate(&backend, &library, &app, &infra).unwrap();
+
+        app.service_mut("frontend").unwrap().requirements.subnet =
+            crate::model::Subnet::Private;
+        infra.node_mut("france").unwrap().capabilities.subnet =
+            crate::model::Subnet::Private;
+        let (result, stats) = inc.generate(&backend, &library, &app, &infra).unwrap();
+        assert!(!stats.full_rebuild);
+        // both frontend rows lose italy from their mask
+        assert_eq!(stats.dirty_rows, 2);
+        let full = ConstraintGenerator::new(&backend).generate(&app, &infra).unwrap();
+        assert_same(&full, &result);
+    }
+
+    #[test]
+    fn node_set_change_forces_full_rebuild() {
+        let (app, mut infra) = fixture();
+        let backend = NativeBackend;
+        let mut inc = IncrementalGenerator::default();
+        let library = ConstraintLibrary::default();
+        inc.generate(&backend, &library, &app, &infra).unwrap();
+        infra.nodes.remove(0);
+        let (result, stats) = inc.generate(&backend, &library, &app, &infra).unwrap();
+        assert!(stats.full_rebuild);
+        let full = ConstraintGenerator::new(&backend).generate(&app, &infra).unwrap();
+        assert_same(&full, &result);
+    }
+
+    #[test]
+    fn link_energy_change_reprices_comm_only() {
+        let (mut app, infra) = fixture();
+        let backend = NativeBackend;
+        let mut inc = IncrementalGenerator::default();
+        let library = ConstraintLibrary::default();
+        inc.generate(&backend, &library, &app, &infra).unwrap();
+        app.links[0].energy[0].1 = 3.0; // large enough to pass τ
+        let (result, stats) = inc.generate(&backend, &library, &app, &infra).unwrap();
+        assert!(!stats.full_rebuild);
+        assert_eq!(stats.dirty_nodes, 0);
+        assert!(stats.comm_reevaluated);
+        let full = ConstraintGenerator::new(&backend).generate(&app, &infra).unwrap();
+        assert_same(&full, &result);
+        assert!(result
+            .constraints
+            .iter()
+            .any(|c| matches!(c.kind, ConstraintKind::Affinity { .. })));
+    }
+
+    #[test]
+    fn extended_library_is_cacheable_and_matches() {
+        let (mut app, infra) = fixture();
+        let backend = NativeBackend;
+        let mut inc = IncrementalGenerator::default();
+        let library = ConstraintLibrary::extended();
+        inc.generate(&backend, &library, &app, &infra).unwrap();
+        app.service_mut("frontend").unwrap().flavour_mut("large").unwrap().energy =
+            Some(EnergyProfile { kwh: 2.2, samples: 12 });
+        let (result, stats) = inc.generate(&backend, &library, &app, &infra).unwrap();
+        assert!(!stats.full_rebuild);
+        let full = ConstraintGenerator::new(&backend)
+            .with_library(ConstraintLibrary::extended())
+            .generate(&app, &infra)
+            .unwrap();
+        assert_same(&full, &result);
+    }
+
+    #[test]
+    fn direct_path_config_matches_too() {
+        let (mut app, infra) = fixture();
+        let backend = NativeBackend;
+        let config = GeneratorConfig {
+            alpha: 0.8,
+            use_prolog: false,
+        };
+        let mut inc = IncrementalGenerator::new(config);
+        let library = ConstraintLibrary::default();
+        inc.generate(&backend, &library, &app, &infra).unwrap();
+        app.service_mut("cart").unwrap().flavour_mut("tiny").unwrap().energy =
+            Some(EnergyProfile { kwh: 1.4, samples: 3 });
+        let (result, _) = inc.generate(&backend, &library, &app, &infra).unwrap();
+        let full = ConstraintGenerator::new(&backend)
+            .with_config(config)
+            .generate(&app, &infra)
+            .unwrap();
+        assert_same(&full, &result);
+    }
+
+    #[test]
+    fn config_change_forces_full_rebuild() {
+        let (app, infra) = fixture();
+        let backend = NativeBackend;
+        let mut inc = IncrementalGenerator::default();
+        let library = ConstraintLibrary::default();
+        inc.generate(&backend, &library, &app, &infra).unwrap();
+        inc.config.alpha = 0.5;
+        let (result, stats) = inc.generate(&backend, &library, &app, &infra).unwrap();
+        assert!(stats.full_rebuild);
+        let full = ConstraintGenerator::new(&backend)
+            .with_config(GeneratorConfig {
+                alpha: 0.5,
+                use_prolog: true,
+            })
+            .generate(&app, &infra)
+            .unwrap();
+        assert_same(&full, &result);
+    }
+}

@@ -17,12 +17,14 @@
 pub mod affinity;
 pub mod avoid_node;
 pub mod generator;
+pub mod incremental;
 pub mod library;
 pub mod prefer_node;
 pub mod time_shift;
 pub mod types;
 
 pub use generator::{ConstraintGenerator, GenerationResult, GeneratorConfig};
+pub use incremental::{GenStats, IncrementalGenerator};
 pub use library::{CommCandidate, ConstraintLibrary, ConstraintModule, GenerationContext};
 pub use time_shift::{TimeShiftPlanner, TimeShiftRecommendation};
 pub use types::{Constraint, ConstraintKind};

@@ -87,16 +87,6 @@ impl EnergyEstimator {
                 .or_default()
                 .observe(s.kwh());
         }
-        for ((service, flavour), summary) in &report.computation {
-            if let Some(svc) = app.service_mut(service) {
-                if let Some(fl) = svc.flavour_mut(flavour) {
-                    fl.energy = Some(EnergyProfile {
-                        kwh: summary.mean(),
-                        samples: summary.count,
-                    });
-                }
-            }
-        }
 
         // --- Eq. 2 + Eq. 13: communication profiles ---------------------
         let k = self.config.comm_model;
@@ -106,6 +96,108 @@ impl EnergyEstimator {
                 .entry((s.from.clone(), s.from_flavour.clone(), s.to.clone()))
                 .or_default()
                 .observe(k.kwh_for_gb(s.gb()));
+        }
+
+        self.apply(app, &report);
+        report
+    }
+
+    /// Incremental variant of [`EnergyEstimator::estimate`] for the
+    /// adaptive loop's change-stamped epochs: summaries are recomputed
+    /// only for the series the store reports touched since revision
+    /// `since` ([`MetricStore::energy_touched_since`] /
+    /// [`MetricStore::traffic_touched_since`]); every other series reuses
+    /// its entry from `prev` unchanged. With an infinite lookback (the
+    /// default) this is exactly equal to a full [`EnergyEstimator::estimate`]
+    /// — an untouched series' whole-history summary cannot change. A
+    /// finite lookback slides the observation window every epoch, so the
+    /// method falls back to the full pass.
+    pub fn estimate_incremental(
+        &self,
+        app: &mut Application,
+        store: &MetricStore,
+        prev: &EstimationReport,
+        since: u64,
+    ) -> EstimationReport {
+        if self.config.lookback.is_finite() {
+            return self.estimate(app, store);
+        }
+        let touched_e_keys = store.energy_touched_since(since);
+        let touched_t_keys = store.traffic_touched_since(since);
+        // everything changed (the steady-state of a simulator that feeds
+        // every series every window): the full pass does strictly less
+        // work than a filtered scan — take it directly
+        if touched_e_keys.len() == store.energy_series_count()
+            && touched_t_keys.len() == store.traffic_series_count()
+        {
+            return self.estimate(app, store);
+        }
+        let touched_e: std::collections::HashSet<(&str, &str)> = touched_e_keys
+            .into_iter()
+            .map(|(s, f)| (s.as_str(), f.as_str()))
+            .collect();
+        let touched_t: std::collections::HashSet<(&str, &str, &str)> = touched_t_keys
+            .into_iter()
+            .map(|(a, f, b)| (a.as_str(), f.as_str(), b.as_str()))
+            .collect();
+
+        let mut report = EstimationReport::default();
+        for (key, summary) in &prev.computation {
+            if !touched_e.contains(&(key.0.as_str(), key.1.as_str())) {
+                report.computation.insert(key.clone(), *summary);
+            }
+        }
+        for (key, summary) in &prev.communication {
+            if !touched_t.contains(&(key.0.as_str(), key.1.as_str(), key.2.as_str())) {
+                report.communication.insert(key.clone(), *summary);
+            }
+        }
+
+        let horizon = store.horizon();
+        if !touched_e.is_empty() {
+            for s in store.energy_range(f64::NEG_INFINITY, horizon) {
+                if touched_e.contains(&(s.service.as_str(), s.flavour.as_str())) {
+                    report
+                        .computation
+                        .entry((s.service.clone(), s.flavour.clone()))
+                        .or_default()
+                        .observe(s.kwh());
+                }
+            }
+        }
+        if !touched_t.is_empty() {
+            let k = self.config.comm_model;
+            for s in store.traffic_range(f64::NEG_INFINITY, horizon) {
+                if touched_t.contains(&(
+                    s.from.as_str(),
+                    s.from_flavour.as_str(),
+                    s.to.as_str(),
+                )) {
+                    report
+                        .communication
+                        .entry((s.from.clone(), s.from_flavour.clone(), s.to.clone()))
+                        .or_default()
+                        .observe(k.kwh_for_gb(s.gb()));
+                }
+            }
+        }
+
+        self.apply(app, &report);
+        report
+    }
+
+    /// Enrich `app` in place from a report's summaries (Eq. 1 computation
+    /// profiles, Eq. 2 per-source-flavour communication energies).
+    fn apply(&self, app: &mut Application, report: &EstimationReport) {
+        for ((service, flavour), summary) in &report.computation {
+            if let Some(svc) = app.service_mut(service) {
+                if let Some(fl) = svc.flavour_mut(flavour) {
+                    fl.energy = Some(EnergyProfile {
+                        kwh: summary.mean(),
+                        samples: summary.count,
+                    });
+                }
+            }
         }
         for ((from, flavour, to), summary) in &report.communication {
             if let Some(link) = app.link_mut(from, to) {
@@ -117,8 +209,6 @@ impl EnergyEstimator {
                 }
             }
         }
-
-        report
     }
 }
 
@@ -232,6 +322,82 @@ mod tests {
             .unwrap();
         assert!((profile.kwh - 3.0).abs() < 1e-12);
         assert_eq!(profile.samples, 1);
+    }
+
+    #[test]
+    fn incremental_estimate_equals_full() {
+        let est = EnergyEstimator::default();
+        let mut store = MetricStore::new();
+        store.push_energy(EnergySample {
+            t: 3600.0,
+            service: "frontend".into(),
+            flavour: "large".into(),
+            joules: 3.6e6,
+        });
+        store.push_energy(EnergySample {
+            t: 3600.0,
+            service: "cart".into(),
+            flavour: "tiny".into(),
+            joules: 1.8e6,
+        });
+        store.push_traffic(TrafficSample {
+            t: 3600.0,
+            from: "frontend".into(),
+            from_flavour: "large".into(),
+            to: "cart".into(),
+            requests: 10.0,
+            bytes: 2e9,
+        });
+        let mut app_full = app();
+        let prev = est.estimate(&mut app_full, &store);
+        let rev = store.revision();
+
+        // only frontend/large receives a new window
+        store.push_energy(EnergySample {
+            t: 7200.0,
+            service: "frontend".into(),
+            flavour: "large".into(),
+            joules: 7.2e6,
+        });
+
+        let mut app_inc = app();
+        let inc = est.estimate_incremental(&mut app_inc, &store, &prev, rev);
+        let mut app_full2 = app();
+        let full = est.estimate(&mut app_full2, &store);
+        assert_eq!(inc.computation, full.computation);
+        assert_eq!(inc.communication, full.communication);
+        // the untouched series entry is the reused one, bit-for-bit
+        assert_eq!(
+            inc.computation[&("cart".to_string(), "tiny".to_string())],
+            prev.computation[&("cart".to_string(), "tiny".to_string())]
+        );
+        // applied profiles agree too
+        assert_eq!(
+            app_inc.service("frontend").unwrap().flavour("large").unwrap().energy,
+            app_full2.service("frontend").unwrap().flavour("large").unwrap().energy,
+        );
+    }
+
+    #[test]
+    fn incremental_estimate_with_nothing_touched_reuses_report() {
+        let est = EnergyEstimator::default();
+        let mut store = MetricStore::new();
+        store.push_energy(EnergySample {
+            t: 3600.0,
+            service: "frontend".into(),
+            flavour: "large".into(),
+            joules: 3.6e6,
+        });
+        let mut a = app();
+        let prev = est.estimate(&mut a, &store);
+        let rev = store.revision();
+        let mut b = app();
+        let inc = est.estimate_incremental(&mut b, &store, &prev, rev);
+        assert_eq!(inc.computation, prev.computation);
+        assert_eq!(
+            b.service("frontend").unwrap().flavour("large").unwrap().energy.unwrap().kwh,
+            1.0
+        );
     }
 
     #[test]

@@ -75,6 +75,39 @@ impl KnowledgeBase {
         KnowledgeBase::default()
     }
 
+    /// Recall the learned SK energy profile (Eq. 7) of one
+    /// (service, flavour) as `(mean kWh per window, sample count)`.
+    ///
+    /// This is the KB-as-warm-start path (§3: knowledge from previous
+    /// iterations must be "properly considered"): the pipeline uses it to
+    /// seed energy profiles for flavours the *current* monitoring history
+    /// has not observed — e.g. right after a restart with a persisted KB
+    /// — so constraint generation does not have to wait for the profile
+    /// to be re-learned from scratch. `None` when SK has never seen the
+    /// pair (or holds an empty summary).
+    pub fn recall_profile(&self, service: &str, flavour: &str) -> Option<(f64, u64)> {
+        self.sk
+            .get(&(service.to_string(), flavour.to_string()))
+            .filter(|p| !p.summary.is_empty())
+            .map(|p| (p.summary.mean(), p.summary.count))
+    }
+
+    /// Recall the learned IK interaction profile (Eq. 8) of one
+    /// (service, flavour, destination) as `(mean kWh per window, sample
+    /// count)` — the communication-side counterpart of
+    /// [`KnowledgeBase::recall_profile`].
+    pub fn recall_interaction(
+        &self,
+        service: &str,
+        flavour: &str,
+        to: &str,
+    ) -> Option<(f64, u64)> {
+        self.ik
+            .get(&(service.to_string(), flavour.to_string(), to.to_string()))
+            .filter(|p| !p.summary.is_empty())
+            .map(|p| (p.summary.mean(), p.summary.count))
+    }
+
     /// Largest footprint among CK constraints (the Eq. 11 normaliser).
     pub fn ck_max_em(&self) -> f64 {
         self.ck
@@ -318,6 +351,21 @@ mod tests {
         assert_eq!(p.em_max(), 700.0);
         assert_eq!(p.em_min(), 600.0);
         assert_eq!(p.em_avg(), 650.0);
+    }
+
+    #[test]
+    fn recall_profile_reads_sk_mean() {
+        let kb = kb_with_data();
+        let (kwh, samples) = kb.recall_profile("frontend", "large").unwrap();
+        assert_eq!(kwh, 650.0);
+        assert_eq!(samples, 2);
+        assert!(kb.recall_profile("frontend", "tiny").is_none());
+        assert!(kb.recall_profile("ghost", "large").is_none());
+
+        let (kwh, samples) = kb.recall_interaction("frontend", "large", "cart").unwrap();
+        assert_eq!(kwh, 1.5);
+        assert_eq!(samples, 1);
+        assert!(kb.recall_interaction("frontend", "large", "ghost").is_none());
     }
 
     #[test]

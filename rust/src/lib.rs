@@ -14,7 +14,10 @@
 //! rule engine, and a constraint-aware scheduler.
 //!
 //! ## Layer map
-//! * L3 (this crate): coordination, adaptive epochs, KB, the scheduler's
+//! * L3 (this crate): coordination, adaptive epochs — full
+//!   ([`pipeline::GeneratorPipeline::run_epoch`]) and incremental
+//!   ([`pipeline::GeneratorPipeline::run_incremental`] over
+//!   [`constraints::incremental`]) — KB, the scheduler's
 //!   solver ladder on its shared [`scheduler::delta`] move core (greedy,
 //!   [`scheduler::localsearch`] annealing/LNS/portfolio, exact BnB), the
 //!   [`continuum`] sharded multi-cluster engine, the [`forecast`]

@@ -3,22 +3,42 @@
 //!
 //! Samples are kept sorted by timestamp (appends of monotone streams are
 //! O(1); out-of-order inserts fall back to a binary-search insert).
+//!
+//! The store is **change-stamped**: every push bumps a monotone
+//! [`MetricStore::revision`] and records it against the sample's series —
+//! per (service, flavour) for energy, per (from, flavour, to) for
+//! traffic. Incremental consumers (the adaptive loop's incremental
+//! constraint-generation epochs) remember the revision they last read and
+//! ask [`MetricStore::energy_touched_since`] /
+//! [`MetricStore::traffic_touched_since`] which series actually received
+//! data, recomputing summaries only for those. [`MetricStore::compact`]
+//! conservatively touches *every* series (dropping history changes
+//! whole-history summaries).
 
 use super::metrics::{EnergySample, TrafficSample};
+use std::collections::HashMap;
 
 /// The metric store.
 #[derive(Debug, Default, Clone)]
 pub struct MetricStore {
     energy: Vec<EnergySample>,
     traffic: Vec<TrafficSample>,
+    revision: u64,
+    energy_rev: HashMap<(String, String), u64>,
+    traffic_rev: HashMap<(String, String, String), u64>,
 }
 
 impl MetricStore {
+    /// Empty store at revision 0.
     pub fn new() -> Self {
         MetricStore::default()
     }
 
+    /// Append an energy sample (stamps its (service, flavour) series).
     pub fn push_energy(&mut self, sample: EnergySample) {
+        self.revision += 1;
+        self.energy_rev
+            .insert((sample.service.clone(), sample.flavour.clone()), self.revision);
         let pos = if self
             .energy
             .last()
@@ -32,7 +52,17 @@ impl MetricStore {
         self.energy.insert(pos, sample);
     }
 
+    /// Append a traffic sample (stamps its (from, flavour, to) series).
     pub fn push_traffic(&mut self, sample: TrafficSample) {
+        self.revision += 1;
+        self.traffic_rev.insert(
+            (
+                sample.from.clone(),
+                sample.from_flavour.clone(),
+                sample.to.clone(),
+            ),
+            self.revision,
+        );
         let pos = if self
             .traffic
             .last()
@@ -46,12 +76,51 @@ impl MetricStore {
         self.traffic.insert(pos, sample);
     }
 
+    /// Number of stored energy samples.
     pub fn energy_len(&self) -> usize {
         self.energy.len()
     }
 
+    /// Number of stored traffic samples.
     pub fn traffic_len(&self) -> usize {
         self.traffic.len()
+    }
+
+    /// Current change stamp: bumped by every push (and by `compact`).
+    /// Remember it, and later pass it to the `*_touched_since` queries to
+    /// learn which series changed in between.
+    pub fn revision(&self) -> u64 {
+        self.revision
+    }
+
+    /// Number of distinct energy series ever stamped (compare against
+    /// [`MetricStore::energy_touched_since`]`.len()` to detect the
+    /// everything-changed case cheaply).
+    pub fn energy_series_count(&self) -> usize {
+        self.energy_rev.len()
+    }
+
+    /// Number of distinct traffic series ever stamped.
+    pub fn traffic_series_count(&self) -> usize {
+        self.traffic_rev.len()
+    }
+
+    /// Energy series that received samples after revision `since`.
+    pub fn energy_touched_since(&self, since: u64) -> Vec<&(String, String)> {
+        self.energy_rev
+            .iter()
+            .filter(|(_, &rev)| rev > since)
+            .map(|(k, _)| k)
+            .collect()
+    }
+
+    /// Traffic series that received samples after revision `since`.
+    pub fn traffic_touched_since(&self, since: u64) -> Vec<&(String, String, String)> {
+        self.traffic_rev
+            .iter()
+            .filter(|(_, &rev)| rev > since)
+            .map(|(k, _)| k)
+            .collect()
     }
 
     /// Energy samples with `from < t <= to`.
@@ -76,10 +145,19 @@ impl MetricStore {
     }
 
     /// Drop samples older than `cutoff` (retention, keeps the adaptive
-    /// loop's memory bounded).
+    /// loop's memory bounded). Conservatively stamps **every** series as
+    /// touched: removing history changes whole-history summaries, so no
+    /// incremental consumer may reuse a pre-compaction result.
     pub fn compact(&mut self, cutoff: f64) {
         self.energy.retain(|s| s.t > cutoff);
         self.traffic.retain(|s| s.t > cutoff);
+        self.revision += 1;
+        for rev in self.energy_rev.values_mut() {
+            *rev = self.revision;
+        }
+        for rev in self.traffic_rev.values_mut() {
+            *rev = self.revision;
+        }
     }
 }
 
@@ -148,5 +226,55 @@ mod tests {
             store.push_traffic(tr(t));
         }
         assert_eq!(store.traffic_range(1.0, 3.0).len(), 2);
+    }
+
+    #[test]
+    fn revisions_stamp_touched_series() {
+        let mut store = MetricStore::new();
+        assert_eq!(store.revision(), 0);
+        store.push_energy(e(1.0));
+        let rev1 = store.revision();
+        assert_eq!(rev1, 1);
+        // nothing touched since the current revision
+        assert!(store.energy_touched_since(rev1).is_empty());
+        // everything touched since 0
+        assert_eq!(store.energy_touched_since(0).len(), 1);
+
+        // a second series; the first stays untouched relative to rev1
+        let mut other = e(2.0);
+        other.service = "s2".into();
+        store.push_energy(other);
+        let touched = store.energy_touched_since(rev1);
+        assert_eq!(touched.len(), 1);
+        assert_eq!(touched[0].0, "s2");
+
+        store.push_traffic(tr(3.0));
+        assert_eq!(store.traffic_touched_since(rev1).len(), 1);
+        assert!(store.traffic_touched_since(store.revision()).is_empty());
+        assert_eq!(store.energy_series_count(), 2);
+        assert_eq!(store.traffic_series_count(), 1);
+    }
+
+    #[test]
+    fn compact_touches_every_series() {
+        let mut store = MetricStore::new();
+        store.push_energy(e(1.0));
+        store.push_traffic(tr(2.0));
+        let rev = store.revision();
+        store.compact(0.5);
+        assert_eq!(store.energy_touched_since(rev).len(), 1);
+        assert_eq!(store.traffic_touched_since(rev).len(), 1);
+        assert!(store.revision() > rev);
+    }
+
+    #[test]
+    fn repeat_pushes_move_series_stamp_forward() {
+        let mut store = MetricStore::new();
+        store.push_energy(e(1.0));
+        let rev = store.revision();
+        store.push_energy(e(2.0)); // same series
+        let touched = store.energy_touched_since(rev);
+        assert_eq!(touched.len(), 1);
+        assert!(store.energy_touched_since(store.revision()).is_empty());
     }
 }

@@ -39,9 +39,13 @@ pub struct AdaptiveConfig {
     /// Scheduler objective (shared by constrained + cost-only).
     pub objective: Objective,
     pub seed: u64,
-    /// Schedule the constrained plan through the sharded incremental
-    /// re-planner: only zones whose carbon/nodes/constraints changed are
-    /// re-solved each epoch.
+    /// Incremental **end-to-end**: constraint generation runs through
+    /// [`GeneratorPipeline::run_incremental`] (dirty monitoring series /
+    /// rows / nodes only, pooled τ maintained incrementally), and the
+    /// constrained plan is scheduled through the sharded incremental
+    /// re-planner (only zones whose carbon/nodes/constraints changed are
+    /// re-solved). Epoch outputs are identical to the full pass — both
+    /// halves are property-tested for exact agreement.
     pub incremental: bool,
     /// Zone count hint for the partitioner (0 = auto / labels).
     pub zones: usize,
@@ -94,6 +98,11 @@ pub struct EpochLog {
     pub dirty_zones: usize,
     /// Incremental mode: total zones (0 when disabled).
     pub total_zones: usize,
+    /// Incremental mode: constraint-generation rows (service, flavour)
+    /// re-evaluated this epoch (0 when disabled).
+    pub gen_dirty_rows: usize,
+    /// Incremental mode: total generation rows (0 when disabled).
+    pub gen_total_rows: usize,
     /// Incremental mode: placements carried from the previous epoch.
     pub reused_placements: usize,
     /// Incremental mode: objective reduction the warm-started
@@ -224,9 +233,19 @@ impl AdaptiveLoop {
             };
 
             // --- constraint generation epoch -----------------------------
-            let outcome = self
-                .pipeline
-                .run_epoch(&mut app, &mut infra, &store, &traces, t)?;
+            // (incremental mode regenerates only dirty monitoring series /
+            // rows / nodes — identical constraints, O(changed) work)
+            let outcome = if self.config.incremental {
+                self.pipeline
+                    .run_incremental(&mut app, &mut infra, &store, &traces, t)?
+            } else {
+                self.pipeline
+                    .run_epoch(&mut app, &mut infra, &store, &traces, t)?
+            };
+            let (gen_dirty_rows, gen_total_rows) = outcome
+                .incremental
+                .map(|s| (s.dirty_rows, s.total_rows))
+                .unwrap_or((0, 0));
 
             // --- proactive re-planning: predicted zone-level swings ------
             let mut predicted_swings = 0usize;
@@ -320,6 +339,8 @@ impl AdaptiveLoop {
                 cost_only_cost: m_cost.cost,
                 dirty_zones,
                 total_zones,
+                gen_dirty_rows,
+                gen_total_rows,
                 reused_placements,
                 improver_gain,
                 projected_g: temporal.projected_g,
@@ -386,10 +407,41 @@ mod tests {
         for e in &summary.epochs {
             assert!(e.total_zones >= 1);
             assert!(e.dirty_zones <= e.total_zones);
+            // constraint generation went through the incremental engine
+            assert!(e.gen_total_rows > 0);
+            assert!(e.gen_dirty_rows <= e.gen_total_rows);
         }
         assert!(summary.total_constrained_g > 0.0);
         // oracle remains the lower bound under the sharded path too
         assert!(summary.total_oracle_g <= summary.total_constrained_g + 1e-6);
+    }
+
+    #[test]
+    fn incremental_loop_learns_identical_constraints() {
+        let scenario = scenarios::scenario(1).unwrap();
+        let run = |incremental: bool| {
+            let mut looper = AdaptiveLoop::new(
+                PipelineConfig::default(),
+                AdaptiveConfig {
+                    hours: 18,
+                    regen_every: 6,
+                    incremental,
+                    zones: 2,
+                    ..Default::default()
+                },
+            );
+            looper.run(&scenario).unwrap()
+        };
+        let full = run(false);
+        let inc = run(true);
+        assert_eq!(full.epochs.len(), inc.epochs.len());
+        for (f, i) in full.epochs.iter().zip(&inc.epochs) {
+            // generation is identical end-to-end; only the scheduling
+            // path differs (sharded re-planner vs monolithic greedy)
+            assert_eq!(f.constraints, i.constraints, "hour {}", f.hour);
+            assert_eq!(f.gen_total_rows, 0);
+            assert!(i.gen_total_rows > 0);
+        }
     }
 
     #[test]

@@ -4,13 +4,14 @@ use crate::carbon::gatherer::GathererConfig;
 use crate::carbon::{CarbonIntensitySource, EnergyMixGatherer, TraceSet};
 use crate::config::Scenario;
 use crate::constraints::{
-    Constraint, ConstraintGenerator, ConstraintLibrary, GenerationResult, GeneratorConfig,
+    Constraint, ConstraintGenerator, ConstraintLibrary, GenStats, GenerationResult,
+    GeneratorConfig, IncrementalGenerator,
 };
-use crate::energy::estimator::EstimatorConfig;
+use crate::energy::estimator::{EstimationReport, EstimatorConfig};
 use crate::energy::EnergyEstimator;
 use crate::explain::{ExplainabilityGenerator, ExplainabilityReport};
 use crate::kb::{EnricherConfig, KbEnricher, KnowledgeBase};
-use crate::model::{Application, Infrastructure};
+use crate::model::{Application, EnergyProfile, Infrastructure};
 use crate::monitoring::{MetricStore, WorkloadSimulator};
 use crate::ranker::{Ranker, RankerConfig};
 use crate::runtime::{AnalyticsBackend, NativeBackend, XlaBackend};
@@ -40,6 +41,10 @@ pub struct EpochOutcome {
     pub report: ExplainabilityReport,
     /// Per-stage timings/energy of this epoch (Fig. 2 telemetry).
     pub meter: EnergyMeter,
+    /// What the incremental engine recomputed
+    /// ([`GeneratorPipeline::run_incremental`] only; `None` on a full
+    /// [`GeneratorPipeline::run_epoch`]).
+    pub incremental: Option<GenStats>,
 }
 
 enum Backend {
@@ -75,6 +80,11 @@ pub struct GeneratorPipeline {
     pub config: PipelineConfig,
     pub kb: KnowledgeBase,
     backend: Backend,
+    /// Carry state of [`GeneratorPipeline::run_incremental`]: the
+    /// incremental generation engine plus the previous epoch's estimation
+    /// report and store revision.
+    incremental: IncrementalGenerator,
+    est_cache: Option<(EstimationReport, u64)>,
 }
 
 impl GeneratorPipeline {
@@ -84,6 +94,8 @@ impl GeneratorPipeline {
             config,
             kb: KnowledgeBase::new(),
             backend: Backend::Native(NativeBackend),
+            incremental: IncrementalGenerator::new(config.generator),
+            est_cache: None,
         }
     }
 
@@ -96,6 +108,8 @@ impl GeneratorPipeline {
             config,
             kb: KnowledgeBase::new(),
             backend: Backend::Xla(Box::new(XlaBackend::from_artifacts(artifacts_dir)?)),
+            incremental: IncrementalGenerator::new(config.generator),
+            est_cache: None,
         })
     }
 
@@ -139,6 +153,12 @@ impl GeneratorPipeline {
         let estimator = EnergyEstimator::new(self.config.estimator);
         let report = meter.measure("estimate", || estimator.estimate(app, store));
 
+        // 2b. KB recall as warm-start: flavours the current monitoring
+        // history has not observed inherit their learned SK profile
+        // instead of generating nothing (§3: knowledge from previous
+        // iterations is preserved, not just decayed).
+        meter.measure("kb-warmstart", || warm_start_profiles(&self.kb, app));
+
         // 3. Constraint Generator (analytics on XLA or native; automatic
         //    native fallback for instances beyond the largest bucket)
         let library = self.library();
@@ -161,10 +181,29 @@ impl GeneratorPipeline {
             }
         };
 
+        // 4–6. KB enrich → rank → explain (shared with run_incremental)
+        self.finish_epoch(meter, &report, raw, infra, t, None)
+    }
+
+    /// Stages 4–6 of an epoch — KB Enricher, Constraints Ranker,
+    /// Explainability Generator — plus outcome assembly. One body for
+    /// both [`GeneratorPipeline::run_epoch`] and
+    /// [`GeneratorPipeline::run_incremental`], so the property-tested
+    /// "incremental == full" contract cannot be broken by editing one
+    /// tail and forgetting the other.
+    fn finish_epoch(
+        &mut self,
+        mut meter: EnergyMeter,
+        estimation: &EstimationReport,
+        raw: GenerationResult,
+        infra: &Infrastructure,
+        t: f64,
+        incremental: Option<GenStats>,
+    ) -> Result<EpochOutcome> {
         // 4. KB Enricher
         let enricher = KbEnricher::new(self.config.enricher);
         let entries = meter.measure("kb-enrich", || {
-            enricher.update(&mut self.kb, &report, infra, &raw.constraints, t)
+            enricher.update(&mut self.kb, estimation, infra, &raw.constraints, t)
         })?;
 
         // 5. Constraints Ranker
@@ -182,7 +221,110 @@ impl GeneratorPipeline {
             raw,
             report,
             meter,
+            incremental,
         })
+    }
+
+    /// Run one **incremental** generation epoch at time `t`: identical
+    /// output to [`GeneratorPipeline::run_epoch`] on the same inputs
+    /// (property-tested in `rust/tests/generation_incremental.rs`), but
+    /// each stage recomputes only what changed since the previous
+    /// `run_incremental` call:
+    ///
+    /// * the estimator re-summarises only the monitoring series the
+    ///   change-stamped [`MetricStore`] reports touched;
+    /// * the constraint generator re-evaluates analytics and library
+    ///   modules only for dirty rows, maintains τ in an updatable
+    ///   pooled-quantile structure, and warm-starts everything else from
+    ///   the previous epoch (see
+    ///   [`crate::constraints::IncrementalGenerator`]);
+    /// * unobserved energy profiles are recalled from the KB, exactly as
+    ///   in the full pass.
+    ///
+    /// Feed it the same monotonically growing `store` every epoch (the
+    /// adaptive loop does); a store whose revision went backwards is
+    /// treated as new and triggers a full re-estimate.
+    ///
+    /// # Example
+    /// ```no_run
+    /// // (no_run: rustdoc test binaries don't inherit the crate's rpath
+    /// // to the bundled libstdc++; the same flow is exercised for real
+    /// // in rust/tests/generation_incremental.rs)
+    /// use greengen::config::scenarios;
+    /// use greengen::monitoring::{MetricStore, WorkloadSimulator};
+    /// use greengen::pipeline::GeneratorPipeline;
+    ///
+    /// let scenario = scenarios::scenario(1).unwrap();
+    /// let mut pipeline = GeneratorPipeline::new(Default::default());
+    /// let mut app = scenario.app.clone();
+    /// let mut infra = scenario.infra.clone();
+    /// let mut sim = WorkloadSimulator::new(scenario.truth.clone(), scenario.seed);
+    /// let mut store = MetricStore::new();
+    /// for epoch in 1..=3 {
+    ///     let t = epoch as f64 * 6.0 * 3600.0;
+    ///     sim.scrape_into(&mut store, t);
+    ///     let outcome = pipeline
+    ///         .run_incremental(&mut app, &mut infra, &store, &scenario.intensity, t)
+    ///         .unwrap();
+    ///     let stats = outcome.incremental.unwrap();
+    ///     println!("epoch {epoch}: {}/{} rows dirty", stats.dirty_rows, stats.total_rows);
+    /// }
+    /// ```
+    pub fn run_incremental(
+        &mut self,
+        app: &mut Application,
+        infra: &mut Infrastructure,
+        store: &MetricStore,
+        intensity: &dyn CarbonIntensitySource,
+        t: f64,
+    ) -> Result<EpochOutcome> {
+        let mut meter = EnergyMeter::default();
+
+        // 1. Energy Mix Gatherer
+        let gatherer = EnergyMixGatherer::new(intensity).with_config(self.config.gatherer);
+        meter.measure("gather", || gatherer.enrich(infra, t))?;
+
+        // 2. Energy Estimator — change-stamped incremental pass
+        let estimator = EnergyEstimator::new(self.config.estimator);
+        let cache = self
+            .est_cache
+            .take()
+            .filter(|(_, rev)| *rev <= store.revision());
+        let report = meter.measure("estimate", || match cache {
+            Some((prev, rev)) => estimator.estimate_incremental(app, store, &prev, rev),
+            None => estimator.estimate(app, store),
+        });
+        self.est_cache = Some((report.clone(), store.revision()));
+
+        // 2b. KB recall as warm-start (same as the full pass)
+        meter.measure("kb-warmstart", || warm_start_profiles(&self.kb, app));
+
+        // 3. Incremental Constraint Generator (dirty rows only; automatic
+        //    native fallback for instances beyond the largest XLA bucket —
+        //    the failed attempt drops the carry state, so the fallback is
+        //    a full native rebuild)
+        let library = self.library();
+        self.incremental.config = self.config.generator;
+        let first = {
+            let backend = &self.backend;
+            let incremental = &mut self.incremental;
+            meter.measure("generate", || {
+                incremental.generate(backend.as_dyn(), &library, app, infra)
+            })
+        };
+        let (raw, stats) = match first {
+            Ok(r) => r,
+            Err(crate::Error::Xla(msg)) if msg.contains("exceeds") => {
+                let incremental = &mut self.incremental;
+                meter.measure("generate-native-fallback", || {
+                    incremental.generate(&NativeBackend, &library, app, infra)
+                })?
+            }
+            Err(e) => return Err(e),
+        };
+
+        // 4–6. KB enrich → rank → explain (shared with run_epoch)
+        self.finish_epoch(meter, &report, raw, infra, t, Some(stats))
     }
 
     /// Run a §5.3 scenario end to end: simulate its monitoring history,
@@ -201,6 +343,53 @@ impl GeneratorPipeline {
     pub fn trace_set(scenario: &Scenario) -> TraceSet {
         TraceSet::from_static(&scenario.intensity, scenario.seed ^ 0xC1)
     }
+}
+
+/// Fill every flavour without an energy profile from the KB's SK store
+/// (Eq. 7 recall) and every link flavour without a communication energy
+/// from IK (Eq. 8): the learned mean kWh per window. Returns how many
+/// profiles were warm-started. Profiles the current monitoring history
+/// *did* produce are never overwritten — recall only fills gaps, so a
+/// continuing process is a no-op and a restarted one picks up where the
+/// persisted KB left off.
+fn warm_start_profiles(kb: &KnowledgeBase, app: &mut Application) -> usize {
+    let mut filled = 0usize;
+    for svc in &mut app.services {
+        for fl in &mut svc.flavours {
+            if fl.energy.is_none() {
+                if let Some((kwh, samples)) = kb.recall_profile(&svc.id, &fl.name) {
+                    fl.energy = Some(EnergyProfile { kwh, samples });
+                    filled += 1;
+                }
+            }
+        }
+    }
+    // deterministic order: IK is a HashMap, but the order link energies
+    // are pushed shapes comm-candidate order downstream — sort the keys
+    let mut ik_keys: Vec<&(String, String, String)> = kb.ik.keys().collect();
+    ik_keys.sort();
+    for (from, flavour, to) in ik_keys {
+        // only recall interactions whose source flavour still exists —
+        // a revised app may have dropped the flavour the KB remembers,
+        // and a fabricated candidate would pollute the τ pool
+        if app
+            .service(from)
+            .and_then(|s| s.flavour(flavour))
+            .is_none()
+        {
+            continue;
+        }
+        let Some((mean, _)) = kb.recall_interaction(from, flavour, to) else {
+            continue;
+        };
+        if let Some(link) = app.link_mut(from, to) {
+            if !link.energy.iter().any(|(f, _)| f == flavour) {
+                link.energy.push((flavour.clone(), mean));
+                filled += 1;
+            }
+        }
+    }
+    filled
 }
 
 #[cfg(test)]
@@ -283,6 +472,65 @@ mod tests {
         // second epoch with the same scenario refreshes rather than grows
         pipeline.run_scenario(&scenario).unwrap();
         assert_eq!(pipeline.kb.ck.len(), ck_after_first);
+    }
+
+    #[test]
+    fn incremental_epochs_match_full_epochs() {
+        let scenario = scenarios::scenario(1).unwrap();
+        let mut full = GeneratorPipeline::new(PipelineConfig::default());
+        let mut inc = GeneratorPipeline::new(PipelineConfig::default());
+        let mut app_f = scenario.app.clone();
+        let mut app_i = scenario.app.clone();
+        let mut sim_f = WorkloadSimulator::new(scenario.truth.clone(), scenario.seed);
+        let mut sim_i = WorkloadSimulator::new(scenario.truth.clone(), scenario.seed);
+        let mut store_f = MetricStore::new();
+        let mut store_i = MetricStore::new();
+        for epoch in 1..=3usize {
+            let t = epoch as f64 * 6.0 * 3600.0;
+            sim_f.scrape_into(&mut store_f, t);
+            sim_i.scrape_into(&mut store_i, t);
+            let mut infra_f = scenario.infra.clone();
+            let mut infra_i = scenario.infra.clone();
+            let of = full
+                .run_epoch(&mut app_f, &mut infra_f, &store_f, &scenario.intensity, t)
+                .unwrap();
+            let oi = inc
+                .run_incremental(&mut app_i, &mut infra_i, &store_i, &scenario.intensity, t)
+                .unwrap();
+            assert_eq!(of.ranked, oi.ranked, "epoch {epoch}");
+            assert_eq!(of.raw.tau.to_bits(), oi.raw.tau.to_bits());
+            assert!(of.incremental.is_none());
+            let stats = oi.incremental.unwrap();
+            assert_eq!(stats.total_rows, of.raw.rows.len());
+            assert_eq!(stats.full_rebuild, epoch == 1, "epoch {epoch}");
+        }
+    }
+
+    #[test]
+    fn kb_warm_start_generates_without_fresh_observations() {
+        // learn profiles on scenario 1 (they land in SK)
+        let mut pipeline = GeneratorPipeline::new(PipelineConfig::default());
+        let scenario = scenarios::scenario(1).unwrap();
+        let first = pipeline.run_scenario(&scenario).unwrap();
+        assert!(!first.ranked.is_empty());
+
+        // a later epoch with a FRESH app clone (profiles gone) and an
+        // empty monitoring store: recall from the KB warm-starts the
+        // profiles, so constraints are still generated
+        let mut app = scenario.app.clone();
+        let mut infra = scenario.infra.clone();
+        let store = MetricStore::new();
+        let outcome = pipeline
+            .run_epoch(&mut app, &mut infra, &store, &scenario.intensity, 999.0)
+            .unwrap();
+        assert!(!outcome.ranked.is_empty());
+        assert!(app
+            .service("frontend")
+            .unwrap()
+            .flavour("large")
+            .unwrap()
+            .energy
+            .is_some());
     }
 
     #[test]

@@ -32,6 +32,31 @@ impl AnalyticsInput {
         self.c.len()
     }
 
+    /// Extract the sub-instance holding only `rows` (all nodes kept).
+    ///
+    /// Row statistics and savings bounds are computed independently per
+    /// row by every backend, so evaluating the subset and scattering the
+    /// outputs back (see [`AnalyticsOutput::scatter_rows`]) reproduces a
+    /// full evaluation bit-for-bit on those rows — the contract the
+    /// incremental constraint generator rests on. The pooled τ inputs are
+    /// deliberately dropped: incremental callers maintain the pool in an
+    /// updatable [`crate::util::QuantilePool`] instead.
+    pub fn subset_rows(&self, rows: &[usize]) -> AnalyticsInput {
+        let n = self.nodes();
+        let mut sub = AnalyticsInput {
+            e: Vec::with_capacity(rows.len()),
+            c: self.c.clone(),
+            mask: Vec::with_capacity(rows.len() * n),
+            pool: Vec::new(),
+            alpha: self.alpha,
+        };
+        for &r in rows {
+            sub.e.push(self.e[r]);
+            sub.mask.extend_from_slice(&self.mask[r * n..(r + 1) * n]);
+        }
+        sub
+    }
+
     /// Structural validation (mask shape, alpha range).
     pub fn validate(&self) -> Result<()> {
         if self.mask.len() != self.e.len() * self.c.len() {
@@ -72,9 +97,27 @@ pub struct AnalyticsOutput {
 }
 
 impl AnalyticsOutput {
+    /// Row-major accessor into one of the R×N output tensors.
     #[inline]
     pub fn at(&self, slice: &[f32], row: usize, node: usize, nodes: usize) -> f32 {
         slice[row * nodes + node]
+    }
+
+    /// Write the per-row outputs of a subset evaluation (`sub`, produced
+    /// from [`AnalyticsInput::subset_rows`] with the same `rows` order)
+    /// back into this full-size output. `tau`/`gmax` are left untouched:
+    /// they are pooled quantities the incremental caller owns.
+    pub fn scatter_rows(&mut self, rows: &[usize], sub: &AnalyticsOutput, nodes: usize) {
+        for (i, &r) in rows.iter().enumerate() {
+            self.row_min[r] = sub.row_min[i];
+            self.row_max[r] = sub.row_max[i];
+            self.row_max2[r] = sub.row_max2[i];
+            let dst = r * nodes..(r + 1) * nodes;
+            let src = i * nodes..(i + 1) * nodes;
+            self.impact[dst.clone()].copy_from_slice(&sub.impact[src.clone()]);
+            self.sav_hi[dst.clone()].copy_from_slice(&sub.sav_hi[src.clone()]);
+            self.sav_lo[dst].copy_from_slice(&sub.sav_lo[src]);
+        }
     }
 }
 
@@ -112,6 +155,42 @@ mod tests {
             alpha: 0.8,
         };
         assert!(good.validate().is_ok());
+    }
+
+    #[test]
+    fn subset_rows_scatter_matches_full_run() {
+        use crate::runtime::NativeBackend;
+        crate::util::proptest::check("subset rows == full run rows", 32, |rng| {
+            let r = 1 + rng.below(12);
+            let n = 1 + rng.below(8);
+            let input = AnalyticsInput {
+                e: (0..r).map(|_| rng.range(0.0, 5.0) as f32).collect(),
+                c: (0..n).map(|_| rng.range(5.0, 600.0) as f32).collect(),
+                mask: (0..r * n)
+                    .map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 })
+                    .collect(),
+                pool: (0..rng.below(10)).map(|_| rng.range(0.0, 900.0) as f32).collect(),
+                alpha: 0.8,
+            };
+            let full = NativeBackend.run(&input).unwrap();
+            // start from a corrupted copy of the dirty rows; subset-run +
+            // scatter (the incremental generator's mechanism) must heal it
+            let rows: Vec<usize> = (0..r).filter(|_| rng.chance(0.5)).collect();
+            let mut patched = full.clone();
+            for &row in &rows {
+                patched.row_min[row] = -1.0;
+                for node in 0..n {
+                    patched.impact[row * n + node] = -1.0;
+                    patched.sav_hi[row * n + node] = -1.0;
+                    patched.sav_lo[row * n + node] = -1.0;
+                }
+            }
+            if !rows.is_empty() {
+                let sub = NativeBackend.run(&input.subset_rows(&rows)).unwrap();
+                patched.scatter_rows(&rows, &sub, n);
+            }
+            assert_eq!(patched, full);
+        });
     }
 
     #[test]

@@ -221,6 +221,33 @@ struct Undo {
 /// constraints), keeps capacity in sync, and records an undo entry so
 /// search can backtrack ([`ScoreState::undo`]) or roll a whole
 /// destroyed-and-rebuilt neighbourhood back ([`ScoreState::rollback_to`]).
+///
+/// # Example
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the crate's rpath to
+/// // the bundled libstdc++; the same flow is exercised for real in
+/// // rust/tests/localsearch.rs)
+/// use greengen::scheduler::{Move, Objective, Problem, ScoreState};
+/// use greengen::simulate::{topology, Topology, TopologySpec};
+///
+/// let (app, infra) = topology::generate(&TopologySpec::new(Topology::GeoRegions, 8, 12));
+/// let problem = Problem {
+///     app: &app,
+///     infra: &infra,
+///     constraints: &[],
+///     objective: Objective::default(),
+/// };
+/// let index = problem.constraint_index();
+/// let mut state = ScoreState::new(&problem, &index, vec![None; app.services.len()]);
+/// let mark = state.mark();
+/// if let Some(delta) = state.apply(Move::Reassign { service: 0, flavour: 0, node: 0 }) {
+///     if delta.total > 0.0 {
+///         state.rollback_to(mark); // worse than before: revert the move
+///     }
+/// }
+/// // the exactness contract: the cached value tracks a full rescore
+/// assert!((state.objective() - problem.objective_value(state.assignment())).abs() < 1e-9);
+/// ```
 pub struct ScoreState<'p, 'a> {
     problem: &'p Problem<'a>,
     index: &'p ConstraintIndex,

@@ -491,6 +491,25 @@ impl Scheduler for LnsScheduler {
 /// large-neighbourhood search, keeping the best plan found. Both
 /// improvers are monotone on their entry state, so the portfolio is
 /// never worse than greedy (property-tested).
+///
+/// # Example
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the crate's rpath to
+/// // the bundled libstdc++; the same flow is exercised for real in
+/// // rust/tests/localsearch.rs)
+/// use greengen::scheduler::{Objective, PortfolioScheduler, Problem, Scheduler};
+/// use greengen::simulate::{topology, Topology, TopologySpec};
+///
+/// let (app, infra) = topology::generate(&TopologySpec::new(Topology::GeoRegions, 16, 24));
+/// let problem = Problem {
+///     app: &app,
+///     infra: &infra,
+///     constraints: &[],
+///     objective: Objective::default(),
+/// };
+/// let plan = PortfolioScheduler::seeded(7).schedule(&problem).unwrap();
+/// assert!(!plan.placements.is_empty());
+/// ```
 #[derive(Debug, Clone)]
 pub struct PortfolioScheduler {
     /// Deterministic seed (annealing and LNS derive their own streams).

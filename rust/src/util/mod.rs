@@ -7,4 +7,4 @@ pub mod rng;
 pub mod stats;
 
 pub use rng::Rng;
-pub use stats::{mean, quantile_lower, Summary};
+pub use stats::{mean, quantile_lower, QuantilePool, Summary};

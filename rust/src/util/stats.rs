@@ -25,6 +25,139 @@ pub fn quantile_lower(values: &[f64], alpha: f64) -> f64 {
     sorted[k - 1]
 }
 
+/// Updatable pooled-quantile structure: an exact order-statistic multiset
+/// over `f32` values with O(log n) insert/remove, built for the
+/// incremental constraint generator.
+///
+/// The full generation pass derives τ by sorting the pooled observed
+/// impacts and picking the `k = ceil(α·n)`-th smallest (Eq. 5, f32 index
+/// arithmetic — see `runtime::NativeBackend`). Re-pooling every row each
+/// adaptive epoch is O(n log n) even when one row changed; this structure
+/// keeps the pool as a count-multiset keyed by the total-order bit
+/// pattern of each value, so an epoch that touches `d` rows pays
+/// O(d log n) updates and one O(distinct) selection — and the selected τ
+/// is **bit-identical** to the sort-based full pass (same value at the
+/// same order statistic, same f32 `k` computation).
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the crate's rpath to
+/// // the bundled libstdc++; the same contract is exercised for real in
+/// // the util::stats unit tests)
+/// use greengen::util::QuantilePool;
+///
+/// let mut pool = QuantilePool::new();
+/// for x in [10.0_f32, 40.0, 20.0, 30.0, 50.0] {
+///     pool.insert(x);
+/// }
+/// assert_eq!(pool.quantile(0.8), 40.0); // ceil(0.8·5) = 4th smallest
+/// pool.remove(40.0);
+/// assert_eq!(pool.quantile(0.8), 50.0); // ceil(0.8·4) = 4th of 4
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct QuantilePool {
+    /// value (total-order key) -> multiplicity.
+    counts: std::collections::BTreeMap<u32, u64>,
+    len: u64,
+}
+
+/// Map an `f32` to a `u32` whose unsigned order equals the numeric total
+/// order (negative values flip entirely, non-negative set the sign bit).
+fn total_order_key(x: f32) -> u32 {
+    let bits = x.to_bits();
+    if bits & 0x8000_0000 != 0 {
+        !bits
+    } else {
+        bits | 0x8000_0000
+    }
+}
+
+fn from_total_order_key(key: u32) -> f32 {
+    if key & 0x8000_0000 != 0 {
+        f32::from_bits(key & 0x7FFF_FFFF)
+    } else {
+        f32::from_bits(!key)
+    }
+}
+
+impl QuantilePool {
+    /// Empty pool.
+    pub fn new() -> Self {
+        QuantilePool::default()
+    }
+
+    /// Number of pooled values (with multiplicity).
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    /// Whether the pool holds no values.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Add one value to the pool.
+    pub fn insert(&mut self, x: f32) {
+        *self.counts.entry(total_order_key(x)).or_insert(0) += 1;
+        self.len += 1;
+    }
+
+    /// Remove one occurrence of `x`; returns whether it was present.
+    /// (Removal is by exact bit pattern — callers remove the very value
+    /// they previously inserted.)
+    pub fn remove(&mut self, x: f32) -> bool {
+        let key = total_order_key(x);
+        match self.counts.get_mut(&key) {
+            Some(c) if *c > 1 => {
+                *c -= 1;
+                self.len -= 1;
+                true
+            }
+            Some(_) => {
+                self.counts.remove(&key);
+                self.len -= 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop every value.
+    pub fn clear(&mut self) {
+        self.counts.clear();
+        self.len = 0;
+    }
+
+    /// The lower empirical quantile at level `alpha`, computed with the
+    /// same f32 index arithmetic as the analytics backends
+    /// (`k = ceil(alpha * n)` in f32, clamped to `[1, n]`); `0` when
+    /// empty. Matches [`quantile_lower`] and the pooled τ of a full
+    /// generation pass bit-for-bit.
+    pub fn quantile(&self, alpha: f32) -> f32 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        let k = ((alpha * self.len as f32).ceil() as u64).clamp(1, self.len);
+        let mut seen = 0u64;
+        for (&key, &count) in &self.counts {
+            seen += count;
+            if seen >= k {
+                return from_total_order_key(key);
+            }
+        }
+        unreachable!("k <= len guarantees selection")
+    }
+
+    /// The largest pooled value (the `gmax` ranker normaliser); `0` when
+    /// empty.
+    pub fn max(&self) -> f32 {
+        self.counts
+            .keys()
+            .next_back()
+            .map(|&k| from_total_order_key(k))
+            .unwrap_or(0.0)
+    }
+}
+
 /// Running min/max/mean/count summary — the aggregation the Knowledge Base
 /// keeps for service (SK), interaction (IK) and node (NK) profiles
 /// (Eq. 7–9).
@@ -132,5 +265,93 @@ mod tests {
     fn mean_empty() {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+
+    /// Reference implementation: the native backend's sort-based τ.
+    fn sorted_quantile(values: &[f32], alpha: f32) -> f32 {
+        if values.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cnt = sorted.len();
+        let k = ((alpha * cnt as f32).ceil() as usize).clamp(1, cnt);
+        sorted[k - 1]
+    }
+
+    #[test]
+    fn quantile_pool_matches_sorted_reference() {
+        let mut pool = QuantilePool::new();
+        let values = [10.0f32, 40.0, 20.0, 30.0, 50.0, 20.0, 0.5];
+        for v in values {
+            pool.insert(v);
+        }
+        for alpha in [0.0, 0.2, 0.5, 0.8, 0.9, 1.0] {
+            assert_eq!(pool.quantile(alpha), sorted_quantile(&values, alpha), "{alpha}");
+        }
+        assert_eq!(pool.max(), 50.0);
+        assert_eq!(pool.len(), 7);
+    }
+
+    #[test]
+    fn quantile_pool_insert_remove_property() {
+        crate::util::proptest::check("pool == sorted after churn", 64, |rng| {
+            let mut pool = QuantilePool::new();
+            let mut live: Vec<f32> = Vec::new();
+            for _ in 0..200 {
+                if !live.is_empty() && rng.chance(0.4) {
+                    let idx = rng.below(live.len());
+                    let v = live.swap_remove(idx);
+                    assert!(pool.remove(v));
+                } else {
+                    // mix of magnitudes, duplicates and negatives
+                    let v = match rng.below(4) {
+                        0 => rng.range(-5.0, 5.0) as f32,
+                        1 => rng.range(0.0, 1e6) as f32,
+                        2 => 42.0,
+                        _ => rng.range(0.0, 1.0) as f32,
+                    };
+                    live.push(v);
+                    pool.insert(v);
+                }
+                let alpha = rng.range(0.0, 1.0) as f32;
+                assert_eq!(pool.quantile(alpha), sorted_quantile(&live, alpha));
+                if !live.is_empty() {
+                    let mx = live.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    assert_eq!(pool.max(), mx);
+                }
+                assert_eq!(pool.len(), live.len());
+            }
+        });
+    }
+
+    #[test]
+    fn quantile_pool_empty_and_absent_removal() {
+        let mut pool = QuantilePool::new();
+        assert!(pool.is_empty());
+        assert_eq!(pool.quantile(0.8), 0.0);
+        assert_eq!(pool.max(), 0.0);
+        assert!(!pool.remove(1.0));
+        pool.insert(7.0);
+        pool.insert(7.0);
+        assert!(pool.remove(7.0));
+        assert_eq!(pool.len(), 1);
+        assert_eq!(pool.quantile(1.0), 7.0);
+        pool.clear();
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn total_order_key_round_trip_and_order() {
+        for v in [-3.5f32, -0.0, 0.0, 1e-12, 2.0, 1e30] {
+            assert_eq!(from_total_order_key(total_order_key(v)).to_bits(), v.to_bits());
+        }
+        let mut keys: Vec<u32> = [-7.0f32, -1.0, 0.0, 0.5, 3.0, 100.0]
+            .iter()
+            .map(|&v| total_order_key(v))
+            .collect();
+        let sorted = keys.clone();
+        keys.sort_unstable();
+        assert_eq!(keys, sorted);
     }
 }

@@ -16,6 +16,59 @@ fn greengen(args: &[&str]) -> (String, String, bool) {
     )
 }
 
+/// Keeps `docs/cli.md` honest: its `## \`greengen <cmd>\`` headings must
+/// match the usage screen exactly, and every documented subcommand must
+/// be accepted by the arg parser (a rejected *option* proves the command
+/// routed — an unknown command fails with "unknown command" instead).
+#[test]
+fn cli_doc_headings_match_parser() {
+    let doc = std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/cli.md"))
+        .expect("docs/cli.md");
+    let documented: std::collections::BTreeSet<String> = doc
+        .lines()
+        .filter_map(|l| l.strip_prefix("## `greengen "))
+        .map(|l| {
+            l.trim_end()
+                .trim_end_matches('`')
+                .split_whitespace()
+                .next()
+                .unwrap()
+                .to_string()
+        })
+        .collect();
+    assert!(!documented.is_empty(), "no `## \\`greengen <cmd>\\`` headings found");
+
+    let (usage, _, ok) = greengen(&["help"]);
+    assert!(ok);
+    let advertised: std::collections::BTreeSet<String> = usage
+        .lines()
+        .filter_map(|l| l.trim_start().strip_prefix("greengen "))
+        .filter_map(|rest| rest.split_whitespace().next())
+        // drop the banner line ("greengen — Green by Design ...")
+        .filter(|token| token.chars().all(|ch| ch.is_ascii_alphabetic()))
+        .map(str::to_string)
+        .collect();
+    assert_eq!(
+        documented, advertised,
+        "docs/cli.md headings out of sync with the greengen usage screen"
+    );
+
+    for cmd in &documented {
+        if cmd == "info" {
+            // takes no options; accepted iff it runs
+            let (_, stderr, ok) = greengen(&[cmd.as_str()]);
+            assert!(ok, "{cmd}: {stderr}");
+            continue;
+        }
+        let (_, stderr, ok) = greengen(&[cmd.as_str(), "--definitely-not-an-option"]);
+        assert!(!ok, "{cmd} accepted a bogus option");
+        assert!(
+            stderr.contains("unknown option"),
+            "{cmd} is documented but not routed by the parser: {stderr}"
+        );
+    }
+}
+
 #[test]
 fn help_lists_commands() {
     let (stdout, _, ok) = greengen(&["help"]);
@@ -144,6 +197,24 @@ fn adaptive_short_run_reports_reduction() {
 }
 
 #[test]
+fn adaptive_incremental_reports_row_telemetry() {
+    let (stdout, stderr, ok) = greengen(&[
+        "adaptive",
+        "--hours",
+        "12",
+        "--regen",
+        "6",
+        "--incremental",
+        "--zones",
+        "2",
+    ]);
+    assert!(ok, "{stderr}");
+    // per-epoch constraint-generation dirty-row counts are in the log
+    assert!(stdout.contains("rows(dirty/total)"), "{stdout}");
+    assert!(stdout.contains("zones(dirty/total)"), "{stdout}");
+}
+
+#[test]
 fn schedule_emits_plan_and_metrics() {
     let (stdout, _, ok) = greengen(&["schedule", "--scenario", "1"]);
     assert!(ok);
@@ -205,5 +276,28 @@ fn generate_from_files_round_trips() {
     assert!(ok, "{stderr}");
     // analytic profiles: frontend/large on italy tops the ranking
     assert!(stdout.contains("avoidNode(d(frontend, large), italy, 1.000)."));
+
+    // --incremental: epoch 0 is the cold full pass, epoch 1 reuses
+    // everything (same files, nothing changed) — and the constraints are
+    // the same as the full run above
+    let (stdout2, stderr2, ok) = greengen(&[
+        "generate",
+        "--app",
+        app_path.to_str().unwrap(),
+        "--infra",
+        infra_path.to_str().unwrap(),
+        "--incremental",
+        "--epochs",
+        "2",
+    ]);
+    assert!(ok, "{stderr2}");
+    // telemetry on stderr; stdout stays machine-readable
+    assert!(stderr2.contains("full_rebuild true"), "{stderr2}");
+    assert!(stderr2.contains("dirty_rows 0/"), "{stderr2}");
+    assert!(
+        stdout2.contains("avoidNode(d(frontend, large), italy, 1.000)."),
+        "{stdout2}"
+    );
+    assert!(!stdout2.contains("# epoch"), "{stdout2}");
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,204 @@
+//! Integration property: **full regeneration == incremental
+//! regeneration** — identical constraints, τ and ranking — across random
+//! perturbation sequences (profile drift, regional carbon swings,
+//! compatibility-mask flips, link re-pricing, node failures) on all four
+//! continuum topology presets.
+
+use greengen::constraints::{
+    Constraint, ConstraintGenerator, ConstraintLibrary, GeneratorConfig, IncrementalGenerator,
+};
+use greengen::model::{Application, Infrastructure};
+use greengen::ranker::Ranker;
+use greengen::runtime::NativeBackend;
+use greengen::simulate::{topology, Topology, TopologySpec};
+use greengen::util::proptest::check;
+use greengen::util::Rng;
+
+fn sorted(cs: &[Constraint]) -> Vec<Constraint> {
+    let mut out = cs.to_vec();
+    out.sort_by(|a, b| a.kind.key().cmp(&b.kind.key()));
+    out
+}
+
+/// One random epoch-to-epoch change of the kind the adaptive loop sees.
+fn perturb(rng: &mut Rng, app: &mut Application, infra: &mut Infrastructure) {
+    match rng.below(8) {
+        0 => {} // quiet epoch: nothing changed
+        1 | 2 | 3 => {
+            // a handful of energy profiles drift (the common case)
+            for _ in 0..=rng.below(3) {
+                let si = rng.below(app.services.len());
+                let svc = &mut app.services[si];
+                let fi = rng.below(svc.flavours.len());
+                if let Some(profile) = &mut svc.flavours[fi].energy {
+                    profile.kwh *= rng.range(0.7, 1.4);
+                    profile.samples += 1;
+                }
+            }
+        }
+        4 => {
+            // one region's grid swings (browns out or greens up)
+            let region = infra.nodes[rng.below(infra.nodes.len())].region.clone();
+            let factor = rng.range(0.5, 1.8);
+            for n in &mut infra.nodes {
+                if n.region == region {
+                    n.profile.carbon = Some((n.carbon() * factor).clamp(10.0, 650.0));
+                }
+            }
+        }
+        5 => {
+            // a security requirement flips: compatibility masks change
+            let si = rng.below(app.services.len());
+            let sec = &mut app.services[si].requirements.security;
+            sec.firewall = !sec.firewall;
+        }
+        6 => {
+            // a link's learned communication energy moves
+            if !app.links.is_empty() {
+                let li = rng.below(app.links.len());
+                let link = &mut app.links[li];
+                if !link.energy.is_empty() {
+                    let ei = rng.below(link.energy.len());
+                    link.energy[ei].1 *= rng.range(0.5, 2.5);
+                }
+            }
+        }
+        _ => {
+            // a node fails (structural: the incremental path must detect
+            // it and fall back to a full rebuild)
+            if infra.nodes.len() > 4 {
+                let ni = rng.below(infra.nodes.len());
+                infra.nodes.remove(ni);
+            }
+        }
+    }
+}
+
+fn drive(topo: Topology, config: GeneratorConfig, nodes: usize, services: usize, seed: u64, epochs: usize) {
+    let spec = TopologySpec::new(topo, nodes, services)
+        .with_zones(4)
+        .with_seed(seed);
+    let (mut app, mut infra) = topology::generate(&spec);
+    // a third of the fleet offers a firewall, so security flips actually
+    // move compatibility masks rather than emptying them
+    for (i, n) in infra.nodes.iter_mut().enumerate() {
+        if i % 3 == 0 {
+            n.capabilities.firewall = true;
+        }
+    }
+    let backend = NativeBackend;
+    let library = ConstraintLibrary::default();
+    let mut inc = IncrementalGenerator::new(config);
+    let mut rng = Rng::new(seed ^ 0xD17);
+    let ranker = Ranker::default();
+
+    for epoch in 0..epochs {
+        let nodes_before = infra.nodes.len();
+        if epoch > 0 {
+            perturb(&mut rng, &mut app, &mut infra);
+        }
+        let node_removed = infra.nodes.len() != nodes_before;
+        let full = ConstraintGenerator::new(&backend)
+            .with_config(config)
+            .generate(&app, &infra)
+            .unwrap();
+        let (result, stats) = inc.generate(&backend, &library, &app, &infra).unwrap();
+
+        let tag = format!("{} epoch {epoch} (seed {seed:#x})", topo.name());
+        // τ and the ranker normaliser: bit-identical (eps 0 <= 1e-9)
+        assert_eq!(full.tau.to_bits(), result.tau.to_bits(), "tau diverged: {tag}");
+        assert_eq!(full.gmax.to_bits(), result.gmax.to_bits(), "gmax diverged: {tag}");
+        // constraint sets: identical down to em / savings bounds
+        assert_eq!(
+            sorted(&full.constraints),
+            sorted(&result.constraints),
+            "constraints diverged: {tag}"
+        );
+        // ranking: identical order and weights
+        assert_eq!(
+            ranker.rank_fresh(&full.constraints),
+            ranker.rank_fresh(&result.constraints),
+            "ranking diverged: {tag}"
+        );
+        // stats sanity: the perturbation menu only changes the node set
+        // structurally, so full rebuilds happen exactly on cold start and
+        // node failure
+        assert_eq!(stats.total_rows, full.rows.len(), "{tag}");
+        assert!(stats.dirty_rows <= stats.total_rows, "{tag}");
+        assert_eq!(stats.full_rebuild, epoch == 0 || node_removed, "{tag}");
+    }
+}
+
+const EPOCHS: usize = 7;
+
+#[test]
+fn geo_regions_full_equals_incremental() {
+    check("geo-regions full == incremental", 4, |rng| {
+        let config = GeneratorConfig {
+            alpha: 0.8,
+            use_prolog: false,
+        };
+        drive(Topology::GeoRegions, config, 16, 28, rng.next_u64(), EPOCHS);
+    });
+}
+
+#[test]
+fn cloud_edge_hierarchy_full_equals_incremental() {
+    check("cloud-edge-hierarchy full == incremental", 4, |rng| {
+        let config = GeneratorConfig {
+            alpha: 0.8,
+            use_prolog: false,
+        };
+        drive(Topology::CloudEdgeHierarchy, config, 20, 24, rng.next_u64(), EPOCHS);
+    });
+}
+
+#[test]
+fn iot_swarm_full_equals_incremental() {
+    check("iot-swarm full == incremental", 4, |rng| {
+        let config = GeneratorConfig {
+            alpha: 0.8,
+            use_prolog: false,
+        };
+        drive(Topology::IotSwarm, config, 20, 24, rng.next_u64(), EPOCHS);
+    });
+}
+
+#[test]
+fn hybrid_burst_full_equals_incremental() {
+    check("hybrid-burst full == incremental", 4, |rng| {
+        let config = GeneratorConfig {
+            alpha: 0.8,
+            use_prolog: false,
+        };
+        drive(Topology::HybridBurst, config, 16, 28, rng.next_u64(), EPOCHS);
+    });
+}
+
+#[test]
+fn prolog_path_full_equals_incremental() {
+    // the paper-formulation Prolog path goes through the same incremental
+    // machinery (sub-database over dirty rows); keep the instance small —
+    // the rule engine is the expensive part
+    check("prolog full == incremental", 2, |rng| {
+        drive(
+            Topology::GeoRegions,
+            GeneratorConfig::default(), // use_prolog: true
+            8,
+            12,
+            rng.next_u64(),
+            5,
+        );
+    });
+}
+
+#[test]
+fn tighter_alpha_also_agrees() {
+    check("alpha 0.5 full == incremental", 2, |rng| {
+        let config = GeneratorConfig {
+            alpha: 0.5,
+            use_prolog: false,
+        };
+        drive(Topology::GeoRegions, config, 16, 24, rng.next_u64(), 5);
+    });
+}

@@ -101,6 +101,47 @@ fn stale_constraints_eventually_evicted() {
 }
 
 #[test]
+fn kb_warm_start_recall_regenerates_after_restart() {
+    let dir = tmp_dir("warmstart");
+    let scenario = scenarios::scenario(1).unwrap();
+
+    // first "process": learn profiles + constraints, persist the KB
+    let keys_before: Vec<String> = {
+        let mut pipeline = GeneratorPipeline::new(PipelineConfig::default());
+        pipeline.run_scenario(&scenario).unwrap();
+        pipeline.kb.save(&dir).unwrap();
+        pipeline.kb.ck.keys().cloned().collect()
+    };
+    assert!(!keys_before.is_empty());
+
+    // second "process": fresh app (profiles lost) and an EMPTY monitoring
+    // store — the §3 recall path warm-starts the profiles from SK, so the
+    // same constraints are regenerated with full memory weight instead of
+    // merely decaying toward eviction
+    let mut pipeline = GeneratorPipeline::new(PipelineConfig::default())
+        .with_kb_dir(&dir)
+        .unwrap();
+    let mut app = scenario.app.clone();
+    let mut infra = scenario.infra.clone();
+    let store = greengen::monitoring::MetricStore::new();
+    let outcome = pipeline
+        .run_epoch(&mut app, &mut infra, &store, &scenario.intensity, 7200.0)
+        .unwrap();
+    assert!(!outcome.ranked.is_empty());
+
+    let mut keys_after: Vec<String> = pipeline.kb.ck.keys().cloned().collect();
+    let mut keys_expected = keys_before.clone();
+    keys_after.sort();
+    keys_expected.sort();
+    assert_eq!(keys_after, keys_expected, "recalled constraints diverged");
+    for (key, entry) in &pipeline.kb.ck {
+        assert_eq!(entry.mu, 1.0, "{key} decayed despite warm-start recall");
+        assert_eq!(entry.generated_at, 7200.0, "{key}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn corrupted_kb_file_is_an_error_not_a_panic() {
     let dir = tmp_dir("corrupt");
     std::fs::write(dir.join("ck.json"), "{not json").unwrap();

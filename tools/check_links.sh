@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Docs link checker: fail on dead *relative* markdown links in README.md
+# and docs/. External (http/https/mailto) links and pure #anchors are
+# skipped — the build environment is offline. Anchors on relative links
+# are checked for file existence only.
+#
+# Usage: tools/check_links.sh [repo-root]
+set -u
+
+root="${1:-.}"
+fail=0
+
+check_file() {
+    local file="$1"
+    local dir
+    dir="$(dirname "$file")"
+    # pull every ](target) occurrence out of inline markdown links
+    # (grep -o keeps it line-based; multi-line link targets don't occur
+    # in this tree and would be a style bug anyway)
+    while IFS= read -r target; do
+        case "$target" in
+            http://*|https://*|mailto:*|\#*) continue ;;
+        esac
+        local path="${target%%#*}"
+        [ -z "$path" ] && continue
+        # resolve ONLY against the containing file's directory — that is
+        # how rendered markdown resolves it; a repo-root fallback would
+        # green-light links that 404 when rendered
+        if [ ! -e "$dir/$path" ]; then
+            echo "DEAD LINK: $file -> $target"
+            fail=1
+        fi
+    done < <(grep -o ']([^)]*)' "$file" | sed 's/^](//; s/)$//')
+}
+
+for f in "$root"/README.md "$root"/docs/*.md; do
+    [ -e "$f" ] || continue
+    check_file "$f"
+done
+
+if [ "$fail" -ne 0 ]; then
+    echo "docs link check FAILED"
+    exit 1
+fi
+echo "docs link check OK"
