@@ -1,0 +1,367 @@
+//! Compiled constraint rows: [`ConstraintKind`]'s `String` fields
+//! resolved once against the interned model ids into dense rows grouped
+//! per service.
+//!
+//! The pre-refactor `ConstraintIndex` resolved names with O(services)
+//! `iter().position` scans *per constraint* and was rebuilt from scratch
+//! by every solver. [`CompiledConstraints::resolve`] does the same
+//! resolution in O(1) per name via the [`ModelIndex`] symbol tables and
+//! produces the structure every scoring layer consumes: a flat row
+//! vector (violation pricing) plus a CSR per-service grouping
+//! (O(touched-constraints) incremental move pricing).
+//!
+//! Semantics are identical to the legacy string path for every
+//! constraint that *resolves* (property-tested in
+//! `rust/tests/compiled_core.rs`): rows keep constraint order, so
+//! penalty sums are bit-for-bit the old sums. A constraint whose
+//! service/flavour/node does not resolve is uniformly *inert* — omitted,
+//! never violated. That uniformity is a deliberate unification: the
+//! pre-refactor tree disagreed with itself about a `PreferNode` whose
+//! target node no longer exists (the string `soft_penalty` charged it
+//! whenever the subject was placed, while the solvers' and evaluator's
+//! `ConstraintIndex` treated it as inert); the solver semantics won, and
+//! `stale_prefer_node_is_inert_by_design` pins it.
+
+use crate::constraints::{Constraint, ConstraintKind};
+use crate::model::interner::ModelIndex;
+
+/// What a resolved row tests (the dense `tag` of the row tuple).
+#[derive(Debug, Clone, Copy)]
+enum RowKind {
+    /// Violated when (service, flavour) sits exactly on `node`.
+    Avoid { node: u32 },
+    /// Violated when (service, flavour) is placed on a different node
+    /// than `other` (both placed).
+    Affinity { other: u32 },
+    /// Violated when (service, flavour) is placed anywhere but `node`.
+    Prefer { node: u32 },
+}
+
+/// One dense `(svc, fl, target, weight, tag)` constraint row.
+#[derive(Debug, Clone, Copy)]
+struct Row {
+    service: u32,
+    flavour: u32,
+    weight: f64,
+    kind: RowKind,
+}
+
+/// The compiled constraint set of one problem instance.
+#[derive(Debug, Clone, Default)]
+pub struct CompiledConstraints {
+    /// Resolved rows in constraint order (inert constraints omitted).
+    rows: Vec<Row>,
+    /// CSR offsets: rows touching service `i` live at
+    /// `touch[touch_off[i]..touch_off[i + 1]]`.
+    touch_off: Vec<u32>,
+    /// CSR payload: row indices, in constraint order per service.
+    touch: Vec<u32>,
+}
+
+impl CompiledConstraints {
+    /// Resolve a constraint list against the interned model. O(1) per
+    /// name; unresolvable (inert) constraints are dropped.
+    pub fn resolve(symbols: &ModelIndex, constraints: &[Constraint]) -> CompiledConstraints {
+        let n_services = symbols.app.services();
+        let mut rows = Vec::with_capacity(constraints.len());
+        let mut touching: Vec<Vec<u32>> = vec![Vec::new(); n_services];
+        for c in constraints {
+            let resolved = match &c.kind {
+                ConstraintKind::AvoidNode {
+                    service,
+                    flavour,
+                    node,
+                } => symbols.app.service(service).and_then(|sid| {
+                    let nid = symbols.infra.node(node)?;
+                    let fid = symbols.app.flavour(sid, flavour)?;
+                    Some((
+                        sid,
+                        fid,
+                        RowKind::Avoid {
+                            node: nid.index() as u32,
+                        },
+                    ))
+                }),
+                ConstraintKind::Affinity {
+                    service,
+                    flavour,
+                    other,
+                } => symbols.app.service(service).and_then(|sid| {
+                    let oid = symbols.app.service(other)?;
+                    let fid = symbols.app.flavour(sid, flavour)?;
+                    Some((
+                        sid,
+                        fid,
+                        RowKind::Affinity {
+                            other: oid.index() as u32,
+                        },
+                    ))
+                }),
+                ConstraintKind::PreferNode {
+                    service,
+                    flavour,
+                    node,
+                } => symbols.app.service(service).and_then(|sid| {
+                    let nid = symbols.infra.node(node)?;
+                    let fid = symbols.app.flavour(sid, flavour)?;
+                    Some((
+                        sid,
+                        fid,
+                        RowKind::Prefer {
+                            node: nid.index() as u32,
+                        },
+                    ))
+                }),
+            };
+            if let Some((sid, fid, kind)) = resolved {
+                let row_idx = rows.len() as u32;
+                touching[sid.index()].push(row_idx);
+                if let RowKind::Affinity { other } = kind {
+                    touching[other as usize].push(row_idx);
+                }
+                rows.push(Row {
+                    service: sid.index() as u32,
+                    flavour: fid.index() as u32,
+                    weight: c.weight,
+                    kind,
+                });
+            }
+        }
+        let mut touch_off = Vec::with_capacity(n_services + 1);
+        let mut touch = Vec::new();
+        touch_off.push(0u32);
+        for list in &touching {
+            touch.extend_from_slice(list);
+            touch_off.push(touch.len() as u32);
+        }
+        CompiledConstraints {
+            rows,
+            touch_off,
+            touch,
+        }
+    }
+
+    /// Number of resolved (non-inert) rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no constraint resolved.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Violated weight of one row under an assignment (0 when satisfied).
+    fn violation(&self, row: &Row, assignment: &[Option<(usize, usize)>]) -> f64 {
+        let slot = assignment[row.service as usize];
+        match row.kind {
+            RowKind::Avoid { node } => match slot {
+                Some((fi, ni)) if fi == row.flavour as usize && ni == node as usize => row.weight,
+                _ => 0.0,
+            },
+            RowKind::Affinity { other } => {
+                match (slot, assignment[other as usize]) {
+                    (Some((fi, ni)), Some((_, nz))) if fi == row.flavour as usize && ni != nz => {
+                        row.weight
+                    }
+                    _ => 0.0,
+                }
+            }
+            RowKind::Prefer { node } => match slot {
+                Some((fi, ni)) if fi == row.flavour as usize && ni != node as usize => row.weight,
+                _ => 0.0,
+            },
+        }
+    }
+
+    /// Soft-penalty contribution of the rows touching `service` —
+    /// O(touched rows), the move core's incremental pricing primitive.
+    pub fn penalty_touching(
+        &self,
+        service: usize,
+        assignment: &[Option<(usize, usize)>],
+    ) -> f64 {
+        let lo = self.touch_off[service] as usize;
+        let hi = self.touch_off[service + 1] as usize;
+        self.touch[lo..hi]
+            .iter()
+            .map(|&r| self.violation(&self.rows[r as usize], assignment))
+            .sum()
+    }
+
+    /// Total soft penalty (equals the legacy `Problem::soft_penalty`
+    /// string scan bit-for-bit — rows keep constraint order and inert
+    /// constraints contributed exactly 0).
+    pub fn total_penalty(&self, assignment: &[Option<(usize, usize)>]) -> f64 {
+        self.rows
+            .iter()
+            .map(|row| self.violation(row, assignment))
+            .sum()
+    }
+
+    /// `(summed violated weight, violated count)` in one pass — the
+    /// evaluator's accounting.
+    pub fn violation_summary(&self, assignment: &[Option<(usize, usize)>]) -> (f64, usize) {
+        let mut weight = 0.0;
+        let mut count = 0usize;
+        for row in &self.rows {
+            let v = self.violation(row, assignment);
+            if v > 0.0 {
+                weight += v;
+                count += 1;
+            }
+        }
+        (weight, count)
+    }
+
+    /// Services participating in at least one violated row (sorted,
+    /// deduplicated) — the large-neighbourhood search's destroy set.
+    pub fn violated_services(&self, assignment: &[Option<(usize, usize)>]) -> Vec<usize> {
+        let mut out = Vec::new();
+        for row in &self.rows {
+            if self.violation(row, assignment) <= 0.0 {
+                continue;
+            }
+            out.push(row.service as usize);
+            if let RowKind::Affinity { other } = row.kind {
+                out.push(other as usize);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Application, Flavour, Infrastructure, Node, Service};
+
+    fn parts() -> (Application, Infrastructure) {
+        let mut app = Application::new("t");
+        for id in ["a", "b"] {
+            let mut s = Service::new(id);
+            s.flavours = vec![Flavour::new("big"), Flavour::new("small")];
+            app.services.push(s);
+        }
+        let mut infra = Infrastructure::new("i");
+        infra.nodes = vec![Node::new("n0", "IT"), Node::new("n1", "FR")];
+        (app, infra)
+    }
+
+    fn weighted(kind: ConstraintKind, weight: f64) -> Constraint {
+        let mut c = Constraint::new(kind, 1.0, 0.0, 1.0);
+        c.weight = weight;
+        c
+    }
+
+    #[test]
+    fn rows_resolve_and_price_like_the_string_path() {
+        let (app, infra) = parts();
+        let symbols = ModelIndex::new(&app, &infra);
+        let constraints = vec![
+            weighted(
+                ConstraintKind::AvoidNode {
+                    service: "a".into(),
+                    flavour: "big".into(),
+                    node: "n1".into(),
+                },
+                0.7,
+            ),
+            weighted(
+                ConstraintKind::Affinity {
+                    service: "a".into(),
+                    flavour: "big".into(),
+                    other: "b".into(),
+                },
+                0.5,
+            ),
+            weighted(
+                ConstraintKind::PreferNode {
+                    service: "b".into(),
+                    flavour: "small".into(),
+                    node: "n0".into(),
+                },
+                0.3,
+            ),
+        ];
+        let compiled = CompiledConstraints::resolve(&symbols, &constraints);
+        assert_eq!(compiled.len(), 3);
+        // a/big on n1 violates avoid; split from b violates affinity;
+        // b/small off n0 violates prefer
+        let a = vec![Some((0, 1)), Some((1, 1))];
+        assert!((compiled.total_penalty(&a) - (0.7 + 0.3)).abs() < 1e-12);
+        let split = vec![Some((0, 0)), Some((1, 1))];
+        assert!((compiled.total_penalty(&split) - (0.5 + 0.3)).abs() < 1e-12);
+        let (w, n) = compiled.violation_summary(&split);
+        assert!((w - 0.8).abs() < 1e-12);
+        assert_eq!(n, 2);
+        assert_eq!(compiled.violated_services(&split), vec![0, 1]);
+        // touching: service a feels rows 0 and 1; b feels rows 1 and 2
+        assert!((compiled.penalty_touching(0, &split) - 0.5).abs() < 1e-12);
+        assert!((compiled.penalty_touching(1, &split) - (0.5 + 0.3)).abs() < 1e-12);
+    }
+
+    /// The deliberate semantic unification of the interned-ID refactor:
+    /// a `PreferNode` aimed at a decommissioned node is inert
+    /// everywhere. Before, the string `Problem::soft_penalty` charged
+    /// its weight whenever the subject was placed (any node `!=` a
+    /// nonexistent name), while the solvers and the evaluator — via the
+    /// old `ConstraintIndex` — scored it inert; plans and metrics were
+    /// produced with the inert semantics, so that is the behaviour kept.
+    #[test]
+    fn stale_prefer_node_is_inert_by_design() {
+        let (app, infra) = parts();
+        let symbols = ModelIndex::new(&app, &infra);
+        let constraints = vec![weighted(
+            ConstraintKind::PreferNode {
+                service: "a".into(),
+                flavour: "big".into(),
+                node: "decommissioned".into(),
+            },
+            0.9,
+        )];
+        let compiled = CompiledConstraints::resolve(&symbols, &constraints);
+        assert!(compiled.is_empty());
+        // subject placed anywhere: no penalty, no violation accounting
+        let a = vec![Some((0, 0)), None];
+        assert_eq!(compiled.total_penalty(&a), 0.0);
+        assert_eq!(compiled.violation_summary(&a), (0.0, 0));
+    }
+
+    #[test]
+    fn unresolvable_constraints_are_inert() {
+        let (app, infra) = parts();
+        let symbols = ModelIndex::new(&app, &infra);
+        let constraints = vec![
+            weighted(
+                ConstraintKind::AvoidNode {
+                    service: "ghost".into(),
+                    flavour: "big".into(),
+                    node: "n0".into(),
+                },
+                0.9,
+            ),
+            weighted(
+                ConstraintKind::AvoidNode {
+                    service: "a".into(),
+                    flavour: "huge".into(),
+                    node: "n0".into(),
+                },
+                0.9,
+            ),
+            weighted(
+                ConstraintKind::Affinity {
+                    service: "a".into(),
+                    flavour: "big".into(),
+                    other: "ghost".into(),
+                },
+                0.9,
+            ),
+        ];
+        let compiled = CompiledConstraints::resolve(&symbols, &constraints);
+        assert!(compiled.is_empty());
+        assert_eq!(compiled.total_penalty(&[Some((0, 0)), Some((0, 0))]), 0.0);
+    }
+}

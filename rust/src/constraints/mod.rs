@@ -16,6 +16,7 @@
 
 pub mod affinity;
 pub mod avoid_node;
+pub mod compiled;
 pub mod generator;
 pub mod incremental;
 pub mod library;
@@ -23,6 +24,7 @@ pub mod prefer_node;
 pub mod time_shift;
 pub mod types;
 
+pub use compiled::CompiledConstraints;
 pub use generator::{ConstraintGenerator, GenerationResult, GeneratorConfig};
 pub use incremental::{GenStats, IncrementalGenerator};
 pub use library::{CommCandidate, ConstraintLibrary, ConstraintModule, GenerationContext};

@@ -14,6 +14,7 @@
 //! `PreferNode` targets.
 
 use crate::constraints::{Constraint, ConstraintKind};
+use crate::model::interner::{AppIndex, InfraIndex};
 use crate::model::{Application, Infrastructure};
 use std::collections::HashMap;
 
@@ -66,15 +67,11 @@ impl Partition {
     /// constraint crossing a zone boundary — the candidates for the
     /// cross-zone repair/improvement pass.
     pub fn boundary_services(&self, app: &Application, constraints: &[Constraint]) -> Vec<usize> {
-        let idx: HashMap<&str, usize> = app
-            .services
-            .iter()
-            .enumerate()
-            .map(|(i, s)| (s.id.as_str(), i))
-            .collect();
+        let idx = AppIndex::new(app);
         let mut boundary = vec![false; app.services.len()];
         let mut mark_pair = |a: &str, b: &str, boundary: &mut Vec<bool>| {
-            if let (Some(&i), Some(&j)) = (idx.get(a), idx.get(b)) {
+            if let (Some(i), Some(j)) = (idx.service(a), idx.service(b)) {
+                let (i, j) = (i.index(), j.index());
                 if self.zone_of_service[i] != self.zone_of_service[j] {
                     boundary[i] = true;
                     boundary[j] = true;
@@ -256,12 +253,7 @@ impl ZonePartitioner {
         n_zones: usize,
     ) -> Vec<Vec<usize>> {
         let n = app.services.len();
-        let idx: HashMap<&str, usize> = app
-            .services
-            .iter()
-            .enumerate()
-            .map(|(i, s)| (s.id.as_str(), i))
-            .collect();
+        let idx = AppIndex::new(app);
         // edge list: (weight, i, j). Link weight = max per-flavour kWh;
         // affinity-constraint weight (already in [0,1] after ranking, or
         // its raw em before) dominates by adding on top.
@@ -274,19 +266,17 @@ impl ZonePartitioner {
             *edges.entry(key).or_insert(0.0) += w;
         };
         for link in &app.links {
-            if let (Some(&i), Some(&j)) = (idx.get(link.from.as_str()), idx.get(link.to.as_str()))
-            {
+            if let (Some(i), Some(j)) = (idx.service(&link.from), idx.service(&link.to)) {
                 let kwh = link.energy.iter().map(|(_, e)| *e).fold(0.0, f64::max);
-                add(i, j, kwh, &mut edges);
+                add(i.index(), j.index(), kwh, &mut edges);
             }
         }
         for c in constraints {
             if let ConstraintKind::Affinity { service, other, .. } = &c.kind {
-                if let (Some(&i), Some(&j)) = (idx.get(service.as_str()), idx.get(other.as_str()))
-                {
+                if let (Some(i), Some(j)) = (idx.service(service), idx.service(other)) {
                     // a generated affinity is a strong co-shard signal
                     let w = if c.weight > 0.0 { c.weight } else { 1.0 };
-                    add(i, j, 10.0 * w, &mut edges);
+                    add(i.index(), j.index(), 10.0 * w, &mut edges);
                 }
             }
         }
@@ -301,7 +291,7 @@ impl ZonePartitioner {
         };
         let mut parent: Vec<usize> = (0..n).collect();
         let mut size: Vec<usize> = vec![1; n];
-        fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
+        fn find(parent: &mut [usize], mut x: usize) -> usize {
             while parent[x] != x {
                 parent[x] = parent[parent[x]];
                 x = parent[x];
@@ -336,29 +326,17 @@ fn preferred_zone_weights(
     zone_of_node: &[usize],
     n_zones: usize,
 ) -> Vec<Vec<(usize, f64)>> {
-    let svc_idx: HashMap<&str, usize> = app
-        .services
-        .iter()
-        .enumerate()
-        .map(|(i, s)| (s.id.as_str(), i))
-        .collect();
-    let node_idx: HashMap<&str, usize> = infra
-        .nodes
-        .iter()
-        .enumerate()
-        .map(|(i, n)| (n.id.as_str(), i))
-        .collect();
+    let svc_idx = AppIndex::new(app);
+    let node_idx = InfraIndex::new(infra);
     let mut out = vec![Vec::new(); app.services.len()];
     if n_zones == 0 {
         return out;
     }
     for c in constraints {
         if let ConstraintKind::PreferNode { service, node, .. } = &c.kind {
-            if let (Some(&si), Some(&ni)) =
-                (svc_idx.get(service.as_str()), node_idx.get(node.as_str()))
-            {
+            if let (Some(si), Some(ni)) = (svc_idx.service(service), node_idx.node(node)) {
                 let w = if c.weight > 0.0 { c.weight } else { 0.5 };
-                out[si].push((zone_of_node[ni], w));
+                out[si.index()].push((zone_of_node[ni.index()], w));
             }
         }
     }
@@ -484,13 +462,15 @@ mod tests {
         }
         let boundary = p.boundary_services(&app, &[]);
         // boundary is consistent: each listed service really has a
-        // cross-zone link
+        // cross-zone link (endpoints resolved through the interner — a
+        // malformed link is a structured UnknownId error, not a panic)
+        let idx = AppIndex::new(&app);
         for &si in &boundary {
             let id = &app.services[si].id;
             assert!(app.links.iter().any(|l| {
                 (&l.from == id || &l.to == id) && {
-                    let i = app.services.iter().position(|s| s.id == l.from).unwrap();
-                    let j = app.services.iter().position(|s| s.id == l.to).unwrap();
+                    let i = idx.require_service(&l.from).unwrap().index();
+                    let j = idx.require_service(&l.to).unwrap().index();
                     p.zone_of_service[i] != p.zone_of_service[j]
                 }
             }));

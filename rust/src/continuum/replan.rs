@@ -144,28 +144,23 @@ impl IncrementalReplanner {
         // outside its home zone last epoch; what matters for reuse is
         // where it physically runs.)
         let mut assignment: Vec<Option<(usize, usize)>> = vec![None; problem.app.services.len()];
-        let node_idx: HashMap<&str, usize> = problem
-            .infra
-            .nodes
-            .iter()
-            .enumerate()
-            .map(|(i, n)| (n.id.as_str(), i))
-            .collect();
+        let symbols = crate::model::ModelIndex::new(problem.app, problem.infra);
         let mut carried = 0usize;
         let mut carry_failed: Vec<usize> = Vec::new();
         for (si, svc) in problem.app.services.iter().enumerate() {
             let home_dirty = dirty_set.contains(&partition.zone_of_service[si]);
             match prev.placements.get(&svc.id) {
                 Some((flavour, node)) => {
-                    // resolve names AND re-check the capacity-independent
-                    // placement rules (subnet/security/availability) so a
-                    // requirement change the fingerprint missed can never
-                    // carry an invalid slot
-                    let resolved = node_idx.get(node.as_str()).and_then(|&ni| {
-                        svc.flavours
-                            .iter()
-                            .position(|f| &f.name == flavour)
-                            .map(|fi| (fi, ni))
+                    // resolve names through the interner AND re-check the
+                    // capacity-independent placement rules (subnet/
+                    // security/availability) so a requirement change the
+                    // fingerprint missed can never carry an invalid slot
+                    let sid = crate::model::ServiceId::new(si);
+                    let resolved = symbols.infra.node(node).and_then(|nid| {
+                        symbols
+                            .app
+                            .flavour(sid, flavour)
+                            .map(|fid| (fid.index(), nid.index()))
                             .filter(|&(fi, ni)| {
                                 let nd = &problem.infra.nodes[ni];
                                 nd.placement_compatible(&svc.requirements)

@@ -361,8 +361,8 @@ pub(crate) fn repair(
     boundary: &[usize],
     rounds: usize,
 ) -> Result<RepairStats> {
-    let index = problem.constraint_index();
-    let mut state = ScoreState::new(problem, &index, std::mem::take(assignment));
+    let compiled = problem.compile();
+    let mut state = ScoreState::new(&compiled, std::mem::take(assignment));
     let mut stats = RepairStats::default();
 
     // --- placement of shard-dropped services -------------------------

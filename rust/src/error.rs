@@ -27,6 +27,11 @@ pub enum Error {
     /// Scheduler could not find a feasible deployment plan.
     Infeasible(String),
 
+    /// A name failed to resolve against the interned symbol tables
+    /// (stale plan placement, malformed link, unknown service/flavour/
+    /// node id).
+    UnknownId(String),
+
     /// Monitoring / estimation errors (e.g. no samples for a flavour).
     Estimation(String),
 
@@ -45,6 +50,7 @@ impl fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Infeasible(m) => write!(f, "infeasible deployment: {m}"),
+            Error::UnknownId(m) => write!(f, "unknown id: {m}"),
             Error::Estimation(m) => write!(f, "estimation error: {m}"),
             Error::Prolog(m) => write!(f, "prolog error: {m}"),
             Error::Other(m) => write!(f, "{m}"),

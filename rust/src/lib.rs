@@ -19,7 +19,10 @@
 //!   ([`pipeline::GeneratorPipeline::run_incremental`] over
 //!   [`constraints::incremental`]) — KB, the scheduler's
 //!   solver ladder on its shared [`scheduler::delta`] move core (greedy,
-//!   [`scheduler::localsearch`] annealing/LNS/portfolio, exact BnB), the
+//!   [`scheduler::localsearch`] annealing/LNS/portfolio, exact BnB), all
+//!   scoring through the interned-ID compiled problem core
+//!   ([`model::interner`] + [`scheduler::CompiledProblem`], see
+//!   `docs/performance.md`), the
 //!   [`continuum`] sharded multi-cluster engine, the [`forecast`]
 //!   look-ahead layer + [`scheduler::temporal`] horizon-aware pass, CLI.
 //! * L2/L1 (`python/compile/`): the impact-analytics graph + Pallas kernels,

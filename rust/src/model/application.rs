@@ -186,12 +186,17 @@ impl Service {
         }
     }
 
+    /// Look up a flavour by name (interned snapshot lookup; hot paths
+    /// resolve [`super::interner::FlavourId`]s once and index directly).
     pub fn flavour(&self, name: &str) -> Option<&Flavour> {
-        self.flavours.iter().find(|f| f.name == name)
+        let i = super::interner::resolve_once(self.flavours.iter().map(|f| f.name.as_str()), name)?;
+        self.flavours.get(i)
     }
 
+    /// Mutable [`Self::flavour`].
     pub fn flavour_mut(&mut self, name: &str) -> Option<&mut Flavour> {
-        self.flavours.iter_mut().find(|f| f.name == name)
+        let i = super::interner::resolve_once(self.flavours.iter().map(|f| f.name.as_str()), name)?;
+        self.flavours.get_mut(i)
     }
 }
 
@@ -225,11 +230,12 @@ impl CommLink {
         }
     }
 
+    /// Mean comm energy for one source flavour (interned snapshot
+    /// lookup; the compiled problem core densifies this per-link table
+    /// once per solve).
     pub fn energy_for(&self, flavour: &str) -> Option<f64> {
-        self.energy
-            .iter()
-            .find(|(f, _)| f == flavour)
-            .map(|(_, e)| *e)
+        let i = super::interner::resolve_once(self.energy.iter().map(|(f, _)| f.as_str()), flavour)?;
+        Some(self.energy[i].1)
     }
 }
 
@@ -250,18 +256,27 @@ impl Application {
         }
     }
 
+    /// Look up a service by `componentID` (interned snapshot lookup;
+    /// hot paths hold a [`super::interner::AppIndex`] instead).
     pub fn service(&self, id: &str) -> Option<&Service> {
-        self.services.iter().find(|s| s.id == id)
+        let i = super::interner::resolve_once(self.services.iter().map(|s| s.id.as_str()), id)?;
+        self.services.get(i)
     }
 
+    /// Mutable [`Self::service`].
     pub fn service_mut(&mut self, id: &str) -> Option<&mut Service> {
-        self.services.iter_mut().find(|s| s.id == id)
+        let i = super::interner::resolve_once(self.services.iter().map(|s| s.id.as_str()), id)?;
+        self.services.get_mut(i)
     }
 
+    /// Look up a directed link by its endpoint pair (interned snapshot
+    /// lookup over the composite key).
     pub fn link_mut(&mut self, from: &str, to: &str) -> Option<&mut CommLink> {
-        self.links
-            .iter_mut()
-            .find(|l| l.from == from && l.to == to)
+        let i = super::interner::resolve_once_by(
+            self.links.iter().map(|l| (l.from.as_str(), l.to.as_str())),
+            &(from, to),
+        )?;
+        self.links.get_mut(i)
     }
 
     /// Total number of (service, flavour) rows — the R dimension of the

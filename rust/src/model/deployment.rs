@@ -22,8 +22,15 @@ pub struct DeploymentPlan {
 }
 
 impl DeploymentPlan {
+    /// Look up the placement of a service (interned snapshot lookup;
+    /// evaluation paths resolve plans to dense assignments once via
+    /// [`super::interner::ModelIndex::resolve_placement`] instead).
     pub fn placement(&self, service: &str) -> Option<&Placement> {
-        self.placements.iter().find(|p| p.service == service)
+        let i = super::interner::resolve_once(
+            self.placements.iter().map(|p| p.service.as_str()),
+            service,
+        )?;
+        self.placements.get(i)
     }
 
     pub fn node_of(&self, service: &str) -> Option<&str> {

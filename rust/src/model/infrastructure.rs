@@ -164,12 +164,17 @@ impl Infrastructure {
         }
     }
 
+    /// Look up a node by id (interned snapshot lookup; hot paths hold a
+    /// [`super::interner::InfraIndex`] instead).
     pub fn node(&self, id: &str) -> Option<&Node> {
-        self.nodes.iter().find(|n| n.id == id)
+        let i = super::interner::resolve_once(self.nodes.iter().map(|n| n.id.as_str()), id)?;
+        self.nodes.get(i)
     }
 
+    /// Mutable [`Self::node`].
     pub fn node_mut(&mut self, id: &str) -> Option<&mut Node> {
-        self.nodes.iter_mut().find(|n| n.id == id)
+        let i = super::interner::resolve_once(self.nodes.iter().map(|n| n.id.as_str()), id)?;
+        self.nodes.get_mut(i)
     }
 
     pub fn validate(&self) -> Result<()> {

@@ -1,0 +1,324 @@
+//! Interned dense identifiers for the model namespaces.
+//!
+//! Every scoring path used to chase `String` names — `Problem::find` did
+//! an O(services) scan per constraint, and ~two dozen
+//! `iter().find`/`iter().position` sites re-derived name → index mappings
+//! all over the tree. This module is the single home of name resolution:
+//! a [`SymbolTable`] interns one namespace (services, nodes, a service's
+//! flavours) into dense `u32` handles, and the [`AppIndex`] /
+//! [`InfraIndex`] / [`ModelIndex`] wrappers mint the typed ids
+//! ([`ServiceId`], [`FlavourId`], [`NodeId`]) the compiled problem core
+//! ([`crate::scheduler::CompiledProblem`]) is built on.
+//!
+//! Ids are *positional*: `ServiceId(i)` always indexes
+//! `app.services[i]`, `FlavourId(j)` indexes that service's
+//! `flavours[j]`, `NodeId(k)` indexes `infra.nodes[k]` — so a resolved id
+//! doubles as a vector index and no reverse map is ever needed. Duplicate
+//! names (rejected by `validate()`, but representable) resolve to their
+//! first position, matching the old `iter().find` semantics exactly.
+//!
+//! Cold single-shot lookups (the model convenience accessors) go through
+//! [`resolve_once`]; anything resolving more than one name holds a table.
+
+use crate::model::{Application, Infrastructure, Placement};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Dense handle of a service: indexes `app.services`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ServiceId(u32);
+
+/// Dense handle of a flavour *within its service*: indexes
+/// `service.flavours`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FlavourId(u32);
+
+/// Dense handle of a node: indexes `infra.nodes`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(u32);
+
+macro_rules! id_impl {
+    ($name:ident) => {
+        impl $name {
+            /// Wrap a vector position as a typed id.
+            pub fn new(index: usize) -> $name {
+                $name(index as u32)
+            }
+
+            /// The vector position this id stands for.
+            pub fn index(self) -> usize {
+                self.0 as usize
+            }
+        }
+    };
+}
+
+id_impl!(ServiceId);
+id_impl!(FlavourId);
+id_impl!(NodeId);
+
+/// An interned, positionally-indexed namespace: id `i` names `names[i]`,
+/// and `get` resolves a name back to its (first) position in O(1).
+#[derive(Debug, Clone, Default)]
+pub struct SymbolTable {
+    names: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl SymbolTable {
+    /// Intern a namespace in order. Every name keeps its position (so
+    /// `name(i)` works for all `i`); duplicate names resolve to their
+    /// first position — the `iter().find` semantics the table replaces.
+    pub fn of<I, S>(names: I) -> SymbolTable
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut table = SymbolTable::default();
+        for name in names {
+            let name = name.into();
+            let id = table.names.len() as u32;
+            table.index.entry(name.clone()).or_insert(id);
+            table.names.push(name);
+        }
+        table
+    }
+
+    /// Resolve a name to its dense id (first position on duplicates).
+    pub fn get(&self, name: &str) -> Option<u32> {
+        self.index.get(name).copied()
+    }
+
+    /// The name a dense id stands for.
+    pub fn name(&self, id: u32) -> Option<&str> {
+        self.names.get(id as usize).map(String::as_str)
+    }
+
+    /// Number of interned positions (equals the source vector's length).
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True when the namespace is empty.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+/// One-shot lookup over arbitrary borrowed keys — the interner's
+/// degenerate single-use path. Semantically a [`SymbolTable`] built and
+/// queried once (first occurrence wins), implemented as an early-exit
+/// pass so a single resolution allocates nothing and never visits more
+/// keys than the match. Callers resolving more than one name hold a
+/// [`SymbolTable`] (or [`ModelIndex`]) instead.
+pub fn resolve_once_by<K, I>(keys: I, want: &K) -> Option<usize>
+where
+    K: Hash + Eq,
+    I: IntoIterator<Item = K>,
+{
+    keys.into_iter().position(|key| key == *want)
+}
+
+/// [`resolve_once_by`] specialised to string namespaces.
+pub fn resolve_once<'n, I>(names: I, want: &'n str) -> Option<usize>
+where
+    I: IntoIterator<Item = &'n str>,
+{
+    resolve_once_by(names, &want)
+}
+
+/// Interned view of one [`Application`]: the service namespace plus one
+/// flavour namespace per service.
+#[derive(Debug, Clone)]
+pub struct AppIndex {
+    services: SymbolTable,
+    flavours: Vec<SymbolTable>,
+}
+
+impl AppIndex {
+    /// Intern an application's namespaces (O(services + flavours)).
+    pub fn new(app: &Application) -> AppIndex {
+        AppIndex {
+            services: SymbolTable::of(app.services.iter().map(|s| s.id.as_str())),
+            flavours: app
+                .services
+                .iter()
+                .map(|s| SymbolTable::of(s.flavours.iter().map(|f| f.name.as_str())))
+                .collect(),
+        }
+    }
+
+    /// Resolve a service name.
+    pub fn service(&self, name: &str) -> Option<ServiceId> {
+        self.services.get(name).map(ServiceId)
+    }
+
+    /// Resolve a flavour name within a service.
+    pub fn flavour(&self, service: ServiceId, name: &str) -> Option<FlavourId> {
+        self.flavours
+            .get(service.index())?
+            .get(name)
+            .map(FlavourId)
+    }
+
+    /// Resolve a service name or fail with [`Error::UnknownId`].
+    pub fn require_service(&self, name: &str) -> Result<ServiceId> {
+        self.service(name)
+            .ok_or_else(|| Error::UnknownId(format!("service '{name}'")))
+    }
+
+    /// Resolve a flavour name or fail with [`Error::UnknownId`].
+    pub fn require_flavour(&self, service: ServiceId, name: &str) -> Result<FlavourId> {
+        self.flavour(service, name).ok_or_else(|| {
+            Error::UnknownId(format!(
+                "flavour '{name}' of service '{}'",
+                self.services.name(service.0).unwrap_or("?")
+            ))
+        })
+    }
+
+    /// Number of services in the interned application.
+    pub fn services(&self) -> usize {
+        self.services.len()
+    }
+
+    /// Number of flavours of one service.
+    pub fn flavours(&self, service: ServiceId) -> usize {
+        self.flavours
+            .get(service.index())
+            .map(SymbolTable::len)
+            .unwrap_or(0)
+    }
+}
+
+/// Interned view of one [`Infrastructure`]: the node namespace.
+#[derive(Debug, Clone)]
+pub struct InfraIndex {
+    nodes: SymbolTable,
+}
+
+impl InfraIndex {
+    /// Intern an infrastructure's node namespace (O(nodes)).
+    pub fn new(infra: &Infrastructure) -> InfraIndex {
+        InfraIndex {
+            nodes: SymbolTable::of(infra.nodes.iter().map(|n| n.id.as_str())),
+        }
+    }
+
+    /// Resolve a node name.
+    pub fn node(&self, name: &str) -> Option<NodeId> {
+        self.nodes.get(name).map(NodeId)
+    }
+
+    /// Resolve a node name or fail with [`Error::UnknownId`].
+    pub fn require_node(&self, name: &str) -> Result<NodeId> {
+        self.node(name)
+            .ok_or_else(|| Error::UnknownId(format!("node '{name}'")))
+    }
+
+    /// Number of nodes in the interned infrastructure.
+    pub fn nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// The full interned model: one problem instance's application and
+/// infrastructure namespaces, built once and shared by the constraint
+/// compilation pass and the compiled problem core.
+#[derive(Debug, Clone)]
+pub struct ModelIndex {
+    /// Service + flavour namespaces.
+    pub app: AppIndex,
+    /// Node namespace.
+    pub infra: InfraIndex,
+}
+
+impl ModelIndex {
+    /// Intern both sides of a problem instance.
+    pub fn new(app: &Application, infra: &Infrastructure) -> ModelIndex {
+        ModelIndex {
+            app: AppIndex::new(app),
+            infra: InfraIndex::new(infra),
+        }
+    }
+
+    /// Resolve one plan placement to dense ids, failing with
+    /// [`Error::UnknownId`] on any stale name (the error path that used
+    /// to be a panicking `iter().position(..).unwrap()` scan).
+    pub fn resolve_placement(&self, p: &Placement) -> Result<(ServiceId, FlavourId, NodeId)> {
+        let sid = self.app.require_service(&p.service)?;
+        let fid = self.app.require_flavour(sid, &p.flavour)?;
+        let nid = self.infra.require_node(&p.node)?;
+        Ok((sid, fid, nid))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Flavour, Node, Service};
+
+    fn parts() -> (Application, Infrastructure) {
+        let mut app = Application::new("t");
+        let mut a = Service::new("a");
+        a.flavours = vec![Flavour::new("big"), Flavour::new("small")];
+        let mut b = Service::new("b");
+        b.flavours = vec![Flavour::new("small")];
+        app.services = vec![a, b];
+        let mut infra = Infrastructure::new("i");
+        infra.nodes = vec![Node::new("n0", "IT"), Node::new("n1", "FR")];
+        (app, infra)
+    }
+
+    #[test]
+    fn ids_are_positional() {
+        let (app, infra) = parts();
+        let m = ModelIndex::new(&app, &infra);
+        assert_eq!(m.app.service("a"), Some(ServiceId::new(0)));
+        assert_eq!(m.app.service("b"), Some(ServiceId::new(1)));
+        assert_eq!(m.app.service("ghost"), None);
+        let a = m.app.service("a").unwrap();
+        assert_eq!(m.app.flavour(a, "small"), Some(FlavourId::new(1)));
+        assert_eq!(m.infra.node("n1"), Some(NodeId::new(1)));
+        assert_eq!(m.app.services(), 2);
+        assert_eq!(m.app.flavours(a), 2);
+        assert_eq!(m.infra.nodes(), 2);
+    }
+
+    #[test]
+    fn unknown_names_yield_unknown_id_errors() {
+        let (app, infra) = parts();
+        let m = ModelIndex::new(&app, &infra);
+        assert!(matches!(
+            m.app.require_service("ghost"),
+            Err(Error::UnknownId(_))
+        ));
+        assert!(matches!(m.infra.require_node("x"), Err(Error::UnknownId(_))));
+        let bad = Placement {
+            service: "a".into(),
+            flavour: "huge".into(),
+            node: "n0".into(),
+        };
+        assert!(matches!(m.resolve_placement(&bad), Err(Error::UnknownId(_))));
+        let ok = Placement {
+            service: "b".into(),
+            flavour: "small".into(),
+            node: "n1".into(),
+        };
+        let (s, f, n) = m.resolve_placement(&ok).unwrap();
+        assert_eq!((s.index(), f.index(), n.index()), (1, 0, 1));
+    }
+
+    #[test]
+    fn duplicates_resolve_to_first_position() {
+        let table = SymbolTable::of(["x", "y", "x"]);
+        assert_eq!(table.len(), 3);
+        assert_eq!(table.get("x"), Some(0));
+        assert_eq!(table.name(2), Some("x"));
+        assert_eq!(resolve_once(["x", "y", "x"], "x"), Some(0));
+        assert_eq!(resolve_once(["x", "y"], "z"), None);
+        assert!(!table.is_empty());
+        assert!(SymbolTable::of(Vec::<String>::new()).is_empty());
+    }
+}

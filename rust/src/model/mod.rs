@@ -9,6 +9,7 @@
 pub mod application;
 pub mod deployment;
 pub mod infrastructure;
+pub mod interner;
 
 pub use application::{
     Application, CommLink, CommQoS, DeferralWindow, EnergyProfile, Flavour,
@@ -16,3 +17,6 @@ pub use application::{
 };
 pub use deployment::{DeploymentPlan, Placement};
 pub use infrastructure::{Capabilities, Infrastructure, Node, NodeProfile, Tier};
+pub use interner::{
+    AppIndex, FlavourId, InfraIndex, ModelIndex, NodeId, ServiceId, SymbolTable,
+};

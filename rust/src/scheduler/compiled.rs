@@ -1,0 +1,508 @@
+//! The compiled problem core: interned ids and precomputed per-(service,
+//! flavour, node) scoring tensors, built once per solve and consumed by
+//! every solver layer.
+//!
+//! Before this pass the innermost scoring kernel was string-driven:
+//! `Problem::soft_penalty` paid an O(services) name scan plus `String`
+//! equality per constraint, and per-move comm pricing walked every app
+//! link comparing service names. [`CompiledProblem`] resolves all names
+//! exactly once (via [`ModelIndex`] + [`CompiledConstraints`]) and
+//! precomputes dense tensors so that `objective_value`, `soft_penalty`,
+//! the delta move core and the evaluator become pure table lookups:
+//!
+//! * `cost[(svc, fl), node]` — `cpu · cost_per_cpu_hour`, the plan-cost
+//!   term of one slot;
+//! * `feasible[(svc, fl), node]` — the capacity-independent placement
+//!   gate (subnet/security compatibility + availability);
+//! * `compute_g[(svc, fl), node]` — `kWh · CI`, the compute-emissions
+//!   term of one slot (Eq. 3 semantics);
+//! * a CSR adjacency over `app.links` so per-move comm pricing touches
+//!   only the links incident to the moved service.
+//!
+//! Behaviour parity: every tensor entry is the *same* f64 product the
+//! legacy path computed, and all summations keep the legacy order, so
+//! compiled scores are bit-identical to the string path (property-tested
+//! against an independent naive reference in
+//! `rust/tests/compiled_core.rs`). The legacy `Problem` methods survive
+//! as thin compile-then-score wrappers.
+
+use super::problem::{CapacityState, Problem};
+use crate::constraints::CompiledConstraints;
+use crate::model::interner::ModelIndex;
+use crate::model::DeploymentPlan;
+use crate::Result;
+
+/// One resolved communication link: dense endpoint ids plus the per
+/// source-flavour energy profile (Eq. 13), densified from the link's
+/// `(flavour name, kWh)` pairs.
+#[derive(Debug, Clone)]
+pub struct CompiledLink {
+    /// Source service index.
+    pub from: u32,
+    /// Target service index.
+    pub to: u32,
+    /// Mean comm energy (kWh/window) per source-service flavour index;
+    /// `None` when the estimator has no profile for that flavour.
+    pub energy: Vec<Option<f64>>,
+}
+
+/// A deployment problem compiled to dense handles and scoring tensors.
+///
+/// Built by [`Problem::compile`]; borrowed by [`super::ScoreState`] and
+/// every solver for the duration of one solve.
+pub struct CompiledProblem<'p, 'a> {
+    problem: &'p Problem<'a>,
+    symbols: ModelIndex,
+    constraints: CompiledConstraints,
+    n_nodes: usize,
+    /// Per service: first row of its flavour block (prefix sums).
+    row_of: Vec<u32>,
+    /// Per service: flavour count.
+    n_flavours: Vec<u32>,
+    /// Per (row, node): plan cost of the slot.
+    cost: Vec<f64>,
+    /// Per (row, node): capacity-independent placement feasibility.
+    feasible: Vec<bool>,
+    /// Per (row, node): compute emissions of the slot (gCO2eq/window).
+    compute_g: Vec<f64>,
+    /// Per row: (cpu, ram, storage) resource demand.
+    req: Vec<(f64, f64, f64)>,
+    /// Per node: enriched carbon intensity.
+    node_carbon: Vec<f64>,
+    /// Resolved links, in `app.links` order (unresolvable ones omitted —
+    /// they contributed exactly 0).
+    links: Vec<CompiledLink>,
+    /// CSR offsets into [`Self::adj`], per service.
+    adj_off: Vec<u32>,
+    /// CSR payload: indices into [`Self::links`] incident to a service.
+    adj: Vec<u32>,
+}
+
+impl<'a> Problem<'a> {
+    /// Compile this problem into the dense scoring core: resolve every
+    /// name once, precompute the per-slot tensors, and group constraints
+    /// per service. O(services·flavours·nodes + constraints + links);
+    /// every score after this is a table lookup.
+    pub fn compile(&self) -> CompiledProblem<'_, 'a> {
+        CompiledProblem::new(self)
+    }
+}
+
+impl<'p, 'a> CompiledProblem<'p, 'a> {
+    /// Compile `problem` (see [`Problem::compile`]).
+    pub fn new(problem: &'p Problem<'a>) -> CompiledProblem<'p, 'a> {
+        let app = problem.app;
+        let infra = problem.infra;
+        let symbols = ModelIndex::new(app, infra);
+        let constraints = CompiledConstraints::resolve(&symbols, problem.constraints);
+        let n_nodes = infra.nodes.len();
+        let total_rows: usize = app.services.iter().map(|s| s.flavours.len()).sum();
+
+        let mut row_of = Vec::with_capacity(app.services.len());
+        let mut n_flavours = Vec::with_capacity(app.services.len());
+        let mut cost = Vec::with_capacity(total_rows * n_nodes);
+        let mut feasible = Vec::with_capacity(total_rows * n_nodes);
+        let mut compute_g = Vec::with_capacity(total_rows * n_nodes);
+        let mut req = Vec::with_capacity(total_rows);
+        let node_carbon: Vec<f64> = infra.nodes.iter().map(|n| n.carbon()).collect();
+
+        let mut next_row = 0u32;
+        for svc in &app.services {
+            row_of.push(next_row);
+            n_flavours.push(svc.flavours.len() as u32);
+            next_row += svc.flavours.len() as u32;
+            for fl in &svc.flavours {
+                let r = &fl.requirements;
+                req.push((r.cpu, r.ram_gb, r.storage_gb));
+                let kwh = fl.energy.map(|p| p.kwh);
+                for node in &infra.nodes {
+                    // the exact products the legacy string path computed,
+                    // evaluated once instead of per candidate
+                    cost.push(r.cpu * node.profile.cost_per_cpu_hour);
+                    feasible.push(
+                        node.placement_compatible(&svc.requirements)
+                            && node.capabilities.availability + 1e-12 >= r.availability,
+                    );
+                    compute_g.push(match kwh {
+                        Some(k) => k * node.carbon(),
+                        None => 0.0,
+                    });
+                }
+            }
+        }
+
+        let mut links = Vec::with_capacity(app.links.len());
+        let mut adj_lists: Vec<Vec<u32>> = vec![Vec::new(); app.services.len()];
+        for link in &app.links {
+            let (Some(fs), Some(ts)) = (
+                symbols.app.service(&link.from),
+                symbols.app.service(&link.to),
+            ) else {
+                continue; // dangling link: never priced by the legacy path
+            };
+            // densify the (flavour name, kWh) pairs once per link:
+            // first-wins map (the `energy_for` semantics) then one
+            // lookup per flavour — O(pairs + flavours), no per-flavour
+            // rescans of the pair list
+            let mut by_flavour: std::collections::HashMap<&str, f64> =
+                std::collections::HashMap::with_capacity(link.energy.len());
+            for (name, kwh) in &link.energy {
+                by_flavour.entry(name.as_str()).or_insert(*kwh);
+            }
+            let energy: Vec<Option<f64>> = app.services[fs.index()]
+                .flavours
+                .iter()
+                .map(|f| by_flavour.get(f.name.as_str()).copied())
+                .collect();
+            let li = links.len() as u32;
+            adj_lists[fs.index()].push(li);
+            if ts != fs {
+                adj_lists[ts.index()].push(li);
+            }
+            links.push(CompiledLink {
+                from: fs.index() as u32,
+                to: ts.index() as u32,
+                energy,
+            });
+        }
+        let mut adj_off = Vec::with_capacity(adj_lists.len() + 1);
+        let mut adj = Vec::new();
+        adj_off.push(0u32);
+        for list in &adj_lists {
+            adj.extend_from_slice(list);
+            adj_off.push(adj.len() as u32);
+        }
+
+        CompiledProblem {
+            problem,
+            symbols,
+            constraints,
+            n_nodes,
+            row_of,
+            n_flavours,
+            cost,
+            feasible,
+            compute_g,
+            req,
+            node_carbon,
+            links,
+            adj_off,
+            adj,
+        }
+    }
+
+    /// The borrowed problem this core was compiled from.
+    pub fn problem(&self) -> &'p Problem<'a> {
+        self.problem
+    }
+
+    /// The interned name ↔ id tables.
+    pub fn symbols(&self) -> &ModelIndex {
+        &self.symbols
+    }
+
+    /// The compiled constraint rows.
+    pub fn constraints(&self) -> &CompiledConstraints {
+        &self.constraints
+    }
+
+    /// Number of services.
+    pub fn n_services(&self) -> usize {
+        self.row_of.len()
+    }
+
+    /// Number of nodes.
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Number of flavours of service `si`.
+    pub fn flavours(&self, si: usize) -> usize {
+        self.n_flavours[si] as usize
+    }
+
+    /// Tensor cell of (service, flavour, node). The flat layout cannot
+    /// bounds-check `fi`/`ni` per service the way the legacy nested
+    /// indexing did (an out-of-range flavour would silently land in the
+    /// next service's block), so debug builds assert the invariant the
+    /// solvers uphold.
+    #[inline]
+    fn cell(&self, si: usize, fi: usize, ni: usize) -> usize {
+        debug_assert!(
+            fi < self.n_flavours[si] as usize && ni < self.n_nodes,
+            "slot ({si}, {fi}, {ni}) out of range"
+        );
+        (self.row_of[si] as usize + fi) * self.n_nodes + ni
+    }
+
+    /// Resource demand (cpu, ram, storage) of (service, flavour).
+    #[inline]
+    pub fn requirements(&self, si: usize, fi: usize) -> (f64, f64, f64) {
+        self.req[self.row_of[si] as usize + fi]
+    }
+
+    /// Plan-cost term of one slot.
+    #[inline]
+    pub fn slot_cost(&self, si: usize, fi: usize, ni: usize) -> f64 {
+        self.cost[self.cell(si, fi, ni)]
+    }
+
+    /// Compute-emissions term of one slot (gCO2eq/window).
+    #[inline]
+    pub fn compute_emissions(&self, si: usize, fi: usize, ni: usize) -> f64 {
+        self.compute_g[self.cell(si, fi, ni)]
+    }
+
+    /// Enriched carbon intensity of one node.
+    #[inline]
+    pub fn node_carbon(&self, ni: usize) -> f64 {
+        self.node_carbon[ni]
+    }
+
+    /// Hard placement feasibility of (service, flavour) on node: the
+    /// precomputed capacity-independent gate plus the live capacity
+    /// check — exactly the legacy `Problem::placement_ok` decision.
+    #[inline]
+    pub fn placement_ok(
+        &self,
+        si: usize,
+        fi: usize,
+        ni: usize,
+        capacity: &CapacityState,
+    ) -> bool {
+        if !self.feasible[self.cell(si, fi, ni)] {
+            return false;
+        }
+        let (cpu, ram, storage) = self.requirements(si, fi);
+        capacity.fits(ni, cpu, ram, storage)
+    }
+
+    /// All resolved links, in `app.links` order.
+    pub fn links(&self) -> &[CompiledLink] {
+        &self.links
+    }
+
+    /// The links incident to service `si` (CSR adjacency), in
+    /// `app.links` order.
+    pub fn links_of(&self, si: usize) -> impl Iterator<Item = &CompiledLink> + '_ {
+        let lo = self.adj_off[si] as usize;
+        let hi = self.adj_off[si + 1] as usize;
+        self.adj[lo..hi].iter().map(move |&l| &self.links[l as usize])
+    }
+
+    // --- whole-assignment scoring (the legacy wrappers' substrate) ----
+
+    /// Total soft-constraint penalty of an assignment.
+    pub fn soft_penalty(&self, assignment: &[Option<(usize, usize)>]) -> f64 {
+        self.constraints.total_penalty(assignment)
+    }
+
+    /// Emissions of one resolved link under an assignment (0 when an
+    /// endpoint is dropped, co-located, or unprofiled).
+    pub fn link_emissions(&self, link: &CompiledLink, assignment: &[Option<(usize, usize)>]) -> f64 {
+        let (Some((fi, ni)), Some((_, nz))) =
+            (assignment[link.from as usize], assignment[link.to as usize])
+        else {
+            return 0.0;
+        };
+        if ni == nz {
+            return 0.0;
+        }
+        match link.energy.get(fi).copied().flatten() {
+            Some(kwh) => {
+                let ci = 0.5 * (self.node_carbon[ni] + self.node_carbon[nz]);
+                kwh * ci
+            }
+            None => 0.0,
+        }
+    }
+
+    /// Inter-node comm emissions of the links incident to `si`, counted
+    /// in full so single-slot deltas cancel other services' terms
+    /// exactly. O(incident links) via the CSR adjacency.
+    pub fn comm_emissions_touching(
+        &self,
+        si: usize,
+        assignment: &[Option<(usize, usize)>],
+    ) -> f64 {
+        self.links_of(si)
+            .map(|link| self.link_emissions(link, assignment))
+            .sum()
+    }
+
+    /// Ground-truth emissions of an assignment (compute + comm), term
+    /// order identical to the legacy scan.
+    pub fn emissions(&self, assignment: &[Option<(usize, usize)>]) -> f64 {
+        let mut total = 0.0;
+        for (si, slot) in assignment.iter().enumerate() {
+            if let Some((fi, ni)) = slot {
+                total += self.compute_g[self.cell(si, *fi, *ni)];
+            }
+        }
+        for link in &self.links {
+            total += self.link_emissions(link, assignment);
+        }
+        total
+    }
+
+    /// Full objective value of an assignment (lower is better) — table
+    /// lookups only, identical to the legacy `Problem::objective_value`.
+    pub fn objective_value(&self, assignment: &[Option<(usize, usize)>]) -> f64 {
+        let o = &self.problem.objective;
+        let mut cost = 0.0;
+        let mut flavour_rank = 0.0;
+        let mut dropped = 0.0;
+        for (si, slot) in assignment.iter().enumerate() {
+            match slot {
+                Some((fi, ni)) => {
+                    cost += self.cost[self.cell(si, *fi, *ni)];
+                    flavour_rank += *fi as f64;
+                }
+                None => dropped += 1.0,
+            }
+        }
+        let mut value = o.cost_weight * cost
+            + o.soft_weight * self.constraints.total_penalty(assignment)
+            + o.drop_penalty * dropped
+            + o.flavour_weight * flavour_rank;
+        if o.emissions_weight != 0.0 {
+            value += o.emissions_weight * self.emissions(assignment);
+        }
+        value
+    }
+
+    /// Parse a plan into an assignment through the interned tables,
+    /// failing with [`crate::Error::UnknownId`] on stale names.
+    pub fn to_assignment(&self, plan: &DeploymentPlan) -> Result<Vec<Option<(usize, usize)>>> {
+        let mut assignment = vec![None; self.n_services()];
+        for p in &plan.placements {
+            let (sid, fid, nid) = self.symbols.resolve_placement(p)?;
+            assignment[sid.index()] = Some((fid.index(), nid.index()));
+        }
+        Ok(assignment)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::problem::Objective;
+    use crate::util::Rng;
+
+    fn random_problem_parts(
+        seed: u64,
+    ) -> (
+        crate::model::Application,
+        crate::model::Infrastructure,
+        Vec<crate::constraints::Constraint>,
+    ) {
+        let mut rng = Rng::new(seed);
+        let app = crate::simulate::random_application(&mut rng, 14);
+        let infra = crate::simulate::random_infrastructure(&mut rng, 6);
+        let backend = crate::runtime::NativeBackend;
+        let mut constraints = crate::constraints::ConstraintGenerator::new(&backend)
+            .with_config(crate::constraints::GeneratorConfig {
+                alpha: 0.6,
+                use_prolog: false,
+            })
+            .generate(&app, &infra)
+            .unwrap()
+            .constraints;
+        for (i, c) in constraints.iter_mut().enumerate() {
+            c.weight = 0.1 + 0.05 * (i % 10) as f64;
+        }
+        (app, infra, constraints)
+    }
+
+    #[test]
+    fn compiled_scores_match_the_legacy_wrappers() {
+        let (app, infra, constraints) = random_problem_parts(0xC0DE);
+        for emissions_weight in [0.0, 1.0] {
+            let problem = Problem {
+                app: &app,
+                infra: &infra,
+                constraints: &constraints,
+                objective: Objective {
+                    emissions_weight,
+                    ..Objective::default()
+                },
+            };
+            let compiled = problem.compile();
+            let mut rng = Rng::new(0xA55);
+            for _ in 0..40 {
+                let assignment: Vec<Option<(usize, usize)>> = app
+                    .services
+                    .iter()
+                    .map(|s| {
+                        if rng.chance(0.8) {
+                            Some((rng.below(s.flavours.len()), rng.below(infra.nodes.len())))
+                        } else {
+                            None
+                        }
+                    })
+                    .collect();
+                assert_eq!(
+                    compiled.objective_value(&assignment),
+                    problem.objective_value(&assignment)
+                );
+                assert_eq!(
+                    compiled.soft_penalty(&assignment),
+                    problem.soft_penalty(&assignment)
+                );
+                assert_eq!(compiled.emissions(&assignment), problem.emissions(&assignment));
+            }
+        }
+    }
+
+    #[test]
+    fn csr_adjacency_matches_full_link_scan() {
+        let (app, infra, _) = random_problem_parts(0xCAB);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let compiled = problem.compile();
+        let mut rng = Rng::new(7);
+        let assignment: Vec<Option<(usize, usize)>> = app
+            .services
+            .iter()
+            .map(|s| Some((rng.below(s.flavours.len()), rng.below(infra.nodes.len()))))
+            .collect();
+        for si in 0..app.services.len() {
+            let via_csr = compiled.comm_emissions_touching(si, &assignment);
+            let via_scan: f64 = compiled
+                .links()
+                .iter()
+                .filter(|l| l.from as usize == si || l.to as usize == si)
+                .map(|l| compiled.link_emissions(l, &assignment))
+                .sum();
+            assert!((via_csr - via_scan).abs() < 1e-15, "service {si}");
+        }
+    }
+
+    #[test]
+    fn to_assignment_reports_unknown_ids() {
+        let (app, infra, _) = random_problem_parts(0xBAD);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let compiled = problem.compile();
+        let plan = crate::model::DeploymentPlan {
+            placements: vec![crate::model::Placement {
+                service: "no-such-service".into(),
+                flavour: "f0".into(),
+                node: "n0".into(),
+            }],
+            dropped: Vec::new(),
+        };
+        assert!(matches!(
+            compiled.to_assignment(&plan),
+            Err(crate::Error::UnknownId(_))
+        ));
+    }
+}

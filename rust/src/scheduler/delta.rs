@@ -8,16 +8,23 @@
 //! its own copy of the "local objective" algebra. [`ScoreState`] is the
 //! single home of that algebra: it caches the objective of the current
 //! assignment and re-prices a [`Move`] in **O(touched constraints)** via
-//! the [`ConstraintIndex`], exposing `delta` (peek), `apply` (commit) and
-//! `undo`/`rollback_to` (revert) so construction heuristics, exhaustive
-//! search and stochastic local search all share the same arithmetic.
+//! the compiled constraint rows, exposing `delta` (peek), `apply`
+//! (commit) and `undo`/`rollback_to` (revert) so construction
+//! heuristics, exhaustive search and stochastic local search all share
+//! the same arithmetic.
+//!
+//! Since the interned-ID refactor the core scores through
+//! [`CompiledProblem`]: every cost/emissions/feasibility term is a dense
+//! table lookup and comm pricing touches only the CSR-adjacent links —
+//! no `String` ever enters a move evaluation.
 //!
 //! The exactness contract (property-tested in `rust/tests/localsearch.rs`
 //! and in this module): after any sequence of applied moves, the cached
 //! [`ScoreState::objective`] equals a from-scratch
 //! [`Problem::objective_value`] rescore to within 1e-9.
 
-use super::problem::{CapacityState, ConstraintIndex, Problem};
+use super::compiled::CompiledProblem;
+use super::problem::{CapacityState, Problem};
 
 /// One candidate change to an assignment.
 ///
@@ -119,28 +126,26 @@ impl Parts {
 /// objective by exactly the difference of this quantity (all other
 /// services' terms cancel) — the invariant the whole move core rests on,
 /// property-tested in `problem.rs` and `rust/tests/localsearch.rs`.
+///
+/// Pure table lookups: compiled constraint rows for the penalty, the
+/// cost/emissions tensors for the slot terms, the CSR link adjacency for
+/// comm — O(touched constraints + incident links).
 fn local_parts(
-    problem: &Problem,
-    index: &ConstraintIndex,
+    compiled: &CompiledProblem,
     si: usize,
     assignment: &[Option<(usize, usize)>],
 ) -> Parts {
-    let penalty = index.penalty_touching(si, assignment);
+    let penalty = compiled.constraints().penalty_touching(si, assignment);
     match assignment[si] {
         Some((fi, ni)) => {
-            let svc = &problem.app.services[si];
-            let req = &svc.flavours[fi].requirements;
-            let emissions = if problem.objective.emissions_weight != 0.0 {
-                let mut e = 0.0;
-                if let Some(profile) = svc.flavours[fi].energy {
-                    e += profile.kwh * problem.infra.nodes[ni].carbon();
-                }
-                e + comm_emissions_touching(problem, si, assignment)
+            let emissions = if compiled.problem().objective.emissions_weight != 0.0 {
+                compiled.compute_emissions(si, fi, ni)
+                    + compiled.comm_emissions_touching(si, assignment)
             } else {
                 0.0
             };
             Parts {
-                cost: req.cpu * problem.infra.nodes[ni].profile.cost_per_cpu_hour,
+                cost: compiled.slot_cost(si, fi, ni),
                 penalty,
                 dropped: 0.0,
                 flavour_rank: fi as f64,
@@ -159,12 +164,11 @@ fn local_parts(
 /// pre-refactor solvers each re-implemented. [`Problem::local_objective`]
 /// is now a thin wrapper over this.
 pub(crate) fn local_objective(
-    problem: &Problem,
-    index: &ConstraintIndex,
+    compiled: &CompiledProblem,
     si: usize,
     assignment: &[Option<(usize, usize)>],
 ) -> f64 {
-    weighted(problem, local_parts(problem, index, si, assignment))
+    weighted(compiled.problem(), local_parts(compiled, si, assignment))
 }
 
 fn weighted(problem: &Problem, p: Parts) -> f64 {
@@ -174,35 +178,6 @@ fn weighted(problem: &Problem, p: Parts) -> f64 {
         + o.drop_penalty * p.dropped
         + o.flavour_weight * p.flavour_rank
         + o.emissions_weight * p.emissions
-}
-
-/// Inter-node communication emissions of links incident to `si` (counted
-/// in full, so single-slot deltas cancel other services' terms exactly).
-fn comm_emissions_touching(
-    problem: &Problem,
-    si: usize,
-    assignment: &[Option<(usize, usize)>],
-) -> f64 {
-    let id = &problem.app.services[si].id;
-    let mut total = 0.0;
-    for link in &problem.app.links {
-        if link.from != *id && link.to != *id {
-            continue;
-        }
-        let from = problem.find(assignment, &link.from);
-        let to = problem.find(assignment, &link.to);
-        if let (Some((fsi, (fi, ni))), Some((_, (_, nz)))) = (from, to) {
-            if ni != nz {
-                let flavour = &problem.app.services[fsi].flavours[fi].name;
-                if let Some(kwh) = link.energy_for(flavour) {
-                    let ci =
-                        0.5 * (problem.infra.nodes[ni].carbon() + problem.infra.nodes[nz].carbon());
-                    total += kwh * ci;
-                }
-            }
-        }
-    }
-    total
 }
 
 /// One applied move's revert record.
@@ -237,8 +212,8 @@ struct Undo {
 ///     constraints: &[],
 ///     objective: Objective::default(),
 /// };
-/// let index = problem.constraint_index();
-/// let mut state = ScoreState::new(&problem, &index, vec![None; app.services.len()]);
+/// let compiled = problem.compile();
+/// let mut state = ScoreState::new(&compiled, vec![None; app.services.len()]);
 /// let mark = state.mark();
 /// if let Some(delta) = state.apply(Move::Reassign { service: 0, flavour: 0, node: 0 }) {
 ///     if delta.total > 0.0 {
@@ -249,8 +224,7 @@ struct Undo {
 /// assert!((state.objective() - problem.objective_value(state.assignment())).abs() < 1e-9);
 /// ```
 pub struct ScoreState<'p, 'a> {
-    problem: &'p Problem<'a>,
-    index: &'p ConstraintIndex,
+    compiled: &'p CompiledProblem<'p, 'a>,
     assignment: Vec<Option<(usize, usize)>>,
     /// `None` = scoring-only mode ([`ScoreState::unbounded`]): the caller
     /// owns feasibility (the temporal pass tracks *per-slot* capacity,
@@ -263,24 +237,21 @@ pub struct ScoreState<'p, 'a> {
 impl<'p, 'a> ScoreState<'p, 'a> {
     /// Capacity-tracked state over `assignment` (which must fit node
     /// capacities — all solvers start from a feasible construction).
-    /// Costs one full `objective_value` scan; everything after is
-    /// incremental.
+    /// Costs one full tensor scan; everything after is incremental.
     pub fn new(
-        problem: &'p Problem<'a>,
-        index: &'p ConstraintIndex,
+        compiled: &'p CompiledProblem<'p, 'a>,
         assignment: Vec<Option<(usize, usize)>>,
     ) -> Self {
-        let mut capacity = CapacityState::new(problem.infra);
+        let mut capacity = CapacityState::new(compiled.problem().infra);
         for (si, slot) in assignment.iter().enumerate() {
             if let Some((fi, ni)) = slot {
-                let req = &problem.app.services[si].flavours[*fi].requirements;
-                capacity.take(*ni, req.cpu, req.ram_gb, req.storage_gb);
+                let (cpu, ram, storage) = compiled.requirements(si, *fi);
+                capacity.take(*ni, cpu, ram, storage);
             }
         }
-        let value = problem.objective_value(&assignment);
+        let value = compiled.objective_value(&assignment);
         ScoreState {
-            problem,
-            index,
+            compiled,
             assignment,
             capacity: Some(capacity),
             value,
@@ -292,14 +263,12 @@ impl<'p, 'a> ScoreState<'p, 'a> {
     /// placement feasibility is checked — the caller enforces its own
     /// (e.g. the temporal pass with per-slot capacity).
     pub fn unbounded(
-        problem: &'p Problem<'a>,
-        index: &'p ConstraintIndex,
+        compiled: &'p CompiledProblem<'p, 'a>,
         assignment: Vec<Option<(usize, usize)>>,
     ) -> Self {
-        let value = problem.objective_value(&assignment);
+        let value = compiled.objective_value(&assignment);
         ScoreState {
-            problem,
-            index,
+            compiled,
             assignment,
             capacity: None,
             value,
@@ -330,12 +299,12 @@ impl<'p, 'a> ScoreState<'p, 'a> {
 
     /// The problem being scored.
     pub fn problem(&self) -> &'p Problem<'a> {
-        self.problem
+        self.compiled.problem()
     }
 
-    /// The constraint index used for incremental penalty pricing.
-    pub fn index(&self) -> &'p ConstraintIndex {
-        self.index
+    /// The compiled core used for incremental pricing.
+    pub fn compiled(&self) -> &'p CompiledProblem<'p, 'a> {
+        self.compiled
     }
 
     /// Consume the state, returning the assignment.
@@ -345,7 +314,7 @@ impl<'p, 'a> ScoreState<'p, 'a> {
 
     /// Full from-scratch rescore (for tests and invariant checks).
     pub fn rescore(&self) -> f64 {
-        self.problem.objective_value(&self.assignment)
+        self.compiled.objective_value(&self.assignment)
     }
 
     /// Number of applied (un-undone) moves — pass to
@@ -414,7 +383,7 @@ impl<'p, 'a> ScoreState<'p, 'a> {
                 }
             }
         };
-        let total = weighted(self.problem, parts);
+        let total = weighted(self.compiled.problem(), parts);
         self.value += total;
         self.log.push(Undo {
             slots,
@@ -453,9 +422,9 @@ impl<'p, 'a> ScoreState<'p, 'a> {
     /// terms are computed once, `si`'s own reservation is freed once for
     /// the whole scan, and no undo-log traffic is generated.
     pub fn best_reassign(&mut self, si: usize) -> Option<(usize, usize, ScoreDelta)> {
-        let flavours = self.problem.app.services[si].flavours.len();
-        let nodes = self.problem.infra.nodes.len();
-        let before = local_parts(self.problem, self.index, si, &self.assignment);
+        let flavours = self.compiled.flavours(si);
+        let nodes = self.compiled.n_nodes();
+        let before = local_parts(self.compiled, si, &self.assignment);
         let original = self.assignment[si];
         // a service may always trade its current slot for another
         if let Some(o) = original {
@@ -465,13 +434,13 @@ impl<'p, 'a> ScoreState<'p, 'a> {
         for fi in 0..flavours {
             for ni in 0..nodes {
                 if let Some(cap) = &self.capacity {
-                    if !self.problem.placement_ok(si, fi, ni, cap) {
+                    if !self.compiled.placement_ok(si, fi, ni, cap) {
                         continue;
                     }
                 }
                 self.assignment[si] = Some((fi, ni));
-                let d = local_parts(self.problem, self.index, si, &self.assignment).minus(before);
-                let total = weighted(self.problem, d);
+                let d = local_parts(self.compiled, si, &self.assignment).minus(before);
+                let total = weighted(self.compiled.problem(), d);
                 if best.as_ref().map(|&(_, _, _, b)| total < b).unwrap_or(true) {
                     best = Some((fi, ni, d, total));
                 }
@@ -502,9 +471,9 @@ impl<'p, 'a> ScoreState<'p, 'a> {
     /// Single-slot change with exact before/after local pricing.
     /// Feasibility must already be established.
     fn shift(&mut self, si: usize, new: Option<(usize, usize)>) -> Parts {
-        let before = local_parts(self.problem, self.index, si, &self.assignment);
+        let before = local_parts(self.compiled, si, &self.assignment);
         self.set_slot(si, new);
-        let after = local_parts(self.problem, self.index, si, &self.assignment);
+        let after = local_parts(self.compiled, si, &self.assignment);
         after.minus(before)
     }
 
@@ -521,15 +490,15 @@ impl<'p, 'a> ScoreState<'p, 'a> {
 
     fn occupy(&mut self, si: usize, (fi, ni): (usize, usize)) {
         if let Some(cap) = &mut self.capacity {
-            let req = &self.problem.app.services[si].flavours[fi].requirements;
-            cap.take(ni, req.cpu, req.ram_gb, req.storage_gb);
+            let (cpu, ram, storage) = self.compiled.requirements(si, fi);
+            cap.take(ni, cpu, ram, storage);
         }
     }
 
     fn release(&mut self, si: usize, (fi, ni): (usize, usize)) {
         if let Some(cap) = &mut self.capacity {
-            let req = &self.problem.app.services[si].flavours[fi].requirements;
-            cap.give(ni, req.cpu, req.ram_gb, req.storage_gb);
+            let (cpu, ram, storage) = self.compiled.requirements(si, fi);
+            cap.give(ni, cpu, ram, storage);
         }
     }
 
@@ -545,7 +514,7 @@ impl<'p, 'a> ScoreState<'p, 'a> {
             self.release(si, o);
         }
         let ok = self
-            .problem
+            .compiled
             .placement_ok(si, fi, ni, self.capacity.as_ref().expect("checked above"));
         if let Some(o) = old {
             self.occupy(si, o);
@@ -575,8 +544,8 @@ impl<'p, 'a> ScoreState<'p, 'a> {
         self.release(b, old_b);
         let cap = self.capacity.as_ref().expect("checked above");
         // target nodes are distinct, so the two checks are independent
-        let ok = self.problem.placement_ok(a, fa, a_node, cap)
-            && self.problem.placement_ok(b, fb, b_node, cap);
+        let ok = self.compiled.placement_ok(a, fa, a_node, cap)
+            && self.compiled.placement_ok(b, fb, b_node, cap);
         self.occupy(a, old_a);
         self.occupy(b, old_b);
         ok
@@ -650,10 +619,9 @@ mod tests {
                 constraints: &constraints,
                 objective,
             };
-            let index = problem.constraint_index();
+            let compiled = problem.compile();
             let flavours: Vec<usize> = app.services.iter().map(|s| s.flavours.len()).collect();
-            let mut state =
-                ScoreState::new(&problem, &index, vec![None; app.services.len()]);
+            let mut state = ScoreState::new(&compiled, vec![None; app.services.len()]);
             let mut rng = Rng::new(0x5EED);
             let mut applied = 0;
             for _ in 0..400 {
@@ -681,9 +649,9 @@ mod tests {
             constraints: &constraints,
             objective,
         };
-        let index = problem.constraint_index();
+        let compiled = problem.compile();
         let flavours: Vec<usize> = app.services.iter().map(|s| s.flavours.len()).collect();
-        let mut state = ScoreState::new(&problem, &index, vec![None; app.services.len()]);
+        let mut state = ScoreState::new(&compiled, vec![None; app.services.len()]);
         let mut rng = Rng::new(0xB0B);
         // build up some occupancy first
         for _ in 0..40 {
@@ -729,8 +697,8 @@ mod tests {
             constraints: &[],
             objective,
         };
-        let index = problem.constraint_index();
-        let mut state = ScoreState::new(&problem, &index, vec![None; app.services.len()]);
+        let compiled = problem.compile();
+        let mut state = ScoreState::new(&compiled, vec![None; app.services.len()]);
         let before = state.objective();
         assert!(state
             .apply(Move::Reassign {
@@ -753,9 +721,9 @@ mod tests {
             constraints: &constraints,
             objective,
         };
-        let index = problem.constraint_index();
+        let compiled = problem.compile();
         // place everything somewhere feasible first
-        let mut state = ScoreState::new(&problem, &index, vec![None; app.services.len()]);
+        let mut state = ScoreState::new(&compiled, vec![None; app.services.len()]);
         for si in 0..app.services.len() {
             if let Some((fi, ni, _)) = state.best_reassign(si) {
                 state.apply(Move::Reassign {

@@ -64,24 +64,24 @@ pub fn check_feasible(problem: &Problem, plan: &DeploymentPlan) -> Result<()> {
 
 /// Evaluate a plan against a problem (its app/infra/constraints).
 ///
-/// The assignment is parsed once and reused for every metric; violation
-/// accounting is a single pass over the resolved constraint index (the
-/// pre-perf-pass version rebuilt a one-constraint sub-problem per
-/// constraint). [`PlanMetrics`] values are identical to the old path:
-/// the index's total penalty equals `soft_penalty` (tested invariant)
-/// and a constraint counts as violated iff its contribution is positive.
+/// The problem is compiled once (interned names, dense tensors) and the
+/// assignment parsed once through the interner; every metric is then a
+/// table-lookup pass — no `String` comparison anywhere in the
+/// accounting. [`PlanMetrics`] values are identical to the legacy
+/// string path: the compiled penalty equals `soft_penalty` (tested
+/// invariant) and a constraint counts as violated iff its contribution
+/// is positive.
 pub fn evaluate(problem: &Problem, plan: &DeploymentPlan) -> Result<PlanMetrics> {
-    let assignment = problem.to_assignment(plan)?;
-    let emissions_g = problem.emissions(&assignment);
+    let compiled = problem.compile();
+    let assignment = compiled.to_assignment(plan)?;
+    let emissions_g = compiled.emissions(&assignment);
     let mut cost = 0.0;
     for (si, slot) in assignment.iter().enumerate() {
         if let Some((fi, ni)) = slot {
-            let req = &problem.app.services[si].flavours[*fi].requirements;
-            cost += req.cpu * problem.infra.nodes[*ni].profile.cost_per_cpu_hour;
+            cost += compiled.slot_cost(si, *fi, *ni);
         }
     }
-    let (violation_weight, violations) =
-        problem.constraint_index().violation_summary(&assignment);
+    let (violation_weight, violations) = compiled.constraints().violation_summary(&assignment);
     Ok(PlanMetrics {
         emissions_g,
         cost,

@@ -12,6 +12,7 @@
 //! ([`ScoreState`]): every candidate is O(touched constraints), never a
 //! full objective rescan.
 
+use super::compiled::CompiledProblem;
 use super::delta::{Move, ScoreState};
 use super::problem::{Problem, Scheduler};
 use crate::model::DeploymentPlan;
@@ -35,86 +36,99 @@ impl Scheduler for GreedyScheduler {
     }
 
     fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
-        let n_services = problem.app.services.len();
-        let index = problem.constraint_index();
-        let mut state = ScoreState::new(problem, &index, vec![None; n_services]);
-
-        // --- construction ------------------------------------------------
-        let mut order: Vec<usize> = (0..n_services).collect();
-        order.sort_by(|&a, &b| {
-            let da = demand(problem, a);
-            let db = demand(problem, b);
-            db.partial_cmp(&da).unwrap()
-        });
-
-        for &si in &order {
-            let svc = &problem.app.services[si];
-            match state.best_reassign(si) {
-                Some((fi, ni, d)) => {
-                    // optional services may be better dropped (a negative
-                    // or zero delta from the dropped state means placing
-                    // is at least as good)
-                    if !svc.must_deploy && d.total > 0.0 {
-                        continue;
-                    }
-                    state.apply(Move::Reassign {
-                        service: si,
-                        flavour: fi,
-                        node: ni,
-                    });
-                }
-                None if svc.must_deploy => {
-                    return Err(Error::Infeasible(format!(
-                        "no feasible placement for mandatory service '{}'",
-                        svc.id
-                    )));
-                }
-                None => {}
-            }
-        }
-
-        // --- local search --------------------------------------------------
-        for _ in 0..self.max_rounds {
-            let mut improved = false;
-            for si in 0..n_services {
-                let svc = &problem.app.services[si];
-                // best single-service move: drop (optional only) vs the
-                // best reassignment; each must beat the incumbent (and
-                // the other) by more than the acceptance epsilon
-                let mut best: Option<(Move, f64)> = None;
-                if !svc.must_deploy && state.slot(si).is_some() {
-                    if let Some(d) = state.delta(Move::Drop { service: si }) {
-                        if d.total < -1e-12 {
-                            best = Some((Move::Drop { service: si }, d.total));
-                        }
-                    }
-                }
-                if let Some((fi, ni, d)) = state.best_reassign(si) {
-                    let threshold = best.map(|(_, v)| v).unwrap_or(0.0) - 1e-12;
-                    if d.total < threshold {
-                        best = Some((
-                            Move::Reassign {
-                                service: si,
-                                flavour: fi,
-                                node: ni,
-                            },
-                            d.total,
-                        ));
-                    }
-                }
-                if let Some((mv, _)) = best {
-                    if state.apply(mv).is_some() {
-                        improved = true;
-                    }
-                }
-            }
-            if !improved {
-                break;
-            }
-        }
-
+        let compiled = problem.compile();
+        let state = construct(&compiled, self.max_rounds)?;
         Ok(problem.to_plan(state.assignment()))
     }
+}
+
+/// Greedy construction + first-improvement local search over a compiled
+/// core, returning the resulting [`ScoreState`]. Shared by
+/// [`GreedyScheduler`] and the local-search solver ladder (which seeds
+/// annealing/LNS from this state without a plan round-trip).
+pub(crate) fn construct<'p, 'a>(
+    compiled: &'p CompiledProblem<'p, 'a>,
+    max_rounds: usize,
+) -> Result<ScoreState<'p, 'a>> {
+    let problem = compiled.problem();
+    let n_services = problem.app.services.len();
+    let mut state = ScoreState::new(compiled, vec![None; n_services]);
+
+    // --- construction ------------------------------------------------
+    let mut order: Vec<usize> = (0..n_services).collect();
+    order.sort_by(|&a, &b| {
+        let da = demand(problem, a);
+        let db = demand(problem, b);
+        db.partial_cmp(&da).unwrap()
+    });
+
+    for &si in &order {
+        let svc = &problem.app.services[si];
+        match state.best_reassign(si) {
+            Some((fi, ni, d)) => {
+                // optional services may be better dropped (a negative
+                // or zero delta from the dropped state means placing
+                // is at least as good)
+                if !svc.must_deploy && d.total > 0.0 {
+                    continue;
+                }
+                state.apply(Move::Reassign {
+                    service: si,
+                    flavour: fi,
+                    node: ni,
+                });
+            }
+            None if svc.must_deploy => {
+                return Err(Error::Infeasible(format!(
+                    "no feasible placement for mandatory service '{}'",
+                    svc.id
+                )));
+            }
+            None => {}
+        }
+    }
+
+    // --- local search --------------------------------------------------
+    for _ in 0..max_rounds {
+        let mut improved = false;
+        for si in 0..n_services {
+            let svc = &problem.app.services[si];
+            // best single-service move: drop (optional only) vs the
+            // best reassignment; each must beat the incumbent (and
+            // the other) by more than the acceptance epsilon
+            let mut best: Option<(Move, f64)> = None;
+            if !svc.must_deploy && state.slot(si).is_some() {
+                if let Some(d) = state.delta(Move::Drop { service: si }) {
+                    if d.total < -1e-12 {
+                        best = Some((Move::Drop { service: si }, d.total));
+                    }
+                }
+            }
+            if let Some((fi, ni, d)) = state.best_reassign(si) {
+                let threshold = best.map(|(_, v)| v).unwrap_or(0.0) - 1e-12;
+                if d.total < threshold {
+                    best = Some((
+                        Move::Reassign {
+                            service: si,
+                            flavour: fi,
+                            node: ni,
+                        },
+                        d.total,
+                    ));
+                }
+            }
+            if let Some((mv, _)) = best {
+                if state.apply(mv).is_some() {
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    Ok(state)
 }
 
 fn demand(problem: &Problem, si: usize) -> f64 {

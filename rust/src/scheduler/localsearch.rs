@@ -20,8 +20,9 @@
 //! seed); an optional wall-clock cap (`max_millis`) exists for
 //! latency-bound production use and is documented as machine-dependent.
 
+use super::compiled::CompiledProblem;
 use super::delta::{Move, ScoreState};
-use super::greedy::GreedyScheduler;
+use super::greedy;
 use super::problem::{Problem, Scheduler};
 use super::solver::BranchAndBoundScheduler;
 use crate::model::DeploymentPlan;
@@ -213,7 +214,10 @@ pub fn large_neighbourhood(state: &mut ScoreState, cfg: &LnsConfig) -> ImproverS
             .clamp(2, cfg.max_destroy);
         let mut victims = match round % 3 {
             0 => hot_zone_victims(state, &placed, &mut rng),
-            1 => state.index().violated_services(state.assignment()),
+            1 => state
+                .compiled()
+                .constraints()
+                .violated_services(state.assignment()),
             _ => Vec::new(),
         };
         victims.retain(|&si| state.slot(si).is_some());
@@ -337,8 +341,8 @@ pub fn improve_subset(
     if services.is_empty() || iterations == 0 {
         return 0.0;
     }
-    let index = problem.constraint_index();
-    let mut state = ScoreState::new(problem, &index, std::mem::take(assignment));
+    let compiled = problem.compile();
+    let mut state = ScoreState::new(&compiled, std::mem::take(assignment));
     let stats = anneal(
         &mut state,
         &AnnealConfig {
@@ -360,15 +364,15 @@ fn exact_instance(problem: &Problem, services: usize, nodes: usize) -> bool {
     problem.app.services.len() <= services && problem.infra.nodes.len() <= nodes
 }
 
-/// Greedy seed plan as a [`ScoreState`] (shared solver preamble).
+/// Greedy seed state (shared solver preamble): the exact construction
+/// + local-search pass [`greedy::GreedyScheduler`] runs, kept as a
+/// [`ScoreState`] so the improvers continue on the same compiled core
+/// without a plan round-trip.
 fn seeded_state<'p, 'a>(
-    problem: &'p Problem<'a>,
-    index: &'p super::problem::ConstraintIndex,
+    compiled: &'p CompiledProblem<'p, 'a>,
     max_rounds: usize,
 ) -> Result<ScoreState<'p, 'a>> {
-    let plan = GreedyScheduler { max_rounds }.schedule(problem)?;
-    let assignment = problem.to_assignment(&plan)?;
-    Ok(ScoreState::new(problem, index, assignment))
+    greedy::construct(compiled, max_rounds)
 }
 
 /// Greedy + simulated annealing.
@@ -414,8 +418,8 @@ impl Scheduler for AnnealScheduler {
         if exact_instance(problem, self.exact_services, self.exact_nodes) {
             return BranchAndBoundScheduler::default().schedule(problem);
         }
-        let index = problem.constraint_index();
-        let mut state = seeded_state(problem, &index, self.greedy_rounds)?;
+        let compiled = problem.compile();
+        let mut state = seeded_state(&compiled, self.greedy_rounds)?;
         anneal(
             &mut state,
             &AnnealConfig {
@@ -472,8 +476,8 @@ impl Scheduler for LnsScheduler {
         if exact_instance(problem, self.exact_services, self.exact_nodes) {
             return BranchAndBoundScheduler::default().schedule(problem);
         }
-        let index = problem.constraint_index();
-        let mut state = seeded_state(problem, &index, self.greedy_rounds)?;
+        let compiled = problem.compile();
+        let mut state = seeded_state(&compiled, self.greedy_rounds)?;
         large_neighbourhood(
             &mut state,
             &LnsConfig {
@@ -555,8 +559,8 @@ impl Scheduler for PortfolioScheduler {
         if exact_instance(problem, self.exact_services, self.exact_nodes) {
             return BranchAndBoundScheduler::default().schedule(problem);
         }
-        let index = problem.constraint_index();
-        let mut state = seeded_state(problem, &index, self.greedy_rounds)?;
+        let compiled = problem.compile();
+        let mut state = seeded_state(&compiled, self.greedy_rounds)?;
         anneal(
             &mut state,
             &AnnealConfig {
@@ -580,6 +584,7 @@ impl Scheduler for PortfolioScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scheduler::greedy::GreedyScheduler;
     use crate::scheduler::problem::Objective;
     use crate::util::Rng;
 
@@ -683,8 +688,8 @@ mod tests {
             objective: Objective::default(),
         };
         let plan = GreedyScheduler::default().schedule(&problem).unwrap();
-        let index = problem.constraint_index();
-        let mut state = ScoreState::new(&problem, &index, problem.to_assignment(&plan).unwrap());
+        let compiled = problem.compile();
+        let mut state = ScoreState::new(&compiled, problem.to_assignment(&plan).unwrap());
         let start = state.objective();
         let stats = anneal(
             &mut state,
@@ -710,8 +715,8 @@ mod tests {
             objective: Objective::default(),
         };
         let plan = GreedyScheduler::default().schedule(&problem).unwrap();
-        let index = problem.constraint_index();
-        let mut state = ScoreState::new(&problem, &index, problem.to_assignment(&plan).unwrap());
+        let compiled = problem.compile();
+        let mut state = ScoreState::new(&compiled, problem.to_assignment(&plan).unwrap());
         let start = state.objective();
         let stats = large_neighbourhood(&mut state, &LnsConfig::default());
         assert!(stats.end <= start + 1e-9);

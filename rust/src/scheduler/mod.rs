@@ -13,7 +13,11 @@
 //!
 //! All solvers share one incremental scoring engine — the
 //! delta-evaluation move core in [`delta`] ([`ScoreState`] + [`Move`]),
-//! which prices any single move in O(touched constraints). See
+//! which prices any single move in O(touched constraints). Since the
+//! interned-ID refactor that engine scores through the compiled problem
+//! core ([`compiled::CompiledProblem`]): names are resolved once per
+//! solve into dense `u32` handles and every cost/penalty/emissions term
+//! is a precomputed table lookup (see `docs/performance.md`). See
 //! `docs/solvers.md` for the solver ladder (greedy → anneal → LNS →
 //! portfolio → exact) and when to use which.
 //!
@@ -22,6 +26,7 @@
 //! against a carbon forecast (see [`crate::forecast`]).
 
 pub mod baselines;
+pub mod compiled;
 pub mod delta;
 pub mod eval;
 pub mod greedy;
@@ -31,6 +36,7 @@ pub mod solver;
 pub mod temporal;
 
 pub use baselines::{CostOnlyScheduler, GreenOracleScheduler, RandomScheduler};
+pub use compiled::{CompiledLink, CompiledProblem};
 pub use delta::{Move, ScoreDelta, ScoreState};
 pub use eval::{check_feasible, evaluate, PlanMetrics};
 pub use greedy::GreedyScheduler;

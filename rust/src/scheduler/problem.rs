@@ -1,7 +1,18 @@
 //! The deployment problem: decision space, hard feasibility and the soft
 //! objective.
+//!
+//! Since the interned-ID refactor the scoring arithmetic lives in the
+//! compiled problem core ([`super::compiled::CompiledProblem`]): names
+//! are resolved once per solve and every score is a dense table lookup.
+//! The methods here remain as the *reference API* — thin wrappers that
+//! compile-then-score, bit-identical to the pre-refactor string path
+//! (property-tested against a naive reimplementation in
+//! `rust/tests/compiled_core.rs`). Hot paths call [`Problem::compile`]
+//! once and score through the returned core instead.
 
-use crate::constraints::{Constraint, ConstraintKind};
+use super::compiled::CompiledProblem;
+use crate::constraints::{CompiledConstraints, Constraint};
+use crate::model::interner::ModelIndex;
 use crate::model::{Application, DeploymentPlan, Infrastructure, Placement};
 use crate::Result;
 
@@ -25,10 +36,16 @@ pub const CAPACITY_EPS: f64 = 1e-6;
 /// oracle gap the constraints recover.
 #[derive(Debug, Clone, Copy)]
 pub struct Objective {
+    /// Weight of the plan cost term.
     pub cost_weight: f64,
+    /// Weight of the soft-constraint penalty term.
     pub soft_weight: f64,
+    /// Cost of dropping one optional service.
     pub drop_penalty: f64,
+    /// Weight of the flavour-preference rank term.
     pub flavour_weight: f64,
+    /// Weight of the emissions term (0 in the constrained production
+    /// configuration).
     pub emissions_weight: f64,
 }
 
@@ -48,14 +65,19 @@ impl Default for Objective {
 
 /// A deployment problem instance.
 pub struct Problem<'a> {
+    /// The application to place.
     pub app: &'a Application,
+    /// The infrastructure to place it on.
     pub infra: &'a Infrastructure,
+    /// The generated green constraints (soft).
     pub constraints: &'a [Constraint],
+    /// Objective weights.
     pub objective: Objective,
 }
 
 /// A scheduling algorithm.
 pub trait Scheduler {
+    /// Short stable name (CLI/bench identifier).
     fn name(&self) -> &'static str;
 
     /// Produce a feasible plan (or `Error::Infeasible`).
@@ -70,6 +92,7 @@ pub struct CapacityState {
 }
 
 impl CapacityState {
+    /// Full capacity of every node.
     pub fn new(infra: &Infrastructure) -> Self {
         CapacityState {
             remaining: infra
@@ -86,11 +109,14 @@ impl CapacityState {
         }
     }
 
+    /// Does a demand fit the node's remaining capacity (within
+    /// [`CAPACITY_EPS`])?
     pub fn fits(&self, node: usize, cpu: f64, ram: f64, storage: f64) -> bool {
         let (c, r, s) = self.remaining[node];
         cpu <= c + CAPACITY_EPS && ram <= r + CAPACITY_EPS && storage <= s + CAPACITY_EPS
     }
 
+    /// Reserve a demand on a node.
     pub fn take(&mut self, node: usize, cpu: f64, ram: f64, storage: f64) {
         let slot = &mut self.remaining[node];
         slot.0 -= cpu;
@@ -98,6 +124,7 @@ impl CapacityState {
         slot.2 -= storage;
     }
 
+    /// Release a demand from a node.
     pub fn give(&mut self, node: usize, cpu: f64, ram: f64, storage: f64) {
         let slot = &mut self.remaining[node];
         slot.0 += cpu;
@@ -108,7 +135,10 @@ impl CapacityState {
 
 impl<'a> Problem<'a> {
     /// Hard placement feasibility of (service, flavour) on node —
-    /// placement compatibility, availability, capacity.
+    /// placement compatibility, availability, capacity. Already dense
+    /// (index-driven); the compiled core precomputes the
+    /// capacity-independent part into a mask
+    /// ([`CompiledProblem::placement_ok`]).
     pub fn placement_ok(
         &self,
         service_idx: usize,
@@ -130,71 +160,18 @@ impl<'a> Problem<'a> {
 
     /// Soft-constraint penalty of a complete assignment.
     /// `assignment[i] = Some((flavour_idx, node_idx))` per service.
+    ///
+    /// Reference wrapper: resolves the constraints through the interner
+    /// and prices the compiled rows. Hot paths hold a
+    /// [`CompiledProblem`] (or its [`CompiledConstraints`]) instead of
+    /// re-resolving per call. Constraints whose names do not resolve are
+    /// uniformly inert — the solver/evaluator semantics the old
+    /// `ConstraintIndex` already had (the pre-refactor *string* scan
+    /// disagreed for stale `PreferNode` rows; see
+    /// `constraints::compiled`).
     pub fn soft_penalty(&self, assignment: &[Option<(usize, usize)>]) -> f64 {
-        let mut penalty = 0.0;
-        for c in self.constraints {
-            match &c.kind {
-                ConstraintKind::AvoidNode {
-                    service,
-                    flavour,
-                    node,
-                } => {
-                    if let Some((si, (fi, ni))) = self.find(assignment, service) {
-                        let svc = &self.app.services[si];
-                        if svc.flavours[fi].name == *flavour
-                            && self.infra.nodes[ni].id == *node
-                        {
-                            penalty += c.weight;
-                        }
-                    }
-                }
-                ConstraintKind::Affinity {
-                    service,
-                    flavour,
-                    other,
-                } => {
-                    if let (Some((si, (fi, ni))), Some((_, (_, nz)))) = (
-                        self.find(assignment, service),
-                        self.find(assignment, other),
-                    ) {
-                        let svc = &self.app.services[si];
-                        if svc.flavours[fi].name == *flavour && ni != nz {
-                            penalty += c.weight;
-                        }
-                    }
-                }
-                ConstraintKind::PreferNode {
-                    service,
-                    flavour,
-                    node,
-                } => {
-                    if let Some((si, (fi, ni))) = self.find(assignment, service) {
-                        let svc = &self.app.services[si];
-                        if svc.flavours[fi].name == *flavour
-                            && self.infra.nodes[ni].id != *node
-                        {
-                            penalty += c.weight;
-                        }
-                    }
-                }
-            }
-        }
-        penalty
-    }
-
-    pub(crate) fn find(
-        &self,
-        assignment: &[Option<(usize, usize)>],
-        service: &str,
-    ) -> Option<(usize, (usize, usize))> {
-        let idx = self.app.services.iter().position(|s| s.id == service)?;
-        assignment[idx].map(|a| (idx, a))
-    }
-
-    /// Build the per-service constraint index used for incremental move
-    /// evaluation (the scheduler hot path — see EXPERIMENTS.md §Perf).
-    pub fn constraint_index(&self) -> ConstraintIndex {
-        ConstraintIndex::new(self)
+        let symbols = ModelIndex::new(self.app, self.infra);
+        CompiledConstraints::resolve(&symbols, self.constraints).total_penalty(assignment)
     }
 
     /// The temporal freedom of service `si` inside a planning horizon of
@@ -224,60 +201,22 @@ impl<'a> Problem<'a> {
     }
 
     /// Full objective value of an assignment (lower is better).
+    ///
+    /// Reference wrapper: compiles, then scores through the dense
+    /// tensors — bit-identical to the pre-refactor string scan. Hot
+    /// paths compile once ([`Problem::compile`]) and reuse the core.
     pub fn objective_value(&self, assignment: &[Option<(usize, usize)>]) -> f64 {
-        let o = &self.objective;
-        let mut cost = 0.0;
-        let mut flavour_rank = 0.0;
-        let mut dropped = 0.0;
-        for (si, slot) in assignment.iter().enumerate() {
-            match slot {
-                Some((fi, ni)) => {
-                    let svc = &self.app.services[si];
-                    let req = &svc.flavours[*fi].requirements;
-                    cost += req.cpu * self.infra.nodes[*ni].profile.cost_per_cpu_hour;
-                    flavour_rank += *fi as f64; // 0 = most preferred
-                }
-                None => dropped += 1.0,
-            }
-        }
-        let mut value = o.cost_weight * cost
-            + o.soft_weight * self.soft_penalty(assignment)
-            + o.drop_penalty * dropped
-            + o.flavour_weight * flavour_rank;
-        if o.emissions_weight != 0.0 {
-            value += o.emissions_weight * self.emissions(assignment);
-        }
-        value
+        self.compile().objective_value(assignment)
     }
 
     /// Ground-truth emissions of an assignment (gCO2eq per window):
     /// compute (Eq. 3 semantics) + inter-node communication (Eq. 13
     /// profiles × the average CI of the endpoints' nodes).
+    ///
+    /// Reference wrapper over the compiled tensors (see
+    /// [`Problem::objective_value`]).
     pub fn emissions(&self, assignment: &[Option<(usize, usize)>]) -> f64 {
-        let mut total = 0.0;
-        for (si, slot) in assignment.iter().enumerate() {
-            if let Some((fi, ni)) = slot {
-                let svc = &self.app.services[si];
-                if let Some(profile) = svc.flavours[*fi].energy {
-                    total += profile.kwh * self.infra.nodes[*ni].carbon();
-                }
-            }
-        }
-        for link in &self.app.links {
-            let from = self.find(assignment, &link.from);
-            let to = self.find(assignment, &link.to);
-            if let (Some((si, (fi, ni))), Some((_, (_, nz)))) = (from, to) {
-                if ni != nz {
-                    let flavour = &self.app.services[si].flavours[fi].name;
-                    if let Some(kwh) = link.energy_for(flavour) {
-                        let ci = 0.5
-                            * (self.infra.nodes[ni].carbon() + self.infra.nodes[nz].carbon());
-                        total += kwh * ci;
-                    }
-                }
-            }
-        }
-        total
+        self.compile().emissions(assignment)
     }
 
     /// Convert an assignment into a [`DeploymentPlan`].
@@ -297,247 +236,20 @@ impl<'a> Problem<'a> {
         plan
     }
 
-    /// Parse a plan back into an assignment (for evaluation).
+    /// Parse a plan back into an assignment (for evaluation), resolving
+    /// names through the interner — a stale placement yields
+    /// [`crate::Error::UnknownId`] instead of the panicking position
+    /// scans of the pre-refactor path.
     pub fn to_assignment(&self, plan: &DeploymentPlan) -> Result<Vec<Option<(usize, usize)>>> {
+        let symbols = ModelIndex::new(self.app, self.infra);
         let mut assignment = vec![None; self.app.services.len()];
         for p in &plan.placements {
-            let si = self
-                .app
-                .services
-                .iter()
-                .position(|s| s.id == p.service)
-                .ok_or_else(|| crate::Error::other(format!("unknown service {}", p.service)))?;
-            let fi = self.app.services[si]
-                .flavours
-                .iter()
-                .position(|f| f.name == p.flavour)
-                .ok_or_else(|| crate::Error::other(format!("unknown flavour {}", p.flavour)))?;
-            let ni = self
-                .infra
-                .nodes
-                .iter()
-                .position(|n| n.id == p.node)
-                .ok_or_else(|| crate::Error::other(format!("unknown node {}", p.node)))?;
-            assignment[si] = Some((fi, ni));
+            let (sid, fid, nid) = symbols.resolve_placement(p)?;
+            assignment[sid.index()] = Some((fid.index(), nid.index()));
         }
         Ok(assignment)
     }
-}
 
-/// Pre-resolved constraint references for O(1)-per-constraint incremental
-/// move evaluation. Replaces the O(|services| · |constraints|) full
-/// `objective_value` scan in the scheduler inner loop — the dominant cost
-/// before the perf pass (14 s for a 100×50 instance; see EXPERIMENTS.md
-/// §Perf).
-pub struct ConstraintIndex {
-    /// Per constraint: resolved indices.
-    resolved: Vec<ResolvedConstraint>,
-    /// service idx -> indices into `resolved` that this service's slot
-    /// can affect (as subject or as affinity partner).
-    touching: Vec<Vec<usize>>,
-}
-
-enum ResolvedConstraint {
-    Avoid {
-        service: usize,
-        flavour: usize,
-        node: usize,
-        weight: f64,
-    },
-    Affinity {
-        service: usize,
-        flavour: usize,
-        other: usize,
-        weight: f64,
-    },
-    Prefer {
-        service: usize,
-        flavour: usize,
-        node: usize,
-        weight: f64,
-    },
-    /// References an unknown service/flavour/node: never violated.
-    Inert,
-}
-
-impl ConstraintIndex {
-    fn new(problem: &Problem) -> ConstraintIndex {
-        let svc_idx = |name: &str| problem.app.services.iter().position(|s| s.id == name);
-        let node_idx = |name: &str| problem.infra.nodes.iter().position(|n| n.id == name);
-        let fl_idx = |si: usize, name: &str| {
-            problem.app.services[si]
-                .flavours
-                .iter()
-                .position(|f| f.name == name)
-        };
-        let mut resolved = Vec::with_capacity(problem.constraints.len());
-        let mut touching = vec![Vec::new(); problem.app.services.len()];
-        for c in problem.constraints {
-            let idx = resolved.len();
-            let entry = match &c.kind {
-                ConstraintKind::AvoidNode {
-                    service,
-                    flavour,
-                    node,
-                } => match (svc_idx(service), node_idx(node)) {
-                    (Some(si), Some(ni)) => match fl_idx(si, flavour) {
-                        Some(fi) => {
-                            touching[si].push(idx);
-                            ResolvedConstraint::Avoid {
-                                service: si,
-                                flavour: fi,
-                                node: ni,
-                                weight: c.weight,
-                            }
-                        }
-                        None => ResolvedConstraint::Inert,
-                    },
-                    _ => ResolvedConstraint::Inert,
-                },
-                ConstraintKind::Affinity {
-                    service,
-                    flavour,
-                    other,
-                } => match (svc_idx(service), svc_idx(other)) {
-                    (Some(si), Some(zi)) => match fl_idx(si, flavour) {
-                        Some(fi) => {
-                            touching[si].push(idx);
-                            touching[zi].push(idx);
-                            ResolvedConstraint::Affinity {
-                                service: si,
-                                flavour: fi,
-                                other: zi,
-                                weight: c.weight,
-                            }
-                        }
-                        None => ResolvedConstraint::Inert,
-                    },
-                    _ => ResolvedConstraint::Inert,
-                },
-                ConstraintKind::PreferNode {
-                    service,
-                    flavour,
-                    node,
-                } => match (svc_idx(service), node_idx(node)) {
-                    (Some(si), Some(ni)) => match fl_idx(si, flavour) {
-                        Some(fi) => {
-                            touching[si].push(idx);
-                            ResolvedConstraint::Prefer {
-                                service: si,
-                                flavour: fi,
-                                node: ni,
-                                weight: c.weight,
-                            }
-                        }
-                        None => ResolvedConstraint::Inert,
-                    },
-                    _ => ResolvedConstraint::Inert,
-                },
-            };
-            resolved.push(entry);
-        }
-        ConstraintIndex { resolved, touching }
-    }
-
-    fn violation(
-        &self,
-        idx: usize,
-        assignment: &[Option<(usize, usize)>],
-    ) -> f64 {
-        match &self.resolved[idx] {
-            ResolvedConstraint::Avoid {
-                service,
-                flavour,
-                node,
-                weight,
-            } => match assignment[*service] {
-                Some((fi, ni)) if fi == *flavour && ni == *node => *weight,
-                _ => 0.0,
-            },
-            ResolvedConstraint::Affinity {
-                service,
-                flavour,
-                other,
-                weight,
-            } => match (assignment[*service], assignment[*other]) {
-                (Some((fi, ni)), Some((_, nz))) if fi == *flavour && ni != nz => *weight,
-                _ => 0.0,
-            },
-            ResolvedConstraint::Prefer {
-                service,
-                flavour,
-                node,
-                weight,
-            } => match assignment[*service] {
-                Some((fi, ni)) if fi == *flavour && ni != *node => *weight,
-                _ => 0.0,
-            },
-            ResolvedConstraint::Inert => 0.0,
-        }
-    }
-
-    /// Soft-penalty contribution of the constraints touching `service`.
-    pub fn penalty_touching(
-        &self,
-        service: usize,
-        assignment: &[Option<(usize, usize)>],
-    ) -> f64 {
-        self.touching[service]
-            .iter()
-            .map(|&idx| self.violation(idx, assignment))
-            .sum()
-    }
-
-    /// Total soft penalty (must equal `Problem::soft_penalty` — tested).
-    pub fn total_penalty(&self, assignment: &[Option<(usize, usize)>]) -> f64 {
-        (0..self.resolved.len())
-            .map(|idx| self.violation(idx, assignment))
-            .sum()
-    }
-
-    /// `(summed violated weight, violated count)` in one pass over the
-    /// resolved constraints — the evaluator's accounting, without the
-    /// per-constraint sub-problem rebuilds it used before the perf pass.
-    pub fn violation_summary(&self, assignment: &[Option<(usize, usize)>]) -> (f64, usize) {
-        let mut weight = 0.0;
-        let mut count = 0usize;
-        for idx in 0..self.resolved.len() {
-            let v = self.violation(idx, assignment);
-            if v > 0.0 {
-                weight += v;
-                count += 1;
-            }
-        }
-        (weight, count)
-    }
-
-    /// Services participating in at least one violated constraint
-    /// (sorted, deduplicated) — the large-neighbourhood search destroys
-    /// this set to escape penalty-heavy local optima.
-    pub fn violated_services(&self, assignment: &[Option<(usize, usize)>]) -> Vec<usize> {
-        let mut out = Vec::new();
-        for idx in 0..self.resolved.len() {
-            if self.violation(idx, assignment) <= 0.0 {
-                continue;
-            }
-            match &self.resolved[idx] {
-                ResolvedConstraint::Avoid { service, .. }
-                | ResolvedConstraint::Prefer { service, .. } => out.push(*service),
-                ResolvedConstraint::Affinity { service, other, .. } => {
-                    out.push(*service);
-                    out.push(*other);
-                }
-                ResolvedConstraint::Inert => {}
-            }
-        }
-        out.sort_unstable();
-        out.dedup();
-        out
-    }
-}
-
-/// Incremental objective evaluation around one service's slot.
-impl<'a> Problem<'a> {
     /// The objective contribution that depends only on service `si`'s own
     /// slot (cost, flavour preference, drop penalty) plus the penalties of
     /// constraints touching `si`. Changing `si`'s slot changes the global
@@ -549,17 +261,18 @@ impl<'a> Problem<'a> {
     /// solver layer now routes through.
     pub fn local_objective(
         &self,
-        index: &ConstraintIndex,
+        compiled: &CompiledProblem,
         si: usize,
         assignment: &[Option<(usize, usize)>],
     ) -> f64 {
-        super::delta::local_objective(self, index, si, assignment)
+        super::delta::local_objective(compiled, si, assignment)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::constraints::ConstraintKind;
     use crate::model::{EnergyProfile, Flavour, Node, Service};
 
     pub(crate) fn tiny_problem_parts() -> (Application, Infrastructure) {
@@ -711,7 +424,7 @@ mod tests {
                     ..Objective::default()
                 },
             };
-            let index = problem.constraint_index();
+            let compiled = problem.compile();
             // random assignment
             let mut assignment: Vec<Option<(usize, usize)>> = app
                 .services
@@ -724,16 +437,18 @@ mod tests {
                     }
                 })
                 .collect();
-            // index total penalty must match the naive scan
+            // compiled total penalty must match the reference wrapper
             assert!(
-                (index.total_penalty(&assignment) - problem.soft_penalty(&assignment)).abs()
+                (compiled.constraints().total_penalty(&assignment)
+                    - problem.soft_penalty(&assignment))
+                .abs()
                     < 1e-9
             );
             // moving one service: full-objective delta == local delta
             for _ in 0..30 {
                 let si = rng.below(assignment.len());
                 let before_full = problem.objective_value(&assignment);
-                let before_local = problem.local_objective(&index, si, &assignment);
+                let before_local = problem.local_objective(&compiled, si, &assignment);
                 let old = assignment[si];
                 assignment[si] = if rng.chance(0.2) {
                     None
@@ -744,7 +459,7 @@ mod tests {
                     ))
                 };
                 let after_full = problem.objective_value(&assignment);
-                let after_local = problem.local_objective(&index, si, &assignment);
+                let after_local = problem.local_objective(&compiled, si, &assignment);
                 assert!(
                     ((after_full - before_full) - (after_local - before_local)).abs() < 1e-9,
                     "emissions_weight {emissions_weight}: full delta {} vs local delta {} (move {old:?} -> {:?})",
@@ -771,5 +486,28 @@ mod tests {
         assert_eq!(plan.dropped, vec!["b"]);
         let back = problem.to_assignment(&plan).unwrap();
         assert_eq!(back, assignment);
+    }
+
+    #[test]
+    fn stale_plan_names_yield_unknown_id() {
+        let (app, infra) = tiny_problem_parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let plan = DeploymentPlan {
+            placements: vec![Placement {
+                service: "a".into(),
+                flavour: "big".into(),
+                node: "decommissioned".into(),
+            }],
+            dropped: Vec::new(),
+        };
+        assert!(matches!(
+            problem.to_assignment(&plan),
+            Err(crate::Error::UnknownId(_))
+        ));
     }
 }

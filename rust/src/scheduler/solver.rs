@@ -55,8 +55,8 @@ impl Scheduler for BranchAndBoundScheduler {
             explored: 0,
             max_nodes: self.max_nodes,
         };
-        let index = problem.constraint_index();
-        let mut state = ScoreState::new(problem, &index, vec![None; n]);
+        let compiled = problem.compile();
+        let mut state = ScoreState::new(&compiled, vec![None; n]);
         search.dfs(0, &mut state);
         match search.best {
             Some(best) => Ok(problem.to_plan(&best)),
@@ -67,7 +67,7 @@ impl Scheduler for BranchAndBoundScheduler {
     }
 }
 
-impl<'p, 'a> Search<'p, 'a> {
+impl Search<'_, '_> {
     fn dfs(&mut self, si: usize, state: &mut ScoreState) {
         if self.explored >= self.max_nodes {
             return;
@@ -198,16 +198,14 @@ mod tests {
             objective: Objective::default(),
         };
         if let Ok(plan) = BranchAndBoundScheduler::default().schedule(&problem) {
-            // re-simulate capacity
+            // re-simulate capacity, resolving names through the interner
+            // (a malformed plan is a structured UnknownId error now, not
+            // a panicking position scan)
+            let symbols = crate::model::ModelIndex::new(&app, &infra);
             let mut cap = CapacityState::new(&infra);
             for p in &plan.placements {
-                let si = app.services.iter().position(|s| s.id == p.service).unwrap();
-                let fi = app.services[si]
-                    .flavours
-                    .iter()
-                    .position(|f| f.name == p.flavour)
-                    .unwrap();
-                let ni = infra.nodes.iter().position(|n| n.id == p.node).unwrap();
+                let (sid, fid, nid) = symbols.resolve_placement(p).unwrap();
+                let (si, fi, ni) = (sid.index(), fid.index(), nid.index());
                 let req = &app.services[si].flavours[fi].requirements;
                 assert!(cap.fits(ni, req.cpu, req.ram_gb, req.storage_gb));
                 cap.take(ni, req.cpu, req.ram_gb, req.storage_gb);

@@ -26,12 +26,12 @@
 //! project worse than an (inadmissible) slot-0 start, so no dominance
 //! claim is made there.
 
+use super::compiled::{CompiledLink, CompiledProblem};
 use super::delta::{Move, ScoreState};
 use super::problem::{CapacityState, Problem, Scheduler};
 use crate::forecast::CarbonForecaster;
 use crate::model::DeploymentPlan;
 use crate::Result;
-use std::collections::HashMap;
 
 /// Temporal-pass knobs.
 #[derive(Debug, Clone, Copy)]
@@ -120,9 +120,10 @@ impl<'a> TemporalScheduler<'a> {
         // Spatial pricing (soft-constraint penalty + cost deltas) routes
         // through the shared move core in scoring-only mode: hard
         // feasibility here is *per-slot* (tracked below), which the flat
-        // capacity view cannot represent.
-        let index = problem.constraint_index();
-        let mut spatial = ScoreState::unbounded(problem, &index, problem.to_assignment(plan)?);
+        // capacity view cannot represent. The compiled core also provides
+        // the CSR link adjacency the projection pricing walks.
+        let compiled = problem.compile();
+        let mut spatial = ScoreState::unbounded(&compiled, compiled.to_assignment(plan)?);
 
         // --- forecast CI per (node, slot) ------------------------------
         // fall back to the node's enriched (observed) carbon when the
@@ -173,13 +174,6 @@ impl<'a> TemporalScheduler<'a> {
             }
         }
 
-        let svc_idx: HashMap<&str, usize> = problem
-            .app
-            .services
-            .iter()
-            .enumerate()
-            .map(|(i, s)| (s.id.as_str(), i))
-            .collect();
         let mut moves = 0usize;
 
         // --- improvement sweeps (identity when horizon ≤ 1) ------------
@@ -211,14 +205,8 @@ impl<'a> TemporalScheduler<'a> {
                     // free the current reservation while evaluating
                     capacity[slot_of[si]].give(ni, req.cpu, req.ram_gb, req.storage_gb);
 
-                    let cur_proj = self.projected_local(
-                        problem,
-                        &svc_idx,
-                        &ci,
-                        spatial.assignment(),
-                        &slot_of,
-                        si,
-                    );
+                    let cur_proj =
+                        self.projected_local(&compiled, &ci, spatial.assignment(), &slot_of, si);
 
                     let mut best: Option<(usize, usize, f64)> = None;
                     for s2 in lo..hi {
@@ -226,7 +214,7 @@ impl<'a> TemporalScheduler<'a> {
                             if s2 == slot_of[si] && n2 == ni {
                                 continue; // the incumbent
                             }
-                            if !problem.placement_ok(si, fi, n2, &capacity[s2]) {
+                            if !compiled.placement_ok(si, fi, n2, &capacity[s2]) {
                                 continue;
                             }
                             // the move core prices the spatial side: its
@@ -241,8 +229,7 @@ impl<'a> TemporalScheduler<'a> {
                             let old_slot = slot_of[si];
                             slot_of[si] = s2;
                             let proj = self.projected_local(
-                                problem,
-                                &svc_idx,
+                                &compiled,
                                 &ci,
                                 spatial.assignment(),
                                 &slot_of,
@@ -283,8 +270,7 @@ impl<'a> TemporalScheduler<'a> {
             }
         }
 
-        let projected_g =
-            self.projected_total(problem, &svc_idx, &ci, spatial.assignment(), &slot_of);
+        let projected_g = self.projected_total(&compiled, &ci, spatial.assignment(), &slot_of);
         let start_slots = (0..n_services)
             .filter(|&si| windows[si].is_some() && spatial.slot(si).is_some())
             .map(|si| (problem.app.services[si].id.clone(), slot_of[si]))
@@ -300,12 +286,12 @@ impl<'a> TemporalScheduler<'a> {
     /// Projected emissions of the full annotated assignment.
     fn projected_total(
         &self,
-        problem: &Problem,
-        svc_idx: &HashMap<&str, usize>,
+        compiled: &CompiledProblem,
         ci: &[Vec<f64>],
         assignment: &[Option<(usize, usize)>],
         slot_of: &[usize],
     ) -> f64 {
+        let problem = compiled.problem();
         let mut total = 0.0;
         for (si, slot) in assignment.iter().enumerate() {
             if let Some((fi, ni)) = slot {
@@ -314,37 +300,34 @@ impl<'a> TemporalScheduler<'a> {
                 }
             }
         }
-        for link in &problem.app.links {
-            total += self.link_projection(problem, svc_idx, ci, assignment, slot_of, link);
+        for link in compiled.links() {
+            total += self.link_projection(ci, assignment, slot_of, link);
         }
         total
     }
 
     /// Projected emissions terms that change when `si` moves: its own
-    /// compute plus every link incident to it. The links are counted in
-    /// full, so the delta of this quantity equals the delta of
-    /// [`Self::projected_total`] (other services' terms cancel).
+    /// compute plus every link incident to it (the compiled CSR
+    /// adjacency — no name comparisons, no full link walk). The links
+    /// are counted in full, so the delta of this quantity equals the
+    /// delta of [`Self::projected_total`] (other services' terms cancel).
     fn projected_local(
         &self,
-        problem: &Problem,
-        svc_idx: &HashMap<&str, usize>,
+        compiled: &CompiledProblem,
         ci: &[Vec<f64>],
         assignment: &[Option<(usize, usize)>],
         slot_of: &[usize],
         si: usize,
     ) -> f64 {
+        let problem = compiled.problem();
         let mut total = 0.0;
         if let Some((fi, ni)) = assignment[si] {
             if let Some(profile) = problem.app.services[si].flavours[fi].energy {
                 total += profile.kwh * ci[ni][slot_of[si]];
             }
         }
-        let id = &problem.app.services[si].id;
-        for link in &problem.app.links {
-            if link.from != *id && link.to != *id {
-                continue;
-            }
-            total += self.link_projection(problem, svc_idx, ci, assignment, slot_of, link);
+        for link in compiled.links_of(si) {
+            total += self.link_projection(ci, assignment, slot_of, link);
         }
         total
     }
@@ -354,30 +337,20 @@ impl<'a> TemporalScheduler<'a> {
     /// their own start slots.
     fn link_projection(
         &self,
-        problem: &Problem,
-        svc_idx: &HashMap<&str, usize>,
         ci: &[Vec<f64>],
         assignment: &[Option<(usize, usize)>],
         slot_of: &[usize],
-        link: &crate::model::CommLink,
+        link: &CompiledLink,
     ) -> f64 {
-        let (Some(&fs), Some(&ts)) = (
-            svc_idx.get(link.from.as_str()),
-            svc_idx.get(link.to.as_str()),
-        ) else {
-            return 0.0;
-        };
+        let (fs, ts) = (link.from as usize, link.to as usize);
         let (Some((ffi, fni)), Some((_, tni))) = (assignment[fs], assignment[ts]) else {
             return 0.0;
         };
         if fni == tni {
             return 0.0;
         }
-        let flavour = &problem.app.services[fs].flavours[ffi].name;
-        match link.energy_for(flavour) {
-            Some(kwh) => {
-                kwh * 0.5 * (ci[fni][slot_of[fs]] + ci[tni][slot_of[ts]])
-            }
+        match link.energy.get(ffi).copied().flatten() {
+            Some(kwh) => kwh * 0.5 * (ci[fni][slot_of[fs]] + ci[tni][slot_of[ts]]),
             None => 0.0,
         }
     }

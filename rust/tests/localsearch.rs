@@ -84,8 +84,8 @@ fn property_delta_tracked_objective_equals_full_rescore() {
                 ..Objective::default()
             },
         };
-        let index = problem.constraint_index();
-        let mut state = ScoreState::new(&problem, &index, vec![None; services]);
+        let compiled = problem.compile();
+        let mut state = ScoreState::new(&compiled, vec![None; services]);
         for _ in 0..120 {
             let mv = match rng.below(4) {
                 0 => Move::Drop {

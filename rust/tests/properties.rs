@@ -172,16 +172,14 @@ fn scheduler_respects_hard_constraints() {
                         assert!(plan.is_deployed(&s.id), "{} dropped", s.id);
                     }
                 }
-                // capacity respected
+                // capacity respected (names resolved through the
+                // interner: malformed placements are structured
+                // UnknownId errors, not panicking position scans)
+                let symbols = greengen::model::ModelIndex::new(&app, &infra);
                 let mut cap = CapacityState::new(&infra);
                 for p in &plan.placements {
-                    let si = app.services.iter().position(|s| s.id == p.service).unwrap();
-                    let fi = app.services[si]
-                        .flavours
-                        .iter()
-                        .position(|f| f.name == p.flavour)
-                        .unwrap();
-                    let ni = infra.nodes.iter().position(|n| n.id == p.node).unwrap();
+                    let (sid, fid, nid) = symbols.resolve_placement(p).unwrap();
+                    let (si, fi, ni) = (sid.index(), fid.index(), nid.index());
                     let req = &app.services[si].flavours[fi].requirements;
                     assert!(cap.fits(ni, req.cpu, req.ram_gb, req.storage_gb));
                     cap.take(ni, req.cpu, req.ram_gb, req.storage_gb);

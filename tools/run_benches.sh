@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Run every bench target and rewrite the committed BENCH_*.json
+# baselines (continuum, forecast, generation, solver, scalability).
+#
+# The authoring containers for PRs 1-5 had no Rust toolchain, so those
+# files were committed as honest null-valued schema placeholders. Run
+# this script from the first machine that has cargo, then commit the
+# rewritten BENCH_*.json files:
+#
+#   bash tools/run_benches.sh
+#   git add BENCH_*.json && git commit -m "Record measured bench baselines"
+#
+# The remaining bench targets write CSVs under results/ (not committed)
+# or need optional PJRT artifacts; failures there are reported but do
+# not abort the JSON baselines.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: no cargo on PATH — run this from a machine with a Rust toolchain" >&2
+    exit 1
+fi
+
+# Targets that rewrite a committed BENCH_*.json baseline.
+json_benches=(continuum forecast generation solver scalability)
+for b in "${json_benches[@]}"; do
+    echo "== cargo bench --bench $b"
+    cargo bench --bench "$b"
+done
+
+# CSV-only / optional targets (runtime_xla needs PJRT artifacts).
+extra_benches=(ablations scenarios scheduler threshold runtime_xla)
+for b in "${extra_benches[@]}"; do
+    echo "== cargo bench --bench $b (optional)"
+    cargo bench --bench "$b" || echo "warn: bench '$b' failed (optional target)" >&2
+done
+
+echo
+echo "Rewritten baselines:"
+git status --short -- 'BENCH_*.json' || true
