@@ -3,7 +3,10 @@
 //! the full 10-point sweep lives in `examples/scalability.rs`), plus the
 //! interned-ID core sweep: legacy (compile-per-score) vs compiled
 //! (compile-once) scoring throughput at continuum scale, written to the
-//! committed `BENCH_scalability.json` baseline.
+//! committed `BENCH_scalability.json` baseline. Each scoring case also
+//! times one anneal pass with the observability collectors off vs on
+//! (`instrumentation_overhead_pct`), pinning the cost of the `obs`
+//! layer on the instrumented hot path.
 
 use greengen::benchkit::{Bench, BenchConfig};
 use greengen::constraints::{Constraint, ConstraintGenerator, GeneratorConfig};
@@ -123,6 +126,27 @@ fn scoring_case(services: usize, nodes: usize, rescored: usize, delta_moves: usi
     }
     let delta_s = t0.elapsed().as_secs_f64();
 
+    // observability overhead: the anneal pass is the instrumented hot
+    // path (span guards + hoisted-flag counters). Same solver, same
+    // problem, back to back — first with the collectors off (the
+    // default: one relaxed atomic load per site), then with tracing and
+    // metrics on. The collectors are global, so drain/clear and switch
+    // them back off before returning.
+    let solver = greengen::scheduler::solver_by_name("anneal", 7).expect("anneal solver");
+    let t0 = Instant::now();
+    solver.schedule(&problem).expect("anneal plain");
+    let plain_s = t0.elapsed().as_secs_f64();
+    greengen::obs::trace::set_enabled(true);
+    greengen::obs::metrics::set_enabled(true);
+    let t0 = Instant::now();
+    solver.schedule(&problem).expect("anneal instrumented");
+    let instrumented_s = t0.elapsed().as_secs_f64();
+    greengen::obs::trace::set_enabled(false);
+    greengen::obs::metrics::set_enabled(false);
+    let span_count = greengen::obs::trace::drain().len();
+    greengen::obs::metrics::global().clear();
+    let overhead_pct = (instrumented_s - plain_s) / plain_s.max(1e-12) * 100.0;
+
     let legacy_per_s = rescored as f64 / legacy_s.max(1e-12);
     let compiled_per_s = rescored as f64 / compiled_s.max(1e-12);
     println!(
@@ -130,6 +154,12 @@ fn scoring_case(services: usize, nodes: usize, rescored: usize, delta_moves: usi
          compiled {compiled_per_s:>10.1}/s  (compile {:.1} ms, {priced} deltas in {:.1} ms)",
         compile_s * 1e3,
         delta_s * 1e3
+    );
+    println!(
+        "  anneal pass: plain {:.1} ms  instrumented {:.1} ms  \
+         ({span_count} spans, overhead {overhead_pct:+.1}%)",
+        plain_s * 1e3,
+        instrumented_s * 1e3
     );
     Value::object(vec![
         ("services", Value::from(services as f64)),
@@ -145,6 +175,10 @@ fn scoring_case(services: usize, nodes: usize, rescored: usize, delta_moves: usi
             "delta_moves_per_s",
             Value::from(priced as f64 / delta_s.max(1e-12)),
         ),
+        ("anneal_plain_ms", Value::from(plain_s * 1e3)),
+        ("anneal_instrumented_ms", Value::from(instrumented_s * 1e3)),
+        ("anneal_spans_recorded", Value::from(span_count as f64)),
+        ("instrumentation_overhead_pct", Value::from(overhead_pct)),
     ])
 }
 

@@ -185,9 +185,35 @@ impl IncrementalGenerator {
         app: &Application,
         infra: &Infrastructure,
     ) -> Result<(GenerationResult, GenStats)> {
+        let mut span = crate::span!("congen.epoch", {
+            services: app.services.len(),
+            nodes: infra.nodes.len(),
+        });
         let result = self.try_generate(backend, library, app, infra);
         if result.is_err() {
             self.state = None;
+        }
+        if let Ok((res, stats)) = &result {
+            span.attr("constraints", res.constraints.len());
+            span.attr("dirty_rows", stats.dirty_rows);
+            span.attr("total_rows", stats.total_rows);
+            span.attr("full_rebuild", stats.full_rebuild);
+            span.attr("tau_changed", stats.tau_changed);
+            if crate::obs::metrics::enabled() {
+                let m = crate::obs::metrics::global();
+                m.counter_add("greengen_sched_congen_epochs_total", &[], 1.0);
+                m.counter_add(
+                    "greengen_sched_congen_dirty_rows_total",
+                    &[],
+                    stats.dirty_rows as f64,
+                );
+                if stats.tau_changed {
+                    m.counter_add("greengen_sched_congen_tau_recomputes_total", &[], 1.0);
+                }
+                if stats.full_rebuild {
+                    m.counter_add("greengen_sched_congen_full_rebuilds_total", &[], 1.0);
+                }
+            }
         }
         result
     }

@@ -16,6 +16,7 @@ use super::partition::Partition;
 use super::shard::{build_sub, repair, solve_zones, ShardedScheduler};
 use crate::constraints::ConstraintKind;
 use crate::model::DeploymentPlan;
+use crate::obs::metrics;
 use crate::scheduler::Problem;
 use crate::Result;
 use std::collections::hash_map::DefaultHasher;
@@ -116,6 +117,40 @@ impl IncrementalReplanner {
 
     /// Schedule this epoch, re-solving only dirty zones.
     pub fn replan(&mut self, problem: &Problem) -> Result<ReplanOutcome> {
+        let mut span = crate::span!("replan.epoch", {
+            services: problem.app.services.len(),
+        });
+        let outcome = self.replan_inner(problem)?;
+        let full = outcome.dirty_zones.len() == outcome.total_zones;
+        span.attr("zones", outcome.total_zones);
+        span.attr("dirty", outcome.dirty_zones.len());
+        span.attr("carried", outcome.reused_placements);
+        span.attr("improver_gain", outcome.improver_gain);
+        span.attr("full_solve", full);
+        if metrics::enabled() {
+            let m = metrics::global();
+            let mode = if full { "full" } else { "incremental" };
+            m.counter_add("greengen_sched_replan_epochs_total", &[("mode", mode)], 1.0);
+            m.counter_add(
+                "greengen_sched_replan_zones_total",
+                &[("state", "dirty")],
+                outcome.dirty_zones.len() as f64,
+            );
+            m.counter_add(
+                "greengen_sched_replan_zones_total",
+                &[("state", "clean")],
+                outcome.reused_zones() as f64,
+            );
+            m.counter_add(
+                "greengen_sched_replan_carry_total",
+                &[],
+                outcome.reused_placements as f64,
+            );
+        }
+        Ok(outcome)
+    }
+
+    fn replan_inner(&mut self, problem: &Problem) -> Result<ReplanOutcome> {
         let partition = self.scheduler.partition(problem);
         let sigs = self.zone_signatures(problem, &partition);
 

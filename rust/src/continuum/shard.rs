@@ -160,6 +160,11 @@ impl ShardedScheduler {
         }
 
         // --- per-zone sub-problems, solved concurrently ----------------
+        let mut solve_span = crate::span!("continuum.solve", {
+            zones: partition.zones.len(),
+            services: n_services,
+            parallel: self.parallel,
+        });
         let subs: Vec<SubInstance> = partition
             .zones
             .iter()
@@ -176,6 +181,8 @@ impl ShardedScheduler {
         let mut assignment = problem.to_assignment(&merged)?;
         let boundary = partition.boundary_services(problem.app, problem.constraints);
         let stats = repair(problem, &mut assignment, &boundary, self.repair_rounds)?;
+        solve_span.attr("repair_placed", stats.placed);
+        solve_span.attr("repair_moves", stats.moves);
         Ok((
             problem.to_plan(&assignment),
             ShardStats {
@@ -309,6 +316,18 @@ fn solve_sub(
     scheduler: &ShardedScheduler,
     seed: u64,
 ) -> Result<DeploymentPlan> {
+    // per-zone span; worker threads record into their own buffers, which
+    // drain to the global sink at scope exit
+    let start = if crate::obs::metrics::enabled() || crate::obs::trace::enabled() {
+        Some(std::time::Instant::now())
+    } else {
+        None
+    };
+    let mut span = crate::span!("continuum.zone", {
+        zone: sub.app.id.as_str(),
+        services: sub.app.services.len(),
+        nodes: sub.infra.nodes.len(),
+    });
     let solver: Box<dyn Scheduler> = if sub.app.services.len() >= scheduler.lns_zone_services {
         Box::new(LnsScheduler {
             greedy_rounds: scheduler.max_rounds,
@@ -325,9 +344,10 @@ fn solve_sub(
         constraints: &sub.constraints,
         objective,
     };
-    match solver.schedule(&problem) {
+    let result = match solver.schedule(&problem) {
         Ok(plan) => Ok(plan),
         Err(Error::Infeasible(_)) => {
+            span.attr("relaxed", true);
             let mut relaxed = sub.app.clone();
             for s in &mut relaxed.services {
                 s.must_deploy = false;
@@ -341,7 +361,17 @@ fn solve_sub(
             solver.schedule(&problem)
         }
         Err(e) => Err(e),
+    };
+    if let Some(start) = start {
+        let ms = start.elapsed().as_secs_f64() * 1e3;
+        span.attr("ms", ms);
+        crate::obs::metrics::observe_ms(
+            "greengen_sched_zone_solve_ms",
+            &[("zone", sub.app.id.as_str())],
+            ms,
+        );
     }
+    result
 }
 
 /// Outcome of the repair pass.
@@ -361,6 +391,10 @@ pub(crate) fn repair(
     boundary: &[usize],
     rounds: usize,
 ) -> Result<RepairStats> {
+    let mut span = crate::span!("continuum.repair", {
+        boundary: boundary.len(),
+        rounds: rounds,
+    });
     let compiled = problem.compile();
     let mut state = ScoreState::new(&compiled, std::mem::take(assignment));
     let mut stats = RepairStats::default();
@@ -451,6 +485,13 @@ pub(crate) fn repair(
         }
     }
     *assignment = state.into_assignment();
+    span.attr("placed", stats.placed);
+    span.attr("moves", stats.moves);
+    if crate::obs::metrics::enabled() {
+        let m = crate::obs::metrics::global();
+        m.counter_add("greengen_sched_repair_placed_total", &[], stats.placed as f64);
+        m.counter_add("greengen_sched_repair_moves_total", &[], stats.moves as f64);
+    }
     Ok(stats)
 }
 

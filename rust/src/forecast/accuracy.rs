@@ -72,22 +72,43 @@ impl AccuracyReport {
                 .partial_cmp(&(b.samples == 0, b.mape))
                 .unwrap()
         });
-        let mut out = format!(
-            "{:<16} {:>10} {:>9} {:>8}   (horizon {} h)\n",
-            "predictor", "MAE g/kWh", "MAPE %", "samples", self.horizon_hours
-        );
+        use crate::util::{Cell, Row};
+        let line = |name: &str, mae: Cell, mape: Cell, samples: usize| {
+            Row::new()
+                .cell(Cell::left(name, 16))
+                .sep(" ")
+                .cell(mae)
+                .sep(" ")
+                .cell(mape)
+                .sep(" ")
+                .cell(Cell::right(samples, 8))
+                .finish()
+        };
+        let mut out = Row::new()
+            .cell(Cell::left("predictor", 16))
+            .sep(" ")
+            .cell(Cell::right("MAE g/kWh", 10))
+            .sep(" ")
+            .cell(Cell::right("MAPE %", 9))
+            .sep(" ")
+            .cell(Cell::right("samples", 8))
+            .sep("   (horizon ")
+            .cell(Cell::right(self.horizon_hours, 0))
+            .sep(" h)\n")
+            .finish();
         for c in &rows {
-            if c.samples == 0 {
-                out.push_str(&format!(
-                    "{:<16} {:>10} {:>9} {:>8}\n",
-                    c.predictor, "n/a", "n/a", 0
-                ));
+            let row = if c.samples == 0 {
+                line(&c.predictor, Cell::right("n/a", 10), Cell::right("n/a", 9), 0)
             } else {
-                out.push_str(&format!(
-                    "{:<16} {:>10.2} {:>9.2} {:>8}\n",
-                    c.predictor, c.mae, c.mape, c.samples
-                ));
-            }
+                line(
+                    &c.predictor,
+                    Cell::fixed(c.mae, 10, 2),
+                    Cell::fixed(c.mape, 9, 2),
+                    c.samples,
+                )
+            };
+            out.push_str(&row);
+            out.push('\n');
         }
         out
     }

@@ -74,6 +74,7 @@ pub mod jsonio;
 pub mod kb;
 pub mod model;
 pub mod monitoring;
+pub mod obs;
 pub mod pipeline;
 pub mod prolog;
 pub mod ranker;

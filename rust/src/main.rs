@@ -6,10 +6,12 @@
 //!                   [--incremental] [--epochs N]
 //! greengen adaptive [--scenario 1] [--hours 48] [--regen 6] [--failures 0.0] [--xla]
 //!                   [--incremental] [--zones N] [--horizon S]
+//!                   [--trace FILE.jsonl] [--metrics FILE.prom]
 //! greengen schedule [--scenario 1] [--solver greedy|exact|anneal|lns|portfolio|cost-only|random|oracle] [--seed N]
 //! greengen scalability [--mode app|infra] [--steps 10] [--reps 3] [--out file.csv]
 //! greengen threshold [--services 100] [--nodes 100]
 //! greengen forecast [--scenario 3] [--train 48] [--eval 48] [--horizon 6] [--event 72]
+//! greengen obs-summary FILE.jsonl [--metrics FILE.prom]
 //! greengen info
 //! ```
 
@@ -27,7 +29,7 @@ use greengen::scheduler::{
     evaluate, solver_by_name, GreedyScheduler, Objective, Problem, Scheduler, SOLVER_NAMES,
 };
 use greengen::telemetry::EnergyMeter;
-use greengen::util::{quantile_lower, Rng};
+use greengen::util::{quantile_lower, Cell, Rng, Row};
 use greengen::{simulate, Result};
 
 fn main() {
@@ -59,6 +61,7 @@ fn run(args: &Args) -> Result<()> {
         Some("timeshift") => cmd_timeshift(args),
         Some("forecast") => cmd_forecast(args),
         Some("continuum") => cmd_continuum(args),
+        Some("obs-summary") => cmd_obs_summary(args),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print!("{}", USAGE);
@@ -79,19 +82,96 @@ USAGE:
                     [--incremental] [--epochs N]
   greengen adaptive [--scenario 1] [--hours 48] [--regen 6] [--failures 0.0]
                     [--incremental] [--zones N] [--horizon S]
+                    [--trace FILE.jsonl] [--metrics FILE.prom]
   greengen schedule [--scenario 1] [--solver greedy|exact|anneal|lns|portfolio|cost-only|random|oracle]
-                    [--seed N]
+                    [--seed N] [--trace FILE.jsonl] [--metrics FILE.prom]
   greengen scalability [--mode app|infra] [--steps 10] [--reps 3] [--out file.csv]
   greengen threshold [--services 100] [--nodes 100]
   greengen timeshift [--scenario 1] [--window 4] [--horizon 24] [--forecast]
   greengen forecast [--scenario 3] [--train 48] [--eval 48] [--horizon 6] [--event 72]
   greengen continuum [--topology geo-regions] [--nodes 500] [--services 1000] [--zones 8]
                      [--solver sharded|monolithic|both|all] [--epochs 1] [--sequential] [--seed N]
+                     [--trace FILE.jsonl] [--metrics FILE.prom]
+  greengen obs-summary FILE.jsonl [--metrics FILE.prom]
   greengen info
 
 Topologies: cloud-edge-hierarchy, geo-regions, iot-swarm, hybrid-burst
 Solver ladder (docs/solvers.md): greedy -> anneal -> lns -> portfolio -> exact
 ";
+
+/// Switch tracing / metrics collection on when `--trace` / `--metrics`
+/// name an output file. With neither flag this is a no-op and every
+/// instrumented site stays on its one-relaxed-load fast path.
+fn obs_setup(args: &Args) {
+    if args.opt("trace").is_some() {
+        greengen::obs::trace::set_enabled(true);
+    }
+    if args.opt("metrics").is_some() {
+        greengen::obs::metrics::set_enabled(true);
+    }
+}
+
+/// Flush collected observability data to the files named by `--trace`
+/// (JSONL spans) and `--metrics` (Prometheus text exposition). Status
+/// goes to stderr so stdout stays exactly the report it always was.
+fn obs_finish(args: &Args) -> Result<()> {
+    if let Some(path) = args.opt("trace") {
+        let records = greengen::obs::trace::drain();
+        greengen::obs::trace::write_jsonl(std::path::Path::new(path), &records)?;
+        eprintln!("# trace: {} spans -> {path}", records.len());
+    }
+    if let Some(path) = args.opt("metrics") {
+        let now_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as i64)
+            .unwrap_or(0);
+        let registry = greengen::obs::metrics::global();
+        std::fs::write(path, registry.render(now_ms))?;
+        eprintln!("# metrics: {} series -> {path}", registry.series_count());
+    }
+    Ok(())
+}
+
+fn cmd_obs_summary(args: &Args) -> Result<()> {
+    args.ensure_known(&["metrics"])?;
+    let path = args.positional.first().ok_or_else(|| {
+        greengen::Error::Config("trace file required (greengen obs-summary FILE.jsonl)".into())
+    })?;
+    let records = greengen::obs::trace::read_jsonl(std::path::Path::new(path))?;
+    let stats = greengen::obs::trace::aggregate(&records);
+    let header = Row::new()
+        .cell(Cell::left("stage", 22))
+        .sep(" ")
+        .cell(Cell::right("count", 8))
+        .sep(" ")
+        .cell(Cell::right("total_ms", 12))
+        .sep(" ")
+        .cell(Cell::right("self_ms", 12))
+        .finish();
+    println!("{header}");
+    for s in &stats {
+        let line = Row::new()
+            .cell(Cell::left(&s.name, 22))
+            .sep(" ")
+            .cell(Cell::right(s.count, 8))
+            .sep(" ")
+            .cell(Cell::fixed(s.total_us as f64 / 1e3, 12, 3))
+            .sep(" ")
+            .cell(Cell::fixed(s.self_us as f64 / 1e3, 12, 3))
+            .finish();
+        println!("{line}");
+    }
+    println!("\n{} spans across {} stages", records.len(), stats.len());
+    if let Some(mpath) = args.opt("metrics") {
+        let text = std::fs::read_to_string(mpath)?;
+        let registry = greengen::obs::metrics::Registry::from_exposition(&text)?;
+        println!(
+            "metrics: {} series re-ingested from {mpath}",
+            registry.series_count()
+        );
+    }
+    Ok(())
+}
 
 fn pipeline(args: &Args) -> Result<GeneratorPipeline> {
     let mut config = PipelineConfig::default();
@@ -214,8 +294,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_adaptive(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "scenario", "hours", "regen", "failures", "xla", "alpha", "extended", "direct",
-        "artifacts", "seed", "incremental", "zones", "horizon",
+        "artifacts", "seed", "incremental", "zones", "horizon", "trace", "metrics",
     ])?;
+    obs_setup(args);
     let scenario = scenarios::scenario(args.usize_or("scenario", 1)?)?;
     let incremental = args.flag("incremental");
     let horizon = args.usize_or("horizon", 0)?;
@@ -241,31 +322,43 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
     }
     println!("{header}");
     for e in &summary.epochs {
-        print!(
-            "{:>4}  {:>12}  {:>13.1}  {:>11.1}  {:>8.1}  {:>8.1}  {}",
-            e.hour,
-            e.constraints,
-            e.constrained_g,
-            e.cost_only_g,
-            e.random_g,
-            e.oracle_g,
-            e.failed_node.as_deref().unwrap_or("-")
-        );
+        let mut row = Row::new()
+            .cell(Cell::right(e.hour, 4))
+            .gap()
+            .cell(Cell::right(e.constraints, 12))
+            .gap()
+            .cell(Cell::fixed(e.constrained_g, 13, 1))
+            .gap()
+            .cell(Cell::fixed(e.cost_only_g, 11, 1))
+            .gap()
+            .cell(Cell::fixed(e.random_g, 8, 1))
+            .gap()
+            .cell(Cell::fixed(e.oracle_g, 8, 1))
+            .gap()
+            .cell(Cell::right(e.failed_node.as_deref().unwrap_or("-"), 0));
         if incremental {
-            print!(
-                "  {:>6}/{:<6} {:>6}/{:<6} {:>6}  {:>13.3}",
-                e.gen_dirty_rows,
-                e.gen_total_rows,
-                e.dirty_zones,
-                e.total_zones,
-                e.reused_placements,
-                e.improver_gain
-            );
+            row = row
+                .gap()
+                .cell(Cell::right(e.gen_dirty_rows, 6))
+                .sep("/")
+                .cell(Cell::left(e.gen_total_rows, 6))
+                .sep(" ")
+                .cell(Cell::right(e.dirty_zones, 6))
+                .sep("/")
+                .cell(Cell::left(e.total_zones, 6))
+                .sep(" ")
+                .cell(Cell::right(e.reused_placements, 6))
+                .gap()
+                .cell(Cell::fixed(e.improver_gain, 13, 3));
         }
         if horizon > 0 {
-            print!("  {:>11.1}  {:>6}", e.projected_g, e.predicted_swings);
+            row = row
+                .gap()
+                .cell(Cell::fixed(e.projected_g, 11, 1))
+                .gap()
+                .cell(Cell::right(e.predicted_swings, 6));
         }
-        println!();
+        println!("{}", row.finish());
     }
     println!(
         "\ntotals (gCO2eq): constrained={:.1} cost-only={:.1} random={:.1} oracle={:.1}",
@@ -283,13 +376,16 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
         "forecast-projected emissions (horizon {} slots): {:.1} gCO2eq",
         horizon, summary.total_projected_g
     );
+    obs_finish(args)?;
     Ok(())
 }
 
 fn cmd_schedule(args: &Args) -> Result<()> {
     args.ensure_known(&[
-        "scenario", "solver", "seed", "xla", "alpha", "extended", "direct", "artifacts",
+        "scenario", "solver", "seed", "xla", "alpha", "extended", "direct", "artifacts", "trace",
+        "metrics",
     ])?;
+    obs_setup(args);
     let scenario = scenarios::scenario(args.usize_or("scenario", 1)?)?;
     let mut pipe = pipeline(args)?;
     let outcome = pipe.run_scenario(&scenario)?;
@@ -336,6 +432,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         metrics.violation_weight,
         metrics.dropped
     );
+    obs_finish(args)?;
     Ok(())
 }
 
@@ -599,25 +696,33 @@ fn continuum_row(
 ) -> Result<SolveRow> {
     let metrics = evaluate(problem, plan)?;
     let objective = problem.objective_value(&problem.to_assignment(plan)?);
-    println!(
-        "{name:<22} {:>9.1} ms  objective {:>12.2}  emissions {:>11.1} g  cost {:>8.3}/h  \
-         violations {:>4} (w {:.2})  dropped {}",
-        seconds * 1e3,
-        objective,
-        metrics.emissions_g,
-        metrics.cost,
-        metrics.violations,
-        metrics.violation_weight,
-        metrics.dropped
-    );
+    let line = Row::new()
+        .cell(Cell::left(name, 22))
+        .sep(" ")
+        .cell(Cell::fixed(seconds * 1e3, 9, 1))
+        .sep(" ms  objective ")
+        .cell(Cell::fixed(objective, 12, 2))
+        .sep("  emissions ")
+        .cell(Cell::fixed(metrics.emissions_g, 11, 1))
+        .sep(" g  cost ")
+        .cell(Cell::fixed(metrics.cost, 8, 3))
+        .sep("/h  violations ")
+        .cell(Cell::right(metrics.violations, 4))
+        .sep(" (w ")
+        .cell(Cell::fixed(metrics.violation_weight, 0, 2))
+        .sep(")  dropped ")
+        .cell(Cell::right(metrics.dropped, 0))
+        .finish();
+    println!("{line}");
     Ok(SolveRow { seconds, objective })
 }
 
 fn cmd_continuum(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "topology", "nodes", "services", "zones", "seed", "solver", "alpha", "epochs",
-        "sequential",
+        "sequential", "trace", "metrics",
     ])?;
+    obs_setup(args);
     let topology = simulate::Topology::parse(&args.opt_or("topology", "geo-regions"))?;
     let nodes = args.usize_or("nodes", 500)?;
     let services = args.usize_or("services", 1000)?;
@@ -741,17 +846,25 @@ fn cmd_continuum(args: &Args) -> Result<()> {
             let t0 = std::time::Instant::now();
             let outcome = rp.replan(&problem)?;
             let metrics = evaluate(&problem, &outcome.plan)?;
-            println!(
-                "epoch {e:>3}: dirty {}/{} zones  reused {:>5} placements  {:>8.1} ms  \
-                 emissions {:.1} g",
-                outcome.dirty_zones.len(),
-                outcome.total_zones,
-                outcome.reused_placements,
-                t0.elapsed().as_secs_f64() * 1e3,
-                metrics.emissions_g
-            );
+            let line = Row::new()
+                .sep("epoch ")
+                .cell(Cell::right(e, 3))
+                .sep(": dirty ")
+                .cell(Cell::right(outcome.dirty_zones.len(), 0))
+                .sep("/")
+                .cell(Cell::right(outcome.total_zones, 0))
+                .sep(" zones  reused ")
+                .cell(Cell::right(outcome.reused_placements, 5))
+                .sep(" placements  ")
+                .cell(Cell::fixed(t0.elapsed().as_secs_f64() * 1e3, 8, 1))
+                .sep(" ms  emissions ")
+                .cell(Cell::fixed(metrics.emissions_g, 0, 1))
+                .sep(" g")
+                .finish();
+            println!("{line}");
         }
     }
+    obs_finish(args)?;
     Ok(())
 }
 

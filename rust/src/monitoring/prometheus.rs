@@ -118,11 +118,13 @@ pub fn ingest(store: &mut MetricStore, text: &str) -> Result<()> {
     Ok(())
 }
 
-struct ParsedLine {
-    metric: String,
-    labels: Vec<(String, String)>,
-    value: f64,
-    timestamp_ms: i64,
+/// One parsed exposition sample; shared with the scheduler's own
+/// exporter (`obs::metrics`), which re-parses the same wire format.
+pub(crate) struct ParsedLine {
+    pub(crate) metric: String,
+    pub(crate) labels: Vec<(String, String)>,
+    pub(crate) value: f64,
+    pub(crate) timestamp_ms: i64,
 }
 
 impl ParsedLine {
@@ -135,8 +137,27 @@ impl ParsedLine {
     }
 }
 
-fn parse_line(line: &str) -> std::result::Result<ParsedLine, String> {
-    let brace = line.find('{').ok_or("missing '{'")?;
+pub(crate) fn parse_line(line: &str) -> std::result::Result<ParsedLine, String> {
+    let brace = match line.find('{') {
+        Some(b) => b,
+        None => {
+            // label-less sample: `<metric> <value> <timestamp>`
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            if toks.len() != 3 {
+                return Err(format!("expected '<metric> <value> <timestamp>', got '{line}'"));
+            }
+            let value: f64 = toks[1].parse().map_err(|_| format!("bad value '{}'", toks[1]))?;
+            let timestamp_ms: i64 = toks[2]
+                .parse()
+                .map_err(|_| format!("bad timestamp '{}'", toks[2]))?;
+            return Ok(ParsedLine {
+                metric: toks[0].to_string(),
+                labels: Vec::new(),
+                value,
+                timestamp_ms,
+            });
+        }
+    };
     let metric = line[..brace].to_string();
     let close = line.find('}').ok_or("missing '}'")?;
     let labels = parse_labels(&line[brace + 1..close])?;
@@ -198,7 +219,7 @@ fn parse_labels(text: &str) -> std::result::Result<Vec<(String, String)>, String
     Ok(labels)
 }
 
-fn escape(s: &str) -> String {
+pub(crate) fn escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
 }
 

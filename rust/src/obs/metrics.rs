@@ -1,0 +1,501 @@
+//! Thread-safe metrics registry + `greengen_sched_*` Prometheus exposition.
+//!
+//! The scheduler exports its own counters, gauges and fixed-bucket
+//! histograms in the same text wire format the monitoring layer already
+//! ingests: line grammar, label escaping and the `# TYPE` headers are
+//! shared with [`crate::monitoring::prometheus`], so a `.prom` file
+//! written by [`Registry::render`] re-ingests through the crate's own
+//! exposition parser ([`Registry::from_exposition`]).
+//!
+//! Two usage modes:
+//!
+//! * **Local registries** ([`Registry::default`]) — owned by a caller,
+//!   e.g. the adaptive loop builds one per epoch and reads its
+//!   `EpochLog` figures back out of it.
+//! * **The process-global registry** ([`global`]) — fed by the
+//!   instrumented solver layers, but only when [`enabled`] — a single
+//!   relaxed atomic load — returns true. The gated free functions
+//!   ([`counter_add`], [`gauge_set`], [`observe_ms`]) bundle the check.
+//!
+//! The full metric-family table lives in `docs/observability.md`.
+
+use crate::monitoring::prometheus::{escape, parse_line};
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Default histogram bucket upper bounds, in milliseconds — spans five
+/// orders of magnitude, from sub-millisecond zone solves to multi-second
+/// full portfolio runs.
+pub const DEFAULT_MS_BUCKETS: [f64; 10] = [
+    0.05, 0.25, 1.0, 4.0, 16.0, 64.0, 256.0, 1024.0, 4096.0, 16384.0,
+];
+
+/// A series is identified by its family name plus its sorted label set.
+type SeriesKey = (String, Vec<(String, String)>);
+
+#[derive(Debug, Clone, PartialEq)]
+struct Histo {
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; observations beyond the last
+    /// bound are carried only by `count` (the implicit `+Inf` bucket).
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histo {
+    fn new(bounds: &[f64]) -> Histo {
+        Histo {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len()],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        self.sum += v;
+        self.count += 1;
+        for (i, b) in self.bounds.iter().enumerate() {
+            if v <= *b {
+                self.counts[i] += 1;
+                break;
+            }
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<SeriesKey, f64>,
+    gauges: BTreeMap<SeriesKey, f64>,
+    histograms: BTreeMap<SeriesKey, Histo>,
+}
+
+/// A thread-safe registry of counters, gauges and fixed-bucket
+/// histograms with label sets.
+///
+/// ```
+/// use greengen::obs::metrics::Registry;
+/// let r = Registry::default();
+/// r.counter_add("greengen_sched_moves_total", &[("outcome", "accepted")], 3.0);
+/// r.gauge_set("greengen_sched_anneal_temperature", &[], 0.5);
+/// let text = r.render(0);
+/// let back = Registry::from_exposition(&text).unwrap();
+/// assert_eq!(back.render(0), text);
+/// ```
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+fn series_key(name: &str, labels: &[(&str, &str)]) -> SeriesKey {
+    let mut ls: Vec<(String, String)> = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    ls.sort();
+    (name.to_string(), ls)
+}
+
+fn render_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape(v)))
+        .collect();
+    format!("{{{}}}", parts.join(","))
+}
+
+fn render_labels_with_le(labels: &[(String, String)], le: &str) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape(v)))
+        .collect();
+    parts.push(format!("le=\"{le}\""));
+    format!("{{{}}}", parts.join(","))
+}
+
+impl Registry {
+    /// Add `v` to a counter series (created at zero on first touch).
+    pub fn counter_add(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        let key = series_key(name, labels);
+        let mut inner = self.inner.lock().unwrap();
+        *inner.counters.entry(key).or_insert(0.0) += v;
+    }
+
+    /// Set a gauge series to `v`.
+    pub fn gauge_set(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        let key = series_key(name, labels);
+        let mut inner = self.inner.lock().unwrap();
+        inner.gauges.insert(key, v);
+    }
+
+    /// Observe `v` into a histogram series using [`DEFAULT_MS_BUCKETS`].
+    pub fn histogram_observe(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.histogram_observe_with(name, labels, &DEFAULT_MS_BUCKETS, v);
+    }
+
+    /// Observe `v` into a histogram series; `bounds` fixes the bucket
+    /// layout when the series is first created and is ignored afterwards.
+    pub fn histogram_observe_with(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+        v: f64,
+    ) {
+        let key = series_key(name, labels);
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .histograms
+            .entry(key)
+            .or_insert_with(|| Histo::new(bounds))
+            .observe(v);
+    }
+
+    /// Current value of a counter series, if it exists.
+    pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let key = series_key(name, labels);
+        self.inner.lock().unwrap().counters.get(&key).copied()
+    }
+
+    /// Current value of a gauge series, if it exists.
+    pub fn gauge_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let key = series_key(name, labels);
+        self.inner.lock().unwrap().gauges.get(&key).copied()
+    }
+
+    /// `(sum, count)` of a histogram series, if it exists.
+    pub fn histogram_totals(&self, name: &str, labels: &[(&str, &str)]) -> Option<(f64, u64)> {
+        let key = series_key(name, labels);
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .get(&key)
+            .map(|h| (h.sum, h.count))
+    }
+
+    /// Number of series across all three kinds.
+    pub fn series_count(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.counters.len() + inner.gauges.len() + inner.histograms.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.series_count() == 0
+    }
+
+    /// Drop every series (used between CLI runs and in tests).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.counters.clear();
+        inner.gauges.clear();
+        inner.histograms.clear();
+    }
+
+    /// Render the registry in Prometheus text exposition format.
+    ///
+    /// Families are emitted in name order under `# TYPE` headers;
+    /// histograms expand to cumulative `_bucket` series (with a trailing
+    /// `+Inf` bucket) plus `_sum` / `_count`. The output re-parses via
+    /// [`Registry::from_exposition`] and, family names permitting, the
+    /// monitoring layer's own line parser.
+    pub fn render(&self, timestamp_ms: i64) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut families: BTreeMap<String, (&'static str, Vec<String>)> = BTreeMap::new();
+        for ((name, labels), v) in &inner.counters {
+            families
+                .entry(name.clone())
+                .or_insert_with(|| ("counter", Vec::new()))
+                .1
+                .push(format!("{name}{} {v} {timestamp_ms}", render_labels(labels)));
+        }
+        for ((name, labels), v) in &inner.gauges {
+            families
+                .entry(name.clone())
+                .or_insert_with(|| ("gauge", Vec::new()))
+                .1
+                .push(format!("{name}{} {v} {timestamp_ms}", render_labels(labels)));
+        }
+        for ((name, labels), h) in &inner.histograms {
+            let entry = families
+                .entry(name.clone())
+                .or_insert_with(|| ("histogram", Vec::new()));
+            let mut cum = 0u64;
+            for (i, bound) in h.bounds.iter().enumerate() {
+                cum += h.counts[i];
+                entry.1.push(format!(
+                    "{name}_bucket{} {cum} {timestamp_ms}",
+                    render_labels_with_le(labels, &format!("{bound}"))
+                ));
+            }
+            entry.1.push(format!(
+                "{name}_bucket{} {} {timestamp_ms}",
+                render_labels_with_le(labels, "+Inf"),
+                h.count
+            ));
+            entry.1.push(format!(
+                "{name}_sum{} {} {timestamp_ms}",
+                render_labels(labels),
+                h.sum
+            ));
+            entry.1.push(format!(
+                "{name}_count{} {} {timestamp_ms}",
+                render_labels(labels),
+                h.count
+            ));
+        }
+        let mut out = String::new();
+        for (name, (kind, lines)) in &families {
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            for line in lines {
+                out.push_str(line);
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Reconstruct a registry from a text exposition document produced by
+    /// [`Registry::render`] (families must be declared with `# TYPE`
+    /// headers before their samples).
+    pub fn from_exposition(text: &str) -> Result<Registry> {
+        struct HistoBuf {
+            buckets: Vec<(f64, u64)>,
+            sum: Option<f64>,
+            count: Option<u64>,
+        }
+        let mut kinds: BTreeMap<String, String> = BTreeMap::new();
+        let mut histos: BTreeMap<SeriesKey, HistoBuf> = BTreeMap::new();
+        let reg = Registry::default();
+        {
+            let mut inner = reg.inner.lock().unwrap();
+            for (lineno, raw) in text.lines().enumerate() {
+                let err = |msg: String| Error::Other(format!("exposition line {}: {msg}", lineno + 1));
+                let line = raw.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                if let Some(rest) = line.strip_prefix("# TYPE ") {
+                    let mut it = rest.split_whitespace();
+                    match (it.next(), it.next()) {
+                        (Some(name), Some(kind)) => {
+                            kinds.insert(name.to_string(), kind.to_string());
+                        }
+                        _ => return Err(err("malformed '# TYPE' header".to_string())),
+                    }
+                    continue;
+                }
+                if line.starts_with('#') {
+                    continue;
+                }
+                let p = parse_line(line).map_err(err)?;
+                let mut labels = p.labels.clone();
+                labels.sort();
+                if let Some(kind) = kinds.get(&p.metric) {
+                    match kind.as_str() {
+                        "counter" => {
+                            inner.counters.insert((p.metric.clone(), labels), p.value);
+                        }
+                        "gauge" => {
+                            inner.gauges.insert((p.metric.clone(), labels), p.value);
+                        }
+                        other => {
+                            return Err(err(format!(
+                                "unexpected bare sample for '{other}' family '{}'",
+                                p.metric
+                            )))
+                        }
+                    }
+                    continue;
+                }
+                // histogram sub-series: <base>_bucket / _sum / _count
+                let mut matched = false;
+                for suffix in ["_bucket", "_sum", "_count"] {
+                    let Some(base) = p.metric.strip_suffix(suffix) else {
+                        continue;
+                    };
+                    if kinds.get(base).map(String::as_str) != Some("histogram") {
+                        continue;
+                    }
+                    matched = true;
+                    let mut ls = labels.clone();
+                    let le = ls.iter().position(|(k, _)| k == "le").map(|i| ls.remove(i).1);
+                    let key = (base.to_string(), ls);
+                    let buf = histos.entry(key).or_insert_with(|| HistoBuf {
+                        buckets: Vec::new(),
+                        sum: None,
+                        count: None,
+                    });
+                    match suffix {
+                        "_bucket" => {
+                            let le = le.ok_or_else(|| err("bucket without 'le' label".to_string()))?;
+                            if le != "+Inf" {
+                                let bound: f64 = le
+                                    .parse()
+                                    .map_err(|_| err(format!("bad 'le' bound '{le}'")))?;
+                                buf.buckets.push((bound, p.value as u64));
+                            }
+                        }
+                        "_sum" => buf.sum = Some(p.value),
+                        _ => buf.count = Some(p.value as u64),
+                    }
+                    break;
+                }
+                if !matched {
+                    return Err(err(format!("unknown metric family for '{}'", p.metric)));
+                }
+            }
+            for ((name, labels), buf) in histos {
+                let count = buf
+                    .count
+                    .ok_or_else(|| Error::Other(format!("histogram '{name}' missing _count")))?;
+                let sum = buf
+                    .sum
+                    .ok_or_else(|| Error::Other(format!("histogram '{name}' missing _sum")))?;
+                let mut buckets = buf.buckets;
+                buckets.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                let mut bounds = Vec::with_capacity(buckets.len());
+                let mut counts = Vec::with_capacity(buckets.len());
+                let mut prev = 0u64;
+                for (bound, cum) in buckets {
+                    bounds.push(bound);
+                    counts.push(cum.saturating_sub(prev));
+                    prev = cum;
+                }
+                inner.histograms.insert(
+                    (name, labels),
+                    Histo {
+                        bounds,
+                        counts,
+                        sum,
+                        count,
+                    },
+                );
+            }
+        }
+        Ok(reg)
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-global registry, created on first use.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::default)
+}
+
+/// Turn global metric recording on or off (`greengen ... --metrics FILE`).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether global metric recording is on — a single relaxed atomic load,
+/// the only cost instrumented hot paths pay when metrics are off.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Add to a global counter iff metrics are enabled.
+pub fn counter_add(name: &str, labels: &[(&str, &str)], v: f64) {
+    if enabled() {
+        global().counter_add(name, labels, v);
+    }
+}
+
+/// Set a global gauge iff metrics are enabled.
+pub fn gauge_set(name: &str, labels: &[(&str, &str)], v: f64) {
+    if enabled() {
+        global().gauge_set(name, labels, v);
+    }
+}
+
+/// Observe a millisecond duration into a global histogram iff metrics
+/// are enabled.
+pub fn observe_ms(name: &str, labels: &[(&str, &str)], ms: f64) {
+    if enabled() {
+        global().histogram_observe(name, labels, ms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let r = Registry::default();
+        r.counter_add("greengen_sched_moves_total", &[("outcome", "proposed")], 5.0);
+        r.counter_add("greengen_sched_moves_total", &[("outcome", "proposed")], 2.0);
+        r.gauge_set("greengen_sched_anneal_temperature", &[], 0.75);
+        assert_eq!(
+            r.counter_value("greengen_sched_moves_total", &[("outcome", "proposed")]),
+            Some(7.0)
+        );
+        assert_eq!(r.gauge_value("greengen_sched_anneal_temperature", &[]), Some(0.75));
+        assert_eq!(r.series_count(), 2);
+    }
+
+    #[test]
+    fn label_order_is_canonical() {
+        let r = Registry::default();
+        r.counter_add("m_total", &[("b", "2"), ("a", "1")], 1.0);
+        r.counter_add("m_total", &[("a", "1"), ("b", "2")], 1.0);
+        assert_eq!(r.series_count(), 1);
+        assert_eq!(r.counter_value("m_total", &[("b", "2"), ("a", "1")]), Some(2.0));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_in_render() {
+        let r = Registry::default();
+        for v in [0.1, 0.2, 3.0, 100.0, 99999.0] {
+            r.histogram_observe_with("h_ms", &[], &[1.0, 10.0, 1000.0], v);
+        }
+        let text = r.render(7);
+        assert!(text.contains("# TYPE h_ms histogram"), "{text}");
+        assert!(text.contains("h_ms_bucket{le=\"1\"} 2 7"), "{text}");
+        assert!(text.contains("h_ms_bucket{le=\"10\"} 3 7"), "{text}");
+        assert!(text.contains("h_ms_bucket{le=\"1000\"} 4 7"), "{text}");
+        assert!(text.contains("h_ms_bucket{le=\"+Inf\"} 5 7"), "{text}");
+        assert!(text.contains("h_ms_count 5 7"), "{text}");
+    }
+
+    #[test]
+    fn exposition_round_trips() {
+        let r = Registry::default();
+        r.counter_add("greengen_sched_bnb_nodes_total", &[], 123.0);
+        r.gauge_set("greengen_sched_epoch_emissions_g", &[("policy", "constrained")], 88.5);
+        r.gauge_set("greengen_sched_epoch_emissions_g", &[("policy", "cost_only")], 120.25);
+        r.histogram_observe("greengen_sched_zone_solve_ms", &[("zone", "eu-west")], 12.5);
+        r.histogram_observe("greengen_sched_zone_solve_ms", &[("zone", "eu-west")], 90000.0);
+        let text = r.render(1234);
+        let back = Registry::from_exposition(&text).unwrap();
+        assert_eq!(back.render(1234), text);
+    }
+
+    #[test]
+    fn weird_label_values_survive_round_trip() {
+        let r = Registry::default();
+        r.counter_add("m_total", &[("zone", "we\"ird\\zo\nne")], 1.0);
+        let text = r.render(0);
+        let back = Registry::from_exposition(&text).unwrap();
+        assert_eq!(
+            back.counter_value("m_total", &[("zone", "we\"ird\\zo\nne")]),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn rejects_undeclared_families() {
+        let err = Registry::from_exposition("mystery_metric 1 0\n");
+        assert!(err.is_err());
+    }
+}

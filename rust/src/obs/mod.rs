@@ -1,0 +1,23 @@
+//! Scheduler self-observability: span tracing + solver/epoch metrics.
+//!
+//! The paper's control loop closes over *continuous analysis of
+//! monitoring data*; this layer turns the lens on the scheduler itself,
+//! so the reasoning cost the generator pays (cf. the per-stage reasoning
+//! times of arXiv:2110.13039 and the scheduler-accounting argument of
+//! arXiv:2106.08872) is exported in machine-readable form:
+//!
+//! * [`metrics`] — a thread-safe [`metrics::Registry`] of counters,
+//!   gauges and fixed-bucket histograms, rendered as `greengen_sched_*`
+//!   Prometheus text exposition (same wire conventions the monitoring
+//!   layer ingests).
+//! * [`trace`] — [`span!`](crate::span!) guard spans with
+//!   start/duration/parent, buffered per thread and drained to JSONL.
+//!
+//! Both are **off by default** and gated behind one relaxed atomic load
+//! per site; `greengen adaptive|schedule|continuum --trace FILE.jsonl
+//! --metrics FILE.prom` switch them on, and `greengen obs-summary`
+//! aggregates a trace back into a per-stage table. Details and the
+//! metric-family catalogue: `docs/observability.md`.
+
+pub mod metrics;
+pub mod trace;

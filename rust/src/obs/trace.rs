@@ -1,0 +1,489 @@
+//! Lightweight span tracing for the scheduler's own hot paths.
+//!
+//! A [`span!`](crate::span!) site creates a guard object that records its
+//! name, start offset, duration, parent span and thread into a bounded
+//! per-thread buffer when dropped; buffers drain into a global sink
+//! (on overflow and at thread exit, which makes the scoped worker
+//! threads of the continuum shard solver safe) and the sink serializes
+//! to JSON Lines via [`write_jsonl`].
+//!
+//! **Compile-away fast path**: a process-global `enabled` atomic is
+//! checked once per span. When tracing is off — the default — a span
+//! site costs exactly one relaxed atomic load; the attribute closure is
+//! never evaluated and nothing is allocated or recorded.
+//!
+//! JSONL schema (one object per line, see `docs/observability.md`):
+//!
+//! ```text
+//! {"span":"lns.round","id":7,"parent":3,"thread":1,
+//!  "start_us":1042,"dur_us":880,"attrs":{"round":2,"destroyed":12}}
+//! ```
+//!
+//! `parent` is `null` for root spans; `start_us` is measured from the
+//! moment tracing was enabled.
+
+use crate::jsonio::{self, Value};
+use crate::{Error, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_THREAD_ID: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static SINK: Mutex<Vec<SpanRecord>> = Mutex::new(Vec::new());
+
+/// Per-thread buffer capacity before an early flush into the sink.
+const THREAD_BUF_CAP: usize = 4096;
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Turn span recording on or off (`greengen ... --trace FILE`). The
+/// trace clock starts the first time tracing is enabled.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether spans record — a single relaxed atomic load, the entire cost
+/// of a disabled span site.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// One completed span, as drained from the buffers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    /// Dotted stage name, e.g. `"lns.round"`.
+    pub name: String,
+    /// Process-unique span id (never 0).
+    pub id: u64,
+    /// Id of the enclosing span on the same thread; 0 for roots.
+    pub parent: u64,
+    /// Small dense id of the recording thread.
+    pub thread: u64,
+    /// Start offset from trace enablement, microseconds.
+    pub start_us: u64,
+    /// Wall-clock duration, microseconds.
+    pub dur_us: u64,
+    /// Attribute key/value pairs, in recording order.
+    pub attrs: Vec<(String, Value)>,
+}
+
+struct ThreadBuf {
+    thread_id: u64,
+    stack: Vec<u64>,
+    records: Vec<SpanRecord>,
+}
+
+impl ThreadBuf {
+    fn new() -> ThreadBuf {
+        ThreadBuf {
+            thread_id: NEXT_THREAD_ID.fetch_add(1, Ordering::Relaxed),
+            stack: Vec::new(),
+            records: Vec::new(),
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.records.is_empty() {
+            return;
+        }
+        if let Ok(mut sink) = SINK.lock() {
+            sink.append(&mut self.records);
+        }
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<ThreadBuf> = RefCell::new(ThreadBuf::new());
+}
+
+/// Conversion into a span attribute value; implemented for the numeric,
+/// boolean and string types instrumentation sites actually pass.
+pub trait AttrInto {
+    /// Convert `self` into a JSON attribute value.
+    fn into_attr(self) -> Value;
+}
+
+macro_rules! attr_num {
+    ($($t:ty),*) => {
+        $(impl AttrInto for $t {
+            fn into_attr(self) -> Value {
+                Value::Number(self as f64)
+            }
+        })*
+    };
+}
+attr_num!(f64, f32, usize, u64, u32, i64, i32);
+
+impl AttrInto for bool {
+    fn into_attr(self) -> Value {
+        Value::Bool(self)
+    }
+}
+
+impl AttrInto for &str {
+    fn into_attr(self) -> Value {
+        Value::String(self.to_string())
+    }
+}
+
+impl AttrInto for String {
+    fn into_attr(self) -> Value {
+        Value::String(self)
+    }
+}
+
+impl AttrInto for Value {
+    fn into_attr(self) -> Value {
+        self
+    }
+}
+
+struct ActiveSpan {
+    name: String,
+    id: u64,
+    parent: u64,
+    thread: u64,
+    start: Instant,
+    start_us: u64,
+    attrs: Vec<(String, Value)>,
+}
+
+/// RAII guard returned by [`span`] / [`span_with`] / the
+/// [`span!`](crate::span!) macro; records the span when dropped. When
+/// tracing is disabled the guard is inert.
+pub struct SpanGuard {
+    active: Option<ActiveSpan>,
+}
+
+impl SpanGuard {
+    /// Attach an attribute computed inside the span (e.g. a result
+    /// figure); a no-op on inert guards.
+    pub fn attr(&mut self, key: &str, value: impl AttrInto) {
+        if let Some(a) = &mut self.active {
+            a.attrs.push((key.to_string(), value.into_attr()));
+        }
+    }
+
+    /// Whether this guard will record on drop.
+    pub fn is_recording(&self) -> bool {
+        self.active.is_some()
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(a) = self.active.take() else {
+            return;
+        };
+        let dur_us = a.start.elapsed().as_micros() as u64;
+        let rec = SpanRecord {
+            name: a.name,
+            id: a.id,
+            parent: a.parent,
+            thread: a.thread,
+            start_us: a.start_us,
+            dur_us,
+            attrs: a.attrs,
+        };
+        let mut slot = Some(rec);
+        let delivered = TLS.try_with(|t| {
+            let mut t = t.borrow_mut();
+            t.stack.pop();
+            t.records.push(slot.take().unwrap());
+            if t.records.len() >= THREAD_BUF_CAP {
+                t.flush();
+            }
+        });
+        if delivered.is_err() {
+            // thread-local already torn down: record straight to the sink
+            if let Some(rec) = slot {
+                if let Ok(mut sink) = SINK.lock() {
+                    sink.push(rec);
+                }
+            }
+        }
+    }
+}
+
+/// Open a span with no attributes. Costs one relaxed load when tracing
+/// is disabled.
+pub fn span(name: &str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { active: None };
+    }
+    start_span(name.to_string(), Vec::new())
+}
+
+/// Open a span with lazily-evaluated attributes: `attrs` only runs when
+/// tracing is enabled.
+pub fn span_with(name: &str, attrs: impl FnOnce() -> Vec<(String, Value)>) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { active: None };
+    }
+    start_span(name.to_string(), attrs())
+}
+
+fn start_span(name: String, attrs: Vec<(String, Value)>) -> SpanGuard {
+    let start = Instant::now();
+    let start_us = start.saturating_duration_since(epoch()).as_micros() as u64;
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    let (parent, thread) = TLS
+        .try_with(|t| {
+            let mut t = t.borrow_mut();
+            let parent = t.stack.last().copied().unwrap_or(0);
+            t.stack.push(id);
+            (parent, t.thread_id)
+        })
+        .unwrap_or((0, 0));
+    SpanGuard {
+        active: Some(ActiveSpan {
+            name,
+            id,
+            parent,
+            thread,
+            start,
+            start_us,
+            attrs,
+        }),
+    }
+}
+
+/// Open a span recording start/duration/parent with optional attributes.
+///
+/// ```
+/// let _g = greengen::span!("solve.zone");
+/// let (zone, services) = ("eu-west", 12usize);
+/// let _g2 = greengen::span!("lns.round", {zone, services});
+/// let _g3 = greengen::span!("bnb", {nodes: 128usize, pruned: 40usize});
+/// ```
+///
+/// Attribute expressions are wrapped in a closure and only evaluated
+/// when tracing is enabled.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::trace::span($name)
+    };
+    ($name:expr, { $($k:ident),* $(,)? }) => {
+        $crate::obs::trace::span_with($name, || vec![
+            $( (stringify!($k).to_string(), $crate::obs::trace::AttrInto::into_attr($k)) ),*
+        ])
+    };
+    ($name:expr, { $($k:ident : $v:expr),* $(,)? }) => {
+        $crate::obs::trace::span_with($name, || vec![
+            $( (stringify!($k).to_string(), $crate::obs::trace::AttrInto::into_attr($v)) ),*
+        ])
+    };
+}
+
+/// Flush the current thread's buffer and take every record collected so
+/// far, ordered by start offset. Worker threads flush on exit, so after
+/// a scoped solve all their spans are here too.
+pub fn drain() -> Vec<SpanRecord> {
+    let mut out: Vec<SpanRecord> = Vec::new();
+    if let Ok(mut sink) = SINK.lock() {
+        out.append(&mut sink);
+    }
+    let _ = TLS.try_with(|t| {
+        let mut t = t.borrow_mut();
+        out.append(&mut t.records);
+    });
+    out.sort_by_key(|r| (r.start_us, r.id));
+    out
+}
+
+/// Disable tracing and discard all buffered records (tests / reuse).
+pub fn reset() {
+    ENABLED.store(false, Ordering::Relaxed);
+    if let Ok(mut sink) = SINK.lock() {
+        sink.clear();
+    }
+    let _ = TLS.try_with(|t| {
+        let mut t = t.borrow_mut();
+        t.records.clear();
+        t.stack.clear();
+    });
+}
+
+/// Serialize one record as a JSON object (the JSONL line schema).
+pub fn record_to_json(r: &SpanRecord) -> Value {
+    let parent = if r.parent == 0 {
+        Value::Null
+    } else {
+        Value::Number(r.parent as f64)
+    };
+    Value::object(vec![
+        ("span", Value::String(r.name.clone())),
+        ("id", Value::Number(r.id as f64)),
+        ("parent", parent),
+        ("thread", Value::Number(r.thread as f64)),
+        ("start_us", Value::Number(r.start_us as f64)),
+        ("dur_us", Value::Number(r.dur_us as f64)),
+        ("attrs", Value::Object(r.attrs.clone())),
+    ])
+}
+
+/// Parse one JSONL object back into a record.
+pub fn record_from_json(v: &Value) -> Result<SpanRecord> {
+    let parent = match v.req("parent")? {
+        Value::Null => 0,
+        other => other
+            .as_f64()
+            .ok_or_else(|| Error::Json("field 'parent' is not a number or null".into()))?
+            as u64,
+    };
+    let attrs = v
+        .req("attrs")?
+        .as_object()
+        .ok_or_else(|| Error::Json("field 'attrs' is not an object".into()))?
+        .to_vec();
+    Ok(SpanRecord {
+        name: v.str_field("span")?.to_string(),
+        id: v.f64_field("id")? as u64,
+        parent,
+        thread: v.f64_field("thread")? as u64,
+        start_us: v.f64_field("start_us")? as u64,
+        dur_us: v.f64_field("dur_us")? as u64,
+        attrs,
+    })
+}
+
+/// Write records as JSON Lines (one compact object per line).
+pub fn write_jsonl(path: &std::path::Path, records: &[SpanRecord]) -> Result<()> {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&jsonio::to_string(&record_to_json(r)));
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Read a JSONL trace back; every line must parse.
+pub fn read_jsonl(path: &std::path::Path) -> Result<Vec<SpanRecord>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = jsonio::parse(line)
+            .map_err(|e| Error::Json(format!("trace line {}: {e}", lineno + 1)))?;
+        out.push(record_from_json(&v)?);
+    }
+    Ok(out)
+}
+
+/// Aggregate of all spans sharing one stage name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageStats {
+    /// Stage (span) name.
+    pub name: String,
+    /// Number of spans recorded under the name.
+    pub count: usize,
+    /// Summed duration, microseconds (nested spans count into their
+    /// ancestors too).
+    pub total_us: u64,
+    /// Summed duration minus time spent in child spans, microseconds.
+    pub self_us: u64,
+}
+
+/// Fold a trace into per-stage totals, widest stage first.
+pub fn aggregate(records: &[SpanRecord]) -> Vec<StageStats> {
+    let mut child_us: BTreeMap<u64, u64> = BTreeMap::new();
+    for r in records {
+        if r.parent != 0 {
+            *child_us.entry(r.parent).or_insert(0) += r.dur_us;
+        }
+    }
+    let mut stages: BTreeMap<&str, (usize, u64, u64)> = BTreeMap::new();
+    for r in records {
+        let self_us = r.dur_us.saturating_sub(child_us.get(&r.id).copied().unwrap_or(0));
+        let e = stages.entry(r.name.as_str()).or_insert((0, 0, 0));
+        e.0 += 1;
+        e.1 += r.dur_us;
+        e.2 += self_us;
+    }
+    let mut out: Vec<StageStats> = stages
+        .into_iter()
+        .map(|(name, (count, total_us, self_us))| StageStats {
+            name: name.to_string(),
+            count,
+            total_us,
+            self_us,
+        })
+        .collect();
+    out.sort_by(|a, b| b.total_us.cmp(&a.total_us).then_with(|| a.name.cmp(&b.name)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trip_preserves_fields() {
+        let rec = SpanRecord {
+            name: "lns.round".into(),
+            id: 7,
+            parent: 3,
+            thread: 1,
+            start_us: 1042,
+            dur_us: 880,
+            attrs: vec![
+                ("round".to_string(), Value::Number(2.0)),
+                ("zone".to_string(), Value::String("eu-west".into())),
+            ],
+        };
+        let v = record_to_json(&rec);
+        let back = record_from_json(&v).unwrap();
+        assert_eq!(back, rec);
+        // root spans serialize parent as null
+        let root = SpanRecord { parent: 0, ..rec };
+        let v = record_to_json(&root);
+        assert_eq!(v.get("parent"), Some(&Value::Null));
+        assert_eq!(record_from_json(&v).unwrap().parent, 0);
+    }
+
+    #[test]
+    fn aggregate_computes_self_time() {
+        let mk = |name: &str, id, parent, dur_us| SpanRecord {
+            name: name.into(),
+            id,
+            parent,
+            thread: 1,
+            start_us: 0,
+            dur_us,
+            attrs: Vec::new(),
+        };
+        let records = vec![
+            mk("solve", 1, 0, 100),
+            mk("zone", 2, 1, 40),
+            mk("zone", 3, 1, 35),
+        ];
+        let stats = aggregate(&records);
+        assert_eq!(stats[0].name, "solve");
+        assert_eq!(stats[0].total_us, 100);
+        assert_eq!(stats[0].self_us, 25);
+        assert_eq!(stats[1].name, "zone");
+        assert_eq!(stats[1].count, 2);
+        assert_eq!(stats[1].total_us, 75);
+        assert_eq!(stats[1].self_us, 75);
+    }
+}

@@ -206,6 +206,7 @@ impl AdaptiveLoop {
         let mut epochs = Vec::new();
         let mut hour = 0usize;
         while hour < self.config.hours {
+            let mut epoch_span = crate::span!("adaptive.epoch", { hour: hour });
             // --- monitoring for this inter-regen interval ---------------
             for h in hour..(hour + self.config.regen_every).min(self.config.hours) {
                 let th = (h as f64 + 1.0) * 3600.0;
@@ -327,9 +328,42 @@ impl AdaptiveLoop {
             }
             .refine(&problem, &constrained)?;
 
+            // Per-epoch figures route through a scratch metrics registry
+            // and are read *back* from it before they enter the log, so
+            // the EpochLog reports exactly the numbers the exporter would
+            // render (gauge storage is a plain f64 — the round-trip is
+            // exact and every report stays byte-identical). With metrics
+            // enabled the same figures also feed the global registry.
+            let scratch = crate::obs::metrics::Registry::default();
+            let figures: [(&str, f64); 9] = [
+                ("greengen_sched_epoch_constraints", outcome.ranked.len() as f64),
+                ("greengen_sched_epoch_emissions_g", m_constrained.emissions_g),
+                ("greengen_sched_epoch_dirty_zones", dirty_zones as f64),
+                ("greengen_sched_epoch_total_zones", total_zones as f64),
+                ("greengen_sched_epoch_gen_dirty_rows", gen_dirty_rows as f64),
+                ("greengen_sched_epoch_gen_total_rows", gen_total_rows as f64),
+                ("greengen_sched_epoch_reused_placements", reused_placements as f64),
+                ("greengen_sched_epoch_improver_gain", improver_gain),
+                ("greengen_sched_epoch_predicted_swings", predicted_swings as f64),
+            ];
+            for (name, v) in figures {
+                scratch.gauge_set(name, &[], v);
+            }
+            if crate::obs::metrics::enabled() {
+                let m = crate::obs::metrics::global();
+                m.counter_add("greengen_sched_epochs_total", &[], 1.0);
+                for (name, v) in figures {
+                    m.gauge_set(name, &[], v);
+                }
+            }
+            let gauge = |name: &str| scratch.gauge_value(name, &[]).unwrap_or(0.0);
+            epoch_span.attr("constraints", gauge("greengen_sched_epoch_constraints"));
+            epoch_span.attr("dirty_zones", gauge("greengen_sched_epoch_dirty_zones"));
+            epoch_span.attr("emissions_g", gauge("greengen_sched_epoch_emissions_g"));
+
             epochs.push(EpochLog {
                 hour,
-                constraints: outcome.ranked.len(),
+                constraints: gauge("greengen_sched_epoch_constraints") as usize,
                 constrained_g: m_constrained.emissions_g,
                 cost_only_g: m_cost.emissions_g,
                 random_g: m_random.emissions_g,
@@ -337,14 +371,14 @@ impl AdaptiveLoop {
                 failed_node,
                 constrained_cost: m_constrained.cost,
                 cost_only_cost: m_cost.cost,
-                dirty_zones,
-                total_zones,
-                gen_dirty_rows,
-                gen_total_rows,
-                reused_placements,
-                improver_gain,
+                dirty_zones: gauge("greengen_sched_epoch_dirty_zones") as usize,
+                total_zones: gauge("greengen_sched_epoch_total_zones") as usize,
+                gen_dirty_rows: gauge("greengen_sched_epoch_gen_dirty_rows") as usize,
+                gen_total_rows: gauge("greengen_sched_epoch_gen_total_rows") as usize,
+                reused_placements: gauge("greengen_sched_epoch_reused_placements") as usize,
+                improver_gain: gauge("greengen_sched_epoch_improver_gain"),
                 projected_g: temporal.projected_g,
-                predicted_swings,
+                predicted_swings: gauge("greengen_sched_epoch_predicted_swings") as usize,
             });
 
             hour += self.config.regen_every;

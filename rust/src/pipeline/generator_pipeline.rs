@@ -170,6 +170,11 @@ impl GeneratorPipeline {
             match first {
                 Ok(r) => r,
                 Err(crate::Error::Xla(msg)) if msg.contains("exceeds") => {
+                    crate::obs::metrics::counter_add(
+                        "greengen_sched_congen_xla_fallbacks_total",
+                        &[],
+                        1.0,
+                    );
                     let fallback = ConstraintGenerator::new(&NativeBackend)
                         .with_library(self.library())
                         .with_config(self.config.generator);
@@ -315,6 +320,11 @@ impl GeneratorPipeline {
         let (raw, stats) = match first {
             Ok(r) => r,
             Err(crate::Error::Xla(msg)) if msg.contains("exceeds") => {
+                crate::obs::metrics::counter_add(
+                    "greengen_sched_congen_xla_fallbacks_total",
+                    &[],
+                    1.0,
+                );
                 let incremental = &mut self.incremental;
                 meter.measure("generate-native-fallback", || {
                     incremental.generate(&NativeBackend, &library, app, infra)

@@ -84,7 +84,24 @@ impl<'a> Problem<'a> {
     /// per service. O(services·flavours·nodes + constraints + links);
     /// every score after this is a table lookup.
     pub fn compile(&self) -> CompiledProblem<'_, 'a> {
-        CompiledProblem::new(self)
+        let start = if crate::obs::metrics::enabled() || crate::obs::trace::enabled() {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
+        let mut span = crate::span!("problem.compile", {
+            services: self.app.services.len(),
+            nodes: self.infra.nodes.len(),
+            constraints: self.constraints.len(),
+        });
+        let compiled = CompiledProblem::new(self);
+        if let Some(start) = start {
+            let ms = start.elapsed().as_secs_f64() * 1e3;
+            span.attr("ms", ms);
+            crate::obs::metrics::counter_add("greengen_sched_compile_total", &[], 1.0);
+            crate::obs::metrics::observe_ms("greengen_sched_compile_ms", &[], ms);
+        }
+        compiled
     }
 }
 

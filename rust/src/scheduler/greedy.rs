@@ -16,6 +16,7 @@ use super::compiled::CompiledProblem;
 use super::delta::{Move, ScoreState};
 use super::problem::{Problem, Scheduler};
 use crate::model::DeploymentPlan;
+use crate::obs::metrics;
 use crate::{Error, Result};
 
 /// The greedy + local-search scheduler.
@@ -52,6 +53,10 @@ pub(crate) fn construct<'p, 'a>(
 ) -> Result<ScoreState<'p, 'a>> {
     let problem = compiled.problem();
     let n_services = problem.app.services.len();
+    let mut span = crate::span!("greedy.construct", {
+        services: n_services,
+        nodes: problem.infra.nodes.len(),
+    });
     let mut state = ScoreState::new(compiled, vec![None; n_services]);
 
     // --- construction ------------------------------------------------
@@ -89,7 +94,10 @@ pub(crate) fn construct<'p, 'a>(
     }
 
     // --- local search --------------------------------------------------
+    let mut rounds_used = 0usize;
+    let mut moves_applied = 0usize;
     for _ in 0..max_rounds {
+        rounds_used += 1;
         let mut improved = false;
         for si in 0..n_services {
             let svc = &problem.app.services[si];
@@ -120,12 +128,25 @@ pub(crate) fn construct<'p, 'a>(
             if let Some((mv, _)) = best {
                 if state.apply(mv).is_some() {
                     improved = true;
+                    moves_applied += 1;
                 }
             }
         }
         if !improved {
             break;
         }
+    }
+    span.attr("rounds", rounds_used);
+    span.attr("moves", moves_applied);
+    span.attr("objective", state.objective());
+    if metrics::enabled() {
+        let m = metrics::global();
+        m.counter_add("greengen_sched_greedy_rounds_total", &[], rounds_used as f64);
+        m.counter_add(
+            "greengen_sched_moves_total",
+            &[("solver", "greedy"), ("outcome", "accepted")],
+            moves_applied as f64,
+        );
     }
 
     Ok(state)

@@ -26,9 +26,13 @@ use super::greedy;
 use super::problem::{Problem, Scheduler};
 use super::solver::BranchAndBoundScheduler;
 use crate::model::DeploymentPlan;
+use crate::obs::metrics;
 use crate::util::Rng;
 use crate::Result;
 use std::time::Instant;
+
+/// LNS destroy-set sizes are small integers; dedicated bucket bounds.
+const DESTROY_BUCKETS: [f64; 7] = [2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
 
 /// What an improver pass did.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -104,6 +108,12 @@ pub fn anneal(state: &mut ScoreState, cfg: &AnnealConfig) -> ImproverStats {
     if candidates.is_empty() || n_nodes == 0 || cfg.iterations == 0 {
         return stats;
     }
+    let mut span_guard = crate::span!("anneal", {
+        services: candidates.len(),
+        iterations: cfg.iterations,
+    });
+    // hoisted so the per-iteration cost of disabled metrics is one bool
+    let sample_metrics = metrics::enabled();
 
     let mut rng = Rng::new(cfg.seed);
     let mut best_value = state.objective();
@@ -113,6 +123,7 @@ pub fn anneal(state: &mut ScoreState, cfg: &AnnealConfig) -> ImproverStats {
     let clock = Instant::now();
     let steps = cfg.iterations.max(2);
     let ratio = (cfg.final_temp / cfg.init_temp).max(1e-12);
+    let mut undone = 0usize;
 
     for k in 0..steps {
         if cfg.max_millis > 0 && k % 256 == 0 && clock.elapsed().as_millis() as u64 > cfg.max_millis
@@ -120,6 +131,9 @@ pub fn anneal(state: &mut ScoreState, cfg: &AnnealConfig) -> ImproverStats {
             break;
         }
         let temp = cfg.init_temp * ratio.powf(k as f64 / (steps - 1) as f64);
+        if sample_metrics && k % 1024 == 0 {
+            metrics::global().gauge_set("greengen_sched_anneal_temperature", &[], temp);
+        }
         let si = *rng.pick(&candidates);
         let mv = match rng.below(10) {
             7 | 8 => Move::Swap {
@@ -140,6 +154,7 @@ pub fn anneal(state: &mut ScoreState, cfg: &AnnealConfig) -> ImproverStats {
         let accept = d.total <= 0.0 || rng.f64() < (-d.total / temp.max(1e-12)).exp();
         if !accept {
             state.undo();
+            undone += 1;
             continue;
         }
         stats.accepted += 1;
@@ -150,6 +165,18 @@ pub fn anneal(state: &mut ScoreState, cfg: &AnnealConfig) -> ImproverStats {
     }
     state.rollback_to(best_mark);
     stats.end = state.objective();
+    if sample_metrics {
+        let m = metrics::global();
+        let outcome = |o: &'static str| [("solver", "anneal"), ("outcome", o)];
+        m.counter_add("greengen_sched_moves_total", &outcome("proposed"), stats.proposed as f64);
+        m.counter_add("greengen_sched_moves_total", &outcome("accepted"), stats.accepted as f64);
+        m.counter_add("greengen_sched_moves_total", &outcome("undone"), undone as f64);
+        m.gauge_set("greengen_sched_round_best_score", &[("solver", "anneal")], stats.end);
+    }
+    span_guard.attr("proposed", stats.proposed);
+    span_guard.attr("accepted", stats.accepted);
+    span_guard.attr("undone", undone);
+    span_guard.attr("gain", stats.gain());
     stats
 }
 
@@ -197,6 +224,8 @@ pub fn large_neighbourhood(state: &mut ScoreState, cfg: &LnsConfig) -> ImproverS
     if problem.infra.nodes.is_empty() || cfg.rounds == 0 {
         return stats;
     }
+    let mut span_guard = crate::span!("lns", { rounds: cfg.rounds });
+    let sample_metrics = metrics::enabled();
     let mut rng = Rng::new(cfg.seed);
     let clock = Instant::now();
 
@@ -226,6 +255,18 @@ pub fn large_neighbourhood(state: &mut ScoreState, cfg: &LnsConfig) -> ImproverS
         }
         rng.shuffle(&mut victims);
         victims.truncate(cap);
+        let mut round_span = crate::span!("lns.round", {
+            round: round,
+            destroyed: victims.len(),
+        });
+        if sample_metrics {
+            metrics::global().histogram_observe_with(
+                "greengen_sched_lns_destroy_size",
+                &[],
+                &DESTROY_BUCKETS,
+                victims.len() as f64,
+            );
+        }
 
         stats.proposed += 1;
         let mark = state.mark();
@@ -235,15 +276,35 @@ pub fn large_neighbourhood(state: &mut ScoreState, cfg: &LnsConfig) -> ImproverS
         }
         if !rebuild(state, &mut victims) {
             state.rollback_to(mark); // a mandatory service lost its slot
+            round_span.attr("accepted", false);
             continue;
         }
-        if state.objective() < before - 1e-12 {
+        let accepted = state.objective() < before - 1e-12;
+        if accepted {
             stats.accepted += 1;
         } else {
             state.rollback_to(mark);
         }
+        round_span.attr("accepted", accepted);
+        round_span.attr("objective", state.objective());
+        if sample_metrics {
+            metrics::global().gauge_set(
+                "greengen_sched_round_best_score",
+                &[("solver", "lns")],
+                state.objective(),
+            );
+        }
     }
     stats.end = state.objective();
+    if sample_metrics {
+        let m = metrics::global();
+        let outcome = |o: &'static str| [("solver", "lns"), ("outcome", o)];
+        m.counter_add("greengen_sched_rounds_total", &outcome("proposed"), stats.proposed as f64);
+        m.counter_add("greengen_sched_rounds_total", &outcome("accepted"), stats.accepted as f64);
+    }
+    span_guard.attr("proposed", stats.proposed);
+    span_guard.attr("accepted", stats.accepted);
+    span_guard.attr("gain", stats.gain());
     stats
 }
 
@@ -341,6 +402,7 @@ pub fn improve_subset(
     if services.is_empty() || iterations == 0 {
         return 0.0;
     }
+    let _span = crate::span!("improve_subset", { services: services.len() });
     let compiled = problem.compile();
     let mut state = ScoreState::new(&compiled, std::mem::take(assignment));
     let stats = anneal(
@@ -415,6 +477,10 @@ impl Scheduler for AnnealScheduler {
     }
 
     fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+        let _span = crate::span!("solver.anneal", {
+            services: problem.app.services.len(),
+            nodes: problem.infra.nodes.len(),
+        });
         if exact_instance(problem, self.exact_services, self.exact_nodes) {
             return BranchAndBoundScheduler::default().schedule(problem);
         }
@@ -473,6 +539,10 @@ impl Scheduler for LnsScheduler {
     }
 
     fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+        let _span = crate::span!("solver.lns", {
+            services: problem.app.services.len(),
+            nodes: problem.infra.nodes.len(),
+        });
         if exact_instance(problem, self.exact_services, self.exact_nodes) {
             return BranchAndBoundScheduler::default().schedule(problem);
         }
@@ -556,6 +626,10 @@ impl Scheduler for PortfolioScheduler {
     }
 
     fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+        let _span = crate::span!("solver.portfolio", {
+            services: problem.app.services.len(),
+            nodes: problem.infra.nodes.len(),
+        });
         if exact_instance(problem, self.exact_services, self.exact_nodes) {
             return BranchAndBoundScheduler::default().schedule(problem);
         }

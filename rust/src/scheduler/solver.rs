@@ -17,6 +17,7 @@
 use super::delta::{Move, ScoreState};
 use super::problem::{Problem, Scheduler};
 use crate::model::DeploymentPlan;
+use crate::obs::metrics;
 use crate::{Error, Result};
 
 /// The exact solver.
@@ -38,6 +39,7 @@ struct Search<'p, 'a> {
     best_value: f64,
     best: Option<Vec<Option<(usize, usize)>>>,
     explored: usize,
+    pruned: usize,
     max_nodes: usize,
 }
 
@@ -47,17 +49,29 @@ impl Scheduler for BranchAndBoundScheduler {
     }
 
     fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+        let mut span = crate::span!("solver.bnb", {
+            services: problem.app.services.len(),
+            nodes: problem.infra.nodes.len(),
+        });
         let n = problem.app.services.len();
         let mut search = Search {
             problem,
             best_value: f64::INFINITY,
             best: None,
             explored: 0,
+            pruned: 0,
             max_nodes: self.max_nodes,
         };
         let compiled = problem.compile();
         let mut state = ScoreState::new(&compiled, vec![None; n]);
         search.dfs(0, &mut state);
+        span.attr("explored", search.explored);
+        span.attr("pruned", search.pruned);
+        if metrics::enabled() {
+            let m = metrics::global();
+            m.counter_add("greengen_sched_bnb_nodes_total", &[], search.explored as f64);
+            m.counter_add("greengen_sched_bnb_pruned_total", &[], search.pruned as f64);
+        }
         match search.best {
             Some(best) => Ok(problem.to_plan(&best)),
             None => Err(Error::Infeasible(
@@ -91,6 +105,7 @@ impl Search<'_, '_> {
         let undecided = state.assignment()[si..].iter().filter(|s| s.is_none()).count();
         let bound = state.objective() - self.problem.objective.drop_penalty * undecided as f64;
         if bound >= self.best_value {
+            self.pruned += 1;
             return;
         }
 

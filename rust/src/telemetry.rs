@@ -4,7 +4,15 @@
 //!
 //! Energy model: `E = wallclock × TDP × utilisation × PUE`, the same
 //! machine-level estimator CodeCarbon applies when RAPL is unavailable.
+//!
+//! The meter is a thin wrapper over the [`crate::obs`] layer: every
+//! [`EnergyMeter::measure`] call also opens a `meter.stage` tracing span
+//! (with `stage`, `seconds` and `kwh` attributes) and feeds the
+//! per-stage `greengen_sched_meter_*` counters — both no-ops unless
+//! tracing/metrics are switched on, so the meter's own behaviour and
+//! cost are unchanged for existing callers.
 
+use crate::obs::metrics;
 use std::time::Instant;
 
 /// Energy model parameters.
@@ -67,13 +75,23 @@ impl EnergyMeter {
 
     /// Measure a closure, recording a labelled measurement.
     pub fn measure<T>(&mut self, label: &str, body: impl FnOnce() -> T) -> T {
+        let mut span = crate::span!("meter.stage", { stage: label });
         let start = Instant::now();
         let out = body();
         let seconds = start.elapsed().as_secs_f64();
+        let kwh = self.kwh_for_seconds(seconds);
+        span.attr("seconds", seconds);
+        span.attr("kwh", kwh);
+        metrics::counter_add(
+            "greengen_sched_meter_seconds_total",
+            &[("stage", label)],
+            seconds,
+        );
+        metrics::counter_add("greengen_sched_meter_kwh_total", &[("stage", label)], kwh);
         self.measurements.push(Measurement {
             label: label.to_string(),
             seconds,
-            kwh: self.kwh_for_seconds(seconds),
+            kwh,
         });
         out
     }

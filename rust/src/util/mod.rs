@@ -5,6 +5,8 @@
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod table;
 
 pub use rng::Rng;
 pub use stats::{mean, quantile_lower, QuantilePool, Summary};
+pub use table::{Align, Cell, Row};

@@ -1,0 +1,169 @@
+//! Fixed-width column writer shared by the CLI's text reports.
+//!
+//! The adaptive, continuum and forecast reports all print aligned
+//! columns; before this module each row was its own ad-hoc `format!`
+//! string, and the column layout lived in ~60 scattered width/precision
+//! literals. [`Row`] centralises the padding arithmetic: a report line
+//! is a chain of [`Cell`]s (padded values) and literal separators, and
+//! the rendered bytes are identical to the format strings it replaced —
+//! the adaptive table is pinned by a golden CLI test.
+//!
+//! The writer is deliberately dumb: no column auto-sizing, no state
+//! shared between rows. Every width is explicit at the call site, so a
+//! report's layout can still be read off its builder chain the way it
+//! could be read off the old format string.
+
+use std::fmt::Display;
+
+/// Horizontal alignment of a [`Cell`] within its column width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    /// Pad on the right (text columns).
+    Left,
+    /// Pad on the left (numeric columns).
+    Right,
+}
+
+/// One rendered cell: a value formatted into a fixed-width column.
+///
+/// Width `0` means "natural width" — no padding, exactly like a bare
+/// `{}` in a format string.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    text: String,
+    width: usize,
+    align: Align,
+}
+
+impl Cell {
+    /// A left-aligned cell (`{:<width$}`).
+    pub fn left(value: impl Display, width: usize) -> Cell {
+        Cell {
+            text: value.to_string(),
+            width,
+            align: Align::Left,
+        }
+    }
+
+    /// A right-aligned cell (`{:>width$}`).
+    pub fn right(value: impl Display, width: usize) -> Cell {
+        Cell {
+            text: value.to_string(),
+            width,
+            align: Align::Right,
+        }
+    }
+
+    /// A right-aligned fixed-point number (`{:>width$.decimals$}`).
+    pub fn fixed(value: f64, width: usize, decimals: usize) -> Cell {
+        Cell {
+            text: format!("{value:.decimals$}"),
+            width,
+            align: Align::Right,
+        }
+    }
+
+    fn render_into(&self, out: &mut String) {
+        let pad = self.width.saturating_sub(self.text.chars().count());
+        match self.align {
+            Align::Right => {
+                for _ in 0..pad {
+                    out.push(' ');
+                }
+                out.push_str(&self.text);
+            }
+            Align::Left => {
+                out.push_str(&self.text);
+                for _ in 0..pad {
+                    out.push(' ');
+                }
+            }
+        }
+    }
+}
+
+/// Builder for one report line.
+#[derive(Debug, Default)]
+pub struct Row {
+    buf: String,
+}
+
+impl Row {
+    /// An empty row.
+    pub fn new() -> Row {
+        Row::default()
+    }
+
+    /// Append a padded cell.
+    pub fn cell(mut self, cell: Cell) -> Row {
+        cell.render_into(&mut self.buf);
+        self
+    }
+
+    /// Append a literal separator (units, punctuation, labels).
+    pub fn sep(mut self, s: &str) -> Row {
+        self.buf.push_str(s);
+        self
+    }
+
+    /// Append the standard two-space column gap.
+    pub fn gap(self) -> Row {
+        self.sep("  ")
+    }
+
+    /// The rendered line (no trailing newline).
+    pub fn finish(self) -> String {
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_match_format_string_padding() {
+        assert_eq!(
+            Row::new().cell(Cell::right(7usize, 4)).finish(),
+            format!("{:>4}", 7)
+        );
+        assert_eq!(
+            Row::new().cell(Cell::left("abc", 6)).finish(),
+            format!("{:<6}", "abc")
+        );
+        assert_eq!(
+            Row::new().cell(Cell::fixed(3.14159, 9, 2)).finish(),
+            format!("{:>9.2}", 3.14159)
+        );
+    }
+
+    #[test]
+    fn zero_width_is_natural_width() {
+        assert_eq!(Row::new().cell(Cell::right(42usize, 0)).finish(), "42");
+        assert_eq!(
+            Row::new().cell(Cell::fixed(0.5, 0, 2)).finish(),
+            format!("{:.2}", 0.5)
+        );
+    }
+
+    #[test]
+    fn overlong_text_is_never_truncated() {
+        // format! widths are minimums, not maximums — so are ours
+        assert_eq!(
+            Row::new().cell(Cell::left("longer-than-four", 4)).finish(),
+            format!("{:<4}", "longer-than-four")
+        );
+    }
+
+    #[test]
+    fn rows_compose_cells_and_separators() {
+        let line = Row::new()
+            .cell(Cell::right(3usize, 6))
+            .sep("/")
+            .cell(Cell::left(12usize, 6))
+            .gap()
+            .cell(Cell::fixed(0.125, 13, 3))
+            .finish();
+        assert_eq!(line, format!("{:>6}/{:<6}  {:>13.3}", 3, 12, 0.125));
+    }
+}

@@ -44,8 +44,13 @@ fn cli_doc_headings_match_parser() {
         .lines()
         .filter_map(|l| l.trim_start().strip_prefix("greengen "))
         .filter_map(|rest| rest.split_whitespace().next())
-        // drop the banner line ("greengen — Green by Design ...")
-        .filter(|token| token.chars().all(|ch| ch.is_ascii_alphabetic()))
+        // drop the banner line ("greengen — Green by Design ...");
+        // subcommand names are alphanumeric-or-hyphen (e.g. obs-summary)
+        .filter(|token| {
+            token
+                .chars()
+                .all(|ch| ch.is_ascii_alphanumeric() || ch == '-')
+        })
         .map(str::to_string)
         .collect();
     assert_eq!(

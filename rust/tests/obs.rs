@@ -1,0 +1,297 @@
+//! Observability-layer integration tests: the Prometheus exposition
+//! round-trip, the JSONL trace schema emitted by `--trace`, and the
+//! contract that the disabled path records nothing and changes no
+//! output. Everything that *enables* the global collectors runs the
+//! built binary as a subprocess — `cargo test` runs in-process tests on
+//! parallel threads, and the obs globals are process-wide.
+
+use greengen::obs::metrics::Registry;
+use greengen::obs::trace;
+use greengen::util::proptest::check;
+use std::process::Command;
+
+fn greengen(args: &[&str]) -> (String, String, bool) {
+    let exe = env!("CARGO_BIN_EXE_greengen");
+    let out = Command::new(exe).args(args).output().expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("greengen-obs-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------- metrics
+
+#[test]
+fn exposition_round_trips_for_random_registries() {
+    check("render/parse/render is the identity", 64, |rng| {
+        let r = Registry::default();
+        let names = ["greengen_sched_a_total", "greengen_sched_b_total"];
+        for _ in 0..(1 + rng.below(8)) {
+            let name = names[rng.below(names.len())];
+            let label_value = format!("v{}", rng.below(4));
+            r.counter_add(name, &[("solver", label_value.as_str())], rng.range(0.0, 1e6));
+        }
+        for _ in 0..(1 + rng.below(4)) {
+            r.gauge_set("greengen_sched_temp", &[], rng.range(-50.0, 50.0));
+        }
+        for _ in 0..(1 + rng.below(16)) {
+            r.histogram_observe("greengen_sched_lat_ms", &[], rng.range(0.0, 20_000.0));
+        }
+        let text = r.render(1_717_000_000_000);
+        let back = Registry::from_exposition(&text).expect("own output parses");
+        assert_eq!(back.render(1_717_000_000_000), text);
+    });
+}
+
+#[test]
+fn exposition_survives_awkward_label_values() {
+    let r = Registry::default();
+    r.counter_add(
+        "greengen_sched_moves_total",
+        &[("zone", "eu \"west\"\nline\\slash")],
+        3.0,
+    );
+    let text = r.render(7);
+    let back = Registry::from_exposition(&text).unwrap();
+    assert_eq!(back.render(7), text);
+}
+
+// ------------------------------------------------------------------ trace
+
+/// Every `--trace` line is one span object with the pinned field set
+/// and types; ids are unique, parents resolve, and child spans nest
+/// inside their parent's duration.
+#[test]
+fn trace_flag_writes_schema_conformant_jsonl() {
+    let dir = temp_dir("schema");
+    let tpath = dir.join("trace.jsonl");
+    let mpath = dir.join("metrics.prom");
+    let (stdout, stderr, ok) = greengen(&[
+        "schedule",
+        "--scenario",
+        "1",
+        "--seed",
+        "5",
+        "--trace",
+        tpath.to_str().unwrap(),
+        "--metrics",
+        mpath.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("deploy frontend"), "{stdout}");
+
+    let text = std::fs::read_to_string(&tpath).unwrap();
+    let mut ids = std::collections::BTreeSet::new();
+    let mut n_lines = 0usize;
+    for line in text.lines() {
+        n_lines += 1;
+        let v = greengen::jsonio::parse(line).expect("trace line parses");
+        let obj = v.as_object().expect("span is an object");
+        let field = |k: &str| {
+            obj.iter()
+                .find(|(key, _)| key == k)
+                .map(|(_, val)| val)
+                .unwrap_or_else(|| panic!("missing field '{k}' in {line}"))
+        };
+        assert!(field("span").as_str().is_some(), "{line}");
+        let id = field("id").as_f64().expect("id is a number") as u64;
+        assert!(id > 0);
+        assert!(ids.insert(id), "duplicate span id {id}");
+        let parent = field("parent");
+        assert!(
+            parent.as_f64().is_some() || matches!(parent, &greengen::jsonio::Value::Null),
+            "{line}"
+        );
+        assert!(field("thread").as_f64().is_some(), "{line}");
+        assert!(field("start_us").as_f64().is_some(), "{line}");
+        assert!(field("dur_us").as_f64().is_some(), "{line}");
+        assert!(field("attrs").as_object().is_some(), "{line}");
+    }
+    assert!(n_lines > 0, "trace is empty");
+
+    // the library reader agrees line-for-line with the raw parse
+    let records = trace::read_jsonl(&tpath).unwrap();
+    assert_eq!(records.len(), n_lines);
+
+    // the schedule path records its stages
+    let names: std::collections::BTreeSet<&str> =
+        records.iter().map(|r| r.name.as_str()).collect();
+    assert!(names.contains("problem.compile"), "{names:?}");
+    assert!(names.contains("greedy.construct"), "{names:?}");
+    assert!(names.contains("meter.stage"), "{names:?}");
+
+    // nesting: a parent's duration covers the sum of its children
+    // (microsecond truncation can leave ±1us per child)
+    let by_id: std::collections::BTreeMap<u64, &trace::SpanRecord> =
+        records.iter().map(|r| (r.id, r)).collect();
+    let mut child_us: std::collections::BTreeMap<u64, (u64, u64)> =
+        std::collections::BTreeMap::new();
+    for r in &records {
+        if r.parent != 0 {
+            assert!(by_id.contains_key(&r.parent), "dangling parent {}", r.parent);
+            let e = child_us.entry(r.parent).or_insert((0, 0));
+            e.0 += r.dur_us;
+            e.1 += 1;
+        }
+    }
+    for (pid, (sum, n)) in child_us {
+        let parent = by_id[&pid];
+        assert!(
+            sum <= parent.dur_us + n + 2,
+            "children of '{}' ({sum}us) exceed the span itself ({}us)",
+            parent.name,
+            parent.dur_us
+        );
+    }
+
+    // aggregate() folds the same trace into per-stage totals
+    let stats = trace::aggregate(&records);
+    assert!(stats.iter().any(|s| s.name == "greedy.construct"));
+    let total: usize = stats.iter().map(|s| s.count).sum();
+    assert_eq!(total, records.len());
+
+    // the exported metrics re-ingest through the repo's own parser
+    let prom = std::fs::read_to_string(&mpath).unwrap();
+    let reg = Registry::from_exposition(&prom).unwrap();
+    assert!(reg.series_count() > 0);
+    assert!(
+        reg.counter_value("greengen_sched_compile_total", &[]).unwrap_or(0.0) >= 1.0,
+        "{prom}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `--trace`/`--metrics` must not perturb stdout by a single byte: the
+/// report is the same with and without instrumentation (status lines go
+/// to stderr).
+#[test]
+fn trace_flags_leave_stdout_byte_identical() {
+    let dir = temp_dir("ident");
+    let (plain, _, ok) = greengen(&["schedule", "--scenario", "1", "--seed", "5"]);
+    assert!(ok);
+    let (traced, _, ok) = greengen(&[
+        "schedule",
+        "--scenario",
+        "1",
+        "--seed",
+        "5",
+        "--trace",
+        dir.join("t.jsonl").to_str().unwrap(),
+        "--metrics",
+        dir.join("m.prom").to_str().unwrap(),
+    ]);
+    assert!(ok);
+    assert_eq!(plain, traced, "instrumentation changed the report");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// With the collectors off (the default), a full scheduling run through
+/// the instrumented layers records nothing at all — no spans, no metric
+/// series.
+#[test]
+fn disabled_path_records_nothing() {
+    assert!(!trace::enabled());
+    assert!(!greengen::obs::metrics::enabled());
+
+    let scenario = greengen::config::scenarios::scenario(1).unwrap();
+    let mut pipe = greengen::pipeline::GeneratorPipeline::new(Default::default());
+    let outcome = pipe.run_scenario(&scenario).unwrap();
+    let problem = greengen::scheduler::Problem {
+        app: &scenario.app,
+        infra: &scenario.infra,
+        constraints: &outcome.ranked,
+        objective: greengen::scheduler::Objective::default(),
+    };
+    for solver in ["greedy", "anneal", "lns", "exact"] {
+        let s = greengen::scheduler::solver_by_name(solver, 5).unwrap();
+        s.schedule(&problem).unwrap();
+    }
+
+    assert!(trace::drain().is_empty(), "spans recorded while disabled");
+    assert!(
+        greengen::obs::metrics::global().is_empty(),
+        "metric series recorded while disabled"
+    );
+}
+
+// --------------------------------------------------------- adaptive table
+
+/// Golden pin for the adaptive report's column layout: every data row
+/// must be exactly what the pre-observability format string produced
+/// for its values.
+#[test]
+fn adaptive_table_layout_is_pinned() {
+    let (stdout, stderr, ok) = greengen(&["adaptive", "--hours", "12", "--regen", "6"]);
+    assert!(ok, "{stderr}");
+    let mut lines = stdout.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "hour  #constraints  constrained_g  cost_only_g  random_g  oracle_g  failed"
+    );
+    let mut rows = 0usize;
+    for line in lines {
+        if line.is_empty() {
+            break; // totals block follows the table
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        assert_eq!(f.len(), 7, "unexpected row shape: {line}");
+        let rebuilt = format!(
+            "{:>4}  {:>12}  {:>13.1}  {:>11.1}  {:>8.1}  {:>8.1}  {}",
+            f[0].parse::<usize>().unwrap(),
+            f[1].parse::<usize>().unwrap(),
+            f[2].parse::<f64>().unwrap(),
+            f[3].parse::<f64>().unwrap(),
+            f[4].parse::<f64>().unwrap(),
+            f[5].parse::<f64>().unwrap(),
+            f[6],
+        );
+        assert_eq!(line, rebuilt, "column layout drifted");
+        rows += 1;
+    }
+    assert_eq!(rows, 2, "{stdout}");
+}
+
+// ------------------------------------------------------------ obs-summary
+
+#[test]
+fn obs_summary_aggregates_a_recorded_trace() {
+    let dir = temp_dir("summary");
+    let tpath = dir.join("trace.jsonl");
+    let mpath = dir.join("metrics.prom");
+    let (_, stderr, ok) = greengen(&[
+        "adaptive",
+        "--hours",
+        "12",
+        "--regen",
+        "6",
+        "--trace",
+        tpath.to_str().unwrap(),
+        "--metrics",
+        mpath.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    let (stdout, stderr, ok) = greengen(&[
+        "obs-summary",
+        tpath.to_str().unwrap(),
+        "--metrics",
+        mpath.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("stage"), "{stdout}");
+    assert!(stdout.contains("adaptive.epoch"), "{stdout}");
+    assert!(stdout.contains("spans across"), "{stdout}");
+    assert!(stdout.contains("series re-ingested"), "{stdout}");
+
+    // bad inputs fail cleanly
+    let (_, stderr, ok) = greengen(&["obs-summary"]);
+    assert!(!ok);
+    assert!(stderr.contains("trace file required"), "{stderr}");
+    std::fs::remove_dir_all(&dir).ok();
+}
