@@ -38,6 +38,12 @@ pub struct ReplanConfig {
     pub improve_iterations: usize,
     /// Seed of the improver's deterministic RNG.
     pub improve_seed: u64,
+    /// Absolute wall-clock deadline for the improver pass (anytime
+    /// mode, see [`crate::scheduler::AnnealConfig::deadline`]). The
+    /// serve daemon re-arms this every epoch from its `--deadline-ms`
+    /// budget; `None` keeps the pass iteration-budgeted and
+    /// deterministic.
+    pub improve_deadline: Option<std::time::Instant>,
 }
 
 impl Default for ReplanConfig {
@@ -47,6 +53,7 @@ impl Default for ReplanConfig {
             weight_epsilon: 0.01,
             improve_iterations: 4_000,
             improve_seed: 0x1A7E,
+            improve_deadline: None,
         }
     }
 }
@@ -303,6 +310,7 @@ impl IncrementalReplanner {
             improvable,
             self.config.improve_seed,
             self.config.improve_iterations,
+            self.config.improve_deadline,
         );
 
         let plan = problem.to_plan(&assignment);

@@ -80,6 +80,7 @@ pub mod prolog;
 pub mod ranker;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod simulate;
 pub mod telemetry;
 pub mod util;

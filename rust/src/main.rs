@@ -11,6 +11,8 @@
 //! greengen scalability [--mode app|infra] [--steps 10] [--reps 3] [--out file.csv]
 //! greengen threshold [--services 100] [--nodes 100]
 //! greengen forecast [--scenario 3] [--train 48] [--eval 48] [--horizon 6] [--event 72]
+//! greengen serve [--scenario 1] [--replay FILE.jsonl] [--deadline-ms 0] [--queue 1024]
+//!                [--high-water N] [--retain-hours H] [--seed N] [--zones N]
 //! greengen obs-summary FILE.jsonl [--metrics FILE.prom]
 //! greengen info
 //! ```
@@ -28,6 +30,7 @@ use greengen::runtime::{AnalyticsBackend, NativeBackend, XlaBackend};
 use greengen::scheduler::{
     evaluate, solver_by_name, GreedyScheduler, Objective, Problem, Scheduler, SOLVER_NAMES,
 };
+use greengen::serve::{Daemon, ServeConfig};
 use greengen::telemetry::EnergyMeter;
 use greengen::util::{quantile_lower, Cell, Rng, Row};
 use greengen::{simulate, Result};
@@ -61,6 +64,7 @@ fn run(args: &Args) -> Result<()> {
         Some("timeshift") => cmd_timeshift(args),
         Some("forecast") => cmd_forecast(args),
         Some("continuum") => cmd_continuum(args),
+        Some("serve") => cmd_serve(args),
         Some("obs-summary") => cmd_obs_summary(args),
         Some("info") => cmd_info(),
         Some("help") | None => {
@@ -92,6 +96,9 @@ USAGE:
   greengen continuum [--topology geo-regions] [--nodes 500] [--services 1000] [--zones 8]
                      [--solver sharded|monolithic|both|all] [--epochs 1] [--sequential] [--seed N]
                      [--trace FILE.jsonl] [--metrics FILE.prom]
+  greengen serve [--scenario 1] [--replay FILE.jsonl] [--deadline-ms 0] [--queue 1024]
+                 [--high-water N] [--retain-hours H] [--seed N] [--zones N]
+                 [--trace FILE.jsonl] [--metrics FILE.prom]
   greengen obs-summary FILE.jsonl [--metrics FILE.prom]
   greengen info
 
@@ -864,6 +871,68 @@ fn cmd_continuum(args: &Args) -> Result<()> {
             println!("{line}");
         }
     }
+    obs_finish(args)?;
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "scenario",
+        "replay",
+        "deadline-ms",
+        "queue",
+        "high-water",
+        "retain-hours",
+        "seed",
+        "zones",
+        "alpha",
+        "extended",
+        "direct",
+        "xla",
+        "artifacts",
+        "trace",
+        "metrics",
+    ])?;
+    obs_setup(args);
+    let scenario = scenarios::scenario(args.usize_or("scenario", 1)?)?;
+    let queue = args.usize_or("queue", 1024)?;
+    let config = ServeConfig {
+        queue,
+        high_water: args.usize_or("high-water", queue / 2)?,
+        deadline_ms: args.u64_or("deadline-ms", 0)?,
+        live: args.opt("replay").is_none(),
+        seed: args.u64_or("seed", 0x5EBF)?,
+        zones: args.usize_or("zones", 0)?,
+        retain_hours: args.f64_or("retain-hours", 0.0)?,
+        objective: Objective::default(),
+    };
+    let mut daemon = Daemon::new(&scenario, pipeline(args)?, config);
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    let stderr = std::io::stderr();
+    let mut status = stderr.lock();
+    let summary = match args.opt("replay") {
+        Some(path) => {
+            let file = std::fs::File::open(path)?;
+            let mut input = std::io::BufReader::new(file);
+            daemon.run(&mut input, &mut out, &mut status)?
+        }
+        None => {
+            let stdin = std::io::stdin();
+            let mut input = stdin.lock();
+            daemon.run(&mut input, &mut out, &mut status)?
+        }
+    };
+    drop(out);
+    drop(status);
+    eprintln!(
+        "# serve: {} epochs ({} full, {} incremental), {} events, {} responses",
+        summary.epochs,
+        summary.epochs_full,
+        summary.epochs_incremental,
+        summary.events,
+        summary.responses
+    );
     obs_finish(args)?;
     Ok(())
 }

@@ -11,12 +11,14 @@
 use super::generator_pipeline::{GeneratorPipeline, PipelineConfig};
 use crate::carbon::{CarbonIntensitySource, TraceSet};
 use crate::config::Scenario;
+use crate::constraints::Constraint;
 use crate::continuum::{IncrementalReplanner, ShardedScheduler, ZonePartitioner};
 use crate::forecast::{BlendedForecaster, CarbonForecaster};
+use crate::model::{Application, DeploymentPlan, Infrastructure};
 use crate::monitoring::{MetricStore, WorkloadSimulator};
 use crate::scheduler::{
-    evaluate, CostOnlyScheduler, GreedyScheduler, GreenOracleScheduler, Objective, Problem,
-    RandomScheduler, Scheduler, TemporalConfig, TemporalScheduler,
+    evaluate, CostOnlyScheduler, GreedyScheduler, GreenOracleScheduler, Objective, PlanMetrics,
+    Problem, RandomScheduler, Scheduler, TemporalConfig, TemporalScheduler,
 };
 use crate::util::Rng;
 use crate::Result;
@@ -158,6 +160,107 @@ impl AdaptiveSummary {
     }
 }
 
+/// One generate → schedule → evaluate cycle — the shared core of an
+/// adaptive epoch. [`AdaptiveLoop::run`] drives it from the one-shot
+/// CLI; the `serve` daemon drives the *same* code path per tick, so the
+/// long-running mode cannot drift from the benchmarked loop.
+///
+/// The cycle owns no state across calls: constraint memory lives in the
+/// [`GeneratorPipeline`], placement memory in the optional
+/// [`IncrementalReplanner`] — both borrowed, both persistent in the
+/// caller.
+pub struct EpochCycle<'a> {
+    /// Constraint-generation pipeline (persistent KB / τ state).
+    pub pipeline: &'a mut GeneratorPipeline,
+    /// Route generation through [`GeneratorPipeline::run_incremental`]
+    /// (dirty rows only) instead of the full pass.
+    pub incremental: bool,
+    /// Incremental re-planner; `None` schedules with `solver` instead.
+    pub replanner: Option<&'a mut IncrementalReplanner>,
+    /// Fallback solver used when no re-planner is installed.
+    pub solver: &'a dyn Scheduler,
+    /// Scheduling objective.
+    pub objective: Objective,
+}
+
+/// Everything one [`EpochCycle::run`] call produced.
+pub struct CycleOutcome {
+    /// Ranked constraints in force this epoch.
+    pub ranked: Vec<Constraint>,
+    /// The constrained deployment plan.
+    pub plan: DeploymentPlan,
+    /// Evaluation of `plan` under this epoch's problem.
+    pub metrics: PlanMetrics,
+    /// Incremental generation: rows re-evaluated (0 when full).
+    pub gen_dirty_rows: usize,
+    /// Incremental generation: total rows (0 when full).
+    pub gen_total_rows: usize,
+    /// Re-planner: zones re-solved this epoch (0 without one).
+    pub dirty_zones: usize,
+    /// Re-planner: total zones (0 without one).
+    pub total_zones: usize,
+    /// Re-planner: placements carried over from the previous epoch.
+    pub reused_placements: usize,
+    /// Re-planner: objective gain from the warm-started improver.
+    pub improver_gain: f64,
+}
+
+impl EpochCycle<'_> {
+    /// Run one epoch at simulated time `t`: regenerate constraints from
+    /// the store, schedule (re-planner or fallback solver), evaluate.
+    pub fn run(
+        &mut self,
+        app: &mut Application,
+        infra: &mut Infrastructure,
+        store: &MetricStore,
+        intensity: &dyn CarbonIntensitySource,
+        t: f64,
+    ) -> Result<CycleOutcome> {
+        let outcome = if self.incremental {
+            self.pipeline.run_incremental(app, infra, store, intensity, t)?
+        } else {
+            self.pipeline.run_epoch(app, infra, store, intensity, t)?
+        };
+        let (gen_dirty_rows, gen_total_rows) = outcome
+            .incremental
+            .map(|s| (s.dirty_rows, s.total_rows))
+            .unwrap_or((0, 0));
+
+        let problem = Problem {
+            app,
+            infra,
+            constraints: &outcome.ranked,
+            objective: self.objective,
+        };
+        let (plan, dirty_zones, total_zones, reused_placements, improver_gain) =
+            match self.replanner.as_deref_mut() {
+                Some(rp) => {
+                    let o = rp.replan(&problem)?;
+                    (
+                        o.plan,
+                        o.dirty_zones.len(),
+                        o.total_zones,
+                        o.reused_placements,
+                        o.improver_gain,
+                    )
+                }
+                None => (self.solver.schedule(&problem)?, 0, 0, 0, 0.0),
+            };
+        let metrics = evaluate(&problem, &plan)?;
+        Ok(CycleOutcome {
+            ranked: outcome.ranked,
+            plan,
+            metrics,
+            gen_dirty_rows,
+            gen_total_rows,
+            dirty_zones,
+            total_zones,
+            reused_placements,
+            improver_gain,
+        })
+    }
+}
+
 /// The adaptive loop.
 pub struct AdaptiveLoop {
     pub pipeline: GeneratorPipeline,
@@ -233,22 +336,10 @@ impl AdaptiveLoop {
                 None
             };
 
-            // --- constraint generation epoch -----------------------------
-            // (incremental mode regenerates only dirty monitoring series /
-            // rows / nodes — identical constraints, O(changed) work)
-            let outcome = if self.config.incremental {
-                self.pipeline
-                    .run_incremental(&mut app, &mut infra, &store, &traces, t)?
-            } else {
-                self.pipeline
-                    .run_epoch(&mut app, &mut infra, &store, &traces, t)?
-            };
-            let (gen_dirty_rows, gen_total_rows) = outcome
-                .incremental
-                .map(|s| (s.dirty_rows, s.total_rows))
-                .unwrap_or((0, 0));
-
             // --- proactive re-planning: predicted zone-level swings ------
+            // (reads only trace intensities, the forecaster, and node
+            // region/zone labels — safe to run before generation, which
+            // touches none of them)
             let mut predicted_swings = 0usize;
             if self.config.horizon > 0 {
                 let lead = self.config.horizon as f64 * 3600.0;
@@ -280,28 +371,29 @@ impl AdaptiveLoop {
                 }
             }
 
-            // --- schedule + evaluate --------------------------------------
+            // --- generate + schedule + evaluate (the shared cycle) --------
+            let greedy = GreedyScheduler::default();
+            let cycle = EpochCycle {
+                pipeline: &mut self.pipeline,
+                incremental: self.config.incremental,
+                replanner: replanner.as_mut(),
+                solver: &greedy,
+                objective: self.config.objective,
+            }
+            .run(&mut app, &mut infra, &store, &traces, t)?;
+            let (gen_dirty_rows, gen_total_rows) = (cycle.gen_dirty_rows, cycle.gen_total_rows);
+            let (dirty_zones, total_zones) = (cycle.dirty_zones, cycle.total_zones);
+            let (reused_placements, improver_gain) = (cycle.reused_placements, cycle.improver_gain);
+            let (constrained, m_constrained) = (cycle.plan, cycle.metrics);
+
+            // --- baselines on the identical problem -----------------------
             let objective = self.config.objective;
             let problem = Problem {
                 app: &app,
                 infra: &infra,
-                constraints: &outcome.ranked,
+                constraints: &cycle.ranked,
                 objective,
             };
-            let (constrained, dirty_zones, total_zones, reused_placements, improver_gain) =
-                match &mut replanner {
-                    Some(rp) => {
-                        let outcome = rp.replan(&problem)?;
-                        (
-                            outcome.plan,
-                            outcome.dirty_zones.len(),
-                            outcome.total_zones,
-                            outcome.reused_placements,
-                            outcome.improver_gain,
-                        )
-                    }
-                    None => (GreedyScheduler::default().schedule(&problem)?, 0, 0, 0, 0.0),
-                };
             let cost_only = CostOnlyScheduler.schedule(&problem)?;
             let random = RandomScheduler {
                 seed: self.config.seed ^ hour as u64,
@@ -309,7 +401,6 @@ impl AdaptiveLoop {
             .schedule(&problem)?;
             let oracle = GreenOracleScheduler.schedule(&problem)?;
 
-            let m_constrained = evaluate(&problem, &constrained)?;
             let m_cost = evaluate(&problem, &cost_only)?;
             let m_random = evaluate(&problem, &random)?;
             let m_oracle = evaluate(&problem, &oracle)?;
@@ -336,7 +427,7 @@ impl AdaptiveLoop {
             // enabled the same figures also feed the global registry.
             let scratch = crate::obs::metrics::Registry::default();
             let figures: [(&str, f64); 9] = [
-                ("greengen_sched_epoch_constraints", outcome.ranked.len() as f64),
+                ("greengen_sched_epoch_constraints", cycle.ranked.len() as f64),
                 ("greengen_sched_epoch_emissions_g", m_constrained.emissions_g),
                 ("greengen_sched_epoch_dirty_zones", dirty_zones as f64),
                 ("greengen_sched_epoch_total_zones", total_zones as f64),

@@ -13,5 +13,7 @@
 pub mod adaptive;
 mod generator_pipeline;
 
-pub use adaptive::{AdaptiveConfig, AdaptiveLoop, AdaptiveSummary, EpochLog};
+pub use adaptive::{
+    AdaptiveConfig, AdaptiveLoop, AdaptiveSummary, CycleOutcome, EpochCycle, EpochLog,
+};
 pub use generator_pipeline::{EpochOutcome, GeneratorPipeline, PipelineConfig};

@@ -19,6 +19,14 @@
 //! Budgets are iteration-based (deterministic, bit-reproducible per
 //! seed); an optional wall-clock cap (`max_millis`) exists for
 //! latency-bound production use and is documented as machine-dependent.
+//!
+//! For latency-bound serving, every layer also takes an **absolute
+//! deadline** ([`AnnealConfig::deadline`], [`LnsConfig::deadline`],
+//! threaded from the schedulers' `deadline` budget): annealing breaks
+//! out of its proposal loop at the deadline, and LNS switches from a
+//! fixed round count to *rounds until deadline* (anytime mode). A
+//! `None` deadline preserves the iteration-budgeted behaviour exactly,
+//! which is what the localsearch property tests pin.
 
 use super::compiled::CompiledProblem;
 use super::delta::{Move, ScoreState};
@@ -29,10 +37,15 @@ use crate::model::DeploymentPlan;
 use crate::obs::metrics;
 use crate::util::Rng;
 use crate::Result;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// LNS destroy-set sizes are small integers; dedicated bucket bounds.
 const DESTROY_BUCKETS: [f64; 7] = [2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+
+/// Safety cap on deadline-driven LNS rounds: far above anything a
+/// realistic per-epoch budget reaches, it only guards against a clock
+/// that never advances (e.g. a mocked clock in tests).
+pub const LNS_DEADLINE_ROUND_CAP: usize = 10_000;
 
 /// What an improver pass did.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -68,6 +81,11 @@ pub struct AnnealConfig {
     /// Wall-clock cap in ms (0 = none). Hitting it makes the outcome
     /// machine-dependent; leave at 0 for reproducible runs.
     pub max_millis: u64,
+    /// Absolute wall-clock deadline: the proposal loop exits once it
+    /// passes (anytime behaviour, checked every 256 iterations like
+    /// [`Self::max_millis`]). `None` keeps the run purely
+    /// iteration-budgeted and bit-reproducible per seed.
+    pub deadline: Option<Instant>,
     /// Restrict proposals to these services (`None` = all). The
     /// incremental re-planner passes its dirty set so clean-zone
     /// placements stay byte-for-byte carried.
@@ -82,6 +100,7 @@ impl Default for AnnealConfig {
             init_temp: 2.0,
             final_temp: 1e-3,
             max_millis: 0,
+            deadline: None,
             services: None,
         }
     }
@@ -126,9 +145,13 @@ pub fn anneal(state: &mut ScoreState, cfg: &AnnealConfig) -> ImproverStats {
     let mut undone = 0usize;
 
     for k in 0..steps {
-        if cfg.max_millis > 0 && k % 256 == 0 && clock.elapsed().as_millis() as u64 > cfg.max_millis
-        {
-            break;
+        if k % 256 == 0 {
+            if cfg.max_millis > 0 && clock.elapsed().as_millis() as u64 > cfg.max_millis {
+                break;
+            }
+            if cfg.deadline.is_some_and(|d| Instant::now() >= d) {
+                break;
+            }
         }
         let temp = cfg.init_temp * ratio.powf(k as f64 / (steps - 1) as f64);
         if sample_metrics && k % 1024 == 0 {
@@ -193,6 +216,11 @@ pub struct LnsConfig {
     pub max_destroy: usize,
     /// Wall-clock cap in ms (0 = none; see [`AnnealConfig::max_millis`]).
     pub max_millis: u64,
+    /// Absolute wall-clock deadline. With `Some`, the pass runs in
+    /// anytime mode: rounds continue **past** [`Self::rounds`] until the
+    /// deadline passes (bounded by [`LNS_DEADLINE_ROUND_CAP`]), checked
+    /// at every round boundary. `None` keeps the fixed round count.
+    pub deadline: Option<Instant>,
 }
 
 impl Default for LnsConfig {
@@ -203,6 +231,7 @@ impl Default for LnsConfig {
             destroy_fraction: 0.2,
             max_destroy: 64,
             max_millis: 0,
+            deadline: None,
         }
     }
 }
@@ -229,8 +258,17 @@ pub fn large_neighbourhood(state: &mut ScoreState, cfg: &LnsConfig) -> ImproverS
     let mut rng = Rng::new(cfg.seed);
     let clock = Instant::now();
 
-    for round in 0..cfg.rounds {
+    // A deadline switches the pass to anytime mode: the fixed round
+    // count becomes a floor and rounds continue until the deadline.
+    let max_rounds = match cfg.deadline {
+        Some(_) => cfg.rounds.max(LNS_DEADLINE_ROUND_CAP),
+        None => cfg.rounds,
+    };
+    for round in 0..max_rounds {
         if cfg.max_millis > 0 && clock.elapsed().as_millis() as u64 > cfg.max_millis {
+            break;
+        }
+        if cfg.deadline.is_some_and(|d| Instant::now() >= d) {
             break;
         }
         let placed: Vec<usize> = (0..problem.app.services.len())
@@ -391,13 +429,16 @@ fn rebuild(state: &mut ScoreState, destroyed: &mut [usize]) -> bool {
 
 /// Warm-started improvement used by the incremental re-planner: anneal
 /// over `services` only (the dirty set), leaving every other placement
-/// untouched. Returns the objective gain (`>= 0`).
+/// untouched. Returns the objective gain (`>= 0`). A `deadline` makes
+/// the pass anytime (see [`AnnealConfig::deadline`]); `None` keeps it
+/// iteration-budgeted and deterministic.
 pub fn improve_subset(
     problem: &Problem,
     assignment: &mut Vec<Option<(usize, usize)>>,
     services: Vec<usize>,
     seed: u64,
     iterations: usize,
+    deadline: Option<Instant>,
 ) -> f64 {
     if services.is_empty() || iterations == 0 {
         return 0.0;
@@ -410,6 +451,7 @@ pub fn improve_subset(
         &AnnealConfig {
             seed,
             iterations,
+            deadline,
             services: Some(services),
             ..AnnealConfig::default()
         },
@@ -450,6 +492,9 @@ pub struct AnnealScheduler {
     pub exact_services: usize,
     /// See [`Self::exact_services`].
     pub exact_nodes: usize,
+    /// Per-solve wall-clock budget: the annealing pass stops at
+    /// `now + deadline` (anytime). `None` = iteration-budgeted.
+    pub deadline: Option<Duration>,
 }
 
 impl AnnealScheduler {
@@ -461,6 +506,7 @@ impl AnnealScheduler {
             greedy_rounds: 20,
             exact_services: 8,
             exact_nodes: 6,
+            deadline: None,
         }
     }
 }
@@ -491,6 +537,7 @@ impl Scheduler for AnnealScheduler {
             &AnnealConfig {
                 seed: self.seed,
                 iterations: self.iterations,
+                deadline: self.deadline.map(|d| Instant::now() + d),
                 ..AnnealConfig::default()
             },
         );
@@ -512,6 +559,9 @@ pub struct LnsScheduler {
     pub exact_services: usize,
     /// See [`Self::exact_services`].
     pub exact_nodes: usize,
+    /// Per-solve wall-clock budget: rounds run until `now + deadline`
+    /// instead of the fixed count (anytime). `None` = round-budgeted.
+    pub deadline: Option<Duration>,
 }
 
 impl LnsScheduler {
@@ -523,6 +573,7 @@ impl LnsScheduler {
             greedy_rounds: 20,
             exact_services: 8,
             exact_nodes: 6,
+            deadline: None,
         }
     }
 }
@@ -553,6 +604,7 @@ impl Scheduler for LnsScheduler {
             &LnsConfig {
                 seed: self.seed,
                 rounds: self.rounds,
+                deadline: self.deadline.map(|d| Instant::now() + d),
                 ..LnsConfig::default()
             },
         );
@@ -598,6 +650,12 @@ pub struct PortfolioScheduler {
     pub exact_services: usize,
     /// See [`Self::exact_services`].
     pub exact_nodes: usize,
+    /// Per-solve wall-clock budget. The portfolio threads one absolute
+    /// deadline (`now + deadline` at entry) through both improvers:
+    /// annealing runs anytime against it, then LNS runs *rounds until
+    /// deadline* on whatever budget remains. `None` keeps the ladder
+    /// purely iteration-budgeted (bit-reproducible per seed).
+    pub deadline: Option<Duration>,
 }
 
 impl PortfolioScheduler {
@@ -610,7 +668,14 @@ impl PortfolioScheduler {
             greedy_rounds: 20,
             exact_services: 8,
             exact_nodes: 6,
+            deadline: None,
         }
+    }
+
+    /// Builder: cap every solve at `budget` of wall-clock time.
+    pub fn with_deadline(mut self, budget: Duration) -> Self {
+        self.deadline = Some(budget);
+        self
     }
 }
 
@@ -635,11 +700,17 @@ impl Scheduler for PortfolioScheduler {
         }
         let compiled = problem.compile();
         let mut state = seeded_state(&compiled, self.greedy_rounds)?;
+        // one absolute deadline for the whole ladder: annealing gets the
+        // front 60% of the budget, LNS everything that remains
+        let entry = Instant::now();
+        let deadline = self.deadline.map(|d| entry + d);
+        let anneal_deadline = self.deadline.map(|d| entry + d.mul_f64(0.6));
         anneal(
             &mut state,
             &AnnealConfig {
                 seed: self.seed,
                 iterations: self.anneal_iterations,
+                deadline: anneal_deadline,
                 ..AnnealConfig::default()
             },
         );
@@ -648,6 +719,7 @@ impl Scheduler for PortfolioScheduler {
             &LnsConfig {
                 seed: self.seed ^ 0x9E37_79B9_7F4A_7C15,
                 rounds: self.lns_rounds,
+                deadline,
                 ..LnsConfig::default()
             },
         );
@@ -743,7 +815,7 @@ mod tests {
         let mut assignment = problem.to_assignment(&plan).unwrap();
         let before = assignment.clone();
         let candidates: Vec<usize> = (0..app.services.len() / 4).collect();
-        let gain = improve_subset(&problem, &mut assignment, candidates.clone(), 7, 4000);
+        let gain = improve_subset(&problem, &mut assignment, candidates.clone(), 7, 4000, None);
         assert!(gain >= 0.0);
         for (si, slot) in assignment.iter().enumerate() {
             if !candidates.contains(&si) {
@@ -776,6 +848,53 @@ mod tests {
         assert!(stats.end <= start + 1e-9);
         assert!((state.objective() - stats.end).abs() < 1e-12);
         assert!((state.objective() - state.rescore()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_solvers_stay_monotone_and_bounded() {
+        let (app, infra, constraints) = fleet_problem(0xDEAD_11);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let greedy = GreedyScheduler::default().schedule(&problem).unwrap();
+        let g = problem.objective_value(&problem.to_assignment(&greedy).unwrap());
+        let budget = Duration::from_millis(150);
+        let clock = Instant::now();
+        let plan = PortfolioScheduler::seeded(9)
+            .with_deadline(budget)
+            .schedule(&problem)
+            .unwrap();
+        // generous tolerance: the greedy seed construction runs before
+        // the deadline is armed, and CI schedulers add jitter
+        assert!(
+            clock.elapsed() < budget + Duration::from_millis(2_000),
+            "deadline solve ran {:?}",
+            clock.elapsed()
+        );
+        crate::scheduler::check_feasible(&problem, &plan).unwrap();
+        let v = problem.objective_value(&problem.to_assignment(&plan).unwrap());
+        assert!(v <= g + 1e-9, "deadline portfolio {v} worse than greedy {g}");
+    }
+
+    #[test]
+    fn no_deadline_matches_todays_fixed_budget_output() {
+        // `deadline: None` must preserve the iteration-budgeted solver
+        // byte-for-byte: a far-future deadline may legitimately run LNS
+        // longer (anytime mode), but None is the pinned legacy path.
+        let (app, infra, constraints) = fleet_problem(0x91D);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let legacy = PortfolioScheduler::seeded(4).schedule(&problem).unwrap();
+        let mut none_cfg = PortfolioScheduler::seeded(4);
+        none_cfg.deadline = None;
+        assert_eq!(legacy, none_cfg.schedule(&problem).unwrap());
     }
 
     #[test]

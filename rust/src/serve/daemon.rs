@@ -1,0 +1,680 @@
+//! The serve daemon: a synchronous, zero-thread event loop that turns
+//! the one-shot adaptive pipeline into a long-running scheduler.
+//!
+//! Events arrive line-by-line (stdin in live mode, a file in `--replay`
+//! mode) and are buffered in two bounded drop-oldest [`Ring`]s:
+//! `samples` (energy + traffic observations) and `control`
+//! (carbon overrides, node churn, placement requests). `tick` and
+//! `shutdown` are handled by the loop directly. An epoch runs **only on
+//! a `tick`** — there are no timers or threads — so the sequence of
+//! epochs is a pure function of the event sequence and live mode and
+//! replay mode take the identical path.
+//!
+//! **Degradation ladder.** At each tick the daemon measures how many
+//! events are pending. At or above `--high-water` it degrades from the
+//! full pass (complete constraint regeneration + portfolio search) to
+//! the incremental path ([`GeneratorPipeline::run_incremental`] +
+//! [`IncrementalReplanner`]) — O(changed) work when the stream is hot.
+//! The epoch line carries the mode actually taken.
+//!
+//! **Deadlines.** `--deadline-ms` bounds each epoch two ways: solver
+//! iteration budgets are scaled *deterministically* from the budget via
+//! [`budgets`], and — in live mode only — a wall-clock deadline is
+//! armed through the anytime solvers. Replay mode never arms wall
+//! clocks, and stdout carries no wall-clock numbers (latency goes to
+//! stderr and the metrics histogram), so replay output is byte-stable.
+
+use super::event::{event_label, parse_event, Event, RequestKind};
+use super::ring::Ring;
+use crate::carbon::TraceSet;
+use crate::config::Scenario;
+use crate::continuum::{IncrementalReplanner, ShardedScheduler, ZonePartitioner};
+use crate::jsonio::{self, Value};
+use crate::model::{Application, Infrastructure};
+use crate::monitoring::MetricStore;
+use crate::obs::metrics;
+use crate::pipeline::{EpochCycle, GeneratorPipeline};
+use crate::scheduler::{Objective, PortfolioScheduler};
+use crate::Result;
+use std::collections::BTreeSet;
+use std::io::{BufRead, Write};
+use std::time::{Duration, Instant};
+
+/// Daemon configuration (one `greengen serve` invocation).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Capacity of each ingest ring (samples and control).
+    pub queue: usize,
+    /// Pending-event count at which an epoch degrades to the
+    /// incremental path.
+    pub high_water: usize,
+    /// Per-epoch wall-clock budget in milliseconds; `0` disables both
+    /// the wall deadline and the budget-derived iteration scaling.
+    pub deadline_ms: u64,
+    /// Live mode arms real wall-clock deadlines; replay mode keeps
+    /// epochs iteration-budgeted only (deterministic output).
+    pub live: bool,
+    /// Solver seed (identical seed + identical event sequence →
+    /// byte-identical replay output).
+    pub seed: u64,
+    /// Zone-count hint for the sharded re-planner (0 = labels/auto).
+    pub zones: usize,
+    /// Drop monitoring samples older than this many hours at each tick
+    /// (`0` keeps the full history).
+    pub retain_hours: f64,
+    /// Scheduling objective.
+    pub objective: Objective,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue: 1024,
+            high_water: 512,
+            deadline_ms: 0,
+            live: false,
+            seed: 0x5EBF,
+            zones: 0,
+            retain_hours: 0.0,
+            objective: Objective::default(),
+        }
+    }
+}
+
+/// Deterministic solver iteration budgets derived from the epoch
+/// deadline: `(anneal_iterations, lns_rounds, improve_iterations)`.
+///
+/// `deadline_ms == 0` returns today's fixed defaults. Otherwise budgets
+/// scale linearly with the deadline and clamp to `[floor, default]`, so
+/// a tight budget shrinks the search the same way on every machine —
+/// the wall clock (live mode only) is just the backstop.
+pub fn budgets(deadline_ms: u64) -> (usize, usize, usize) {
+    if deadline_ms == 0 {
+        return (20_000, 12, 4_000);
+    }
+    let ms = deadline_ms as usize;
+    (
+        (ms * 40).clamp(512, 20_000),
+        (ms / 16).clamp(2, 12),
+        (ms * 10).clamp(256, 4_000),
+    )
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct Counters {
+    events: u64,
+    responses: u64,
+    epochs_full: u64,
+    epochs_incremental: u64,
+    malformed: u64,
+    unknown_type: u64,
+    unknown_name: u64,
+    stale: u64,
+}
+
+/// End-of-run accounting; also emitted as the final `summary` line.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    /// Epochs run (full + incremental).
+    pub epochs: u64,
+    /// Epochs that took the full-regeneration path.
+    pub epochs_full: u64,
+    /// Epochs that degraded to the incremental path.
+    pub epochs_incremental: u64,
+    /// Well-formed events ingested (including skipped ones).
+    pub events: u64,
+    /// Plan responses emitted.
+    pub responses: u64,
+    /// Sample-ring evictions (drop-oldest backpressure).
+    pub dropped_samples: u64,
+    /// Control-ring evictions.
+    pub dropped_control: u64,
+    /// Lines that failed to parse.
+    pub skipped_malformed: u64,
+    /// Well-formed events with an unrecognised `"type"`.
+    pub skipped_unknown_type: u64,
+    /// Events naming an unknown service/flavour/node/region.
+    pub skipped_unknown_name: u64,
+    /// Events with out-of-order timestamps.
+    pub skipped_stale: u64,
+    /// True when the run ended on a `shutdown` event (false = EOF).
+    pub shutdown: bool,
+}
+
+impl ServeSummary {
+    /// Render as the final stdout JSONL line.
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("type", Value::from("summary")),
+            ("epochs", Value::from(self.epochs as usize)),
+            ("epochs_full", Value::from(self.epochs_full as usize)),
+            (
+                "epochs_incremental",
+                Value::from(self.epochs_incremental as usize),
+            ),
+            ("events", Value::from(self.events as usize)),
+            ("responses", Value::from(self.responses as usize)),
+            ("dropped_samples", Value::from(self.dropped_samples as usize)),
+            ("dropped_control", Value::from(self.dropped_control as usize)),
+            (
+                "skipped_malformed",
+                Value::from(self.skipped_malformed as usize),
+            ),
+            (
+                "skipped_unknown_type",
+                Value::from(self.skipped_unknown_type as usize),
+            ),
+            (
+                "skipped_unknown_name",
+                Value::from(self.skipped_unknown_name as usize),
+            ),
+            ("skipped_stale", Value::from(self.skipped_stale as usize)),
+            ("shutdown", Value::from(self.shutdown)),
+        ])
+    }
+}
+
+/// The long-running scheduler daemon. See the module docs for the loop
+/// structure; construct with [`Daemon::new`], drive with [`Daemon::run`].
+pub struct Daemon {
+    config: ServeConfig,
+    app: Application,
+    base_infra: Infrastructure,
+    regions: BTreeSet<String>,
+    down: BTreeSet<String>,
+    traces: TraceSet,
+    store: MetricStore,
+    pipeline: GeneratorPipeline,
+    replanner: IncrementalReplanner,
+    samples: Ring<Event>,
+    control: Ring<Event>,
+    counters: Counters,
+    last_t: f64,
+    epoch: u64,
+    shutdown: bool,
+}
+
+impl Daemon {
+    /// Build a daemon over a scenario's application + infrastructure.
+    /// The pipeline carries the constraint KB across epochs; pass the
+    /// same pipeline the one-shot commands build so flags like
+    /// `--extended` apply.
+    pub fn new(scenario: &Scenario, pipeline: GeneratorPipeline, config: ServeConfig) -> Daemon {
+        let mut sharded = ShardedScheduler::default();
+        if config.zones > 0 {
+            sharded.partitioner = ZonePartitioner::with_zones(config.zones);
+        }
+        let mut replanner = IncrementalReplanner::new(sharded);
+        let (_, _, improve_iterations) = budgets(config.deadline_ms);
+        replanner.config.improve_iterations = improve_iterations;
+        Daemon {
+            app: scenario.app.clone(),
+            base_infra: scenario.infra.clone(),
+            regions: scenario.infra.nodes.iter().map(|n| n.region.clone()).collect(),
+            down: BTreeSet::new(),
+            traces: GeneratorPipeline::trace_set(scenario),
+            store: MetricStore::new(),
+            pipeline,
+            replanner,
+            samples: Ring::new(config.queue),
+            control: Ring::new(config.queue),
+            counters: Counters::default(),
+            last_t: 0.0,
+            epoch: 0,
+            shutdown: false,
+            config,
+        }
+    }
+
+    /// Drive the daemon until `shutdown` or end-of-stream, writing
+    /// response JSONL to `out` and human-readable epoch latencies to
+    /// `status` (stderr). An unreadable input line (I/O error) ends the
+    /// stream the same way EOF does. Returns the final summary, which
+    /// is also the last `out` line.
+    pub fn run(
+        &mut self,
+        input: &mut dyn BufRead,
+        out: &mut dyn Write,
+        status: &mut dyn Write,
+    ) -> Result<ServeSummary> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = match input.read_line(&mut line) {
+                Ok(n) => n,
+                Err(_) => {
+                    // undecodable input: count it and treat the stream
+                    // as ended — retrying cannot make progress
+                    self.skip("malformed");
+                    break;
+                }
+            };
+            if n == 0 {
+                break; // EOF (covers mid-stream truncation)
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            self.ingest(trimmed, out, status)?;
+            if self.shutdown {
+                break;
+            }
+        }
+        self.finish(out, status)
+    }
+
+    fn ingest(&mut self, line: &str, out: &mut dyn Write, status: &mut dyn Write) -> Result<()> {
+        let event = match parse_event(line) {
+            Ok(ev) => ev,
+            Err(_) => {
+                self.skip("malformed");
+                return Ok(());
+            }
+        };
+        self.counters.events += 1;
+        metrics::counter_add(
+            "greengen_sched_serve_events_total",
+            &[("type", event_label(&event))],
+            1.0,
+        );
+        match event {
+            Event::Unknown(_) => self.skip("unknown_type"),
+            Event::Shutdown => self.shutdown = true,
+            Event::Tick { t } => {
+                if t <= self.last_t {
+                    self.skip("stale");
+                } else {
+                    self.epoch_tick(t, out, status)?;
+                }
+            }
+            Event::MetricEnergy(s) => {
+                let known = self
+                    .app
+                    .service(&s.service)
+                    .is_some_and(|sv| sv.flavour(&s.flavour).is_some());
+                if s.t <= self.last_t {
+                    self.skip("stale");
+                } else if !known {
+                    self.skip("unknown_name");
+                } else {
+                    self.buffer_sample(Event::MetricEnergy(s));
+                }
+            }
+            Event::MetricTraffic(s) => {
+                let known = self
+                    .app
+                    .service(&s.from)
+                    .is_some_and(|sv| sv.flavour(&s.from_flavour).is_some())
+                    && self.app.service(&s.to).is_some();
+                if s.t <= self.last_t {
+                    self.skip("stale");
+                } else if !known {
+                    self.skip("unknown_name");
+                } else {
+                    self.buffer_sample(Event::MetricTraffic(s));
+                }
+            }
+            Event::Carbon { region, intensity } => {
+                if !self.regions.contains(&region) {
+                    self.skip("unknown_name");
+                } else {
+                    self.buffer_control(Event::Carbon { region, intensity });
+                }
+            }
+            churn @ (Event::NodeDown { .. } | Event::NodeUp { .. }) => {
+                let known = match &churn {
+                    Event::NodeDown { node } | Event::NodeUp { node } => {
+                        self.base_infra.nodes.iter().any(|n| n.id == *node)
+                    }
+                    _ => false,
+                };
+                if !known {
+                    self.skip("unknown_name");
+                } else {
+                    self.buffer_control(churn);
+                }
+            }
+            request @ Event::Request { .. } => self.buffer_control(request),
+        }
+        Ok(())
+    }
+
+    fn skip(&mut self, reason: &'static str) {
+        match reason {
+            "malformed" => self.counters.malformed += 1,
+            "unknown_type" => self.counters.unknown_type += 1,
+            "unknown_name" => self.counters.unknown_name += 1,
+            "stale" => self.counters.stale += 1,
+            _ => {}
+        }
+        metrics::counter_add(
+            "greengen_sched_serve_skipped_total",
+            &[("reason", reason)],
+            1.0,
+        );
+    }
+
+    fn buffer_sample(&mut self, event: Event) {
+        if self.samples.push(event).is_some() {
+            metrics::counter_add(
+                "greengen_sched_serve_dropped_total",
+                &[("queue", "samples")],
+                1.0,
+            );
+        }
+    }
+
+    fn buffer_control(&mut self, event: Event) {
+        if self.control.push(event).is_some() {
+            metrics::counter_add(
+                "greengen_sched_serve_dropped_total",
+                &[("queue", "control")],
+                1.0,
+            );
+        }
+    }
+
+    /// Run one adaptive epoch at simulated time `t`: apply control
+    /// events, flush samples into the store, generate + schedule +
+    /// evaluate through the shared [`EpochCycle`], answer pending
+    /// requests.
+    fn epoch_tick(&mut self, t: f64, out: &mut dyn Write, status: &mut dyn Write) -> Result<()> {
+        let sample_depth = self.samples.len();
+        let control_depth = self.control.len();
+        let queued = sample_depth + control_depth;
+        let incremental = queued >= self.config.high_water;
+        let started = Instant::now();
+        let mut span = crate::span!("serve.epoch", {
+            epoch: self.epoch,
+            queued: queued,
+        });
+
+        // control plane first: the epoch sees carbon/node churn that
+        // arrived before its tick
+        let mut requests: Vec<String> = Vec::new();
+        for ev in self.control.drain() {
+            match ev {
+                Event::Carbon { region, intensity } => {
+                    self.traces.override_region(&region, intensity);
+                }
+                Event::NodeDown { node } => {
+                    self.down.insert(node);
+                }
+                Event::NodeUp { node } => {
+                    self.down.remove(&node);
+                }
+                Event::Request { id, kind } => {
+                    if kind == RequestKind::Replan {
+                        self.replanner.reset();
+                    }
+                    requests.push(id);
+                }
+                _ => {}
+            }
+        }
+        for ev in self.samples.drain() {
+            match ev {
+                Event::MetricEnergy(s) => self.store.push_energy(s),
+                Event::MetricTraffic(s) => self.store.push_traffic(s),
+                _ => {}
+            }
+        }
+        if self.config.retain_hours > 0.0 {
+            self.store.compact(t - self.config.retain_hours * 3600.0);
+        }
+
+        // epoch infrastructure: the base topology minus downed nodes
+        let mut infra = self.base_infra.clone();
+        let down = &self.down;
+        infra.nodes.retain(|n| !down.contains(&n.id));
+
+        // arm the budgets: iteration scaling always (deterministic),
+        // wall-clock deadlines in live mode only
+        let (anneal_iterations, lns_rounds, _) = budgets(self.config.deadline_ms);
+        let wall = (self.config.live && self.config.deadline_ms > 0)
+            .then(|| Duration::from_millis(self.config.deadline_ms));
+        self.replanner.config.improve_deadline = wall.map(|d| started + d);
+        let mut portfolio = PortfolioScheduler::seeded(self.config.seed);
+        portfolio.anneal_iterations = anneal_iterations;
+        portfolio.lns_rounds = lns_rounds;
+        portfolio.deadline = wall;
+
+        let cycle = EpochCycle {
+            pipeline: &mut self.pipeline,
+            incremental,
+            replanner: incremental.then_some(&mut self.replanner),
+            solver: &portfolio,
+            objective: self.config.objective,
+        }
+        .run(&mut self.app, &mut infra, &self.store, &self.traces, t)?;
+
+        let mode = if incremental { "incremental" } else { "full" };
+        let epoch_line = Value::object(vec![
+            ("type", Value::from("epoch")),
+            ("epoch", Value::from(self.epoch as usize)),
+            ("t", Value::from(t)),
+            ("mode", Value::from(mode)),
+            ("queued", Value::from(queued)),
+            ("dropped_samples", Value::from(self.samples.dropped() as usize)),
+            ("dropped_control", Value::from(self.control.dropped() as usize)),
+            ("constraints", Value::from(cycle.ranked.len())),
+            ("placed", Value::from(cycle.plan.placements.len())),
+            ("dropped_services", Value::from(cycle.plan.dropped.len())),
+            ("emissions_g", Value::from(cycle.metrics.emissions_g)),
+            ("cost", Value::from(cycle.metrics.cost)),
+            ("dirty_zones", Value::from(cycle.dirty_zones)),
+            ("total_zones", Value::from(cycle.total_zones)),
+            ("reused_placements", Value::from(cycle.reused_placements)),
+            ("gen_dirty_rows", Value::from(cycle.gen_dirty_rows)),
+            ("gen_total_rows", Value::from(cycle.gen_total_rows)),
+        ]);
+        writeln!(out, "{}", jsonio::to_string(&epoch_line))?;
+
+        for id in &requests {
+            let response = Value::object(vec![
+                ("type", Value::from("plan")),
+                ("id", Value::from(id.as_str())),
+                ("epoch", Value::from(self.epoch as usize)),
+                ("mode", Value::from(mode)),
+                ("emissions_g", Value::from(cycle.metrics.emissions_g)),
+                ("plan", cycle.plan.to_json()),
+            ]);
+            writeln!(out, "{}", jsonio::to_string(&response))?;
+            self.counters.responses += 1;
+        }
+
+        // wall-clock figures stay off stdout: stderr + histogram only
+        let latency_ms = started.elapsed().as_secs_f64() * 1000.0;
+        span.attr("mode", mode);
+        span.attr("latency_ms", latency_ms);
+        if incremental {
+            self.counters.epochs_incremental += 1;
+        } else {
+            self.counters.epochs_full += 1;
+        }
+        metrics::counter_add("greengen_sched_serve_epochs_total", &[("mode", mode)], 1.0);
+        metrics::gauge_set(
+            "greengen_sched_serve_queue_depth",
+            &[("queue", "samples")],
+            sample_depth as f64,
+        );
+        metrics::gauge_set(
+            "greengen_sched_serve_queue_depth",
+            &[("queue", "control")],
+            control_depth as f64,
+        );
+        metrics::observe_ms("greengen_sched_serve_epoch_ms", &[], latency_ms);
+        writeln!(
+            status,
+            "# serve epoch={} mode={} queued={} latency_ms={:.3} deadline_ms={}",
+            self.epoch, mode, queued, latency_ms, self.config.deadline_ms
+        )?;
+
+        self.last_t = t;
+        self.epoch += 1;
+        Ok(())
+    }
+
+    /// End-of-stream: if placement requests are still buffered, run one
+    /// final synthetic epoch (one simulated hour past the last tick) so
+    /// every request gets a plan, then emit the summary line.
+    fn finish(&mut self, out: &mut dyn Write, status: &mut dyn Write) -> Result<ServeSummary> {
+        let pending = self
+            .control
+            .iter()
+            .any(|e| matches!(e, Event::Request { .. }));
+        if pending {
+            let t = self.last_t + 3600.0;
+            self.epoch_tick(t, out, status)?;
+        }
+        let summary = ServeSummary {
+            epochs: self.epoch,
+            epochs_full: self.counters.epochs_full,
+            epochs_incremental: self.counters.epochs_incremental,
+            events: self.counters.events,
+            responses: self.counters.responses,
+            dropped_samples: self.samples.dropped(),
+            dropped_control: self.control.dropped(),
+            skipped_malformed: self.counters.malformed,
+            skipped_unknown_type: self.counters.unknown_type,
+            skipped_unknown_name: self.counters.unknown_name,
+            skipped_stale: self.counters.stale,
+            shutdown: self.shutdown,
+        };
+        writeln!(out, "{}", jsonio::to_string(&summary.to_json()))?;
+        Ok(summary)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::scenarios;
+    use crate::pipeline::PipelineConfig;
+    use std::io::Cursor;
+
+    fn run_script(script: &str, config: ServeConfig) -> (String, ServeSummary) {
+        let scenario = scenarios::scenario(1).unwrap();
+        let pipeline = GeneratorPipeline::new(PipelineConfig::default());
+        let mut daemon = Daemon::new(&scenario, pipeline, config);
+        let mut input = Cursor::new(script.as_bytes().to_vec());
+        let mut out = Vec::new();
+        let mut status = Vec::new();
+        let summary = daemon.run(&mut input, &mut out, &mut status).unwrap();
+        (String::from_utf8(out).unwrap(), summary)
+    }
+
+    const SCRIPT: &str = concat!(
+        r#"{"type":"metric_energy","t":3600,"service":"frontend","flavour":"large","joules":252000}"#,
+        "\n",
+        r#"{"type":"carbon","region":"FR","intensity":40}"#,
+        "\n",
+        r#"{"type":"tick","t":3600}"#,
+        "\n",
+        r#"{"type":"request","id":"r1","kind":"plan"}"#,
+        "\n",
+        r#"{"type":"tick","t":7200}"#,
+        "\n",
+        r#"{"type":"shutdown"}"#,
+        "\n",
+    );
+
+    #[test]
+    fn script_produces_epochs_responses_and_a_summary() {
+        let (out, summary) = run_script(SCRIPT, ServeConfig::default());
+        let lines: Vec<&str> = out.lines().collect();
+        // 2 epochs + 1 plan response + summary
+        assert_eq!(lines.len(), 4, "stdout: {out}");
+        let first = jsonio::parse(lines[0]).unwrap();
+        assert_eq!(first.str_field("type").unwrap(), "epoch");
+        assert_eq!(first.str_field("mode").unwrap(), "full");
+        let plan = jsonio::parse(lines[2]).unwrap();
+        assert_eq!(plan.str_field("type").unwrap(), "plan");
+        assert_eq!(plan.str_field("id").unwrap(), "r1");
+        assert_eq!(summary.epochs, 2);
+        assert_eq!(summary.responses, 1);
+        assert!(summary.shutdown);
+        assert_eq!(summary.skipped_malformed, 0);
+    }
+
+    #[test]
+    fn same_script_same_seed_is_byte_identical() {
+        let (a, _) = run_script(SCRIPT, ServeConfig::default());
+        let (b, _) = run_script(SCRIPT, ServeConfig::default());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn faults_are_counted_not_fatal() {
+        let script = concat!(
+            "this is not json\n",
+            r#"{"type":"warp_drive","t":1}"#,
+            "\n",
+            r#"{"type":"metric_energy","t":3600,"service":"nosuch","flavour":"tiny","joules":1}"#,
+            "\n",
+            r#"{"type":"carbon","region":"XX","intensity":1}"#,
+            "\n",
+            r#"{"type":"tick","t":3600}"#,
+            "\n",
+            r#"{"type":"tick","t":3600}"#,
+            "\n",
+        );
+        let (_, summary) = run_script(script, ServeConfig::default());
+        assert_eq!(summary.skipped_malformed, 1);
+        assert_eq!(summary.skipped_unknown_type, 1);
+        assert_eq!(summary.skipped_unknown_name, 2);
+        assert_eq!(summary.skipped_stale, 1);
+        assert_eq!(summary.epochs, 1);
+        assert!(!summary.shutdown); // ended on EOF
+    }
+
+    #[test]
+    fn eof_with_pending_request_still_answers() {
+        let script = concat!(
+            r#"{"type":"request","id":"late","kind":"plan"}"#,
+            "\n",
+        );
+        let (out, summary) = run_script(script, ServeConfig::default());
+        assert_eq!(summary.responses, 1);
+        assert_eq!(summary.epochs, 1);
+        let plan_line = out.lines().find(|l| l.contains("\"late\"")).unwrap();
+        let v = jsonio::parse(plan_line).unwrap();
+        assert_eq!(v.str_field("type").unwrap(), "plan");
+    }
+
+    #[test]
+    fn high_water_degrades_to_incremental() {
+        let mut script = String::new();
+        for i in 0..8 {
+            script.push_str(&format!(
+                "{{\"type\":\"metric_energy\",\"t\":{},\"service\":\"frontend\",\"flavour\":\"large\",\"joules\":252000}}\n",
+                600 * (i + 1)
+            ));
+        }
+        script.push_str("{\"type\":\"tick\",\"t\":7200}\n");
+        let config = ServeConfig {
+            queue: 4,
+            high_water: 2,
+            ..ServeConfig::default()
+        };
+        let (out, summary) = run_script(&script, config);
+        assert_eq!(summary.epochs_incremental, 1);
+        assert_eq!(summary.epochs_full, 0);
+        // the 4-deep ring shed the 4 oldest samples
+        assert_eq!(summary.dropped_samples, 4);
+        let epoch = jsonio::parse(out.lines().next().unwrap()).unwrap();
+        assert_eq!(epoch.str_field("mode").unwrap(), "incremental");
+        assert_eq!(epoch.f64_field("queued").unwrap(), 4.0);
+    }
+
+    #[test]
+    fn budgets_scale_and_clamp() {
+        assert_eq!(budgets(0), (20_000, 12, 4_000));
+        let (a, l, i) = budgets(1);
+        assert_eq!((a, l, i), (512, 2, 256));
+        let (a, l, i) = budgets(100);
+        assert_eq!((a, l, i), (4_000, 6, 1_000));
+        assert_eq!(budgets(10_000), (20_000, 12, 4_000));
+    }
+}

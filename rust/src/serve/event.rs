@@ -1,0 +1,205 @@
+//! The serve event-stream wire format: one JSON object per line, typed
+//! by a `"type"` field.
+//!
+//! The stream carries the monitoring signals the adaptive loop
+//! otherwise scrapes from the simulator (energy and traffic samples),
+//! control-plane changes (carbon-intensity updates, node churn),
+//! placement requests, the epoch clock (`tick`), and `shutdown`:
+//!
+//! | `type`           | fields                                                   |
+//! |------------------|----------------------------------------------------------|
+//! | `metric_energy`  | `t`, `service`, `flavour`, `joules`                      |
+//! | `metric_traffic` | `t`, `from`, `from_flavour`, `to`, `requests`, `bytes`   |
+//! | `carbon`         | `region`, `intensity` (gCO2eq/kWh override)              |
+//! | `node_down`      | `node`                                                   |
+//! | `node_up`        | `node`                                                   |
+//! | `request`        | `id`, `kind` (`"plan"` or `"replan"`)                    |
+//! | `tick`           | `t` (seconds — runs one adaptive epoch)                  |
+//! | `shutdown`       | —                                                        |
+//!
+//! Parsing is strict per type (missing/mistyped fields are errors the
+//! daemon counts as `malformed`), but an *unrecognised* `"type"` parses
+//! to [`Event::Unknown`] so the daemon can count it separately and keep
+//! going — forward compatibility over strictness.
+
+use crate::jsonio;
+use crate::monitoring::{EnergySample, TrafficSample};
+use crate::{Error, Result};
+
+/// What a `request` event asks for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestKind {
+    /// Answer with the next epoch's plan.
+    Plan,
+    /// Reset the incremental re-planner's carried state first, then
+    /// answer with a from-scratch plan.
+    Replan,
+}
+
+/// One parsed event line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A Kepler-style energy observation.
+    MetricEnergy(EnergySample),
+    /// An Istio-style traffic observation.
+    MetricTraffic(TrafficSample),
+    /// Carbon-intensity override for a grid region.
+    Carbon {
+        /// Grid region (must name a region of the infrastructure).
+        region: String,
+        /// New intensity, gCO2eq/kWh.
+        intensity: f64,
+    },
+    /// A node left the infrastructure.
+    NodeDown {
+        /// Node id.
+        node: String,
+    },
+    /// A previously-downed node rejoined.
+    NodeUp {
+        /// Node id.
+        node: String,
+    },
+    /// A placement request; answered after the next epoch.
+    Request {
+        /// Caller-chosen correlation id, echoed in the response.
+        id: String,
+        /// Plan or replan.
+        kind: RequestKind,
+    },
+    /// Epoch clock: run one adaptive epoch at simulated time `t`.
+    Tick {
+        /// Simulated time, seconds.
+        t: f64,
+    },
+    /// Stop the daemon after flushing pending requests.
+    Shutdown,
+    /// Well-formed JSON with an unrecognised `"type"` (skipped and
+    /// counted by the daemon).
+    Unknown(String),
+}
+
+/// Parse one JSONL event line.
+pub fn parse_event(line: &str) -> Result<Event> {
+    let v = jsonio::parse(line)?;
+    let kind = v.str_field("type")?;
+    Ok(match kind {
+        "metric_energy" => Event::MetricEnergy(EnergySample {
+            t: v.f64_field("t")?,
+            service: v.str_field("service")?.to_string(),
+            flavour: v.str_field("flavour")?.to_string(),
+            joules: v.f64_field("joules")?,
+        }),
+        "metric_traffic" => Event::MetricTraffic(TrafficSample {
+            t: v.f64_field("t")?,
+            from: v.str_field("from")?.to_string(),
+            from_flavour: v.str_field("from_flavour")?.to_string(),
+            to: v.str_field("to")?.to_string(),
+            requests: v.f64_field("requests")?,
+            bytes: v.f64_field("bytes")?,
+        }),
+        "carbon" => Event::Carbon {
+            region: v.str_field("region")?.to_string(),
+            intensity: v.f64_field("intensity")?,
+        },
+        "node_down" => Event::NodeDown {
+            node: v.str_field("node")?.to_string(),
+        },
+        "node_up" => Event::NodeUp {
+            node: v.str_field("node")?.to_string(),
+        },
+        "request" => {
+            let id = v.str_field("id")?.to_string();
+            let kind = match v.str_field("kind")? {
+                "plan" => RequestKind::Plan,
+                "replan" => RequestKind::Replan,
+                other => {
+                    return Err(Error::Json(format!("unknown request kind `{other}`")));
+                }
+            };
+            Event::Request { id, kind }
+        }
+        "tick" => Event::Tick {
+            t: v.f64_field("t")?,
+        },
+        "shutdown" => Event::Shutdown,
+        other => Event::Unknown(other.to_string()),
+    })
+}
+
+/// Stable label for an event's type — metric label values must come
+/// from a bounded set, so [`Event::Unknown`] maps to `"unknown"`
+/// regardless of the payload string.
+pub fn event_label(event: &Event) -> &'static str {
+    match event {
+        Event::MetricEnergy(_) => "metric_energy",
+        Event::MetricTraffic(_) => "metric_traffic",
+        Event::Carbon { .. } => "carbon",
+        Event::NodeDown { .. } => "node_down",
+        Event::NodeUp { .. } => "node_up",
+        Event::Request { .. } => "request",
+        Event::Tick { .. } => "tick",
+        Event::Shutdown => "shutdown",
+        Event::Unknown(_) => "unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_event_type() {
+        let lines = [
+            (
+                r#"{"type":"metric_energy","t":3600,"service":"frontend","flavour":"large","joules":90000}"#,
+                "metric_energy",
+            ),
+            (
+                r#"{"type":"metric_traffic","t":3600,"from":"frontend","from_flavour":"large","to":"checkout","requests":120,"bytes":480000}"#,
+                "metric_traffic",
+            ),
+            (r#"{"type":"carbon","region":"FR","intensity":92.5}"#, "carbon"),
+            (r#"{"type":"node_down","node":"france"}"#, "node_down"),
+            (r#"{"type":"node_up","node":"france"}"#, "node_up"),
+            (r#"{"type":"request","id":"r1","kind":"plan"}"#, "request"),
+            (r#"{"type":"tick","t":7200}"#, "tick"),
+            (r#"{"type":"shutdown"}"#, "shutdown"),
+        ];
+        for (line, label) in lines {
+            let ev = parse_event(line).unwrap();
+            assert_eq!(event_label(&ev), label, "line {line}");
+        }
+    }
+
+    #[test]
+    fn energy_fields_land_in_the_sample() {
+        let ev = parse_event(
+            r#"{"type":"metric_energy","t":7200,"service":"cart","flavour":"tiny","joules":1234.5}"#,
+        )
+        .unwrap();
+        let Event::MetricEnergy(s) = ev else {
+            panic!("wrong variant");
+        };
+        assert_eq!(s.t, 7200.0);
+        assert_eq!(s.service, "cart");
+        assert_eq!(s.flavour, "tiny");
+        assert_eq!(s.joules, 1234.5);
+    }
+
+    #[test]
+    fn unknown_type_is_not_an_error() {
+        let ev = parse_event(r#"{"type":"telemetry_v2","payload":1}"#).unwrap();
+        assert_eq!(ev, Event::Unknown("telemetry_v2".to_string()));
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(parse_event("{not json").is_err());
+        assert!(parse_event(r#"{"no_type":1}"#).is_err());
+        // missing required field for a known type
+        assert!(parse_event(r#"{"type":"tick"}"#).is_err());
+        // bad request kind
+        assert!(parse_event(r#"{"type":"request","id":"r1","kind":"destroy"}"#).is_err());
+    }
+}

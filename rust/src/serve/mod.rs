@@ -1,0 +1,34 @@
+//! `greengen serve` — the long-running scheduler daemon.
+//!
+//! The paper's architecture is a *continuously-running* control loop:
+//! monitoring feeds constraint learning feeds re-planning. This module
+//! closes that loop as a daemon: a JSONL event stream (stdin, or a file
+//! in `--replay` mode) carries monitoring samples, carbon-intensity
+//! updates, node churn and placement requests; `tick` events drive
+//! adaptive epochs through the same [`crate::pipeline::EpochCycle`] the
+//! one-shot CLI benchmarks, and each epoch answers with JSONL on
+//! stdout.
+//!
+//! Three design rules keep the daemon testable:
+//!
+//! 1. **No threads, no timers.** Epochs run only on `tick` events, so
+//!    the output is a pure function of the event sequence + seed, and
+//!    live stdin and `--replay` take the identical code path.
+//! 2. **Bounded ingest.** Events buffer in fixed-capacity drop-oldest
+//!    [`Ring`]s; overload sheds the *oldest* observations, counted and
+//!    exported — never silent, never unbounded.
+//! 3. **Deterministic stdout.** Wall-clock numbers (epoch latency) go
+//!    to stderr and the metrics histogram only. `--deadline-ms` scales
+//!    solver iteration budgets deterministically ([`budgets`]) and, in
+//!    live mode only, additionally arms real wall-clock deadlines in
+//!    the anytime solvers.
+//!
+//! See `docs/serve.md` for the wire format and the degradation ladder.
+
+mod daemon;
+mod event;
+mod ring;
+
+pub use daemon::{budgets, Daemon, ServeConfig, ServeSummary};
+pub use event::{event_label, parse_event, Event, RequestKind};
+pub use ring::Ring;

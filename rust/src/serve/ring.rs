@@ -1,0 +1,112 @@
+//! Bounded drop-oldest ring buffer — the daemon's backpressure policy.
+//!
+//! The serve loop must keep up with an arbitrarily hot event stream
+//! without unbounded memory growth, so ingest queues are fixed-capacity
+//! FIFOs that **drop the oldest** buffered element on overflow: under
+//! sustained overload the daemon schedules against the freshest window
+//! of observations rather than an ever-older backlog. Every drop is
+//! counted (and exported through the `obs` metrics layer by the daemon)
+//! so load shedding is observable, never silent.
+
+use std::collections::VecDeque;
+
+/// A fixed-capacity FIFO that evicts the oldest element on overflow.
+#[derive(Debug, Clone)]
+pub struct Ring<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl<T> Ring<T> {
+    /// Create a ring holding at most `cap` elements (clamped to ≥ 1).
+    pub fn new(cap: usize) -> Ring<T> {
+        Ring {
+            buf: VecDeque::new(),
+            cap: cap.max(1),
+            dropped: 0,
+        }
+    }
+
+    /// Append an element, evicting (and returning) the oldest buffered
+    /// element when the ring is full. Eviction bumps [`Ring::dropped`].
+    pub fn push(&mut self, item: T) -> Option<T> {
+        let evicted = if self.buf.len() >= self.cap {
+            self.dropped += 1;
+            self.buf.pop_front()
+        } else {
+            None
+        };
+        self.buf.push_back(item);
+        evicted
+    }
+
+    /// Remove and return every buffered element, oldest first.
+    pub fn drain(&mut self) -> Vec<T> {
+        self.buf.drain(..).collect()
+    }
+
+    /// Iterate the buffered elements, oldest first, without consuming.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf.iter()
+    }
+
+    /// Number of elements currently buffered.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Maximum number of buffered elements.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Lifetime count of elements evicted by overflow.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_is_preserved() {
+        let mut r = Ring::new(4);
+        for i in 0..4 {
+            assert!(r.push(i).is_none());
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.drain(), vec![0, 1, 2, 3]);
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn overflow_drops_the_oldest_and_counts() {
+        let mut r = Ring::new(2);
+        assert!(r.push(1).is_none());
+        assert!(r.push(2).is_none());
+        assert_eq!(r.push(3), Some(1));
+        assert_eq!(r.push(4), Some(2));
+        assert_eq!(r.dropped(), 2);
+        assert_eq!(r.drain(), vec![3, 4]);
+        // drain resets contents but not the lifetime drop counter
+        assert_eq!(r.dropped(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut r = Ring::new(0);
+        assert_eq!(r.capacity(), 1);
+        assert!(r.push("a").is_none());
+        assert_eq!(r.push("b"), Some("a"));
+        assert_eq!(r.iter().collect::<Vec<_>>(), vec![&"b"]);
+    }
+}

@@ -1,0 +1,272 @@
+//! Black-box tests for `greengen serve`: drive the daemon as a
+//! subprocess over scripted event files (`--replay`) and over live
+//! stdin, and check the response-stream contract — JSONL schema, plan
+//! feasibility, byte-identical replays, fault-injection accounting, and
+//! the burst → incremental degradation ladder with its deadline.
+
+use greengen::config::scenarios;
+use greengen::jsonio;
+use greengen::model::DeploymentPlan;
+use greengen::scheduler::{check_feasible, Objective, Problem};
+use std::io::Write as _;
+use std::process::{Command, Stdio};
+
+/// Stated deadline tolerance for the degradation test: the wall budget
+/// bounds the *solvers*; generation, evaluation and I/O around them are
+/// unbudgeted, and CI machines are slow — so epochs must land within
+/// `--deadline-ms` plus this slack.
+const TOLERANCE_MS: f64 = 1500.0;
+
+fn greengen(args: &[&str]) -> (String, String, bool) {
+    let exe = env!("CARGO_BIN_EXE_greengen");
+    let out = Command::new(exe).args(args).output().expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+fn write_fixture(name: &str, content: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("greengen-serve-tests-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    std::fs::write(&path, content).unwrap();
+    path
+}
+
+/// A calm three-epoch script: monitoring, a carbon override, node
+/// churn, one plan request and one replan request.
+fn calm_script() -> String {
+    [
+        r#"{"type":"metric_energy","t":3600,"service":"frontend","flavour":"large","joules":252000}"#,
+        r#"{"type":"metric_energy","t":3600,"service":"checkout","flavour":"large","joules":72000}"#,
+        r#"{"type":"metric_traffic","t":3600,"from":"frontend","from_flavour":"large","to":"checkout","requests":120,"bytes":480000}"#,
+        r#"{"type":"carbon","region":"FR","intensity":40}"#,
+        r#"{"type":"request","id":"r1","kind":"plan"}"#,
+        r#"{"type":"tick","t":3600}"#,
+        r#"{"type":"metric_energy","t":7200,"service":"frontend","flavour":"large","joules":250000}"#,
+        r#"{"type":"node_down","node":"france"}"#,
+        r#"{"type":"tick","t":7200}"#,
+        r#"{"type":"node_up","node":"france"}"#,
+        r#"{"type":"request","id":"r2","kind":"replan"}"#,
+        r#"{"type":"tick","t":10800}"#,
+        r#"{"type":"shutdown"}"#,
+        "",
+    ]
+    .join("\n")
+}
+
+#[test]
+fn replay_is_deterministic_with_valid_schema_and_feasible_plans() {
+    let path = write_fixture("calm.jsonl", &calm_script());
+    let path = path.to_str().unwrap();
+    let (out_a, err_a, ok_a) = greengen(&["serve", "--replay", path]);
+    let (out_b, _, ok_b) = greengen(&["serve", "--replay", path]);
+    assert!(ok_a && ok_b, "serve failed: {err_a}");
+    assert_eq!(out_a, out_b, "replay must be byte-identical per seed");
+
+    let lines: Vec<&str> = out_a.lines().collect();
+    let mut epochs = 0usize;
+    let mut plan_ids = Vec::new();
+    let scenario = scenarios::scenario(1).unwrap();
+    for line in &lines {
+        let v = jsonio::parse(line).expect("every stdout line is JSON");
+        match v.str_field("type").unwrap() {
+            "epoch" => {
+                epochs += 1;
+                // schema: the stats consumers key on
+                for field in [
+                    "epoch",
+                    "t",
+                    "queued",
+                    "constraints",
+                    "placed",
+                    "emissions_g",
+                    "cost",
+                    "dropped_samples",
+                ] {
+                    assert!(v.get(field).is_some(), "epoch line missing {field}: {line}");
+                }
+                assert_eq!(v.str_field("mode").unwrap(), "full");
+                assert!(v.f64_field("placed").unwrap() > 0.0);
+            }
+            "plan" => {
+                plan_ids.push(v.str_field("id").unwrap().to_string());
+                let plan = DeploymentPlan::from_json(v.req("plan").unwrap()).unwrap();
+                let problem = Problem {
+                    app: &scenario.app,
+                    infra: &scenario.infra,
+                    constraints: &[],
+                    objective: Objective::default(),
+                };
+                check_feasible(&problem, &plan).expect("served plan is feasible");
+            }
+            "summary" => {
+                assert_eq!(line, lines.last().unwrap(), "summary is the final line");
+                assert!(v.bool_field("shutdown").unwrap());
+                assert_eq!(v.f64_field("skipped_malformed").unwrap(), 0.0);
+            }
+            other => panic!("unexpected line type {other}"),
+        }
+    }
+    assert_eq!(epochs, 3);
+    assert_eq!(plan_ids, ["r1", "r2"]);
+}
+
+#[test]
+fn live_stdin_matches_replay_on_the_same_events() {
+    let script = calm_script();
+    let path = write_fixture("live-vs-replay.jsonl", &script);
+    let (replay_out, _, ok) = greengen(&["serve", "--replay", path.to_str().unwrap()]);
+    assert!(ok);
+
+    let exe = env!("CARGO_BIN_EXE_greengen");
+    let mut child = Command::new(exe)
+        .arg("serve")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("daemon spawns");
+    child
+        .stdin
+        .take()
+        .unwrap()
+        .write_all(script.as_bytes())
+        .unwrap();
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success());
+    let live_out = String::from_utf8_lossy(&out.stdout).to_string();
+    assert_eq!(
+        live_out, replay_out,
+        "live stdin and --replay must emit identical responses"
+    );
+}
+
+#[test]
+fn faults_are_skipped_counted_and_never_fatal() {
+    let script = [
+        "this line is not json",
+        r#"{"type":"quantum_flux","x":1}"#,
+        r#"{"type":"metric_energy","t":3600,"service":"nosuchsvc","flavour":"tiny","joules":10}"#,
+        r#"{"type":"metric_energy","t":3600,"service":"frontend","flavour":"large","joules":252000}"#,
+        r#"{"type":"carbon","region":"ZZ","intensity":10}"#,
+        r#"{"type":"node_down","node":"atlantis"}"#,
+        r#"{"type":"tick","t":3600}"#,
+        r#"{"type":"metric_energy","t":1800,"service":"frontend","flavour":"large","joules":100}"#,
+        r#"{"type":"tick","t":1800}"#,
+        // mid-stream EOF: no shutdown event
+        "",
+    ]
+    .join("\n");
+    let path = write_fixture("faults.jsonl", &script);
+    let metrics = write_fixture("faults.prom", "");
+    let (out, err, ok) = greengen(&[
+        "serve",
+        "--replay",
+        path.to_str().unwrap(),
+        "--metrics",
+        metrics.to_str().unwrap(),
+    ]);
+    assert!(ok, "faults must not crash the daemon: {err}");
+
+    let summary = jsonio::parse(out.lines().last().unwrap()).unwrap();
+    assert_eq!(summary.str_field("type").unwrap(), "summary");
+    assert_eq!(summary.f64_field("skipped_malformed").unwrap(), 1.0);
+    assert_eq!(summary.f64_field("skipped_unknown_type").unwrap(), 1.0);
+    // nosuchsvc + region ZZ + node atlantis
+    assert_eq!(summary.f64_field("skipped_unknown_name").unwrap(), 3.0);
+    // one stale sample + one stale tick
+    assert_eq!(summary.f64_field("skipped_stale").unwrap(), 2.0);
+    assert_eq!(summary.f64_field("epochs").unwrap(), 1.0);
+    assert!(!summary.bool_field("shutdown").unwrap(), "ended on EOF");
+
+    // the same accounting is visible in the exported metrics
+    let prom = std::fs::read_to_string(&metrics).unwrap();
+    assert!(
+        prom.contains("greengen_sched_serve_skipped_total"),
+        "skip counters exported: {prom}"
+    );
+    assert!(prom.contains("greengen_sched_serve_events_total"));
+}
+
+#[test]
+fn burst_degrades_to_incremental_and_holds_the_deadline() {
+    // 120 samples against a 64-deep ring: 56 drop, and the 64 pending
+    // events at the tick are far above the high-water mark of 32
+    let mut script = String::new();
+    for i in 1..=120u32 {
+        script.push_str(&format!(
+            "{{\"type\":\"metric_energy\",\"t\":{},\"service\":\"frontend\",\"flavour\":\"large\",\"joules\":{}}}\n",
+            60 * i,
+            250_000 + i
+        ));
+    }
+    script.push_str("{\"type\":\"tick\",\"t\":7200}\n{\"type\":\"shutdown\"}\n");
+    let path = write_fixture("burst.jsonl", &script);
+    let args = [
+        "serve",
+        "--replay",
+        path.to_str().unwrap(),
+        "--queue",
+        "64",
+        "--high-water",
+        "32",
+        "--deadline-ms",
+        "400",
+    ];
+    let (out, err, ok) = greengen(&args);
+    assert!(ok, "burst run failed: {err}");
+
+    let epoch = jsonio::parse(out.lines().next().unwrap()).unwrap();
+    assert_eq!(epoch.str_field("type").unwrap(), "epoch");
+    assert_eq!(
+        epoch.str_field("mode").unwrap(),
+        "incremental",
+        "above high-water the daemon must take the incremental path"
+    );
+    let summary = jsonio::parse(out.lines().last().unwrap()).unwrap();
+    assert_eq!(summary.f64_field("dropped_samples").unwrap(), 56.0);
+    assert_eq!(summary.f64_field("epochs_incremental").unwrap(), 1.0);
+    assert_eq!(summary.f64_field("epochs_full").unwrap(), 0.0);
+
+    // every epoch latency respects the deadline plus the stated tolerance
+    let mut latency_lines = 0usize;
+    for line in err.lines().filter(|l| l.starts_with("# serve epoch=")) {
+        latency_lines += 1;
+        let ms: f64 = line
+            .split_whitespace()
+            .find_map(|tok| tok.strip_prefix("latency_ms="))
+            .expect("latency field")
+            .parse()
+            .unwrap();
+        assert!(
+            ms <= 400.0 + TOLERANCE_MS,
+            "epoch latency {ms}ms exceeds deadline+tolerance: {line}"
+        );
+    }
+    assert_eq!(latency_lines, 1);
+
+    // control: the same flags on a calm stream stay on the full path
+    let calm = concat!(
+        "{\"type\":\"metric_energy\",\"t\":3600,\"service\":\"frontend\",\"flavour\":\"large\",\"joules\":252000}\n",
+        "{\"type\":\"tick\",\"t\":3600}\n",
+        "{\"type\":\"shutdown\"}\n"
+    );
+    let calm_path = write_fixture("burst-control.jsonl", calm);
+    let (out, _, ok) = greengen(&[
+        "serve",
+        "--replay",
+        calm_path.to_str().unwrap(),
+        "--queue",
+        "64",
+        "--high-water",
+        "32",
+        "--deadline-ms",
+        "400",
+    ]);
+    assert!(ok);
+    let epoch = jsonio::parse(out.lines().next().unwrap()).unwrap();
+    assert_eq!(epoch.str_field("mode").unwrap(), "full");
+}
