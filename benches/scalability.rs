@@ -6,7 +6,12 @@
 //! committed `BENCH_scalability.json` baseline. Each scoring case also
 //! times one anneal pass with the observability collectors off vs on
 //! (`instrumentation_overhead_pct`), pinning the cost of the `obs`
-//! layer on the instrumented hot path.
+//! layer on the instrumented hot path. The `parallel_scoring` sweep
+//! measures scoped-thread candidate scoring (`scheduler::parscore`) at
+//! 1/2/4/8 threads up to 10k services × 2k nodes, asserting the
+//! bit-identical-winner contract as it goes. `--smoke` runs a tiny
+//! version of both sweeps without touching the committed baselines
+//! (used by CI).
 
 use greengen::benchkit::{Bench, BenchConfig};
 use greengen::constraints::{Constraint, ConstraintGenerator, GeneratorConfig};
@@ -182,7 +187,102 @@ fn scoring_case(services: usize, nodes: usize, rescored: usize, delta_moves: usi
     ])
 }
 
+/// Parallel candidate-sweep throughput: repeated `best_reassign` sweeps
+/// over a fixed service sample, once per configured thread count. Every
+/// thread count must pick the identical candidate with the identical
+/// delta bits (the `scheduler::parscore` determinism contract — asserted
+/// here on every run, so a throughput bench doubles as an identity
+/// check). Returns one row per thread count with raw candidate-scoring
+/// throughput and the speedup against the 1-thread baseline.
+fn parallel_case(services: usize, nodes: usize, sample: usize, threads: &[usize]) -> Vec<Value> {
+    let mut rng = Rng::new((services * 17 + nodes) as u64);
+    let app = simulate::random_application(&mut rng, services);
+    let infra = simulate::random_infrastructure(&mut rng, nodes);
+    let constraints = weighted_constraints(&app, &infra);
+    let problem = Problem {
+        app: &app,
+        infra: &infra,
+        constraints: &constraints,
+        objective: Objective::default(),
+    };
+    let compiled = problem.compile();
+    // capacity-feasible seed by random fit (same pattern as the delta
+    // column above)
+    let mut cap = CapacityState::new(&infra);
+    let feasible: Vec<Option<(usize, usize)>> = (0..services)
+        .map(|si| {
+            for _ in 0..8 {
+                let fi = rng.below(app.services[si].flavours.len());
+                let ni = rng.below(nodes);
+                if compiled.placement_ok(si, fi, ni, &cap) {
+                    let (c, r, s) = compiled.requirements(si, fi);
+                    cap.take(ni, c, r, s);
+                    return Some((fi, ni));
+                }
+            }
+            None
+        })
+        .collect();
+    let mut state = ScoreState::new(&compiled, feasible);
+    let sample_services: Vec<usize> = (0..sample).map(|_| rng.below(services)).collect();
+
+    let mut rows = Vec::new();
+    let mut baseline: Option<(f64, Vec<Option<(usize, usize, u64)>>)> = None;
+    for &t in threads {
+        state.set_threads(t);
+        let t0 = Instant::now();
+        let mut picks = Vec::with_capacity(sample_services.len());
+        let mut candidates = 0usize;
+        for &si in &sample_services {
+            candidates += compiled.flavours(si) * nodes;
+            picks.push(
+                state
+                    .best_reassign(si)
+                    .map(|(fi, ni, d)| (fi, ni, d.total.to_bits())),
+            );
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let per_s = candidates as f64 / secs.max(1e-12);
+        let speedup = match &baseline {
+            None => {
+                baseline = Some((secs, picks.clone()));
+                1.0
+            }
+            Some((base_secs, base_picks)) => {
+                assert_eq!(
+                    *base_picks, picks,
+                    "{t} threads changed a sweep winner (determinism contract broken)"
+                );
+                base_secs / secs.max(1e-12)
+            }
+        };
+        println!(
+            "parallel {services:>6}s x {nodes:>4}n @ {t} threads: \
+             {per_s:>12.1} candidates/s  (x{speedup:.2} vs 1 thread)"
+        );
+        rows.push(Value::object(vec![
+            ("services", Value::from(services as f64)),
+            ("nodes", Value::from(nodes as f64)),
+            ("threads", Value::from(t as f64)),
+            ("sweeps", Value::from(sample as f64)),
+            ("candidates_scored", Value::from(candidates as f64)),
+            ("candidates_per_s", Value::from(per_s)),
+            ("speedup_vs_1_thread", Value::from(speedup)),
+        ]));
+    }
+    rows
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--smoke") {
+        // CI-sized determinism + throughput smoke: tiny instances so the
+        // run finishes in seconds, and no baseline writes — the
+        // committed BENCH_scalability.json keeps whatever it holds.
+        println!("# scalability smoke (no baseline writes)");
+        scoring_case(60, 20, 20, 2_000);
+        parallel_case(120, 40, 8, &[1, 2]);
+        return;
+    }
     let mut bench = Bench::new(BenchConfig {
         warmup_iters: 1,
         min_iters: 5,
@@ -239,10 +339,21 @@ fn main() {
         scoring_case(300, 100, 100, 20_000),
         scoring_case(1000, 200, 40, 20_000),
     ];
+
+    // Parallel candidate sweeps over the SoA slabs: the continuum point
+    // (1k × 200) and the 10k-services × 2k-nodes target from the
+    // roadmap. The 10k × 2k slabs hold ~50M (flavour, node) cells —
+    // budget roughly a gigabyte of RSS for this sweep.
+    println!("# parallel candidate sweeps: thread scaling on the SoA slabs");
+    let mut parallel = Vec::new();
+    parallel.extend(parallel_case(1000, 200, 64, &[1, 2, 4, 8]));
+    parallel.extend(parallel_case(10_000, 2_000, 32, &[1, 2, 4, 8]));
+
     let out = Value::object(vec![
         ("bench", Value::from("scalability")),
         ("status", Value::from("measured")),
         ("results", Value::array(cases)),
+        ("parallel_scoring", Value::array(parallel)),
     ]);
     let path = std::path::Path::new("BENCH_scalability.json");
     greengen::jsonio::to_file(path, &out).expect("write BENCH_scalability.json");

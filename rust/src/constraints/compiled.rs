@@ -151,16 +151,22 @@ impl CompiledConstraints {
         self.rows.is_empty()
     }
 
-    /// Violated weight of one row under an assignment (0 when satisfied).
-    fn violation(&self, row: &Row, assignment: &[Option<(usize, usize)>]) -> f64 {
-        let slot = assignment[row.service as usize];
+    /// The one row-evaluation implementation: slots resolved through
+    /// `slot_of` so the physical-assignment and slot-override entry
+    /// points cannot diverge.
+    #[inline]
+    fn violation_with<F>(&self, row: &Row, slot_of: F) -> f64
+    where
+        F: Fn(usize) -> Option<(usize, usize)>,
+    {
+        let slot = slot_of(row.service as usize);
         match row.kind {
             RowKind::Avoid { node } => match slot {
                 Some((fi, ni)) if fi == row.flavour as usize && ni == node as usize => row.weight,
                 _ => 0.0,
             },
             RowKind::Affinity { other } => {
-                match (slot, assignment[other as usize]) {
+                match (slot, slot_of(other as usize)) {
                     (Some((fi, ni)), Some((_, nz))) if fi == row.flavour as usize && ni != nz => {
                         row.weight
                     }
@@ -172,6 +178,11 @@ impl CompiledConstraints {
                 _ => 0.0,
             },
         }
+    }
+
+    /// Violated weight of one row under an assignment (0 when satisfied).
+    fn violation(&self, row: &Row, assignment: &[Option<(usize, usize)>]) -> f64 {
+        self.violation_with(row, |s| assignment[s])
     }
 
     /// Soft-penalty contribution of the rows touching `service` —
@@ -186,6 +197,28 @@ impl CompiledConstraints {
         self.touch[lo..hi]
             .iter()
             .map(|&r| self.violation(&self.rows[r as usize], assignment))
+            .sum()
+    }
+
+    /// [`Self::penalty_touching`] with `service`'s slot read as `slot`
+    /// instead of `assignment[service]` — the shared-read candidate
+    /// pricing primitive of the parallel batch scorer. Affinity rows
+    /// where `service` is the *other* endpoint also see the override
+    /// (both endpoints resolve through it), so by construction this
+    /// returns exactly what [`Self::penalty_touching`] would after
+    /// physically writing `assignment[service] = slot`.
+    pub fn penalty_touching_at(
+        &self,
+        service: usize,
+        assignment: &[Option<(usize, usize)>],
+        slot: Option<(usize, usize)>,
+    ) -> f64 {
+        let slot_of = |s: usize| if s == service { slot } else { assignment[s] };
+        let lo = self.touch_off[service] as usize;
+        let hi = self.touch_off[service + 1] as usize;
+        self.touch[lo..hi]
+            .iter()
+            .map(|&r| self.violation_with(&self.rows[r as usize], &slot_of))
             .sum()
     }
 
@@ -301,6 +334,60 @@ mod tests {
         // touching: service a feels rows 0 and 1; b feels rows 1 and 2
         assert!((compiled.penalty_touching(0, &split) - 0.5).abs() < 1e-12);
         assert!((compiled.penalty_touching(1, &split) - (0.5 + 0.3)).abs() < 1e-12);
+    }
+
+    /// The slot-override entry point must price a hypothetical slot
+    /// exactly as a physical write would — including affinity rows
+    /// where the overridden service is the *other* endpoint.
+    #[test]
+    fn penalty_touching_at_matches_physical_mutation() {
+        let (app, infra) = parts();
+        let symbols = ModelIndex::new(&app, &infra);
+        let constraints = vec![
+            weighted(
+                ConstraintKind::AvoidNode {
+                    service: "a".into(),
+                    flavour: "big".into(),
+                    node: "n1".into(),
+                },
+                0.7,
+            ),
+            weighted(
+                ConstraintKind::Affinity {
+                    service: "a".into(),
+                    flavour: "big".into(),
+                    other: "b".into(),
+                },
+                0.5,
+            ),
+            weighted(
+                ConstraintKind::PreferNode {
+                    service: "b".into(),
+                    flavour: "small".into(),
+                    node: "n0".into(),
+                },
+                0.3,
+            ),
+        ];
+        let compiled = CompiledConstraints::resolve(&symbols, &constraints);
+        let slots: [Option<(usize, usize)>; 5] =
+            [None, Some((0, 0)), Some((0, 1)), Some((1, 0)), Some((1, 1))];
+        for a in slots {
+            for b in slots {
+                let mut assignment = vec![a, b];
+                for service in 0..2 {
+                    for slot in slots {
+                        let via_override =
+                            compiled.penalty_touching_at(service, &assignment, slot);
+                        let original = assignment[service];
+                        assignment[service] = slot;
+                        let via_mutation = compiled.penalty_touching(service, &assignment);
+                        assignment[service] = original;
+                        assert_eq!(via_override, via_mutation, "service {service}");
+                    }
+                }
+            }
+        }
     }
 
     /// The deliberate semantic unification of the interned-ID refactor:

@@ -290,6 +290,7 @@ impl IncrementalReplanner {
             &mut assignment,
             &boundary,
             self.scheduler.repair_rounds,
+            self.scheduler.threads,
         )?;
 
         // --- warm-started improver over the dirty services only ---------

@@ -81,6 +81,14 @@ pub struct ShardedScheduler {
     pub lns_zone_services: usize,
     /// Base seed for the per-zone stochastic solvers.
     pub seed: u64,
+    /// Scoring threads for the candidate sweeps (see
+    /// `scheduler::parscore`; bit-identical at any value). Sizing
+    /// policy: when zones already run on parallel OS threads, each
+    /// zone's solver scores sequentially — zones are the parallel
+    /// dimension and nesting would oversubscribe cores. The monolithic
+    /// delegate, the sequential-zone path and the cross-zone repair
+    /// pass get the full count.
+    pub threads: usize,
 }
 
 impl Default for ShardedScheduler {
@@ -95,6 +103,7 @@ impl Default for ShardedScheduler {
             parallel: true,
             lns_zone_services: 48,
             seed: 0x5EED,
+            threads: 1,
         }
     }
 }
@@ -147,6 +156,7 @@ impl ShardedScheduler {
         if n_services < self.monolithic_below || partition.zones.len() <= 1 {
             let plan = GreedyScheduler {
                 max_rounds: self.max_rounds,
+                threads: self.threads,
             }
             .schedule(problem)?;
             return Ok((
@@ -180,7 +190,13 @@ impl ShardedScheduler {
         }
         let mut assignment = problem.to_assignment(&merged)?;
         let boundary = partition.boundary_services(problem.app, problem.constraints);
-        let stats = repair(problem, &mut assignment, &boundary, self.repair_rounds)?;
+        let stats = repair(
+            problem,
+            &mut assignment,
+            &boundary,
+            self.repair_rounds,
+            self.threads,
+        )?;
         solve_span.attr("repair_placed", stats.placed);
         solve_span.attr("repair_moves", stats.moves);
         Ok((
@@ -277,6 +293,8 @@ pub(crate) fn solve_zones(
 ) -> Result<Vec<DeploymentPlan>> {
     let zone_seed = |i: usize| scheduler.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     let results: Vec<Result<DeploymentPlan>> = if scheduler.parallel && subs.len() > 1 {
+        // zones are the parallel dimension here: per-zone solvers score
+        // sequentially so the two levels never oversubscribe cores
         let mut out = Vec::new();
         std::thread::scope(|scope| {
             let handles: Vec<_> = subs
@@ -284,7 +302,7 @@ pub(crate) fn solve_zones(
                 .enumerate()
                 .map(|(i, sub)| {
                     let seed = zone_seed(i);
-                    scope.spawn(move || solve_sub(sub, objective, scheduler, seed))
+                    scope.spawn(move || solve_sub(sub, objective, scheduler, seed, 1))
                 })
                 .collect();
             out = handles
@@ -297,9 +315,10 @@ pub(crate) fn solve_zones(
         });
         out
     } else {
+        let zone_threads = scheduler.threads.max(1);
         subs.iter()
             .enumerate()
-            .map(|(i, sub)| solve_sub(sub, objective, scheduler, zone_seed(i)))
+            .map(|(i, sub)| solve_sub(sub, objective, scheduler, zone_seed(i), zone_threads))
             .collect()
     };
     results.into_iter().collect()
@@ -315,6 +334,7 @@ fn solve_sub(
     objective: Objective,
     scheduler: &ShardedScheduler,
     seed: u64,
+    threads: usize,
 ) -> Result<DeploymentPlan> {
     // per-zone span; worker threads record into their own buffers, which
     // drain to the global sink at scope exit
@@ -331,11 +351,13 @@ fn solve_sub(
     let solver: Box<dyn Scheduler> = if sub.app.services.len() >= scheduler.lns_zone_services {
         Box::new(LnsScheduler {
             greedy_rounds: scheduler.max_rounds,
+            threads,
             ..LnsScheduler::seeded(seed)
         })
     } else {
         Box::new(GreedyScheduler {
             max_rounds: scheduler.max_rounds,
+            threads,
         })
     };
     let problem = Problem {
@@ -390,13 +412,15 @@ pub(crate) fn repair(
     assignment: &mut Vec<Option<(usize, usize)>>,
     boundary: &[usize],
     rounds: usize,
+    threads: usize,
 ) -> Result<RepairStats> {
     let mut span = crate::span!("continuum.repair", {
         boundary: boundary.len(),
         rounds: rounds,
     });
     let compiled = problem.compile();
-    let mut state = ScoreState::new(&compiled, std::mem::take(assignment));
+    let mut state =
+        ScoreState::new(&compiled, std::mem::take(assignment)).with_threads(threads);
     let mut stats = RepairStats::default();
 
     // --- placement of shard-dropped services -------------------------
@@ -627,7 +651,7 @@ mod tests {
         // shard state after a hypothetical zone solve: zone zb could not
         // fit "big" (needs 12 cpu, zb has 2); "small" landed on n2
         let mut assignment = vec![None, Some((0usize, 1usize))];
-        let stats = repair(&problem, &mut assignment, &[], 2).unwrap();
+        let stats = repair(&problem, &mut assignment, &[], 2, 1).unwrap();
         assert_eq!(stats.placed, 1);
         let plan = problem.to_plan(&assignment);
         assert_eq!(plan.node_of("big"), Some("n1"));
@@ -653,7 +677,7 @@ mod tests {
         };
         let mut assignment = vec![None];
         assert!(matches!(
-            repair(&problem, &mut assignment, &[], 1),
+            repair(&problem, &mut assignment, &[], 1, 1),
             Err(Error::Infeasible(_))
         ));
     }

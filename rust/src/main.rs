@@ -28,7 +28,7 @@ use greengen::continuum::{IncrementalReplanner, ShardedScheduler, ZonePartitione
 use greengen::pipeline::{AdaptiveConfig, AdaptiveLoop, GeneratorPipeline, PipelineConfig};
 use greengen::runtime::{AnalyticsBackend, NativeBackend, XlaBackend};
 use greengen::scheduler::{
-    evaluate, solver_by_name, GreedyScheduler, Objective, Problem, Scheduler, SOLVER_NAMES,
+    evaluate, solver_by_name_threads, GreedyScheduler, Objective, Problem, Scheduler, SOLVER_NAMES,
 };
 use greengen::serve::{Daemon, ServeConfig};
 use greengen::telemetry::EnergyMeter;
@@ -88,17 +88,17 @@ USAGE:
                     [--incremental] [--zones N] [--horizon S]
                     [--trace FILE.jsonl] [--metrics FILE.prom]
   greengen schedule [--scenario 1] [--solver greedy|exact|anneal|lns|portfolio|cost-only|random|oracle]
-                    [--seed N] [--trace FILE.jsonl] [--metrics FILE.prom]
+                    [--seed N] [--threads N] [--trace FILE.jsonl] [--metrics FILE.prom]
   greengen scalability [--mode app|infra] [--steps 10] [--reps 3] [--out file.csv]
   greengen threshold [--services 100] [--nodes 100]
   greengen timeshift [--scenario 1] [--window 4] [--horizon 24] [--forecast]
   greengen forecast [--scenario 3] [--train 48] [--eval 48] [--horizon 6] [--event 72]
   greengen continuum [--topology geo-regions] [--nodes 500] [--services 1000] [--zones 8]
                      [--solver sharded|monolithic|both|all] [--epochs 1] [--sequential] [--seed N]
-                     [--trace FILE.jsonl] [--metrics FILE.prom]
+                     [--threads N] [--trace FILE.jsonl] [--metrics FILE.prom]
   greengen serve [--scenario 1] [--replay FILE.jsonl] [--deadline-ms 0] [--queue 1024]
                  [--high-water N] [--retain-hours H] [--seed N] [--zones N]
-                 [--trace FILE.jsonl] [--metrics FILE.prom]
+                 [--threads N] [--trace FILE.jsonl] [--metrics FILE.prom]
   greengen obs-summary FILE.jsonl [--metrics FILE.prom]
   greengen info
 
@@ -389,8 +389,8 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
 
 fn cmd_schedule(args: &Args) -> Result<()> {
     args.ensure_known(&[
-        "scenario", "solver", "seed", "xla", "alpha", "extended", "direct", "artifacts", "trace",
-        "metrics",
+        "scenario", "solver", "seed", "threads", "xla", "alpha", "extended", "direct", "artifacts",
+        "trace", "metrics",
     ])?;
     obs_setup(args);
     let scenario = scenarios::scenario(args.usize_or("scenario", 1)?)?;
@@ -416,7 +416,8 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     };
     let solver_name = args.opt_or("solver", "greedy");
     let seed = args.u64_or("seed", 7)?;
-    let solver = solver_by_name(&solver_name, seed).ok_or_else(|| {
+    let threads = args.usize_or("threads", 1)?;
+    let solver = solver_by_name_threads(&solver_name, seed, threads).ok_or_else(|| {
         greengen::Error::Config(format!(
             "unknown solver '{solver_name}' (expected one of: {})",
             SOLVER_NAMES.join("|")
@@ -727,7 +728,7 @@ fn continuum_row(
 fn cmd_continuum(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "topology", "nodes", "services", "zones", "seed", "solver", "alpha", "epochs",
-        "sequential", "trace", "metrics",
+        "sequential", "threads", "trace", "metrics",
     ])?;
     obs_setup(args);
     let topology = simulate::Topology::parse(&args.opt_or("topology", "geo-regions"))?;
@@ -762,9 +763,11 @@ fn cmd_continuum(args: &Args) -> Result<()> {
         generated.tau
     );
 
+    let threads = args.usize_or("threads", 1)?;
     let objective = Objective::default();
     let mut sharded = ShardedScheduler {
         parallel: !args.flag("sequential"),
+        threads,
         ..ShardedScheduler::default()
     };
     if zones > 0 {
@@ -790,7 +793,11 @@ fn cmd_continuum(args: &Args) -> Result<()> {
     let mut shard: Option<SolveRow> = None;
     if matches!(solver_mode.as_str(), "monolithic" | "both" | "all") {
         let t0 = std::time::Instant::now();
-        let plan = GreedyScheduler::default().schedule(&problem)?;
+        let plan = GreedyScheduler {
+            threads,
+            ..GreedyScheduler::default()
+        }
+        .schedule(&problem)?;
         mono = Some(continuum_row(
             "monolithic-greedy",
             &problem,
@@ -811,7 +818,7 @@ fn cmd_continuum(args: &Args) -> Result<()> {
     if solver_mode == "all" {
         // the local-search ladder on the same instance (docs/solvers.md)
         for name in ["anneal", "lns", "portfolio"] {
-            let solver = solver_by_name(name, seed).expect("registry solver");
+            let solver = solver_by_name_threads(name, seed, threads).expect("registry solver");
             let t0 = std::time::Instant::now();
             let plan = solver.schedule(&problem)?;
             continuum_row(solver.name(), &problem, &plan, t0.elapsed().as_secs_f64())?;
@@ -885,6 +892,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "retain-hours",
         "seed",
         "zones",
+        "threads",
         "alpha",
         "extended",
         "direct",
@@ -904,6 +912,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0x5EBF)?,
         zones: args.usize_or("zones", 0)?,
         retain_hours: args.f64_or("retain-hours", 0.0)?,
+        threads: args.usize_or("threads", 1)?,
         objective: Objective::default(),
     };
     let mut daemon = Daemon::new(&scenario, pipeline(args)?, config);

@@ -19,6 +19,15 @@
 //! * a CSR adjacency over `app.links` so per-move comm pricing touches
 //!   only the links incident to the moved service.
 //!
+//! The tensors live in [`SlotTensors`], a structure-of-arrays slab with
+//! node-major contiguity: for one row `r = row_of[si] + fi` the values
+//! over *every node* occupy the contiguous range
+//! `[r·n_nodes, (r+1)·n_nodes)` of each slab, so a candidate sweep for
+//! one (service, flavour) is a linear scan of three dense arrays — the
+//! access pattern `scheduler/parscore.rs` chunks across threads. The
+//! per-(si, fi) row slices are exposed via [`CompiledProblem::cost_row`]
+//! and friends.
+//!
 //! Behaviour parity: every tensor entry is the *same* f64 product the
 //! legacy path computed, and all summations keep the legacy order, so
 //! compiled scores are bit-identical to the string path (property-tested
@@ -46,6 +55,36 @@ pub struct CompiledLink {
     pub energy: Vec<Option<f64>>,
 }
 
+/// The per-slot scoring tensors as structure-of-arrays slabs.
+///
+/// Each slab is one dense `rows × n_nodes` array in node-major order:
+/// row `r` (one (service, flavour) pair, `r = row_of[si] + fi`) owns the
+/// contiguous range `[r·n_nodes, (r+1)·n_nodes)`, so sweeping the
+/// candidates of one flavour touches three sequential cache streams
+/// (cost, feasibility, emissions) instead of a strided gather. The fill
+/// order and every stored product are identical to the pre-slab layout —
+/// the refactor is bit-exact by construction and pinned by
+/// `slab_rows_are_node_major_views_of_the_scalar_accessors`.
+#[derive(Debug, Clone, Default)]
+struct SlotTensors {
+    /// Row stride: number of nodes.
+    n_nodes: usize,
+    /// Per (row, node): plan cost of the slot.
+    cost: Vec<f64>,
+    /// Per (row, node): capacity-independent placement feasibility.
+    feasible: Vec<bool>,
+    /// Per (row, node): compute emissions of the slot (gCO2eq/window).
+    compute_g: Vec<f64>,
+}
+
+impl SlotTensors {
+    /// The node-major candidate range of row `r`.
+    #[inline]
+    fn span(&self, r: usize) -> std::ops::Range<usize> {
+        r * self.n_nodes..(r + 1) * self.n_nodes
+    }
+}
+
 /// A deployment problem compiled to dense handles and scoring tensors.
 ///
 /// Built by [`Problem::compile`]; borrowed by [`super::ScoreState`] and
@@ -59,12 +98,8 @@ pub struct CompiledProblem<'p, 'a> {
     row_of: Vec<u32>,
     /// Per service: flavour count.
     n_flavours: Vec<u32>,
-    /// Per (row, node): plan cost of the slot.
-    cost: Vec<f64>,
-    /// Per (row, node): capacity-independent placement feasibility.
-    feasible: Vec<bool>,
-    /// Per (row, node): compute emissions of the slot (gCO2eq/window).
-    compute_g: Vec<f64>,
+    /// The node-major structure-of-arrays scoring slabs.
+    slots: SlotTensors,
     /// Per row: (cpu, ram, storage) resource demand.
     req: Vec<(f64, f64, f64)>,
     /// Per node: enriched carbon intensity.
@@ -197,9 +232,12 @@ impl<'p, 'a> CompiledProblem<'p, 'a> {
             n_nodes,
             row_of,
             n_flavours,
-            cost,
-            feasible,
-            compute_g,
+            slots: SlotTensors {
+                n_nodes,
+                cost,
+                feasible,
+                compute_g,
+            },
             req,
             node_carbon,
             links,
@@ -238,18 +276,25 @@ impl<'p, 'a> CompiledProblem<'p, 'a> {
         self.n_flavours[si] as usize
     }
 
-    /// Tensor cell of (service, flavour, node). The flat layout cannot
-    /// bounds-check `fi`/`ni` per service the way the legacy nested
-    /// indexing did (an out-of-range flavour would silently land in the
-    /// next service's block), so debug builds assert the invariant the
+    /// Slab row of (service, flavour). The flat layout cannot
+    /// bounds-check `fi` per service the way the legacy nested indexing
+    /// did (an out-of-range flavour would silently land in the next
+    /// service's block), so debug builds assert the invariant the
     /// solvers uphold.
     #[inline]
-    fn cell(&self, si: usize, fi: usize, ni: usize) -> usize {
+    fn row(&self, si: usize, fi: usize) -> usize {
         debug_assert!(
-            fi < self.n_flavours[si] as usize && ni < self.n_nodes,
-            "slot ({si}, {fi}, {ni}) out of range"
+            fi < self.n_flavours[si] as usize,
+            "flavour ({si}, {fi}) out of range"
         );
-        (self.row_of[si] as usize + fi) * self.n_nodes + ni
+        self.row_of[si] as usize + fi
+    }
+
+    /// Tensor cell of (service, flavour, node).
+    #[inline]
+    fn cell(&self, si: usize, fi: usize, ni: usize) -> usize {
+        debug_assert!(ni < self.n_nodes, "slot ({si}, {fi}, {ni}) out of range");
+        self.row(si, fi) * self.n_nodes + ni
     }
 
     /// Resource demand (cpu, ram, storage) of (service, flavour).
@@ -261,13 +306,36 @@ impl<'p, 'a> CompiledProblem<'p, 'a> {
     /// Plan-cost term of one slot.
     #[inline]
     pub fn slot_cost(&self, si: usize, fi: usize, ni: usize) -> f64 {
-        self.cost[self.cell(si, fi, ni)]
+        self.slots.cost[self.cell(si, fi, ni)]
     }
 
     /// Compute-emissions term of one slot (gCO2eq/window).
     #[inline]
     pub fn compute_emissions(&self, si: usize, fi: usize, ni: usize) -> f64 {
-        self.compute_g[self.cell(si, fi, ni)]
+        self.slots.compute_g[self.cell(si, fi, ni)]
+    }
+
+    // --- node-major row slices (the SoA candidate-sweep views) --------
+
+    /// Plan cost of every node candidate of (service, flavour) — one
+    /// contiguous node-major slab row, indexed by node id.
+    #[inline]
+    pub fn cost_row(&self, si: usize, fi: usize) -> &[f64] {
+        &self.slots.cost[self.slots.span(self.row(si, fi))]
+    }
+
+    /// Capacity-independent feasibility of every node candidate of
+    /// (service, flavour) — one contiguous node-major slab row.
+    #[inline]
+    pub fn feasible_row(&self, si: usize, fi: usize) -> &[bool] {
+        &self.slots.feasible[self.slots.span(self.row(si, fi))]
+    }
+
+    /// Compute emissions of every node candidate of (service, flavour)
+    /// — one contiguous node-major slab row.
+    #[inline]
+    pub fn compute_emissions_row(&self, si: usize, fi: usize) -> &[f64] {
+        &self.slots.compute_g[self.slots.span(self.row(si, fi))]
     }
 
     /// Enriched carbon intensity of one node.
@@ -287,7 +355,7 @@ impl<'p, 'a> CompiledProblem<'p, 'a> {
         ni: usize,
         capacity: &CapacityState,
     ) -> bool {
-        if !self.feasible[self.cell(si, fi, ni)] {
+        if !self.slots.feasible[self.cell(si, fi, ni)] {
             return false;
         }
         let (cpu, ram, storage) = self.requirements(si, fi);
@@ -314,11 +382,16 @@ impl<'p, 'a> CompiledProblem<'p, 'a> {
         self.constraints.total_penalty(assignment)
     }
 
-    /// Emissions of one resolved link under an assignment (0 when an
-    /// endpoint is dropped, co-located, or unprofiled).
-    pub fn link_emissions(&self, link: &CompiledLink, assignment: &[Option<(usize, usize)>]) -> f64 {
+    /// The one link-pricing implementation: endpoints resolved through
+    /// `slot_of` so the physical-assignment and slot-override entry
+    /// points cannot diverge.
+    #[inline]
+    fn link_emissions_with<F>(&self, link: &CompiledLink, slot_of: F) -> f64
+    where
+        F: Fn(usize) -> Option<(usize, usize)>,
+    {
         let (Some((fi, ni)), Some((_, nz))) =
-            (assignment[link.from as usize], assignment[link.to as usize])
+            (slot_of(link.from as usize), slot_of(link.to as usize))
         else {
             return 0.0;
         };
@@ -334,6 +407,12 @@ impl<'p, 'a> CompiledProblem<'p, 'a> {
         }
     }
 
+    /// Emissions of one resolved link under an assignment (0 when an
+    /// endpoint is dropped, co-located, or unprofiled).
+    pub fn link_emissions(&self, link: &CompiledLink, assignment: &[Option<(usize, usize)>]) -> f64 {
+        self.link_emissions_with(link, |s| assignment[s])
+    }
+
     /// Inter-node comm emissions of the links incident to `si`, counted
     /// in full so single-slot deltas cancel other services' terms
     /// exactly. O(incident links) via the CSR adjacency.
@@ -344,6 +423,26 @@ impl<'p, 'a> CompiledProblem<'p, 'a> {
     ) -> f64 {
         self.links_of(si)
             .map(|link| self.link_emissions(link, assignment))
+            .sum()
+    }
+
+    /// [`Self::comm_emissions_touching`] with service `si`'s slot read
+    /// as `slot` instead of `assignment[si]` — the shared-read candidate
+    /// pricing primitive. Batch scorers price a hypothetical slot
+    /// without writing to the assignment, so one `&[Option<_>]` slice
+    /// can back any number of scoring threads; by construction it
+    /// returns exactly what [`Self::comm_emissions_touching`] would
+    /// after physically writing `assignment[si] = slot` (self-loops
+    /// included, since both endpoints resolve through the override).
+    pub fn comm_emissions_touching_at(
+        &self,
+        si: usize,
+        assignment: &[Option<(usize, usize)>],
+        slot: Option<(usize, usize)>,
+    ) -> f64 {
+        let slot_of = |s: usize| if s == si { slot } else { assignment[s] };
+        self.links_of(si)
+            .map(|link| self.link_emissions_with(link, slot_of))
             .sum()
     }
 
@@ -496,6 +595,68 @@ mod tests {
                 .map(|l| compiled.link_emissions(l, &assignment))
                 .sum();
             assert!((via_csr - via_scan).abs() < 1e-15, "service {si}");
+        }
+    }
+
+    #[test]
+    fn slab_rows_are_node_major_views_of_the_scalar_accessors() {
+        let (app, infra, constraints) = random_problem_parts(0x50A);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let compiled = problem.compile();
+        for si in 0..compiled.n_services() {
+            for fi in 0..compiled.flavours(si) {
+                let cost = compiled.cost_row(si, fi);
+                let feasible = compiled.feasible_row(si, fi);
+                let compute = compiled.compute_emissions_row(si, fi);
+                assert_eq!(cost.len(), compiled.n_nodes());
+                assert_eq!(feasible.len(), compiled.n_nodes());
+                assert_eq!(compute.len(), compiled.n_nodes());
+                for ni in 0..compiled.n_nodes() {
+                    // bit-exact: the slices are views of the same slab
+                    // cells the scalar accessors read
+                    assert_eq!(cost[ni], compiled.slot_cost(si, fi, ni));
+                    assert_eq!(compute[ni], compiled.compute_emissions(si, fi, ni));
+                    assert_eq!(feasible[ni], compiled.slots.feasible[compiled.cell(si, fi, ni)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slot_override_comm_pricing_matches_physical_mutation() {
+        let (app, infra, _) = random_problem_parts(0x0A7);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let compiled = problem.compile();
+        let mut rng = Rng::new(0x5107);
+        for _ in 0..40 {
+            let mut assignment: Vec<Option<(usize, usize)>> = app
+                .services
+                .iter()
+                .map(|s| {
+                    rng.chance(0.8)
+                        .then(|| (rng.below(s.flavours.len()), rng.below(infra.nodes.len())))
+                })
+                .collect();
+            let si = rng.below(app.services.len());
+            let slot = rng
+                .chance(0.8)
+                .then(|| (rng.below(app.services[si].flavours.len()), rng.below(infra.nodes.len())));
+            let via_override = compiled.comm_emissions_touching_at(si, &assignment, slot);
+            let original = assignment[si];
+            assignment[si] = slot;
+            let via_mutation = compiled.comm_emissions_touching(si, &assignment);
+            assignment[si] = original;
+            assert_eq!(via_override, via_mutation, "service {si}");
         }
     }
 

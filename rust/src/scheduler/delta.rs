@@ -90,7 +90,7 @@ pub struct ScoreDelta {
 
 /// Objective terms local to one service's slot (raw units).
 #[derive(Debug, Clone, Copy, Default)]
-struct Parts {
+pub(crate) struct Parts {
     cost: f64,
     penalty: f64,
     dropped: f64,
@@ -99,7 +99,7 @@ struct Parts {
 }
 
 impl Parts {
-    fn minus(self, o: Parts) -> Parts {
+    pub(crate) fn minus(self, o: Parts) -> Parts {
         Parts {
             cost: self.cost - o.cost,
             penalty: self.penalty - o.penalty,
@@ -135,12 +135,31 @@ fn local_parts(
     si: usize,
     assignment: &[Option<(usize, usize)>],
 ) -> Parts {
-    let penalty = compiled.constraints().penalty_touching(si, assignment);
-    match assignment[si] {
+    local_parts_at(compiled, si, assignment, assignment[si])
+}
+
+/// [`local_parts`] with service `si`'s slot read as `slot` instead of
+/// `assignment[si]`: prices a hypothetical slot *without writing to the
+/// assignment*, so a shared `&[Option<_>]` can back any number of
+/// concurrent candidate evaluations (the `parscore` batch-scoring
+/// substrate). The override is threaded through every read — penalty
+/// rows (both affinity endpoints) and comm links — so this returns
+/// bit-exactly what [`local_parts`] would after physically writing
+/// `assignment[si] = slot`.
+pub(crate) fn local_parts_at(
+    compiled: &CompiledProblem,
+    si: usize,
+    assignment: &[Option<(usize, usize)>],
+    slot: Option<(usize, usize)>,
+) -> Parts {
+    let penalty = compiled
+        .constraints()
+        .penalty_touching_at(si, assignment, slot);
+    match slot {
         Some((fi, ni)) => {
             let emissions = if compiled.problem().objective.emissions_weight != 0.0 {
                 compiled.compute_emissions(si, fi, ni)
-                    + compiled.comm_emissions_touching(si, assignment)
+                    + compiled.comm_emissions_touching_at(si, assignment, slot)
             } else {
                 0.0
             };
@@ -171,7 +190,7 @@ pub(crate) fn local_objective(
     weighted(compiled.problem(), local_parts(compiled, si, assignment))
 }
 
-fn weighted(problem: &Problem, p: Parts) -> f64 {
+pub(crate) fn weighted(problem: &Problem, p: Parts) -> f64 {
     let o = &problem.objective;
     o.cost_weight * p.cost
         + o.soft_weight * p.penalty
@@ -232,6 +251,9 @@ pub struct ScoreState<'p, 'a> {
     capacity: Option<CapacityState>,
     value: f64,
     log: Vec<Undo>,
+    /// Scoring threads for [`ScoreState::best_reassign`]'s candidate
+    /// sweep (see `scheduler::parscore`); 1 = sequential.
+    threads: usize,
 }
 
 impl<'p, 'a> ScoreState<'p, 'a> {
@@ -256,7 +278,30 @@ impl<'p, 'a> ScoreState<'p, 'a> {
             capacity: Some(capacity),
             value,
             log: Vec::new(),
+            threads: 1,
         }
+    }
+
+    /// Set the number of scoring threads used by
+    /// [`ScoreState::best_reassign`]'s candidate sweep (builder form).
+    /// `1` (the default) is the plain sequential scan; any other value
+    /// routes large sweeps through the `parscore` scoped-thread engine,
+    /// whose deterministic reduction makes the result **bit-identical**
+    /// to the sequential scan — thread count is a throughput knob, never
+    /// a behaviour knob. Values are clamped to at least 1.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.set_threads(threads);
+        self
+    }
+
+    /// In-place form of [`ScoreState::with_threads`].
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// The configured scoring thread count (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Scoring-only state: moves are priced but **no** capacity or
@@ -273,6 +318,7 @@ impl<'p, 'a> ScoreState<'p, 'a> {
             capacity: None,
             value,
             log: Vec::new(),
+            threads: 1,
         }
     }
 
@@ -414,39 +460,33 @@ impl<'p, 'a> ScoreState<'p, 'a> {
     }
 
     /// The best reassignment of `si` over all (flavour, node) pairs:
-    /// minimal delta, earliest candidate on ties (the tie-break every
-    /// pre-refactor scan used). `None` when no candidate is feasible.
+    /// minimal delta, earliest candidate in (flavour, node) order on
+    /// ties (the tie-break every pre-refactor scan used). `None` when no
+    /// candidate is feasible.
     ///
     /// This is the inner loop of every construction/repair/rebuild pass,
     /// so it prices candidates directly: the (invariant) "before" local
     /// terms are computed once, `si`'s own reservation is freed once for
-    /// the whole scan, and no undo-log traffic is generated.
+    /// the whole scan, and no undo-log traffic is generated. Candidates
+    /// are priced read-only through the slot-override pricers, which is
+    /// what lets `scheduler::parscore` fan the sweep out over
+    /// [`ScoreState::with_threads`] scoring threads with a bit-identical
+    /// result.
     pub fn best_reassign(&mut self, si: usize) -> Option<(usize, usize, ScoreDelta)> {
-        let flavours = self.compiled.flavours(si);
-        let nodes = self.compiled.n_nodes();
         let before = local_parts(self.compiled, si, &self.assignment);
         let original = self.assignment[si];
         // a service may always trade its current slot for another
         if let Some(o) = original {
             self.release(si, o);
         }
-        let mut best: Option<(usize, usize, Parts, f64)> = None;
-        for fi in 0..flavours {
-            for ni in 0..nodes {
-                if let Some(cap) = &self.capacity {
-                    if !self.compiled.placement_ok(si, fi, ni, cap) {
-                        continue;
-                    }
-                }
-                self.assignment[si] = Some((fi, ni));
-                let d = local_parts(self.compiled, si, &self.assignment).minus(before);
-                let total = weighted(self.compiled.problem(), d);
-                if best.as_ref().map(|&(_, _, _, b)| total < b).unwrap_or(true) {
-                    best = Some((fi, ni, d, total));
-                }
-            }
-        }
-        self.assignment[si] = original;
+        let best = super::parscore::best_candidate(
+            self.compiled,
+            &self.assignment,
+            self.capacity.as_ref(),
+            si,
+            before,
+            self.threads,
+        );
         if let Some(o) = original {
             self.occupy(si, o);
         }

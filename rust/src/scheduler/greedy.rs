@@ -23,11 +23,17 @@ use crate::{Error, Result};
 pub struct GreedyScheduler {
     /// Maximum local-search rounds (each round scans all services).
     pub max_rounds: usize,
+    /// Scoring threads for the candidate sweeps (1 = sequential; any
+    /// value is bit-identical — see `scheduler::parscore`).
+    pub threads: usize,
 }
 
 impl Default for GreedyScheduler {
     fn default() -> Self {
-        GreedyScheduler { max_rounds: 20 }
+        GreedyScheduler {
+            max_rounds: 20,
+            threads: 1,
+        }
     }
 }
 
@@ -38,7 +44,7 @@ impl Scheduler for GreedyScheduler {
 
     fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
         let compiled = problem.compile();
-        let state = construct(&compiled, self.max_rounds)?;
+        let state = construct(&compiled, self.max_rounds, self.threads)?;
         Ok(problem.to_plan(state.assignment()))
     }
 }
@@ -46,10 +52,12 @@ impl Scheduler for GreedyScheduler {
 /// Greedy construction + first-improvement local search over a compiled
 /// core, returning the resulting [`ScoreState`]. Shared by
 /// [`GreedyScheduler`] and the local-search solver ladder (which seeds
-/// annealing/LNS from this state without a plan round-trip).
+/// annealing/LNS from this state without a plan round-trip). `threads`
+/// feeds the candidate-sweep engine (bit-identical at any value).
 pub(crate) fn construct<'p, 'a>(
     compiled: &'p CompiledProblem<'p, 'a>,
     max_rounds: usize,
+    threads: usize,
 ) -> Result<ScoreState<'p, 'a>> {
     let problem = compiled.problem();
     let n_services = problem.app.services.len();
@@ -57,7 +65,7 @@ pub(crate) fn construct<'p, 'a>(
         services: n_services,
         nodes: problem.infra.nodes.len(),
     });
-    let mut state = ScoreState::new(compiled, vec![None; n_services]);
+    let mut state = ScoreState::new(compiled, vec![None; n_services]).with_threads(threads);
 
     // --- construction ------------------------------------------------
     let mut order: Vec<usize> = (0..n_services).collect();

@@ -12,21 +12,27 @@
 //!   carbon-hot zone, a constraint-violating subset or a random subset,
 //!   rebuild greedily on move deltas, keep the round only if the cached
 //!   objective improved (monotone by construction).
-//! * [`PortfolioScheduler`] — greedy construction → annealing → LNS,
-//!   keeping the best plan; with exact branch-and-bound delegation on
-//!   tiny instances, so small-instance plans stay optimal.
+//! * [`PortfolioScheduler`] — greedy construction, then a deterministic
+//!   *seed race*: N derived seeds each run the annealing → LNS ladder
+//!   from the same greedy state (on scoped threads when `threads > 1`),
+//!   and the best objective wins with index-ordered tie-breaks — the
+//!   winner depends only on the seed set, never on thread scheduling.
+//!   Exact branch-and-bound delegation on tiny instances keeps
+//!   small-instance plans optimal.
 //!
 //! Budgets are iteration-based (deterministic, bit-reproducible per
-//! seed); an optional wall-clock cap (`max_millis`) exists for
-//! latency-bound production use and is documented as machine-dependent.
-//!
-//! For latency-bound serving, every layer also takes an **absolute
-//! deadline** ([`AnnealConfig::deadline`], [`LnsConfig::deadline`],
-//! threaded from the schedulers' `deadline` budget): annealing breaks
-//! out of its proposal loop at the deadline, and LNS switches from a
-//! fixed round count to *rounds until deadline* (anytime mode). A
-//! `None` deadline preserves the iteration-budgeted behaviour exactly,
-//! which is what the localsearch property tests pin.
+//! seed). For latency-bound serving, every layer also takes an
+//! **absolute deadline** ([`AnnealConfig::deadline`],
+//! [`LnsConfig::deadline`], threaded from the schedulers' `deadline`
+//! budget): annealing breaks out of its proposal loop at the deadline,
+//! and LNS switches from a fixed round count to *rounds until deadline*
+//! (anytime mode). A `None` deadline preserves the iteration-budgeted
+//! behaviour exactly, which is what the localsearch property tests pin.
+//! The pre-deadline relative wall-clock cap survives as the
+//! [`AnnealConfig::with_max_millis`] / [`LnsConfig::with_max_millis`]
+//! constructors, which simply derive a deadline — one mechanism, two
+//! spellings. Deadline-bound outcomes are machine-dependent; leave both
+//! unset for reproducible runs.
 
 use super::compiled::CompiledProblem;
 use super::delta::{Move, ScoreState};
@@ -78,13 +84,10 @@ pub struct AnnealConfig {
     pub init_temp: f64,
     /// End temperature of the geometric schedule.
     pub final_temp: f64,
-    /// Wall-clock cap in ms (0 = none). Hitting it makes the outcome
-    /// machine-dependent; leave at 0 for reproducible runs.
-    pub max_millis: u64,
     /// Absolute wall-clock deadline: the proposal loop exits once it
-    /// passes (anytime behaviour, checked every 256 iterations like
-    /// [`Self::max_millis`]). `None` keeps the run purely
-    /// iteration-budgeted and bit-reproducible per seed.
+    /// passes (anytime behaviour, checked every 256 iterations). `None`
+    /// keeps the run purely iteration-budgeted and bit-reproducible per
+    /// seed; a relative cap is spelled [`Self::with_max_millis`].
     pub deadline: Option<Instant>,
     /// Restrict proposals to these services (`None` = all). The
     /// incremental re-planner passes its dirty set so clean-zone
@@ -99,10 +102,23 @@ impl Default for AnnealConfig {
             iterations: 20_000,
             init_temp: 2.0,
             final_temp: 1e-3,
-            max_millis: 0,
             deadline: None,
             services: None,
         }
+    }
+}
+
+impl AnnealConfig {
+    /// The pre-deadline wall-clock cap, unified onto [`Self::deadline`]:
+    /// `millis > 0` arms `deadline = now + millis` (so the cap and an
+    /// explicit deadline are one mechanism, not two racing checks);
+    /// `millis == 0` is the historical "no cap" spelling and leaves the
+    /// deadline untouched.
+    pub fn with_max_millis(mut self, millis: u64) -> Self {
+        if millis > 0 {
+            self.deadline = Some(Instant::now() + Duration::from_millis(millis));
+        }
+        self
     }
 }
 
@@ -139,19 +155,13 @@ pub fn anneal(state: &mut ScoreState, cfg: &AnnealConfig) -> ImproverStats {
     // the undo log only grows across accepted moves (rejections net out),
     // so a log mark uniquely identifies the best-seen state
     let mut best_mark = state.mark();
-    let clock = Instant::now();
     let steps = cfg.iterations.max(2);
     let ratio = (cfg.final_temp / cfg.init_temp).max(1e-12);
     let mut undone = 0usize;
 
     for k in 0..steps {
-        if k % 256 == 0 {
-            if cfg.max_millis > 0 && clock.elapsed().as_millis() as u64 > cfg.max_millis {
-                break;
-            }
-            if cfg.deadline.is_some_and(|d| Instant::now() >= d) {
-                break;
-            }
+        if k % 256 == 0 && cfg.deadline.is_some_and(|d| Instant::now() >= d) {
+            break;
         }
         let temp = cfg.init_temp * ratio.powf(k as f64 / (steps - 1) as f64);
         if sample_metrics && k % 1024 == 0 {
@@ -214,12 +224,11 @@ pub struct LnsConfig {
     pub destroy_fraction: f64,
     /// Hard cap on the destroy-set size.
     pub max_destroy: usize,
-    /// Wall-clock cap in ms (0 = none; see [`AnnealConfig::max_millis`]).
-    pub max_millis: u64,
     /// Absolute wall-clock deadline. With `Some`, the pass runs in
     /// anytime mode: rounds continue **past** [`Self::rounds`] until the
     /// deadline passes (bounded by [`LNS_DEADLINE_ROUND_CAP`]), checked
-    /// at every round boundary. `None` keeps the fixed round count.
+    /// at every round boundary. `None` keeps the fixed round count; a
+    /// relative cap is spelled [`Self::with_max_millis`].
     pub deadline: Option<Instant>,
 }
 
@@ -230,9 +239,22 @@ impl Default for LnsConfig {
             rounds: 12,
             destroy_fraction: 0.2,
             max_destroy: 64,
-            max_millis: 0,
             deadline: None,
         }
+    }
+}
+
+impl LnsConfig {
+    /// The pre-deadline wall-clock cap, unified onto [`Self::deadline`]
+    /// (see [`AnnealConfig::with_max_millis`]). Note the unified
+    /// semantics: a derived deadline arms anytime mode, so rounds may
+    /// continue past [`Self::rounds`] until the cap — the cap bounds
+    /// wall time either way.
+    pub fn with_max_millis(mut self, millis: u64) -> Self {
+        if millis > 0 {
+            self.deadline = Some(Instant::now() + Duration::from_millis(millis));
+        }
+        self
     }
 }
 
@@ -256,7 +278,6 @@ pub fn large_neighbourhood(state: &mut ScoreState, cfg: &LnsConfig) -> ImproverS
     let mut span_guard = crate::span!("lns", { rounds: cfg.rounds });
     let sample_metrics = metrics::enabled();
     let mut rng = Rng::new(cfg.seed);
-    let clock = Instant::now();
 
     // A deadline switches the pass to anytime mode: the fixed round
     // count becomes a floor and rounds continue until the deadline.
@@ -265,9 +286,6 @@ pub fn large_neighbourhood(state: &mut ScoreState, cfg: &LnsConfig) -> ImproverS
         None => cfg.rounds,
     };
     for round in 0..max_rounds {
-        if cfg.max_millis > 0 && clock.elapsed().as_millis() as u64 > cfg.max_millis {
-            break;
-        }
         if cfg.deadline.is_some_and(|d| Instant::now() >= d) {
             break;
         }
@@ -471,12 +489,14 @@ fn exact_instance(problem: &Problem, services: usize, nodes: usize) -> bool {
 /// Greedy seed state (shared solver preamble): the exact construction
 /// + local-search pass [`greedy::GreedyScheduler`] runs, kept as a
 /// [`ScoreState`] so the improvers continue on the same compiled core
-/// without a plan round-trip.
+/// without a plan round-trip. `threads` feeds the candidate-sweep
+/// engine (bit-identical at any value).
 fn seeded_state<'p, 'a>(
     compiled: &'p CompiledProblem<'p, 'a>,
     max_rounds: usize,
+    threads: usize,
 ) -> Result<ScoreState<'p, 'a>> {
-    greedy::construct(compiled, max_rounds)
+    greedy::construct(compiled, max_rounds, threads)
 }
 
 /// Greedy + simulated annealing.
@@ -495,6 +515,9 @@ pub struct AnnealScheduler {
     /// Per-solve wall-clock budget: the annealing pass stops at
     /// `now + deadline` (anytime). `None` = iteration-budgeted.
     pub deadline: Option<Duration>,
+    /// Scoring threads for the greedy seed's candidate sweeps (1 =
+    /// sequential; any value is bit-identical — `scheduler::parscore`).
+    pub threads: usize,
 }
 
 impl AnnealScheduler {
@@ -507,6 +530,7 @@ impl AnnealScheduler {
             exact_services: 8,
             exact_nodes: 6,
             deadline: None,
+            threads: 1,
         }
     }
 }
@@ -531,7 +555,7 @@ impl Scheduler for AnnealScheduler {
             return BranchAndBoundScheduler::default().schedule(problem);
         }
         let compiled = problem.compile();
-        let mut state = seeded_state(&compiled, self.greedy_rounds)?;
+        let mut state = seeded_state(&compiled, self.greedy_rounds, self.threads)?;
         anneal(
             &mut state,
             &AnnealConfig {
@@ -562,6 +586,9 @@ pub struct LnsScheduler {
     /// Per-solve wall-clock budget: rounds run until `now + deadline`
     /// instead of the fixed count (anytime). `None` = round-budgeted.
     pub deadline: Option<Duration>,
+    /// Scoring threads for the greedy seed and the LNS rebuild sweeps
+    /// (1 = sequential; any value is bit-identical).
+    pub threads: usize,
 }
 
 impl LnsScheduler {
@@ -574,6 +601,7 @@ impl LnsScheduler {
             exact_services: 8,
             exact_nodes: 6,
             deadline: None,
+            threads: 1,
         }
     }
 }
@@ -598,7 +626,7 @@ impl Scheduler for LnsScheduler {
             return BranchAndBoundScheduler::default().schedule(problem);
         }
         let compiled = problem.compile();
-        let mut state = seeded_state(&compiled, self.greedy_rounds)?;
+        let mut state = seeded_state(&compiled, self.greedy_rounds, self.threads)?;
         large_neighbourhood(
             &mut state,
             &LnsConfig {
@@ -613,10 +641,17 @@ impl Scheduler for LnsScheduler {
 }
 
 /// The production solver ladder in one scheduler: exact on tiny
-/// instances, otherwise greedy construction → simulated annealing →
-/// large-neighbourhood search, keeping the best plan found. Both
-/// improvers are monotone on their entry state, so the portfolio is
-/// never worse than greedy (property-tested).
+/// instances, otherwise a deterministic **seed race** — one greedy
+/// construction, then [`Self::racers`] derived seeds each run the
+/// annealing → LNS ladder from that same greedy state, and the best
+/// final objective wins (earliest racer index on ties, so the winner is
+/// a pure function of the seed set). With [`Self::threads`] > 1 the
+/// racers run on `std::thread::scope` workers; every racer's ladder is
+/// bit-reproducible per its derived seed, so parallel and sequential
+/// execution pick the identical winner. Racer 0 derives today's exact
+/// anneal/LNS seed streams, so `racers == 1` is the pre-race ladder
+/// unchanged. Both improvers are monotone on their entry state, so the
+/// portfolio is never worse than greedy (property-tested).
 ///
 /// # Example
 /// ```no_run
@@ -651,11 +686,20 @@ pub struct PortfolioScheduler {
     /// See [`Self::exact_services`].
     pub exact_nodes: usize,
     /// Per-solve wall-clock budget. The portfolio threads one absolute
-    /// deadline (`now + deadline` at entry) through both improvers:
-    /// annealing runs anytime against it, then LNS runs *rounds until
-    /// deadline* on whatever budget remains. `None` keeps the ladder
-    /// purely iteration-budgeted (bit-reproducible per seed).
+    /// deadline (`now + deadline` at entry) through both improvers of
+    /// every racer: annealing runs anytime against the front 60%, then
+    /// LNS runs *rounds until deadline* on whatever remains. `None`
+    /// keeps the ladder purely iteration-budgeted (bit-reproducible per
+    /// seed).
     pub deadline: Option<Duration>,
+    /// Seed-race width: how many derived seeds run the annealing → LNS
+    /// ladder (each from the same greedy construction). Best final
+    /// objective wins, earliest racer on ties. 1 = the plain ladder.
+    pub racers: usize,
+    /// Scoped threads for the race (and for the greedy seed's candidate
+    /// sweeps when not racing). Purely a throughput knob: any value
+    /// picks the identical winner.
+    pub threads: usize,
 }
 
 impl PortfolioScheduler {
@@ -669,6 +713,8 @@ impl PortfolioScheduler {
             exact_services: 8,
             exact_nodes: 6,
             deadline: None,
+            racers: 4,
+            threads: 1,
         }
     }
 
@@ -676,6 +722,14 @@ impl PortfolioScheduler {
     pub fn with_deadline(mut self, budget: Duration) -> Self {
         self.deadline = Some(budget);
         self
+    }
+
+    /// The anneal seed of racer `k`. Racer 0 is `self.seed` itself (the
+    /// pre-race ladder's stream); later racers decorrelate through a
+    /// different odd multiplier than the LNS stream derivation, so no
+    /// racer's LNS seed collides with another racer's anneal seed.
+    fn racer_seed(&self, k: usize) -> u64 {
+        self.seed ^ (k as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
     }
 }
 
@@ -691,39 +745,84 @@ impl Scheduler for PortfolioScheduler {
     }
 
     fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
-        let _span = crate::span!("solver.portfolio", {
+        let racers = self.racers.max(1);
+        let threads = self.threads.max(1);
+        let mut span = crate::span!("solver.portfolio", {
             services: problem.app.services.len(),
             nodes: problem.infra.nodes.len(),
+            racers: racers,
         });
         if exact_instance(problem, self.exact_services, self.exact_nodes) {
             return BranchAndBoundScheduler::default().schedule(problem);
         }
         let compiled = problem.compile();
-        let mut state = seeded_state(&compiled, self.greedy_rounds)?;
-        // one absolute deadline for the whole ladder: annealing gets the
-        // front 60% of the budget, LNS everything that remains
+        // one greedy construction: every racer starts from the same seed
+        // assignment, so each racer's ladder is monotone vs greedy and
+        // the race winner is too
+        let seed_assignment =
+            seeded_state(&compiled, self.greedy_rounds, threads)?.into_assignment();
+        // one absolute deadline for every racer's whole ladder:
+        // annealing gets the front 60% of the budget, LNS the remainder
         let entry = Instant::now();
         let deadline = self.deadline.map(|d| entry + d);
         let anneal_deadline = self.deadline.map(|d| entry + d.mul_f64(0.6));
-        anneal(
-            &mut state,
-            &AnnealConfig {
-                seed: self.seed,
-                iterations: self.anneal_iterations,
-                deadline: anneal_deadline,
-                ..AnnealConfig::default()
-            },
-        );
-        large_neighbourhood(
-            &mut state,
-            &LnsConfig {
-                seed: self.seed ^ 0x9E37_79B9_7F4A_7C15,
-                rounds: self.lns_rounds,
-                deadline,
-                ..LnsConfig::default()
-            },
-        );
-        Ok(problem.to_plan(state.assignment()))
+        // when racing, the racers are the parallel dimension — their
+        // inner candidate sweeps stay sequential (no oversubscription)
+        let sweep_threads = if racers > 1 { 1 } else { threads };
+        let run_racer = |k: usize| -> (f64, Vec<Option<(usize, usize)>>) {
+            let racer_seed = self.racer_seed(k);
+            let mut state = ScoreState::new(&compiled, seed_assignment.clone())
+                .with_threads(sweep_threads);
+            anneal(
+                &mut state,
+                &AnnealConfig {
+                    seed: racer_seed,
+                    iterations: self.anneal_iterations,
+                    deadline: anneal_deadline,
+                    ..AnnealConfig::default()
+                },
+            );
+            large_neighbourhood(
+                &mut state,
+                &LnsConfig {
+                    seed: racer_seed ^ 0x9E37_79B9_7F4A_7C15,
+                    rounds: self.lns_rounds,
+                    deadline,
+                    ..LnsConfig::default()
+                },
+            );
+            (state.objective(), state.into_assignment())
+        };
+        let results: Vec<(f64, Vec<Option<(usize, usize)>>)> = if threads > 1 && racers > 1 {
+            // the shard.rs scoped-thread idiom; a racer panic propagates
+            // (silently dropping a lane would silently change the winner)
+            let run_racer = &run_racer;
+            let mut out = Vec::new();
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..racers)
+                    .map(|k| scope.spawn(move || run_racer(k)))
+                    .collect();
+                out = handles
+                    .into_iter()
+                    .map(|h| h.join().expect("portfolio racer thread panicked"))
+                    .collect();
+            });
+            out
+        } else {
+            (0..racers).map(run_racer).collect()
+        };
+        // best-by-(score, racer): strict `<` in racer order, so the
+        // winner is a pure function of the seed set — never of thread
+        // scheduling
+        let mut winner = 0;
+        for k in 1..racers {
+            if results[k].0 < results[winner].0 {
+                winner = k;
+            }
+        }
+        span.attr("winner", winner);
+        span.attr("objective", results[winner].0);
+        Ok(problem.to_plan(&results[winner].1))
     }
 }
 
@@ -877,6 +976,86 @@ mod tests {
         crate::scheduler::check_feasible(&problem, &plan).unwrap();
         let v = problem.objective_value(&problem.to_assignment(&plan).unwrap());
         assert!(v <= g + 1e-9, "deadline portfolio {v} worse than greedy {g}");
+    }
+
+    /// Regression for the max_millis → deadline unification: the thin
+    /// constructor must bound wall time (it is nothing but a derived
+    /// deadline now), and the historical `0 = no cap` spelling must
+    /// remain a no-op that keeps runs iteration-budgeted.
+    #[test]
+    fn with_max_millis_is_a_derived_deadline() {
+        // 0 keeps the default (no deadline) — the reproducible path
+        assert!(AnnealConfig::default().with_max_millis(0).deadline.is_none());
+        assert!(LnsConfig::default().with_max_millis(0).deadline.is_none());
+        // >0 arms a deadline...
+        assert!(AnnealConfig::default().with_max_millis(5).deadline.is_some());
+        assert!(LnsConfig::default().with_max_millis(5).deadline.is_some());
+        // ...and an explicit deadline survives the 0 spelling
+        let keep = Instant::now() + Duration::from_millis(50);
+        let cfg = AnnealConfig {
+            deadline: Some(keep),
+            ..AnnealConfig::default()
+        };
+        assert_eq!(cfg.with_max_millis(0).deadline, Some(keep));
+
+        // the cap actually bounds an oversized run, monotone as ever
+        let (app, infra, constraints) = fleet_problem(0xCA9);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let plan = GreedyScheduler::default().schedule(&problem).unwrap();
+        let compiled = problem.compile();
+        let mut state = ScoreState::new(&compiled, problem.to_assignment(&plan).unwrap());
+        let start = state.objective();
+        let budget = 40u64;
+        let clock = Instant::now();
+        let stats = anneal(
+            &mut state,
+            &AnnealConfig {
+                seed: 3,
+                iterations: 50_000_000, // far beyond the wall budget
+                ..AnnealConfig::default()
+            }
+            .with_max_millis(budget),
+        );
+        assert!(
+            clock.elapsed() < Duration::from_millis(budget + 2_000),
+            "capped anneal ran {:?}",
+            clock.elapsed()
+        );
+        assert!(stats.end <= start + 1e-9);
+    }
+
+    #[test]
+    fn seed_race_is_deterministic_and_beats_or_matches_its_racers() {
+        let (app, infra, constraints) = fleet_problem(0x9ACE);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        // quick budgets: the identity under test is budget-independent
+        let quick = |racers: usize, threads: usize| PortfolioScheduler {
+            anneal_iterations: 2_000,
+            lns_rounds: 4,
+            racers,
+            threads,
+            ..PortfolioScheduler::seeded(21)
+        };
+        let race = quick(4, 1).schedule(&problem).unwrap();
+        // deterministic given the seed set
+        assert_eq!(race, quick(4, 1).schedule(&problem).unwrap());
+        // threads are a throughput knob only: identical winner
+        assert_eq!(race, quick(4, 4).schedule(&problem).unwrap());
+        // the race is at least as good as its own racer-0 ladder
+        let single = quick(1, 1).schedule(&problem).unwrap();
+        let race_v = problem.objective_value(&problem.to_assignment(&race).unwrap());
+        let single_v = problem.objective_value(&problem.to_assignment(&single).unwrap());
+        assert!(race_v <= single_v + 1e-9, "race {race_v} worse than racer 0 {single_v}");
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub mod delta;
 pub mod eval;
 pub mod greedy;
 pub mod localsearch;
+mod parscore;
 pub mod problem;
 pub mod solver;
 pub mod temporal;
@@ -64,12 +65,41 @@ pub const SOLVER_NAMES: &[&str] = &[
 /// `portfolio`, `random`); deterministic solvers ignore it. Returns
 /// `None` for unknown names (see [`SOLVER_NAMES`]).
 pub fn solver_by_name(name: &str, seed: u64) -> Option<Box<dyn Scheduler>> {
+    solver_by_name_threads(name, seed, 1)
+}
+
+/// [`solver_by_name`] with an explicit scoring-thread count for the
+/// solvers that batch-score candidates through the compiled core
+/// (`greedy`, `anneal`, `lns`) and race seeds on scoped threads
+/// (`portfolio`); the remaining solvers have no batch-scoring loop and
+/// ignore it. Thread count is a throughput knob only: `threads == 1` is
+/// the plain sequential path and every other value is bit-identical to
+/// it by the deterministic-reduction contract (see
+/// `docs/performance.md`).
+pub fn solver_by_name_threads(
+    name: &str,
+    seed: u64,
+    threads: usize,
+) -> Option<Box<dyn Scheduler>> {
+    let threads = threads.max(1);
     Some(match name {
-        "greedy" => Box::new(GreedyScheduler::default()),
+        "greedy" => Box::new(GreedyScheduler {
+            threads,
+            ..GreedyScheduler::default()
+        }),
         "exact" => Box::new(BranchAndBoundScheduler::default()),
-        "anneal" => Box::new(AnnealScheduler::seeded(seed)),
-        "lns" => Box::new(LnsScheduler::seeded(seed)),
-        "portfolio" => Box::new(PortfolioScheduler::seeded(seed)),
+        "anneal" => Box::new(AnnealScheduler {
+            threads,
+            ..AnnealScheduler::seeded(seed)
+        }),
+        "lns" => Box::new(LnsScheduler {
+            threads,
+            ..LnsScheduler::seeded(seed)
+        }),
+        "portfolio" => Box::new(PortfolioScheduler {
+            threads,
+            ..PortfolioScheduler::seeded(seed)
+        }),
         "cost-only" => Box::new(CostOnlyScheduler),
         "random" => Box::new(RandomScheduler { seed }),
         "oracle" => Box::new(GreenOracleScheduler),
@@ -86,7 +116,11 @@ mod registry_tests {
         for name in SOLVER_NAMES {
             let solver = solver_by_name(name, 7).unwrap_or_else(|| panic!("unknown {name}"));
             assert!(!solver.name().is_empty());
+            let threaded = solver_by_name_threads(name, 7, 4)
+                .unwrap_or_else(|| panic!("unknown {name} at 4 threads"));
+            assert_eq!(threaded.name(), solver.name());
         }
         assert!(solver_by_name("no-such-solver", 7).is_none());
+        assert!(solver_by_name_threads("no-such-solver", 7, 4).is_none());
     }
 }

@@ -1,0 +1,261 @@
+//! Parallel batch scoring over the compiled core: the candidate-sweep
+//! engine behind [`super::ScoreState::best_reassign`].
+//!
+//! One sweep prices every (flavour, node) candidate of a service against
+//! the node-major SoA slabs of [`CompiledProblem`] — a linear scan of
+//! dense arrays, embarrassingly parallel. This module fans that scan out
+//! over `std::thread::scope` workers (the `continuum/shard.rs` idiom —
+//! no runtime dependencies) while keeping the result **bit-identical**
+//! to the sequential scan:
+//!
+//! * candidates are priced *read-only* through the slot-override pricers
+//!   ([`local_parts_at`] and friends), so one shared `&[Option<_>]`
+//!   assignment slice backs every worker — no cloning, no mutation, no
+//!   ordering hazards;
+//! * chunk boundaries are a pure function of `(candidate count,
+//!   thread count)` — `ceil(total / threads)` candidates per worker —
+//!   never of core availability or scheduling;
+//! * each candidate's `(Parts, total)` is a pure function of the
+//!   candidate given the fixed `before` terms, so *which* thread prices
+//!   it cannot change a bit of it;
+//! * the reduction is first-minimal in global candidate-index order
+//!   (`idx = flavour · n_nodes + node`): strict `<` within a chunk,
+//!   earlier chunk wins cross-chunk ties — exactly the strict-less
+//!   first-wins scan the sequential loop performs.
+//!
+//! Together these make `parallel == sequential` an identity, not an
+//! approximation — property-tested across thread counts 1/2/4/8 on all
+//! four topology presets in `rust/tests/parscore.rs`.
+//!
+//! A worker panic is propagated (not swallowed): silently dropping a
+//! chunk would silently change the winner.
+
+use super::compiled::CompiledProblem;
+use super::delta::{local_parts_at, weighted, Parts};
+use super::problem::CapacityState;
+
+/// Sweeps smaller than this stay sequential even when more threads are
+/// configured: below it, thread spawn/join overhead dwarfs the scan
+/// itself. Correctness never depends on the value — both paths produce
+/// identical bits — so it is purely a throughput threshold.
+const PAR_MIN_CANDIDATES: usize = 256;
+
+/// The best candidate slot for `si`: minimal weighted delta against the
+/// (caller-computed) `before` terms, earliest candidate index on ties.
+/// `capacity` is checked when present (`si`'s own reservation must
+/// already be freed by the caller). Returns `(flavour, node, raw delta
+/// parts, weighted total)`; `None` when no candidate is feasible.
+pub(crate) fn best_candidate(
+    compiled: &CompiledProblem,
+    assignment: &[Option<(usize, usize)>],
+    capacity: Option<&CapacityState>,
+    si: usize,
+    before: Parts,
+    threads: usize,
+) -> Option<(usize, usize, Parts, f64)> {
+    best_candidate_with_min(
+        compiled,
+        assignment,
+        capacity,
+        si,
+        before,
+        threads,
+        PAR_MIN_CANDIDATES,
+    )
+}
+
+/// [`best_candidate`] with an explicit sequential-fallback threshold —
+/// split out so tests can force the parallel path onto small instances.
+fn best_candidate_with_min(
+    compiled: &CompiledProblem,
+    assignment: &[Option<(usize, usize)>],
+    capacity: Option<&CapacityState>,
+    si: usize,
+    before: Parts,
+    threads: usize,
+    min_candidates: usize,
+) -> Option<(usize, usize, Parts, f64)> {
+    let nodes = compiled.n_nodes();
+    let total = compiled.flavours(si) * nodes;
+    if total == 0 {
+        return None;
+    }
+    let threads = threads.max(1).min(total);
+    let best = if threads > 1 && total >= min_candidates {
+        // fixed chunk boundaries: a pure function of (total, threads)
+        let chunk = total.div_ceil(threads);
+        let mut partials: Vec<Option<(usize, Parts, f64)>> = Vec::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|w| {
+                    let lo = w * chunk;
+                    let hi = ((w + 1) * chunk).min(total);
+                    scope.spawn(move || {
+                        scan_range(compiled, assignment, capacity, si, before, nodes, lo, hi)
+                    })
+                })
+                .collect();
+            partials = handles
+                .into_iter()
+                .map(|h| h.join().expect("candidate scoring thread panicked"))
+                .collect();
+        });
+        // chunk-ordered strict-< reduction: chunk winners carry their
+        // global candidate index, and combining them in chunk order
+        // with strict `<` yields the same first-minimal candidate the
+        // one-pass sequential scan finds
+        let mut best: Option<(usize, Parts, f64)> = None;
+        for p in partials.into_iter().flatten() {
+            if best.map(|(_, _, b)| p.2 < b).unwrap_or(true) {
+                best = Some(p);
+            }
+        }
+        best
+    } else {
+        scan_range(compiled, assignment, capacity, si, before, nodes, 0, total)
+    };
+    best.map(|(idx, parts, total)| (idx / nodes, idx % nodes, parts, total))
+}
+
+/// Sequential first-minimal scan over candidate indices `lo..hi`
+/// (`idx = flavour · n_nodes + node` — flavour-major, node
+/// fastest-varying, the node-major slab layout's natural order).
+#[allow(clippy::too_many_arguments)]
+fn scan_range(
+    compiled: &CompiledProblem,
+    assignment: &[Option<(usize, usize)>],
+    capacity: Option<&CapacityState>,
+    si: usize,
+    before: Parts,
+    nodes: usize,
+    lo: usize,
+    hi: usize,
+) -> Option<(usize, Parts, f64)> {
+    let mut best: Option<(usize, Parts, f64)> = None;
+    for idx in lo..hi {
+        let (fi, ni) = (idx / nodes, idx % nodes);
+        if let Some(cap) = capacity {
+            if !compiled.placement_ok(si, fi, ni, cap) {
+                continue;
+            }
+        }
+        let d = local_parts_at(compiled, si, assignment, Some((fi, ni))).minus(before);
+        let total = weighted(compiled.problem(), d);
+        if best.map(|(_, _, b)| total < b).unwrap_or(true) {
+            best = Some((idx, d, total));
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::delta::local_parts_at;
+    use crate::scheduler::problem::{Objective, Problem};
+    use crate::util::Rng;
+
+    fn random_problem_parts(
+        seed: u64,
+    ) -> (
+        crate::model::Application,
+        crate::model::Infrastructure,
+        Vec<crate::constraints::Constraint>,
+    ) {
+        let mut rng = Rng::new(seed);
+        let app = crate::simulate::random_application(&mut rng, 12);
+        let infra = crate::simulate::random_infrastructure(&mut rng, 7);
+        let backend = crate::runtime::NativeBackend;
+        let mut constraints = crate::constraints::ConstraintGenerator::new(&backend)
+            .with_config(crate::constraints::GeneratorConfig {
+                alpha: 0.6,
+                use_prolog: false,
+            })
+            .generate(&app, &infra)
+            .unwrap()
+            .constraints;
+        for (i, c) in constraints.iter_mut().enumerate() {
+            c.weight = 0.1 + 0.05 * (i % 10) as f64;
+        }
+        (app, infra, constraints)
+    }
+
+    /// The determinism identity at its core: with the sequential
+    /// threshold forced to 1, every thread count and chunking must
+    /// return the same candidate with the same Parts and total, bit for
+    /// bit, capacity-gated or unbounded.
+    #[test]
+    fn chunked_reduction_is_bit_identical_to_the_sequential_scan() {
+        let (app, infra, constraints) = random_problem_parts(0x9A55);
+        for emissions_weight in [0.0, 1.0] {
+            let problem = Problem {
+                app: &app,
+                infra: &infra,
+                constraints: &constraints,
+                objective: Objective {
+                    emissions_weight,
+                    ..Objective::default()
+                },
+            };
+            let compiled = problem.compile();
+            let mut rng = Rng::new(0x51CA);
+            for _ in 0..25 {
+                let assignment: Vec<Option<(usize, usize)>> = app
+                    .services
+                    .iter()
+                    .map(|s| {
+                        rng.chance(0.75)
+                            .then(|| (rng.below(s.flavours.len()), rng.below(infra.nodes.len())))
+                    })
+                    .collect();
+                let si = rng.below(app.services.len());
+                let before = local_parts_at(&compiled, si, &assignment, assignment[si]);
+                let sequential =
+                    best_candidate_with_min(&compiled, &assignment, None, si, before, 1, 1);
+                for threads in [2, 3, 4, 8, 64] {
+                    let parallel = best_candidate_with_min(
+                        &compiled,
+                        &assignment,
+                        None,
+                        si,
+                        before,
+                        threads,
+                        1,
+                    );
+                    match (sequential, parallel) {
+                        (None, None) => {}
+                        (Some((sf, sn, sp, st)), Some((pf, pn, pp, pt))) => {
+                            assert_eq!((sf, sn), (pf, pn), "winner at {threads} threads");
+                            assert_eq!(st.to_bits(), pt.to_bits(), "total at {threads} threads");
+                            assert_eq!(
+                                weighted(&problem, sp).to_bits(),
+                                weighted(&problem, pp).to_bits(),
+                                "parts at {threads} threads"
+                            );
+                        }
+                        (s, p) => panic!("sequential {s:?} vs parallel {p:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    /// More workers than candidates must not panic or change the result
+    /// (trailing workers get empty ranges).
+    #[test]
+    fn thread_count_above_candidate_count_is_safe() {
+        let (app, infra, constraints) = random_problem_parts(0x71E);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let compiled = problem.compile();
+        let assignment: Vec<Option<(usize, usize)>> = vec![None; app.services.len()];
+        let before = local_parts_at(&compiled, 0, &assignment, None);
+        let seq = best_candidate_with_min(&compiled, &assignment, None, 0, before, 1, 1);
+        let par = best_candidate_with_min(&compiled, &assignment, None, 0, before, 10_000, 1);
+        assert_eq!(seq.map(|(f, n, _, t)| (f, n, t.to_bits())), par.map(|(f, n, _, t)| (f, n, t.to_bits())));
+    }
+}

@@ -62,6 +62,10 @@ pub struct ServeConfig {
     /// Drop monitoring samples older than this many hours at each tick
     /// (`0` keeps the full history).
     pub retain_hours: f64,
+    /// Scoring/racing threads for each epoch's portfolio solve and the
+    /// incremental re-planner (1 = sequential; any value produces
+    /// byte-identical output — see `scheduler::parscore`).
+    pub threads: usize,
     /// Scheduling objective.
     pub objective: Objective,
 }
@@ -76,27 +80,33 @@ impl Default for ServeConfig {
             seed: 0x5EBF,
             zones: 0,
             retain_hours: 0.0,
+            threads: 1,
             objective: Objective::default(),
         }
     }
 }
 
 /// Deterministic solver iteration budgets derived from the epoch
-/// deadline: `(anneal_iterations, lns_rounds, improve_iterations)`.
+/// deadline: `(anneal_iterations, lns_rounds, improve_iterations,
+/// racers)`.
 ///
 /// `deadline_ms == 0` returns today's fixed defaults. Otherwise budgets
 /// scale linearly with the deadline and clamp to `[floor, default]`, so
 /// a tight budget shrinks the search the same way on every machine —
-/// the wall clock (live mode only) is just the backstop.
-pub fn budgets(deadline_ms: u64) -> (usize, usize, usize) {
+/// the wall clock (live mode only) is just the backstop. `racers` is
+/// the portfolio's seed-race width: tight deadlines keep a single
+/// racer (all iterations go to one trajectory), roomy ones restore the
+/// default four-way race.
+pub fn budgets(deadline_ms: u64) -> (usize, usize, usize, usize) {
     if deadline_ms == 0 {
-        return (20_000, 12, 4_000);
+        return (20_000, 12, 4_000, 4);
     }
     let ms = deadline_ms as usize;
     (
         (ms * 40).clamp(512, 20_000),
         (ms / 16).clamp(2, 12),
         (ms * 10).clamp(256, 4_000),
+        (ms / 64).clamp(1, 4),
     )
 }
 
@@ -205,7 +215,8 @@ impl Daemon {
             sharded.partitioner = ZonePartitioner::with_zones(config.zones);
         }
         let mut replanner = IncrementalReplanner::new(sharded);
-        let (_, _, improve_iterations) = budgets(config.deadline_ms);
+        sharded.threads = config.threads.max(1);
+        let (_, _, improve_iterations, _) = budgets(config.deadline_ms);
         replanner.config.improve_iterations = improve_iterations;
         Daemon {
             app: scenario.app.clone(),
@@ -431,13 +442,15 @@ impl Daemon {
 
         // arm the budgets: iteration scaling always (deterministic),
         // wall-clock deadlines in live mode only
-        let (anneal_iterations, lns_rounds, _) = budgets(self.config.deadline_ms);
+        let (anneal_iterations, lns_rounds, _, racers) = budgets(self.config.deadline_ms);
         let wall = (self.config.live && self.config.deadline_ms > 0)
             .then(|| Duration::from_millis(self.config.deadline_ms));
         self.replanner.config.improve_deadline = wall.map(|d| started + d);
         let mut portfolio = PortfolioScheduler::seeded(self.config.seed);
         portfolio.anneal_iterations = anneal_iterations;
         portfolio.lns_rounds = lns_rounds;
+        portfolio.racers = racers;
+        portfolio.threads = self.config.threads.max(1);
         portfolio.deadline = wall;
 
         let cycle = EpochCycle {
@@ -670,11 +683,11 @@ mod tests {
 
     #[test]
     fn budgets_scale_and_clamp() {
-        assert_eq!(budgets(0), (20_000, 12, 4_000));
-        let (a, l, i) = budgets(1);
-        assert_eq!((a, l, i), (512, 2, 256));
-        let (a, l, i) = budgets(100);
-        assert_eq!((a, l, i), (4_000, 6, 1_000));
-        assert_eq!(budgets(10_000), (20_000, 12, 4_000));
+        assert_eq!(budgets(0), (20_000, 12, 4_000, 4));
+        let (a, l, i, r) = budgets(1);
+        assert_eq!((a, l, i, r), (512, 2, 256, 1));
+        let (a, l, i, r) = budgets(100);
+        assert_eq!((a, l, i, r), (4_000, 6, 1_000, 1));
+        assert_eq!(budgets(10_000), (20_000, 12, 4_000, 4));
     }
 }

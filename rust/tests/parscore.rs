@@ -1,0 +1,216 @@
+//! Determinism contract of the parallel batch-scoring engine
+//! (`scheduler::parscore`) at the public API: candidate sweeps, whole
+//! solver runs and the seed-racing portfolio must be **bit-identical**
+//! across scoring-thread counts 1/2/4/8 on every topology preset —
+//! parallelism is a throughput knob, never a behaviour knob. The CLI
+//! golden at the bottom pins the same identity end to end through
+//! `greengen schedule --threads N`.
+
+use greengen::constraints::{Constraint, ConstraintGenerator, GeneratorConfig};
+use greengen::model::{Application, Infrastructure};
+use greengen::runtime::NativeBackend;
+use greengen::scheduler::{
+    GreedyScheduler, LnsScheduler, Objective, PortfolioScheduler, Problem, Scheduler, ScoreDelta,
+    ScoreState,
+};
+use greengen::simulate;
+use std::process::Command;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Topology fleet with generated-and-weighted constraints. 160 nodes
+/// puts multi-flavour services past the 256-candidate threshold where
+/// `best_reassign` actually fans out, while single-flavour services stay
+/// on the sequential fallback — both paths are exercised in one sweep.
+fn fleet(
+    topo: simulate::Topology,
+    seed: u64,
+) -> (Application, Infrastructure, Vec<Constraint>) {
+    let spec = simulate::TopologySpec::new(topo, 160, 64)
+        .with_zones(4)
+        .with_seed(seed);
+    let (app, infra) = simulate::topology::generate(&spec);
+    let backend = NativeBackend;
+    let mut constraints = ConstraintGenerator::new(&backend)
+        .with_config(GeneratorConfig {
+            alpha: 0.7,
+            use_prolog: false,
+        })
+        .generate(&app, &infra)
+        .unwrap()
+        .constraints;
+    for (i, c) in constraints.iter_mut().enumerate() {
+        c.weight = 0.1 + 0.05 * (i % 10) as f64;
+    }
+    (app, infra, constraints)
+}
+
+fn objective_bits(problem: &Problem, plan: &greengen::model::DeploymentPlan) -> u64 {
+    problem
+        .objective_value(&problem.to_assignment(plan).unwrap())
+        .to_bits()
+}
+
+/// Property: one `best_reassign` sweep per service, repeated at every
+/// thread count, returns the identical `(flavour, node, ScoreDelta)`
+/// triples — on all four topology presets.
+#[test]
+fn best_reassign_is_thread_count_invariant_on_every_preset() {
+    for topo in simulate::Topology::ALL {
+        let (app, infra, constraints) = fleet(topo, 0x9A7_5C0);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        // a capacity-feasible starting assignment via the greedy solver
+        let plan = GreedyScheduler {
+            max_rounds: 3,
+            threads: 1,
+        }
+        .schedule(&problem)
+        .unwrap();
+        let assignment = problem.to_assignment(&plan).unwrap();
+        let compiled = problem.compile();
+        let mut state = ScoreState::new(&compiled, assignment);
+
+        let mut baseline: Option<Vec<Option<(usize, usize, ScoreDelta)>>> = None;
+        for threads in THREAD_COUNTS {
+            state.set_threads(threads);
+            let picks: Vec<Option<(usize, usize, ScoreDelta)>> = (0..app.services.len())
+                .map(|si| state.best_reassign(si))
+                .collect();
+            match &baseline {
+                None => baseline = Some(picks),
+                Some(b) => assert_eq!(
+                    *b, picks,
+                    "{}: sweep winners changed at {threads} threads",
+                    topo.name()
+                ),
+            }
+        }
+    }
+}
+
+/// Property: whole solver runs (greedy construction + local search, and
+/// the LNS destroy-and-rebuild ladder) produce the identical plan and
+/// the identical objective bits at every thread count.
+#[test]
+fn solver_plans_are_thread_count_invariant() {
+    for topo in [
+        simulate::Topology::GeoRegions,
+        simulate::Topology::CloudEdgeHierarchy,
+    ] {
+        let (app, infra, constraints) = fleet(topo, 0xBA7C4);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let reference = GreedyScheduler {
+            max_rounds: 5,
+            threads: 1,
+        }
+        .schedule(&problem)
+        .unwrap();
+        let bits = objective_bits(&problem, &reference);
+        for threads in THREAD_COUNTS {
+            let plan = GreedyScheduler {
+                max_rounds: 5,
+                threads,
+            }
+            .schedule(&problem)
+            .unwrap();
+            assert_eq!(
+                reference,
+                plan,
+                "{}: greedy plan changed at {threads} threads",
+                topo.name()
+            );
+            assert_eq!(bits, objective_bits(&problem, &plan));
+        }
+    }
+
+    // the LNS rebuild routes every candidate through the same engine
+    let (app, infra, constraints) = fleet(simulate::Topology::IotSwarm, 0x175);
+    let problem = Problem {
+        app: &app,
+        infra: &infra,
+        constraints: &constraints,
+        objective: Objective::default(),
+    };
+    let lns = |threads: usize| LnsScheduler {
+        rounds: 4,
+        greedy_rounds: 5,
+        threads,
+        ..LnsScheduler::seeded(11)
+    };
+    let reference = lns(1).schedule(&problem).unwrap();
+    let bits = objective_bits(&problem, &reference);
+    for threads in [2, 8] {
+        let plan = lns(threads).schedule(&problem).unwrap();
+        assert_eq!(reference, plan, "LNS plan changed at {threads} threads");
+        assert_eq!(bits, objective_bits(&problem, &plan));
+    }
+}
+
+/// Property: the seed-racing portfolio picks the identical winner —
+/// same plan, same objective to 0 ulps — whether the racers run
+/// sequentially (threads = 1) or on scoped threads (2/4/8).
+#[test]
+fn portfolio_race_is_thread_count_invariant() {
+    let (app, infra, constraints) = fleet(simulate::Topology::HybridBurst, 0xFACE);
+    let problem = Problem {
+        app: &app,
+        infra: &infra,
+        constraints: &constraints,
+        objective: Objective::default(),
+    };
+    let race = |threads: usize| PortfolioScheduler {
+        racers: 4,
+        threads,
+        anneal_iterations: 4_000,
+        lns_rounds: 6,
+        greedy_rounds: 5,
+        ..PortfolioScheduler::seeded(21)
+    };
+    let reference = race(1).schedule(&problem).unwrap();
+    let bits = objective_bits(&problem, &reference);
+    for threads in [2, 4, 8] {
+        let plan = race(threads).schedule(&problem).unwrap();
+        assert_eq!(
+            reference, plan,
+            "portfolio winner changed at {threads} threads"
+        );
+        assert_eq!(bits, objective_bits(&problem, &plan));
+    }
+}
+
+/// End-to-end golden: `greengen schedule --threads N` is byte-identical
+/// to `--threads 1` for the solvers with batch-scoring loops.
+#[test]
+fn schedule_cli_is_byte_identical_across_thread_counts() {
+    let run = |solver: &str, threads: &str| -> String {
+        let exe = env!("CARGO_BIN_EXE_greengen");
+        let out = Command::new(exe)
+            .args([
+                "schedule", "--scenario", "1", "--solver", solver, "--seed", "5", "--threads",
+                threads,
+            ])
+            .output()
+            .expect("binary runs");
+        assert!(out.status.success(), "{solver} @ {threads} threads failed");
+        String::from_utf8(out.stdout).unwrap()
+    };
+    for solver in ["portfolio", "lns"] {
+        let sequential = run(solver, "1");
+        assert!(sequential.contains("deploy"), "{sequential}");
+        assert_eq!(
+            sequential,
+            run(solver, "4"),
+            "{solver}: --threads 4 changed the CLI output"
+        );
+    }
+}

@@ -1,0 +1,83 @@
+#!/usr/bin/env bash
+# Throughput regression gate over the committed BENCH_*.json baselines.
+#
+# For each JSON bench target this script snapshots the committed
+# baseline, re-runs the bench (which overwrites the file), restores the
+# baseline, and then compares every `*_per_s` throughput series between
+# the two — positionally, since the bench emits rows in a fixed order.
+# A fresh value more than THRESHOLD percent below its baseline
+# counterpart fails the script.
+#
+# Baselines still holding their honest null placeholders (the authoring
+# containers have no Rust toolchain — see tools/run_benches.sh) are
+# skipped: there is nothing real to regress against yet, so until the
+# first machine with cargo commits measured numbers this gate is
+# advisory by construction. CI runs it with continue-on-error for the
+# same reason.
+#
+#   bash tools/bench_diff.sh              # default 20% threshold
+#   BENCH_DIFF_THRESHOLD=10 bash tools/bench_diff.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+THRESHOLD="${BENCH_DIFF_THRESHOLD:-20}"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "bench_diff: no cargo on PATH — nothing to diff" >&2
+    exit 0
+fi
+
+# Extract '"<key>_per_s": <number>' pairs, one per line, in file order.
+throughputs() {
+    grep -oE '"[a-z0-9_]+_per_s"[[:space:]]*:[[:space:]]*[0-9][0-9.eE+-]*' "$1" \
+        | tr -d ' ' || true
+}
+
+fail=0
+for b in continuum forecast generation solver scalability; do
+    baseline="BENCH_${b}.json"
+    if [[ ! -f "$baseline" ]]; then
+        echo "bench_diff: $baseline missing — skipped"
+        continue
+    fi
+    if grep -q 'baseline-pending' "$baseline" || ! throughputs "$baseline" | grep -q .; then
+        echo "bench_diff: $baseline has no measured throughput yet — skipped (advisory)"
+        continue
+    fi
+
+    snapshot="$(mktemp)"
+    cp "$baseline" "$snapshot"
+    echo "== cargo bench --bench $b"
+    if ! cargo bench --bench "$b"; then
+        cp "$snapshot" "$baseline"
+        rm -f "$snapshot"
+        echo "bench_diff: bench '$b' failed to run" >&2
+        fail=1
+        continue
+    fi
+    fresh="$(mktemp)"
+    cp "$baseline" "$fresh"
+    cp "$snapshot" "$baseline" # keep the committed baseline untouched
+
+    # Positional compare: same bench, same row order, same keys.
+    if ! paste -d' ' <(throughputs "$snapshot") <(throughputs "$fresh") \
+        | awk -v thr="$THRESHOLD" -F'[: ]' '
+            NF >= 4 && $2 + 0 > 0 {
+                drop = (1 - $4 / $2) * 100
+                if (drop > thr) {
+                    printf "REGRESSION %s: %.1f -> %.1f (-%.1f%% > %s%%)\n", \
+                        $1, $2, $4, drop, thr
+                    bad = 1
+                }
+            }
+            END { exit bad }
+        '; then
+        echo "bench_diff: throughput regression in bench '$b' (baseline $baseline)" >&2
+        fail=1
+    else
+        echo "bench_diff: $b within ${THRESHOLD}% of baseline"
+    fi
+    rm -f "$snapshot" "$fresh"
+done
+
+exit "$fail"
