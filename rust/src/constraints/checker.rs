@@ -1,0 +1,504 @@
+//! Declarative plan verification: a second, independent implementation
+//! of the feasibility and soft-penalty verdicts, written as Prolog
+//! rules over asserted plan facts and cross-checked against the
+//! compiled tensors — two codepaths that can disagree loudly.
+//!
+//! The imperative side ([`check_feasible`] + compiled
+//! [`total_penalty`](crate::constraints::CompiledConstraints::total_penalty))
+//! is fast and lives on every hot path; this module re-derives the same
+//! verdicts from first principles in the [`crate::prolog`] engine:
+//!
+//! * the plan becomes ground facts — `placed(S, F, N)`, `onNode(S, N)`,
+//!   `dropped(S)`, `mandatory(S)`;
+//! * each *resolvable* constraint becomes a fact — `avoid/4`,
+//!   `prefer/4`, `affinity/4` (constraints whose names do not resolve
+//!   are skipped, mirroring the compiled semantics in which they are
+//!   uniformly inert — pinned by `stale_prefer_node_is_inert_by_design`);
+//! * per-node usage and capacity become `used/4` and `capacity/4`
+//!   facts, with usage summed in Rust **in assignment index order** and
+//!   capacity pre-widened by [`CAPACITY_EPS`] — the identical floats and
+//!   comparison `check_feasible` evaluates, so the two sides cannot
+//!   drift on rounding;
+//! * a small rule program derives `violation/5`, `missingMandatory/1`
+//!   and `overCapacity/1`.
+//!
+//! [`cross_check`] runs both sides and reports whether they agree; the
+//! continuum replanner runs it after every (re)plan (see
+//! [`crate::continuum::IncrementalReplanner`]) and `greengen crosscheck`
+//! exposes it on the CLI.
+
+use crate::model::DeploymentPlan;
+use crate::prolog::{Database, Term};
+use crate::scheduler::{check_feasible, Problem, CAPACITY_EPS};
+use crate::constraints::ConstraintKind;
+use crate::model::interner::ModelIndex;
+use crate::Result;
+
+/// The rule program the declarative side derives its verdicts from.
+/// One clause per violation shape (the compiled `RowKind` semantics),
+/// one per structural-feasibility failure; `dif/2` goals come last so
+/// their arguments are ground when they run.
+const RULES: &str = "
+violation(avoid, S, F, N, W) :- avoid(S, F, N, W), placed(S, F, N).
+violation(prefer, S, F, N, W) :- prefer(S, F, N, W), placed(S, F, M), dif(M, N).
+violation(affinity, S, F, O, W) :- affinity(S, F, O, W), placed(S, F, M), onNode(O, P), dif(M, P).
+missingMandatory(S) :- mandatory(S), dropped(S).
+overCapacity(N) :- used(N, Uc, Ur, Us), capacity(N, Cc, Cr, Cs), Uc > Cc.
+overCapacity(N) :- used(N, Uc, Ur, Us), capacity(N, Cc, Cr, Cs), Ur > Cr.
+overCapacity(N) :- used(N, Uc, Ur, Us), capacity(N, Cc, Cr, Cs), Us > Cs.
+";
+
+/// What the two verifiers concluded about one plan.
+#[derive(Debug, Clone)]
+pub struct CrossCheckReport {
+    /// Verdict of the imperative checker ([`check_feasible`]).
+    pub rust_feasible: bool,
+    /// The imperative checker's rejection message, when it rejected.
+    pub rust_error: Option<String>,
+    /// Services the declarative checker found mandatory-but-dropped.
+    pub missing_mandatory: Vec<String>,
+    /// Nodes the declarative checker found over capacity (deduplicated —
+    /// several resource dimensions can overflow on one node).
+    pub over_capacity: Vec<String>,
+    /// Total violated weight per the compiled constraint tensors.
+    pub compiled_penalty: f64,
+    /// Total violated weight per the Prolog `violation/5` derivation.
+    pub declarative_penalty: f64,
+    /// Number of `violation/5` solutions (violated constraint rows).
+    pub declarative_violations: usize,
+}
+
+impl CrossCheckReport {
+    /// Do the two feasibility verdicts agree?
+    pub fn feasible_agrees(&self) -> bool {
+        let declarative_feasible =
+            self.missing_mandatory.is_empty() && self.over_capacity.is_empty();
+        self.rust_feasible == declarative_feasible
+    }
+
+    /// Do the two penalty sums agree? The floats are summed in
+    /// different orders, so agreement is up to a relative tolerance
+    /// rather than bit equality.
+    pub fn penalty_agrees(&self) -> bool {
+        (self.compiled_penalty - self.declarative_penalty).abs()
+            <= 1e-6 * (1.0 + self.declarative_penalty.abs())
+    }
+
+    /// Did both implementations reach the same verdicts? A `false` here
+    /// means one of the two checkers has a bug — the disagreement the
+    /// whole module exists to surface.
+    pub fn agrees(&self) -> bool {
+        self.feasible_agrees() && self.penalty_agrees()
+    }
+
+    /// Is the plan structurally clean per the declarative checker (no
+    /// missing mandatory services, no over-capacity nodes)?
+    pub fn clean(&self) -> bool {
+        self.missing_mandatory.is_empty() && self.over_capacity.is_empty()
+    }
+
+    /// Human-readable summary for the CLI.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "imperative : {}\n",
+            match (&self.rust_feasible, &self.rust_error) {
+                (true, _) => "feasible".to_string(),
+                (false, Some(e)) => format!("infeasible ({e})"),
+                (false, None) => "infeasible".to_string(),
+            }
+        ));
+        out.push_str(&format!(
+            "declarative: {} missing-mandatory, {} over-capacity nodes\n",
+            self.missing_mandatory.len(),
+            self.over_capacity.len()
+        ));
+        for s in &self.missing_mandatory {
+            out.push_str(&format!("  missingMandatory({s})\n"));
+        }
+        for n in &self.over_capacity {
+            out.push_str(&format!("  overCapacity({n})\n"));
+        }
+        out.push_str(&format!(
+            "penalty    : compiled {:.6} vs declarative {:.6} ({} violated rows) — {}\n",
+            self.compiled_penalty,
+            self.declarative_penalty,
+            self.declarative_violations,
+            if self.penalty_agrees() { "agree" } else { "DISAGREE" }
+        ));
+        out.push_str(&format!(
+            "verdict    : {}\n",
+            if self.agrees() {
+                "checkers agree"
+            } else {
+                "CHECKERS DISAGREE"
+            }
+        ));
+        out
+    }
+}
+
+/// Run both verifiers over one plan.
+///
+/// Stale placement names fail with [`crate::Error::UnknownId`] before
+/// either checker runs (neither side can judge a plan it cannot
+/// resolve). Engine failures surface as [`crate::Error::Prolog`].
+pub fn cross_check(problem: &Problem, plan: &DeploymentPlan) -> Result<CrossCheckReport> {
+    let app = problem.app;
+    let infra = problem.infra;
+    let symbols = ModelIndex::new(app, infra);
+    let assignment = {
+        // resolve once up front so stale names are a structured error
+        let mut a = vec![None; app.services.len()];
+        for p in &plan.placements {
+            let (sid, fid, nid) = symbols.resolve_placement(p)?;
+            a[sid.index()] = Some((fid.index(), nid.index()));
+        }
+        a
+    };
+
+    let (rust_feasible, rust_error) = match check_feasible(problem, plan) {
+        Ok(()) => (true, None),
+        Err(e) => (false, Some(e.to_string())),
+    };
+    let compiled_penalty = problem.soft_penalty(&assignment);
+
+    let mut db = Database::new();
+    db.consult(RULES)?;
+
+    // plan facts, in service index order
+    for (si, slot) in assignment.iter().enumerate() {
+        let svc = &app.services[si];
+        match slot {
+            Some((fi, ni)) => {
+                let f = Term::atom(svc.flavours[*fi].name.clone());
+                let n = Term::atom(infra.nodes[*ni].id.clone());
+                db.assert_fact(Term::compound(
+                    "placed",
+                    vec![Term::atom(svc.id.clone()), f, n.clone()],
+                ))?;
+                db.assert_fact(Term::compound(
+                    "onNode",
+                    vec![Term::atom(svc.id.clone()), n],
+                ))?;
+            }
+            None => {
+                db.assert_fact(Term::compound("dropped", vec![Term::atom(svc.id.clone())]))?;
+            }
+        }
+        if svc.must_deploy {
+            db.assert_fact(Term::compound(
+                "mandatory",
+                vec![Term::atom(svc.id.clone())],
+            ))?;
+        }
+    }
+
+    // constraint facts — only for constraints that resolve, mirroring
+    // the compiled rows' uniform inertness for stale names
+    for c in problem.constraints {
+        let fact = match &c.kind {
+            ConstraintKind::AvoidNode {
+                service,
+                flavour,
+                node,
+            } => symbols.app.service(service).and_then(|sid| {
+                symbols.infra.node(node)?;
+                symbols.app.flavour(sid, flavour)?;
+                Some(Term::compound(
+                    "avoid",
+                    vec![
+                        Term::atom(service.clone()),
+                        Term::atom(flavour.clone()),
+                        Term::atom(node.clone()),
+                        Term::Num(c.weight),
+                    ],
+                ))
+            }),
+            ConstraintKind::PreferNode {
+                service,
+                flavour,
+                node,
+            } => symbols.app.service(service).and_then(|sid| {
+                symbols.infra.node(node)?;
+                symbols.app.flavour(sid, flavour)?;
+                Some(Term::compound(
+                    "prefer",
+                    vec![
+                        Term::atom(service.clone()),
+                        Term::atom(flavour.clone()),
+                        Term::atom(node.clone()),
+                        Term::Num(c.weight),
+                    ],
+                ))
+            }),
+            ConstraintKind::Affinity {
+                service,
+                flavour,
+                other,
+            } => symbols.app.service(service).and_then(|sid| {
+                symbols.app.service(other)?;
+                symbols.app.flavour(sid, flavour)?;
+                Some(Term::compound(
+                    "affinity",
+                    vec![
+                        Term::atom(service.clone()),
+                        Term::atom(flavour.clone()),
+                        Term::atom(other.clone()),
+                        Term::Num(c.weight),
+                    ],
+                ))
+            }),
+        };
+        if let Some(fact) = fact {
+            db.assert_fact(fact)?;
+        }
+    }
+
+    // usage facts: the same index-order summation check_feasible runs,
+    // and capacities pre-widened by the same CAPACITY_EPS expression —
+    // identical floats in, identical comparisons out
+    let mut used = vec![(0.0f64, 0.0f64, 0.0f64); infra.nodes.len()];
+    for (si, slot) in assignment.iter().enumerate() {
+        if let Some((fi, ni)) = slot {
+            let req = &app.services[si].flavours[*fi].requirements;
+            used[*ni].0 += req.cpu;
+            used[*ni].1 += req.ram_gb;
+            used[*ni].2 += req.storage_gb;
+        }
+    }
+    for (ni, (cpu, ram, sto)) in used.iter().enumerate() {
+        let node = &infra.nodes[ni];
+        let cap = &node.capabilities;
+        db.assert_fact(Term::compound(
+            "used",
+            vec![
+                Term::atom(node.id.clone()),
+                Term::Num(*cpu),
+                Term::Num(*ram),
+                Term::Num(*sto),
+            ],
+        ))?;
+        db.assert_fact(Term::compound(
+            "capacity",
+            vec![
+                Term::atom(node.id.clone()),
+                Term::Num(cap.cpu + CAPACITY_EPS),
+                Term::Num(cap.ram_gb + CAPACITY_EPS),
+                Term::Num(cap.storage_gb + CAPACITY_EPS),
+            ],
+        ))?;
+    }
+
+    // derive the declarative verdicts
+    let violations = db.query("violation(Kind, S, F, N, W)")?;
+    let mut declarative_penalty = 0.0;
+    for sol in &violations {
+        if let Some(Term::Num(w)) = sol.get("W") {
+            declarative_penalty += *w;
+        }
+    }
+    let missing_mandatory: Vec<String> = db
+        .query("missingMandatory(S)")?
+        .iter()
+        .filter_map(|sol| match sol.get("S") {
+            Some(Term::Atom(s)) => Some(s.clone()),
+            _ => None,
+        })
+        .collect();
+    let mut over_capacity: Vec<String> = db
+        .query("overCapacity(N)")?
+        .iter()
+        .filter_map(|sol| match sol.get("N") {
+            Some(Term::Atom(n)) => Some(n.clone()),
+            _ => None,
+        })
+        .collect();
+    // the three overCapacity clauses can flag one node several times
+    over_capacity.dedup();
+
+    Ok(CrossCheckReport {
+        rust_feasible,
+        rust_error,
+        missing_mandatory,
+        over_capacity,
+        compiled_penalty,
+        declarative_penalty,
+        declarative_violations: violations.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::Constraint;
+    use crate::model::{Application, Flavour, Infrastructure, Node, Placement, Service};
+    use crate::scheduler::Objective;
+
+    fn parts() -> (Application, Infrastructure) {
+        let mut app = Application::new("t");
+        let mut a = Service::new("a");
+        a.flavours = vec![Flavour::new("std")];
+        a.flavour_mut("std").unwrap().requirements.cpu = 2.0;
+        let mut b = Service::new("b");
+        b.must_deploy = false;
+        b.flavours = vec![Flavour::new("std")];
+        app.services = vec![a, b];
+        let mut infra = Infrastructure::new("i");
+        for id in ["n0", "n1"] {
+            let mut n = Node::new(id, "XX");
+            n.capabilities.cpu = 4.0;
+            infra.nodes.push(n);
+        }
+        (app, infra)
+    }
+
+    fn weighted(kind: ConstraintKind, weight: f64) -> Constraint {
+        let mut c = Constraint::new(kind, 1.0, 0.0, 1.0);
+        c.weight = weight;
+        c
+    }
+
+    #[test]
+    fn clean_plan_passes_both_checkers() {
+        let (app, infra) = parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let plan = DeploymentPlan {
+            placements: vec![Placement {
+                service: "a".into(),
+                flavour: "std".into(),
+                node: "n0".into(),
+            }],
+            dropped: vec!["b".into()],
+        };
+        let report = cross_check(&problem, &plan).unwrap();
+        assert!(report.agrees(), "{}", report.render_text());
+        assert!(report.clean());
+        assert!(report.rust_feasible);
+        assert_eq!(report.declarative_violations, 0);
+    }
+
+    #[test]
+    fn dropped_mandatory_is_flagged_by_both() {
+        let (app, infra) = parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let plan = DeploymentPlan {
+            placements: Vec::new(),
+            dropped: vec!["a".into(), "b".into()],
+        };
+        let report = cross_check(&problem, &plan).unwrap();
+        assert!(report.agrees(), "{}", report.render_text());
+        assert!(!report.rust_feasible);
+        assert_eq!(report.missing_mandatory, vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn over_capacity_is_flagged_by_both() {
+        let (mut app, infra) = parts();
+        // both services demand 3 cpu on a 4-cpu node
+        app.services[1].flavour_mut("std").unwrap().requirements.cpu = 3.0;
+        app.services[0].flavour_mut("std").unwrap().requirements.cpu = 3.0;
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let plan = DeploymentPlan {
+            placements: vec![
+                Placement {
+                    service: "a".into(),
+                    flavour: "std".into(),
+                    node: "n0".into(),
+                },
+                Placement {
+                    service: "b".into(),
+                    flavour: "std".into(),
+                    node: "n0".into(),
+                },
+            ],
+            dropped: Vec::new(),
+        };
+        let report = cross_check(&problem, &plan).unwrap();
+        assert!(report.agrees(), "{}", report.render_text());
+        assert_eq!(report.over_capacity, vec!["n0".to_string()]);
+    }
+
+    #[test]
+    fn penalties_match_on_every_constraint_shape() {
+        let (app, infra) = parts();
+        let constraints = vec![
+            weighted(
+                ConstraintKind::AvoidNode {
+                    service: "a".into(),
+                    flavour: "std".into(),
+                    node: "n0".into(),
+                },
+                0.7,
+            ),
+            weighted(
+                ConstraintKind::Affinity {
+                    service: "a".into(),
+                    flavour: "std".into(),
+                    other: "b".into(),
+                },
+                0.5,
+            ),
+            weighted(
+                ConstraintKind::PreferNode {
+                    service: "b".into(),
+                    flavour: "std".into(),
+                    node: "n0".into(),
+                },
+                0.3,
+            ),
+            // stale: must be inert on both sides
+            weighted(
+                ConstraintKind::PreferNode {
+                    service: "a".into(),
+                    flavour: "std".into(),
+                    node: "decommissioned".into(),
+                },
+                0.9,
+            ),
+        ];
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        // a on n0 (violates avoid), b on n1 (splits affinity, misses
+        // prefer-n0): all three live rows violated, stale row silent
+        let plan = DeploymentPlan {
+            placements: vec![
+                Placement {
+                    service: "a".into(),
+                    flavour: "std".into(),
+                    node: "n0".into(),
+                },
+                Placement {
+                    service: "b".into(),
+                    flavour: "std".into(),
+                    node: "n1".into(),
+                },
+            ],
+            dropped: Vec::new(),
+        };
+        let report = cross_check(&problem, &plan).unwrap();
+        assert!(report.agrees(), "{}", report.render_text());
+        assert_eq!(report.declarative_violations, 3);
+        assert!((report.declarative_penalty - 1.5).abs() < 1e-9);
+        assert!((report.compiled_penalty - 1.5).abs() < 1e-9);
+    }
+}

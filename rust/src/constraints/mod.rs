@@ -16,6 +16,7 @@
 
 pub mod affinity;
 pub mod avoid_node;
+pub mod checker;
 pub mod compiled;
 pub mod generator;
 pub mod incremental;
@@ -24,6 +25,7 @@ pub mod prefer_node;
 pub mod time_shift;
 pub mod types;
 
+pub use checker::{cross_check, CrossCheckReport};
 pub use compiled::CompiledConstraints;
 pub use generator::{ConstraintGenerator, GenerationResult, GeneratorConfig};
 pub use incremental::{GenStats, IncrementalGenerator};

@@ -17,6 +17,7 @@ use super::shard::{build_sub, repair, solve_zones, ShardedScheduler};
 use crate::constraints::ConstraintKind;
 use crate::model::DeploymentPlan;
 use crate::obs::metrics;
+use crate::scheduler::bound::{self, Certificate};
 use crate::scheduler::Problem;
 use crate::Result;
 use std::collections::hash_map::DefaultHasher;
@@ -44,6 +45,11 @@ pub struct ReplanConfig {
     /// budget; `None` keeps the pass iteration-budgeted and
     /// deterministic.
     pub improve_deadline: Option<std::time::Instant>,
+    /// Cross-check every replanned epoch against the independent
+    /// declarative (Prolog) checker, failing the epoch if the two
+    /// evaluators disagree on feasibility or the soft-penalty total.
+    /// See [`crate::constraints::cross_check`].
+    pub declarative_check: bool,
 }
 
 impl Default for ReplanConfig {
@@ -54,6 +60,7 @@ impl Default for ReplanConfig {
             improve_iterations: 4_000,
             improve_seed: 0x1A7E,
             improve_deadline: None,
+            declarative_check: true,
         }
     }
 }
@@ -71,6 +78,11 @@ pub struct ReplanOutcome {
     /// achieved over the dirty services this epoch (`0` when nothing was
     /// dirty, the improver is disabled, or the epoch was a full solve).
     pub improver_gain: f64,
+    /// Optimality certificate of this epoch's plan: the continuum-wide
+    /// admissible lower bound is the sum of per-zone bounds, with
+    /// clean-zone bounds carried from the previous epoch and only dirty
+    /// zones recomputed (see [`crate::scheduler::bound`]).
+    pub certificate: Certificate,
 }
 
 impl ReplanOutcome {
@@ -84,6 +96,13 @@ struct PrevEpoch {
     sigs: HashMap<String, u64>,
     /// service id -> (flavour name, node id).
     placements: HashMap<String, (String, String)>,
+    /// zone name -> cached admissible lower bound on the zone's services.
+    zone_bounds: HashMap<String, f64>,
+    /// zone name -> full-precision fingerprint guarding `zone_bounds`
+    /// (stricter than `sigs`: the bound is exact arithmetic over the
+    /// model, so *any* numeric drift — even below the replan epsilons —
+    /// invalidates the cached value).
+    bound_sigs: HashMap<String, u64>,
 }
 
 /// The incremental re-planner. Keep one alive across epochs; call
@@ -128,11 +147,29 @@ impl IncrementalReplanner {
             services: problem.app.services.len(),
         });
         let outcome = self.replan_inner(problem)?;
+        if self.config.declarative_check {
+            let report = crate::constraints::cross_check(problem, &outcome.plan)?;
+            let agrees = report.agrees();
+            if metrics::enabled() {
+                metrics::global().counter_add(
+                    "greengen_sched_crosscheck_total",
+                    &[("result", if agrees { "agree" } else { "disagree" })],
+                    1.0,
+                );
+            }
+            if !agrees {
+                return Err(crate::Error::other(format!(
+                    "declarative cross-check disagrees with the compiled evaluator:\n{}",
+                    report.render_text()
+                )));
+            }
+        }
         let full = outcome.dirty_zones.len() == outcome.total_zones;
         span.attr("zones", outcome.total_zones);
         span.attr("dirty", outcome.dirty_zones.len());
         span.attr("carried", outcome.reused_placements);
         span.attr("improver_gain", outcome.improver_gain);
+        span.attr("gap", outcome.certificate.gap);
         span.attr("full_solve", full);
         if metrics::enabled() {
             let m = metrics::global();
@@ -165,7 +202,7 @@ impl IncrementalReplanner {
         // at the end of every successful replan (and a failed replan must
         // not be trusted as a carry source anyway).
         let Some(prev) = self.prev.take() else {
-            return self.full_solve(problem, &partition, sigs);
+            return self.full_solve(problem, &partition, sigs, None);
         };
 
         // --- dirtiness -------------------------------------------------
@@ -176,7 +213,7 @@ impl IncrementalReplanner {
             })
             .collect();
         if dirty.len() == partition.zones.len() {
-            return self.full_solve(problem, &partition, sigs);
+            return self.full_solve(problem, &partition, sigs, Some(&prev));
         }
         let dirty_set: HashSet<usize> = dirty.iter().copied().collect();
 
@@ -247,9 +284,13 @@ impl IncrementalReplanner {
         if dirty.is_empty() && carry_failed.is_empty() {
             let plan = problem.to_plan(&assignment);
             let total_zones = partition.zones.len();
+            let (certificate, zone_bounds, bound_sigs) =
+                self.certificate_for(problem, &partition, &plan, Some(&prev))?;
             self.prev = Some(PrevEpoch {
                 sigs,
                 placements: placements_map(&plan),
+                zone_bounds,
+                bound_sigs,
             });
             return Ok(ReplanOutcome {
                 plan,
@@ -257,6 +298,7 @@ impl IncrementalReplanner {
                 dirty_zones: Vec::new(),
                 reused_placements: carried,
                 improver_gain: 0.0,
+                certificate,
             });
         }
 
@@ -320,9 +362,13 @@ impl IncrementalReplanner {
             .map(|&z| partition.zones[z].name.clone())
             .collect();
         let total_zones = partition.zones.len();
+        let (certificate, zone_bounds, bound_sigs) =
+            self.certificate_for(problem, &partition, &plan, Some(&prev))?;
         self.prev = Some(PrevEpoch {
             sigs,
             placements: placements_map(&plan),
+            zone_bounds,
+            bound_sigs,
         });
         Ok(ReplanOutcome {
             plan,
@@ -330,6 +376,7 @@ impl IncrementalReplanner {
             dirty_zones,
             reused_placements: carried,
             improver_gain,
+            certificate,
         })
     }
 
@@ -338,12 +385,17 @@ impl IncrementalReplanner {
         problem: &Problem,
         partition: &Partition,
         sigs: HashMap<String, u64>,
+        prev: Option<&PrevEpoch>,
     ) -> Result<ReplanOutcome> {
         let (plan, _) = self.scheduler.schedule_with_partition(problem, partition)?;
+        let (certificate, zone_bounds, bound_sigs) =
+            self.certificate_for(problem, partition, &plan, prev)?;
         let dirty_zones = partition.zones.iter().map(|z| z.name.clone()).collect();
         self.prev = Some(PrevEpoch {
             sigs,
             placements: placements_map(&plan),
+            zone_bounds,
+            bound_sigs,
         });
         Ok(ReplanOutcome {
             plan,
@@ -351,7 +403,48 @@ impl IncrementalReplanner {
             dirty_zones,
             reused_placements: 0,
             improver_gain: 0.0,
+            certificate,
         })
+    }
+
+    /// Certificate of `plan` over `partition`: the continuum-wide lower
+    /// bound is the sum of per-zone admissible bounds, reusing a cached
+    /// zone bound whenever its full-precision fingerprint is unchanged
+    /// and recomputing only the rest. Summation runs in partition zone
+    /// order, so the total is byte-identical whether a given zone was a
+    /// cache hit or a recompute.
+    fn certificate_for(
+        &self,
+        problem: &Problem,
+        partition: &Partition,
+        plan: &DeploymentPlan,
+        prev: Option<&PrevEpoch>,
+    ) -> Result<(Certificate, HashMap<String, f64>, HashMap<String, u64>)> {
+        let compiled = problem.compile();
+        let assignment = compiled.to_assignment(plan)?;
+        let objective = compiled.objective_value(&assignment);
+        let bound_sigs = bound_signatures(problem, partition);
+        let mut zone_bounds = HashMap::with_capacity(partition.zones.len());
+        let mut lower = 0.0;
+        for zone in &partition.zones {
+            let sig = bound_sigs[&zone.name];
+            let cached = prev.and_then(|p| {
+                if p.bound_sigs.get(&zone.name) == Some(&sig) {
+                    p.zone_bounds.get(&zone.name).copied()
+                } else {
+                    None
+                }
+            });
+            let b = match cached {
+                Some(b) => b,
+                None => bound::service_bounds_for(&compiled, &zone.services)
+                    .iter()
+                    .sum::<f64>(),
+            };
+            zone_bounds.insert(zone.name.clone(), b);
+            lower += b;
+        }
+        Ok((Certificate::new(objective, lower), zone_bounds, bound_sigs))
     }
 
     /// Fingerprint every zone of this epoch.
@@ -441,6 +534,74 @@ impl IncrementalReplanner {
         }
         out
     }
+}
+
+/// Full-precision per-zone fingerprints guarding the cached zone bounds.
+/// Unlike the replanner's dirtiness signatures nothing is quantised
+/// here: the bound is exact arithmetic over the model, so any bit of
+/// drift in its inputs must invalidate the cache. Each fingerprint folds
+/// a *global* component (objective weights, every node, the full
+/// constraint set — the zone bound prices repair moves over the whole
+/// node set) together with the zone's own services.
+fn bound_signatures(problem: &Problem, partition: &Partition) -> HashMap<String, u64> {
+    let mut gh = DefaultHasher::new();
+    let o = &problem.objective;
+    for w in [
+        o.cost_weight,
+        o.soft_weight,
+        o.drop_penalty,
+        o.flavour_weight,
+        o.emissions_weight,
+    ] {
+        w.to_bits().hash(&mut gh);
+    }
+    for n in &problem.infra.nodes {
+        let caps = &n.capabilities;
+        n.id.hash(&mut gh);
+        n.carbon().to_bits().hash(&mut gh);
+        n.profile.cost_per_cpu_hour.to_bits().hash(&mut gh);
+        caps.cpu.to_bits().hash(&mut gh);
+        caps.ram_gb.to_bits().hash(&mut gh);
+        caps.storage_gb.to_bits().hash(&mut gh);
+        caps.availability.to_bits().hash(&mut gh);
+        caps.subnet.as_str().hash(&mut gh);
+        (caps.firewall, caps.ssl, caps.encryption).hash(&mut gh);
+        n.tier.as_str().hash(&mut gh);
+    }
+    for c in problem.constraints {
+        c.kind.key().hash(&mut gh);
+        c.weight.to_bits().hash(&mut gh);
+    }
+    let global = gh.finish();
+    let mut out = HashMap::with_capacity(partition.zones.len());
+    for zone in &partition.zones {
+        let mut h = DefaultHasher::new();
+        global.hash(&mut h);
+        for &si in &zone.services {
+            let s = &problem.app.services[si];
+            let sec = &s.requirements.security;
+            s.id.hash(&mut h);
+            s.must_deploy.hash(&mut h);
+            s.requirements.subnet.as_str().hash(&mut h);
+            (sec.firewall, sec.ssl, sec.encryption).hash(&mut h);
+            for f in &s.flavours {
+                f.name.hash(&mut h);
+                f.requirements.cpu.to_bits().hash(&mut h);
+                f.requirements.ram_gb.to_bits().hash(&mut h);
+                f.requirements.storage_gb.to_bits().hash(&mut h);
+                f.requirements.availability.to_bits().hash(&mut h);
+                match &f.energy {
+                    Some(e) => {
+                        1u8.hash(&mut h);
+                        e.kwh.to_bits().hash(&mut h);
+                    }
+                    None => 0u8.hash(&mut h),
+                }
+            }
+        }
+        out.insert(zone.name.clone(), h.finish());
+    }
+    out
 }
 
 fn placements_map(plan: &DeploymentPlan) -> HashMap<String, (String, String)> {
@@ -566,6 +727,51 @@ mod tests {
         // the next epoch is clean again
         let outcome = rp.replan(&problem).unwrap();
         assert!(outcome.dirty_zones.is_empty());
+    }
+
+    #[test]
+    fn certificate_carries_clean_zone_bounds_bitwise() {
+        let (app, infra) = fleet();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let mut rp = replanner();
+        let first = rp.replan(&problem).unwrap();
+        assert!(first.certificate.gap >= -1e-9, "gap {}", first.certificate.gap);
+        assert!(first.certificate.lower_bound.is_finite());
+        let cached = rp.prev.as_ref().unwrap().zone_bounds.clone();
+        // every cached zone bound agrees bit-for-bit with a fresh
+        // recomputation over the same model
+        let compiled = problem.compile();
+        let partition = rp.scheduler.partition(&problem);
+        for zone in &partition.zones {
+            let fresh: f64 = crate::scheduler::bound::service_bounds_for(&compiled, &zone.services)
+                .iter()
+                .sum();
+            assert_eq!(fresh.to_bits(), cached[&zone.name].to_bits(), "{}", zone.name);
+        }
+        // an unchanged epoch reuses every cached bound: the continuum
+        // bound is byte-identical
+        let second = rp.replan(&problem).unwrap();
+        assert!(second.dirty_zones.is_empty());
+        assert_eq!(
+            first.certificate.lower_bound.to_bits(),
+            second.certificate.lower_bound.to_bits()
+        );
+        // invalidating a zone forces a plan-level re-solve, but the model
+        // is unchanged so the bound cache legitimately holds and the
+        // continuum bound stays bitwise stable
+        rp.invalidate_zones(&["z02".to_string()]);
+        let third = rp.replan(&problem).unwrap();
+        assert_eq!(third.dirty_zones, vec!["z02".to_string()]);
+        assert_eq!(
+            first.certificate.lower_bound.to_bits(),
+            third.certificate.lower_bound.to_bits()
+        );
+        assert!(third.certificate.gap >= -1e-9);
     }
 
     #[test]

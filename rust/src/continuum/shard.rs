@@ -23,6 +23,7 @@
 use super::partition::{Partition, Zone, ZonePartitioner};
 use crate::constraints::{Constraint, ConstraintKind};
 use crate::model::{Application, DeploymentPlan, Infrastructure};
+use crate::scheduler::bound::{self, Certificate};
 use crate::scheduler::delta::{Move, ScoreState};
 use crate::scheduler::{
     BranchAndBoundScheduler, GreedyScheduler, LnsScheduler, Objective, Problem, Scheduler,
@@ -129,6 +130,11 @@ impl Scheduler for ShardedScheduler {
     fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
         self.schedule_with_stats(problem).map(|(plan, _)| plan)
     }
+
+    fn certified_schedule(&self, problem: &Problem) -> Result<(DeploymentPlan, Certificate)> {
+        self.certified_schedule_with_stats(problem)
+            .map(|(plan, _, cert)| (plan, cert))
+    }
 }
 
 impl ShardedScheduler {
@@ -208,6 +214,42 @@ impl ShardedScheduler {
                 repair_moves: stats.moves,
             },
         ))
+    }
+
+    /// [`Self::schedule_with_stats`] plus a continuum-wide optimality
+    /// certificate: the per-zone relaxation bounds (each minimising over
+    /// the **global** node set, since cross-zone repair may move a
+    /// service anywhere) summed in partition order — a partition of the
+    /// instance-wide [`bound::lower_bound`]. Exact-delegate instances
+    /// forward the exact solver's certificate (`gap == 0` when its
+    /// search completes).
+    pub fn certified_schedule_with_stats(
+        &self,
+        problem: &Problem,
+    ) -> Result<(DeploymentPlan, ShardStats, Certificate)> {
+        if self.is_exact_instance(problem) {
+            let (plan, cert) = BranchAndBoundScheduler::default().certified_schedule(problem)?;
+            return Ok((
+                plan,
+                ShardStats {
+                    mode: "exact-delegate",
+                    zones: 1,
+                    ..ShardStats::default()
+                },
+                cert,
+            ));
+        }
+        let partition = self.partition(problem);
+        let (plan, stats) = self.schedule_with_partition(problem, &partition)?;
+        let compiled = problem.compile();
+        let assignment = compiled.to_assignment(&plan)?;
+        let objective = compiled.objective_value(&assignment);
+        let lower: f64 = partition
+            .zones
+            .iter()
+            .map(|z| bound::service_bounds_for(&compiled, &z.services).iter().sum::<f64>())
+            .sum();
+        Ok((plan, stats, Certificate::new(objective, lower)))
     }
 
     /// The partition this scheduler would use (exposed for the
@@ -574,6 +616,39 @@ mod tests {
         assert_eq!(stats.mode, "sharded");
         assert_eq!(stats.zones, 4);
         feasibility_check(&problem, &plan);
+    }
+
+    #[test]
+    fn continuum_certificate_is_admissible_and_partitions_the_bound() {
+        let spec = crate::simulate::TopologySpec::new(
+            crate::simulate::Topology::GeoRegions,
+            40,
+            80,
+        )
+        .with_zones(4)
+        .with_seed(0xFEED);
+        let (app, infra) = crate::simulate::topology::generate(&spec);
+        let constraints = ranked_constraints(&app, &infra, 0.7);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let (plan, stats, cert) = ShardedScheduler::default()
+            .certified_schedule_with_stats(&problem)
+            .unwrap();
+        assert_eq!(stats.mode, "sharded");
+        feasibility_check(&problem, &plan);
+        assert!(cert.gap >= -1e-9, "inadmissible continuum bound: {cert:?}");
+        // the zone-sum is a partition of the instance-wide bound (same
+        // terms, different summation order)
+        let global = crate::scheduler::bound::lower_bound(&problem.compile());
+        assert!(
+            (cert.lower_bound - global).abs() <= 1e-6 * (1.0 + global.abs()),
+            "zone sum {} vs global {global}",
+            cert.lower_bound
+        );
     }
 
     #[test]

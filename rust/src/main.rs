@@ -59,6 +59,7 @@ fn run(args: &Args) -> Result<()> {
         Some("generate") => cmd_generate(args),
         Some("adaptive") => cmd_adaptive(args),
         Some("schedule") => cmd_schedule(args),
+        Some("crosscheck") => cmd_crosscheck(args),
         Some("scalability") => cmd_scalability(args),
         Some("threshold") => cmd_threshold(args),
         Some("timeshift") => cmd_timeshift(args),
@@ -89,6 +90,7 @@ USAGE:
                     [--trace FILE.jsonl] [--metrics FILE.prom]
   greengen schedule [--scenario 1] [--solver greedy|exact|anneal|lns|portfolio|cost-only|random|oracle]
                     [--seed N] [--threads N] [--trace FILE.jsonl] [--metrics FILE.prom]
+  greengen crosscheck [--scenario 1] [--solver portfolio] [--seed N] [--corrupt]
   greengen scalability [--mode app|infra] [--steps 10] [--reps 3] [--out file.csv]
   greengen threshold [--services 100] [--nodes 100]
   greengen timeshift [--scenario 1] [--window 4] [--horizon 24] [--forecast]
@@ -423,9 +425,15 @@ fn cmd_schedule(args: &Args) -> Result<()> {
             SOLVER_NAMES.join("|")
         ))
     })?;
-    let plan = solver.schedule(&problem)?;
+    let (plan, cert) = solver.certified_schedule(&problem)?;
     let metrics = evaluate(&problem, &plan)?;
     println!("# solver={solver_name} constraints={}", outcome.ranked.len());
+    println!(
+        "# certificate: objective={:.6} lower_bound={:.6} gap={:.6}",
+        cert.objective,
+        cert.lower_bound,
+        cert.gap.max(0.0)
+    );
     for p in &plan.placements {
         println!("deploy {} ({}) -> {}", p.service, p.flavour, p.node);
     }
@@ -442,6 +450,99 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     );
     obs_finish(args)?;
     Ok(())
+}
+
+/// `greengen crosscheck`: solve a scenario, certify the plan, then run
+/// the independent declarative (Prolog) checker against the compiled
+/// evaluator. Exits non-zero when the two evaluators disagree *or* when
+/// both flag the plan (the latter is the expected outcome under
+/// `--corrupt`, which deliberately damages the plan first — CI uses it
+/// to prove the checker actually bites).
+fn cmd_crosscheck(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "scenario", "solver", "seed", "threads", "corrupt", "xla", "alpha", "extended", "direct",
+        "artifacts", "trace", "metrics",
+    ])?;
+    obs_setup(args);
+    let scenario = scenarios::scenario(args.usize_or("scenario", 1)?)?;
+    let mut pipe = pipeline(args)?;
+    let outcome = pipe.run_scenario(&scenario)?;
+
+    let mut app = scenario.app.clone();
+    let mut infra = scenario.infra.clone();
+    let mut sim =
+        greengen::monitoring::WorkloadSimulator::new(scenario.truth.clone(), scenario.seed);
+    let store = sim.run(0.0, scenario.windows);
+    let estimator = greengen::energy::EnergyEstimator::default();
+    estimator.estimate(&mut app, &store);
+    let gatherer = greengen::carbon::EnergyMixGatherer::new(&scenario.intensity);
+    gatherer.enrich(&mut infra, store.horizon())?;
+
+    let problem = Problem {
+        app: &app,
+        infra: &infra,
+        constraints: &outcome.ranked,
+        objective: Objective::default(),
+    };
+    let solver_name = args.opt_or("solver", "portfolio");
+    let seed = args.u64_or("seed", 7)?;
+    let threads = args.usize_or("threads", 1)?;
+    let solver = solver_by_name_threads(&solver_name, seed, threads).ok_or_else(|| {
+        greengen::Error::Config(format!(
+            "unknown solver '{solver_name}' (expected one of: {})",
+            SOLVER_NAMES.join("|")
+        ))
+    })?;
+    let (mut plan, cert) = solver.certified_schedule(&problem)?;
+    println!(
+        "# crosscheck: solver={solver_name} constraints={} objective={:.6} lower_bound={:.6} gap={:.6}",
+        outcome.ranked.len(),
+        cert.objective,
+        cert.lower_bound,
+        cert.gap.max(0.0)
+    );
+    if args.flag("corrupt") {
+        corrupt_plan(&mut plan, &app, &infra);
+        println!("# corrupt: dropped a mandatory service and piled placements onto one node");
+    }
+    let report = greengen::constraints::cross_check(&problem, &plan)?;
+    print!("{}", report.render_text());
+    if !report.agrees() {
+        return Err(greengen::Error::other(
+            "declarative checker disagrees with the compiled evaluator",
+        ));
+    }
+    if !report.clean() {
+        return Err(greengen::Error::Infeasible(
+            "both checkers flag the plan as violating hard guarantees".to_string(),
+        ));
+    }
+    println!("# crosscheck: compiled and declarative checkers agree; plan is clean");
+    obs_finish(args)?;
+    Ok(())
+}
+
+/// Deliberately damage a plan so both checkers must flag it: drop the
+/// first placed mandatory service, then pile every remaining placement
+/// onto the first node.
+fn corrupt_plan(
+    plan: &mut greengen::model::DeploymentPlan,
+    app: &greengen::model::Application,
+    infra: &greengen::model::Infrastructure,
+) {
+    if let Some(victim) = app
+        .services
+        .iter()
+        .find(|s| s.must_deploy && plan.is_deployed(&s.id))
+    {
+        plan.placements.retain(|p| p.service != victim.id);
+        plan.dropped.push(victim.id.clone());
+    }
+    if let Some(first) = infra.nodes.first() {
+        for p in &mut plan.placements {
+            p.node = first.id.clone();
+        }
+    }
 }
 
 fn cmd_scalability(args: &Args) -> Result<()> {
@@ -807,12 +908,18 @@ fn cmd_continuum(args: &Args) -> Result<()> {
     }
     if matches!(solver_mode.as_str(), "sharded" | "both" | "all") {
         let t0 = std::time::Instant::now();
-        let (plan, stats) = sharded.schedule_with_stats(&problem)?;
+        let (plan, stats, cert) = sharded.certified_schedule_with_stats(&problem)?;
         let seconds = t0.elapsed().as_secs_f64();
         shard = Some(continuum_row("sharded-continuum", &problem, &plan, seconds)?);
         println!(
             "# sharded: mode={} zones={} repair_placed={} repair_moves={}",
             stats.mode, stats.zones, stats.repair_placed, stats.repair_moves
+        );
+        println!(
+            "# certificate: objective={:.6} lower_bound={:.6} gap={:.6}",
+            cert.objective,
+            cert.lower_bound,
+            cert.gap.max(0.0)
         );
     }
     if solver_mode == "all" {
@@ -873,7 +980,8 @@ fn cmd_continuum(args: &Args) -> Result<()> {
                 .cell(Cell::fixed(t0.elapsed().as_secs_f64() * 1e3, 8, 1))
                 .sep(" ms  emissions ")
                 .cell(Cell::fixed(metrics.emissions_g, 0, 1))
-                .sep(" g")
+                .sep(" g  gap ")
+                .cell(Cell::fixed(outcome.certificate.gap.max(0.0), 0, 3))
                 .finish();
             println!("{line}");
         }

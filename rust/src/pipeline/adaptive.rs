@@ -17,8 +17,8 @@ use crate::forecast::{BlendedForecaster, CarbonForecaster};
 use crate::model::{Application, DeploymentPlan, Infrastructure};
 use crate::monitoring::{MetricStore, WorkloadSimulator};
 use crate::scheduler::{
-    evaluate, CostOnlyScheduler, GreedyScheduler, GreenOracleScheduler, Objective, PlanMetrics,
-    Problem, RandomScheduler, Scheduler, TemporalConfig, TemporalScheduler,
+    evaluate, Certificate, CostOnlyScheduler, GreedyScheduler, GreenOracleScheduler, Objective,
+    PlanMetrics, Problem, RandomScheduler, Scheduler, TemporalConfig, TemporalScheduler,
 };
 use crate::util::Rng;
 use crate::Result;
@@ -203,6 +203,11 @@ pub struct CycleOutcome {
     pub reused_placements: usize,
     /// Re-planner: objective gain from the warm-started improver.
     pub improver_gain: f64,
+    /// Optimality certificate of `plan`: objective, admissible lower
+    /// bound and their gap (see [`crate::scheduler::bound`]). Produced by
+    /// the re-planner (clean-zone bounds carried) or the fallback
+    /// solver's [`Scheduler::certified_schedule`].
+    pub certificate: Certificate,
 }
 
 impl EpochCycle<'_> {
@@ -232,19 +237,23 @@ impl EpochCycle<'_> {
             constraints: &outcome.ranked,
             objective: self.objective,
         };
-        let (plan, dirty_zones, total_zones, reused_placements, improver_gain) =
+        let (plan, certificate, dirty_zones, total_zones, reused_placements, improver_gain) =
             match self.replanner.as_deref_mut() {
                 Some(rp) => {
                     let o = rp.replan(&problem)?;
                     (
                         o.plan,
+                        o.certificate,
                         o.dirty_zones.len(),
                         o.total_zones,
                         o.reused_placements,
                         o.improver_gain,
                     )
                 }
-                None => (self.solver.schedule(&problem)?, 0, 0, 0, 0.0),
+                None => {
+                    let (plan, certificate) = self.solver.certified_schedule(&problem)?;
+                    (plan, certificate, 0, 0, 0, 0.0)
+                }
             };
         let metrics = evaluate(&problem, &plan)?;
         Ok(CycleOutcome {
@@ -257,6 +266,7 @@ impl EpochCycle<'_> {
             total_zones,
             reused_placements,
             improver_gain,
+            certificate,
         })
     }
 }

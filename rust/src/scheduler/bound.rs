@@ -1,0 +1,332 @@
+//! Admissible lower bounds and optimality certificates.
+//!
+//! Every solver in the registry reports "best plan seen"; this module
+//! makes that claim falsifiable by computing a Lagrangian/LP-style
+//! **lower bound** on the optimum directly from the compiled slot
+//! tensors and packaging it with the achieved objective as a
+//! [`Certificate`] — `gap = objective − lower_bound` is then a proven
+//! bound on how far the answer can be from optimal, instead of a hope.
+//!
+//! ## Bound derivation
+//!
+//! The objective (see [`super::Objective`]) is a sum of per-service
+//! slot terms plus two coupling terms (affinity penalties and comm
+//! emissions) plus the shared capacity constraint. The bound relaxes
+//! exactly the coupling:
+//!
+//! * **capacity** is dropped — every service may use its best node;
+//! * **affinity rows** and **comm emissions** are relaxed to their
+//!   minimum, 0 (both are non-negative);
+//! * everything that depends only on a service's *own* slot — plan
+//!   cost, flavour rank, compute emissions (when weighted), and the
+//!   penalties of `Avoid`/`Prefer` rows — is priced **exactly** per
+//!   cell via [`CompiledConstraints::penalty_touching_at`] against an
+//!   all-dropped assignment (affinity rows see the dropped other
+//!   endpoint and price 0).
+//!
+//! Per service the bound is the min over its feasible (flavour, node)
+//! cells of that exact-minus-relaxed slot price; optional services may
+//! also take `drop_penalty`. The sum over services is the reported
+//! [`lower_bound`]. Since every relaxed term is bounded below by the
+//! value used and the cell minimum is taken over a superset of the
+//! slots any feasible plan can use, the sum is ≤ the objective of
+//! **every feasible plan** — in particular the optimum. (It is *not*
+//! a bound over infeasible plans: a plan that illegally drops a
+//! mandatory service pays only `drop_penalty`, which can undercut that
+//! service's min cell. No solver in the registry returns such plans.)
+//!
+//! A mandatory service with no feasible cell makes the instance
+//! infeasible and the bound `+∞` — consistent with the solvers'
+//! `Error::Infeasible`.
+//!
+//! ## The shared BnB algebra
+//!
+//! [`partial_bound`] is the exact-solver's pruning bound, hoisted here
+//! so `solver.rs` and this module can never disagree: a partial
+//! assignment's delta-tracked objective scores undecided services as
+//! dropped, and subtracting their drop penalties is admissible because
+//! every other objective term is non-negative.
+
+use super::compiled::CompiledProblem;
+use super::problem::Objective;
+use crate::obs::metrics;
+
+/// An optimality certificate: the achieved objective, a proven lower
+/// bound on the optimum, and their difference.
+///
+/// `gap == 0` is a proof of optimality (the exact solver emits it when
+/// its search completes). The gap is deliberately **not clamped**: a
+/// negative gap would mean the bound exceeded an achieved objective —
+/// an admissibility bug the certificate test suite must see, not a
+/// value to round away.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Certificate {
+    /// Objective value of the returned plan (lower is better).
+    pub objective: f64,
+    /// Proven lower bound on the objective of any feasible plan.
+    pub lower_bound: f64,
+    /// `objective - lower_bound` — how far the plan can be from optimal.
+    pub gap: f64,
+}
+
+impl Certificate {
+    /// Package an objective with its lower bound and export the gap as
+    /// the `greengen_sched_gap` gauge (no-op when metrics are off).
+    pub fn new(objective: f64, lower_bound: f64) -> Certificate {
+        let gap = objective - lower_bound;
+        metrics::gauge_set("greengen_sched_gap", &[], gap);
+        Certificate {
+            objective,
+            lower_bound,
+            gap,
+        }
+    }
+}
+
+/// The branch-and-bound pruning bound — the one implementation shared
+/// by [`super::BranchAndBoundScheduler`] and this module.
+///
+/// `partial_objective` is the delta-tracked objective of a partial
+/// assignment in which every undecided service is scored as dropped;
+/// subtracting those `undecided` drop penalties leaves an admissible
+/// bound on any completion, because placing a service can only replace
+/// its drop penalty with non-negative terms.
+#[inline]
+pub fn partial_bound(objective: &Objective, partial_objective: f64, undecided: usize) -> f64 {
+    partial_objective - objective.drop_penalty * undecided as f64
+}
+
+/// The relaxed per-service bound of service `si` (see the module docs
+/// for the derivation). `all_none` is a reusable all-dropped scratch
+/// assignment of length `n_services`.
+fn service_bound(compiled: &CompiledProblem, si: usize, all_none: &[Option<(usize, usize)>]) -> f64 {
+    let o = &compiled.problem().objective;
+    let constraints = compiled.constraints();
+    let svc = &compiled.problem().app.services[si];
+    let mut best = if svc.must_deploy {
+        f64::INFINITY
+    } else {
+        o.drop_penalty
+    };
+    for fi in 0..compiled.flavours(si) {
+        let cost = compiled.cost_row(si, fi);
+        let feasible = compiled.feasible_row(si, fi);
+        let compute = compiled.compute_emissions_row(si, fi);
+        let flavour_term = o.flavour_weight * fi as f64;
+        for ni in 0..compiled.n_nodes() {
+            if !feasible[ni] {
+                continue;
+            }
+            let mut value = o.cost_weight * cost[ni] + flavour_term;
+            if o.emissions_weight != 0.0 {
+                value += o.emissions_weight * compute[ni];
+            }
+            if !constraints.is_empty() {
+                // exact price of the subject's own Avoid/Prefer rows at
+                // this cell; affinity rows resolve the dropped other
+                // endpoint and price 0 — the relaxation
+                value += o.soft_weight
+                    * constraints.penalty_touching_at(si, all_none, Some((fi, ni)));
+            }
+            if value < best {
+                best = value;
+            }
+        }
+    }
+    best
+}
+
+/// Per-service relaxed lower bounds, for every service in index order.
+/// Summing any subset bounds that subset's objective contribution in
+/// every feasible plan (capacity and coupling terms are relaxed, so
+/// the bounds are independent and simply add).
+pub fn service_bounds(compiled: &CompiledProblem) -> Vec<f64> {
+    let all_none = vec![None; compiled.n_services()];
+    (0..compiled.n_services())
+        .map(|si| service_bound(compiled, si, &all_none))
+        .collect()
+}
+
+/// [`service_bounds`] restricted to an explicit service subset (one
+/// bound per input index, in input order) — the continuum layer's
+/// per-zone primitive. Each bound still minimises over the **global**
+/// node set: cross-zone repair may place a zone's service on any node,
+/// so a zone-local min would not be admissible.
+pub fn service_bounds_for(compiled: &CompiledProblem, services: &[usize]) -> Vec<f64> {
+    let all_none = vec![None; compiled.n_services()];
+    services
+        .iter()
+        .map(|&si| service_bound(compiled, si, &all_none))
+        .collect()
+}
+
+/// The instance-wide admissible lower bound: the sum of
+/// [`service_bounds`]. `+∞` when a mandatory service has no feasible
+/// cell (the instance is infeasible).
+pub fn lower_bound(compiled: &CompiledProblem) -> f64 {
+    let all_none = vec![None; compiled.n_services()];
+    (0..compiled.n_services())
+        .map(|si| service_bound(compiled, si, &all_none))
+        .sum()
+}
+
+/// Certify an assignment: score it through the compiled tensors and
+/// pair the objective with the instance's [`lower_bound`].
+pub fn certify(compiled: &CompiledProblem, assignment: &[Option<(usize, usize)>]) -> Certificate {
+    Certificate::new(compiled.objective_value(assignment), lower_bound(compiled))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::{Constraint, ConstraintKind};
+    use crate::model::{Application, EnergyProfile, Flavour, Infrastructure, Node, Service};
+    use crate::scheduler::problem::Problem;
+    use crate::scheduler::Scheduler;
+    use crate::util::Rng;
+
+    fn parts() -> (Application, Infrastructure) {
+        let mut app = Application::new("t");
+        let mut a = Service::new("a");
+        a.flavours = vec![Flavour::new("std")];
+        a.flavour_mut("std").unwrap().energy = Some(EnergyProfile { kwh: 1.0, samples: 1 });
+        let mut b = Service::new("b");
+        b.must_deploy = false;
+        b.flavours = vec![Flavour::new("std")];
+        app.services = vec![a, b];
+        let mut infra = Infrastructure::new("i");
+        for (id, cost) in [("cheap", 0.02), ("dear", 0.10)] {
+            let mut n = Node::new(id, "XX");
+            n.profile.carbon = Some(100.0);
+            n.profile.cost_per_cpu_hour = cost;
+            n.capabilities.cpu = 8.0;
+            infra.nodes.push(n);
+        }
+        (app, infra)
+    }
+
+    #[test]
+    fn bound_is_the_per_service_min_cell_sum() {
+        let (app, infra) = parts();
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: crate::scheduler::Objective::default(),
+        };
+        let compiled = problem.compile();
+        let bounds = service_bounds(&compiled);
+        // a (mandatory, 1 cpu implied 0 -> cost 0 on either node):
+        // min cell = cost_weight * cpu * cheapest rate; with default cpu
+        // requirement 0 this is 0. b optional: min(drop 5.0, min cell 0) = 0.
+        assert_eq!(bounds.len(), 2);
+        for (i, b) in bounds.iter().enumerate() {
+            assert!(b.is_finite(), "bound {i} = {b}");
+        }
+        let total: f64 = bounds.iter().sum();
+        assert!((lower_bound(&compiled) - total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn avoid_constraint_prices_into_the_bound() {
+        let (app, infra) = parts();
+        // avoiding the cheap node for a/std makes its best cell either
+        // cheap+penalty or dear without; the bound must take the min
+        let mut c = Constraint::new(
+            ConstraintKind::AvoidNode {
+                service: "a".into(),
+                flavour: "std".into(),
+                node: "cheap".into(),
+            },
+            100.0,
+            0.0,
+            100.0,
+        );
+        c.weight = 0.9;
+        let constraints = vec![c];
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: crate::scheduler::Objective::default(),
+        };
+        let unconstrained = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: crate::scheduler::Objective::default(),
+        };
+        let plain = lower_bound(&unconstrained.compile());
+        let priced = lower_bound(&problem.compile());
+        // the constraint can only raise the bound, never lower it
+        assert!(priced >= plain - 1e-12, "{priced} < {plain}");
+    }
+
+    #[test]
+    fn mandatory_service_without_a_cell_is_unbounded() {
+        let (mut app, infra) = parts();
+        // an availability demand no node can meet closes every cell
+        app.services[0].flavour_mut("std").unwrap().requirements.availability = 2.0;
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: crate::scheduler::Objective::default(),
+        };
+        let compiled = problem.compile();
+        assert_eq!(lower_bound(&compiled), f64::INFINITY);
+    }
+
+    #[test]
+    fn zone_subset_bounds_partition_the_global_sum() {
+        let mut rng = Rng::new(0xB0);
+        let app = crate::simulate::random_application(&mut rng, 9);
+        let infra = crate::simulate::random_infrastructure(&mut rng, 4);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: crate::scheduler::Objective::default(),
+        };
+        let compiled = problem.compile();
+        let all: f64 = service_bounds(&compiled).iter().sum();
+        let left: f64 = service_bounds_for(&compiled, &[0, 2, 4, 6, 8]).iter().sum();
+        let right: f64 = service_bounds_for(&compiled, &[1, 3, 5, 7]).iter().sum();
+        assert!((all - (left + right)).abs() < 1e-9, "{all} vs {}", left + right);
+    }
+
+    #[test]
+    fn certificate_of_a_solved_plan_is_admissible() {
+        let mut rng = Rng::new(0xCE27);
+        for _ in 0..6 {
+            let app = crate::simulate::random_application(&mut rng, 8);
+            let infra = crate::simulate::random_infrastructure(&mut rng, 4);
+            let problem = Problem {
+                app: &app,
+                infra: &infra,
+                constraints: &[],
+                objective: crate::scheduler::Objective::default(),
+            };
+            let solver = crate::scheduler::GreedyScheduler::default();
+            let Ok(plan) = solver.schedule(&problem) else {
+                continue;
+            };
+            let compiled = problem.compile();
+            let assignment = compiled.to_assignment(&plan).unwrap();
+            let cert = certify(&compiled, &assignment);
+            assert!(
+                cert.gap >= -1e-9,
+                "inadmissible: objective {} < bound {}",
+                cert.objective,
+                cert.lower_bound
+            );
+            assert!((cert.gap - (cert.objective - cert.lower_bound)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gap_is_not_clamped() {
+        let c = Certificate::new(1.0, 3.0);
+        assert_eq!(c.gap, -2.0);
+    }
+}

@@ -452,7 +452,7 @@ impl<'p, 'a> CompiledProblem<'p, 'a> {
         let mut total = 0.0;
         for (si, slot) in assignment.iter().enumerate() {
             if let Some((fi, ni)) = slot {
-                total += self.compute_g[self.cell(si, *fi, *ni)];
+                total += self.slots.compute_g[self.cell(si, *fi, *ni)];
             }
         }
         for link in &self.links {
@@ -471,7 +471,7 @@ impl<'p, 'a> CompiledProblem<'p, 'a> {
         for (si, slot) in assignment.iter().enumerate() {
             match slot {
                 Some((fi, ni)) => {
-                    cost += self.cost[self.cell(si, *fi, *ni)];
+                    cost += self.slots.cost[self.cell(si, *fi, *ni)];
                     flavour_rank += *fi as f64;
                 }
                 None => dropped += 1.0,

@@ -26,6 +26,7 @@
 //! against a carbon forecast (see [`crate::forecast`]).
 
 pub mod baselines;
+pub mod bound;
 pub mod compiled;
 pub mod delta;
 pub mod eval;
@@ -37,6 +38,7 @@ pub mod solver;
 pub mod temporal;
 
 pub use baselines::{CostOnlyScheduler, GreenOracleScheduler, RandomScheduler};
+pub use bound::{certify, lower_bound, partial_bound, service_bounds, service_bounds_for, Certificate};
 pub use compiled::{CompiledLink, CompiledProblem};
 pub use delta::{Move, ScoreDelta, ScoreState};
 pub use eval::{check_feasible, evaluate, PlanMetrics};

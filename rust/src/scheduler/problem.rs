@@ -82,6 +82,22 @@ pub trait Scheduler {
 
     /// Produce a feasible plan (or `Error::Infeasible`).
     fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan>;
+
+    /// Produce a plan together with its optimality certificate.
+    ///
+    /// The default pairs [`Scheduler::schedule`]'s plan with the
+    /// instance's relaxation bound ([`super::bound::certify`]); solvers
+    /// that prove more override it (the exact solver certifies
+    /// `gap == 0` when its search completes).
+    fn certified_schedule(
+        &self,
+        problem: &Problem,
+    ) -> Result<(DeploymentPlan, super::bound::Certificate)> {
+        let plan = self.schedule(problem)?;
+        let compiled = problem.compile();
+        let assignment = compiled.to_assignment(&plan)?;
+        Ok((plan, super::bound::certify(&compiled, &assignment)))
+    }
 }
 
 /// Remaining capacity tracker for hard feasibility.

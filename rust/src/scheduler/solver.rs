@@ -14,6 +14,8 @@
 //! Used for ground-truthing the greedy solver in tests and for small
 //! production instances (≤ ~10 services × ~8 nodes).
 
+use super::bound::{self, Certificate};
+use super::compiled::CompiledProblem;
 use super::delta::{Move, ScoreState};
 use super::problem::{Problem, Scheduler};
 use crate::model::DeploymentPlan;
@@ -43,12 +45,19 @@ struct Search<'p, 'a> {
     max_nodes: usize,
 }
 
-impl Scheduler for BranchAndBoundScheduler {
-    fn name(&self) -> &'static str {
-        "branch-and-bound"
-    }
+/// What one branch-and-bound run proved.
+struct SearchOutcome {
+    /// The best complete assignment found (`None`: infeasible so far).
+    best: Option<Vec<Option<(usize, usize)>>>,
+    /// Whether the tree was exhausted within `max_nodes` — when true,
+    /// `best` is the proven optimum (or the instance proven infeasible).
+    complete: bool,
+}
 
-    fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+impl BranchAndBoundScheduler {
+    /// Run the search over an already-compiled instance, recording the
+    /// usual span attributes and counters.
+    fn search(&self, problem: &Problem, compiled: &CompiledProblem) -> SearchOutcome {
         let mut span = crate::span!("solver.bnb", {
             services: problem.app.services.len(),
             nodes: problem.infra.nodes.len(),
@@ -62,8 +71,7 @@ impl Scheduler for BranchAndBoundScheduler {
             pruned: 0,
             max_nodes: self.max_nodes,
         };
-        let compiled = problem.compile();
-        let mut state = ScoreState::new(&compiled, vec![None; n]);
+        let mut state = ScoreState::new(compiled, vec![None; n]);
         search.dfs(0, &mut state);
         span.attr("explored", search.explored);
         span.attr("pruned", search.pruned);
@@ -72,12 +80,50 @@ impl Scheduler for BranchAndBoundScheduler {
             m.counter_add("greengen_sched_bnb_nodes_total", &[], search.explored as f64);
             m.counter_add("greengen_sched_bnb_pruned_total", &[], search.pruned as f64);
         }
-        match search.best {
+        SearchOutcome {
+            best: search.best,
+            complete: search.explored < self.max_nodes,
+        }
+    }
+}
+
+impl Scheduler for BranchAndBoundScheduler {
+    fn name(&self) -> &'static str {
+        "branch-and-bound"
+    }
+
+    fn schedule(&self, problem: &Problem) -> Result<DeploymentPlan> {
+        let compiled = problem.compile();
+        match self.search(problem, &compiled).best {
             Some(best) => Ok(problem.to_plan(&best)),
             None => Err(Error::Infeasible(
                 "no feasible assignment exists".to_string(),
             )),
         }
+    }
+
+    /// When the search exhausts the tree the plan is the proven optimum
+    /// and the certificate pins `gap == 0`; a truncated search (the
+    /// `max_nodes` cap fired) falls back to the relaxation bound like
+    /// every other solver.
+    fn certified_schedule(&self, problem: &Problem) -> Result<(DeploymentPlan, Certificate)> {
+        let compiled = problem.compile();
+        let outcome = self.search(problem, &compiled);
+        let Some(best) = outcome.best else {
+            return Err(Error::Infeasible(
+                "no feasible assignment exists".to_string(),
+            ));
+        };
+        // full rescan rather than the delta-tracked running value: the
+        // certificate's objective must be the same arithmetic every
+        // other layer reports, free of apply/undo rounding drift
+        let objective = compiled.objective_value(&best);
+        let certificate = if outcome.complete {
+            Certificate::new(objective, objective)
+        } else {
+            Certificate::new(objective, bound::lower_bound(&compiled))
+        };
+        Ok((problem.to_plan(&best), certificate))
     }
 }
 
@@ -100,10 +146,9 @@ impl Search<'_, '_> {
 
         // Lower bound: the delta-tracked objective of the partial
         // assignment, minus the drop penalties of still-undecided
-        // services (they are scored as dropped but may yet be placed;
-        // every other term is non-negative, so this is admissible).
+        // services — the shared admissible algebra in `bound`.
         let undecided = state.assignment()[si..].iter().filter(|s| s.is_none()).count();
-        let bound = state.objective() - self.problem.objective.drop_penalty * undecided as f64;
+        let bound = bound::partial_bound(&self.problem.objective, state.objective(), undecided);
         if bound >= self.best_value {
             self.pruned += 1;
             return;
@@ -231,6 +276,81 @@ mod tests {
                     assert!(plan.is_deployed(&s.id), "{}", s.id);
                 }
             }
+        }
+    }
+
+    /// Regression-pin for the bound unification: the shared
+    /// [`bound::partial_bound`] must compute exactly the arithmetic the
+    /// in-tree pruning used before it was hoisted — same subtraction,
+    /// same admissibility, so pruning behaviour is unchanged.
+    #[test]
+    fn shared_bound_matches_inline_arithmetic() {
+        let objective = Objective::default();
+        for partial in [0.0, 3.25, 17.5, 123.456] {
+            for undecided in [0usize, 1, 4, 9] {
+                let inline = partial - objective.drop_penalty * undecided as f64;
+                assert_eq!(
+                    crate::scheduler::bound::partial_bound(&objective, partial, undecided),
+                    inline
+                );
+            }
+        }
+    }
+
+    /// A completed exact search certifies optimality: `gap == 0`
+    /// exactly, and the certified plan is the same plan `schedule`
+    /// returns.
+    #[test]
+    fn completed_search_certifies_gap_zero() {
+        let mut rng = Rng::new(0xCE2);
+        for _ in 0..8 {
+            let (app, infra) = random_instance(&mut rng, 4, 3);
+            let problem = Problem {
+                app: &app,
+                infra: &infra,
+                constraints: &[],
+                objective: Objective::default(),
+            };
+            let solver = BranchAndBoundScheduler::default();
+            match (solver.certified_schedule(&problem), solver.schedule(&problem)) {
+                (Ok((plan, cert)), Ok(uncertified)) => {
+                    assert_eq!(cert.gap, 0.0, "completed search must prove optimality");
+                    assert_eq!(cert.objective, cert.lower_bound);
+                    assert_eq!(plan.placements, uncertified.placements);
+                    assert_eq!(plan.dropped, uncertified.dropped);
+                    // the relaxation bound must sit below the optimum
+                    let relaxed =
+                        crate::scheduler::bound::lower_bound(&problem.compile());
+                    assert!(
+                        relaxed <= cert.objective + 1e-9,
+                        "relaxation {relaxed} above optimum {}",
+                        cert.objective
+                    );
+                }
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("certified/uncertified disagree: {a:?} vs {:?}", b.map(|_| ())),
+            }
+        }
+    }
+
+    /// A truncated search (tiny `max_nodes`) may not prove optimality:
+    /// it must fall back to the relaxation bound, never claim gap 0 by
+    /// construction.
+    #[test]
+    fn truncated_search_falls_back_to_relaxation() {
+        let mut rng = Rng::new(0xDD);
+        let (app, infra) = random_instance(&mut rng, 5, 3);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &[],
+            objective: Objective::default(),
+        };
+        let solver = BranchAndBoundScheduler { max_nodes: 40 };
+        if let Ok((_, cert)) = solver.certified_schedule(&problem) {
+            let relaxed = crate::scheduler::bound::lower_bound(&problem.compile());
+            assert_eq!(cert.lower_bound, relaxed);
+            assert!(cert.gap >= -1e-9);
         }
     }
 

@@ -481,6 +481,8 @@ impl Daemon {
             ("reused_placements", Value::from(cycle.reused_placements)),
             ("gen_dirty_rows", Value::from(cycle.gen_dirty_rows)),
             ("gen_total_rows", Value::from(cycle.gen_total_rows)),
+            ("lower_bound", Value::from(cycle.certificate.lower_bound)),
+            ("gap", Value::from(cycle.certificate.gap)),
         ]);
         writeln!(out, "{}", jsonio::to_string(&epoch_line))?;
 
@@ -602,6 +604,14 @@ mod tests {
         let first = jsonio::parse(lines[0]).unwrap();
         assert_eq!(first.str_field("type").unwrap(), "epoch");
         assert_eq!(first.str_field("mode").unwrap(), "full");
+        // every epoch line certifies its plan
+        for line in &lines[..2] {
+            let v = jsonio::parse(line).unwrap();
+            let lb = v.f64_field("lower_bound").unwrap();
+            let gap = v.f64_field("gap").unwrap();
+            assert!(lb.is_finite(), "lower_bound {lb}");
+            assert!(gap.is_finite() && gap >= -1e-9, "gap {gap}");
+        }
         let plan = jsonio::parse(lines[2]).unwrap();
         assert_eq!(plan.str_field("type").unwrap(), "plan");
         assert_eq!(plan.str_field("id").unwrap(), "r1");

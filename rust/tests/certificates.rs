@@ -1,0 +1,267 @@
+//! Optimality-certificate test suite (the PR's pinned acceptance bar):
+//!
+//! * **Admissibility** — every registry solver returns a
+//!   [`Certificate`] with `lower_bound <= objective` on every topology
+//!   preset, across seeds.
+//! * **Exactness** — branch-and-bound proves `gap == 0` on small
+//!   instances, and its certified optimum lower-bounds every other
+//!   solver's objective.
+//! * **Incrementality** — the re-planner's continuum bound is bitwise
+//!   stable across clean epochs and zone invalidations.
+//! * **Cross-verification** — the declarative (Prolog) checker and the
+//!   compiled evaluator agree on randomized plans, including infeasible
+//!   and deliberately corrupted ones.
+
+use greengen::constraints::{cross_check, Constraint, ConstraintGenerator, GeneratorConfig};
+use greengen::continuum::{IncrementalReplanner, ShardedScheduler};
+use greengen::model::{Application, DeploymentPlan, Infrastructure, Placement};
+use greengen::runtime::NativeBackend;
+use greengen::scheduler::{
+    check_feasible, solver_by_name, BranchAndBoundScheduler, Objective, Problem, Scheduler,
+    SOLVER_NAMES,
+};
+use greengen::simulate::{self, topology, Topology, TopologySpec};
+use greengen::util::proptest::check;
+use greengen::util::Rng;
+
+/// Random instance with generated-and-weighted green constraints.
+fn instance(
+    rng: &mut Rng,
+    services: usize,
+    nodes: usize,
+    capacity_scale: f64,
+) -> (Application, Infrastructure, Vec<Constraint>) {
+    let app = simulate::random_application(rng, services);
+    let mut infra = simulate::random_infrastructure(rng, nodes);
+    for n in &mut infra.nodes {
+        n.capabilities.cpu *= capacity_scale;
+        n.capabilities.ram_gb *= capacity_scale;
+    }
+    let backend = NativeBackend;
+    let mut constraints = ConstraintGenerator::new(&backend)
+        .with_config(GeneratorConfig {
+            alpha: 0.7,
+            use_prolog: false,
+        })
+        .generate(&app, &infra)
+        .unwrap()
+        .constraints;
+    for (i, c) in constraints.iter_mut().enumerate() {
+        c.weight = 0.1 + 0.05 * (i % 10) as f64;
+    }
+    (app, infra, constraints)
+}
+
+#[test]
+fn every_solver_certifies_every_topology_preset() {
+    for t in Topology::ALL {
+        for seed in [1u64, 42, 0xC0FFEE] {
+            let spec = TopologySpec::new(t, 6, 10).with_zones(2).with_seed(seed);
+            let (app, mut infra) = topology::generate(&spec);
+            // 2x capacity headroom: the property under test is the
+            // certificate algebra, not knife-edge feasibility
+            for n in &mut infra.nodes {
+                n.capabilities.cpu *= 2.0;
+                n.capabilities.ram_gb *= 2.0;
+            }
+            let backend = NativeBackend;
+            let constraints = ConstraintGenerator::new(&backend)
+                .with_config(GeneratorConfig {
+                    alpha: 0.7,
+                    use_prolog: false,
+                })
+                .generate(&app, &infra)
+                .unwrap()
+                .constraints;
+            let problem = Problem {
+                app: &app,
+                infra: &infra,
+                constraints: &constraints,
+                objective: Objective::default(),
+            };
+            for name in SOLVER_NAMES {
+                let solver = solver_by_name(name, seed).unwrap();
+                let (plan, cert) = solver
+                    .certified_schedule(&problem)
+                    .unwrap_or_else(|e| panic!("{name} on {} seed {seed}: {e}", t.name()));
+                check_feasible(&problem, &plan).unwrap();
+                assert!(
+                    cert.lower_bound.is_finite(),
+                    "{name} on {} seed {seed}: bound {}",
+                    t.name(),
+                    cert.lower_bound
+                );
+                assert!(
+                    cert.gap >= -1e-9,
+                    "{name} on {} seed {seed}: objective {} below bound {}",
+                    t.name(),
+                    cert.objective,
+                    cert.lower_bound
+                );
+                let expect = cert.objective - cert.lower_bound;
+                assert!((cert.gap - expect).abs() <= 1e-12, "gap algebra broke");
+            }
+        }
+    }
+}
+
+#[test]
+fn property_bnb_certifies_gap_zero_and_lower_bounds_every_solver() {
+    check("bnb gap==0 bounds the registry", 24, |rng| {
+        let services = 3 + rng.below(3); // 3..=5
+        let nodes = 2 + rng.below(3); // 2..=4
+        let (app, infra, constraints) = instance(rng, services, nodes, 2.0);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let Ok((_, exact)) = BranchAndBoundScheduler::default().certified_schedule(&problem)
+        else {
+            return; // knife-edge instance: nothing to certify
+        };
+        // small instance, 2M-node cap: the search always completes, so
+        // the certificate is exact
+        assert_eq!(exact.gap, 0.0, "bnb truncated on a tiny instance");
+        assert_eq!(exact.objective.to_bits(), exact.lower_bound.to_bits());
+        for name in SOLVER_NAMES {
+            let solver = solver_by_name(name, 0xBEE5).unwrap();
+            let Ok((_, cert)) = solver.certified_schedule(&problem) else {
+                continue; // heuristic failed a feasible-but-tight instance
+            };
+            assert!(cert.gap >= -1e-9, "{name}: inadmissible certificate");
+            // the proven optimum lower-bounds every solver's objective
+            assert!(
+                cert.objective >= exact.objective - 1e-6,
+                "{name} objective {} beat the proven optimum {}",
+                cert.objective,
+                exact.objective
+            );
+            // and every solver's relaxation bound admits the optimum
+            assert!(
+                cert.lower_bound <= exact.objective + 1e-6,
+                "{name} bound {} above the optimum {}",
+                cert.lower_bound,
+                exact.objective
+            );
+        }
+    });
+}
+
+#[test]
+fn replanner_bound_is_bitwise_stable_across_clean_epochs_and_invalidation() {
+    let spec = TopologySpec::new(Topology::GeoRegions, 24, 48)
+        .with_zones(4)
+        .with_seed(0xFACADE);
+    let (app, infra) = topology::generate(&spec);
+    let problem = Problem {
+        app: &app,
+        infra: &infra,
+        constraints: &[],
+        objective: Objective::default(),
+    };
+    let mut rp = IncrementalReplanner::new(ShardedScheduler::default());
+    let first = rp.replan(&problem).unwrap();
+    assert!(first.certificate.gap >= -1e-9);
+    assert!(first.certificate.lower_bound.is_finite());
+    // clean epoch: every zone bound is a cache hit, the continuum bound
+    // is byte-identical
+    let second = rp.replan(&problem).unwrap();
+    assert!(second.dirty_zones.is_empty());
+    assert_eq!(
+        first.certificate.lower_bound.to_bits(),
+        second.certificate.lower_bound.to_bits()
+    );
+    // invalidation re-solves the zone's plan, but the model is
+    // unchanged, so the bound neither rises nor falls by a single bit
+    rp.invalidate_zones(&["z01".to_string()]);
+    let third = rp.replan(&problem).unwrap();
+    assert_eq!(third.dirty_zones, vec!["z01".to_string()]);
+    assert_eq!(
+        first.certificate.lower_bound.to_bits(),
+        third.certificate.lower_bound.to_bits()
+    );
+    assert!(third.certificate.gap >= -1e-9);
+}
+
+/// Random (not necessarily feasible) plan over valid names: services
+/// drop with probability ~0.25, otherwise land on a random flavour and
+/// node with no capacity discipline.
+fn random_plan(rng: &mut Rng, app: &Application, infra: &Infrastructure) -> DeploymentPlan {
+    let mut plan = DeploymentPlan::default();
+    for s in &app.services {
+        if rng.chance(0.25) {
+            plan.dropped.push(s.id.clone());
+            continue;
+        }
+        let f = &s.flavours[rng.below(s.flavours.len())];
+        let n = &infra.nodes[rng.below(infra.nodes.len())];
+        plan.placements.push(Placement {
+            service: s.id.clone(),
+            flavour: f.name.clone(),
+            node: n.id.clone(),
+        });
+    }
+    plan
+}
+
+#[test]
+fn property_declarative_checker_agrees_with_compiled_on_random_plans() {
+    check("declarative vs compiled differential", 48, |rng| {
+        let services = 4 + rng.below(5); // 4..=8
+        let nodes = 2 + rng.below(4); // 2..=5
+        let (app, infra, constraints) = instance(rng, services, nodes, 1.0);
+        let problem = Problem {
+            app: &app,
+            infra: &infra,
+            constraints: &constraints,
+            objective: Objective::default(),
+        };
+        let plan = random_plan(rng, &app, &infra);
+        let report = cross_check(&problem, &plan).unwrap();
+        assert!(
+            report.feasible_agrees(),
+            "feasibility split: rust={:?} missing={:?} over={:?}",
+            report.rust_error,
+            report.missing_mandatory,
+            report.over_capacity
+        );
+        assert!(
+            report.penalty_agrees(),
+            "penalty split: compiled={} declarative={}",
+            report.compiled_penalty,
+            report.declarative_penalty
+        );
+    });
+}
+
+#[test]
+fn corrupted_plan_is_flagged_by_both_checkers() {
+    let mut rng = Rng::new(0xBAD);
+    let (mut app, infra, constraints) = instance(&mut rng, 6, 4, 2.0);
+    app.services[0].must_deploy = true;
+    let problem = Problem {
+        app: &app,
+        infra: &infra,
+        constraints: &constraints,
+        objective: Objective::default(),
+    };
+    let solver = solver_by_name("greedy", 7).unwrap();
+    let (mut plan, _) = solver.certified_schedule(&problem).unwrap();
+    let clean = cross_check(&problem, &plan).unwrap();
+    assert!(clean.agrees() && clean.clean(), "{}", clean.render_text());
+
+    // corruption: silently drop the mandatory service
+    let victim = app.services[0].id.clone();
+    plan.placements.retain(|p| p.service != victim);
+    plan.dropped.push(victim.clone());
+    let report = cross_check(&problem, &plan).unwrap();
+    assert!(report.agrees(), "{}", report.render_text());
+    assert!(!report.clean());
+    assert!(!report.rust_feasible);
+    assert!(
+        report.missing_mandatory.contains(&victim),
+        "declarative checker missed the dropped mandatory service"
+    );
+}
