@@ -15,8 +15,11 @@
 use greengen::constraints::{
     ConstraintGenerator, ConstraintLibrary, GeneratorConfig, IncrementalGenerator,
 };
+use greengen::energy::estimator::EstimationReport;
+use greengen::energy::EnergyEstimator;
 use greengen::jsonio::Value;
 use greengen::model::Application;
+use greengen::monitoring::{EnergySample, MetricStore, TrafficSample};
 use greengen::runtime::NativeBackend;
 use greengen::simulate::{topology, Topology, TopologySpec};
 use greengen::util::Rng;
@@ -119,6 +122,133 @@ fn case(
     ])
 }
 
+/// Monitoring ingest + summarisation throughput on the interned columnar
+/// store: append `samples` observations across `series` hot series, run
+/// one full estimator scan, then stream one small append batch through
+/// the incremental estimator (the steady-state serve-loop shape).
+fn ingest_case(samples: usize, series: usize) -> Value {
+    let mut rng = Rng::new(0x16E5);
+    let mut store = MetricStore::new();
+    let mut app = Application::new("bench");
+
+    let t0 = Instant::now();
+    for i in 0..samples {
+        let t = i as f64 * 0.25;
+        let k = i % series;
+        if i % 3 == 0 {
+            store.push_traffic(TrafficSample {
+                t,
+                from: format!("s{k}"),
+                from_flavour: "f0".to_string(),
+                to: format!("s{}", (k + 1) % series),
+                requests: 10.0,
+                bytes: rng.range(1e3, 2e9),
+            });
+        } else {
+            store.push_energy(EnergySample {
+                t,
+                service: format!("s{k}"),
+                flavour: "f0".to_string(),
+                joules: rng.range(1.0, 7.2e5),
+            });
+        }
+    }
+    let ingest_s = t0.elapsed().as_secs_f64();
+
+    let estimator = EnergyEstimator::default();
+    let t0 = Instant::now();
+    let full: EstimationReport = estimator.estimate(&mut app, &store);
+    let scan_s = t0.elapsed().as_secs_f64();
+    let since = store.revision();
+
+    // steady state: a 1% append batch, then the streaming refresh
+    let batch = (samples / 100).max(1);
+    let horizon = store.horizon();
+    for i in 0..batch {
+        store.push_energy(EnergySample {
+            t: horizon + 1.0 + i as f64,
+            service: format!("s{}", i % series),
+            flavour: "f0".to_string(),
+            joules: rng.range(1.0, 7.2e5),
+        });
+    }
+    let t0 = Instant::now();
+    let _inc = estimator.estimate_incremental(&mut app, &store, &full, since);
+    let stream_s = t0.elapsed().as_secs_f64();
+
+    let ingest_per_s = samples as f64 / ingest_s.max(1e-9);
+    let scan_per_s = samples as f64 / scan_s.max(1e-9);
+    let stream_per_s = batch as f64 / stream_s.max(1e-9);
+    println!(
+        "ingest {samples:>8} samples / {series:>4} series  \
+         push {ingest_per_s:>12.0}/s  full-scan {scan_per_s:>12.0}/s  \
+         stream {stream_per_s:>12.0}/s ({batch} appended)",
+    );
+    Value::object(vec![
+        ("samples", Value::from(samples as f64)),
+        ("series", Value::from(series as f64)),
+        ("ingest_samples_per_s", Value::from(ingest_per_s)),
+        ("full_scan_samples_per_s", Value::from(scan_per_s)),
+        ("stream_samples_per_s", Value::from(stream_per_s)),
+    ])
+}
+
+/// Full-generation throughput at a fixed instance size as the worker
+/// thread count grows — the chunk-parallel library + analytics path.
+/// Outputs are asserted bit-identical to the single-thread run, so every
+/// row times exactly the same work.
+fn thread_case(threads: usize, baseline_ms: Option<f64>) -> Value {
+    let spec = TopologySpec::new(Topology::GeoRegions, 500, 1000)
+        .with_zones(8)
+        .with_seed(0x9E4E);
+    let (app, infra) = topology::generate(&spec);
+    let backend = NativeBackend;
+    let config = GeneratorConfig {
+        alpha: 0.8,
+        use_prolog: false,
+    };
+    let reference = ConstraintGenerator::new(&backend)
+        .with_config(config)
+        .generate(&app, &infra)
+        .expect("reference generation");
+
+    let generator = ConstraintGenerator::new(&backend)
+        .with_config(config)
+        .with_threads(threads);
+    let mut total_s = 0.0f64;
+    let mut rows = 0usize;
+    for _ in 0..EPOCHS {
+        let t0 = Instant::now();
+        let result = generator.generate(&app, &infra).expect("threaded generation");
+        total_s += t0.elapsed().as_secs_f64();
+        rows = result.rows.len();
+        assert_eq!(
+            reference.tau.to_bits(),
+            result.tau.to_bits(),
+            "tau diverged at {threads} threads"
+        );
+        assert_eq!(
+            reference.constraints, result.constraints,
+            "constraints diverged at {threads} threads"
+        );
+    }
+    let gen_ms = total_s / EPOCHS as f64 * 1e3;
+    let generations_per_s = 1e3 / gen_ms.max(1e-9);
+    let rows_per_s = rows as f64 * EPOCHS as f64 / total_s.max(1e-9);
+    let speedup = baseline_ms.map_or(1.0, |b| b / gen_ms.max(1e-9));
+    println!(
+        "threads {threads:>2}  full {gen_ms:>9.2} ms  \
+         {generations_per_s:>7.2} gen/s  {rows_per_s:>12.0} rows/s  speedup x{speedup:>5.2}",
+    );
+    Value::object(vec![
+        ("threads", Value::from(threads as f64)),
+        ("full_ms", Value::from(gen_ms)),
+        ("generations_per_s", Value::from(generations_per_s)),
+        ("rows_per_s", Value::from(rows_per_s)),
+        ("speedup_vs_1_thread", Value::from(speedup)),
+    ])
+}
+
 fn main() {
     println!("# generation bench: full vs incremental epochs (mean of {EPOCHS})");
     let mut cases = Vec::new();
@@ -134,10 +264,29 @@ fn main() {
     cases.push(case(Topology::GeoRegions, 40, 80, 1, true));
     cases.push(case(Topology::GeoRegions, 40, 80, 8, true));
 
+    println!("\n# monitoring ingest -> estimator throughput (interned columnar store)");
+    let ingest = vec![
+        ingest_case(100_000, 64),
+        ingest_case(1_000_000, 512),
+    ];
+
+    println!("\n# full-generation throughput per worker-thread count (mean of {EPOCHS})");
+    let mut threads = Vec::new();
+    let mut baseline_ms = None;
+    for t in [1usize, 2, 4, 8] {
+        let row = thread_case(t, baseline_ms);
+        if t == 1 {
+            baseline_ms = row.get("full_ms").and_then(|v| v.as_f64());
+        }
+        threads.push(row);
+    }
+
     let out = Value::object(vec![
         ("bench", Value::from("generation")),
         ("status", Value::from("measured")),
         ("results", Value::array(cases)),
+        ("ingest", Value::array(ingest)),
+        ("threads", Value::array(threads)),
     ]);
     let path = std::path::Path::new("BENCH_generation.json");
     greengen::jsonio::to_file(path, &out).expect("write BENCH_generation.json");

@@ -1,0 +1,35 @@
+//! Write the Online Boutique application + EU infrastructure fixtures as
+//! JSON in the `greengen generate --app/--infra` input format.
+//!
+//! Usage: `cargo run --release --example dump_fixtures -- [DIR]`
+//! (defaults to the current directory; writes `app.json` + `infra.json`).
+//!
+//! The CI "Generation parallel smoke" step uses this to feed the CLI a
+//! deterministic instance and byte-compare `--threads N` output against
+//! the sequential run.
+
+use greengen::model::EnergyProfile;
+
+fn main() {
+    let dir = std::path::PathBuf::from(std::env::args().nth(1).unwrap_or_else(|| ".".into()));
+    let mut app = greengen::config::boutique::application();
+    // Pre-enrich energy profiles from the paper's Table 1: the CLI's
+    // generate path reads profiles from the file instead of a monitoring
+    // store.
+    for (service, flavour, wh, _, _) in greengen::config::boutique::TABLE1 {
+        app.service_mut(service)
+            .expect("Table 1 service exists")
+            .flavour_mut(flavour)
+            .expect("Table 1 flavour exists")
+            .energy = Some(EnergyProfile {
+            kwh: wh / 1000.0,
+            samples: 1,
+        });
+    }
+    let infra = greengen::config::boutique::eu_infrastructure();
+    let app_path = dir.join("app.json");
+    let infra_path = dir.join("infra.json");
+    greengen::jsonio::to_file(&app_path, &app.to_json()).expect("write app.json");
+    greengen::jsonio::to_file(&infra_path, &infra.to_json()).expect("write infra.json");
+    println!("wrote {} and {}", app_path.display(), infra_path.display());
+}

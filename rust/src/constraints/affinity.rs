@@ -178,6 +178,7 @@ mod tests {
             comm: &comm,
             tau: 50.0,
             mask: None,
+            row_offset: 0,
         };
         let module = AffinityModule;
         let mut db = Database::new();
@@ -222,6 +223,7 @@ mod tests {
             comm: &comm,
             tau: 1.0,
             mask: None,
+            row_offset: 0,
         };
         let module = AffinityModule;
         let mut db = Database::new();

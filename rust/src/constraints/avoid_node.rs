@@ -177,6 +177,7 @@ mod tests {
             comm: &[],
             tau: analytics.tau as f64,
             mask: Some(&mask),
+            row_offset: 0,
         };
         let module = AvoidNodeModule;
 
@@ -219,6 +220,7 @@ mod tests {
             comm: &[],
             tau: analytics.tau as f64,
             mask: Some(&mask),
+            row_offset: 0,
         };
         let out = AvoidNodeModule.generate_direct(&ctx).unwrap();
         assert!(out.iter().all(|c| {

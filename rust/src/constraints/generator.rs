@@ -71,26 +71,46 @@ pub struct GenerationResult {
 /// ([`ConstraintGenerator::generate`]) and the incremental one
 /// ([`super::incremental::IncrementalGenerator`]), which fingerprints
 /// these vectors to find what changed.
-pub(crate) struct FlatInputs {
-    pub rows: Vec<(String, String)>,
+///
+/// Row and node names are *borrowed* from the descriptions — flattening
+/// allocates no Strings. Callers that need owned keys (the generation
+/// result, the incremental cache) materialize them once via
+/// [`FlatInputs::owned_rows`] / [`FlatInputs::owned_nodes`].
+pub(crate) struct FlatInputs<'m> {
+    pub rows: Vec<(&'m str, &'m str)>,
     pub e: Vec<f32>,
-    pub nodes: Vec<String>,
+    pub nodes: Vec<&'m str>,
     pub c: Vec<f32>,
     pub mask: Vec<f32>,
     pub comm: Vec<CommCandidate>,
     pub mean_ci: f64,
 }
 
+impl FlatInputs<'_> {
+    /// Materialize owned (service, flavour) row keys.
+    pub fn owned_rows(&self) -> Vec<(String, String)> {
+        self.rows
+            .iter()
+            .map(|&(s, f)| (s.to_string(), f.to_string()))
+            .collect()
+    }
+
+    /// Materialize owned node ids.
+    pub fn owned_nodes(&self) -> Vec<String> {
+        self.nodes.iter().map(|&n| n.to_string()).collect()
+    }
+}
+
 /// Flatten the enriched descriptions (steps 1–2 of the epoch).
-pub(crate) fn flatten(app: &Application, infra: &Infrastructure) -> FlatInputs {
+pub(crate) fn flatten<'m>(app: &'m Application, infra: &'m Infrastructure) -> FlatInputs<'m> {
     let app_rows = app.rows();
     let mut rows = Vec::with_capacity(app_rows.len());
     let mut e = Vec::with_capacity(app_rows.len());
     for (svc, fl) in &app_rows {
-        rows.push((svc.id.clone(), fl.name.clone()));
+        rows.push((svc.id.as_str(), fl.name.as_str()));
         e.push(fl.energy.map(|p| p.kwh).unwrap_or(0.0) as f32);
     }
-    let nodes: Vec<String> = infra.nodes.iter().map(|n| n.id.clone()).collect();
+    let nodes: Vec<&str> = infra.nodes.iter().map(|n| n.id.as_str()).collect();
     let c: Vec<f32> = infra.nodes.iter().map(|n| n.carbon() as f32).collect();
 
     let mut mask = vec![0.0f32; rows.len() * nodes.len()];
@@ -142,12 +162,103 @@ pub(crate) fn observed_pool(e: &[f32], comm: &[CommCandidate], mean_ci: f64) -> 
     pool
 }
 
+/// Below this many items (rows + communication candidates) the parallel
+/// library evaluation stays sequential: thread spawns would dominate.
+const PAR_MIN_ITEMS: usize = 32;
+
+/// Modules known to decompose over row/comm chunks: their facts, queries
+/// and direct paths depend only on single rows (or single communication
+/// candidates) plus the full-size analytics tensors, so evaluating
+/// disjoint chunks and concatenating in chunk order reproduces the
+/// sequential output exactly — including Prolog solution order, which
+/// follows fact assertion order. A library containing any other module is
+/// evaluated sequentially.
+const PAR_DECOMPOSABLE_MODULES: [&str; 3] = ["AvoidNode", "Affinity", "PreferNode"];
+
 /// Evaluate every module of the library over `ctx`, returning one
 /// constraint list **per module** (in library order — callers flatten for
 /// the classic combined list). The Prolog path consults + asserts every
 /// module into one shared database before querying, exactly as the full
 /// epoch always has.
+///
+/// With `threads > 1` (and a decomposable library over a large enough
+/// instance) the context is split into contiguous row and comm chunks,
+/// one scoped worker per chunk, each running the full sequential
+/// evaluation on its chunk view; per-module results are concatenated in
+/// chunk order. Output is **bit-identical** to `threads == 1` at any
+/// thread count — the property the CI smoke and `genpar` suite pin.
 pub(crate) fn run_library(
+    library: &ConstraintLibrary,
+    use_prolog: bool,
+    ctx: &GenerationContext,
+    threads: usize,
+) -> Result<Vec<Vec<Constraint>>> {
+    run_library_with_min(library, use_prolog, ctx, threads, PAR_MIN_ITEMS)
+}
+
+/// [`run_library`] with an explicit sequential-fallback floor (tests
+/// lower it to force chunking on small fixtures).
+pub(crate) fn run_library_with_min(
+    library: &ConstraintLibrary,
+    use_prolog: bool,
+    ctx: &GenerationContext,
+    threads: usize,
+    min_items: usize,
+) -> Result<Vec<Vec<Constraint>>> {
+    let r = ctx.rows.len();
+    let cc = ctx.comm.len();
+    let threads = threads.max(1).min(r.max(cc).max(1));
+    let decomposable = library
+        .modules()
+        .iter()
+        .all(|m| PAR_DECOMPOSABLE_MODULES.contains(&m.type_name()));
+    if threads <= 1 || !decomposable || r + cc < min_items {
+        return run_library_seq(library, use_prolog, ctx);
+    }
+
+    // Fixed chunk geometry: ceil(len / threads), so the split depends only
+    // on (len, threads) — never on load or scheduling.
+    let row_chunk = r.div_ceil(threads).max(1);
+    let comm_chunk = cc.div_ceil(threads).max(1);
+    let mut parts: Vec<Result<Vec<Vec<Constraint>>>> = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                let rlo = (w * row_chunk).min(r);
+                let rhi = ((w + 1) * row_chunk).min(r);
+                let clo = (w * comm_chunk).min(cc);
+                let chi = ((w + 1) * comm_chunk).min(cc);
+                let sub = GenerationContext {
+                    rows: &ctx.rows[rlo..rhi],
+                    nodes: ctx.nodes,
+                    analytics: ctx.analytics,
+                    comm: &ctx.comm[clo..chi],
+                    tau: ctx.tau,
+                    mask: ctx.mask,
+                    row_offset: ctx.row_offset + rlo,
+                };
+                scope.spawn(move || run_library_seq(library, use_prolog, &sub))
+            })
+            .collect();
+        parts = handles
+            .into_iter()
+            .map(|h| h.join().expect("constraint generation worker thread panicked"))
+            .collect();
+    });
+
+    let mut merged: Vec<Vec<Constraint>> =
+        library.modules().iter().map(|_| Vec::new()).collect();
+    for part in parts {
+        for (slot, chunk) in merged.iter_mut().zip(part?) {
+            slot.extend(chunk);
+        }
+    }
+    Ok(merged)
+}
+
+/// The sequential library evaluation (also each parallel worker's body,
+/// applied to its chunk view).
+fn run_library_seq(
     library: &ConstraintLibrary,
     use_prolog: bool,
     ctx: &GenerationContext,
@@ -176,6 +287,10 @@ pub struct ConstraintGenerator<'b> {
     backend: &'b dyn AnalyticsBackend,
     pub library: ConstraintLibrary,
     pub config: GeneratorConfig,
+    /// Worker threads for the analytics evaluation and the library pass.
+    /// Results are bit-identical at any value; 1 (the default) runs fully
+    /// sequential.
+    pub threads: usize,
 }
 
 impl<'b> ConstraintGenerator<'b> {
@@ -184,6 +299,7 @@ impl<'b> ConstraintGenerator<'b> {
             backend,
             library: ConstraintLibrary::default(),
             config: GeneratorConfig::default(),
+            threads: 1,
         }
     }
 
@@ -197,6 +313,12 @@ impl<'b> ConstraintGenerator<'b> {
         self
     }
 
+    /// Set the worker-thread count (clamped to ≥ 1).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
     /// Run one generation epoch.
     pub fn generate(
         &self,
@@ -207,6 +329,11 @@ impl<'b> ConstraintGenerator<'b> {
         let flat = flatten(app, infra);
         // --- τ distribution (Eq. 5): the OBSERVED impacts -----------------
         let pool = observed_pool(&flat.e, &flat.comm, flat.mean_ci);
+        // Owned keys materialized exactly once (before `flat`'s numeric
+        // vectors move into the analytics input): they outlive this call
+        // inside the GenerationResult.
+        let rows = flat.owned_rows();
+        let nodes = flat.owned_nodes();
 
         // --- 3. analytics -------------------------------------------------
         let input = AnalyticsInput {
@@ -216,30 +343,32 @@ impl<'b> ConstraintGenerator<'b> {
             pool,
             alpha: self.config.alpha as f32,
         };
-        let analytics = self.backend.run(&input)?;
+        let analytics = self.backend.run_threaded(&input, self.threads)?;
         let tau = analytics.tau as f64;
         let gmax = analytics.gmax as f64;
 
         // --- 4. library evaluation ----------------------------------------
         let ctx = GenerationContext {
-            rows: &flat.rows,
-            nodes: &flat.nodes,
+            rows: &rows,
+            nodes: &nodes,
             analytics: &analytics,
             comm: &flat.comm,
             tau,
             mask: Some(&input.mask),
+            row_offset: 0,
         };
-        let constraints = run_library(&self.library, self.config.use_prolog, &ctx)?
-            .into_iter()
-            .flatten()
-            .collect();
+        let constraints =
+            run_library(&self.library, self.config.use_prolog, &ctx, self.threads)?
+                .into_iter()
+                .flatten()
+                .collect();
 
         Ok(GenerationResult {
             constraints,
             tau,
             gmax,
-            rows: flat.rows,
-            nodes: flat.nodes,
+            rows,
+            nodes,
             comm: flat.comm,
             analytics,
             mean_ci: flat.mean_ci,
@@ -251,7 +380,7 @@ impl<'b> ConstraintGenerator<'b> {
 mod tests {
     use super::*;
     use crate::model::{CommLink, Flavour, Node, Service};
-    use crate::runtime::NativeBackend;
+    use crate::runtime::{AnalyticsInput, NativeBackend};
 
     /// Two services (one 2-flavour), two nodes, one link.
     fn fixture() -> (Application, Infrastructure) {
@@ -376,5 +505,90 @@ mod tests {
             .generate(&app, &infra)
             .unwrap();
         assert!(looser.constraints.len() >= result.constraints.len());
+    }
+
+    #[test]
+    fn parallel_library_matches_sequential_on_fixture() {
+        let (app, infra) = fixture();
+        let flat = flatten(&app, &infra);
+        let pool = observed_pool(&flat.e, &flat.comm, flat.mean_ci);
+        let rows = flat.owned_rows();
+        let nodes = flat.owned_nodes();
+        let input = AnalyticsInput {
+            e: flat.e.clone(),
+            c: flat.c.clone(),
+            mask: flat.mask.clone(),
+            pool,
+            alpha: 0.8,
+        };
+        let analytics = NativeBackend.run_threads(&input, 1).unwrap();
+        let ctx = GenerationContext {
+            rows: &rows,
+            nodes: &nodes,
+            analytics: &analytics,
+            comm: &flat.comm,
+            tau: analytics.tau as f64,
+            mask: Some(&input.mask),
+            row_offset: 0,
+        };
+        let lib = ConstraintLibrary::extended();
+        for use_prolog in [true, false] {
+            let seq = run_library_with_min(&lib, use_prolog, &ctx, 1, 1).unwrap();
+            for threads in [2, 3, 4, 8] {
+                let par = run_library_with_min(&lib, use_prolog, &ctx, threads, 1).unwrap();
+                assert_eq!(par, seq, "threads={threads} use_prolog={use_prolog}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_library_chunking_is_bit_identical_randomized() {
+        crate::util::proptest::check("parallel library == sequential", 16, |rng| {
+            let r = 1 + rng.below(24);
+            let n = 1 + rng.below(5);
+            let input = AnalyticsInput {
+                e: (0..r).map(|_| rng.range(0.0, 4.0) as f32).collect(),
+                c: (0..n).map(|_| rng.range(5.0, 600.0) as f32).collect(),
+                mask: (0..r * n)
+                    .map(|_| if rng.chance(0.85) { 1.0 } else { 0.0 })
+                    .collect(),
+                pool: (0..rng.below(12))
+                    .map(|_| rng.range(0.0, 900.0) as f32)
+                    .collect(),
+                alpha: 0.8,
+            };
+            let analytics = NativeBackend.run_threads(&input, 1).unwrap();
+            let rows: Vec<(String, String)> = (0..r)
+                .map(|i| (format!("svc{i}"), "f".to_string()))
+                .collect();
+            let nodes: Vec<String> = (0..n).map(|j| format!("node{j}")).collect();
+            let comm: Vec<crate::constraints::CommCandidate> = (0..rng.below(10))
+                .map(|k| crate::constraints::CommCandidate {
+                    from: format!("svc{}", rng.below(r)),
+                    flavour: "f".into(),
+                    to: format!("dst{k}"),
+                    kwh: rng.range(0.0, 1.0),
+                    em: rng.range(0.0, 900.0),
+                })
+                .collect();
+            let ctx = GenerationContext {
+                rows: &rows,
+                nodes: &nodes,
+                analytics: &analytics,
+                comm: &comm,
+                tau: analytics.tau as f64,
+                mask: Some(&input.mask),
+                row_offset: 0,
+            };
+            let lib = ConstraintLibrary::extended();
+            for use_prolog in [true, false] {
+                let seq = run_library_with_min(&lib, use_prolog, &ctx, 1, 1).unwrap();
+                for threads in [2, 3, 7] {
+                    let par =
+                        run_library_with_min(&lib, use_prolog, &ctx, threads, 1).unwrap();
+                    assert_eq!(par, seq, "threads={threads} use_prolog={use_prolog}");
+                }
+            }
+        });
     }
 }

@@ -127,6 +127,11 @@ pub struct IncrementalGenerator {
     /// Generator knobs (α, Prolog/direct path) — must match the full pass
     /// being compared against; changing them forces a full rebuild.
     pub config: GeneratorConfig,
+    /// Worker threads for the analytics evaluation and the library pass.
+    /// Deliberately **not** part of the carried-state fingerprint: results
+    /// are bit-identical at any value, so it may change between epochs
+    /// without forcing a rebuild.
+    pub threads: usize,
     state: Option<GenState>,
 }
 
@@ -134,6 +139,7 @@ impl Default for IncrementalGenerator {
     fn default() -> Self {
         IncrementalGenerator {
             config: GeneratorConfig::default(),
+            threads: 1,
             state: None,
         }
     }
@@ -163,8 +169,15 @@ impl IncrementalGenerator {
     pub fn new(config: GeneratorConfig) -> Self {
         IncrementalGenerator {
             config,
+            threads: 1,
             state: None,
         }
+    }
+
+    /// Set the worker-thread count (clamped to ≥ 1).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
     }
 
     /// Forget the previous epoch (the next call runs the full pass).
@@ -237,8 +250,8 @@ impl IncrementalGenerator {
             || match &self.state {
                 None => true,
                 Some(st) => {
-                    st.rows != flat.rows
-                        || st.nodes != flat.nodes
+                    !same_rows(&st.rows, &flat.rows)
+                        || !same_nodes(&st.nodes, &flat.nodes)
                         || st.alpha_bits != alpha_bits
                         || st.use_prolog != self.config.use_prolog
                         || st.module_names != module_names
@@ -342,7 +355,7 @@ impl IncrementalGenerator {
             None
         } else {
             let sub_input = input.subset_rows(&dirty);
-            let sub = backend.run(&sub_input)?;
+            let sub = backend.run_threaded(&sub_input, self.threads)?;
             st.analytics.scatter_rows(&dirty, &sub, n_nodes);
             Some((sub_input, sub))
         };
@@ -361,8 +374,9 @@ impl IncrementalGenerator {
                 comm: &st.comm,
                 tau,
                 mask: Some(&st.mask),
+                row_offset: 0,
             };
-            let per_module = run_library(library, self.config.use_prolog, &ctx)?;
+            let per_module = run_library(library, self.config.use_prolog, &ctx, self.threads)?;
             let (modules_row, modules_comm) = bucket_constraints(per_module, &st.rows);
             st.modules_row = modules_row;
             st.modules_comm = modules_comm;
@@ -378,8 +392,10 @@ impl IncrementalGenerator {
                     comm: &[],
                     tau,
                     mask: Some(&sub_input.mask),
+                    row_offset: 0,
                 };
-                let per_module = run_library(library, self.config.use_prolog, &ctx)?;
+                let per_module =
+                    run_library(library, self.config.use_prolog, &ctx, self.threads)?;
                 let local_idx: HashMap<(&str, &str), usize> = sub_rows
                     .iter()
                     .enumerate()
@@ -405,8 +421,10 @@ impl IncrementalGenerator {
                     comm: &st.comm,
                     tau,
                     mask: None,
+                    row_offset: 0,
                 };
-                let per_module = run_library(library, self.config.use_prolog, &ctx)?;
+                let per_module =
+                    run_library(library, self.config.use_prolog, &ctx, self.threads)?;
                 for (m, constraints) in per_module.into_iter().enumerate() {
                     st.modules_comm[m] = constraints;
                 }
@@ -430,12 +448,16 @@ impl IncrementalGenerator {
         &mut self,
         backend: &dyn AnalyticsBackend,
         library: &ConstraintLibrary,
-        flat: FlatInputs,
+        flat: FlatInputs<'_>,
         module_names: Vec<&'static str>,
         cacheable: bool,
     ) -> Result<(GenerationResult, GenStats)> {
         let alpha = self.config.alpha as f32;
         let pool_vec = observed_pool(&flat.e, &flat.comm, flat.mean_ci);
+        // owned keys materialized once, before the numeric vectors move
+        // into the analytics input
+        let rows = flat.owned_rows();
+        let nodes = flat.owned_nodes();
         let input = AnalyticsInput {
             e: flat.e,
             c: flat.c,
@@ -443,23 +465,24 @@ impl IncrementalGenerator {
             pool: pool_vec,
             alpha,
         };
-        let analytics = backend.run(&input)?;
+        let analytics = backend.run_threaded(&input, self.threads)?;
         let tau = analytics.tau as f64;
         let gmax = analytics.gmax as f64;
         let ctx = GenerationContext {
-            rows: &flat.rows,
-            nodes: &flat.nodes,
+            rows: &rows,
+            nodes: &nodes,
             analytics: &analytics,
             comm: &flat.comm,
             tau,
             mask: Some(&input.mask),
+            row_offset: 0,
         };
-        let per_module = run_library(library, self.config.use_prolog, &ctx)?;
+        let per_module = run_library(library, self.config.use_prolog, &ctx, self.threads)?;
 
         let stats = GenStats {
-            total_rows: flat.rows.len(),
-            dirty_rows: flat.rows.len(),
-            dirty_nodes: flat.nodes.len(),
+            total_rows: rows.len(),
+            dirty_rows: rows.len(),
+            dirty_nodes: nodes.len(),
             full_rebuild: true,
             tau_changed: true,
             comm_reevaluated: true,
@@ -473,8 +496,8 @@ impl IncrementalGenerator {
                     constraints,
                     tau,
                     gmax,
-                    rows: flat.rows,
-                    nodes: flat.nodes,
+                    rows,
+                    nodes,
                     comm: flat.comm,
                     analytics,
                     mean_ci: flat.mean_ci,
@@ -485,13 +508,13 @@ impl IncrementalGenerator {
 
         // seed the carry state
         let (pool, row_pool, comm_pool) = seed_pools(&input.e, &flat.comm, flat.mean_ci);
-        let (modules_row, modules_comm) = bucket_constraints(per_module, &flat.rows);
+        let (modules_row, modules_comm) = bucket_constraints(per_module, &rows);
         let st = GenState {
             alpha_bits: alpha.to_bits(),
             use_prolog: self.config.use_prolog,
             module_names,
-            rows: flat.rows,
-            nodes: flat.nodes,
+            rows,
+            nodes,
             e: input.e,
             c: input.c,
             mask: input.mask,
@@ -562,6 +585,16 @@ fn bucket_constraints(
         }
     }
     (modules_row, modules_comm)
+}
+
+/// Cached owned row keys equal the freshly flattened borrowed ones.
+fn same_rows(a: &[(String, String)], b: &[(&str, &str)]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|((s, f), &(bs, bf))| s == bs && f == bf)
+}
+
+/// Cached owned node ids equal the freshly flattened borrowed ones.
+fn same_nodes(a: &[String], b: &[&str]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, &y)| x == y)
 }
 
 /// Communication candidates have the same identity sequence (the kwh may
@@ -813,6 +846,26 @@ mod tests {
             .generate(&app, &infra)
             .unwrap();
         assert_same(&full, &result);
+    }
+
+    #[test]
+    fn threads_setting_does_not_change_results_or_force_rebuilds() {
+        let (mut app, infra) = fixture();
+        let backend = NativeBackend;
+        let library = ConstraintLibrary::extended();
+        let mut inc1 = IncrementalGenerator::default();
+        let mut inc4 = IncrementalGenerator::default().with_threads(4);
+        let (a, _) = inc1.generate(&backend, &library, &app, &infra).unwrap();
+        let (b, _) = inc4.generate(&backend, &library, &app, &infra).unwrap();
+        assert_same(&a, &b);
+        // changing the thread count mid-stream is not structural
+        inc4.threads = 2;
+        app.service_mut("cart").unwrap().flavour_mut("tiny").unwrap().energy =
+            Some(EnergyProfile { kwh: 0.9, samples: 11 });
+        let (a, _) = inc1.generate(&backend, &library, &app, &infra).unwrap();
+        let (b, stats) = inc4.generate(&backend, &library, &app, &infra).unwrap();
+        assert!(!stats.full_rebuild);
+        assert_same(&a, &b);
     }
 
     #[test]

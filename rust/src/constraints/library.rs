@@ -22,20 +22,36 @@ pub struct CommCandidate {
 
 /// Everything a module needs to evaluate its predicates: the analytics
 /// outputs plus the index maps from tensor coordinates back to names.
+///
+/// A context may be a **chunk view**: `rows`/`comm` hold a contiguous
+/// sub-slice while `analytics` and `mask` stay full-size, with
+/// [`GenerationContext::row_offset`] mapping local row indices to tensor
+/// rows. Modules index tensors exclusively through the accessors below
+/// (never `analytics.<tensor>[row]` directly), which is what lets the
+/// parallel library evaluation hand each worker a window of rows and
+/// still merge bit-identical results.
 #[derive(Debug)]
 pub struct GenerationContext<'a> {
-    /// Row index -> (service, flavour).
+    /// Row index -> (service, flavour). Possibly a chunk of the epoch's
+    /// full row set.
     pub rows: &'a [(String, String)],
     /// Node index -> node id.
     pub nodes: &'a [String],
-    /// Analytics outputs (impact, τ, row stats, savings bounds).
+    /// Analytics outputs (impact, τ, row stats, savings bounds) — always
+    /// full-size, indexed at `row + row_offset`.
     pub analytics: &'a AnalyticsOutput,
     /// Communication candidates (already filtered to known links).
+    /// Possibly a chunk; candidates carry their own names, so no offset
+    /// is needed.
     pub comm: &'a [CommCandidate],
     /// The quantile threshold τ (Eq. 5) as f64.
     pub tau: f64,
-    /// Raw compatibility mask (row-major R×N); `None` means "all allowed".
+    /// Raw compatibility mask (row-major R×N, full-size); `None` means
+    /// "all allowed".
     pub mask: Option<&'a [f32]>,
+    /// Global row index of `rows[0]` within the analytics tensors (0 for
+    /// a full-epoch context).
+    pub row_offset: usize,
 }
 
 impl<'a> GenerationContext<'a> {
@@ -46,25 +62,43 @@ impl<'a> GenerationContext<'a> {
 
     #[inline]
     pub fn impact(&self, row: usize, node: usize) -> f64 {
-        self.analytics.impact[row * self.n_nodes() + node] as f64
+        self.analytics.impact[(row + self.row_offset) * self.n_nodes() + node] as f64
     }
 
     #[inline]
     pub fn sav_hi(&self, row: usize, node: usize) -> f64 {
-        self.analytics.sav_hi[row * self.n_nodes() + node] as f64
+        self.analytics.sav_hi[(row + self.row_offset) * self.n_nodes() + node] as f64
     }
 
     #[inline]
     pub fn sav_lo(&self, row: usize, node: usize) -> f64 {
-        self.analytics.sav_lo[row * self.n_nodes() + node] as f64
+        self.analytics.sav_lo[(row + self.row_offset) * self.n_nodes() + node] as f64
+    }
+
+    /// Best (lowest) allowed impact of a row.
+    #[inline]
+    pub fn row_min(&self, row: usize) -> f64 {
+        self.analytics.row_min[row + self.row_offset] as f64
+    }
+
+    /// Worst allowed impact of a row.
+    #[inline]
+    pub fn row_max(&self, row: usize) -> f64 {
+        self.analytics.row_max[row + self.row_offset] as f64
+    }
+
+    /// Next-worst allowed impact of a row.
+    #[inline]
+    pub fn row_max2(&self, row: usize) -> f64 {
+        self.analytics.row_max2[row + self.row_offset] as f64
     }
 
     /// Index of the lowest-impact allowed node of a row, if any.
     pub fn best_node(&self, row: usize) -> Option<usize> {
         let n = self.n_nodes();
-        let target = self.analytics.row_min[row];
+        let target = self.analytics.row_min[row + self.row_offset];
         (0..n).find(|&node| {
-            let v = self.analytics.impact[row * n + node];
+            let v = self.analytics.impact[(row + self.row_offset) * n + node];
             v == target && self.allowed(row, node)
         })
     }
@@ -72,13 +106,17 @@ impl<'a> GenerationContext<'a> {
     /// Whether (row, node) is placement-compatible.
     pub fn allowed(&self, row: usize, node: usize) -> bool {
         self.mask
-            .map(|m| m[row * self.n_nodes() + node] > 0.0)
+            .map(|m| m[(row + self.row_offset) * self.n_nodes() + node] > 0.0)
             .unwrap_or(true)
     }
 }
 
 /// One constraint type in the library.
-pub trait ConstraintModule {
+///
+/// `Send + Sync` so the parallel library evaluation can share the
+/// registry across scoped worker threads; modules are stateless (all
+/// built-ins are unit structs), so the bound costs nothing.
+pub trait ConstraintModule: Send + Sync {
     /// Library type name ("AvoidNode", "Affinity", ...).
     fn type_name(&self) -> &'static str;
 

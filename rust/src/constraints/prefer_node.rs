@@ -38,7 +38,7 @@ impl ConstraintModule for PreferNodeModule {
 
     fn assert_facts(&self, ctx: &GenerationContext, db: &mut Database) -> Result<()> {
         for (row, (service, flavour)) in ctx.rows.iter().enumerate() {
-            let worst = ctx.analytics.row_max[row] as f64;
+            let worst = ctx.row_max(row);
             if worst > ctx.tau {
                 db.assert_fact(Term::compound(
                     "highImpactRow",
@@ -91,7 +91,7 @@ impl ConstraintModule for PreferNodeModule {
     fn generate_direct(&self, ctx: &GenerationContext) -> Result<Vec<Constraint>> {
         let mut out = Vec::new();
         for (row, (service, flavour)) in ctx.rows.iter().enumerate() {
-            let worst = ctx.analytics.row_max[row] as f64;
+            let worst = ctx.row_max(row);
             if worst <= ctx.tau {
                 continue;
             }
@@ -137,9 +137,9 @@ impl PreferNodeModule {
         flavour: String,
         node: String,
     ) -> Constraint {
-        let worst = ctx.analytics.row_max[row] as f64;
-        let next_worst = ctx.analytics.row_max2[row] as f64;
-        let best = ctx.analytics.row_min[row] as f64;
+        let worst = ctx.row_max(row);
+        let next_worst = ctx.row_max2(row);
+        let best = ctx.row_min(row);
         Constraint::new(
             ConstraintKind::PreferNode {
                 service,
@@ -181,6 +181,7 @@ mod tests {
             comm: &[],
             tau: analytics.tau as f64,
             mask: Some(&input.mask),
+            row_offset: 0,
         };
         let module = PreferNodeModule;
         let direct = module.generate_direct(&ctx).unwrap();

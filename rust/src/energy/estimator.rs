@@ -5,11 +5,37 @@
 //! The profiles are hardware-agnostic statistical estimates over the
 //! observation history (the paper deliberately avoids per-node profiling —
 //! see §4.1's closing discussion).
+//!
+//! # Columnar + streaming evaluation
+//!
+//! Both entry points read the store's interned per-series columns
+//! directly ([`MetricStore::energy_series`] /
+//! [`MetricStore::traffic_series`]) — no merged sample vector is ever
+//! materialized and no per-sample `String` is cloned. Because a
+//! [`Summary`] is accumulated per series, and samples of one series
+//! appear in identical relative order in the columns and in the old
+//! merged scan, the resulting summaries are **bit-identical** to the
+//! historical whole-store implementation.
+//!
+//! [`EnergyEstimator::estimate_incremental`] goes further: a series the
+//! store reports untouched reuses its previous summary verbatim, and a
+//! touched series whose *prefix* is intact (appends only —
+//! [`crate::monitoring::EnergySeries::prefix_rev`]` <= since`) extends
+//! the previous summary by observing just the suffix of new samples.
+//! `Summary::observe` is sequential accumulation, so prefix-summary +
+//! suffix replay performs exactly the operation sequence of a full
+//! rescan — identity, not approximation, the same contract as
+//! `constraints/incremental.rs`. Out-of-order inserts, compaction, or a
+//! finite (sliding) lookback void the prefix and fall back to the exact
+//! rescan of the affected series (or, for finite lookback, of the whole
+//! window).
 
 use super::comm_model::CommEnergyModel;
 use crate::model::Application;
-use crate::monitoring::MetricStore;
 use crate::model::EnergyProfile;
+use crate::monitoring::metrics::{gb_from_bytes, kwh_from_joules};
+use crate::monitoring::store::{EnergySeries, TrafficSeries};
+use crate::monitoring::MetricStore;
 use crate::util::Summary;
 use std::collections::HashMap;
 
@@ -55,6 +81,24 @@ impl Default for EnergyEstimator {
     }
 }
 
+/// Summarize one energy series' window `range` (kWh per window, Eq. 1).
+fn scan_energy(series: &EnergySeries, range: std::ops::Range<usize>) -> Summary {
+    let mut summary = Summary::default();
+    for i in range {
+        summary.observe(kwh_from_joules(series.joules()[i]));
+    }
+    summary
+}
+
+/// Summarize one traffic series' window `range` (Eq. 13 per window).
+fn scan_traffic(series: &TrafficSeries, range: std::ops::Range<usize>, k: CommEnergyModel) -> Summary {
+    let mut summary = Summary::default();
+    for i in range {
+        summary.observe(k.kwh_for_gb(gb_from_bytes(series.bytes()[i])));
+    }
+    summary
+}
+
 impl EnergyEstimator {
     pub fn new(config: EstimatorConfig) -> Self {
         EnergyEstimator { config }
@@ -80,22 +124,41 @@ impl EnergyEstimator {
         let mut report = EstimationReport::default();
 
         // --- Eq. 1: computation profiles --------------------------------
-        for s in store.energy_range(from_t, horizon) {
-            report
-                .computation
-                .entry((s.service.clone(), s.flavour.clone()))
-                .or_default()
-                .observe(s.kwh());
+        for id in store.energy_series_ids() {
+            let series = match store.energy_series(id) {
+                Some(s) => s,
+                None => continue,
+            };
+            let window = series.window(from_t, horizon);
+            if window.is_empty() {
+                continue;
+            }
+            let summary = scan_energy(series, window);
+            if let Some((service, flavour)) = store.energy_series_key(id) {
+                report
+                    .computation
+                    .insert((service.to_string(), flavour.to_string()), summary);
+            }
         }
 
         // --- Eq. 2 + Eq. 13: communication profiles ---------------------
         let k = self.config.comm_model;
-        for s in store.traffic_range(from_t, horizon) {
-            report
-                .communication
-                .entry((s.from.clone(), s.from_flavour.clone(), s.to.clone()))
-                .or_default()
-                .observe(k.kwh_for_gb(s.gb()));
+        for id in store.traffic_series_ids() {
+            let series = match store.traffic_series(id) {
+                Some(s) => s,
+                None => continue,
+            };
+            let window = series.window(from_t, horizon);
+            if window.is_empty() {
+                continue;
+            }
+            let summary = scan_traffic(series, window, k);
+            if let Some((from, flavour, to)) = store.traffic_series_key(id) {
+                report.communication.insert(
+                    (from.to_string(), flavour.to_string(), to.to_string()),
+                    summary,
+                );
+            }
         }
 
         self.apply(app, &report);
@@ -103,15 +166,22 @@ impl EnergyEstimator {
     }
 
     /// Incremental variant of [`EnergyEstimator::estimate`] for the
-    /// adaptive loop's change-stamped epochs: summaries are recomputed
-    /// only for the series the store reports touched since revision
-    /// `since` ([`MetricStore::energy_touched_since`] /
-    /// [`MetricStore::traffic_touched_since`]); every other series reuses
-    /// its entry from `prev` unchanged. With an infinite lookback (the
-    /// default) this is exactly equal to a full [`EnergyEstimator::estimate`]
-    /// — an untouched series' whole-history summary cannot change. A
-    /// finite lookback slides the observation window every epoch, so the
-    /// method falls back to the full pass.
+    /// adaptive loop's change-stamped epochs. `prev` must be the report
+    /// computed when the store stood at revision `since`. Per series:
+    ///
+    /// * untouched since `since` → its `prev` summary is reused verbatim
+    ///   (an untouched series' whole-history summary cannot change);
+    /// * touched with an intact prefix (appends only) → the `prev`
+    ///   summary is extended by **streaming** just the new suffix of
+    ///   samples, which replays exactly the accumulation a full rescan
+    ///   would perform — bit-identical by construction;
+    /// * touched with a rewritten prefix (out-of-order insert or
+    ///   compaction) → exact per-series rescan.
+    ///
+    /// With an infinite lookback (the default) the result is exactly
+    /// equal to a full [`EnergyEstimator::estimate`]. A finite lookback
+    /// slides the observation window every epoch, so the method falls
+    /// back to the full pass.
     pub fn estimate_incremental(
         &self,
         app: &mut Application,
@@ -122,64 +192,56 @@ impl EnergyEstimator {
         if self.config.lookback.is_finite() {
             return self.estimate(app, store);
         }
-        let touched_e_keys = store.energy_touched_since(since);
-        let touched_t_keys = store.traffic_touched_since(since);
-        // everything changed (the steady-state of a simulator that feeds
-        // every series every window): the full pass does strictly less
-        // work than a filtered scan — take it directly
-        if touched_e_keys.len() == store.energy_series_count()
-            && touched_t_keys.len() == store.traffic_series_count()
-        {
-            return self.estimate(app, store);
-        }
-        let touched_e: std::collections::HashSet<(&str, &str)> = touched_e_keys
-            .into_iter()
-            .map(|(s, f)| (s.as_str(), f.as_str()))
-            .collect();
-        let touched_t: std::collections::HashSet<(&str, &str, &str)> = touched_t_keys
-            .into_iter()
-            .map(|(a, f, b)| (a.as_str(), f.as_str(), b.as_str()))
-            .collect();
 
         let mut report = EstimationReport::default();
-        for (key, summary) in &prev.computation {
-            if !touched_e.contains(&(key.0.as_str(), key.1.as_str())) {
-                report.computation.insert(key.clone(), *summary);
+
+        for id in store.energy_series_ids() {
+            let series = match store.energy_series(id) {
+                Some(s) => s,
+                None => continue,
+            };
+            if series.is_empty() {
+                continue;
             }
-        }
-        for (key, summary) in &prev.communication {
-            if !touched_t.contains(&(key.0.as_str(), key.1.as_str(), key.2.as_str())) {
-                report.communication.insert(key.clone(), *summary);
-            }
+            let key = match store.energy_series_key(id) {
+                Some((service, flavour)) => (service.to_string(), flavour.to_string()),
+                None => continue,
+            };
+            let prev_entry = prev.computation.get(&key).copied();
+            let summary = stream_or_rescan(prev_entry, series.rev(), series.prefix_rev(), since, series.len(), |prefix, lo| {
+                let mut s = prefix;
+                for i in lo..series.len() {
+                    s.observe(kwh_from_joules(series.joules()[i]));
+                }
+                s
+            });
+            report.computation.insert(key, summary);
         }
 
-        let horizon = store.horizon();
-        if !touched_e.is_empty() {
-            for s in store.energy_range(f64::NEG_INFINITY, horizon) {
-                if touched_e.contains(&(s.service.as_str(), s.flavour.as_str())) {
-                    report
-                        .computation
-                        .entry((s.service.clone(), s.flavour.clone()))
-                        .or_default()
-                        .observe(s.kwh());
-                }
+        let k = self.config.comm_model;
+        for id in store.traffic_series_ids() {
+            let series = match store.traffic_series(id) {
+                Some(s) => s,
+                None => continue,
+            };
+            if series.is_empty() {
+                continue;
             }
-        }
-        if !touched_t.is_empty() {
-            let k = self.config.comm_model;
-            for s in store.traffic_range(f64::NEG_INFINITY, horizon) {
-                if touched_t.contains(&(
-                    s.from.as_str(),
-                    s.from_flavour.as_str(),
-                    s.to.as_str(),
-                )) {
-                    report
-                        .communication
-                        .entry((s.from.clone(), s.from_flavour.clone(), s.to.clone()))
-                        .or_default()
-                        .observe(k.kwh_for_gb(s.gb()));
+            let key = match store.traffic_series_key(id) {
+                Some((from, flavour, to)) => {
+                    (from.to_string(), flavour.to_string(), to.to_string())
                 }
-            }
+                None => continue,
+            };
+            let prev_entry = prev.communication.get(&key).copied();
+            let summary = stream_or_rescan(prev_entry, series.rev(), series.prefix_rev(), since, series.len(), |prefix, lo| {
+                let mut s = prefix;
+                for i in lo..series.len() {
+                    s.observe(k.kwh_for_gb(gb_from_bytes(series.bytes()[i])));
+                }
+                s
+            });
+            report.communication.insert(key, summary);
         }
 
         self.apply(app, &report);
@@ -188,6 +250,10 @@ impl EnergyEstimator {
 
     /// Enrich `app` in place from a report's summaries (Eq. 1 computation
     /// profiles, Eq. 2 per-source-flavour communication energies).
+    /// Communication entries apply in sorted key order: `link.energy`
+    /// grows by push, so a deterministic application order keeps every
+    /// downstream consumer (constraint flattening, adapters) independent
+    /// of `HashMap` iteration order.
     fn apply(&self, app: &mut Application, report: &EstimationReport) {
         for ((service, flavour), summary) in &report.computation {
             if let Some(svc) = app.service_mut(service) {
@@ -199,7 +265,11 @@ impl EnergyEstimator {
                 }
             }
         }
-        for ((from, flavour, to), summary) in &report.communication {
+        let mut comm_keys: Vec<&(String, String, String)> = report.communication.keys().collect();
+        comm_keys.sort();
+        for key in comm_keys {
+            let (from, flavour, to) = (&key.0, &key.1, &key.2);
+            let summary = &report.communication[key];
             if let Some(link) = app.link_mut(from, to) {
                 let mean = summary.mean();
                 if let Some(slot) = link.energy.iter_mut().find(|(f, _)| f == flavour) {
@@ -209,6 +279,27 @@ impl EnergyEstimator {
                 }
             }
         }
+    }
+}
+
+/// The streaming decision shared by both kinds: reuse the previous
+/// summary when the series is untouched, extend it over the suffix when
+/// only appends happened, rescan otherwise. `replay(prefix, lo)` must
+/// observe samples `lo..len` onto `prefix` in column order.
+fn stream_or_rescan(
+    prev: Option<Summary>,
+    rev: u64,
+    prefix_rev: u64,
+    since: u64,
+    len: usize,
+    replay: impl Fn(Summary, usize) -> Summary,
+) -> Summary {
+    match prev {
+        Some(p) if rev <= since => p,
+        Some(p) if prefix_rev <= since && (p.count as usize) <= len => {
+            replay(p, p.count as usize)
+        }
+        _ => replay(Summary::default(), 0),
     }
 }
 
@@ -398,6 +489,81 @@ mod tests {
             b.service("frontend").unwrap().flavour("large").unwrap().energy.unwrap().kwh,
             1.0
         );
+    }
+
+    #[test]
+    fn streaming_suffix_extension_is_exact() {
+        // Many appends onto a touched series: the streamed summary must
+        // equal the full rescan bit-for-bit (sum is sequential f64
+        // accumulation, so this checks op-sequence identity, not just
+        // tolerance).
+        let est = EnergyEstimator::default();
+        let mut store = MetricStore::new();
+        for i in 0..10 {
+            store.push_energy(EnergySample {
+                t: 3600.0 * (i + 1) as f64,
+                service: "frontend".into(),
+                flavour: "large".into(),
+                joules: 1.7e5 * (i + 1) as f64,
+            });
+        }
+        let mut a = app();
+        let prev = est.estimate(&mut a, &store);
+        let rev = store.revision();
+        for i in 10..23 {
+            store.push_energy(EnergySample {
+                t: 3600.0 * (i + 1) as f64,
+                service: "frontend".into(),
+                flavour: "large".into(),
+                joules: 3.1e5 * (i + 1) as f64,
+            });
+        }
+        let mut b = app();
+        let inc = est.estimate_incremental(&mut b, &store, &prev, rev);
+        let mut c = app();
+        let full = est.estimate(&mut c, &store);
+        let key = ("frontend".to_string(), "large".to_string());
+        assert_eq!(inc.computation[&key], full.computation[&key]);
+        assert_eq!(inc.computation[&key].sum.to_bits(), full.computation[&key].sum.to_bits());
+    }
+
+    #[test]
+    fn prefix_rewrite_falls_back_to_rescan() {
+        // An out-of-order insert below the watermark voids the prefix;
+        // the incremental path must still equal the full pass exactly.
+        let est = EnergyEstimator::default();
+        let mut store = MetricStore::new();
+        for t in [3600.0, 7200.0, 10800.0] {
+            store.push_energy(EnergySample {
+                t,
+                service: "frontend".into(),
+                flavour: "large".into(),
+                joules: t * 100.0,
+            });
+        }
+        let mut a = app();
+        let prev = est.estimate(&mut a, &store);
+        let rev = store.revision();
+        store.push_energy(EnergySample {
+            t: 5400.0, // lands between existing samples
+            service: "frontend".into(),
+            flavour: "large".into(),
+            joules: 9.9e5,
+        });
+        let mut b = app();
+        let inc = est.estimate_incremental(&mut b, &store, &prev, rev);
+        let mut c = app();
+        let full = est.estimate(&mut c, &store);
+        assert_eq!(inc.computation, full.computation);
+        // and after compaction (which also voids every prefix)
+        store.compact(4000.0);
+        let rev2 = store.revision();
+        let mut d = app();
+        let prev2 = est.estimate_incremental(&mut d, &store, &inc, rev);
+        let mut e = app();
+        let full2 = est.estimate(&mut e, &store);
+        assert_eq!(prev2.computation, full2.computation);
+        let _ = rev2;
     }
 
     #[test]

@@ -84,9 +84,9 @@ greengen — Green by Design: constraint-based adaptive deployment
 USAGE:
   greengen scenario <1-5> [--explain] [--format prolog|json|minizinc] [--xla] [--extended]
   greengen generate --app app.json --infra infra.json [--alpha 0.8] [--format prolog] [--xla]
-                    [--incremental] [--epochs N]
+                    [--incremental] [--epochs N] [--threads N]
   greengen adaptive [--scenario 1] [--hours 48] [--regen 6] [--failures 0.0]
-                    [--incremental] [--zones N] [--horizon S]
+                    [--incremental] [--zones N] [--horizon S] [--threads N]
                     [--trace FILE.jsonl] [--metrics FILE.prom]
   greengen schedule [--scenario 1] [--solver greedy|exact|anneal|lns|portfolio|cost-only|random|oracle]
                     [--seed N] [--threads N] [--trace FILE.jsonl] [--metrics FILE.prom]
@@ -186,6 +186,7 @@ fn pipeline(args: &Args) -> Result<GeneratorPipeline> {
     let mut config = PipelineConfig::default();
     config.generator.alpha = args.f64_or("alpha", 0.8)?;
     config.extended_library = args.flag("extended");
+    config.threads = args.usize_or("threads", 1)?;
     if args.flag("direct") {
         config.generator.use_prolog = false;
     }
@@ -236,7 +237,7 @@ fn adapter(args: &Args) -> Result<Box<dyn SchedulerAdapter>> {
 fn cmd_generate(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "app", "infra", "alpha", "format", "xla", "extended", "direct", "artifacts", "explain",
-        "incremental", "epochs",
+        "incremental", "epochs", "threads",
     ])?;
     let app_path = args
         .opt("app")
@@ -303,7 +304,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_adaptive(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "scenario", "hours", "regen", "failures", "xla", "alpha", "extended", "direct",
-        "artifacts", "seed", "incremental", "zones", "horizon", "trace", "metrics",
+        "artifacts", "seed", "incremental", "zones", "horizon", "trace", "metrics", "threads",
     ])?;
     obs_setup(args);
     let scenario = scenarios::scenario(args.usize_or("scenario", 1)?)?;
@@ -318,6 +319,7 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
         incremental,
         zones: args.usize_or("zones", 0)?,
         horizon,
+        threads: args.usize_or("threads", 1)?,
     };
     let mut looper = AdaptiveLoop::with_pipeline(pipeline(args)?, config);
     let summary = looper.run(&scenario)?;

@@ -85,6 +85,22 @@ impl SymbolTable {
         table
     }
 
+    /// Intern one more name into a growable namespace, returning its
+    /// dense id (the existing id when the name is already present —
+    /// alloc-free on that hit path). The growable complement of
+    /// [`SymbolTable::of`], which interns a fixed vector once: used by
+    /// namespaces that discover names over time, such as the metric
+    /// store's series keys ([`crate::monitoring::MetricStore`]).
+    pub fn intern(&mut self, name: &str) -> u32 {
+        if let Some(&id) = self.index.get(name) {
+            return id;
+        }
+        let id = self.names.len() as u32;
+        self.index.insert(name.to_string(), id);
+        self.names.push(name.to_string());
+        id
+    }
+
     /// Resolve a name to its dense id (first position on duplicates).
     pub fn get(&self, name: &str) -> Option<u32> {
         self.index.get(name).copied()
@@ -308,6 +324,18 @@ mod tests {
         };
         let (s, f, n) = m.resolve_placement(&ok).unwrap();
         assert_eq!((s.index(), f.index(), n.index()), (1, 0, 1));
+    }
+
+    #[test]
+    fn intern_grows_and_dedupes() {
+        let mut table = SymbolTable::of(["a"]);
+        assert_eq!(table.intern("a"), 0);
+        assert_eq!(table.intern("b"), 1);
+        assert_eq!(table.intern("a"), 0);
+        assert_eq!(table.intern("b"), 1);
+        assert_eq!(table.len(), 2);
+        assert_eq!(table.name(1), Some("b"));
+        assert_eq!(table.get("b"), Some(1));
     }
 
     #[test]

@@ -34,17 +34,29 @@ pub struct TrafficSample {
     pub bytes: f64,
 }
 
+/// Joules → kWh (1 kWh = 3.6e6 J). One shared definition so sample
+/// accessors and the estimator's columnar streaming path are
+/// bit-identical.
+pub fn kwh_from_joules(joules: f64) -> f64 {
+    joules / 3.6e6
+}
+
+/// Bytes → GB (decimal, as in the Aslan model).
+pub fn gb_from_bytes(bytes: f64) -> f64 {
+    bytes / 1e9
+}
+
 impl EnergySample {
     /// Energy of the window in kWh (1 kWh = 3.6e6 J).
     pub fn kwh(&self) -> f64 {
-        self.joules / 3.6e6
+        kwh_from_joules(self.joules)
     }
 }
 
 impl TrafficSample {
     /// Data volume of the window in GB (decimal, as in the Aslan model).
     pub fn gb(&self) -> f64 {
-        self.bytes / 1e9
+        gb_from_bytes(self.bytes)
     }
 }
 

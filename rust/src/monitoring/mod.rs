@@ -4,8 +4,9 @@
 //! * [`metrics`] — sample types: per-(service, flavour) energy samples
 //!   (Kepler exports joules per container) and per-link traffic samples
 //!   (Istio exports request volume and request size).
-//! * [`store`] — an in-memory time-series store with windowed range
-//!   queries, the surface the Energy Estimator consumes.
+//! * [`store`] — an in-memory time-series store with interned series
+//!   keys and per-series columnar buffers, offering windowed range
+//!   queries — the surface the Energy Estimator consumes.
 //! * [`prometheus`] — a Prometheus text exposition-format emitter/parser,
 //!   so stores can be scraped/ingested exactly like the real pipeline.
 //! * [`simulator`] — the workload simulator that replaces the Kubernetes
@@ -19,4 +20,4 @@ pub mod store;
 
 pub use metrics::{EnergySample, TrafficSample};
 pub use simulator::{GroundTruth, WorkloadSimulator};
-pub use store::MetricStore;
+pub use store::{EnergySeries, MetricStore, SeriesId, TrafficSeries};

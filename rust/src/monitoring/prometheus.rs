@@ -17,7 +17,7 @@
 use super::metrics::{EnergySample, TrafficSample};
 use super::store::MetricStore;
 use crate::{Error, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 const ENERGY_METRIC: &str = "greengen_energy_joules";
 const TRAFFIC_BYTES_METRIC: &str = "greengen_traffic_bytes";
@@ -61,10 +61,13 @@ pub fn render(store: &MetricStore, from: f64, to: f64) -> String {
 
 /// Ingest an exposition document into a store. Traffic bytes/requests
 /// lines with identical labels+timestamp are joined into one sample.
+/// Joined samples are pushed in key order (a `BTreeMap` drain), so two
+/// ingests of the same document produce identical stores — push order is
+/// observable through the store's tie-breaking and revision stamps.
 pub fn ingest(store: &mut MetricStore, text: &str) -> Result<()> {
     // (labels, t) -> (requests, bytes)
-    let mut pending: HashMap<(String, String, String, i64), (Option<f64>, Option<f64>)> =
-        HashMap::new();
+    let mut pending: BTreeMap<(String, String, String, i64), (Option<f64>, Option<f64>)> =
+        BTreeMap::new();
 
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
@@ -249,10 +252,12 @@ mod tests {
         ingest(&mut back, &text).unwrap();
         assert_eq!(back.energy_len(), 1);
         assert_eq!(back.traffic_len(), 1);
-        let e = &back.energy_range(0.0, 1e9)[0];
+        let energy = back.energy_range(0.0, 1e9);
+        let e = &energy[0];
         assert_eq!(e.service, "frontend");
         assert_eq!(e.joules, 712.5);
-        let t = &back.traffic_range(0.0, 1e9)[0];
+        let traffic = back.traffic_range(0.0, 1e9);
+        let t = &traffic[0];
         assert_eq!(t.requests, 350.0);
         assert_eq!(t.bytes, 1.2e7);
     }
@@ -269,7 +274,8 @@ mod tests {
         let text = render(&store, 0.0, 10.0);
         let mut back = MetricStore::new();
         ingest(&mut back, &text).unwrap();
-        let e = &back.energy_range(0.0, 10.0)[0];
+        let energy = back.energy_range(0.0, 10.0);
+        let e = &energy[0];
         assert_eq!(e.service, "we\"ird\\svc");
         assert_eq!(e.flavour, "a\nb");
     }

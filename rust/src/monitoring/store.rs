@@ -1,31 +1,207 @@
 //! In-memory time-series store with windowed range queries — the
 //! Prometheus-equivalent query surface the Energy Estimator consumes.
 //!
-//! Samples are kept sorted by timestamp (appends of monotone streams are
-//! O(1); out-of-order inserts fall back to a binary-search insert).
+//! # Interned columnar layout
+//!
+//! Series keys — (service, flavour) for energy, (from, flavour, to) for
+//! traffic — are interned through a shared [`SymbolTable`] into dense
+//! [`SeriesId`]s, and every series owns **columnar** buffers: a sorted
+//! time column plus value columns (`joules`; `requests`/`bytes`). A
+//! monotone scrape stream appends in O(1) amortized per event (the common
+//! `serve` ingest case); out-of-order samples fall back to a
+//! binary-search insert into the one affected series. Range queries
+//! binary-search each series' time column — O(log n) per series plus the
+//! output — instead of String-compare scanning one global vector.
+//!
+//! The String-keyed API ([`MetricStore::push_energy`],
+//! [`MetricStore::energy_range`], …) is a thin resolve-once wrapper over
+//! the id layer ([`MetricStore::energy_series_id`],
+//! [`MetricStore::energy_series`], …); hot consumers hold [`SeriesId`]s
+//! and read the columns directly.
+//!
+//! Merged range queries reproduce the historical global ordering exactly:
+//! every sample records the store revision at which it arrived (`seq`),
+//! and [`MetricStore::energy_range`] / [`MetricStore::traffic_range`]
+//! sort by `(t, seq)` — timestamp order with ties broken by push order,
+//! which is precisely where the old sorted-vector insert placed them.
+//!
+//! # Change stamps
 //!
 //! The store is **change-stamped**: every push bumps a monotone
-//! [`MetricStore::revision`] and records it against the sample's series —
-//! per (service, flavour) for energy, per (from, flavour, to) for
-//! traffic. Incremental consumers (the adaptive loop's incremental
-//! constraint-generation epochs) remember the revision they last read and
-//! ask [`MetricStore::energy_touched_since`] /
-//! [`MetricStore::traffic_touched_since`] which series actually received
-//! data, recomputing summaries only for those. [`MetricStore::compact`]
-//! conservatively touches *every* series (dropping history changes
-//! whole-history summaries).
+//! [`MetricStore::revision`] and records it on the sample's series.
+//! Incremental consumers (the adaptive loop's incremental
+//! constraint-generation epochs, the streaming estimator) remember the
+//! revision they last read and ask
+//! [`MetricStore::energy_touched_since`] /
+//! [`MetricStore::traffic_touched_since`] (or the allocation-free
+//! [`MetricStore::energy_touched_ids`] /
+//! [`MetricStore::traffic_touched_ids`]) which series actually received
+//! data, recomputing summaries only for those. Each series additionally
+//! carries a **prefix stamp** ([`EnergySeries::prefix_rev`]): appends at
+//! the end leave it alone, while an out-of-order insert or a
+//! [`MetricStore::compact`] — anything that rewrites already-seen
+//! history — bumps it, letting streaming consumers know their running
+//! prefix summaries are stale. `compact` conservatively touches *every*
+//! series (dropping history changes whole-history summaries).
 
 use super::metrics::{EnergySample, TrafficSample};
+use crate::model::interner::SymbolTable;
 use std::collections::HashMap;
+
+/// Dense handle of one metric series inside a [`MetricStore`]. Ids are
+/// positional per kind: an id returned by an energy-side query indexes
+/// the energy series table and is meaningless on the traffic side (and
+/// vice versa).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SeriesId(u32);
+
+impl SeriesId {
+    /// Wrap a series-table position as a typed id.
+    pub fn new(index: usize) -> SeriesId {
+        SeriesId(index as u32)
+    }
+
+    /// The series-table position this id stands for.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One (service, flavour) energy series: columnar samples sorted by
+/// timestamp, with `seq` recording the store revision each sample
+/// arrived at (ties in `t` replay in push order via `(t, seq)`).
+#[derive(Debug, Clone, Default)]
+pub struct EnergySeries {
+    service: u32,
+    flavour: u32,
+    t: Vec<f64>,
+    joules: Vec<f64>,
+    seq: Vec<u64>,
+    rev: u64,
+    prefix_rev: u64,
+}
+
+/// One (from, from_flavour, to) traffic series: columnar samples sorted
+/// by timestamp, change-stamped like [`EnergySeries`].
+#[derive(Debug, Clone, Default)]
+pub struct TrafficSeries {
+    from: u32,
+    from_flavour: u32,
+    to: u32,
+    t: Vec<f64>,
+    requests: Vec<f64>,
+    bytes: Vec<f64>,
+    seq: Vec<u64>,
+    rev: u64,
+    prefix_rev: u64,
+}
+
+/// `(from, to]` window over a sorted time column.
+fn window_of(t: &[f64], from: f64, to: f64) -> std::ops::Range<usize> {
+    let lo = t.partition_point(|&x| x <= from);
+    let hi = t.partition_point(|&x| x <= to);
+    lo..hi
+}
+
+impl EnergySeries {
+    /// Number of samples currently held.
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    /// True when the series holds no samples (it stays registered after
+    /// compaction drains it, preserving series counts).
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    /// Sorted sample timestamps.
+    pub fn times(&self) -> &[f64] {
+        &self.t
+    }
+
+    /// Per-sample energy, joules (parallel to [`EnergySeries::times`]).
+    pub fn joules(&self) -> &[f64] {
+        &self.joules
+    }
+
+    /// Store revision of the last push that touched this series.
+    pub fn rev(&self) -> u64 {
+        self.rev
+    }
+
+    /// Store revision of the last change to already-seen history: an
+    /// out-of-order insert or a compaction. Plain appends leave it
+    /// alone, so a streaming consumer whose snapshot is newer than this
+    /// may extend its running summary instead of rescanning.
+    pub fn prefix_rev(&self) -> u64 {
+        self.prefix_rev
+    }
+
+    /// Index range of samples with `from < t <= to`, by binary search.
+    pub fn window(&self, from: f64, to: f64) -> std::ops::Range<usize> {
+        window_of(&self.t, from, to)
+    }
+}
+
+impl TrafficSeries {
+    /// Number of samples currently held.
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    /// True when the series holds no samples.
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    /// Sorted sample timestamps.
+    pub fn times(&self) -> &[f64] {
+        &self.t
+    }
+
+    /// Per-sample request counts (parallel to [`TrafficSeries::times`]).
+    pub fn requests(&self) -> &[f64] {
+        &self.requests
+    }
+
+    /// Per-sample transferred bytes (parallel to
+    /// [`TrafficSeries::times`]).
+    pub fn bytes(&self) -> &[f64] {
+        &self.bytes
+    }
+
+    /// Store revision of the last push that touched this series.
+    pub fn rev(&self) -> u64 {
+        self.rev
+    }
+
+    /// Store revision of the last change to already-seen history (see
+    /// [`EnergySeries::prefix_rev`]).
+    pub fn prefix_rev(&self) -> u64 {
+        self.prefix_rev
+    }
+
+    /// Index range of samples with `from < t <= to`, by binary search.
+    pub fn window(&self, from: f64, to: f64) -> std::ops::Range<usize> {
+        window_of(&self.t, from, to)
+    }
+}
 
 /// The metric store.
 #[derive(Debug, Default, Clone)]
 pub struct MetricStore {
-    energy: Vec<EnergySample>,
-    traffic: Vec<TrafficSample>,
+    /// One shared name namespace for services, flavours and nodes — the
+    /// same string never interns twice even when it appears on both the
+    /// energy and traffic side.
+    symbols: SymbolTable,
+    energy: Vec<EnergySeries>,
+    traffic: Vec<TrafficSeries>,
+    energy_index: HashMap<(u32, u32), u32>,
+    traffic_index: HashMap<(u32, u32, u32), u32>,
+    energy_total: usize,
+    traffic_total: usize,
     revision: u64,
-    energy_rev: HashMap<(String, String), u64>,
-    traffic_rev: HashMap<(String, String, String), u64>,
 }
 
 impl MetricStore {
@@ -35,55 +211,89 @@ impl MetricStore {
     }
 
     /// Append an energy sample (stamps its (service, flavour) series).
+    /// Monotone streams append in O(1) amortized; out-of-order samples
+    /// binary-search-insert into their series and bump its prefix stamp.
     pub fn push_energy(&mut self, sample: EnergySample) {
         self.revision += 1;
-        self.energy_rev
-            .insert((sample.service.clone(), sample.flavour.clone()), self.revision);
-        let pos = if self
-            .energy
-            .last()
-            .map(|last| last.t <= sample.t)
-            .unwrap_or(true)
-        {
-            self.energy.len()
-        } else {
-            self.energy.partition_point(|s| s.t <= sample.t)
+        let service = self.symbols.intern(&sample.service);
+        let flavour = self.symbols.intern(&sample.flavour);
+        let key = (service, flavour);
+        let idx = match self.energy_index.get(&key) {
+            Some(&i) => i as usize,
+            None => {
+                let i = self.energy.len();
+                self.energy_index.insert(key, i as u32);
+                self.energy.push(EnergySeries {
+                    service,
+                    flavour,
+                    ..EnergySeries::default()
+                });
+                i
+            }
         };
-        self.energy.insert(pos, sample);
+        let series = &mut self.energy[idx];
+        series.rev = self.revision;
+        if series.t.last().map(|&last| last <= sample.t).unwrap_or(true) {
+            series.t.push(sample.t);
+            series.joules.push(sample.joules);
+            series.seq.push(self.revision);
+        } else {
+            let pos = series.t.partition_point(|&t| t <= sample.t);
+            series.t.insert(pos, sample.t);
+            series.joules.insert(pos, sample.joules);
+            series.seq.insert(pos, self.revision);
+            series.prefix_rev = self.revision;
+        }
+        self.energy_total += 1;
     }
 
     /// Append a traffic sample (stamps its (from, flavour, to) series).
     pub fn push_traffic(&mut self, sample: TrafficSample) {
         self.revision += 1;
-        self.traffic_rev.insert(
-            (
-                sample.from.clone(),
-                sample.from_flavour.clone(),
-                sample.to.clone(),
-            ),
-            self.revision,
-        );
-        let pos = if self
-            .traffic
-            .last()
-            .map(|last| last.t <= sample.t)
-            .unwrap_or(true)
-        {
-            self.traffic.len()
-        } else {
-            self.traffic.partition_point(|s| s.t <= sample.t)
+        let from = self.symbols.intern(&sample.from);
+        let from_flavour = self.symbols.intern(&sample.from_flavour);
+        let to = self.symbols.intern(&sample.to);
+        let key = (from, from_flavour, to);
+        let idx = match self.traffic_index.get(&key) {
+            Some(&i) => i as usize,
+            None => {
+                let i = self.traffic.len();
+                self.traffic_index.insert(key, i as u32);
+                self.traffic.push(TrafficSeries {
+                    from,
+                    from_flavour,
+                    to,
+                    ..TrafficSeries::default()
+                });
+                i
+            }
         };
-        self.traffic.insert(pos, sample);
+        let series = &mut self.traffic[idx];
+        series.rev = self.revision;
+        if series.t.last().map(|&last| last <= sample.t).unwrap_or(true) {
+            series.t.push(sample.t);
+            series.requests.push(sample.requests);
+            series.bytes.push(sample.bytes);
+            series.seq.push(self.revision);
+        } else {
+            let pos = series.t.partition_point(|&t| t <= sample.t);
+            series.t.insert(pos, sample.t);
+            series.requests.insert(pos, sample.requests);
+            series.bytes.insert(pos, sample.bytes);
+            series.seq.insert(pos, self.revision);
+            series.prefix_rev = self.revision;
+        }
+        self.traffic_total += 1;
     }
 
-    /// Number of stored energy samples.
+    /// Number of stored energy samples (cached; O(1)).
     pub fn energy_len(&self) -> usize {
-        self.energy.len()
+        self.energy_total
     }
 
-    /// Number of stored traffic samples.
+    /// Number of stored traffic samples (cached; O(1)).
     pub fn traffic_len(&self) -> usize {
-        self.traffic.len()
+        self.traffic_total
     }
 
     /// Current change stamp: bumped by every push (and by `compact`).
@@ -93,70 +303,225 @@ impl MetricStore {
         self.revision
     }
 
-    /// Number of distinct energy series ever stamped (compare against
+    /// Number of distinct energy series ever registered (compare against
     /// [`MetricStore::energy_touched_since`]`.len()` to detect the
-    /// everything-changed case cheaply).
+    /// everything-changed case cheaply). Compaction may drain a series
+    /// but never unregisters it.
     pub fn energy_series_count(&self) -> usize {
-        self.energy_rev.len()
+        self.energy.len()
     }
 
-    /// Number of distinct traffic series ever stamped.
+    /// Number of distinct traffic series ever registered.
     pub fn traffic_series_count(&self) -> usize {
-        self.traffic_rev.len()
+        self.traffic.len()
     }
 
-    /// Energy series that received samples after revision `since`.
-    pub fn energy_touched_since(&self, since: u64) -> Vec<&(String, String)> {
-        self.energy_rev
+    // ---- id layer -------------------------------------------------------
+
+    /// Resolve an energy series key to its dense id.
+    pub fn energy_series_id(&self, service: &str, flavour: &str) -> Option<SeriesId> {
+        let service = self.symbols.get(service)?;
+        let flavour = self.symbols.get(flavour)?;
+        self.energy_index
+            .get(&(service, flavour))
+            .map(|&i| SeriesId(i))
+    }
+
+    /// Resolve a traffic series key to its dense id.
+    pub fn traffic_series_id(&self, from: &str, from_flavour: &str, to: &str) -> Option<SeriesId> {
+        let from = self.symbols.get(from)?;
+        let from_flavour = self.symbols.get(from_flavour)?;
+        let to = self.symbols.get(to)?;
+        self.traffic_index
+            .get(&(from, from_flavour, to))
+            .map(|&i| SeriesId(i))
+    }
+
+    /// The (service, flavour) key of an energy series.
+    pub fn energy_series_key(&self, id: SeriesId) -> Option<(&str, &str)> {
+        let s = self.energy.get(id.index())?;
+        Some((
+            self.symbols.name(s.service).unwrap_or(""),
+            self.symbols.name(s.flavour).unwrap_or(""),
+        ))
+    }
+
+    /// The (from, from_flavour, to) key of a traffic series.
+    pub fn traffic_series_key(&self, id: SeriesId) -> Option<(&str, &str, &str)> {
+        let s = self.traffic.get(id.index())?;
+        Some((
+            self.symbols.name(s.from).unwrap_or(""),
+            self.symbols.name(s.from_flavour).unwrap_or(""),
+            self.symbols.name(s.to).unwrap_or(""),
+        ))
+    }
+
+    /// Columnar view of one energy series.
+    pub fn energy_series(&self, id: SeriesId) -> Option<&EnergySeries> {
+        self.energy.get(id.index())
+    }
+
+    /// Columnar view of one traffic series.
+    pub fn traffic_series(&self, id: SeriesId) -> Option<&TrafficSeries> {
+        self.traffic.get(id.index())
+    }
+
+    /// Ids of all registered energy series, in registration order.
+    pub fn energy_series_ids(&self) -> impl Iterator<Item = SeriesId> + '_ {
+        (0..self.energy.len()).map(SeriesId::new)
+    }
+
+    /// Ids of all registered traffic series, in registration order.
+    pub fn traffic_series_ids(&self) -> impl Iterator<Item = SeriesId> + '_ {
+        (0..self.traffic.len()).map(SeriesId::new)
+    }
+
+    /// Ids of energy series that received samples after revision
+    /// `since` — the allocation-free form of
+    /// [`MetricStore::energy_touched_since`].
+    pub fn energy_touched_ids(&self, since: u64) -> impl Iterator<Item = SeriesId> + '_ {
+        self.energy
             .iter()
-            .filter(|(_, &rev)| rev > since)
-            .map(|(k, _)| k)
+            .enumerate()
+            .filter(move |(_, s)| s.rev > since)
+            .map(|(i, _)| SeriesId::new(i))
+    }
+
+    /// Ids of traffic series that received samples after revision
+    /// `since`.
+    pub fn traffic_touched_ids(&self, since: u64) -> impl Iterator<Item = SeriesId> + '_ {
+        self.traffic
+            .iter()
+            .enumerate()
+            .filter(move |(_, s)| s.rev > since)
+            .map(|(i, _)| SeriesId::new(i))
+    }
+
+    // ---- String wrappers ------------------------------------------------
+
+    /// Energy series that received samples after revision `since`, as
+    /// name pairs (registration order).
+    pub fn energy_touched_since(&self, since: u64) -> Vec<(&str, &str)> {
+        self.energy_touched_ids(since)
+            .filter_map(|id| self.energy_series_key(id))
             .collect()
     }
 
-    /// Traffic series that received samples after revision `since`.
-    pub fn traffic_touched_since(&self, since: u64) -> Vec<&(String, String, String)> {
-        self.traffic_rev
-            .iter()
-            .filter(|(_, &rev)| rev > since)
-            .map(|(k, _)| k)
+    /// Traffic series that received samples after revision `since`, as
+    /// name triples (registration order).
+    pub fn traffic_touched_since(&self, since: u64) -> Vec<(&str, &str, &str)> {
+        self.traffic_touched_ids(since)
+            .filter_map(|id| self.traffic_series_key(id))
             .collect()
     }
 
-    /// Energy samples with `from < t <= to`.
-    pub fn energy_range(&self, from: f64, to: f64) -> &[EnergySample] {
-        let lo = self.energy.partition_point(|s| s.t <= from);
-        let hi = self.energy.partition_point(|s| s.t <= to);
-        &self.energy[lo..hi]
+    /// Energy samples with `from < t <= to`, merged across series in
+    /// timestamp order with ties in push order — byte-identical to the
+    /// ordering of the pre-columnar global sorted vector.
+    pub fn energy_range(&self, from: f64, to: f64) -> Vec<EnergySample> {
+        let mut out: Vec<(u64, EnergySample)> = Vec::new();
+        for series in &self.energy {
+            let service = self.symbols.name(series.service).unwrap_or("");
+            let flavour = self.symbols.name(series.flavour).unwrap_or("");
+            for i in series.window(from, to) {
+                out.push((
+                    series.seq[i],
+                    EnergySample {
+                        t: series.t[i],
+                        service: service.to_string(),
+                        flavour: flavour.to_string(),
+                        joules: series.joules[i],
+                    },
+                ));
+            }
+        }
+        out.sort_unstable_by(|a, b| {
+            a.1.t
+                .partial_cmp(&b.1.t)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        out.into_iter().map(|(_, s)| s).collect()
     }
 
-    /// Traffic samples with `from < t <= to`.
-    pub fn traffic_range(&self, from: f64, to: f64) -> &[TrafficSample] {
-        let lo = self.traffic.partition_point(|s| s.t <= from);
-        let hi = self.traffic.partition_point(|s| s.t <= to);
-        &self.traffic[lo..hi]
+    /// Traffic samples with `from < t <= to`, merged like
+    /// [`MetricStore::energy_range`].
+    pub fn traffic_range(&self, from: f64, to: f64) -> Vec<TrafficSample> {
+        let mut out: Vec<(u64, TrafficSample)> = Vec::new();
+        for series in &self.traffic {
+            let from_name = self.symbols.name(series.from).unwrap_or("");
+            let flavour = self.symbols.name(series.from_flavour).unwrap_or("");
+            let to_name = self.symbols.name(series.to).unwrap_or("");
+            for i in series.window(from, to) {
+                out.push((
+                    series.seq[i],
+                    TrafficSample {
+                        t: series.t[i],
+                        from: from_name.to_string(),
+                        from_flavour: flavour.to_string(),
+                        to: to_name.to_string(),
+                        requests: series.requests[i],
+                        bytes: series.bytes[i],
+                    },
+                ));
+            }
+        }
+        out.sort_unstable_by(|a, b| {
+            a.1.t
+                .partial_cmp(&b.1.t)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        out.into_iter().map(|(_, s)| s).collect()
     }
 
-    /// Latest sample timestamp across both series (0 when empty).
+    /// Latest sample timestamp across both kinds (0 when empty).
     pub fn horizon(&self) -> f64 {
-        let e = self.energy.last().map(|s| s.t).unwrap_or(0.0);
-        let t = self.traffic.last().map(|s| s.t).unwrap_or(0.0);
+        let e = self
+            .energy
+            .iter()
+            .filter_map(|s| s.t.last().copied())
+            .fold(None::<f64>, |acc, t| Some(acc.map_or(t, |a| a.max(t))))
+            .unwrap_or(0.0);
+        let t = self
+            .traffic
+            .iter()
+            .filter_map(|s| s.t.last().copied())
+            .fold(None::<f64>, |acc, t| Some(acc.map_or(t, |a| a.max(t))))
+            .unwrap_or(0.0);
         e.max(t)
     }
 
-    /// Drop samples older than `cutoff` (retention, keeps the adaptive
-    /// loop's memory bounded). Conservatively stamps **every** series as
-    /// touched: removing history changes whole-history summaries, so no
-    /// incremental consumer may reuse a pre-compaction result.
+    /// Drop samples with `t <= cutoff` (retention, keeps the adaptive
+    /// loop's memory bounded). Because columns are sorted, each series
+    /// drains a prefix. Conservatively stamps **every** series — both
+    /// its touch stamp and its prefix stamp: removing history changes
+    /// whole-history summaries, so no incremental or streaming consumer
+    /// may reuse a pre-compaction result. Drained series stay
+    /// registered, preserving series counts and ids.
     pub fn compact(&mut self, cutoff: f64) {
-        self.energy.retain(|s| s.t > cutoff);
-        self.traffic.retain(|s| s.t > cutoff);
         self.revision += 1;
-        for rev in self.energy_rev.values_mut() {
-            *rev = self.revision;
+        for series in &mut self.energy {
+            let drop = series.t.partition_point(|&t| t <= cutoff);
+            if drop > 0 {
+                series.t.drain(..drop);
+                series.joules.drain(..drop);
+                series.seq.drain(..drop);
+                self.energy_total -= drop;
+            }
+            series.rev = self.revision;
+            series.prefix_rev = self.revision;
         }
-        for rev in self.traffic_rev.values_mut() {
-            *rev = self.revision;
+        for series in &mut self.traffic {
+            let drop = series.t.partition_point(|&t| t <= cutoff);
+            if drop > 0 {
+                series.t.drain(..drop);
+                series.requests.drain(..drop);
+                series.bytes.drain(..drop);
+                self.traffic_total -= drop;
+            }
+            series.rev = self.revision;
+            series.prefix_rev = self.revision;
         }
     }
 }
@@ -276,5 +641,75 @@ mod tests {
         let touched = store.energy_touched_since(rev);
         assert_eq!(touched.len(), 1);
         assert!(store.energy_touched_since(store.revision()).is_empty());
+    }
+
+    #[test]
+    fn merged_range_breaks_timestamp_ties_in_push_order() {
+        let mut store = MetricStore::new();
+        // Interleave two series at the same timestamps: the merged view
+        // must replay ties in arrival order (the old global-vec order).
+        let mut b = e(1.0);
+        b.service = "s2".into();
+        b.joules = 100.0;
+        store.push_energy(b);
+        store.push_energy(e(1.0));
+        let mut c = e(1.0);
+        c.service = "s3".into();
+        c.joules = 300.0;
+        store.push_energy(c);
+        let r = store.energy_range(0.0, 2.0);
+        let order: Vec<&str> = r.iter().map(|s| s.service.as_str()).collect();
+        assert_eq!(order, vec!["s2", "s", "s3"]);
+    }
+
+    #[test]
+    fn id_layer_resolves_and_windows() {
+        let mut store = MetricStore::new();
+        for t in [1.0, 2.0, 3.0] {
+            store.push_energy(e(t));
+        }
+        store.push_traffic(tr(5.0));
+        let id = store.energy_series_id("s", "f").unwrap();
+        assert_eq!(store.energy_series_key(id), Some(("s", "f")));
+        let series = store.energy_series(id).unwrap();
+        assert_eq!(series.len(), 3);
+        assert_eq!(series.window(1.0, 3.0), 1..3);
+        assert_eq!(series.times(), &[1.0, 2.0, 3.0]);
+        assert_eq!(series.joules(), &[1.0, 2.0, 3.0]);
+        assert!(store.energy_series_id("ghost", "f").is_none());
+        let tid = store.traffic_series_id("a", "f", "b").unwrap();
+        assert_eq!(store.traffic_series_key(tid), Some(("a", "f", "b")));
+        assert_eq!(store.traffic_series(tid).unwrap().bytes(), &[1.0]);
+        assert_eq!(store.energy_series_ids().count(), 1);
+        assert_eq!(store.traffic_series_ids().count(), 1);
+        assert_eq!(
+            store.energy_touched_ids(0).collect::<Vec<_>>(),
+            vec![SeriesId::new(0)]
+        );
+    }
+
+    #[test]
+    fn prefix_rev_tracks_history_rewrites_only() {
+        let mut store = MetricStore::new();
+        store.push_energy(e(1.0));
+        store.push_energy(e(2.0));
+        let id = store.energy_series_id("s", "f").unwrap();
+        // appends never bump the prefix stamp
+        assert_eq!(store.energy_series(id).unwrap().prefix_rev(), 0);
+        // an equal-timestamp push is still an append (goes to the end)
+        store.push_energy(e(2.0));
+        assert_eq!(store.energy_series(id).unwrap().prefix_rev(), 0);
+        // an out-of-order insert rewrites the prefix
+        store.push_energy(e(1.5));
+        let pr = store.energy_series(id).unwrap().prefix_rev();
+        assert_eq!(pr, store.revision());
+        // compaction always rewrites the prefix
+        store.compact(1.0);
+        assert_eq!(
+            store.energy_series(id).unwrap().prefix_rev(),
+            store.revision()
+        );
+        assert_eq!(store.energy_series(id).unwrap().len(), 3);
+        assert_eq!(store.energy_len(), 3);
     }
 }

@@ -58,6 +58,10 @@ pub struct AdaptiveConfig {
     /// [`SWING_EPSILON`] so the incremental re-planner re-solves them
     /// *before* the swing lands.
     pub horizon: usize,
+    /// Worker threads for the generation stage and (in incremental mode)
+    /// the sharded re-planner's zone solves. Outputs are bit-identical at
+    /// any value; 0 is treated as 1.
+    pub threads: usize,
 }
 
 impl Default for AdaptiveConfig {
@@ -71,6 +75,7 @@ impl Default for AdaptiveConfig {
             incremental: false,
             zones: 0,
             horizon: 0,
+            threads: 1,
         }
     }
 }
@@ -291,6 +296,7 @@ impl AdaptiveLoop {
 
     /// Run the loop on a scenario with diurnal carbon dynamics.
     pub fn run(&mut self, scenario: &Scenario) -> Result<AdaptiveSummary> {
+        self.pipeline.config.threads = self.config.threads.max(1);
         let traces: TraceSet = GeneratorPipeline::trace_set(scenario);
         let mut rng = Rng::new(self.config.seed);
         let mut sim = WorkloadSimulator::new(scenario.truth.clone(), scenario.seed);
@@ -299,6 +305,7 @@ impl AdaptiveLoop {
 
         let mut replanner = self.config.incremental.then(|| {
             let mut scheduler = ShardedScheduler::default();
+            scheduler.threads = self.config.threads.max(1);
             if self.config.zones > 0 {
                 scheduler.partitioner = ZonePartitioner::with_zones(self.config.zones);
             }

@@ -28,6 +28,10 @@ pub struct PipelineConfig {
     pub estimator: EstimatorConfig,
     /// Use the extended constraint library (adds PreferNode).
     pub extended_library: bool,
+    /// Worker threads for the generation stage (analytics + library
+    /// evaluation). Constraints are bit-identical at any value; 0 is
+    /// treated as 1 (`Default` derives 0).
+    pub threads: usize,
 }
 
 /// The outcome of one pipeline epoch.
@@ -165,7 +169,8 @@ impl GeneratorPipeline {
         let raw = {
             let generator = ConstraintGenerator::new(self.backend.as_dyn())
                 .with_library(library)
-                .with_config(self.config.generator);
+                .with_config(self.config.generator)
+                .with_threads(self.config.threads.max(1));
             let first = meter.measure("generate", || generator.generate(app, infra));
             match first {
                 Ok(r) => r,
@@ -177,7 +182,8 @@ impl GeneratorPipeline {
                     );
                     let fallback = ConstraintGenerator::new(&NativeBackend)
                         .with_library(self.library())
-                        .with_config(self.config.generator);
+                        .with_config(self.config.generator)
+                        .with_threads(self.config.threads.max(1));
                     meter.measure("generate-native-fallback", || {
                         fallback.generate(app, infra)
                     })?
@@ -310,6 +316,7 @@ impl GeneratorPipeline {
         //    a full native rebuild)
         let library = self.library();
         self.incremental.config = self.config.generator;
+        self.incremental.threads = self.config.threads.max(1);
         let first = {
             let backend = &self.backend;
             let incremental = &mut self.incremental;

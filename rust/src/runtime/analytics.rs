@@ -131,6 +131,16 @@ pub trait AnalyticsBackend {
 
     /// Evaluate the graph.
     fn run(&self, input: &AnalyticsInput) -> Result<AnalyticsOutput>;
+
+    /// Threads-aware evaluation. The default ignores `threads` and runs
+    /// sequentially — correct for backends that cannot parallelize
+    /// internally (the PJRT client is single-threaded per instance).
+    /// Implementations that override this (the native backend) must
+    /// return output **bit-identical** to [`AnalyticsBackend::run`] at
+    /// every thread count; generation determinism rests on it.
+    fn run_threaded(&self, input: &AnalyticsInput, _threads: usize) -> Result<AnalyticsOutput> {
+        self.run(input)
+    }
 }
 
 #[cfg(test)]

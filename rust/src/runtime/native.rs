@@ -4,6 +4,21 @@
 //! definition and the savings-bound tie semantics) so the XLA and native
 //! paths are interchangeable. Computation is done in f32 to match the
 //! artifact numerics bit-for-bit where possible.
+//!
+//! # Parallel evaluation
+//!
+//! Rows are fully independent: impact, row statistics and savings bounds
+//! of row `r` read only `e[r]`, `c`, and `mask[r·N..]`. The threads-aware
+//! entry point ([`NativeBackend::run_threads`]) therefore chunks rows
+//! into fixed `ceil(R/threads)` blocks across `std::thread::scope`
+//! workers, each writing its disjoint `split_at_mut` slice of the output
+//! tensors — the same determinism pattern as
+//! [`crate::scheduler::parscore`]. Both the sequential and the parallel
+//! path execute the identical per-row kernel ([`row_kernel`]), and the
+//! pooled τ/gmax reduction stays sequential in the caller, so output is
+//! **bit-identical at any thread count**. The pooled quantile is *not*
+//! data-parallel (one global sort), but it is O(pool log pool) against
+//! the O(R·N) row work it rides behind.
 
 use super::analytics::{AnalyticsBackend, AnalyticsInput, AnalyticsOutput};
 use crate::Result;
@@ -11,16 +26,106 @@ use crate::Result;
 /// Sentinel mirroring the Python BIG constant.
 const BIG: f32 = 3.0e38;
 
+/// Below this many rows a parallel evaluation runs sequentially anyway:
+/// scope/spawn overhead beats the kernel on tiny instances. Tests reach
+/// the private `_with_min` hook to force chunking on small fixtures.
+const PAR_MIN_ROWS: usize = 32;
+
 /// The native backend (stateless).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct NativeBackend;
 
-impl AnalyticsBackend for NativeBackend {
-    fn name(&self) -> &'static str {
-        "native"
+/// The per-row kernel: impact row, row statistics, savings bounds — for
+/// rows `lo..hi`, writing into chunk-local slices (`impact`/`sav_hi`/
+/// `sav_lo` hold `(hi-lo)·N` entries, the stats `hi-lo`). Exactly the
+/// arithmetic of the historical two-pass loop, fused per row (rows are
+/// independent, so fusion reorders nothing within a row).
+#[allow(clippy::too_many_arguments)]
+fn row_kernel(
+    input: &AnalyticsInput,
+    lo: usize,
+    hi: usize,
+    impact: &mut [f32],
+    row_min: &mut [f32],
+    row_max: &mut [f32],
+    row_max2: &mut [f32],
+    sav_hi: &mut [f32],
+    sav_lo: &mut [f32],
+) {
+    let n = input.nodes();
+    let mut row_sorted: Vec<f32> = Vec::with_capacity(n);
+    for row in lo..hi {
+        let i = row - lo;
+        let e = input.e[row];
+        let src = row * n;
+        let base = i * n;
+
+        // --- impact + row statistics (the L1 kernel) --------------------
+        let mut rmin = BIG;
+        let mut rmax = -BIG;
+        let mut rmax2 = -BIG;
+        let mut allowed = 0usize;
+        for node in 0..n {
+            let m = input.mask[src + node];
+            let v = e * input.c[node] * m;
+            impact[base + node] = v;
+            if m > 0.0 {
+                allowed += 1;
+                rmin = rmin.min(v);
+                if v > rmax {
+                    rmax2 = rmax;
+                    rmax = v;
+                } else if v > rmax2 {
+                    rmax2 = v;
+                }
+            }
+        }
+        row_min[i] = if allowed == 0 { 0.0 } else { rmin };
+        row_max[i] = if allowed == 0 { 0.0 } else { rmax };
+        row_max2[i] = match allowed {
+            0 => 0.0,
+            1 => rmax,
+            _ => rmax2,
+        };
+
+        // --- savings bounds (§5.4) --------------------------------------
+        // For each allowed entry x: sav_hi = x - row_min; sav_lo = x - max
+        // allowed value strictly below x (0 if none).
+        row_sorted.clear();
+        for node in 0..n {
+            if input.mask[src + node] > 0.0 {
+                row_sorted.push(impact[base + node]);
+            }
+        }
+        row_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for node in 0..n {
+            if input.mask[src + node] <= 0.0 {
+                continue;
+            }
+            let x = impact[base + node];
+            sav_hi[base + node] = x - row_min[i];
+            // binary search: first index with value >= x
+            let idx = row_sorted.partition_point(|&v| v < x);
+            sav_lo[base + node] = if idx > 0 { x - row_sorted[idx - 1] } else { 0.0 };
+        }
+    }
+}
+
+impl NativeBackend {
+    /// Threads-aware evaluation: identical to [`AnalyticsBackend::run`]
+    /// bit-for-bit at any `threads` value (rows are chunked into fixed
+    /// `ceil(R/threads)` blocks, each worker writing a disjoint output
+    /// slice; the pooled τ reduction stays sequential).
+    pub fn run_threads(&self, input: &AnalyticsInput, threads: usize) -> Result<AnalyticsOutput> {
+        self.run_threads_with_min(input, threads, PAR_MIN_ROWS)
     }
 
-    fn run(&self, input: &AnalyticsInput) -> Result<AnalyticsOutput> {
+    fn run_threads_with_min(
+        &self,
+        input: &AnalyticsInput,
+        threads: usize,
+        min_rows: usize,
+    ) -> Result<AnalyticsOutput> {
         input.validate()?;
         let r = input.rows();
         let n = input.nodes();
@@ -34,36 +139,56 @@ impl AnalyticsBackend for NativeBackend {
             ..Default::default()
         };
 
-        // --- impact + row statistics (the L1 kernel) --------------------
-        for row in 0..r {
-            let e = input.e[row];
-            let base = row * n;
-            let mut rmin = BIG;
-            let mut rmax = -BIG;
-            let mut rmax2 = -BIG;
-            let mut allowed = 0usize;
-            for node in 0..n {
-                let m = input.mask[base + node];
-                let v = e * input.c[node] * m;
-                out.impact[base + node] = v;
-                if m > 0.0 {
-                    allowed += 1;
-                    rmin = rmin.min(v);
-                    if v > rmax {
-                        rmax2 = rmax;
-                        rmax = v;
-                    } else if v > rmax2 {
-                        rmax2 = v;
+        let threads = threads.max(1).min(r.max(1));
+        if threads <= 1 || r < min_rows {
+            row_kernel(
+                input,
+                0,
+                r,
+                &mut out.impact,
+                &mut out.row_min,
+                &mut out.row_max,
+                &mut out.row_max2,
+                &mut out.sav_hi,
+                &mut out.sav_lo,
+            );
+        } else {
+            let chunk = r.div_ceil(threads);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(threads);
+                let mut impact = out.impact.as_mut_slice();
+                let mut row_min = out.row_min.as_mut_slice();
+                let mut row_max = out.row_max.as_mut_slice();
+                let mut row_max2 = out.row_max2.as_mut_slice();
+                let mut sav_hi = out.sav_hi.as_mut_slice();
+                let mut sav_lo = out.sav_lo.as_mut_slice();
+                for w in 0..threads {
+                    let lo = (w * chunk).min(r);
+                    let hi = ((w + 1) * chunk).min(r);
+                    let rows = hi - lo;
+                    let (imp, rest) = impact.split_at_mut(rows * n);
+                    impact = rest;
+                    let (rmin, rest) = row_min.split_at_mut(rows);
+                    row_min = rest;
+                    let (rmax, rest) = row_max.split_at_mut(rows);
+                    row_max = rest;
+                    let (rmax2, rest) = row_max2.split_at_mut(rows);
+                    row_max2 = rest;
+                    let (shi, rest) = sav_hi.split_at_mut(rows * n);
+                    sav_hi = rest;
+                    let (slo, rest) = sav_lo.split_at_mut(rows * n);
+                    sav_lo = rest;
+                    if rows == 0 {
+                        continue;
                     }
+                    handles.push(scope.spawn(move || {
+                        row_kernel(input, lo, hi, imp, rmin, rmax, rmax2, shi, slo);
+                    }));
                 }
-            }
-            out.row_min[row] = if allowed == 0 { 0.0 } else { rmin };
-            out.row_max[row] = if allowed == 0 { 0.0 } else { rmax };
-            out.row_max2[row] = match allowed {
-                0 => 0.0,
-                1 => rmax,
-                _ => rmax2,
-            };
+                for handle in handles {
+                    handle.join().expect("analytics worker thread panicked");
+                }
+            });
         }
 
         // --- quantile τ over the observed-impact pool (Eq. 5) ------------
@@ -87,32 +212,21 @@ impl AnalyticsBackend for NativeBackend {
             out.gmax = pool[cnt - 1];
         }
 
-        // --- savings bounds (§5.4) ---------------------------------------
-        // For each allowed entry x: sav_hi = x - row_min; sav_lo = x - max
-        // allowed value strictly below x (0 if none).
-        let mut row_sorted: Vec<f32> = Vec::with_capacity(n);
-        for row in 0..r {
-            let base = row * n;
-            row_sorted.clear();
-            for node in 0..n {
-                if input.mask[base + node] > 0.0 {
-                    row_sorted.push(out.impact[base + node]);
-                }
-            }
-            row_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            for node in 0..n {
-                if input.mask[base + node] <= 0.0 {
-                    continue;
-                }
-                let x = out.impact[base + node];
-                out.sav_hi[base + node] = x - out.row_min[row];
-                // binary search: first index with value >= x
-                let idx = row_sorted.partition_point(|&v| v < x);
-                out.sav_lo[base + node] = if idx > 0 { x - row_sorted[idx - 1] } else { 0.0 };
-            }
-        }
-
         Ok(out)
+    }
+}
+
+impl AnalyticsBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn run(&self, input: &AnalyticsInput) -> Result<AnalyticsOutput> {
+        self.run_threads(input, 1)
+    }
+
+    fn run_threaded(&self, input: &AnalyticsInput, threads: usize) -> Result<AnalyticsOutput> {
+        self.run_threads(input, threads)
     }
 }
 
@@ -213,5 +327,32 @@ mod tests {
         assert_eq!(out.tau, 0.0);
         assert_eq!(out.gmax, 0.0);
         assert!(out.impact.is_empty());
+    }
+
+    #[test]
+    fn parallel_chunks_are_bit_identical() {
+        // Randomized instances: every thread count must reproduce the
+        // sequential output exactly (PartialEq over f32 tensors). The
+        // `_with_min` hook forces chunking below PAR_MIN_ROWS.
+        crate::util::proptest::check("native threads == sequential", 32, |rng| {
+            let r = 1 + rng.below(40);
+            let n = 1 + rng.below(9);
+            let input = AnalyticsInput {
+                e: (0..r).map(|_| rng.range(0.0, 5.0) as f32).collect(),
+                c: (0..n).map(|_| rng.range(5.0, 600.0) as f32).collect(),
+                mask: (0..r * n)
+                    .map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 })
+                    .collect(),
+                pool: (0..rng.below(24)).map(|_| rng.range(0.0, 900.0) as f32).collect(),
+                alpha: 0.8,
+            };
+            let seq = NativeBackend.run(&input).unwrap();
+            for threads in [2usize, 3, 4, 8, 64] {
+                let par = NativeBackend
+                    .run_threads_with_min(&input, threads, 1)
+                    .unwrap();
+                assert_eq!(par, seq, "threads={threads} diverged");
+            }
+        });
     }
 }

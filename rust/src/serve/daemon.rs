@@ -62,9 +62,10 @@ pub struct ServeConfig {
     /// Drop monitoring samples older than this many hours at each tick
     /// (`0` keeps the full history).
     pub retain_hours: f64,
-    /// Scoring/racing threads for each epoch's portfolio solve and the
-    /// incremental re-planner (1 = sequential; any value produces
-    /// byte-identical output — see `scheduler::parscore`).
+    /// Worker threads for each epoch's constraint generation, portfolio
+    /// scoring/racing, and the incremental re-planner (1 = sequential;
+    /// any value produces byte-identical output — see
+    /// `scheduler::parscore` and `constraints::generator::run_library`).
     pub threads: usize,
     /// Scheduling objective.
     pub objective: Objective,
@@ -209,13 +210,14 @@ impl Daemon {
     /// The pipeline carries the constraint KB across epochs; pass the
     /// same pipeline the one-shot commands build so flags like
     /// `--extended` apply.
-    pub fn new(scenario: &Scenario, pipeline: GeneratorPipeline, config: ServeConfig) -> Daemon {
+    pub fn new(scenario: &Scenario, mut pipeline: GeneratorPipeline, config: ServeConfig) -> Daemon {
         let mut sharded = ShardedScheduler::default();
+        sharded.threads = config.threads.max(1);
         if config.zones > 0 {
             sharded.partitioner = ZonePartitioner::with_zones(config.zones);
         }
         let mut replanner = IncrementalReplanner::new(sharded);
-        sharded.threads = config.threads.max(1);
+        pipeline.config.threads = config.threads.max(1);
         let (_, _, improve_iterations, _) = budgets(config.deadline_ms);
         replanner.config.improve_iterations = improve_iterations;
         Daemon {

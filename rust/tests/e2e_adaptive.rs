@@ -24,6 +24,7 @@ fn adaptive_loop_reduces_emissions_on_every_scenario_infra() {
                 incremental: false,
                 zones: 0,
                 horizon: 0,
+                threads: 1,
             },
         );
         let summary = looper.run(&scenario).unwrap();
@@ -63,6 +64,7 @@ fn adaptive_loop_survives_heavy_failure_injection() {
             incremental: false,
             zones: 0,
             horizon: 0,
+            threads: 1,
         },
     );
     let summary = looper.run(&scenario).unwrap();
@@ -141,6 +143,7 @@ fn xla_and_native_pipelines_agree_through_the_adaptive_loop() {
         incremental: false,
         zones: 0,
         horizon: 0,
+        threads: 1,
     };
     let mut native = AdaptiveLoop::new(PipelineConfig::default(), config);
     let mut accel = AdaptiveLoop::with_pipeline(

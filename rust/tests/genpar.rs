@@ -1,0 +1,332 @@
+//! Integration properties for the fast monitoring-to-constraints path:
+//!
+//! 1. **Thread-count invariance** — `ConstraintGenerator::generate` and
+//!    `IncrementalGenerator::generate` produce bit-identical results at
+//!    any worker-thread count (1/2/4/8) on all four continuum topology
+//!    presets, for both the direct and the Prolog evaluation paths.
+//! 2. **Store API equivalence** — the interned id-based `MetricStore`
+//!    accessors describe exactly the same data as the legacy String
+//!    wrappers, across randomized out-of-order and compacted streams.
+//! 3. **Estimator exactness** — the streaming incremental estimator is
+//!    exactly equal (f64-exact summaries) to a full re-scan after every
+//!    epoch of appends, out-of-order inserts, and compactions.
+
+use greengen::constraints::{
+    Constraint, ConstraintGenerator, ConstraintLibrary, GeneratorConfig, IncrementalGenerator,
+};
+use greengen::energy::estimator::EstimationReport;
+use greengen::energy::EnergyEstimator;
+use greengen::model::{Application, Infrastructure};
+use greengen::monitoring::{EnergySample, MetricStore, TrafficSample};
+use greengen::runtime::NativeBackend;
+use greengen::simulate::{topology, Topology, TopologySpec};
+use greengen::util::proptest::check;
+use greengen::util::Rng;
+
+const TOPOLOGIES: [Topology; 4] = [
+    Topology::GeoRegions,
+    Topology::CloudEdgeHierarchy,
+    Topology::IotSwarm,
+    Topology::HybridBurst,
+];
+
+/// Instances large enough that `run_library` / `run_threads` actually
+/// take their parallel paths (both gate on >= 32 items).
+fn instance(topo: Topology, seed: u64) -> (Application, Infrastructure) {
+    let spec = TopologySpec::new(topo, 12, 48).with_zones(4).with_seed(seed);
+    topology::generate(&spec)
+}
+
+fn assert_identical(a: &[Constraint], b: &[Constraint], tag: &str) {
+    // order-sensitive: parallel chunk merge must reproduce the exact
+    // sequential emission order, not just the same set
+    assert_eq!(a, b, "constraint stream diverged: {tag}");
+}
+
+// ---------------------------------------------------------------------------
+// 1a. full generation: threads 2/4/8 == threads 1, all presets
+// ---------------------------------------------------------------------------
+
+#[test]
+fn generate_is_thread_count_invariant_direct() {
+    let backend = NativeBackend;
+    let config = GeneratorConfig {
+        alpha: 0.8,
+        use_prolog: false,
+    };
+    for (i, &topo) in TOPOLOGIES.iter().enumerate() {
+        let (app, infra) = instance(topo, 0x6E47 + i as u64);
+        let baseline = ConstraintGenerator::new(&backend)
+            .with_config(config)
+            .with_library(ConstraintLibrary::extended())
+            .generate(&app, &infra)
+            .unwrap();
+        assert!(
+            baseline.rows.len() >= 32,
+            "instance too small to exercise the parallel path ({} rows)",
+            baseline.rows.len()
+        );
+        for threads in [2, 4, 8] {
+            let par = ConstraintGenerator::new(&backend)
+                .with_config(config)
+                .with_library(ConstraintLibrary::extended())
+                .with_threads(threads)
+                .generate(&app, &infra)
+                .unwrap();
+            let tag = format!("{} direct threads={threads}", topo.name());
+            assert_eq!(baseline.tau.to_bits(), par.tau.to_bits(), "tau: {tag}");
+            assert_eq!(baseline.gmax.to_bits(), par.gmax.to_bits(), "gmax: {tag}");
+            assert_eq!(baseline.rows, par.rows, "rows: {tag}");
+            assert_eq!(baseline.nodes, par.nodes, "nodes: {tag}");
+            assert_identical(&baseline.constraints, &par.constraints, &tag);
+        }
+    }
+}
+
+#[test]
+fn generate_is_thread_count_invariant_prolog() {
+    let backend = NativeBackend;
+    let config = GeneratorConfig {
+        alpha: 0.8,
+        use_prolog: true,
+    };
+    // one preset suffices for the Prolog engine (it is much slower); the
+    // chunk-merge argument is path-independent of the topology shape
+    let (app, infra) = instance(Topology::GeoRegions, 0x9601);
+    let baseline = ConstraintGenerator::new(&backend)
+        .with_config(config)
+        .generate(&app, &infra)
+        .unwrap();
+    for threads in [2, 4, 8] {
+        let par = ConstraintGenerator::new(&backend)
+            .with_config(config)
+            .with_threads(threads)
+            .generate(&app, &infra)
+            .unwrap();
+        let tag = format!("prolog threads={threads}");
+        assert_eq!(baseline.tau.to_bits(), par.tau.to_bits(), "tau: {tag}");
+        assert_identical(&baseline.constraints, &par.constraints, &tag);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1b. incremental generation: threaded == sequential, epoch by epoch
+// ---------------------------------------------------------------------------
+
+#[test]
+fn incremental_is_thread_count_invariant() {
+    let backend = NativeBackend;
+    let config = GeneratorConfig {
+        alpha: 0.8,
+        use_prolog: false,
+    };
+    let library = ConstraintLibrary::extended();
+    for (i, &topo) in TOPOLOGIES.iter().enumerate() {
+        let (mut app, mut infra) = instance(topo, 0x1A2B + i as u64);
+        let mut seq = IncrementalGenerator::new(config);
+        let mut par = IncrementalGenerator::new(config).with_threads(4);
+        let mut rng = Rng::new(0xF00D + i as u64);
+        for epoch in 0..5 {
+            match epoch {
+                0 => {} // cold start: both run the full (parallel) rebuild
+                3 => {
+                    // structural change: node failure forces a threaded
+                    // full rebuild mid-sequence
+                    let ni = rng.below(infra.nodes.len());
+                    infra.nodes.remove(ni);
+                }
+                _ => {
+                    // the common case: a few profiles drift -> dirty-row
+                    // sub-instance runs through the chunked path
+                    for _ in 0..3 {
+                        let si = rng.below(app.services.len());
+                        let svc = &mut app.services[si];
+                        let fi = rng.below(svc.flavours.len());
+                        if let Some(profile) = &mut svc.flavours[fi].energy {
+                            profile.kwh *= rng.range(0.8, 1.3);
+                            profile.samples += 1;
+                        }
+                    }
+                }
+            }
+            let (rs, ss) = seq.generate(&backend, &library, &app, &infra).unwrap();
+            let (rp, sp) = par.generate(&backend, &library, &app, &infra).unwrap();
+            let tag = format!("{} epoch {epoch}", topo.name());
+            assert_eq!(ss, sp, "stats diverged: {tag}");
+            assert_eq!(rs.tau.to_bits(), rp.tau.to_bits(), "tau: {tag}");
+            assert_eq!(rs.gmax.to_bits(), rp.gmax.to_bits(), "gmax: {tag}");
+            assert_eq!(rs.rows, rp.rows, "rows: {tag}");
+            assert_identical(&rs.constraints, &rp.constraints, &tag);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. interned store: id API == String API on randomized streams
+// ---------------------------------------------------------------------------
+
+fn sample_key(rng: &mut Rng) -> (String, String) {
+    (format!("s{}", rng.below(5)), format!("f{}", rng.below(3)))
+}
+
+#[test]
+fn store_id_api_matches_string_api() {
+    check("store id API == String API", 8, |rng| {
+        let mut store = MetricStore::new();
+        let mut t = 0.0;
+        for _ in 0..200 {
+            // mostly appends; sometimes an out-of-order insert (prefix
+            // rewrite); sometimes a compaction (prefix drain)
+            t += rng.range(0.1, 2.0);
+            let at = if rng.chance(0.15) { t * rng.range(0.1, 0.9) } else { t };
+            if rng.chance(0.6) {
+                let (service, flavour) = sample_key(rng);
+                store.push_energy(EnergySample {
+                    t: at,
+                    service,
+                    flavour,
+                    joules: rng.range(1.0, 5e5),
+                });
+            } else {
+                let (from, from_flavour) = sample_key(rng);
+                store.push_traffic(TrafficSample {
+                    t: at,
+                    from,
+                    from_flavour,
+                    to: format!("s{}", rng.below(5)),
+                    requests: rng.range(1.0, 100.0),
+                    bytes: rng.range(1.0, 1e9),
+                });
+            }
+            if rng.chance(0.03) {
+                store.compact(t * rng.range(0.1, 0.5));
+            }
+        }
+
+        // --- id <-> key round trip -----------------------------------
+        for id in store.energy_series_ids().collect::<Vec<_>>() {
+            let (service, flavour) = store.energy_series_key(id).unwrap();
+            assert_eq!(store.energy_series_id(service, flavour), Some(id));
+        }
+        for id in store.traffic_series_ids().collect::<Vec<_>>() {
+            let (from, flavour, to) = store.traffic_series_key(id).unwrap();
+            assert_eq!(store.traffic_series_id(from, flavour, to), Some(id));
+        }
+
+        // --- columnar reconstruction == String range query -----------
+        let key = |s: &EnergySample| {
+            (
+                s.t.to_bits(),
+                s.service.clone(),
+                s.flavour.clone(),
+                s.joules.to_bits(),
+            )
+        };
+        let mut via_ids: Vec<EnergySample> = Vec::new();
+        for id in store.energy_series_ids().collect::<Vec<_>>() {
+            let (service, flavour) = store.energy_series_key(id).unwrap();
+            let (service, flavour) = (service.to_string(), flavour.to_string());
+            let series = store.energy_series(id).unwrap();
+            assert_eq!(series.times().len(), series.joules().len());
+            assert_eq!(series.len(), series.times().len());
+            for i in 0..series.len() {
+                via_ids.push(EnergySample {
+                    t: series.times()[i],
+                    service: service.clone(),
+                    flavour: flavour.clone(),
+                    joules: series.joules()[i],
+                });
+            }
+        }
+        let mut via_strings = store.energy_range(f64::NEG_INFINITY, f64::INFINITY);
+        assert_eq!(via_ids.len(), store.energy_len());
+        via_ids.sort_by_key(key);
+        via_strings.sort_by_key(key);
+        assert_eq!(via_ids, via_strings);
+
+        // --- binary-search windows == linear filtering ----------------
+        let (lo, hi) = (rng.range(0.0, t), rng.range(0.0, t));
+        let (lo, hi) = (lo.min(hi), lo.max(hi));
+        for id in store.energy_series_ids().collect::<Vec<_>>() {
+            let series = store.energy_series(id).unwrap();
+            let window = series.window(lo, hi);
+            let expect: Vec<usize> = (0..series.len())
+                .filter(|&i| series.times()[i] > lo && series.times()[i] <= hi)
+                .collect();
+            assert_eq!(window.collect::<Vec<_>>(), expect);
+        }
+
+        // --- touched-series sets agree --------------------------------
+        let since = rng.below(store.revision() as usize + 1) as u64;
+        let by_id: Vec<(String, String)> = store
+            .energy_touched_ids(since)
+            .filter_map(|id| store.energy_series_key(id))
+            .map(|(s, f)| (s.to_string(), f.to_string()))
+            .collect();
+        let by_string: Vec<(String, String)> = store
+            .energy_touched_since(since)
+            .into_iter()
+            .map(|(s, f)| (s.to_string(), f.to_string()))
+            .collect();
+        assert_eq!(by_id, by_string);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 3. estimator: streaming summaries == full re-scan, exactly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn estimator_streaming_matches_full_rescan() {
+    check("estimator streaming == rescan", 6, |rng| {
+        let spec = TopologySpec::new(Topology::GeoRegions, 6, 8).with_seed(rng.next_u64());
+        let (app, _infra) = topology::generate(&spec);
+        let mut app_full = app.clone();
+        let mut app_inc = app.clone();
+
+        let estimator = EnergyEstimator::default();
+        let mut store = MetricStore::new();
+        let mut t = 0.0;
+        let mut since = store.revision();
+        let mut prev = EstimationReport::default();
+
+        for epoch in 0..6 {
+            for _ in 0..30 {
+                t += rng.range(0.1, 1.5);
+                let at = if rng.chance(0.2) { t * rng.range(0.1, 0.9) } else { t };
+                if rng.chance(0.6) {
+                    let (service, flavour) = sample_key(rng);
+                    store.push_energy(EnergySample {
+                        t: at,
+                        service,
+                        flavour,
+                        joules: rng.range(1.0, 7.2e5),
+                    });
+                } else {
+                    let (from, from_flavour) = sample_key(rng);
+                    store.push_traffic(TrafficSample {
+                        t: at,
+                        from,
+                        from_flavour,
+                        to: format!("s{}", rng.below(5)),
+                        requests: rng.range(1.0, 50.0),
+                        bytes: rng.range(1e3, 2e9),
+                    });
+                }
+            }
+            if epoch == 3 {
+                store.compact(t * 0.4);
+            }
+
+            let full = estimator.estimate(&mut app_full, &store);
+            let inc = estimator.estimate_incremental(&mut app_inc, &store, &prev, since);
+            // Summary is compared with f64-exact equality: the streaming
+            // path must replay the identical accumulation, not merely
+            // approximate it
+            assert_eq!(full.computation, inc.computation, "epoch {epoch}");
+            assert_eq!(full.communication, inc.communication, "epoch {epoch}");
+            since = store.revision();
+            prev = inc;
+        }
+    });
+}
